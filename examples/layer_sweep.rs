@@ -1,0 +1,75 @@
+//! Layer sweep: host-measured GFLOPS of direct vs im2col+SGEMM vs MEC on
+//! every conv layer of a benchmark network (spatially down-scaled where
+//! the full layer would take too long — channel structure and kernel
+//! geometry are preserved, which is what the algorithms are sensitive to).
+//!
+//! ```sh
+//! cargo run --release --example layer_sweep -- --net alexnet [--full]
+//! ```
+
+use dconv::arch::host;
+use dconv::cli::Args;
+use dconv::conv::{conv_direct, select_params, ConvShape};
+use dconv::lowering::{conv_im2col, conv_mec};
+use dconv::metrics::{gflops, time_it, Table};
+use dconv::nets;
+use dconv::tensor::Tensor;
+
+fn downscale(s: &ConvShape, full: bool) -> ConvShape {
+    if full {
+        return s.clone();
+    }
+    let mut d = s.clone();
+    // Cap the spatial extent at ~56 so the sweep finishes in minutes.
+    while d.h_i > 56 && d.h_o() > 8 {
+        d.h_i /= 2;
+        d.w_i /= 2;
+    }
+    // Cap channel products for the very deep VGG tail.
+    while d.c_i * d.c_o > 128 * 256 {
+        d.c_i /= 2;
+        d.c_o /= 2;
+    }
+    d
+}
+
+fn main() {
+    let args = Args::parse_from(std::env::args().skip(1));
+    let net = args.get_or("net", "alexnet");
+    let full = args.flag("full");
+    let threads = args.get_usize("threads", 1);
+    let layers = nets::by_name(net).unwrap_or_else(|| {
+        eprintln!("unknown net '{net}' (alexnet|googlenet|vgg16)");
+        std::process::exit(1);
+    });
+    let machine = host();
+    println!("sweeping {} ({} layers, threads={threads}, full={full})\n", net, layers.len());
+
+    let mut t = Table::new(&[
+        "layer", "shape (maybe scaled)", "GFLOPs",
+        "direct GFLOPS", "im2col GFLOPS", "mec GFLOPS", "direct speedup",
+    ]);
+    for l in layers {
+        let s = downscale(&l.shape, full);
+        let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 1);
+        let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 2);
+        let bp = select_params(&machine, &s);
+
+        let (out_d, secs_d) = time_it(|| conv_direct(&input, &kernel, &s, bp, threads).unwrap());
+        let (out_g, secs_g) = time_it(|| conv_im2col(&input, &kernel, &s).unwrap());
+        let (out_m, secs_m) = time_it(|| conv_mec(&input, &kernel, &s).unwrap());
+        assert!(out_d.allclose(&out_g, 1e-3, 1e-3), "{}: direct vs im2col mismatch", l.name);
+        assert!(out_m.allclose(&out_g, 1e-3, 1e-3), "{}: mec vs im2col mismatch", l.name);
+
+        t.row(vec![
+            l.name.clone(),
+            format!("{}x{}x{}", s.c_i, s.h_i, s.w_i),
+            format!("{:.2}", s.flops() as f64 / 1e9),
+            format!("{:.2}", gflops(s.flops(), secs_d)),
+            format!("{:.2}", gflops(s.flops(), secs_g)),
+            format!("{:.2}", gflops(s.flops(), secs_m)),
+            format!("{:.2}x", secs_g / secs_d),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+}

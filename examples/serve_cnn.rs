@@ -1,0 +1,87 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): the full three-layer stack on
+//! a real serving workload.
+//!
+//!   L1/L2 (build time): `make artifacts` lowered the Pallas direct-conv
+//!   CNN to HLO text at batch sizes 1/2/4/8 with golden checksums.
+//!   L3 (this binary):   loads + compiles the artifacts on the PJRT CPU
+//!   client, verifies every golden, then serves a batched inference
+//!   workload from multiple client threads through the coordinator
+//!   (bounded queue -> dynamic batcher -> PJRT executable), reporting
+//!   throughput, latency percentiles and batch occupancy.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_cnn -- \
+//!     --requests 400 --clients 8 --burst 4
+//! ```
+
+use dconv::cli::Args;
+use dconv::coordinator::{Coordinator, CoordinatorConfig};
+use dconv::metrics::time_it;
+use dconv::runtime::{verify_golden, Engine};
+use dconv::tensor::Tensor;
+
+fn main() {
+    let args = Args::parse_from(std::env::args().skip(1));
+    let dir = args.get_or("dir", "artifacts");
+    let requests = args.get_usize("requests", 400);
+    let clients = args.get_usize("clients", 8);
+    let burst = args.get_usize("burst", 4);
+
+    // --- Stage 1: load + compile artifacts (fails fast on bad HLO).
+    println!("[1/3] loading artifacts from {dir}/ and compiling on PJRT CPU");
+    let (engine, secs) = time_it(|| Engine::start(dir).expect("run `make artifacts` first"));
+    let h = engine.handle();
+    let n_artifacts = h.manifest().models.len() + h.manifest().layers.len();
+    println!("      compiled {n_artifacts} artifacts in {secs:.2}s");
+
+    // --- Stage 2: verify correctness against the JAX goldens.
+    println!("[2/3] verifying goldens (JAX-computed at build time)");
+    for art in h.manifest().clone().all() {
+        let (d1, d2) = verify_golden(&h, art)
+            .unwrap_or_else(|e| panic!("golden failed for {}: {e}", art.name));
+        println!("      {:<24} OK (d_sum={d1:.2e}, d_sum2={d2:.2e})", art.name);
+    }
+
+    // --- Stage 3: serve a batched workload.
+    println!("[3/3] serving {requests} requests from {clients} clients (burst {burst})");
+    let coord = Coordinator::start(h, CoordinatorConfig::default()).unwrap();
+    let per_client = requests / clients;
+    let (_, secs) = time_it(|| {
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let coord = coord.clone();
+                scope.spawn(move || {
+                    let mut done = 0usize;
+                    while done < per_client {
+                        // Submit a burst, then drain it — models a client
+                        // pipelining several frames.
+                        let n = burst.min(per_client - done);
+                        let pendings: Vec<_> = (0..n)
+                            .map(|i| {
+                                let seed = (c * 1_000_000 + done + i) as u64;
+                                let img = Tensor::random(&[1, 32, 32, 3], seed);
+                                coord.submit_blocking(img.into_vec()).unwrap()
+                            })
+                            .collect();
+                        for p in pendings {
+                            let logits = p.wait().unwrap();
+                            assert_eq!(logits.len(), 10);
+                            assert!(logits.iter().all(|v| v.is_finite()));
+                        }
+                        done += n;
+                    }
+                });
+            }
+        });
+    });
+
+    let st = coord.stats();
+    println!("\n=== serve_cnn results ===");
+    println!("requests      : {}", st.requests);
+    println!("wall time     : {secs:.2}s");
+    println!("throughput    : {:.1} images/s", st.requests as f64 / secs);
+    println!("batches       : {} (mean occupancy {:.2} of max 8)", st.batches, st.mean_batch_size());
+    println!("latency       : {}", st.latency.summary());
+    assert_eq!(st.requests as usize, per_client * clients);
+    println!("\nall responses verified finite and correctly shaped ✓");
+}

@@ -1,0 +1,185 @@
+"""AOT compile path: lower the L2 model to HLO **text** artifacts plus a
+manifest the Rust runtime consumes.
+
+HLO text (not a serialized ``HloModuleProto``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that the ``xla``
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (``make artifacts`` -> ``artifacts/``):
+
+* ``cnn_b{1,2,4,8}.hlo.txt`` — the CNN forward pass at the batch sizes
+  the serving coordinator pads to;
+* ``layer_<name>.hlo.txt``   — single conv layers (weights baked in) for
+  the layer-sweep example and runtime tests;
+* ``manifest.json``          — shapes, seeds and golden checksums. Golden
+  inputs are regenerated in Rust from the seed (bit-identical xorshift),
+  so no tensor data ships with the artifacts.
+
+Usage: ``python -m compile.aot --out ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.direct_conv import conv_direct
+from .kernels.ref import out_size
+
+BATCHES = [1, 2, 4, 8]
+
+# Per-layer artifacts: name -> (spec, input H/W). Shapes chosen to be
+# paper-relevant (AlexNet conv3-like and a VGG-like 3x3) while staying
+# fast under the CPU PJRT backend.
+LAYER_ARTIFACTS = {
+    "alexnet_conv3_like": (M.ConvSpec(3, 3, 64, 96, 1, 1), 13),
+    "vgg_block_like": (M.ConvSpec(3, 3, 32, 32, 1, 1), 28),
+    "strided_conv_like": (M.ConvSpec(5, 5, 16, 32, 2, 2), 27),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True).
+
+    ``print_large_constants`` is essential: the default printer elides
+    big constants as ``constant({...})``, which the text parser on the
+    Rust side silently reads back as zeros — the baked-in weights would
+    vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jaxlib's printer emits metadata attributes (source_end_line, ...)
+    # that xla_extension 0.5.1's parser predates; strip them.
+    opts.print_metadata = False
+    text = comp.get_hlo_module().to_string(opts)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def checksum(a: np.ndarray) -> dict:
+    a64 = np.asarray(a, dtype=np.float64)
+    return {
+        "sum": float(a64.sum()),
+        "sum2": float((a64 * a64).sum()),
+        "count": int(a64.size),
+    }
+
+
+def build_cnn_artifacts(outdir: str, params) -> list[dict]:
+    entries = []
+    for b in BATCHES:
+        fn = lambda xs: (M.cnn_batch(params, xs),)
+        spec = jax.ShapeDtypeStruct((b, *M.CNN_INPUT), jnp.float32)
+        lowered = jax.jit(fn).lower(spec)
+        text = to_hlo_text(lowered)
+        fname = f"cnn_b{b}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        # golden: seeded input -> logits
+        seed = 1000 + b
+        x = M.xorshift_fill((b, *M.CNN_INPUT), seed)
+        y = np.asarray(jax.jit(fn)(jnp.asarray(x))[0])
+        entries.append(
+            {
+                "name": f"cnn_b{b}",
+                "file": fname,
+                "kind": "cnn",
+                "batch": b,
+                "input_shape": [b, *M.CNN_INPUT],
+                "output_shape": list(y.shape),
+                "golden": {
+                    "input_seed": seed,
+                    **checksum(y),
+                    "sample": [float(v) for v in y.reshape(-1)[:4]],
+                    "tol": 1e-3,
+                },
+            }
+        )
+        print(f"  wrote {fname}: in={list(x.shape)} out={list(y.shape)}")
+    return entries
+
+
+def build_layer_artifacts(outdir: str) -> list[dict]:
+    entries = []
+    for name, (spec, hw) in LAYER_ARTIFACTS.items():
+        wseed = zlib.crc32(name.encode()) % 100_000  # deterministic across runs
+        w = M.xorshift_fill((spec.h_f, spec.w_f, spec.c_i, spec.c_o), wseed)
+        w = w / np.sqrt(spec.h_f * spec.w_f * spec.c_i)
+        wj = jnp.asarray(w)
+
+        def fn(x, wj=wj, spec=spec):
+            return (conv_direct(x, wj, stride=spec.stride, pad=spec.pad),)
+
+        in_shape = (hw, hw, spec.c_i)
+        lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct(in_shape, jnp.float32))
+        text = to_hlo_text(lowered)
+        fname = f"layer_{name}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        seed = 2000 + wseed % 100
+        x = M.xorshift_fill(in_shape, seed)
+        y = np.asarray(jax.jit(fn)(jnp.asarray(x))[0])
+        h_o = out_size(hw, spec.h_f, spec.stride, spec.pad)
+        flops = 2 * spec.c_o * h_o * h_o * spec.c_i * spec.h_f * spec.w_f
+        entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "kind": "layer",
+                "weight_seed": wseed,
+                "stride": spec.stride,
+                "pad": spec.pad,
+                "input_shape": list(in_shape),
+                "output_shape": list(y.shape),
+                "flops": flops,
+                "golden": {
+                    "input_seed": seed,
+                    **checksum(y),
+                    "sample": [float(v) for v in y.reshape(-1)[:4]],
+                    "tol": 1e-3,
+                },
+            }
+        )
+        print(f"  wrote {fname}: in={list(in_shape)} out={list(y.shape)}")
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    print("initializing CNN params (seed 7)")
+    params = M.init_params(seed=7)
+    print("lowering CNN batches", BATCHES)
+    models = build_cnn_artifacts(args.out, params)
+    print("lowering per-layer artifacts")
+    layers = build_layer_artifacts(args.out)
+
+    manifest = {
+        "version": 1,
+        "param_seed": 7,
+        "models": models,
+        "layers": layers,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

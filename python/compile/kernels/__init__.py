@@ -1,0 +1,10 @@
+"""L1 — Pallas kernels for the paper's compute hot spot.
+
+* ``direct_conv`` — the paper's blocked direct convolution, adapted to
+  the TPU execution model (see DESIGN.md §Hardware-Adaptation).
+* ``im2col_gemm`` — the baseline the paper compares against, as a Pallas
+  matmul over a lowered matrix.
+* ``ref`` — pure-jnp oracles.
+"""
+
+from . import direct_conv, im2col_gemm, ref  # noqa: F401

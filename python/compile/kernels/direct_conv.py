@@ -1,0 +1,204 @@
+"""L1 — the paper's direct convolution as a Pallas kernel, re-thought for
+the TPU execution model.
+
+Mapping of the paper's CPU-SIMD design onto TPU (DESIGN.md
+§Hardware-Adaptation):
+
+* the paper's inner `j` loop over a `C_o,b` pencil (vector registers)
+  becomes the **lane dimension**: each grid step computes a
+  `[row tile, W_o, C_o,b]` output block whose channel pencil maps onto
+  the 128-wide VPU/MXU lanes;
+* the paper's parallel `j'` loop over output-channel blocks becomes the
+  **first Pallas grid dimension** — blocks are independent, exactly the
+  paper's §3.2 parallelization, with the weight slab for one block
+  staged into VMEM via its BlockSpec;
+* the paper's `l` loop over output rows becomes the **second grid
+  dimension** (row tiles), which bounds the VMEM working set the way
+  `W_o,b x C_o,b` register tiles bounded the register file;
+* the reduction over `(n, m, C_i)` is expressed per kernel tap as an
+  `[rows*W_o, C_i] x [C_i, C_o,b]` contraction — an MXU matmul — instead
+  of the CPU's broadcast-FMA, because the systolic array wants
+  reductions in matrix form;
+* the §4 layouts survive intact: feature maps are channel-pencil-fastest
+  (`[H][W][C]` per block), weights are `[C_o/C_ob][H_f][W_f][C_i][C_ob]`
+  with the blocked output channel fastest.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom calls; on a real TPU the same kernel lowers natively. VMEM
+footprint estimates for the TPU case come from :func:`vmem_footprint`
+and are recorded in EXPERIMENTS.md §Perf-L1.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import out_size
+
+
+def pack_weights(w: jax.Array, c_ob: int) -> jax.Array:
+    """``[H_f, W_f, C_i, C_o]`` -> ``[C_o/C_ob, H_f, W_f, C_i, C_ob]``.
+
+    The paper's Figure-3 kernel layout (with ``C_i,b = C_i``: VMEM plays
+    the role of the cache level that ``C_i,b`` blocked for, so the input
+    channel needs no second blocking level on TPU). Zero memory
+    overhead: a pure permutation.
+    """
+    h_f, w_f, c_i, c_o = w.shape
+    assert c_o % c_ob == 0, f"C_ob={c_ob} must divide C_o={c_o}"
+    return w.reshape(h_f, w_f, c_i, c_o // c_ob, c_ob).transpose(3, 0, 1, 2, 4)
+
+
+def _kernel(x_ref, w_ref, o_ref, *, stride: int, h_f: int, w_f: int, rows: int):
+    """One grid step: `rows` output rows x all `W_o` x one C_o block.
+
+    x_ref: [H_i_pad, W_i_pad, C_i]    (full padded input; the row window
+                                       is sliced out below — Pallas block
+                                       index maps cannot express the
+                                       stride-overlapped windows)
+    w_ref: [1, h_f, w_f, C_i, C_ob]   (this block's weight slab)
+    o_ref: [1, rows, W_o, C_ob]
+    """
+    w_o = o_ref.shape[2]
+    c_i = x_ref.shape[2]
+    c_ob = o_ref.shape[3]
+    lt = pl.program_id(1)
+    win_rows = (rows - 1) * stride + h_f
+    # The input row window feeding this row tile.
+    window = jax.lax.dynamic_slice(
+        x_ref[...], (lt * rows * stride, 0, 0), (win_rows, x_ref.shape[1], c_i)
+    )
+    acc = jnp.zeros((rows * w_o, c_ob), dtype=jnp.float32)
+    # Reduction over kernel taps (n, m) — the paper's loops n, m, i.
+    # Per tap: strided gather of the contributing pixels, then a C_i
+    # contraction on the MXU.
+    for n in range(h_f):
+        for m in range(w_f):
+            win = jax.lax.slice(
+                window,
+                (n, m, 0),
+                (n + (rows - 1) * stride + 1, m + (w_o - 1) * stride + 1, c_i),
+                (stride, stride, 1),
+            )  # [rows, W_o, C_i]
+            taps = w_ref[0, n, m]  # [C_i, C_ob]
+            acc = acc + jnp.dot(
+                win.reshape(rows * w_o, c_i),
+                taps,
+                preferred_element_type=jnp.float32,
+            )
+    o_ref[0, ...] = acc.reshape(rows, w_o, c_ob).astype(o_ref.dtype)
+
+
+def conv_direct(
+    x: jax.Array,
+    w: jax.Array,
+    stride: int = 1,
+    pad: int = 0,
+    c_ob: int | None = None,
+    row_tile: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Direct convolution via the Pallas kernel.
+
+    ``x [H_i, W_i, C_i]``, ``w [H_f, W_f, C_i, C_o]`` ->
+    ``[H_o, W_o, C_o]``. ``c_ob`` defaults to the largest power-of-two
+    divisor of ``C_o`` up to 128 (the lane width); ``row_tile`` defaults
+    to a VMEM-friendly divisor of ``H_o``.
+    """
+    h_i, w_i, c_i = x.shape
+    h_f, w_f, c_i2, c_o = w.shape
+    assert c_i == c_i2, f"C_i mismatch {c_i} vs {c_i2}"
+    h_o = out_size(h_i, h_f, stride, pad)
+    w_o = out_size(w_i, w_f, stride, pad)
+
+    if c_ob is None:
+        c_ob = min(c_o, 128)
+        while c_o % c_ob:
+            c_ob //= 2
+        c_ob = max(c_ob, 1)
+    assert c_o % c_ob == 0, f"C_ob={c_ob} must divide C_o={c_o}"
+    if row_tile is None:
+        row_tile = h_o
+        while row_tile > 1 and _tile_bytes(row_tile, stride, h_f, w_i, c_i, w_o, c_ob) > (
+            2 << 20
+        ):
+            row_tile = (row_tile + 1) // 2
+    while h_o % row_tile:
+        row_tile -= 1  # the grid must tile H_o exactly
+
+    # Border handling: the halo is materialized once (pad rows/cols of
+    # zeros). A production Mosaic kernel folds this into masked DMA; the
+    # transient halo is O(pad*(H+W)*C) bytes and is the only allocation
+    # beyond the output (accounted in EXPERIMENTS.md's memory table).
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    wp = pack_weights(w, c_ob)
+
+    n_ob = c_o // c_ob
+    n_row = h_o // row_tile
+
+    kernel = functools.partial(_kernel, stride=stride, h_f=h_f, w_f=w_f, rows=row_tile)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_ob, n_row),
+        in_specs=[
+            # Full padded input, shared by every grid step (the row
+            # window is dynamically sliced in-kernel; block index maps
+            # cannot express overlapping stride windows).
+            pl.BlockSpec(xp.shape, lambda jb, lt: (0, 0, 0)),
+            # Weight slab for this C_o block only.
+            pl.BlockSpec((1, h_f, w_f, c_i, c_ob), lambda jb, lt: (jb, 0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, row_tile, w_o, c_ob), lambda jb, lt: (jb, lt, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_ob, h_o, w_o, c_ob), x.dtype),
+        interpret=interpret,
+    )(xp, wp)
+    # [C_o/C_ob, H_o, W_o, C_ob] -> [H_o, W_o, C_o]: the §4 blocked output
+    # layout flattened to plain NHWC for the test interface; inside a
+    # network the next layer consumes the blocked form directly.
+    return out.transpose(1, 2, 0, 3).reshape(h_o, w_o, c_o)
+
+
+def _tile_bytes(rows, stride, h_f, w_i, c_i, w_o, c_ob):
+    win = ((rows - 1) * stride + h_f) * w_i * c_i
+    out = rows * w_o * c_ob
+    return 4 * (win + out)
+
+
+def vmem_footprint(
+    h_i: int,
+    w_i: int,
+    c_i: int,
+    h_f: int,
+    w_f: int,
+    c_o: int,
+    stride: int = 1,
+    pad: int = 0,
+    c_ob: int = 128,
+    row_tile: int = 8,
+) -> dict:
+    """Static VMEM/MXU analysis for the TPU case (no execution).
+
+    Returns bytes per VMEM-resident buffer and an MXU-utilization
+    estimate (fraction of the 128x128x128 systolic slots used by the
+    per-tap contraction). EXPERIMENTS.md §Perf-L1 uses this because
+    interpret mode cannot measure real TPU behaviour.
+    """
+    w_o = out_size(w_i, w_f, stride, pad)
+    win_rows = (row_tile - 1) * stride + h_f
+    in_bytes = 4 * win_rows * (w_i + 2 * pad) * c_i
+    w_bytes = 4 * h_f * w_f * c_i * c_ob
+    out_bytes = 4 * row_tile * w_o * c_ob
+    m = row_tile * w_o  # matmul M extent per tap
+    mxu = (min(m, 128) / 128.0) * (min(c_i, 128) / 128.0) * (min(c_ob, 128) / 128.0)
+    return {
+        "vmem_in_bytes": in_bytes,
+        "vmem_weights_bytes": w_bytes,
+        "vmem_out_bytes": out_bytes,
+        "vmem_total_bytes": in_bytes + w_bytes + out_bytes,
+        "mxu_utilization": mxu,
+        "matmul_mkn": (m, c_i, c_ob),
+    }

@@ -1,0 +1,100 @@
+"""L1 baseline — im2col lowering + a Pallas tiled matmul.
+
+This is the §2.2 comparison point expressed in the same technology as the
+direct kernel: the image is lowered to the
+``(H_o*W_o) x (H_f*W_f*C_i)`` matrix (duplicating overlapped pixels —
+the memory overhead the paper eliminates) and multiplied against the
+flattened weights by a 128x128-tiled Pallas matmul kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import out_size
+
+
+def im2col(x: jax.Array, h_f: int, w_f: int, stride: int = 1, pad: int = 0) -> jax.Array:
+    """Lower ``x [H_i, W_i, C_i]`` to ``[(H_o*W_o), (H_f*W_f*C_i)]``."""
+    h_i, w_i, c_i = x.shape
+    h_o = out_size(h_i, h_f, stride, pad)
+    w_o = out_size(w_i, w_f, stride, pad)
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    cols = []
+    for n in range(h_f):
+        for m in range(w_f):
+            win = jax.lax.slice(
+                xp,
+                (n, m, 0),
+                (n + (h_o - 1) * stride + 1, m + (w_o - 1) * stride + 1, c_i),
+                (stride, stride, 1),
+            )  # [h_o, w_o, c_i]
+            cols.append(win.reshape(h_o * w_o, c_i))
+    # row = output pixel, col = (n, m, c_i)
+    return jnp.concatenate(cols, axis=1)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, k_tiles: int):
+    """Accumulating [bm, bk] x [bk, bn] tile matmul (k is the 3rd grid dim)."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def matmul(a: jax.Array, b: jax.Array, bm: int = 128, bk: int = 128, bn: int = 128,
+           interpret: bool = True) -> jax.Array:
+    """Tiled Pallas matmul ``[M, K] x [K, N] -> [M, N]`` (zero-pads tiles)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    mp, kp, np_ = -(-m // bm) * bm, -(-k // bk) * bk, -(-n // bn) * bn
+    a = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_tiles=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :n]
+
+
+def conv_im2col(
+    x: jax.Array,
+    w: jax.Array,
+    stride: int = 1,
+    pad: int = 0,
+    interpret: bool = True,
+) -> jax.Array:
+    """im2col + Pallas GEMM convolution. Same interface as
+    :func:`..direct_conv.conv_direct`."""
+    h_f, w_f, c_i, c_o = w.shape
+    h_i, w_i, _ = x.shape
+    h_o = out_size(h_i, h_f, stride, pad)
+    w_o = out_size(w_i, w_f, stride, pad)
+    lowered = im2col(x, h_f, w_f, stride, pad)  # [(h_o*w_o), (hf*wf*ci)]
+    wmat = w.reshape(h_f * w_f * c_i, c_o)
+    out = matmul(lowered, wmat, interpret=interpret)
+    return out.reshape(h_o, w_o, c_o)
+
+
+def im2col_extra_bytes(h_i: int, w_i: int, c_i: int, h_f: int, w_f: int,
+                       stride: int = 1, pad: int = 0) -> int:
+    """The lowered matrix's footprint — the paper's memory-overhead metric."""
+    h_o = out_size(h_i, h_f, stride, pad)
+    w_o = out_size(w_i, w_f, stride, pad)
+    return 4 * h_o * w_o * h_f * w_f * c_i

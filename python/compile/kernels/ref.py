@@ -1,0 +1,63 @@
+"""Pure-jnp correctness oracles for the convolution kernels.
+
+Two independent references:
+
+* ``conv_ref`` — ``jax.lax.conv_general_dilated`` (XLA's convolution),
+  the production-grade oracle.
+* ``conv_loops`` — six explicit loops in numpy, a direct transcription of
+  the paper's Algorithm 1. Slow; used on tiny shapes to cross-check the
+  oracle itself.
+
+Layouts follow the TPU-adapted convention of this repo: feature maps are
+channel-last ``[H, W, C]`` (the paper's blocked layout with the pencil as
+the innermost dimension degenerates to NHWC when ``C_b = C``), weights
+are ``[H_f, W_f, C_i, C_o]`` (HWIO).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp  # noqa: F401  (re-exported convenience)
+import numpy as np
+
+
+def out_size(size: int, k: int, stride: int, pad: int) -> int:
+    """Output extent of a convolution along one axis."""
+    return (size + 2 * pad - k) // stride + 1
+
+
+def conv_ref(x: jax.Array, w: jax.Array, stride: int = 1, pad: int = 0) -> jax.Array:
+    """Cross-correlation of ``x [H, W, C_i]`` with ``w [H_f, W_f, C_i, C_o]``.
+
+    Returns ``[H_o, W_o, C_o]``. Matches the paper's convolution-layer
+    semantics (deep-learning "convolution" = cross-correlation).
+    """
+    out = jax.lax.conv_general_dilated(
+        x[None],  # NHWC
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out[0]
+
+
+def conv_loops(x: np.ndarray, w: np.ndarray, stride: int = 1, pad: int = 0) -> np.ndarray:
+    """Algorithm 1 verbatim (numpy loops). ``x [H,W,C_i]``, ``w [Hf,Wf,C_i,C_o]``."""
+    h_i, w_i, c_i = x.shape
+    h_f, w_f, c_i2, c_o = w.shape
+    assert c_i == c_i2
+    h_o = out_size(h_i, h_f, stride, pad)
+    w_o = out_size(w_i, w_f, stride, pad)
+    out = np.zeros((h_o, w_o, c_o), dtype=np.float64)
+    for i in range(c_i):
+        for j in range(c_o):
+            for k in range(w_o):
+                for l in range(h_o):  # noqa: E741 — paper's index name
+                    for m in range(w_f):
+                        for n in range(h_f):
+                            yy = l * stride + n - pad
+                            xx = k * stride + m - pad
+                            if 0 <= yy < h_i and 0 <= xx < w_i:
+                                out[l, k, j] += x[yy, xx, i] * w[n, m, i, j]
+    return out.astype(x.dtype)

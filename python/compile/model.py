@@ -1,0 +1,121 @@
+"""L2 — the JAX compute graph built on the L1 Pallas kernels.
+
+A compact CNN (CIFAR-scale) used by the end-to-end serving example: every
+convolution goes through :mod:`compile.kernels.direct_conv` (the paper's
+kernel), the classifier matmul through the Pallas tiled matmul. Feature
+maps stay channel-last throughout — the §4 "input and output share one
+layout" property, so no transposes appear between layers in the lowered
+HLO.
+
+Python only runs at build time: :mod:`compile.aot` lowers these functions
+to HLO text once, and the Rust runtime executes the artifacts.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.direct_conv import conv_direct
+from .kernels.im2col_gemm import matmul
+
+
+class ConvSpec(NamedTuple):
+    """One conv layer: kernel size, channels, stride, padding."""
+
+    h_f: int
+    w_f: int
+    c_i: int
+    c_o: int
+    stride: int
+    pad: int
+
+
+# The end-to-end example network: three direct-conv layers + classifier.
+CNN_SPECS = [
+    ConvSpec(3, 3, 3, 32, 1, 1),   # 32x32x3  -> 32x32x32
+    ConvSpec(3, 3, 32, 64, 2, 1),  # 32x32x32 -> 16x16x64
+    ConvSpec(3, 3, 64, 64, 2, 1),  # 16x16x64 -> 8x8x64
+]
+CNN_INPUT = (32, 32, 3)
+CNN_CLASSES = 10
+
+
+def xorshift_fill(shape: tuple[int, ...], seed: int) -> np.ndarray:
+    """Deterministic fill in [-1, 1), bit-identical to the Rust
+    ``Tensor::random`` (xorshift64*). The serving runtime regenerates the
+    same tensors from the seed alone, so goldens need no data files.
+    """
+    mask = (1 << 64) - 1
+    state = (seed * 0x9E3779B97F4A7C15) & mask
+    state = max(state, 1)
+    n = int(np.prod(shape))
+    out = np.empty(n, dtype=np.float32)
+    for idx in range(n):
+        x = state
+        x ^= x >> 12
+        x = (x ^ (x << 25)) & mask
+        x ^= x >> 27
+        state = x
+        v = (x * 0x2545F4914F6CDD1D) & mask
+        # (v>>40)/2^24*2-1: every step exact in f64 and the result is an
+        # exact multiple of 2^-23, so the f32 cast loses nothing and the
+        # value is bit-identical to Rust's f32 arithmetic.
+        out[idx] = (v >> 40) / float(1 << 24) * 2.0 - 1.0
+    return out.reshape(shape)
+
+
+def init_params(seed: int = 7, scale: float = 3.0) -> dict:
+    """Deterministic CNN weights (xorshift; reproducible from the seed)."""
+    params: dict = {"convs": [], "dense": None}
+    s = seed
+    for spec in CNN_SPECS:
+        w = xorshift_fill((spec.h_f, spec.w_f, spec.c_i, spec.c_o), s) * scale
+        # normalize fan-in so activations stay O(1) through the stack
+        w = w / np.sqrt(spec.h_f * spec.w_f * spec.c_i)
+        params["convs"].append(jnp.asarray(w))
+        s += 1
+    feat = CNN_SPECS[-1].c_o
+    wd = xorshift_fill((feat, CNN_CLASSES), s) * scale / np.sqrt(feat)
+    params["dense"] = jnp.asarray(wd)
+    return params
+
+
+def conv_layer(x: jax.Array, w: jax.Array, spec: ConvSpec) -> jax.Array:
+    """One convolution + ReLU through the L1 direct kernel."""
+    y = conv_direct(x, w, stride=spec.stride, pad=spec.pad)
+    return jnp.maximum(y, 0.0)
+
+
+def cnn_single(params: dict, x: jax.Array) -> jax.Array:
+    """Forward pass for one image ``[32, 32, 3]`` -> logits ``[10]``."""
+    h = x
+    for w, spec in zip(params["convs"], CNN_SPECS):
+        h = conv_layer(h, w, spec)
+    feat = jnp.mean(h, axis=(0, 1))  # global average pool -> [C]
+    return feat @ params["dense"]
+
+
+def cnn_batch(params: dict, xs: jax.Array) -> jax.Array:
+    """Batched forward ``[B, 32, 32, 3]`` -> ``[B, 10]``.
+
+    Convolutions are vmapped (each image runs the Pallas kernel); the
+    classifier runs as a single Pallas matmul over the whole batch.
+    """
+    h = xs
+    for w, spec in zip(params["convs"], CNN_SPECS):
+        h = jax.vmap(lambda img, w=w, spec=spec: conv_layer(img, w, spec))(h)
+    feats = jnp.mean(h, axis=(1, 2))  # [B, C]
+    return matmul(feats, params["dense"])
+
+
+def single_layer_fn(spec: ConvSpec, w: jax.Array):
+    """A one-layer function (weights baked in) for per-layer artifacts."""
+
+    def fn(x: jax.Array) -> jax.Array:
+        return conv_direct(x, w, stride=spec.stride, pad=spec.pad)
+
+    return fn

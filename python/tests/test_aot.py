@@ -1,0 +1,91 @@
+"""AOT path tests: HLO text fidelity (no elided constants, parseable by
+the old XLA text grammar) and manifest content."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.kernels.direct_conv import conv_direct
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def lower_one_layer():
+    spec = M.ConvSpec(3, 3, 4, 8, 1, 1)
+    w = jnp.asarray(M.xorshift_fill((3, 3, 4, 8), 1))
+
+    def fn(x):
+        return (conv_direct(x, w, stride=1, pad=1),)
+
+    return jax.jit(fn).lower(jax.ShapeDtypeStruct((8, 8, 4), jnp.float32))
+
+
+def test_hlo_text_is_complete_and_old_grammar():
+    text = aot.to_hlo_text(lower_one_layer())
+    assert "ENTRY" in text
+    assert "{...}" not in text, "constants must not be elided"
+    # xla_extension 0.5.1's parser rejects these newer metadata attrs:
+    assert "source_end_line" not in text
+    assert "metadata=" not in text
+    # weights appear as a full constant
+    assert "constant" in text
+
+
+def test_hlo_entry_signature():
+    text = aot.to_hlo_text(lower_one_layer())
+    first = text.splitlines()[0]
+    # input (f32[8,8,4]) -> 1-tuple output ((f32[8,8,8]))
+    assert "f32[8,8,4]" in first
+    assert "(f32[8,8,8]" in first
+
+
+def test_checksum_fields():
+    c = aot.checksum(np.array([1.0, 2.0, -3.0]))
+    assert c["sum"] == 0.0
+    assert c["sum2"] == 14.0
+    assert c["count"] == 3
+
+
+def test_existing_manifest_consistency():
+    # When artifacts have been built (make artifacts), validate them.
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    batches = sorted(m["batch"] for m in man["models"])
+    assert batches == aot.BATCHES
+    for entry in man["models"] + man["layers"]:
+        hlo = os.path.join(os.path.dirname(path), entry["file"])
+        assert os.path.exists(hlo), entry["file"]
+        text = open(hlo).read()
+        assert "{...}" not in text, f"{entry['file']} has elided constants"
+        g = entry["golden"]
+        assert g["count"] == int(np.prod(entry["output_shape"]))
+        assert len(g["sample"]) == 4
+        assert g["tol"] > 0
+
+
+def test_golden_reproducibility():
+    # Rebuilding the golden for cnn_b1 must give the manifest values.
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        man = json.load(f)
+    entry = next(m for m in man["models"] if m["name"] == "cnn_b1")
+    params = M.init_params(seed=man["param_seed"])
+    x = M.xorshift_fill(tuple(entry["input_shape"]), entry["golden"]["input_seed"])
+    y = np.asarray(M.cnn_batch(params, jnp.asarray(x)))
+    c = aot.checksum(y)
+    assert abs(c["sum"] - entry["golden"]["sum"]) < 1e-5 * max(1.0, abs(entry["golden"]["sum"]))
+    np.testing.assert_allclose(
+        y.reshape(-1)[:4], entry["golden"]["sample"], rtol=1e-5, atol=1e-6
+    )

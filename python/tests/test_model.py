@@ -1,0 +1,82 @@
+"""L2 model tests: CNN forward shapes, batching consistency, and the
+cross-language determinism contract with the Rust runtime."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(seed=7)
+
+
+def test_xorshift_matches_rust_reference():
+    # Exact f32 bit patterns of Tensor::random(&[5], 1001) from the Rust
+    # side (the cross-language golden contract; see runtime::verify_golden).
+    got = M.xorshift_fill((5,), 1001).view(np.uint32)
+    want = np.array(
+        [1040770256, 1039140736, 3212312514, 1056346464, 1060410652], dtype=np.uint32
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+def test_xorshift_deterministic_and_bounded():
+    a = M.xorshift_fill((100,), 3)
+    b = M.xorshift_fill((100,), 3)
+    c = M.xorshift_fill((100,), 4)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert (a >= -1.0).all() and (a < 1.0).all()
+
+
+def test_param_shapes(params):
+    assert len(params["convs"]) == len(M.CNN_SPECS)
+    for w, spec in zip(params["convs"], M.CNN_SPECS):
+        assert w.shape == (spec.h_f, spec.w_f, spec.c_i, spec.c_o)
+    assert params["dense"].shape == (M.CNN_SPECS[-1].c_o, M.CNN_CLASSES)
+
+
+def test_single_forward_shapes(params):
+    x = jnp.asarray(M.xorshift_fill(M.CNN_INPUT, 1))
+    y = M.cnn_single(params, x)
+    assert y.shape == (M.CNN_CLASSES,)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_batch_matches_single(params):
+    xs = jnp.asarray(M.xorshift_fill((3, *M.CNN_INPUT), 2))
+    batched = np.asarray(M.cnn_batch(params, xs))
+    for i in range(3):
+        single = np.asarray(M.cnn_single(params, xs[i]))
+        np.testing.assert_allclose(batched[i], single, rtol=1e-5, atol=1e-5)
+
+
+def test_batch_order_independence(params):
+    # Image order must not affect per-image logits (no batch leakage).
+    xs = M.xorshift_fill((4, *M.CNN_INPUT), 9)
+    fwd = np.asarray(M.cnn_batch(params, jnp.asarray(xs)))
+    rev = np.asarray(M.cnn_batch(params, jnp.asarray(xs[::-1].copy())))
+    np.testing.assert_allclose(fwd, rev[::-1], rtol=1e-5, atol=1e-5)
+
+
+def test_layer_activation_shapes(params):
+    x = jnp.asarray(M.xorshift_fill(M.CNN_INPUT, 5))
+    h = x
+    expected = [(32, 32, 32), (16, 16, 64), (8, 8, 64)]
+    for w, spec, shape in zip(params["convs"], M.CNN_SPECS, expected):
+        h = M.conv_layer(h, w, spec)
+        assert h.shape == shape
+        assert float(jnp.min(h)) >= 0.0  # ReLU
+
+
+def test_jit_and_eager_agree(params):
+    x = jnp.asarray(M.xorshift_fill((2, *M.CNN_INPUT), 6))
+    eager = np.asarray(M.cnn_batch(params, x))
+    jitted = np.asarray(jax.jit(lambda xs: M.cnn_batch(params, xs))(x))
+    np.testing.assert_allclose(eager, jitted, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,52 @@
+//! Ablation (ours, host-measured): blocking-parameter sensitivity of
+//! Algorithm 3 — sweep `C_o,b x W_o,b` register tiles and `C_i,b` cache
+//! blocks around the analytically selected point, confirming the Low et
+//! al. model picks a near-optimal configuration (§6's auto-tuning remark).
+
+use dconv::arch::host;
+use dconv::bench_harness::{bench, emit, opts_from_env, sink};
+use dconv::conv::{conv_direct_blocked, select_params, BlockParams, ConvShape};
+use dconv::layout::{to_blocked_io, to_blocked_kernel};
+use dconv::metrics::{gflops, Table};
+use dconv::tensor::Tensor;
+
+fn main() {
+    let opts = opts_from_env();
+    let m = host();
+    let s = ConvShape::new(64, 28, 28, 64, 3, 3, 1, 1);
+    let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 1);
+    let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 2);
+    let selected = select_params(&m, &s);
+
+    let mut t = Table::new(&["c_ob", "w_ob", "c_ib", "GFLOPS", "selected"]);
+    for c_ob in [8usize, 16, 32] {
+        for w_ob in [2usize, 4, 5, 6, 8] {
+            for c_ib in [8usize, 32, 64] {
+                let bp = BlockParams::new(c_ob, w_ob, c_ib);
+                if bp.validate_for(&s).is_err() {
+                    continue;
+                }
+                let bi = to_blocked_io(&input, bp.c_ib).unwrap();
+                let bk = to_blocked_kernel(&kernel, bp.c_ob, bp.c_ib).unwrap();
+                let meas = bench("cfg", opts, || {
+                    sink(conv_direct_blocked(&bi, &bk, &s, bp, 1).unwrap());
+                });
+                t.row(vec![
+                    c_ob.to_string(),
+                    w_ob.to_string(),
+                    c_ib.to_string(),
+                    format!("{:.2}", gflops(s.flops(), meas.median_secs)),
+                    if bp == selected { "<== analytical".into() } else { String::new() },
+                ]);
+            }
+        }
+    }
+    emit(
+        "ablation_blocking",
+        &format!(
+            "Ablation — blocking parameters on {} (analytical pick: {:?})",
+            m.name, selected
+        ),
+        &t,
+    );
+}

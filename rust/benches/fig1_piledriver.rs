@@ -1,0 +1,48 @@
+//! Figure 1 — performance normalized to OpenBLAS GEMM on AMD Piledriver.
+//!
+//! AlexNet conv layers, 4 threads. Series normalized to the SGEMM-only
+//! dashed line (packing assumed free):
+//!   * `sgemm+im2col` (the blue bars: real packing cost included),
+//!   * `direct` (the yellow bars).
+//! Expected shape (paper): sgemm+im2col < 0.8, direct > 1.0 on every
+//! layer.
+
+use dconv::arch::piledriver;
+use dconv::bench_harness::emit;
+use dconv::metrics::Table;
+use dconv::nets;
+use dconv::sim::{estimate, Algo};
+
+fn main() {
+    let m = piledriver();
+    let threads = 4;
+    let mut t = Table::new(&[
+        "layer",
+        "sgemm-only GFLOPS",
+        "sgemm+im2col (rel)",
+        "direct (rel)",
+        "direct GFLOPS",
+        "im2col extra MiB",
+    ]);
+    for l in nets::alexnet() {
+        let gemm = estimate(&m, &l.shape, Algo::GemmOnly, threads);
+        let low = estimate(&m, &l.shape, Algo::Im2colGemm, threads);
+        let dir = estimate(&m, &l.shape, Algo::Direct, threads);
+        t.row(vec![
+            l.name.clone(),
+            format!("{:.1}", gemm.gflops),
+            format!("{:.2}", gemm.secs / low.secs),
+            format!("{:.2}", gemm.secs / dir.secs),
+            format!("{:.1}", dir.gflops),
+            format!("{:.1}", low.extra_bytes as f64 / (1 << 20) as f64),
+        ]);
+    }
+    emit(
+        "fig1_piledriver",
+        &format!(
+            "Figure 1 — {} / {} threads / AlexNet (normalized to SGEMM-only)",
+            m.name, threads
+        ),
+        &t,
+    );
+}

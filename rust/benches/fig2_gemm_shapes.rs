@@ -1,0 +1,85 @@
+//! Figure 2 — why im2col matrices are bad for BLAS.
+//!
+//! The paper's Figure 2 illustrates the lowering and notes that the
+//! GEMM's inner dimension `H_f*W_f*C_i` usually dwarfs `C_o` and the
+//! spatial extent. This bench regenerates the quantitative version: for
+//! every AlexNet/VGG layer, the im2col matrix shape and the modeled
+//! SGEMM efficiency on it against the square-HPC reference — plus a
+//! host-measured confirmation.
+
+use dconv::arch::{haswell, host};
+use dconv::bench_harness::{bench, emit, opts_from_env, sink};
+use dconv::gemm::sgemm;
+use dconv::metrics::{gflops, Table};
+use dconv::nets;
+use dconv::sim::gemm_time;
+use dconv::tensor::Tensor;
+
+fn main() {
+    let m = haswell();
+    let mut t = Table::new(&[
+        "layer",
+        "m=C_o",
+        "n=HoWo",
+        "k=HfWfCi",
+        "model frac-of-peak (1t)",
+        "model frac-of-peak (4t)",
+    ]);
+    let frac = |mm: usize, nn: usize, kk: usize, p: usize| {
+        let fl = 2.0 * (mm as f64) * (nn as f64) * (kk as f64);
+        fl / gemm_time(&m, mm, nn, kk, p) / 1e9 / m.peak_gflops(p)
+    };
+    t.row(vec![
+        "HPC square (2000^3)".into(),
+        "2000".into(),
+        "2000".into(),
+        "2000".into(),
+        format!("{:.3}", frac(2000, 2000, 2000, 1)),
+        format!("{:.3}", frac(2000, 2000, 2000, 4)),
+    ]);
+    for l in nets::alexnet().into_iter().chain(nets::vgg16()) {
+        let s = &l.shape;
+        let (mm, nn, kk) = (s.c_o, s.h_o() * s.w_o(), s.c_i * s.h_f * s.w_f);
+        t.row(vec![
+            format!("{}/{}", l.net, l.name),
+            mm.to_string(),
+            nn.to_string(),
+            kk.to_string(),
+            format!("{:.3}", frac(mm, nn, kk, 1)),
+            format!("{:.3}", frac(mm, nn, kk, 4)),
+        ]);
+    }
+    emit("fig2_gemm_shapes", "Figure 2 — SGEMM efficiency on im2col shapes (model)", &t);
+
+    // Host-measured confirmation: conv-shaped vs square GEMM.
+    let opts = opts_from_env();
+    let hostm = host();
+    let mut t2 = Table::new(&["shape", "m", "n", "k", "measured GFLOPS"]);
+    let cases = [
+        ("square", 256usize, 256usize, 256usize),
+        ("conv-ish deep-k", 96, 729, 2400),
+        ("conv-ish wide-n", 64, 12544, 27),
+    ];
+    for (name, mm, nn, kk) in cases {
+        let a = Tensor::random(&[mm, kk], 1);
+        let b = Tensor::random(&[kk, nn], 2);
+        let mut c = vec![0.0f32; mm * nn];
+        let meas = bench(name, opts, || {
+            c.iter_mut().for_each(|v| *v = 0.0);
+            sgemm(mm, nn, kk, a.data(), kk, b.data(), nn, &mut c, nn);
+            sink(c[0]);
+        });
+        t2.row(vec![
+            name.into(),
+            mm.to_string(),
+            nn.to_string(),
+            kk.to_string(),
+            format!("{:.2}", gflops(2 * (mm * nn * kk) as u64, meas.median_secs)),
+        ]);
+    }
+    emit(
+        "fig2_gemm_shapes_host",
+        &format!("Figure 2 (host-measured on {})", hostm.name),
+        &t2,
+    );
+}

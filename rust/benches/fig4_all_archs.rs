@@ -1,0 +1,76 @@
+//! Figure 4 — direct vs FFT-based (NNPACK) vs SGEMM-based convolution on
+//! all conv layers of AlexNet, GoogLeNet and VGG, on the three Table-1
+//! machines. All series normalized to SGEMM+im2col = 1.0 (the paper's
+//! normalization).
+//!
+//! Expected shape: direct 1.1x–4x everywhere; NNPACK beats SGEMM only on
+//! large-image stride-1 layers on Intel, never on ARM; AMD has no NNPACK
+//! port (the paper reports none), marked n/a.
+
+use dconv::arch::{cortex_a57, haswell, piledriver, Machine};
+use dconv::bench_harness::emit;
+use dconv::metrics::Table;
+use dconv::nets;
+use dconv::sim::{estimate, Algo};
+
+fn geomean(v: &[f64]) -> f64 {
+    (v.iter().map(|x| x.ln()).sum::<f64>() / v.len() as f64).exp()
+}
+
+fn run_machine(m: &Machine, nnpack_supported: bool) {
+    let p = m.cores;
+    let mut t = Table::new(&["layer", "GFLOPs", "direct (rel)", "nnpack-best (rel)"]);
+    let mut per_net: Vec<(String, Vec<f64>, Vec<f64>)> = Vec::new();
+    for net in ["alexnet", "googlenet", "vgg16"] {
+        let mut dirs = Vec::new();
+        let mut ffts = Vec::new();
+        for l in nets::by_name(net).unwrap() {
+            let base = estimate(m, &l.shape, Algo::Im2colGemm, p);
+            let dir = estimate(m, &l.shape, Algo::Direct, p);
+            let rel_dir = base.secs / dir.secs;
+            dirs.push(rel_dir);
+            let rel_fft = if nnpack_supported {
+                let fft = estimate(m, &l.shape, Algo::FftNnpack, p);
+                let r = base.secs / fft.secs;
+                ffts.push(r);
+                format!("{r:.2}")
+            } else {
+                "n/a".to_string()
+            };
+            t.row(vec![
+                format!("{}/{}", l.net, l.name),
+                format!("{:.2}", l.gflops()),
+                format!("{rel_dir:.2}"),
+                rel_fft,
+            ]);
+        }
+        per_net.push((net.to_string(), dirs, ffts));
+    }
+    emit(
+        &format!("fig4_{}", m.name.split_whitespace().next().unwrap().to_lowercase()),
+        &format!("Figure 4 — {} ({p} threads, rel to sgemm+im2col)", m.name),
+        &t,
+    );
+    let mut s = Table::new(&["net", "direct geomean", "direct min..max", "nnpack geomean"]);
+    for (net, dirs, ffts) in per_net {
+        let min = dirs.iter().cloned().fold(f64::MAX, f64::min);
+        let max = dirs.iter().cloned().fold(0.0, f64::max);
+        s.row(vec![
+            net,
+            format!("{:.2}", geomean(&dirs)),
+            format!("{min:.2}..{max:.2}"),
+            if ffts.is_empty() { "n/a".into() } else { format!("{:.2}", geomean(&ffts)) },
+        ]);
+    }
+    emit(
+        &format!("fig4_{}_summary", m.name.split_whitespace().next().unwrap().to_lowercase()),
+        &format!("Figure 4 summary — {}", m.name),
+        &s,
+    );
+}
+
+fn main() {
+    run_machine(&haswell(), true);
+    run_machine(&piledriver(), false); // paper: NNPACK does not support AMD
+    run_machine(&cortex_a57(), true);
+}

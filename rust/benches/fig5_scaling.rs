@@ -1,0 +1,66 @@
+//! Figure 5 — scaling with thread count: GFLOPS *per core*, threads from
+//! 1 to 2x the physical cores, direct vs SGEMM-based convolution.
+//!
+//! Expected shape: direct stays flat up to the core count then drops
+//! sharply under oversubscription; SGEMM per-core decays from 2 threads
+//! on (partition skew + packing serialization).
+//!
+//! A host-measured correctness column runs the real threaded direct
+//! convolution at each thread count (single-core machine: this validates
+//! the code path, the curve itself comes from the model — DESIGN.md §4).
+
+use dconv::arch::{cortex_a57, haswell, piledriver};
+use dconv::bench_harness::{bench, emit, opts_from_env, sink};
+use dconv::conv::{conv_direct, select_params, ConvShape};
+use dconv::metrics::{gflops, Table};
+use dconv::nets;
+use dconv::sim::{scaling_curve, Algo};
+use dconv::tensor::Tensor;
+
+fn main() {
+    for m in [haswell(), piledriver(), cortex_a57()] {
+        let threads: Vec<usize> = (0..)
+            .map(|i| 1usize << i)
+            .take_while(|&p| p <= 2 * m.cores)
+            .collect();
+        let mut t = Table::new(&["layer", "algo", "threads", "GFLOPS", "GFLOPS/core"]);
+        for l in &nets::alexnet()[1..3] {
+            for (algo, label) in [(Algo::Direct, "direct"), (Algo::Im2colGemm, "sgemm+im2col")] {
+                for pt in scaling_curve(&m, &l.shape, algo, &threads) {
+                    t.row(vec![
+                        l.name.clone(),
+                        label.into(),
+                        pt.threads.to_string(),
+                        format!("{:.1}", pt.gflops),
+                        format!("{:.1}", pt.gflops_per_core),
+                    ]);
+                }
+            }
+        }
+        emit(
+            &format!("fig5_{}", m.name.split_whitespace().next().unwrap().to_lowercase()),
+            &format!("Figure 5 — thread scaling on {} (model)", m.name),
+            &t,
+        );
+    }
+
+    // Host-measured: the real threaded kernel at increasing thread counts.
+    let opts = opts_from_env();
+    let host = dconv::arch::host();
+    let s = ConvShape::new(64, 28, 28, 64, 3, 3, 1, 1);
+    let bp = select_params(&host, &s);
+    let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 5);
+    let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 6);
+    let mut t = Table::new(&["threads", "measured GFLOPS", "note"]);
+    for p in [1usize, 2, 4] {
+        let meas = bench(&format!("direct-{p}t"), opts, || {
+            sink(conv_direct(&input, &kernel, &s, bp, p).unwrap());
+        });
+        t.row(vec![
+            p.to_string(),
+            format!("{:.2}", gflops(s.flops(), meas.median_secs)),
+            if host.cores == 1 { "single-core host: expect flat/worse".into() } else { String::new() },
+        ]);
+    }
+    emit("fig5_host", "Figure 5 (host-measured threaded direct conv)", &t);
+}

@@ -1,0 +1,102 @@
+//! Host-measured Figure-4 analogue: every convolution implementation in
+//! this crate, wall-clock on this machine, on shape-faithful layers from
+//! the three benchmark networks. This is the real-hardware counterpart
+//! of the simulator figures (single machine, single thread — the
+//! multi-arch / multi-thread shapes come from `fig4_all_archs` and
+//! `fig5_scaling`).
+//!
+//! Also prints the memory-overhead table (the paper's core claim).
+
+use dconv::bench_harness::{bench, emit, opts_from_env, sink};
+use dconv::conv::{conv_direct, conv_naive, select_params, ConvShape};
+use dconv::fftconv::FftConvPlan;
+use dconv::lowering::{conv_im2col, conv_mec, im2col_extra_bytes, mec_extra_bytes};
+use dconv::metrics::{gflops, Table};
+use dconv::tensor::Tensor;
+use dconv::winograd::{conv_winograd, winograd_applicable, winograd_extra_bytes};
+
+fn main() {
+    let opts = opts_from_env();
+    let m = dconv::arch::host();
+    // Shape-faithful (channel counts + kernel geometry preserved,
+    // spatial extent reduced where the original would take minutes).
+    let layers = [
+        ("alexnet/conv1-ish", ConvShape::new(3, 115, 115, 96, 11, 11, 4, 0)),
+        ("alexnet/conv3-ish", ConvShape::new(128, 13, 13, 192, 3, 3, 1, 1)),
+        ("googlenet/3x3-ish", ConvShape::new(96, 28, 28, 128, 3, 3, 1, 1)),
+        ("googlenet/5x5-ish", ConvShape::new(16, 14, 14, 32, 5, 5, 1, 2)),
+        ("vgg/conv3-ish", ConvShape::new(64, 56, 56, 64, 3, 3, 1, 1)),
+    ];
+    let mut t = Table::new(&["layer", "algorithm", "GFLOPS", "rel to im2col", "extra MiB"]);
+    for (name, s) in &layers {
+        let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 1);
+        let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 2);
+        let bp = select_params(&m, s);
+
+        // Correctness gate before timing anything.
+        let want = conv_naive(&input, &kernel, s).unwrap();
+        let got = conv_direct(&input, &kernel, s, bp, 1).unwrap();
+        assert!(got.allclose(&want, 1e-3, 1e-3), "{name}: direct kernel wrong");
+
+        let t_im2col = bench("im2col", opts, || { sink(conv_im2col(&input, &kernel, s).unwrap()); });
+        let base = t_im2col.median_secs;
+        let mib = |b: u64| format!("{:.1}", b as f64 / (1 << 20) as f64);
+        t.row(vec![
+            name.to_string(),
+            "im2col+sgemm".into(),
+            format!("{:.2}", gflops(s.flops(), base)),
+            "1.00".into(),
+            mib(im2col_extra_bytes(s)),
+        ]);
+
+        let t_direct =
+            bench("direct", opts, || { sink(conv_direct(&input, &kernel, s, bp, 1).unwrap()); });
+        t.row(vec![
+            name.to_string(),
+            "direct (ours)".into(),
+            format!("{:.2}", gflops(s.flops(), t_direct.median_secs)),
+            format!("{:.2}", base / t_direct.median_secs),
+            "0.0".into(),
+        ]);
+
+        let t_mec = bench("mec", opts, || { sink(conv_mec(&input, &kernel, s).unwrap()); });
+        t.row(vec![
+            name.to_string(),
+            "mec".into(),
+            format!("{:.2}", gflops(s.flops(), t_mec.median_secs)),
+            format!("{:.2}", base / t_mec.median_secs),
+            mib(mec_extra_bytes(s)),
+        ]);
+
+        if winograd_applicable(s) {
+            let t_wino =
+                bench("winograd", opts, || { sink(conv_winograd(&input, &kernel, s).unwrap()); });
+            t.row(vec![
+                name.to_string(),
+                "winograd".into(),
+                format!("{:.2}", gflops(s.flops(), t_wino.median_secs)),
+                format!("{:.2}", base / t_wino.median_secs),
+                mib(winograd_extra_bytes(s)),
+            ]);
+        }
+
+        // FFT with precomputed kernel spectra (NNPACK inference mode);
+        // skip the largest layer where spectra would not fit in time.
+        if s.c_i * s.c_o <= 128 * 192 {
+            let plan = FftConvPlan::new(&kernel, s).unwrap();
+            let t_fft = bench("fft", opts, || { sink(plan.run(&input).unwrap()); });
+            t.row(vec![
+                name.to_string(),
+                "fft (precomp)".into(),
+                format!("{:.2}", gflops(s.flops(), t_fft.median_secs)),
+                format!("{:.2}", base / t_fft.median_secs),
+                mib(plan.retained_bytes()),
+            ]);
+        }
+    }
+    emit(
+        "host_measured",
+        &format!("Host-measured convolution comparison ({} / 1 thread)", m.name),
+        &t,
+    );
+}

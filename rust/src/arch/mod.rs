@@ -1,0 +1,298 @@
+//! Machine descriptors — the paper's model architecture (§3.1.1) plus the
+//! concrete testbed machines of Table 1.
+//!
+//! The model architecture is parameterized by:
+//! * `n_vec`  — SIMD width in f32 lanes,
+//! * `n_fma`  — number of pipelined FMA units,
+//! * `l_fma`  — FMA latency in cycles,
+//! * `n_reg`  — addressable logical vector registers,
+//!
+//! plus a cache hierarchy and frequency/core counts used by the
+//! performance simulator ([`crate::sim`]).
+
+use crate::conv::ConvShape;
+
+/// One level of the cache hierarchy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cache {
+    /// Total capacity in bytes.
+    pub bytes: usize,
+    /// Line size in bytes.
+    pub line: usize,
+    /// Associativity (ways).
+    pub ways: usize,
+    /// Load latency in cycles.
+    pub latency: u32,
+    /// True if shared between all cores (e.g. L3), false if per-core.
+    pub shared: bool,
+}
+
+/// A machine descriptor in the paper's analytical model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Machine {
+    pub name: &'static str,
+    pub isa: &'static str,
+    /// Core clock in GHz (Table 1).
+    pub freq_ghz: f64,
+    /// Physical cores (Table 1).
+    pub cores: usize,
+    /// SIMD width in f32 lanes (Table 1: N_vec).
+    pub n_vec: usize,
+    /// FMA units per core.
+    pub n_fma: usize,
+    /// FMA latency in cycles.
+    pub l_fma: usize,
+    /// Addressable logical vector registers.
+    pub n_reg: usize,
+    /// FLOPs per FMA lane per cycle (2 = fused mul+add; 1 if mul and add
+    /// issue separately, as on Piledriver's shared FPU in our model).
+    pub flops_per_lane: usize,
+    /// Load ports: vector loads that can issue per cycle alongside FMAs.
+    pub load_ports: usize,
+    /// Calibrated microkernel issue efficiency: the fraction of peak a
+    /// hand-tuned register kernel sustains once supplied from L1
+    /// (front-end width, AGU contention, port conflicts). Calibrated so
+    /// the simulator's square-HPC SGEMM matches the paper's measured
+    /// peaks (§6: 89% / 54% / 92% on Intel / AMD / ARM).
+    pub micro_eff: f64,
+    /// Cache hierarchy, innermost first.
+    pub caches: Vec<Cache>,
+    /// Sustainable DRAM bandwidth, bytes/cycle (whole chip).
+    pub dram_bytes_per_cycle: f64,
+}
+
+impl Machine {
+    /// Theoretical peak GFLOPS for `p` cores.
+    pub fn peak_gflops(&self, p: usize) -> f64 {
+        let p = p.min(self.cores);
+        self.freq_ghz * (self.n_vec * self.n_fma * self.flops_per_lane * p) as f64
+    }
+
+    /// The paper's eq. 1: minimum independent output elements per cycle
+    /// required to saturate the FMA pipelines.
+    pub fn min_independent_outputs(&self) -> usize {
+        self.n_vec * self.n_fma * self.l_fma
+    }
+
+    /// The paper's eq. 2: elements that fit in the register file.
+    pub fn max_register_outputs(&self) -> usize {
+        self.n_reg * self.n_vec
+    }
+
+    /// Whether an `E = c_ob * w_ob` accumulator tile both saturates the
+    /// pipelines (eq. 1) and leaves registers for weight/input operands
+    /// (eq. 2, minus `c_ob/n_vec` weight registers and one broadcast).
+    pub fn tile_feasible(&self, c_ob: usize, w_ob: usize) -> bool {
+        let e = c_ob * w_ob;
+        let acc_regs = (c_ob / self.n_vec).max(1) * w_ob;
+        let operand_regs = (c_ob / self.n_vec).max(1) + 1;
+        e >= self.min_independent_outputs() && acc_regs + operand_regs <= self.n_reg
+    }
+
+    /// Arithmetic intensity (FLOPs/byte) required to not be DRAM-bound at
+    /// peak, for `p` cores.
+    pub fn roofline_intensity(&self, p: usize) -> f64 {
+        let flops_per_cycle = (self.n_vec * self.n_fma * self.flops_per_lane * p.min(self.cores)) as f64;
+        flops_per_cycle / self.dram_bytes_per_cycle
+    }
+
+    /// Arithmetic intensity of a conv layer (FLOPs per byte of compulsory
+    /// traffic: input + kernel + output each touched once).
+    pub fn conv_intensity(shape: &ConvShape) -> f64 {
+        shape.flops() as f64
+            / (shape.input_bytes() + shape.kernel_bytes() + shape.output_bytes()) as f64
+    }
+}
+
+/// Intel Core i7-4770K (Haswell) — Table 1 column 1.
+/// AVX2: 8 f32 lanes, 2 FMA ports, 5-cycle FMA latency, 16 ymm registers.
+pub fn haswell() -> Machine {
+    Machine {
+        name: "Intel i7-4770K (Haswell)",
+        isa: "AVX2",
+        freq_ghz: 3.5,
+        cores: 4,
+        n_vec: 8,
+        n_fma: 2,
+        l_fma: 5,
+        n_reg: 16,
+        flops_per_lane: 2,
+        load_ports: 2,
+        micro_eff: 0.93,
+        caches: vec![
+            Cache { bytes: 32 << 10, line: 64, ways: 8, latency: 4, shared: false },
+            Cache { bytes: 256 << 10, line: 64, ways: 8, latency: 12, shared: false },
+            Cache { bytes: 8 << 20, line: 64, ways: 16, latency: 36, shared: true },
+        ],
+        dram_bytes_per_cycle: 7.3, // ~25.6 GB/s @ 3.5 GHz
+    }
+}
+
+/// AMD FX-8350 (Piledriver) — Table 1 column 2.
+/// AVX/FMA3 over two 128-bit FMACs per module shared by two "cores";
+/// modeled as 8 lanes x 1 FMA with longer latency and fewer registers
+/// available per thread. The shared-FPU contention is what caps the
+/// paper's AMD efficiency near 58%.
+pub fn piledriver() -> Machine {
+    Machine {
+        name: "AMD FX-8350 (Piledriver)",
+        isa: "AVX/FMA3",
+        freq_ghz: 4.0,
+        cores: 4,
+        n_vec: 8,
+        n_fma: 1,
+        l_fma: 5,
+        n_reg: 16,
+        flops_per_lane: 2,
+        load_ports: 1,
+        micro_eff: 0.6,
+        caches: vec![
+            Cache { bytes: 16 << 10, line: 64, ways: 4, latency: 4, shared: false },
+            Cache { bytes: 2 << 20, line: 64, ways: 16, latency: 20, shared: false },
+            Cache { bytes: 8 << 20, line: 64, ways: 64, latency: 45, shared: true },
+        ],
+        dram_bytes_per_cycle: 5.3, // ~21 GB/s @ 4 GHz
+    }
+}
+
+/// ARM Cortex-A57 — Table 1 column 3.
+/// NEON: 4 f32 lanes, 1 FMA pipe, 32 128-bit registers.
+pub fn cortex_a57() -> Machine {
+    Machine {
+        name: "ARM Cortex-A57",
+        isa: "NEON/ARMv8",
+        freq_ghz: 1.1,
+        cores: 2,
+        n_vec: 4,
+        n_fma: 1,
+        l_fma: 5,
+        n_reg: 32,
+        flops_per_lane: 2,
+        load_ports: 1,
+        micro_eff: 0.95,
+        caches: vec![
+            Cache { bytes: 32 << 10, line: 64, ways: 2, latency: 4, shared: false },
+            Cache { bytes: 2 << 20, line: 64, ways: 16, latency: 21, shared: true },
+        ],
+        dram_bytes_per_cycle: 6.0, // ~6.4 GB/s @ 1.1 GHz (LPDDR)
+    }
+}
+
+/// All Table 1 machines.
+pub fn table1() -> Vec<Machine> {
+    vec![haswell(), piledriver(), cortex_a57()]
+}
+
+/// A descriptor for the machine this crate happens to run on — used by
+/// the host-measured benches. Detects AVX-512 at runtime: the register
+/// blocking the analytical model selects (C_o,b = 2*N_vec) differs
+/// materially between 8-lane AVX2 and 16-lane AVX-512 (measured ~1.5x;
+/// EXPERIMENTS.md §Perf iteration 3).
+pub fn host() -> Machine {
+    let avx512 = std::arch::is_x86_feature_detected!("avx512f");
+    Machine {
+        name: if avx512 { "host (x86-64 avx512)" } else { "host (x86-64 avx2)" },
+        isa: if avx512 { "AVX-512" } else { "AVX2" },
+        freq_ghz: 2.1,
+        cores: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n_vec: if avx512 { 16 } else { 8 },
+        n_fma: 2,
+        l_fma: if avx512 { 4 } else { 5 },
+        n_reg: if avx512 { 32 } else { 16 },
+        flops_per_lane: 2,
+        load_ports: 2,
+        micro_eff: 0.9,
+        caches: vec![
+            Cache { bytes: 32 << 10, line: 64, ways: 8, latency: 4, shared: false },
+            Cache { bytes: 1 << 20, line: 64, ways: 16, latency: 14, shared: false },
+            Cache { bytes: 32 << 20, line: 64, ways: 16, latency: 40, shared: true },
+        ],
+        dram_bytes_per_cycle: 6.0,
+    }
+}
+
+/// Render Table 1 as a markdown table (regenerates the paper's Table 1).
+pub fn render_table1() -> String {
+    let ms = table1();
+    let mut s = String::new();
+    s.push_str("| | ");
+    for m in &ms {
+        s.push_str(m.name);
+        s.push_str(" | ");
+    }
+    s.push('\n');
+    s.push_str("|---|---|---|---|\n");
+    let row = |label: &str, f: &dyn Fn(&Machine) -> String| {
+        let mut r = format!("| {label} | ");
+        for m in &ms {
+            r.push_str(&f(m));
+            r.push_str(" | ");
+        }
+        r.push('\n');
+        r
+    };
+    s.push_str(&row("ISA", &|m| m.isa.to_string()));
+    s.push_str(&row("Frequency (GHz)", &|m| format!("{}", m.freq_ghz)));
+    s.push_str(&row("Cores", &|m| format!("{}", m.cores)));
+    s.push_str(&row("N_vec (f32)", &|m| format!("{}", m.n_vec)));
+    s.push_str(&row("Peak GFLOPS (all cores)", &|m| {
+        format!("{:.1}", m.peak_gflops(m.cores))
+    }));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let h = haswell();
+        assert_eq!(h.freq_ghz, 3.5);
+        assert_eq!(h.cores, 4);
+        assert_eq!(h.n_vec, 8);
+        let a = piledriver();
+        assert_eq!(a.freq_ghz, 4.0);
+        assert_eq!(a.n_vec, 8);
+        let c = cortex_a57();
+        assert_eq!(c.freq_ghz, 1.1);
+        assert_eq!(c.cores, 2);
+        assert_eq!(c.n_vec, 4);
+    }
+
+    #[test]
+    fn haswell_peak() {
+        // 3.5 GHz * 8 lanes * 2 FMA * 2 flops = 112 GFLOPS/core.
+        assert!((haswell().peak_gflops(1) - 112.0).abs() < 1e-9);
+        assert!((haswell().peak_gflops(4) - 448.0).abs() < 1e-9);
+        // clamped at physical core count
+        assert_eq!(haswell().peak_gflops(8), haswell().peak_gflops(4));
+    }
+
+    #[test]
+    fn eq1_eq2() {
+        let h = haswell();
+        assert_eq!(h.min_independent_outputs(), 8 * 2 * 5); // 80
+        assert_eq!(h.max_register_outputs(), 16 * 8); // 128
+        // The paper's feasibility window: E in [80, 128].
+        assert!(h.tile_feasible(16, 6)); // 96 elements, 12+3 regs
+        assert!(!h.tile_feasible(8, 4)); // 32 < 80: stalls
+        assert!(!h.tile_feasible(32, 8)); // 32 regs of acc alone: spills
+    }
+
+    #[test]
+    fn conv_intensity_large() {
+        // Conv layers have very high arithmetic intensity vs GEMM inputs.
+        let s = ConvShape::new(64, 56, 56, 64, 3, 3, 1, 1);
+        assert!(Machine::conv_intensity(&s) > 100.0);
+    }
+
+    #[test]
+    fn render_table1_contains_all() {
+        let t = render_table1();
+        assert!(t.contains("Haswell"));
+        assert!(t.contains("Piledriver"));
+        assert!(t.contains("Cortex-A57"));
+        assert!(t.contains("3.5"));
+    }
+}

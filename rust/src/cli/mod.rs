@@ -1,0 +1,103 @@
+//! Tiny argument parser (`clap` is not in the offline registry).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, which covers every binary in this crate.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals in order plus `--key [value]` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse_from(it: impl Iterator<Item = String>) -> Args {
+        let mut args = Args::default();
+        let mut it = it.peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.options.insert(rest.to_string(), String::from("true"));
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments.
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.options.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse_from(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        // NB: a bare `--flag` followed by a non-option token would consume
+        // it as a value (`--fast model.hlo` means fast=model.hlo); flags
+        // therefore come after positionals or use `--flag=true`.
+        let a = parse(&["serve", "--threads", "4", "model.hlo", "--fast"]);
+        assert_eq!(a.positional, vec!["serve", "model.hlo"]);
+        assert_eq!(a.get_usize("threads", 1), 4);
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["--batch=8", "--rate=2.5"]);
+        assert_eq!(a.get_usize("batch", 0), 8);
+        assert!((a.get_f64("rate", 0.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = parse(&["--a", "--b", "x"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("x"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("net", "alexnet"), "alexnet");
+        assert_eq!(a.get_usize("threads", 2), 2);
+    }
+}

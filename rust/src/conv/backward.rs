@@ -1,0 +1,221 @@
+//! Backward convolution — the paper's §6 future-work direction
+//! ("optimize the backward process to update both image and kernel...
+//! only minor changes to the loop ordering are required").
+//!
+//! Two gradients, both in the same loop-reordered, channel-last style as
+//! Algorithm 2 (the register/cache blocking of Algorithm 3 applies
+//! identically; the oracle-grade versions here are the reference the
+//! blocked variants would be tested against):
+//!
+//! * [`conv_backward_input`] — `dL/dI`: correlation of the output
+//!   gradient with the *spatially flipped* kernel, with stride handled
+//!   by input dilation (transposed convolution);
+//! * [`conv_backward_kernel`] — `dL/dF`: a correlation of the input with
+//!   the output gradient over the spatial dims, reduced per `(i, j)`.
+
+use super::ConvShape;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// `dL/dI` for `out = conv(input, kernel)` (Algorithm-1 semantics).
+/// `grad_out` is `[C_o][H_o][W_o]`; returns `[C_i][H_i][W_i]`.
+pub fn conv_backward_input(
+    grad_out: &Tensor,
+    kernel: &Tensor,
+    shape: &ConvShape,
+) -> Result<Tensor> {
+    shape.validate()?;
+    let (h_o, w_o) = (shape.h_o(), shape.w_o());
+    if grad_out.shape() != [shape.c_o, h_o, w_o] {
+        return Err(Error::Shape(format!(
+            "grad_out shape {:?} != expected {:?}",
+            grad_out.shape(),
+            [shape.c_o, h_o, w_o]
+        )));
+    }
+    if kernel.shape() != [shape.c_o, shape.c_i, shape.h_f, shape.w_f] {
+        return Err(Error::Shape("kernel shape mismatch".into()));
+    }
+    let (c_i, h_i, w_i) = (shape.c_i, shape.h_i, shape.w_i);
+    let (c_o, h_f, w_f) = (shape.c_o, shape.h_f, shape.w_f);
+    let (s, p) = (shape.stride, shape.pad as isize);
+    let go = grad_out.data();
+    let ker = kernel.data();
+    let mut gi = Tensor::zeros(&[c_i, h_i, w_i]);
+    let gid = gi.data_mut();
+
+    // dI[i][y][x] = sum_{j,n,m : y = l*s + n - p, x = k*s + m - p}
+    //              dO[j][l][k] * F[j][i][n][m]
+    // Iterate the forward loop nest and scatter — the reordering
+    // (l, n, m, i, k, j) keeps the j reduction innermost.
+    for l in 0..h_o {
+        for n in 0..h_f {
+            let y = (l * s + n) as isize - p;
+            if y < 0 || y >= h_i as isize {
+                continue;
+            }
+            for m in 0..w_f {
+                for i in 0..c_i {
+                    for k in 0..w_o {
+                        let x = (k * s + m) as isize - p;
+                        if x < 0 || x >= w_i as isize {
+                            continue;
+                        }
+                        let mut acc = 0.0f32;
+                        for j in 0..c_o {
+                            acc += go[(j * h_o + l) * w_o + k]
+                                * ker[((j * c_i + i) * h_f + n) * w_f + m];
+                        }
+                        gid[(i * h_i + y as usize) * w_i + x as usize] += acc;
+                    }
+                }
+            }
+        }
+    }
+    Ok(gi)
+}
+
+/// `dL/dF` for `out = conv(input, kernel)`.
+/// Returns `[C_o][C_i][H_f][W_f]`.
+pub fn conv_backward_kernel(
+    input: &Tensor,
+    grad_out: &Tensor,
+    shape: &ConvShape,
+) -> Result<Tensor> {
+    shape.validate()?;
+    super::naive::check_shapes(input, &Tensor::zeros(&[shape.c_o, shape.c_i, shape.h_f, shape.w_f]), shape)?;
+    let (h_o, w_o) = (shape.h_o(), shape.w_o());
+    if grad_out.shape() != [shape.c_o, h_o, w_o] {
+        return Err(Error::Shape("grad_out shape mismatch".into()));
+    }
+    let (c_i, h_i, w_i) = (shape.c_i, shape.h_i, shape.w_i);
+    let (c_o, h_f, w_f) = (shape.c_o, shape.h_f, shape.w_f);
+    let (s, p) = (shape.stride, shape.pad as isize);
+    let inp = input.data();
+    let go = grad_out.data();
+    let mut gk = Tensor::zeros(&[c_o, c_i, h_f, w_f]);
+    let gkd = gk.data_mut();
+
+    // dF[j][i][n][m] = sum_{l,k} dO[j][l][k] * I[i][l*s+n-p][k*s+m-p]
+    for n in 0..h_f {
+        for m in 0..w_f {
+            for l in 0..h_o {
+                let y = (l * s + n) as isize - p;
+                if y < 0 || y >= h_i as isize {
+                    continue;
+                }
+                for k in 0..w_o {
+                    let x = (k * s + m) as isize - p;
+                    if x < 0 || x >= w_i as isize {
+                        continue;
+                    }
+                    for i in 0..c_i {
+                        let xv = inp[(i * h_i + y as usize) * w_i + x as usize];
+                        for j in 0..c_o {
+                            gkd[((j * c_i + i) * h_f + n) * w_f + m] +=
+                                go[(j * h_o + l) * w_o + k] * xv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(gk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conv_naive;
+    use crate::tensor::XorShiftRng;
+
+    /// <conv(x), gy> == <x, conv_backward_input(gy)> — the adjoint
+    /// identity that defines the input gradient exactly.
+    #[test]
+    fn adjoint_identity_input() {
+        let mut rng = XorShiftRng::new(77);
+        for s in [
+            ConvShape::new(3, 8, 8, 4, 3, 3, 1, 0),
+            ConvShape::new(2, 9, 7, 5, 3, 3, 1, 1),
+            ConvShape::new(4, 11, 11, 2, 5, 5, 2, 2),
+        ] {
+            let x = Tensor::random(&[s.c_i, s.h_i, s.w_i], rng.next_u64());
+            let k = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], rng.next_u64());
+            let gy = Tensor::random(&[s.c_o, s.h_o(), s.w_o()], rng.next_u64());
+            let y = conv_naive(&x, &k, &s).unwrap();
+            let gx = conv_backward_input(&gy, &k, &s).unwrap();
+            let lhs: f64 = y.data().iter().zip(gy.data()).map(|(a, b)| (a * b) as f64).sum();
+            let rhs: f64 = x.data().iter().zip(gx.data()).map(|(a, b)| (a * b) as f64).sum();
+            assert!(
+                (lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0),
+                "{s:?}: {lhs} vs {rhs}"
+            );
+        }
+    }
+
+    /// Finite-difference check of the kernel gradient.
+    #[test]
+    fn kernel_gradient_matches_finite_difference() {
+        let s = ConvShape::new(2, 6, 6, 3, 3, 3, 1, 1);
+        let x = Tensor::random(&[s.c_i, s.h_i, s.w_i], 1);
+        let mut k = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 2);
+        let gy = Tensor::random(&[s.c_o, s.h_o(), s.w_o()], 3);
+        let gk = conv_backward_kernel(&x, &gy, &s).unwrap();
+        let loss = |k: &Tensor| -> f64 {
+            let y = conv_naive(&x, k, &s).unwrap();
+            y.data().iter().zip(gy.data()).map(|(a, b)| (a * b) as f64).sum()
+        };
+        let eps = 1e-3f32;
+        let mut rng = XorShiftRng::new(9);
+        for _ in 0..10 {
+            let idx = rng.next_usize(k.len());
+            let orig = k.data()[idx];
+            k.data_mut()[idx] = orig + eps;
+            let up = loss(&k);
+            k.data_mut()[idx] = orig - eps;
+            let down = loss(&k);
+            k.data_mut()[idx] = orig;
+            let fd = (up - down) / (2.0 * eps as f64);
+            let an = gk.data()[idx] as f64;
+            assert!((fd - an).abs() < 1e-2 * an.abs().max(1.0), "idx {idx}: fd {fd} vs {an}");
+        }
+    }
+
+    /// Finite-difference check of the input gradient.
+    #[test]
+    fn input_gradient_matches_finite_difference() {
+        let s = ConvShape::new(2, 6, 6, 3, 3, 3, 2, 1);
+        let mut x = Tensor::random(&[s.c_i, s.h_i, s.w_i], 4);
+        let k = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 5);
+        let gy = Tensor::random(&[s.c_o, s.h_o(), s.w_o()], 6);
+        let gx = conv_backward_input(&gy, &k, &s).unwrap();
+        let loss = |x: &Tensor| -> f64 {
+            let y = conv_naive(x, &k, &s).unwrap();
+            y.data().iter().zip(gy.data()).map(|(a, b)| (a * b) as f64).sum()
+        };
+        let eps = 1e-3f32;
+        let mut rng = XorShiftRng::new(10);
+        for _ in 0..10 {
+            let idx = rng.next_usize(x.len());
+            let orig = x.data()[idx];
+            x.data_mut()[idx] = orig + eps;
+            let up = loss(&x);
+            x.data_mut()[idx] = orig - eps;
+            let down = loss(&x);
+            x.data_mut()[idx] = orig;
+            let fd = (up - down) / (2.0 * eps as f64);
+            let an = gx.data()[idx] as f64;
+            assert!((fd - an).abs() < 1e-2 * an.abs().max(1.0), "idx {idx}: fd {fd} vs {an}");
+        }
+    }
+
+    #[test]
+    fn shape_validation() {
+        let s = ConvShape::new(2, 6, 6, 3, 3, 3, 1, 0);
+        let bad_gy = Tensor::zeros(&[3, 5, 5]);
+        let k = Tensor::zeros(&[3, 2, 3, 3]);
+        assert!(conv_backward_input(&bad_gy, &k, &s).is_err());
+        let x = Tensor::zeros(&[2, 6, 6]);
+        assert!(conv_backward_kernel(&x, &bad_gy, &s).is_err());
+    }
+}

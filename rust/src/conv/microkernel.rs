@@ -1,0 +1,319 @@
+//! Register-tile FMA microkernels for Algorithm 3.
+//!
+//! A microkernel owns a `W_o,b x C_o,b` accumulator tile (the paper's
+//! `E = N_vec * N_fma * L_fma` independent output elements, eq. 1) and
+//! accumulates the **entire** `(n, m, C_i,b)` reduction of one
+//! input-channel cache block into it before touching memory again.
+//!
+//! Both tile dimensions are const generics (`COB`, `TW`): with fixed
+//! trip counts LLVM promotes the whole tile to vector registers and
+//! emits pure FMAs — with a dynamic width the accumulators spill to the
+//! stack on every iteration, which measured ~2x slower (see
+//! EXPERIMENTS.md §Perf iteration 2). Edge tiles (row remainder) use the
+//! dynamic-width fallback [`tap_full`]/[`tap_one_col`] path.
+
+/// Hard cap on `W_o,b`; accumulator tiles are stack arrays of this height.
+pub const MAX_WOB: usize = 8;
+
+/// Accumulator tile for the dynamic-width fallback path.
+pub type AccTile<const COB: usize> = [[f32; COB]; MAX_WOB];
+
+/// Geometry of one register-tile reduction (all in elements, not bytes).
+#[derive(Clone, Copy, Debug)]
+pub struct TileGeom {
+    pub h_f: usize,
+    pub w_f: usize,
+    pub c_ib: usize,
+    pub h_i: usize,
+    pub w_i: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Output row this tile belongs to.
+    pub l: usize,
+    /// First output column of the tile.
+    pub k0: usize,
+}
+
+/// Fully-unrolled tile reduction: accumulate every kernel tap of one
+/// input-channel block into a `TW x COB` register tile.
+///
+/// * `inp` — the input block `[H_i][W_i][C_ib]` (this `ib`'s slab).
+/// * `ker` — the kernel slab `[H_f][W_f][C_ib][COB]` for `(jb, ib)`.
+#[inline(always)]
+pub fn reduce_tile<const COB: usize, const TW: usize>(
+    acc: &mut [[f32; COB]; TW],
+    inp: &[f32],
+    ker: &[f32],
+    g: &TileGeom,
+) {
+    let c_ib = g.c_ib;
+    let row_stride = g.w_i * c_ib;
+    for n in 0..g.h_f {
+        let iy = (g.l * g.stride + n) as isize - g.pad as isize;
+        if iy < 0 || iy >= g.h_i as isize {
+            continue; // whole kernel row outside the image
+        }
+        let row = &inp[iy as usize * row_stride..][..row_stride];
+        for m in 0..g.w_f {
+            let kptr = &ker[(n * g.w_f + m) * c_ib * COB..][..c_ib * COB];
+            let x0 = (g.k0 * g.stride + m) as isize - g.pad as isize;
+            let x_last = x0 + ((TW - 1) * g.stride) as isize;
+            if x0 >= 0 && x_last < g.w_i as isize {
+                // Interior fast path: every tile column valid.
+                let base = x0 as usize * c_ib;
+                for ii in 0..c_ib {
+                    let w = &kptr[ii * COB..][..COB];
+                    for kk in 0..TW {
+                        let xv = row[base + kk * g.stride * c_ib + ii];
+                        let a = &mut acc[kk];
+                        for j in 0..COB {
+                            a[j] = xv.mul_add(w[j], a[j]);
+                        }
+                    }
+                }
+            } else {
+                // Border tap: guard each (const-unrolled) column.
+                for kk in 0..TW {
+                    let x = x0 + (kk * g.stride) as isize;
+                    if x < 0 || x >= g.w_i as isize {
+                        continue;
+                    }
+                    let base = x as usize * c_ib;
+                    for ii in 0..c_ib {
+                        let w = &kptr[ii * COB..][..COB];
+                        let xv = row[base + ii];
+                        let a = &mut acc[kk];
+                        for j in 0..COB {
+                            a[j] = xv.mul_add(w[j], a[j]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Load `TW` pencils of the accumulator tile from the blocked output.
+#[inline(always)]
+pub fn load_tile_c<const COB: usize, const TW: usize>(
+    acc: &mut [[f32; COB]; TW],
+    out: &[f32],
+) {
+    for kk in 0..TW {
+        let src = &out[kk * COB..][..COB];
+        for j in 0..COB {
+            acc[kk][j] = src[j];
+        }
+    }
+}
+
+/// Store `TW` pencils of the accumulator tile back.
+#[inline(always)]
+pub fn store_tile_c<const COB: usize, const TW: usize>(
+    acc: &[[f32; COB]; TW],
+    out: &mut [f32],
+) {
+    for kk in 0..TW {
+        let dst = &mut out[kk * COB..][..COB];
+        for j in 0..COB {
+            dst[j] = acc[kk][j];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dynamic-width fallback (row-remainder tiles and tests).
+// ---------------------------------------------------------------------
+
+/// Load `tw` rows of the accumulator tile from the blocked output buffer.
+#[inline(always)]
+pub fn load_tile<const COB: usize>(acc: &mut AccTile<COB>, out: &[f32], tw: usize) {
+    for kk in 0..tw {
+        let src = &out[kk * COB..][..COB];
+        for j in 0..COB {
+            acc[kk][j] = src[j];
+        }
+    }
+}
+
+/// Store `tw` rows of the accumulator tile back to the blocked output.
+#[inline(always)]
+pub fn store_tile<const COB: usize>(acc: &AccTile<COB>, out: &mut [f32], tw: usize) {
+    for kk in 0..tw {
+        let dst = &mut out[kk * COB..][..COB];
+        for j in 0..COB {
+            dst[j] = acc[kk][j];
+        }
+    }
+}
+
+/// Apply one kernel tap over a full input-channel block (interior fast
+/// path, dynamic tile width).
+///
+/// * `inp` — input pencils for this tap: element `(kk, ii)` is at
+///   `inp[kk * x_stride + ii]` with `x_stride = stride * c_ib`.
+/// * `ker` — `c_ib` weight pencils of `COB` each (`[C_ib][C_ob]`).
+#[inline(always)]
+pub fn tap_full<const COB: usize>(
+    acc: &mut AccTile<COB>,
+    inp: &[f32],
+    ker: &[f32],
+    c_ib: usize,
+    x_stride: usize,
+    tw: usize,
+) {
+    for ii in 0..c_ib {
+        let w = &ker[ii * COB..][..COB];
+        for kk in 0..tw {
+            let xv = inp[kk * x_stride + ii];
+            let a = &mut acc[kk];
+            for j in 0..COB {
+                a[j] = xv.mul_add(w[j], a[j]);
+            }
+        }
+    }
+}
+
+/// Apply one kernel tap to a single tile column (edge slow path).
+#[inline(always)]
+pub fn tap_one_col<const COB: usize>(
+    acc: &mut [f32; COB],
+    inp: &[f32],
+    ker: &[f32],
+    c_ib: usize,
+) {
+    for ii in 0..c_ib {
+        let w = &ker[ii * COB..][..COB];
+        let xv = inp[ii];
+        for j in 0..COB {
+            acc[j] = xv.mul_add(w[j], acc[j]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_store_round_trip() {
+        let mut buf: Vec<f32> = (0..4 * 8).map(|i| i as f32).collect();
+        let mut acc: AccTile<8> = [[0.0; 8]; MAX_WOB];
+        load_tile::<8>(&mut acc, &buf, 4);
+        assert_eq!(acc[0][0], 0.0);
+        assert_eq!(acc[3][7], 31.0);
+        for row in acc.iter_mut().take(4) {
+            for v in row.iter_mut() {
+                *v += 1.0;
+            }
+        }
+        store_tile::<8>(&acc, &mut buf, 4);
+        assert_eq!(buf[0], 1.0);
+        assert_eq!(buf[31], 32.0);
+    }
+
+    #[test]
+    fn const_load_store_round_trip() {
+        let mut buf: Vec<f32> = (0..3 * 4).map(|i| i as f32).collect();
+        let mut acc = [[0.0f32; 4]; 3];
+        load_tile_c::<4, 3>(&mut acc, &buf);
+        assert_eq!(acc[2][3], 11.0);
+        acc[1][0] = 99.0;
+        store_tile_c::<4, 3>(&acc, &mut buf);
+        assert_eq!(buf[4], 99.0);
+    }
+
+    #[test]
+    fn tap_full_accumulates_correctly() {
+        // 2 input channels, 3 tile columns, COB=4, stride 1.
+        let c_ib = 2;
+        let tw = 3;
+        let inp = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let ker = [0.5, 0.5, 0.5, 0.5, 2.0, 2.0, 2.0, 2.0];
+        let mut acc: AccTile<4> = [[0.0; 4]; MAX_WOB];
+        tap_full::<4>(&mut acc, &inp, &ker, c_ib, c_ib, tw);
+        for kk in 0..tw {
+            let want = 0.5 * inp[kk * 2] + 2.0 * inp[kk * 2 + 1];
+            for j in 0..4 {
+                assert!((acc[kk][j] - want).abs() < 1e-6);
+            }
+        }
+        assert_eq!(acc[3], [0.0; 4]);
+    }
+
+    #[test]
+    fn tap_full_respects_x_stride() {
+        let inp = [10.0, 99.0, 20.0, 99.0, 30.0];
+        let ker = [1.0, 1.0];
+        let mut acc: AccTile<2> = [[0.0; 2]; MAX_WOB];
+        tap_full::<2>(&mut acc, &inp, &ker, 1, 2, 3);
+        assert_eq!(acc[0], [10.0, 10.0]);
+        assert_eq!(acc[1], [20.0, 20.0]);
+        assert_eq!(acc[2], [30.0, 30.0]);
+    }
+
+    #[test]
+    fn tap_one_col_matches_full() {
+        let c_ib = 3;
+        let inp = [1.0, -2.0, 0.5];
+        let ker: Vec<f32> = (0..3 * 4).map(|i| i as f32 * 0.25).collect();
+        let mut a: [f32; 4] = [0.0; 4];
+        tap_one_col::<4>(&mut a, &inp, &ker, c_ib);
+        let mut acc: AccTile<4> = [[0.0; 4]; MAX_WOB];
+        tap_full::<4>(&mut acc, &inp, &ker, c_ib, c_ib, 1);
+        assert_eq!(a, acc[0]);
+    }
+
+    #[test]
+    fn reduce_tile_matches_manual() {
+        // 1x1 image region semantics: 2x2 kernel over a 4x4 single-channel
+        // image, tile of TW=2 at l=0, k0=0, stride 1, no pad.
+        let g = TileGeom {
+            h_f: 2,
+            w_f: 2,
+            c_ib: 1,
+            h_i: 4,
+            w_i: 4,
+            stride: 1,
+            pad: 0,
+            l: 0,
+            k0: 0,
+        };
+        let inp: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        // kernel [2][2][1][2]: tap (n,m) weight = (n*2+m+1) for both lanes
+        let ker = [1.0, 1.0, 2.0, 2.0, 3.0, 3.0, 4.0, 4.0];
+        let mut acc = [[0.0f32; 2]; 2];
+        reduce_tile::<2, 2>(&mut acc, &inp, &ker, &g);
+        // out[k] = 1*in[0][k] + 2*in[0][k+1] + 3*in[1][k] + 4*in[1][k+1]
+        for k in 0..2 {
+            let want = 1.0 * inp[k] + 2.0 * inp[k + 1] + 3.0 * inp[4 + k] + 4.0 * inp[4 + k + 1];
+            assert_eq!(acc[k][0], want);
+            assert_eq!(acc[k][1], want);
+        }
+    }
+
+    #[test]
+    fn reduce_tile_skips_padding() {
+        // pad=1: at l=0 the n=0 kernel row is outside; at k0=0 the m=0
+        // column of kk=0 is outside.
+        let g = TileGeom {
+            h_f: 3,
+            w_f: 3,
+            c_ib: 1,
+            h_i: 3,
+            w_i: 3,
+            stride: 1,
+            pad: 1,
+            l: 0,
+            k0: 0,
+        };
+        let inp = [1.0f32; 9];
+        let ker = [1.0f32; 9]; // COB = 1
+        let mut acc = [[0.0f32; 1]; 3];
+        reduce_tile::<1, 3>(&mut acc, &inp, &ker, &g);
+        // corner output: 2x2 valid taps; top edge: 2x3; corner: 2x2
+        assert_eq!(acc[0][0], 4.0);
+        assert_eq!(acc[1][0], 6.0);
+        assert_eq!(acc[2][0], 4.0);
+    }
+}

@@ -1,0 +1,30 @@
+//! The paper's direct-convolution algorithms.
+//!
+//! * [`naive`] — Algorithm 1: the textbook six-loop nest over NCHW data.
+//!   Slow by design; it is the correctness oracle for everything else.
+//! * [`reorder`] — Algorithm 2: the same computation with the paper's
+//!   `(l, n, m, i, k, j)` loop order over channel-last data, which makes
+//!   the output-channel loop `j` the unit-stride innermost loop.
+//! * [`direct`] — Algorithm 3: register blocking (`C_o,b x W_o,b`
+//!   accumulator tile), cache blocking over input channels (`C_i,b`),
+//!   the §4 blocked layouts, and parallelism over output-channel blocks.
+//! * [`microkernel`] — the register-tile FMA kernels `direct` dispatches to.
+//! * [`params`] — analytical blocking-parameter selection (Low et al. 2016
+//!   style) from an [`crate::arch::Machine`] descriptor.
+//! * [`backward`] — the §6 future-work backward pass (input + kernel
+//!   gradients) with adjoint/finite-difference verification.
+
+pub mod backward;
+pub mod direct;
+pub mod microkernel;
+pub mod naive;
+pub mod params;
+pub mod reorder;
+mod shape;
+
+pub use backward::{conv_backward_input, conv_backward_kernel};
+pub use direct::{conv_direct, conv_direct_blocked};
+pub use naive::conv_naive;
+pub use params::select_params;
+pub use reorder::conv_reorder;
+pub use shape::{BlockParams, ConvShape};

@@ -1,0 +1,136 @@
+//! Algorithm 1 — the naive direct convolution.
+//!
+//! Six perfectly-nested loops around one multiply-accumulate, in the
+//! paper's original `(i, j, k, l, m, n)` order over NCHW data. Any loop
+//! permutation computes the same result; this one is kept verbatim as the
+//! correctness oracle (every other kernel in the crate is tested against
+//! it) and as the baseline of the loop-order ablation.
+
+use super::ConvShape;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Convolve `input` (`[C_i][H_i][W_i]`) with `kernel`
+/// (`[C_o][C_i][H_f][W_f]`), producing `[C_o][H_o][W_o]`.
+/// Zero padding of `shape.pad` on all four image borders.
+pub fn conv_naive(input: &Tensor, kernel: &Tensor, shape: &ConvShape) -> Result<Tensor> {
+    shape.validate()?;
+    check_shapes(input, kernel, shape)?;
+    let (h_o, w_o) = (shape.h_o(), shape.w_o());
+    let (c_i, h_i, w_i) = (shape.c_i, shape.h_i, shape.w_i);
+    let (c_o, h_f, w_f) = (shape.c_o, shape.h_f, shape.w_f);
+    let (s, p) = (shape.stride, shape.pad as isize);
+
+    let inp = input.data();
+    let ker = kernel.data();
+    let mut out = Tensor::zeros(&[c_o, h_o, w_o]);
+    let o = out.data_mut();
+
+    // Paper Algorithm 1: for i, j, k, l, m, n (plus padding guards).
+    for i in 0..c_i {
+        for j in 0..c_o {
+            for k in 0..w_o {
+                for l in 0..h_o {
+                    for m in 0..w_f {
+                        for n in 0..h_f {
+                            let iy = (l * s + n) as isize - p;
+                            let ix = (k * s + m) as isize - p;
+                            if iy < 0 || iy >= h_i as isize || ix < 0 || ix >= w_i as isize {
+                                continue;
+                            }
+                            o[(j * h_o + l) * w_o + k] += inp
+                                [(i * h_i + iy as usize) * w_i + ix as usize]
+                                * ker[((j * c_i + i) * h_f + n) * w_f + m];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+pub(crate) fn check_shapes(input: &Tensor, kernel: &Tensor, shape: &ConvShape) -> Result<()> {
+    let want_in = [shape.c_i, shape.h_i, shape.w_i];
+    if input.shape() != want_in {
+        return Err(Error::Shape(format!(
+            "input shape {:?} != expected {:?}",
+            input.shape(),
+            want_in
+        )));
+    }
+    let want_k = [shape.c_o, shape.c_i, shape.h_f, shape.w_f];
+    if kernel.shape() != want_k {
+        return Err(Error::Shape(format!(
+            "kernel shape {:?} != expected {:?}",
+            kernel.shape(),
+            want_k
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 1x1 input/kernel: conv degenerates to a dot product over channels.
+    #[test]
+    fn pointwise_is_dot_product() {
+        let s = ConvShape::new(3, 1, 1, 2, 1, 1, 1, 0);
+        let input = Tensor::from_vec(&[3, 1, 1], vec![1.0, 2.0, 3.0]).unwrap();
+        let kernel =
+            Tensor::from_vec(&[2, 3, 1, 1], vec![1.0, 1.0, 1.0, 0.5, 0.5, 0.5]).unwrap();
+        let out = conv_naive(&input, &kernel, &s).unwrap();
+        assert_eq!(out.data(), &[6.0, 3.0]);
+    }
+
+    /// Hand-computed 1-channel 3x3 * 2x2 valid convolution.
+    #[test]
+    fn hand_example() {
+        let s = ConvShape::new(1, 3, 3, 1, 2, 2, 1, 0);
+        let input =
+            Tensor::from_vec(&[1, 3, 3], (1..=9).map(|v| v as f32).collect()).unwrap();
+        let kernel = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let out = conv_naive(&input, &kernel, &s).unwrap();
+        // out[y][x] = in[y][x] + in[y+1][x+1]
+        assert_eq!(out.data(), &[1.0 + 5.0, 2.0 + 6.0, 4.0 + 8.0, 5.0 + 9.0]);
+    }
+
+    /// Identity kernel (1x1, weight 1) with padding reproduces the input
+    /// framed by zeros at stride 2 sampling positions.
+    #[test]
+    fn stride_and_padding() {
+        let s = ConvShape::new(1, 4, 4, 1, 1, 1, 2, 0);
+        let input = Tensor::iota(&[1, 4, 4]);
+        let kernel = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]).unwrap();
+        let out = conv_naive(&input, &kernel, &s).unwrap();
+        assert_eq!(out.shape(), &[1, 2, 2]);
+        assert_eq!(out.data(), &[0.0, 2.0, 8.0, 10.0]);
+    }
+
+    /// With pad=1 and a 3x3 sum kernel, the corner output only sums the
+    /// 2x2 valid region.
+    #[test]
+    fn padding_corners() {
+        let s = ConvShape::new(1, 3, 3, 1, 3, 3, 1, 1);
+        let input = Tensor::full(&[1, 3, 3], 1.0);
+        let kernel = Tensor::full(&[1, 1, 3, 3], 1.0);
+        let out = conv_naive(&input, &kernel, &s).unwrap();
+        assert_eq!(out.shape(), &[1, 3, 3]);
+        assert_eq!(out.at(&[0, 0, 0]), 4.0); // corner: 2x2 taps valid
+        assert_eq!(out.at(&[0, 0, 1]), 6.0); // edge: 2x3
+        assert_eq!(out.at(&[0, 1, 1]), 9.0); // center: 3x3
+    }
+
+    #[test]
+    fn rejects_mismatched_tensors() {
+        let s = ConvShape::new(2, 4, 4, 2, 3, 3, 1, 0);
+        let bad_in = Tensor::zeros(&[3, 4, 4]);
+        let k = Tensor::zeros(&[2, 2, 3, 3]);
+        assert!(conv_naive(&bad_in, &k, &s).is_err());
+        let good_in = Tensor::zeros(&[2, 4, 4]);
+        let bad_k = Tensor::zeros(&[2, 2, 3, 2]);
+        assert!(conv_naive(&good_in, &bad_k, &s).is_err());
+    }
+}

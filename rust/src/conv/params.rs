@@ -1,0 +1,142 @@
+//! Analytical blocking-parameter selection.
+//!
+//! The paper selects `C_o,b`, `W_o,b` and `C_i,b` from the machine model
+//! (following the analytical BLIS methodology of Low et al. 2016) rather
+//! than by autotuning:
+//!
+//! * eq. 1 — `E = C_o,b * W_o,b >= N_vec * N_fma * L_fma` so every FMA
+//!   pipeline stays full despite the `L_fma`-cycle latency;
+//! * eq. 2 — the accumulator tile plus one weight pencil and one broadcast
+//!   operand must fit in the `N_reg` logical registers;
+//! * `C_o,b` is a multiple of `N_vec` (footnote 3) and must divide `C_o`
+//!   exactly (zero-overhead layouts do not pad);
+//! * `C_i,b` blocks the reduction so a kernel slab `H_f*W_f*C_i,b*C_o,b`
+//!   stays resident in L1 while the register tile streams over it.
+
+use super::microkernel::MAX_WOB;
+use super::{BlockParams, ConvShape};
+use crate::arch::Machine;
+
+/// `C_o,b` values the direct-convolution dispatcher is monomorphized for.
+pub const SUPPORTED_COB: [usize; 6] = [32, 16, 8, 4, 2, 1];
+
+/// Largest supported register-block of the output channel that divides
+/// `c_o`, preferring multiples of the machine vector width.
+pub fn select_c_ob(machine: &Machine, c_o: usize) -> usize {
+    // Prefer 2*N_vec (two vector registers per FMA chain; what hand-tuned
+    // kernels on AVX2/NEON use), then N_vec, then anything that divides.
+    let pref = [2 * machine.n_vec, machine.n_vec, 4 * machine.n_vec];
+    for &c in &pref {
+        if SUPPORTED_COB.contains(&c) && c_o % c == 0 {
+            return c;
+        }
+    }
+    for &c in &SUPPORTED_COB {
+        if c_o % c == 0 {
+            return c;
+        }
+    }
+    1
+}
+
+/// Smallest `W_o,b` satisfying eq. 1 under the eq. 2 register budget.
+pub fn select_w_ob(machine: &Machine, c_ob: usize, w_o: usize) -> usize {
+    let e_min = machine.min_independent_outputs();
+    let mut w_ob = e_min.div_ceil(c_ob).max(1);
+    // eq. 2: accumulators + weight pencil + broadcast must fit N_reg.
+    let regs_per_row = (c_ob / machine.n_vec).max(1);
+    let operand_regs = regs_per_row + 1;
+    let max_rows = ((machine.n_reg.saturating_sub(operand_regs)) / regs_per_row).max(1);
+    w_ob = w_ob.min(max_rows).min(MAX_WOB);
+    // No point tiling wider than the output row.
+    w_ob.min(w_o).max(1)
+}
+
+/// Largest divisor of `c_i` whose kernel slab (`H_f*W_f*C_i,b*C_o,b`
+/// floats) fits in L1 alongside the streamed input/output pencils (the
+/// slab dominates; pencils are a few lines — measured best at a full-L1
+/// budget, see the blocking ablation).
+pub fn select_c_ib(machine: &Machine, shape: &ConvShape, c_ob: usize) -> usize {
+    let l1 = machine.caches.first().map(|c| c.bytes).unwrap_or(32 << 10);
+    let budget = l1; // measured optimum: slab ~ one L1's worth (see ablation)
+    let slab_per_ci = shape.h_f * shape.w_f * c_ob * 4; // bytes per input channel
+    let max_cib = (budget / slab_per_ci.max(1)).max(1);
+    // largest divisor of c_i that is <= max_cib
+    let mut best = 1;
+    for d in 1..=shape.c_i {
+        if shape.c_i % d == 0 && d <= max_cib {
+            best = d;
+        }
+    }
+    best
+}
+
+/// Full analytical parameter selection for a layer on a machine.
+pub fn select_params(machine: &Machine, shape: &ConvShape) -> BlockParams {
+    let c_ob = select_c_ob(machine, shape.c_o);
+    let w_ob = select_w_ob(machine, c_ob, shape.w_o());
+    let c_ib = select_c_ib(machine, shape, c_ob);
+    BlockParams { c_ob, w_ob, c_ib }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{cortex_a57, haswell, piledriver};
+    use crate::nets;
+
+    #[test]
+    fn haswell_picks_16x6() {
+        // E_min = 80; c_ob = 2*8 = 16 -> w_ob = ceil(80/16) = 5,
+        // register cap: (16-3)/2 = 6 rows -> w_ob = 5.
+        let m = haswell();
+        let s = ConvShape::new(64, 28, 28, 64, 3, 3, 1, 1);
+        let bp = select_params(&m, &s);
+        assert_eq!(bp.c_ob, 16);
+        assert_eq!(bp.w_ob, 5);
+        assert!(m.tile_feasible(bp.c_ob, bp.w_ob));
+    }
+
+    #[test]
+    fn a57_uses_narrow_vectors_many_regs() {
+        let m = cortex_a57();
+        let s = ConvShape::new(64, 28, 28, 64, 3, 3, 1, 1);
+        let bp = select_params(&m, &s);
+        // N_vec = 4 -> c_ob = 8; E_min = 20 -> w_ob = ceil(20/8)=3.
+        assert_eq!(bp.c_ob, 8);
+        assert_eq!(bp.w_ob, 3);
+    }
+
+    #[test]
+    fn c_ob_divides_awkward_channel_counts() {
+        let m = haswell();
+        assert_eq!(select_c_ob(&m, 96), 16);
+        assert_eq!(select_c_ob(&m, 24), 8);
+        assert_eq!(select_c_ob(&m, 20), 4);
+        assert_eq!(select_c_ob(&m, 7), 1);
+    }
+
+    #[test]
+    fn c_ib_divides_and_fits_l1() {
+        let m = piledriver();
+        let s = ConvShape::new(256, 13, 13, 384, 3, 3, 1, 1);
+        let c_ob = select_c_ob(&m, s.c_o);
+        let c_ib = select_c_ib(&m, &s, c_ob);
+        assert_eq!(s.c_i % c_ib, 0);
+        assert!(s.h_f * s.w_f * c_ib * c_ob * 4 <= m.caches[0].bytes);
+    }
+
+    #[test]
+    fn every_net_layer_gets_valid_params() {
+        for m in [haswell(), piledriver(), cortex_a57()] {
+            for layer in nets::all_layers() {
+                let bp = select_params(&m, &layer.shape);
+                bp.validate_for(&layer.shape).unwrap_or_else(|e| {
+                    panic!("{} on {}: {:?} -> {e}", layer.name, m.name, bp)
+                });
+                assert!(bp.w_ob >= 1 && bp.w_ob <= MAX_WOB);
+                assert!(SUPPORTED_COB.contains(&bp.c_ob));
+            }
+        }
+    }
+}

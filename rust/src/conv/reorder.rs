@@ -1,0 +1,158 @@
+//! Algorithm 2 — the reordered direct convolution.
+//!
+//! Same computation as Algorithm 1 but with the paper's derived loop order
+//! `(l, n, m, i, k, j)`: the output-channel loop `j` innermost (unit
+//! stride, vectorizable), `k` next (independent FMA chains), then the
+//! reduction loops `i, m, n` ordered for input reuse, and the output row
+//! `l` outermost.
+//!
+//! To give the loop order its intended memory behaviour the operands are
+//! channel-last: input `[H_i][W_i][C_i]`, kernel `[H_f][W_f][C_i][C_o]`,
+//! output `[H_o][W_o][C_o]`. This is the unblocked midpoint of the
+//! loop-order ablation (`benches/ablation_loop_order.rs`).
+
+use super::ConvShape;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Repack a `[C_o][C_i][H_f][W_f]` kernel to the `[H_f][W_f][C_i][C_o]`
+/// order this algorithm consumes.
+pub fn kernel_to_hwio(kernel: &Tensor) -> Result<Tensor> {
+    let &[c_o, c_i, h_f, w_f] = kernel.shape() else {
+        return Err(Error::Layout(format!(
+            "expected [C_o][C_i][H_f][W_f], got {:?}",
+            kernel.shape()
+        )));
+    };
+    let src = kernel.data();
+    let mut out = vec![0.0f32; c_o * c_i * h_f * w_f];
+    for o in 0..c_o {
+        for i in 0..c_i {
+            for n in 0..h_f {
+                for m in 0..w_f {
+                    out[((n * w_f + m) * c_i + i) * c_o + o] =
+                        src[((o * c_i + i) * h_f + n) * w_f + m];
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[h_f, w_f, c_i, c_o], out)
+}
+
+/// Convolve channel-last input `[H_i][W_i][C_i]` with an HWIO kernel
+/// `[H_f][W_f][C_i][C_o]`, producing `[H_o][W_o][C_o]`.
+pub fn conv_reorder(input: &Tensor, kernel_hwio: &Tensor, shape: &ConvShape) -> Result<Tensor> {
+    shape.validate()?;
+    let want_in = [shape.h_i, shape.w_i, shape.c_i];
+    if input.shape() != want_in {
+        return Err(Error::Shape(format!(
+            "input shape {:?} != expected {:?}",
+            input.shape(),
+            want_in
+        )));
+    }
+    let want_k = [shape.h_f, shape.w_f, shape.c_i, shape.c_o];
+    if kernel_hwio.shape() != want_k {
+        return Err(Error::Shape(format!(
+            "kernel shape {:?} != expected {:?}",
+            kernel_hwio.shape(),
+            want_k
+        )));
+    }
+    let (h_o, w_o) = (shape.h_o(), shape.w_o());
+    let (c_i, h_i, w_i) = (shape.c_i, shape.h_i, shape.w_i);
+    let (c_o, h_f, w_f) = (shape.c_o, shape.h_f, shape.w_f);
+    let (s, p) = (shape.stride, shape.pad as isize);
+
+    let inp = input.data();
+    let ker = kernel_hwio.data();
+    let mut out = Tensor::zeros(&[h_o, w_o, c_o]);
+    let o = out.data_mut();
+
+    // Paper Algorithm 2: for l, n, m, i, k, j.
+    for l in 0..h_o {
+        for n in 0..h_f {
+            let iy = (l * s + n) as isize - p;
+            if iy < 0 || iy >= h_i as isize {
+                continue;
+            }
+            let iy = iy as usize;
+            for m in 0..w_f {
+                for i in 0..c_i {
+                    for k in 0..w_o {
+                        let ix = (k * s + m) as isize - p;
+                        if ix < 0 || ix >= w_i as isize {
+                            continue;
+                        }
+                        let xv = inp[(iy * w_i + ix as usize) * c_i + i];
+                        let wrow = &ker[((n * w_f + m) * c_i + i) * c_o..][..c_o];
+                        let orow = &mut o[(l * w_o + k) * c_o..][..c_o];
+                        // j loop: unit stride over C_o — vectorizes.
+                        for j in 0..c_o {
+                            orow[j] += xv * wrow[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conv_naive;
+    use crate::layout::{nchw_to_nhwc, nhwc_to_nchw};
+
+    fn check_against_naive(s: &ConvShape, seed: u64) {
+        let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], seed);
+        let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], seed + 1);
+        let want = conv_naive(&input, &kernel, s).unwrap();
+
+        let got_nhwc = conv_reorder(
+            &nchw_to_nhwc(&input).unwrap(),
+            &kernel_to_hwio(&kernel).unwrap(),
+            s,
+        )
+        .unwrap();
+        let got = nhwc_to_nchw(&got_nhwc).unwrap();
+        assert!(
+            got.allclose(&want, 1e-4, 1e-5),
+            "mismatch {:?}: {}",
+            s,
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn matches_naive_basic() {
+        check_against_naive(&ConvShape::new(3, 8, 8, 4, 3, 3, 1, 0), 11);
+    }
+
+    #[test]
+    fn matches_naive_padded() {
+        check_against_naive(&ConvShape::new(2, 7, 9, 5, 3, 3, 1, 1), 12);
+    }
+
+    #[test]
+    fn matches_naive_strided() {
+        check_against_naive(&ConvShape::new(4, 11, 11, 8, 3, 3, 2, 0), 13);
+        check_against_naive(&ConvShape::new(3, 13, 13, 2, 5, 5, 2, 2), 14);
+    }
+
+    #[test]
+    fn matches_naive_asymmetric_kernel() {
+        check_against_naive(&ConvShape::new(2, 9, 9, 3, 1, 3, 1, 0), 15);
+        check_against_naive(&ConvShape::new(2, 9, 9, 3, 3, 1, 1, 0), 16);
+    }
+
+    #[test]
+    fn hwio_repack_round_values() {
+        let k = Tensor::iota(&[2, 3, 2, 2]);
+        let h = kernel_to_hwio(&k).unwrap();
+        assert_eq!(h.shape(), &[2, 2, 3, 2]);
+        // h[n][m][i][o] == k[o][i][n][m]
+        assert_eq!(h.at(&[1, 0, 2, 1]), k.at(&[1, 2, 1, 0]));
+    }
+}

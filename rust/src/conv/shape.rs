@@ -1,0 +1,191 @@
+//! Convolution-layer shape descriptors and blocking parameters.
+
+use crate::{Error, Result};
+
+/// Shape of a single convolution layer (one image; batching is an outer
+/// dimension handled by the caller / coordinator).
+///
+/// Follows the paper's notation: input `C_i x H_i x W_i`, kernel
+/// `C_o x C_i x H_f x W_f`, output `C_o x H_o x W_o`, stride `s`,
+/// symmetric zero padding `pad`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConvShape {
+    pub c_i: usize,
+    pub h_i: usize,
+    pub w_i: usize,
+    pub c_o: usize,
+    pub h_f: usize,
+    pub w_f: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvShape {
+    pub fn new(
+        c_i: usize,
+        h_i: usize,
+        w_i: usize,
+        c_o: usize,
+        h_f: usize,
+        w_f: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Self {
+        ConvShape { c_i, h_i, w_i, c_o, h_f, w_f, stride, pad }
+    }
+
+    /// Output height `(H_i + 2 pad - H_f) / s + 1`.
+    pub fn h_o(&self) -> usize {
+        (self.h_i + 2 * self.pad - self.h_f) / self.stride + 1
+    }
+
+    /// Output width `(W_i + 2 pad - W_f) / s + 1`.
+    pub fn w_o(&self) -> usize {
+        (self.w_i + 2 * self.pad - self.w_f) / self.stride + 1
+    }
+
+    /// Multiply-accumulate FLOPs (2 per MAC, the convention used by the
+    /// paper's GFLOPS plots).
+    pub fn flops(&self) -> u64 {
+        2 * self.c_o as u64
+            * self.h_o() as u64
+            * self.w_o() as u64
+            * self.c_i as u64
+            * self.h_f as u64
+            * self.w_f as u64
+    }
+
+    /// Bytes of the (unpacked) input, kernel and output — the paper's
+    /// zero-overhead budget.
+    pub fn input_bytes(&self) -> u64 {
+        4 * (self.c_i * self.h_i * self.w_i) as u64
+    }
+    pub fn kernel_bytes(&self) -> u64 {
+        4 * (self.c_o * self.c_i * self.h_f * self.w_f) as u64
+    }
+    pub fn output_bytes(&self) -> u64 {
+        4 * (self.c_o * self.h_o() * self.w_o()) as u64
+    }
+
+    /// Extra bytes an `im2col` lowering materializes:
+    /// `(H_f*W_f*C_i) x (H_o*W_o)` floats.
+    pub fn im2col_bytes(&self) -> u64 {
+        4 * (self.h_f * self.w_f * self.c_i) as u64 * (self.h_o() * self.w_o()) as u64
+    }
+
+    /// Sanity checks used by every kernel entry point.
+    pub fn validate(&self) -> Result<()> {
+        if self.stride == 0 {
+            return Err(Error::Shape("stride must be >= 1".into()));
+        }
+        if self.h_f > self.h_i + 2 * self.pad || self.w_f > self.w_i + 2 * self.pad {
+            return Err(Error::Shape(format!(
+                "kernel {}x{} larger than padded input {}x{}",
+                self.h_f,
+                self.w_f,
+                self.h_i + 2 * self.pad,
+                self.w_i + 2 * self.pad
+            )));
+        }
+        if [self.c_i, self.h_i, self.w_i, self.c_o, self.h_f, self.w_f]
+            .iter()
+            .any(|&d| d == 0)
+        {
+            return Err(Error::Shape("zero dimension".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Blocking parameters of Algorithm 3.
+///
+/// * `c_ob` — register-block of the output channel (paper: a multiple of
+///   `N_vec`); the fastest dimension of both proposed layouts.
+/// * `w_ob` — register-block of the output row; together `c_ob * w_ob`
+///   accumulators must satisfy `E >= N_vec * N_fma * L_fma` (paper eq. 1)
+///   while fitting in `N_reg` registers (paper eq. 2).
+/// * `c_ib` — cache-block of the input channel (the `i'` loop).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockParams {
+    pub c_ob: usize,
+    pub w_ob: usize,
+    pub c_ib: usize,
+}
+
+impl BlockParams {
+    pub fn new(c_ob: usize, w_ob: usize, c_ib: usize) -> Self {
+        BlockParams { c_ob, w_ob, c_ib }
+    }
+
+    /// Check divisibility against a layer shape (the zero-overhead layouts
+    /// require exact blocking; see `conv::params::select` which always
+    /// returns divisible parameters).
+    pub fn validate_for(&self, s: &ConvShape) -> Result<()> {
+        if self.c_ob == 0 || self.w_ob == 0 || self.c_ib == 0 {
+            return Err(Error::Shape("zero block parameter".into()));
+        }
+        if s.c_o % self.c_ob != 0 {
+            return Err(Error::Shape(format!(
+                "c_ob={} does not divide C_o={}",
+                self.c_ob, s.c_o
+            )));
+        }
+        if s.c_i % self.c_ib != 0 {
+            return Err(Error::Shape(format!(
+                "c_ib={} does not divide C_i={}",
+                self.c_ib, s.c_i
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn alexnet_conv1() -> ConvShape {
+        // AlexNet conv1: 3x227x227 -> 96x55x55, 11x11 stride 4.
+        ConvShape::new(3, 227, 227, 96, 11, 11, 4, 0)
+    }
+
+    #[test]
+    fn output_dims() {
+        let s = alexnet_conv1();
+        assert_eq!(s.h_o(), 55);
+        assert_eq!(s.w_o(), 55);
+        let p = ConvShape::new(64, 56, 56, 64, 3, 3, 1, 1);
+        assert_eq!(p.h_o(), 56);
+        assert_eq!(p.w_o(), 56);
+    }
+
+    #[test]
+    fn flops_match_hand_count() {
+        let s = ConvShape::new(2, 4, 4, 3, 3, 3, 1, 0);
+        // H_o = W_o = 2; 2 * 3*2*2 * 2*3*3 = 432
+        assert_eq!(s.flops(), 432);
+    }
+
+    #[test]
+    fn im2col_overhead_grows() {
+        let s = ConvShape::new(64, 56, 56, 64, 3, 3, 1, 1);
+        // im2col matrix is H_f*W_f = 9x the input size for stride 1.
+        assert!(s.im2col_bytes() > 8 * s.input_bytes());
+    }
+
+    #[test]
+    fn validate_rejects_bad() {
+        assert!(ConvShape::new(1, 4, 4, 1, 3, 3, 0, 0).validate().is_err());
+        assert!(ConvShape::new(1, 2, 2, 1, 3, 3, 1, 0).validate().is_err());
+        assert!(ConvShape::new(1, 2, 2, 1, 3, 3, 1, 1).validate().is_ok());
+        assert!(ConvShape::new(0, 4, 4, 1, 3, 3, 1, 0).validate().is_err());
+    }
+
+    #[test]
+    fn block_params_divisibility() {
+        let s = alexnet_conv1();
+        assert!(BlockParams::new(16, 4, 3).validate_for(&s).is_ok());
+        assert!(BlockParams::new(5, 4, 3).validate_for(&s).is_err());
+        assert!(BlockParams::new(16, 4, 2).validate_for(&s).is_err());
+    }
+}

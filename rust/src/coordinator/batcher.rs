@@ -1,0 +1,119 @@
+//! Batch planning: map a number of queued requests onto the discrete
+//! AOT-compiled batch sizes.
+//!
+//! AOT compilation fixes shapes, so the server cannot run arbitrary
+//! batch sizes — it pads up to the nearest compiled size (wasting the
+//! padded slots) or, when more requests are queued than the largest
+//! artifact, splits into multiple executions. The planner picks the
+//! padding-minimal choice; occupancy shows up in the serve stats.
+
+/// Batcher configuration: available sizes (ascending) and the fill wait.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    pub sizes: Vec<usize>,
+    pub max_wait: std::time::Duration,
+}
+
+/// How to run one group of requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchPlan {
+    /// Compiled batch size to invoke.
+    pub padded: usize,
+    /// Live requests inside it.
+    pub occupancy: usize,
+}
+
+/// Plans batches over the discrete compiled sizes.
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    cfg: BatcherConfig,
+}
+
+impl Batcher {
+    pub fn new(mut cfg: BatcherConfig) -> Batcher {
+        assert!(!cfg.sizes.is_empty(), "need at least one compiled batch size");
+        cfg.sizes.sort_unstable();
+        cfg.sizes.dedup();
+        Batcher { cfg }
+    }
+
+    pub fn cfg(&self) -> &BatcherConfig {
+        &self.cfg
+    }
+
+    /// Smallest compiled size >= n (or the largest available: callers
+    /// split at `max_size()` before planning).
+    pub fn plan(&self, n: usize) -> BatchPlan {
+        let n = n.max(1);
+        let padded = self
+            .cfg
+            .sizes
+            .iter()
+            .copied()
+            .find(|&s| s >= n)
+            .unwrap_or(*self.cfg.sizes.last().unwrap());
+        BatchPlan { padded, occupancy: n.min(padded) }
+    }
+
+    pub fn max_size(&self) -> usize {
+        *self.cfg.sizes.last().unwrap()
+    }
+
+    /// Padding waste of a plan (padded slots that run dead weight).
+    pub fn waste(plan: &BatchPlan) -> usize {
+        plan.padded - plan.occupancy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn batcher() -> Batcher {
+        Batcher::new(BatcherConfig {
+            sizes: vec![1, 2, 4, 8],
+            max_wait: Duration::from_millis(1),
+        })
+    }
+
+    #[test]
+    fn exact_sizes_have_no_waste() {
+        let b = batcher();
+        for &n in &[1usize, 2, 4, 8] {
+            let p = b.plan(n);
+            assert_eq!(p.padded, n);
+            assert_eq!(Batcher::waste(&p), 0);
+        }
+    }
+
+    #[test]
+    fn pads_up_to_next_size() {
+        let b = batcher();
+        assert_eq!(b.plan(3), BatchPlan { padded: 4, occupancy: 3 });
+        assert_eq!(b.plan(5), BatchPlan { padded: 8, occupancy: 5 });
+        assert_eq!(Batcher::waste(&b.plan(5)), 3);
+    }
+
+    #[test]
+    fn zero_is_treated_as_one() {
+        assert_eq!(batcher().plan(0).padded, 1);
+    }
+
+    #[test]
+    fn clamps_at_largest() {
+        let b = batcher();
+        assert_eq!(b.plan(20).padded, 8);
+        assert_eq!(b.plan(20).occupancy, 8);
+        assert_eq!(b.max_size(), 8);
+    }
+
+    #[test]
+    fn sizes_get_sorted_and_deduped() {
+        let b = Batcher::new(BatcherConfig {
+            sizes: vec![4, 1, 4, 2],
+            max_wait: Duration::from_millis(1),
+        });
+        assert_eq!(b.cfg().sizes, vec![1, 2, 4]);
+    }
+}

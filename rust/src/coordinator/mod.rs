@@ -1,0 +1,207 @@
+//! L3 coordinator — the serving engine the end-to-end example drives.
+//!
+//! Role in the reproduction: the paper's §4 layouts exist so that layers
+//! (and whole networks) chain with zero repacking; the natural
+//! system-level demonstration is an inference server whose request path
+//! never reshapes a tensor. The coordinator owns:
+//!
+//! * a bounded request queue with backpressure ([`Coordinator::submit`]
+//!   fails fast when the queue is full rather than buffering unbounded);
+//! * a [`batcher`] that groups requests and pads them to the nearest
+//!   AOT-compiled batch size (`cnn_b{1,2,4,8}` artifacts);
+//! * a worker loop running batches on the PJRT [`crate::runtime`], and
+//!   scattering per-request outputs back to their reply channels;
+//! * [`crate::metrics`] (latency histogram, batch occupancy, throughput).
+
+pub mod batcher;
+
+pub use batcher::{BatchPlan, Batcher, BatcherConfig};
+
+use crate::metrics::{Histogram, ServeStats};
+use crate::runtime::EngineHandle;
+use crate::{Error, Result};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One inference request: a flat NHWC image and a reply channel.
+struct Request {
+    input: Vec<f32>,
+    enqueued: Instant,
+    reply: SyncSender<Result<Vec<f32>>>,
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Bounded queue depth (backpressure threshold).
+    pub queue_depth: usize,
+    /// Max time the batcher waits to fill a batch.
+    pub max_wait: std::time::Duration,
+    /// Prefix of CNN artifacts to use (`cnn` -> `cnn_b{N}`).
+    pub model_prefix: String,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            queue_depth: 64,
+            max_wait: std::time::Duration::from_millis(2),
+            model_prefix: "cnn".into(),
+        }
+    }
+}
+
+/// Handle for submitting requests; cloneable across client threads.
+#[derive(Clone)]
+pub struct Coordinator {
+    tx: SyncSender<Request>,
+    stats: Arc<Mutex<ServeStats>>,
+    image_elems: usize,
+    classes: usize,
+}
+
+/// A pending response.
+pub struct Pending {
+    rx: Receiver<Result<Vec<f32>>>,
+}
+
+impl Pending {
+    /// Block until the logits arrive.
+    pub fn wait(self) -> Result<Vec<f32>> {
+        self.rx.recv().map_err(|_| Error::Runtime("coordinator dropped request".into()))?
+    }
+}
+
+impl Coordinator {
+    /// Start the batching worker on top of a running engine.
+    pub fn start(engine: EngineHandle, cfg: CoordinatorConfig) -> Result<Coordinator> {
+        let batches = engine.manifest().cnn_batches();
+        if batches.is_empty() {
+            return Err(Error::Runtime("manifest has no cnn artifacts".into()));
+        }
+        let b1 = engine
+            .manifest()
+            .get(&format!("{}_b{}", cfg.model_prefix, batches[0]))
+            .ok_or_else(|| Error::Runtime("missing smallest-batch artifact".into()))?;
+        let image_elems: usize = b1.input_shape[1..].iter().product();
+        let classes: usize = b1.output_shape[1..].iter().product();
+
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let stats = Arc::new(Mutex::new(ServeStats {
+            latency: Histogram::new(),
+            ..Default::default()
+        }));
+        let st2 = Arc::clone(&stats);
+        let cfg2 = cfg.clone();
+        std::thread::Builder::new()
+            .name("coordinator".into())
+            .spawn(move || worker(engine, cfg2, batches, image_elems, classes, rx, st2))
+            .map_err(|e| Error::Runtime(format!("spawn: {e}")))?;
+        Ok(Coordinator { tx, stats, image_elems, classes })
+    }
+
+    /// Submit one image. Returns immediately with a [`Pending`]; fails
+    /// with `Error::Runtime` if the queue is full (backpressure) or the
+    /// input has the wrong size.
+    pub fn submit(&self, input: Vec<f32>) -> Result<Pending> {
+        if input.len() != self.image_elems {
+            return Err(Error::Shape(format!(
+                "image must have {} elements, got {}",
+                self.image_elems,
+                input.len()
+            )));
+        }
+        let (reply, rx) = sync_channel(1);
+        match self.tx.try_send(Request { input, enqueued: Instant::now(), reply }) {
+            Ok(()) => Ok(Pending { rx }),
+            Err(TrySendError::Full(_)) => {
+                Err(Error::Runtime("queue full (backpressure)".into()))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                Err(Error::Runtime("coordinator stopped".into()))
+            }
+        }
+    }
+
+    /// Blocking submit: spins on backpressure until accepted.
+    pub fn submit_blocking(&self, input: Vec<f32>) -> Result<Pending> {
+        loop {
+            match self.submit(input.clone()) {
+                Err(Error::Runtime(ref m)) if m.starts_with("queue full") => {
+                    std::thread::yield_now();
+                }
+                other => return other,
+            }
+        }
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+/// Worker loop: drain the queue into batches, execute, scatter replies.
+fn worker(
+    engine: EngineHandle,
+    cfg: CoordinatorConfig,
+    batches: Vec<usize>,
+    image_elems: usize,
+    classes: usize,
+    rx: Receiver<Request>,
+    stats: Arc<Mutex<ServeStats>>,
+) {
+    let max_batch = *batches.last().unwrap();
+    let batcher = Batcher::new(BatcherConfig { sizes: batches, max_wait: cfg.max_wait });
+    loop {
+        // Collect one batch (blocking on the first request).
+        let mut reqs: Vec<Request> = Vec::with_capacity(max_batch);
+        match rx.recv() {
+            Ok(r) => reqs.push(r),
+            Err(_) => return, // all submitters gone
+        }
+        let deadline = Instant::now() + batcher.cfg().max_wait;
+        while reqs.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => reqs.push(r),
+                Err(_) => break,
+            }
+        }
+
+        let plan = batcher.plan(reqs.len());
+        // Gather into the padded batch buffer.
+        let mut buf = vec![0.0f32; plan.padded * image_elems];
+        for (i, r) in reqs.iter().enumerate() {
+            buf[i * image_elems..][..image_elems].copy_from_slice(&r.input);
+        }
+        let model = format!("{}_b{}", cfg.model_prefix, plan.padded);
+        let result = engine.run(&model, buf);
+
+        // Scatter outputs and record metrics.
+        let mut st = stats.lock().unwrap();
+        st.record_batch(reqs.len());
+        match result {
+            Ok(out) => {
+                for (i, r) in reqs.into_iter().enumerate() {
+                    let logits = out[i * classes..][..classes].to_vec();
+                    st.latency.record(r.enqueued.elapsed().as_secs_f64());
+                    let _ = r.reply.send(Ok(logits));
+                }
+            }
+            Err(e) => {
+                let msg = format!("batch failed: {e}");
+                for r in reqs {
+                    let _ = r.reply.send(Err(Error::Runtime(msg.clone())));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Iterative radix-2 complex FFT (split re/im arrays) and the 2-D
+//! row-column transform built on it. No external FFT library exists in
+//! the offline registry; this is a textbook Cooley–Tukey implementation
+//! with precomputed twiddles, adequate for the NNPACK-style baseline.
+
+use std::f64::consts::PI;
+
+/// Next power of two >= n (and >= 1).
+pub fn next_pow2(n: usize) -> usize {
+    n.max(1).next_power_of_two()
+}
+
+/// In-place complex FFT of length `re.len()` (must be a power of two).
+/// `invert` computes the inverse transform including the `1/N` scale.
+pub fn fft(re: &mut [f32], im: &mut [f32], invert: bool) {
+    let n = re.len();
+    assert_eq!(n, im.len());
+    assert!(n.is_power_of_two(), "FFT length {n} must be a power of two");
+    if n <= 1 {
+        return;
+    }
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    // Butterflies.
+    let sign = if invert { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let (wr, wi) = (ang.cos() as f32, ang.sin() as f32);
+        let half = len / 2;
+        let mut i = 0;
+        while i < n {
+            let (mut cr, mut ci) = (1.0f32, 0.0f32);
+            for k in 0..half {
+                let (ur, ui) = (re[i + k], im[i + k]);
+                let (vr0, vi0) = (re[i + k + half], im[i + k + half]);
+                let vr = vr0 * cr - vi0 * ci;
+                let vi = vr0 * ci + vi0 * cr;
+                re[i + k] = ur + vr;
+                im[i + k] = ui + vi;
+                re[i + k + half] = ur - vr;
+                im[i + k + half] = ui - vi;
+                let ncr = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = ncr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+    if invert {
+        let inv = 1.0 / n as f32;
+        for v in re.iter_mut() {
+            *v *= inv;
+        }
+        for v in im.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// In-place 2-D FFT of an `n x n` row-major grid (row-column algorithm).
+pub fn fft2d(re: &mut [f32], im: &mut [f32], n: usize, invert: bool) {
+    assert_eq!(re.len(), n * n);
+    // Rows.
+    for r in 0..n {
+        fft(&mut re[r * n..(r + 1) * n], &mut im[r * n..(r + 1) * n], invert);
+    }
+    // Columns (gather/scatter through a scratch row).
+    let mut cr = vec![0.0f32; n];
+    let mut ci = vec![0.0f32; n];
+    for c in 0..n {
+        for r in 0..n {
+            cr[r] = re[r * n + c];
+            ci[r] = im[r * n + c];
+        }
+        fft(&mut cr, &mut ci, invert);
+        for r in 0..n {
+            re[r * n + c] = cr[r];
+            im[r * n + c] = ci[r];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_1d() {
+        let n = 64;
+        let orig: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut re = orig.clone();
+        let mut im = vec![0.0f32; n];
+        fft(&mut re, &mut im, false);
+        fft(&mut re, &mut im, true);
+        for i in 0..n {
+            assert!((re[i] - orig[i]).abs() < 1e-4);
+            assert!(im[i].abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn impulse_is_flat_spectrum() {
+        let mut re = vec![0.0f32; 8];
+        let mut im = vec![0.0f32; 8];
+        re[0] = 1.0;
+        fft(&mut re, &mut im, false);
+        for i in 0..8 {
+            assert!((re[i] - 1.0).abs() < 1e-6);
+            assert!(im[i].abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn dc_component_is_sum() {
+        let mut re = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut im = vec![0.0f32; 4];
+        fft(&mut re, &mut im, false);
+        assert!((re[0] - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parseval_energy() {
+        let n = 32;
+        let orig: Vec<f32> = (0..n).map(|i| ((i * i) as f32 * 0.13).cos()).collect();
+        let e_time: f32 = orig.iter().map(|v| v * v).sum();
+        let mut re = orig.clone();
+        let mut im = vec![0.0f32; n];
+        fft(&mut re, &mut im, false);
+        let e_freq: f32 =
+            re.iter().zip(im.iter()).map(|(r, i)| r * r + i * i).sum::<f32>() / n as f32;
+        assert!((e_time - e_freq).abs() / e_time < 1e-4);
+    }
+
+    #[test]
+    fn round_trip_2d() {
+        let n = 16;
+        let orig: Vec<f32> = (0..n * n).map(|i| (i as f32 * 0.11).sin()).collect();
+        let mut re = orig.clone();
+        let mut im = vec![0.0f32; n * n];
+        fft2d(&mut re, &mut im, n, false);
+        fft2d(&mut re, &mut im, n, true);
+        for i in 0..n * n {
+            assert!((re[i] - orig[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn next_pow2_values() {
+        assert_eq!(next_pow2(0), 1);
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(5), 8);
+        assert_eq!(next_pow2(64), 64);
+        assert_eq!(next_pow2(65), 128);
+    }
+}

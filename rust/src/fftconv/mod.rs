@@ -1,0 +1,207 @@
+//! FFT-based convolution — the NNPACK-style baseline (§2.1, Figure 4).
+//!
+//! Computes cross-correlation in the frequency domain: each kernel is
+//! zero-padded to the transform size (the memory blow-up §2.1 describes:
+//! a `3x3` kernel stored as an `N x N` complex spectrum), input channels
+//! are transformed once, multiplied by the conjugated kernel spectra,
+//! accumulated over input channels and inverse-transformed per output
+//! channel.
+//!
+//! Two entry points:
+//! * [`conv_fft`] — transforms the weights on the fly (what a framework
+//!   does on the first call);
+//! * [`FftConvPlan`] — pre-transforms weights once and reports the
+//!   retained memory, mirroring NNPACK's precomputed mode and feeding the
+//!   memory-overhead table in EXPERIMENTS.md.
+
+mod fft;
+
+pub use fft::{fft, fft2d, next_pow2};
+
+use crate::conv::ConvShape;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Transform size for a layer: padded image and kernel must both fit and
+/// cyclic wrap-around must not alias into the used region.
+pub fn transform_size(shape: &ConvShape) -> usize {
+    next_pow2(shape.h_i.max(shape.w_i) + 2 * shape.pad + shape.h_f.max(shape.w_f))
+}
+
+/// Extra bytes the FFT approach retains when kernel spectra are
+/// precomputed: `C_o*C_i` complex `N x N` grids versus `H_f x W_f` reals.
+pub fn fft_extra_bytes(shape: &ConvShape) -> u64 {
+    let n = transform_size(shape) as u64;
+    8 * n * n * (shape.c_o * shape.c_i) as u64
+}
+
+/// Convolution with on-the-fly kernel transforms.
+pub fn conv_fft(input: &Tensor, kernel: &Tensor, shape: &ConvShape) -> Result<Tensor> {
+    let plan = FftConvPlan::new(kernel, shape)?;
+    plan.run(input)
+}
+
+/// Precomputed kernel spectra for one layer.
+pub struct FftConvPlan {
+    shape: ConvShape,
+    n: usize,
+    /// `C_o * C_i` spectra, each `n*n` re + `n*n` im (kernel conjugated
+    /// already folded in: we store conj(FFT(k))).
+    k_re: Vec<f32>,
+    k_im: Vec<f32>,
+}
+
+impl FftConvPlan {
+    /// Transform all `C_o x C_i` kernels. Weights are `[C_o][C_i][H_f][W_f]`.
+    pub fn new(kernel: &Tensor, shape: &ConvShape) -> Result<FftConvPlan> {
+        shape.validate()?;
+        let want_k = [shape.c_o, shape.c_i, shape.h_f, shape.w_f];
+        if kernel.shape() != want_k {
+            return Err(Error::Shape(format!(
+                "kernel shape {:?} != expected {:?}",
+                kernel.shape(),
+                want_k
+            )));
+        }
+        let n = transform_size(shape);
+        let grids = shape.c_o * shape.c_i;
+        let mut k_re = vec![0.0f32; grids * n * n];
+        let mut k_im = vec![0.0f32; grids * n * n];
+        let src = kernel.data();
+        for g in 0..grids {
+            let re = &mut k_re[g * n * n..][..n * n];
+            let im = &mut k_im[g * n * n..][..n * n];
+            // zero-pad H_f x W_f into n x n
+            for r in 0..shape.h_f {
+                for c in 0..shape.w_f {
+                    re[r * n + c] = src[g * shape.h_f * shape.w_f + r * shape.w_f + c];
+                }
+            }
+            fft2d(re, im, n, false);
+            // conjugate: correlation = IFFT(X * conj(K))
+            for v in im.iter_mut() {
+                *v = -*v;
+            }
+        }
+        Ok(FftConvPlan { shape: shape.clone(), n, k_re, k_im })
+    }
+
+    /// Bytes retained by the precomputed spectra.
+    pub fn retained_bytes(&self) -> u64 {
+        (self.k_re.len() + self.k_im.len()) as u64 * 4
+    }
+
+    /// Run the layer: input `[C_i][H_i][W_i]` -> output `[C_o][H_o][W_o]`.
+    pub fn run(&self, input: &Tensor) -> Result<Tensor> {
+        let s = &self.shape;
+        let want_in = [s.c_i, s.h_i, s.w_i];
+        if input.shape() != want_in {
+            return Err(Error::Shape(format!(
+                "input shape {:?} != expected {:?}",
+                input.shape(),
+                want_in
+            )));
+        }
+        let n = self.n;
+        let nn = n * n;
+        // Forward-transform every input channel once.
+        let mut x_re = vec![0.0f32; s.c_i * nn];
+        let mut x_im = vec![0.0f32; s.c_i * nn];
+        let src = input.data();
+        for i in 0..s.c_i {
+            let re = &mut x_re[i * nn..][..nn];
+            let im = &mut x_im[i * nn..][..nn];
+            for r in 0..s.h_i {
+                for c in 0..s.w_i {
+                    re[r * n + c] = src[(i * s.h_i + r) * s.w_i + c];
+                }
+            }
+            fft2d(re, im, n, false);
+        }
+        // Accumulate per output channel in the frequency domain.
+        let (h_o, w_o) = (s.h_o(), s.w_o());
+        let mut out = Tensor::zeros(&[s.c_o, h_o, w_o]);
+        let mut acc_re = vec![0.0f32; nn];
+        let mut acc_im = vec![0.0f32; nn];
+        for j in 0..s.c_o {
+            acc_re.fill(0.0);
+            acc_im.fill(0.0);
+            for i in 0..s.c_i {
+                let g = j * s.c_i + i;
+                let (kr, ki) = (&self.k_re[g * nn..][..nn], &self.k_im[g * nn..][..nn]);
+                let (xr, xi) = (&x_re[i * nn..][..nn], &x_im[i * nn..][..nn]);
+                for t in 0..nn {
+                    // (xr + i xi) * (kr + i ki); ki already conjugated.
+                    acc_re[t] += xr[t] * kr[t] - xi[t] * ki[t];
+                    acc_im[t] += xr[t] * ki[t] + xi[t] * kr[t];
+                }
+            }
+            fft2d(&mut acc_re, &mut acc_im, n, true);
+            // Correlation result at spatial offset t = l*s - pad (cyclic).
+            let od = out.data_mut();
+            for l in 0..h_o {
+                let ty = (l * s.stride + n - s.pad) % n;
+                for k in 0..w_o {
+                    let tx = (k * s.stride + n - s.pad) % n;
+                    od[(j * h_o + l) * w_o + k] = acc_re[ty * n + tx];
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conv_naive;
+
+    fn check(s: &ConvShape, seed: u64) {
+        let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], seed);
+        let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], seed + 1);
+        let want = conv_naive(&input, &kernel, s).unwrap();
+        let got = conv_fft(&input, &kernel, s).unwrap();
+        assert!(
+            got.allclose(&want, 1e-3, 1e-3),
+            "mismatch {:?}: {}",
+            s,
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn matches_naive() {
+        check(&ConvShape::new(2, 8, 8, 3, 3, 3, 1, 0), 70);
+        check(&ConvShape::new(3, 9, 9, 4, 3, 3, 1, 1), 71);
+        check(&ConvShape::new(2, 12, 12, 2, 5, 5, 1, 2), 72);
+    }
+
+    #[test]
+    fn matches_naive_strided() {
+        check(&ConvShape::new(2, 11, 11, 3, 3, 3, 2, 1), 73);
+        check(&ConvShape::new(1, 16, 16, 2, 5, 5, 4, 0), 74);
+    }
+
+    #[test]
+    fn plan_reuse_is_consistent() {
+        let s = ConvShape::new(2, 8, 8, 2, 3, 3, 1, 1);
+        let kernel = Tensor::random(&[2, 2, 3, 3], 80);
+        let plan = FftConvPlan::new(&kernel, &s).unwrap();
+        let a = Tensor::random(&[2, 8, 8], 81);
+        let r1 = plan.run(&a).unwrap();
+        let r2 = plan.run(&a).unwrap();
+        assert_eq!(r1, r2);
+    }
+
+    #[test]
+    fn kernel_padding_memory_blowup() {
+        // §2.1: padding 3x3 kernels to the transform size costs factors
+        // of 7-28x; for a 13x13 image (N=16) it is (16*16*2*4)/(9*4) ≈ 56x
+        // per kernel in complex storage.
+        let s = ConvShape::new(256, 13, 13, 384, 3, 3, 1, 1);
+        let per_kernel_fft = 8 * transform_size(&s).pow(2) as u64;
+        let per_kernel_direct = 4 * 9u64;
+        assert!(per_kernel_fft / per_kernel_direct > 7);
+        assert!(fft_extra_bytes(&s) > 10 * s.kernel_bytes());
+    }
+}

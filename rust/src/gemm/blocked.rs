@@ -1,0 +1,157 @@
+//! The Goto three-loop blocked GEMM driver and its threaded variant.
+
+use super::kernel::{kernel_edge, kernel_full, MR, NR};
+use super::pack::{pack_a, pack_b};
+
+/// Cache block sizes (`MC x KC` A block in L2, `KC x NC` B panel in L3,
+/// `MR x KC` micro-panel streamed through L1).
+#[derive(Clone, Copy, Debug)]
+pub struct BlockSizes {
+    pub mc: usize,
+    pub kc: usize,
+    pub nc: usize,
+}
+
+impl Default for BlockSizes {
+    fn default() -> Self {
+        // Tuned for ~32 KiB L1 / 256 KiB-1 MiB L2 f32 operation.
+        BlockSizes { mc: 96, kc: 256, nc: 2048 }
+    }
+}
+
+/// `C[m x n] += A[m x k] * B[k x n]` (row-major, leading dimensions).
+pub fn sgemm(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    sgemm_with(BlockSizes::default(), m, n, k, a, lda, b, ldb, c, ldc)
+}
+
+/// [`sgemm`] with explicit block sizes (used by the blocking ablation).
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_with(
+    bs: BlockSizes,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let mut a_buf = Vec::new();
+    let mut b_buf = Vec::new();
+    // Loop 5 (jc): NC columns of B/C.
+    let mut jc = 0;
+    while jc < n {
+        let nc = bs.nc.min(n - jc);
+        // Loop 4 (pc): KC slice of the reduction.
+        let mut pc = 0;
+        while pc < k {
+            let kc = bs.kc.min(k - pc);
+            pack_b(kc, nc, &b[pc * ldb + jc..], ldb, &mut b_buf);
+            // Loop 3 (ic): MC rows of A/C.
+            let mut ic = 0;
+            while ic < m {
+                let mc = bs.mc.min(m - ic);
+                pack_a(mc, kc, &a[ic * lda + pc..], lda, &mut a_buf);
+                macro_kernel(mc, nc, kc, &a_buf, &b_buf, &mut c[ic * ldc + jc..], ldc);
+                ic += mc;
+            }
+            pc += kc;
+        }
+        jc += nc;
+    }
+}
+
+/// Loops 2 (jr) and 1 (ir) plus the microkernel over packed panels.
+fn macro_kernel(
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    a_pack: &[f32],
+    b_pack: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+) {
+    let mut jr = 0;
+    while jr < nc {
+        let nr = NR.min(nc - jr);
+        let bp = &b_pack[(jr / NR) * kc * NR..][..kc * NR];
+        let mut ir = 0;
+        while ir < mc {
+            let mr = MR.min(mc - ir);
+            let ap = &a_pack[(ir / MR) * kc * MR..][..kc * MR];
+            let ctile = &mut c[ir * ldc + jr..];
+            if mr == MR && nr == NR {
+                kernel_full(kc, ap, bp, ctile, ldc);
+            } else {
+                kernel_edge(kc, ap, bp, ctile, ldc, mr, nr);
+            }
+            ir += MR;
+        }
+        jr += NR;
+    }
+}
+
+/// Threaded GEMM. Parallelism follows the BLAS convention the paper
+/// critiques (§2.2): the output is partitioned across threads by rows
+/// and columns, which skews the per-thread matrix shapes. Each thread
+/// runs an independent [`sgemm`] on its slice (private packing buffers,
+/// like OpenBLAS's per-thread buffers).
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_threaded(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    threads: usize,
+) {
+    let threads = threads.max(1);
+    if threads == 1 || m * n < 64 * 64 {
+        return sgemm(m, n, k, a, lda, b, ldb, c, ldc);
+    }
+    // Partition rows of C into `threads` contiguous bands. (Row-only
+    // partitioning is what OpenBLAS does at these thread counts; the
+    // resulting skinny per-thread shapes are exactly the inefficiency
+    // §2.2 describes.)
+    let band = m.div_ceil(threads);
+    // Split c into disjoint row bands. `ldc` may exceed `n`, bands are
+    // still disjoint as long as band rows don't interleave — they don't.
+    let mut bands: Vec<(usize, &mut [f32])> = Vec::new();
+    let mut rest = c;
+    let mut row = 0;
+    while row < m {
+        let rows = band.min(m - row);
+        let take = if row + rows < m { rows * ldc } else { rest.len() };
+        let (head, tail) = rest.split_at_mut(take);
+        bands.push((row, head));
+        rest = tail;
+        row += rows;
+    }
+    std::thread::scope(|scope| {
+        for (row0, cband) in bands {
+            let rows = band.min(m - row0);
+            scope.spawn(move || {
+                sgemm(rows, n, k, &a[row0 * lda..], lda, b, ldb, cband, ldc);
+            });
+        }
+    });
+}

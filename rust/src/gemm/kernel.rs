@@ -1,0 +1,102 @@
+//! The `MR x NR` register microkernel.
+//!
+//! `MR = 6`, `NR = 16` — six broadcast rows against two 8-lane vector
+//! columns, the classic AVX2 f32 tile (12 accumulator registers + 2
+//! operand registers + broadcasts, mirroring OpenBLAS/BLIS kernels).
+
+/// Microkernel rows (panel height of packed A).
+pub const MR: usize = 6;
+/// Microkernel columns (panel width of packed B).
+pub const NR: usize = 16;
+
+/// Full-tile kernel: `C[MR x NR] += Ap * Bp` over `kc` rank-1 updates.
+///
+/// * `ap` — packed A panel: `kc` slices of `MR` (column-major micro-panel).
+/// * `bp` — packed B panel: `kc` slices of `NR` (row-major micro-panel).
+/// * `c`  — output tile origin, leading dimension `ldc`.
+#[inline(always)]
+pub fn kernel_full(kc: usize, ap: &[f32], bp: &[f32], c: &mut [f32], ldc: usize) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let a = &ap[p * MR..][..MR];
+        let b = &bp[p * NR..][..NR];
+        for i in 0..MR {
+            let ai = a[i];
+            let row = &mut acc[i];
+            for j in 0..NR {
+                row[j] = ai.mul_add(b[j], row[j]);
+            }
+        }
+    }
+    for i in 0..MR {
+        let crow = &mut c[i * ldc..][..NR];
+        for j in 0..NR {
+            crow[j] += acc[i][j];
+        }
+    }
+}
+
+/// Edge kernel for partial tiles (`mr <= MR`, `nr <= NR`). Same packed
+/// panel format (panels are always padded to full MR/NR with zeros).
+#[inline(always)]
+pub fn kernel_edge(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let a = &ap[p * MR..][..MR];
+        let b = &bp[p * NR..][..NR];
+        for i in 0..MR {
+            let ai = a[i];
+            let row = &mut acc[i];
+            for j in 0..NR {
+                row[j] = ai.mul_add(b[j], row[j]);
+            }
+        }
+    }
+    for i in 0..mr {
+        let crow = &mut c[i * ldc..][..nr];
+        for j in 0..nr {
+            crow[j] += acc[i][j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_one_update() {
+        // kc=1: C = a (MR) outer b (NR)
+        let ap: Vec<f32> = (0..MR).map(|i| i as f32).collect();
+        let bp: Vec<f32> = (0..NR).map(|j| (j + 1) as f32).collect();
+        let mut c = vec![0.0f32; MR * NR];
+        kernel_full(1, &ap, &bp, &mut c, NR);
+        for i in 0..MR {
+            for j in 0..NR {
+                assert_eq!(c[i * NR + j], (i * (j + 1)) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn edge_writes_only_its_tile() {
+        let ap = vec![1.0f32; 2 * MR];
+        let bp = vec![1.0f32; 2 * NR];
+        let mut c = vec![0.0f32; MR * NR];
+        kernel_edge(2, &ap, &bp, &mut c, NR, 2, 3);
+        for i in 0..MR {
+            for j in 0..NR {
+                let want = if i < 2 && j < 3 { 2.0 } else { 0.0 };
+                assert_eq!(c[i * NR + j], want, "({i},{j})");
+            }
+        }
+    }
+}

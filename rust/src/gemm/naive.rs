@@ -1,0 +1,49 @@
+//! Reference triple-loop GEMM (row-major, `C += A * B`).
+
+/// `C[m x n] += A[m x k] * B[k x n]`, row-major with leading dimensions.
+pub fn sgemm_naive(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * lda + p];
+            let brow = &b[p * ldb..][..n];
+            let crow = &mut c[i * ldc..][..n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity() {
+        // A = I(3), B arbitrary -> C = B
+        let a = [1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0];
+        let b = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut c = [0.0; 6];
+        sgemm_naive(3, 2, 3, &a, 3, &b, 2, &mut c, 2);
+        assert_eq!(c, b);
+    }
+
+    #[test]
+    fn hand_2x2() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut c = [0.0; 4];
+        sgemm_naive(2, 2, 2, &a, 2, &b, 2, &mut c, 2);
+        assert_eq!(c, [19.0, 22.0, 43.0, 50.0]);
+    }
+}

@@ -1,0 +1,89 @@
+//! Operand packing — the memory overhead the paper indicts (§1, §2.2).
+//!
+//! `pack_a` copies an `mc x kc` block of A into column-major micro-panels
+//! of height [`super::MR`]; `pack_b` copies a `kc x nc` block of B into
+//! row-major micro-panels of width [`super::NR`]. Partial panels are
+//! zero-padded — this is precisely the "additional memory + bandwidth
+//! cost" that direct convolution avoids.
+
+use super::kernel::{MR, NR};
+
+/// Pack `a[mc x kc]` (leading dimension `lda`) into `buf` as
+/// `ceil(mc/MR)` panels of `kc * MR`. Returns the packed length.
+pub fn pack_a(mc: usize, kc: usize, a: &[f32], lda: usize, buf: &mut Vec<f32>) -> usize {
+    let panels = mc.div_ceil(MR);
+    buf.clear();
+    buf.resize(panels * kc * MR, 0.0);
+    for ip in 0..panels {
+        let i0 = ip * MR;
+        let rows = MR.min(mc - i0);
+        let dst = &mut buf[ip * kc * MR..][..kc * MR];
+        for p in 0..kc {
+            for r in 0..rows {
+                dst[p * MR + r] = a[(i0 + r) * lda + p];
+            }
+            // rows..MR already zero
+        }
+    }
+    buf.len()
+}
+
+/// Pack `b[kc x nc]` (leading dimension `ldb`) into `buf` as
+/// `ceil(nc/NR)` panels of `kc * NR`. Returns the packed length.
+pub fn pack_b(kc: usize, nc: usize, b: &[f32], ldb: usize, buf: &mut Vec<f32>) -> usize {
+    let panels = nc.div_ceil(NR);
+    buf.clear();
+    buf.resize(panels * kc * NR, 0.0);
+    for jp in 0..panels {
+        let j0 = jp * NR;
+        let cols = NR.min(nc - j0);
+        let dst = &mut buf[jp * kc * NR..][..kc * NR];
+        for p in 0..kc {
+            let src = &b[p * ldb + j0..][..cols];
+            dst[p * NR..][..cols].copy_from_slice(src);
+        }
+    }
+    buf.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_a_layout() {
+        // 3x2 block of a 3x5 matrix -> one panel, zero padded to MR rows.
+        let a: Vec<f32> = (0..15).map(|v| v as f32).collect();
+        let mut buf = Vec::new();
+        pack_a(3, 2, &a, 5, &mut buf);
+        assert_eq!(buf.len(), 2 * MR);
+        // panel column p holds A[0..3, p] then zeros
+        assert_eq!(&buf[0..4], &[0.0, 5.0, 10.0, 0.0]);
+        assert_eq!(&buf[MR..MR + 4], &[1.0, 6.0, 11.0, 0.0]);
+    }
+
+    #[test]
+    fn pack_b_layout() {
+        // 2 x (NR+3) block -> two panels, second padded.
+        let nc = NR + 3;
+        let b: Vec<f32> = (0..2 * nc).map(|v| v as f32).collect();
+        let mut buf = Vec::new();
+        pack_b(2, nc, &b, nc, &mut buf);
+        assert_eq!(buf.len(), 2 * 2 * NR);
+        // first panel row p = b[p, 0..NR]
+        assert_eq!(buf[0], 0.0);
+        assert_eq!(buf[NR], nc as f32); // p=1 row starts at b[1,0]
+        // second panel has 3 real columns then zeros
+        let p2 = &buf[2 * NR * 2 - NR..];
+        assert_eq!(p2[0], (nc + NR) as f32);
+        assert_eq!(p2[3], 0.0);
+    }
+
+    #[test]
+    fn pack_sizes_account_padding() {
+        let a = vec![1.0f32; 100 * 64];
+        let mut buf = Vec::new();
+        let len = pack_a(100, 64, &a, 64, &mut buf);
+        assert_eq!(len, 100usize.div_ceil(MR) * 64 * MR);
+    }
+}

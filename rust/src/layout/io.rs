@@ -1,0 +1,190 @@
+//! Input/output feature-map layout conversions (Figure 3 left).
+
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Linear index of logical element `(c, y, x)` in the blocked layout
+/// `[C/c_b][H][W][c_b]`.
+#[inline]
+pub fn blocked_io_index(c: usize, y: usize, x: usize, h: usize, w: usize, c_b: usize) -> usize {
+    let blk = c / c_b;
+    let cc = c % c_b;
+    ((blk * h + y) * w + x) * c_b + cc
+}
+
+/// Element count of the blocked layout (equals `c*h*w`: zero overhead).
+pub fn io_layout_len(c: usize, h: usize, w: usize, c_b: usize) -> usize {
+    assert_eq!(c % c_b, 0);
+    c * h * w
+}
+
+fn check_cb(c: usize, c_b: usize) -> Result<()> {
+    if c_b == 0 || c % c_b != 0 {
+        return Err(Error::Layout(format!("pencil c_b={c_b} must divide C={c}")));
+    }
+    Ok(())
+}
+
+/// `[C][H][W]` -> `[C/c_b][H][W][c_b]`.
+pub fn to_blocked_io(nchw: &Tensor, c_b: usize) -> Result<Tensor> {
+    let &[c, h, w] = nchw.shape() else {
+        return Err(Error::Layout(format!("expected [C][H][W], got {:?}", nchw.shape())));
+    };
+    check_cb(c, c_b)?;
+    let src = nchw.data();
+    let mut out = vec![0.0f32; c * h * w];
+    for blk in 0..c / c_b {
+        for y in 0..h {
+            for x in 0..w {
+                let dst_base = ((blk * h + y) * w + x) * c_b;
+                for cc in 0..c_b {
+                    out[dst_base + cc] = src[((blk * c_b + cc) * h + y) * w + x];
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[c / c_b, h, w, c_b], out)
+}
+
+/// `[C/c_b][H][W][c_b]` -> `[C][H][W]`.
+pub fn from_blocked_io(blocked: &Tensor) -> Result<Tensor> {
+    let &[nblk, h, w, c_b] = blocked.shape() else {
+        return Err(Error::Layout(format!(
+            "expected [C/c_b][H][W][c_b], got {:?}",
+            blocked.shape()
+        )));
+    };
+    let c = nblk * c_b;
+    let src = blocked.data();
+    let mut out = vec![0.0f32; c * h * w];
+    for blk in 0..nblk {
+        for y in 0..h {
+            for x in 0..w {
+                let src_base = ((blk * h + y) * w + x) * c_b;
+                for cc in 0..c_b {
+                    out[((blk * c_b + cc) * h + y) * w + x] = src[src_base + cc];
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[c, h, w], out)
+}
+
+/// `[H][W][C]` -> `[C/c_b][H][W][c_b]` — the cheap repack (only block
+/// transposition of the channel dimension; used by the first layer's
+/// backward-compatibility path, §4.3).
+pub fn to_blocked_io_nhwc(nhwc: &Tensor, c_b: usize) -> Result<Tensor> {
+    let &[h, w, c] = nhwc.shape() else {
+        return Err(Error::Layout(format!("expected [H][W][C], got {:?}", nhwc.shape())));
+    };
+    check_cb(c, c_b)?;
+    let src = nhwc.data();
+    let mut out = vec![0.0f32; c * h * w];
+    for blk in 0..c / c_b {
+        for y in 0..h {
+            for x in 0..w {
+                let dst = ((blk * h + y) * w + x) * c_b;
+                let srcb = (y * w + x) * c + blk * c_b;
+                out[dst..dst + c_b].copy_from_slice(&src[srcb..srcb + c_b]);
+            }
+        }
+    }
+    Tensor::from_vec(&[c / c_b, h, w, c_b], out)
+}
+
+/// `[C][H][W]` -> `[H][W][C]`.
+pub fn nchw_to_nhwc(nchw: &Tensor) -> Result<Tensor> {
+    let &[c, h, w] = nchw.shape() else {
+        return Err(Error::Layout(format!("expected [C][H][W], got {:?}", nchw.shape())));
+    };
+    let src = nchw.data();
+    let mut out = vec![0.0f32; c * h * w];
+    for ch in 0..c {
+        for y in 0..h {
+            for x in 0..w {
+                out[(y * w + x) * c + ch] = src[(ch * h + y) * w + x];
+            }
+        }
+    }
+    Tensor::from_vec(&[h, w, c], out)
+}
+
+/// `[H][W][C]` -> `[C][H][W]`.
+pub fn nhwc_to_nchw(nhwc: &Tensor) -> Result<Tensor> {
+    let &[h, w, c] = nhwc.shape() else {
+        return Err(Error::Layout(format!("expected [H][W][C], got {:?}", nhwc.shape())));
+    };
+    let src = nhwc.data();
+    let mut out = vec![0.0f32; c * h * w];
+    for y in 0..h {
+        for x in 0..w {
+            for ch in 0..c {
+                out[(ch * h + y) * w + x] = src[(y * w + x) * c + ch];
+            }
+        }
+    }
+    Tensor::from_vec(&[c, h, w], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocked_round_trip() {
+        let t = Tensor::random(&[32, 5, 7], 1);
+        for &cb in &[1, 2, 4, 8, 16, 32] {
+            let b = to_blocked_io(&t, cb).unwrap();
+            assert_eq!(b.len(), t.len(), "zero overhead");
+            let back = from_blocked_io(&b).unwrap();
+            assert_eq!(back, t);
+        }
+    }
+
+    #[test]
+    fn blocked_index_agrees_with_converter() {
+        let t = Tensor::iota(&[8, 3, 4]);
+        let b = to_blocked_io(&t, 4).unwrap();
+        for c in 0..8 {
+            for y in 0..3 {
+                for x in 0..4 {
+                    let i = blocked_io_index(c, y, x, 3, 4, 4);
+                    assert_eq!(b.data()[i], t.at(&[c, y, x]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nhwc_round_trip() {
+        let t = Tensor::random(&[6, 4, 5], 2);
+        let n = nchw_to_nhwc(&t).unwrap();
+        assert_eq!(n.shape(), &[4, 5, 6]);
+        assert_eq!(nhwc_to_nchw(&n).unwrap(), t);
+    }
+
+    #[test]
+    fn nhwc_to_blocked_matches_nchw_path() {
+        let t = Tensor::random(&[8, 3, 3], 3);
+        let via_nhwc = to_blocked_io_nhwc(&nchw_to_nhwc(&t).unwrap(), 4).unwrap();
+        let direct = to_blocked_io(&t, 4).unwrap();
+        assert_eq!(via_nhwc, direct);
+    }
+
+    #[test]
+    fn pencil_contiguity() {
+        // Channel pencils must be contiguous: elements (c..c+cb, y, x).
+        let t = Tensor::iota(&[8, 2, 2]);
+        let b = to_blocked_io(&t, 4).unwrap();
+        let d = b.data();
+        // first pencil = channels 0..4 at (0,0) = values {0, 4, 8, 12}
+        assert_eq!(&d[0..4], &[0.0, 4.0, 8.0, 12.0]);
+    }
+
+    #[test]
+    fn rejects_bad_pencil() {
+        let t = Tensor::zeros(&[6, 2, 2]);
+        assert!(to_blocked_io(&t, 4).is_err());
+        assert!(to_blocked_io(&t, 0).is_err());
+    }
+}

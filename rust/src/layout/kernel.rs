@@ -1,0 +1,142 @@
+//! Kernel-weight layout conversions (Figure 3 right).
+//!
+//! Logical weights are `[C_o][C_i][H_f][W_f]` (Caffe order). The paper's
+//! layout is `[C_o/C_ob][C_i/C_ib][H_f][W_f][C_ib][C_ob]`: blocked output
+//! channel fastest (it feeds the FMA vector), then the cache-blocked input
+//! channel, kernel column, kernel row, and the block loops outermost.
+//! This is the one-time repack a trained network pays for backward
+//! compatibility (§4.3).
+
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Linear index of logical weight `(o, i, n, m)` (output channel, input
+/// channel, kernel row, kernel col) in the blocked kernel layout.
+#[inline]
+pub fn blocked_kernel_index(
+    o: usize,
+    i: usize,
+    n: usize,
+    m: usize,
+    c_i: usize,
+    h_f: usize,
+    w_f: usize,
+    c_ib: usize,
+    c_ob: usize,
+) -> usize {
+    let _ = c_i;
+    let ob = o / c_ob;
+    let oo = o % c_ob;
+    let ib = i / c_ib;
+    let ii = i % c_ib;
+    ((((ob * (c_i / c_ib) + ib) * h_f + n) * w_f + m) * c_ib + ii) * c_ob + oo
+}
+
+/// Element count of the blocked kernel layout (equals the unpacked count).
+pub fn kernel_layout_len(c_o: usize, c_i: usize, h_f: usize, w_f: usize) -> usize {
+    c_o * c_i * h_f * w_f
+}
+
+/// `[C_o][C_i][H_f][W_f]` -> `[C_o/C_ob][C_i/C_ib][H_f][W_f][C_ib][C_ob]`.
+pub fn to_blocked_kernel(k: &Tensor, c_ob: usize, c_ib: usize) -> Result<Tensor> {
+    let &[c_o, c_i, h_f, w_f] = k.shape() else {
+        return Err(Error::Layout(format!(
+            "expected [C_o][C_i][H_f][W_f], got {:?}",
+            k.shape()
+        )));
+    };
+    if c_ob == 0 || c_o % c_ob != 0 {
+        return Err(Error::Layout(format!("c_ob={c_ob} must divide C_o={c_o}")));
+    }
+    if c_ib == 0 || c_i % c_ib != 0 {
+        return Err(Error::Layout(format!("c_ib={c_ib} must divide C_i={c_i}")));
+    }
+    let src = k.data();
+    let mut out = vec![0.0f32; c_o * c_i * h_f * w_f];
+    for o in 0..c_o {
+        for i in 0..c_i {
+            for n in 0..h_f {
+                for m in 0..w_f {
+                    let d = blocked_kernel_index(o, i, n, m, c_i, h_f, w_f, c_ib, c_ob);
+                    out[d] = src[((o * c_i + i) * h_f + n) * w_f + m];
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[c_o / c_ob, c_i / c_ib, h_f, w_f, c_ib, c_ob], out)
+}
+
+/// Inverse of [`to_blocked_kernel`].
+pub fn from_blocked_kernel(k: &Tensor) -> Result<Tensor> {
+    let &[nob, nib, h_f, w_f, c_ib, c_ob] = k.shape() else {
+        return Err(Error::Layout(format!(
+            "expected 6-d blocked kernel, got {:?}",
+            k.shape()
+        )));
+    };
+    let c_o = nob * c_ob;
+    let c_i = nib * c_ib;
+    let src = k.data();
+    let mut out = vec![0.0f32; c_o * c_i * h_f * w_f];
+    for o in 0..c_o {
+        for i in 0..c_i {
+            for n in 0..h_f {
+                for m in 0..w_f {
+                    let s = blocked_kernel_index(o, i, n, m, c_i, h_f, w_f, c_ib, c_ob);
+                    out[((o * c_i + i) * h_f + n) * w_f + m] = src[s];
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[c_o, c_i, h_f, w_f], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let k = Tensor::random(&[16, 6, 3, 3], 9);
+        for &(cob, cib) in &[(4, 2), (8, 3), (16, 6), (4, 1), (1, 1)] {
+            let b = to_blocked_kernel(&k, cob, cib).unwrap();
+            assert_eq!(b.len(), k.len(), "zero overhead");
+            assert_eq!(from_blocked_kernel(&b).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn index_agrees_with_converter() {
+        let k = Tensor::iota(&[8, 4, 2, 3]);
+        let b = to_blocked_kernel(&k, 4, 2).unwrap();
+        for o in 0..8 {
+            for i in 0..4 {
+                for n in 0..2 {
+                    for m in 0..3 {
+                        let idx = blocked_kernel_index(o, i, n, m, 4, 2, 3, 2, 4);
+                        assert_eq!(b.data()[idx], k.at(&[o, i, n, m]));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn c_ob_is_fastest_dimension() {
+        // Weights for consecutive output channels (same i,n,m) must be
+        // adjacent — that is what the FMA broadcast-multiply consumes.
+        let k = Tensor::iota(&[8, 2, 1, 1]);
+        let b = to_blocked_kernel(&k, 4, 2).unwrap();
+        let d = b.data();
+        // o=0..4, i=0, n=0, m=0 -> logical values k[o][0][0][0] = o*2
+        assert_eq!(&d[0..4], &[0.0, 2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn rejects_non_divisible() {
+        let k = Tensor::zeros(&[6, 4, 3, 3]);
+        assert!(to_blocked_kernel(&k, 4, 2).is_err());
+        assert!(to_blocked_kernel(&k, 3, 3).is_err());
+        assert!(to_blocked_kernel(&k, 0, 1).is_err());
+    }
+}

@@ -1,0 +1,71 @@
+//! The paper's convolution-friendly data layouts (§4, Figure 3) and
+//! conversions between them and the conventional layouts.
+//!
+//! * **Input/Output layout** (Fig. 3 left): the `C x H x W` feature map is
+//!   stored as `[C/C_b][H][W][C_b]` — sequential blocks of `H x W x C_b`
+//!   in which a *pencil* of `C_b` channels is the fastest dimension,
+//!   followed by columns and rows. Input and output share this layout so
+//!   layers chain with **zero repacking**.
+//! * **Kernel layout** (Fig. 3 right): `C_o x C_i x H_f x W_f` weights are
+//!   stored as `[C_o/C_ob][C_i/C_ib][H_f][W_f][C_ib][C_ob]` with the
+//!   blocked output channel fastest.
+//!
+//! Both layouts are pure permutations: they occupy exactly the same number
+//! of bytes as the unpacked tensors (the paper's zero-memory-overhead
+//! claim); `io_layout_len` / `kernel_layout_len` make that auditable.
+
+mod io;
+mod kernel;
+
+pub use io::{
+    blocked_io_index, from_blocked_io, io_layout_len, nchw_to_nhwc, nhwc_to_nchw, to_blocked_io,
+    to_blocked_io_nhwc,
+};
+pub use kernel::{
+    blocked_kernel_index, from_blocked_kernel, kernel_layout_len, to_blocked_kernel,
+};
+
+/// Identifies the memory layout of a feature-map tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoLayout {
+    /// `[C][H][W]` — Caffe/paper "original input" layout.
+    Nchw,
+    /// `[H][W][C]`.
+    Nhwc,
+    /// `[C/c_b][H][W][c_b]` — the paper's blocked layout with pencil `c_b`.
+    Blocked { c_b: usize },
+}
+
+impl IoLayout {
+    /// Element count for a `C x H x W` map in this layout (always equal:
+    /// the layouts are permutations — asserted in tests).
+    pub fn len(&self, c: usize, h: usize, w: usize) -> usize {
+        match self {
+            IoLayout::Nchw | IoLayout::Nhwc => c * h * w,
+            IoLayout::Blocked { c_b } => {
+                assert_eq!(c % c_b, 0, "pencil {c_b} must divide C={c}");
+                (c / c_b) * h * w * c_b
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layouts_are_zero_overhead() {
+        for &(c, h, w, cb) in &[(32, 7, 7, 8), (96, 55, 55, 16), (3, 9, 9, 3)] {
+            let base = IoLayout::Nchw.len(c, h, w);
+            assert_eq!(IoLayout::Nhwc.len(c, h, w), base);
+            assert_eq!(IoLayout::Blocked { c_b: cb }.len(c, h, w), base);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn blocked_requires_divisibility() {
+        IoLayout::Blocked { c_b: 16 }.len(24, 4, 4);
+    }
+}

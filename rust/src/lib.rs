@@ -1,0 +1,58 @@
+//! # dconv — High Performance Zero-Memory Overhead Direct Convolutions
+//!
+//! Full-system reproduction of Zhang, Franchetti & Low (ICML 2018).
+//!
+//! The crate is organized in three tiers:
+//!
+//! 1. **Kernel substrates** — native-Rust implementations of every
+//!    convolution algorithm the paper evaluates:
+//!    [`conv`] (the paper's direct convolution, Algorithms 1–3),
+//!    [`gemm`] (Goto-algorithm SGEMM), [`lowering`] (im2col / MEC),
+//!    [`fftconv`] and [`winograd`] (the NNPACK stand-ins), together
+//!    with the [`tensor`] and [`layout`] foundations (the paper's §4
+//!    convolution-friendly layouts).
+//! 2. **Evaluation substrates** — [`arch`] machine descriptors for the
+//!    paper's Intel Haswell / AMD Piledriver / ARM Cortex-A57 testbed
+//!    (Table 1), the [`sim`] analytical + cache-trace performance
+//!    simulator that regenerates Figures 1/4/5, and [`nets`] (all conv
+//!    layers of AlexNet, GoogLeNet and VGG-16).
+//! 3. **Serving stack** — [`runtime`] (PJRT artifact loading/execution
+//!    for the JAX/Pallas AOT compile path) and [`coordinator`]
+//!    (request router, dynamic batcher, worker pool) with [`metrics`].
+//!
+//! Support modules: [`bench_harness`] (criterion-lite), [`json`]
+//! (manifest/results I/O), [`cli`] (argument parsing).
+
+pub mod arch;
+pub mod bench_harness;
+pub mod cli;
+pub mod conv;
+pub mod coordinator;
+pub mod fftconv;
+pub mod gemm;
+pub mod json;
+pub mod layout;
+pub mod lowering;
+pub mod metrics;
+pub mod nets;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod winograd;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    #[error("layout error: {0}")]
+    Layout(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("parse error: {0}")]
+    Parse(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,165 @@
+//! Caffe-style `im2col` lowering + SGEMM convolution.
+
+use crate::conv::ConvShape;
+use crate::gemm::{sgemm, sgemm_threaded};
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Lower `[C_i][H_i][W_i]` into the `(C_i*H_f*W_f) x (H_o*W_o)` matrix.
+/// Row `(i*H_f + n)*W_f + m`, column `l*W_o + k` holds
+/// `I[i][l*s + n - pad][k*s + m - pad]` (zero outside the image).
+pub fn im2col(input: &Tensor, shape: &ConvShape) -> Tensor {
+    let (h_o, w_o) = (shape.h_o(), shape.w_o());
+    let (c_i, h_i, w_i) = (shape.c_i, shape.h_i, shape.w_i);
+    let (h_f, w_f) = (shape.h_f, shape.w_f);
+    let (s, p) = (shape.stride, shape.pad as isize);
+    let src = input.data();
+    let mut out = Tensor::zeros(&[c_i * h_f * w_f, h_o * w_o]);
+    let dst = out.data_mut();
+    let cols = h_o * w_o;
+    for i in 0..c_i {
+        for n in 0..h_f {
+            for m in 0..w_f {
+                let row = (i * h_f + n) * w_f + m;
+                let drow = &mut dst[row * cols..][..cols];
+                for l in 0..h_o {
+                    let iy = (l * s + n) as isize - p;
+                    if iy < 0 || iy >= h_i as isize {
+                        continue; // stays zero
+                    }
+                    let srow = &src[(i * h_i + iy as usize) * w_i..][..w_i];
+                    for k in 0..w_o {
+                        let ix = (k * s + m) as isize - p;
+                        if ix < 0 || ix >= w_i as isize {
+                            continue;
+                        }
+                        drow[l * w_o + k] = srow[ix as usize];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Extra bytes `im2col` materializes for a layer.
+pub fn im2col_extra_bytes(shape: &ConvShape) -> u64 {
+    shape.im2col_bytes()
+}
+
+/// Convolution via `im2col` + SGEMM: the kernel tensor reshapes for free
+/// to `C_o x (C_i*H_f*W_f)`, the output to `C_o x (H_o*W_o)`.
+pub fn conv_im2col(input: &Tensor, kernel: &Tensor, shape: &ConvShape) -> Result<Tensor> {
+    conv_im2col_threaded(input, kernel, shape, 1)
+}
+
+/// Threaded variant (threads passed to the SGEMM; the lowering itself is
+/// single-threaded, exactly like Caffe's).
+pub fn conv_im2col_threaded(
+    input: &Tensor,
+    kernel: &Tensor,
+    shape: &ConvShape,
+    threads: usize,
+) -> Result<Tensor> {
+    shape.validate()?;
+    crate::conv::naive::check_shapes(input, kernel, shape)?;
+    let (h_o, w_o) = (shape.h_o(), shape.w_o());
+    let lowered = im2col(input, shape);
+    let m = shape.c_o;
+    let k = shape.c_i * shape.h_f * shape.w_f;
+    let n = h_o * w_o;
+    let mut out = Tensor::zeros(&[shape.c_o, h_o, w_o]);
+    sgemm_threaded(
+        m,
+        n,
+        k,
+        kernel.data(),
+        k,
+        lowered.data(),
+        n,
+        out.data_mut(),
+        n,
+        threads,
+    );
+    Ok(out)
+}
+
+/// The "GEMM only" upper bound of Figure 1: run the same SGEMM on a
+/// pre-lowered matrix (packing cost excluded). Returns (output, gemm fn).
+pub fn conv_gemm_only(
+    lowered: &Tensor,
+    kernel: &Tensor,
+    shape: &ConvShape,
+    threads: usize,
+) -> Tensor {
+    let (h_o, w_o) = (shape.h_o(), shape.w_o());
+    let m = shape.c_o;
+    let k = shape.c_i * shape.h_f * shape.w_f;
+    let n = h_o * w_o;
+    let mut out = Tensor::zeros(&[shape.c_o, h_o, w_o]);
+    if threads > 1 {
+        sgemm_threaded(m, n, k, kernel.data(), k, lowered.data(), n, out.data_mut(), n, threads);
+    } else {
+        sgemm(m, n, k, kernel.data(), k, lowered.data(), n, out.data_mut(), n);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conv_naive;
+
+    fn check(s: &ConvShape, seed: u64) {
+        let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], seed);
+        let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], seed + 1);
+        let want = conv_naive(&input, &kernel, s).unwrap();
+        let got = conv_im2col(&input, &kernel, s).unwrap();
+        assert!(
+            got.allclose(&want, 1e-4, 1e-5),
+            "mismatch {:?}: {}",
+            s,
+            got.max_abs_diff(&want)
+        );
+        let got4 = conv_im2col_threaded(&input, &kernel, s, 4).unwrap();
+        assert!(got4.allclose(&want, 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn matches_naive() {
+        check(&ConvShape::new(3, 8, 8, 4, 3, 3, 1, 0), 50);
+        check(&ConvShape::new(2, 9, 7, 5, 3, 3, 1, 1), 51);
+        check(&ConvShape::new(3, 23, 23, 8, 11, 11, 4, 0), 52);
+        check(&ConvShape::new(16, 7, 7, 8, 1, 1, 1, 0), 53);
+    }
+
+    #[test]
+    fn lowered_matrix_shape_and_duplication() {
+        let s = ConvShape::new(1, 4, 4, 1, 3, 3, 1, 0);
+        let input = Tensor::iota(&[1, 4, 4]);
+        let low = im2col(&input, &s);
+        assert_eq!(low.shape(), &[9, 4]);
+        // center element 5 appears in multiple patches (duplication)
+        let count = low.data().iter().filter(|&&v| v == 5.0).count();
+        assert!(count >= 4, "overlap should duplicate interior elements");
+    }
+
+    #[test]
+    fn zero_padding_regions_are_zero() {
+        let s = ConvShape::new(1, 3, 3, 1, 3, 3, 1, 1);
+        let input = Tensor::full(&[1, 3, 3], 1.0);
+        let low = im2col(&input, &s);
+        // row (n=0,m=0), col (l=0,k=0) reads I[-1][-1] -> 0
+        assert_eq!(low.at(&[0, 0]), 0.0);
+        // center tap, any output is 1
+        assert_eq!(low.at(&[4, 4]), 1.0);
+    }
+
+    #[test]
+    fn extra_bytes_quadratic_claim() {
+        // §2.2: im2col memory grows ~H_f*W_f/s^2 times the input.
+        let s = ConvShape::new(64, 56, 56, 64, 3, 3, 1, 1);
+        let ratio = im2col_extra_bytes(&s) as f64 / s.input_bytes() as f64;
+        assert!(ratio > 8.5 && ratio < 9.5, "ratio={ratio}");
+    }
+}

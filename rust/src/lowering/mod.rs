@@ -1,0 +1,20 @@
+//! Lowering-based convolution — the approaches the paper compares against
+//! (§2.2).
+//!
+//! * [`im2col`] — Caffe's lowering: copy the `C_i x H_i x W_i` image into
+//!   a `(H_f*W_f*C_i) x (H_o*W_o)` matrix (duplicating overlapped
+//!   elements), then one SGEMM. Memory overhead ≈ `H_f*W_f / s^2` times
+//!   the input.
+//! * [`mec`] — Cho & Brand (2017) memory-efficient convolution: lower to
+//!   an `[W_o][H_i][W_f*C_i]` tensor (only column overlap duplicated,
+//!   ~`H_f`-fold smaller than im2col) at the price of `H_o` smaller GEMM
+//!   calls over strided views.
+//!
+//! Both report their exact extra bytes so the zero-overhead comparison
+//! (Figure 1 / EXPERIMENTS.md memory table) is auditable.
+
+mod im2col;
+mod mec;
+
+pub use im2col::{conv_gemm_only, conv_im2col, conv_im2col_threaded, im2col, im2col_extra_bytes};
+pub use mec::{conv_mec, mec_extra_bytes};

@@ -1,0 +1,237 @@
+//! `dconv` — CLI for the direct-convolution reproduction.
+//!
+//! Subcommands:
+//!   machines                    print Table 1 + derived model parameters
+//!   nets [--net NAME]           list benchmark network layers
+//!   layouts                     demonstrate the §4 layouts (zero overhead)
+//!   simulate [--net N] [--arch A] [--threads P]
+//!                               simulated per-layer comparison (Fig 4 rows)
+//!   run-layer [--layer NAME] [--threads P]
+//!                               host-measured single layer, all algorithms
+//!   serve [--dir artifacts] [--requests N] [--clients C]
+//!                               start the PJRT serving stack and load-test it
+//!   verify [--dir artifacts]    check every artifact against its golden
+
+use dconv::arch::{self, render_table1, Machine};
+use dconv::cli::Args;
+use dconv::conv::{conv_direct, conv_naive, select_params};
+use dconv::coordinator::{Coordinator, CoordinatorConfig};
+use dconv::layout::{io_layout_len, kernel_layout_len};
+use dconv::lowering::conv_im2col;
+use dconv::metrics::{gflops, time_it, Table};
+use dconv::nets;
+use dconv::runtime::{verify_golden, Engine};
+use dconv::sim::{estimate, Algo};
+use dconv::tensor::Tensor;
+
+fn main() {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "machines" => machines(),
+        "nets" => nets_cmd(&args),
+        "layouts" => layouts(),
+        "simulate" => simulate(&args),
+        "run-layer" => run_layer(&args),
+        "serve" => serve(&args),
+        "verify" => verify(&args),
+        _ => help(),
+    }
+}
+
+fn help() {
+    println!(
+        "dconv — High Performance Zero-Memory Overhead Direct Convolutions (ICML 2018)\n\n\
+         usage: dconv <command> [options]\n\n\
+         commands:\n\
+           machines    Table 1 machines + derived model parameters\n\
+           nets        list benchmark layers      [--net alexnet|googlenet|vgg16]\n\
+           layouts     demonstrate the paper's data layouts\n\
+           simulate    simulated Fig-4 comparison [--net N --arch intel|amd|arm --threads P]\n\
+           run-layer   measure one layer on this host [--layer alexnet/conv3 --threads P]\n\
+           serve       start the PJRT serving stack [--dir artifacts --requests N --clients C]\n\
+           verify      verify artifacts against goldens [--dir artifacts]"
+    );
+}
+
+fn machines() {
+    println!("{}", render_table1());
+    let mut t = Table::new(&["machine", "E_min (eq.1)", "E_max (eq.2)", "roofline FLOP/byte"]);
+    for m in arch::table1() {
+        t.row(vec![
+            m.name.into(),
+            m.min_independent_outputs().to_string(),
+            m.max_register_outputs().to_string(),
+            format!("{:.1}", m.roofline_intensity(m.cores)),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+}
+
+fn nets_cmd(args: &Args) {
+    let which = args.get_or("net", "all");
+    let layers = if which == "all" { nets::all_layers() } else {
+        nets::by_name(which).unwrap_or_else(|| {
+            eprintln!("unknown net '{which}'");
+            std::process::exit(1);
+        })
+    };
+    let mut t = Table::new(&["layer", "input", "kernel", "stride/pad", "output", "GFLOPs"]);
+    for l in layers {
+        let s = &l.shape;
+        t.row(vec![
+            format!("{}/{}", l.net, l.name),
+            format!("{}x{}x{}", s.c_i, s.h_i, s.w_i),
+            format!("{}x{}x{}x{}", s.c_o, s.c_i, s.h_f, s.w_f),
+            format!("{}/{}", s.stride, s.pad),
+            format!("{}x{}x{}", s.c_o, s.h_o(), s.w_o()),
+            format!("{:.3}", l.gflops()),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+}
+
+fn layouts() {
+    println!("The paper's §4 layouts are pure permutations (zero memory overhead):\n");
+    let (c, h, w) = (96, 55, 55);
+    println!(
+        "  input/output  [C/C_b][H][W][C_b]: {c}x{h}x{w} -> {} elements (NCHW: {})",
+        io_layout_len(c, h, w, 16),
+        c * h * w
+    );
+    let (co, ci, hf, wf) = (256, 96, 5, 5);
+    println!(
+        "  kernel [C_o/C_ob][C_i/C_ib][Hf][Wf][C_ib][C_ob]: {}x{}x{}x{} -> {} elements (OIHW: {})",
+        co, ci, hf, wf,
+        kernel_layout_len(co, ci, hf, wf),
+        co * ci * hf * wf
+    );
+    println!("\nRound-trip check on random tensors:");
+    let t = Tensor::random(&[32, 9, 9], 1);
+    let b = dconv::layout::to_blocked_io(&t, 8).unwrap();
+    let back = dconv::layout::from_blocked_io(&b).unwrap();
+    println!("  io layout: lossless = {}", back == t);
+    let k = Tensor::random(&[16, 8, 3, 3], 2);
+    let bk = dconv::layout::to_blocked_kernel(&k, 8, 4).unwrap();
+    let backk = dconv::layout::from_blocked_kernel(&bk).unwrap();
+    println!("  kernel layout: lossless = {}", backk == k);
+}
+
+fn machine_by_tag(tag: &str) -> Machine {
+    match tag {
+        "intel" | "haswell" => arch::haswell(),
+        "amd" | "piledriver" => arch::piledriver(),
+        "arm" | "a57" => arch::cortex_a57(),
+        _ => arch::haswell(),
+    }
+}
+
+fn simulate(args: &Args) {
+    let m = machine_by_tag(args.get_or("arch", "intel"));
+    let p = args.get_usize("threads", m.cores);
+    let net = args.get_or("net", "alexnet");
+    let layers = nets::by_name(net).unwrap_or_else(|| {
+        eprintln!("unknown net '{net}'");
+        std::process::exit(1);
+    });
+    println!("simulating {} on {} with {p} threads\n", net, m.name);
+    let mut t =
+        Table::new(&["layer", "direct GFLOPS", "sgemm+im2col GFLOPS", "nnpack GFLOPS", "direct rel"]);
+    for l in layers {
+        let d = estimate(&m, &l.shape, Algo::Direct, p);
+        let g = estimate(&m, &l.shape, Algo::Im2colGemm, p);
+        let f = estimate(&m, &l.shape, Algo::FftNnpack, p);
+        t.row(vec![
+            l.name.clone(),
+            format!("{:.1}", d.gflops),
+            format!("{:.1}", g.gflops),
+            format!("{:.1}", f.gflops),
+            format!("{:.2}", g.secs / d.secs),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+}
+
+fn run_layer(args: &Args) {
+    let name = args.get_or("layer", "alexnet/conv3");
+    let p = args.get_usize("threads", 1);
+    let layer = nets::all_layers()
+        .into_iter()
+        .find(|l| format!("{}/{}", l.net, l.name) == name)
+        .unwrap_or_else(|| {
+            eprintln!("unknown layer '{name}' (see `dconv nets`)");
+            std::process::exit(1);
+        });
+    let s = &layer.shape;
+    println!("running {name} ({:.2} GFLOPs) with {p} threads on this host", layer.gflops());
+    let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 1);
+    let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 2);
+    let bp = select_params(&arch::host(), s);
+
+    let (out_d, secs_d) = time_it(|| conv_direct(&input, &kernel, s, bp, p).unwrap());
+    println!("  direct       : {:.3}s = {:.2} GFLOPS (bp {:?})", secs_d, gflops(s.flops(), secs_d), bp);
+    let (out_g, secs_g) = time_it(|| conv_im2col(&input, &kernel, s).unwrap());
+    println!("  im2col+sgemm : {:.3}s = {:.2} GFLOPS", secs_g, gflops(s.flops(), secs_g));
+    if s.flops() < 500_000_000 {
+        let (out_n, secs_n) = time_it(|| conv_naive(&input, &kernel, s).unwrap());
+        println!("  naive        : {:.3}s = {:.2} GFLOPS", secs_n, gflops(s.flops(), secs_n));
+        assert!(out_d.allclose(&out_n, 1e-3, 1e-3));
+        assert!(out_g.allclose(&out_n, 1e-3, 1e-3));
+        println!("  all agree ✓");
+    } else {
+        assert!(out_d.allclose(&out_g, 1e-3, 1e-3));
+        println!("  direct & im2col agree ✓ (naive skipped: too slow)");
+    }
+}
+
+fn serve(args: &Args) {
+    let dir = args.get_or("dir", "artifacts");
+    let requests = args.get_usize("requests", 200);
+    let clients = args.get_usize("clients", 4);
+    println!("starting engine from {dir} ...");
+    let engine = Engine::start(dir).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(1);
+    });
+    let coord = Coordinator::start(engine.handle(), CoordinatorConfig::default()).unwrap();
+    println!("serving {requests} requests from {clients} client threads");
+    let (_, secs) = time_it(|| {
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let coord = coord.clone();
+                let n = requests / clients;
+                scope.spawn(move || {
+                    for i in 0..n {
+                        let x = Tensor::random(&[1, 32, 32, 3], (c * 10_000 + i) as u64);
+                        let logits =
+                            coord.submit_blocking(x.into_vec()).unwrap().wait().unwrap();
+                        assert_eq!(logits.len(), 10);
+                    }
+                });
+            }
+        });
+    });
+    let st = coord.stats();
+    println!("\nthroughput : {:.1} img/s", st.requests as f64 / secs);
+    println!("batches    : {} (mean occupancy {:.2})", st.batches, st.mean_batch_size());
+    println!("latency    : {}", st.latency.summary());
+}
+
+fn verify(args: &Args) {
+    let dir = args.get_or("dir", "artifacts");
+    let engine = Engine::start(dir).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(1);
+    });
+    let h = engine.handle();
+    for art in h.manifest().clone().all() {
+        match verify_golden(&h, art) {
+            Ok((d1, d2)) => println!("  {:<24} OK (d_sum={d1:.2e} d_sum2={d2:.2e})", art.name),
+            Err(e) => {
+                println!("  {:<24} FAIL: {e}", art.name);
+                std::process::exit(1);
+            }
+        }
+    }
+    println!("all artifacts verified ✓");
+}

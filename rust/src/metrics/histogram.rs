@@ -1,0 +1,155 @@
+//! Log-bucketed latency histogram (microsecond resolution, p50/p95/p99).
+
+/// Histogram over positive durations in seconds. Buckets are
+/// logarithmic: ~4% relative width from 1 µs to ~1000 s.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+const BUCKETS: usize = 512;
+const LOG_MIN: f64 = -6.0; // 1 µs
+const LOG_MAX: f64 = 3.0; // 1000 s
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: vec![0; BUCKETS], count: 0, sum: 0.0, min: f64::MAX, max: 0.0 }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket_of(secs: f64) -> usize {
+        let l = secs.max(1e-9).log10();
+        let frac = (l - LOG_MIN) / (LOG_MAX - LOG_MIN);
+        ((frac * BUCKETS as f64) as isize).clamp(0, BUCKETS as isize - 1) as usize
+    }
+
+    fn bucket_value(idx: usize) -> f64 {
+        let frac = (idx as f64 + 0.5) / BUCKETS as f64;
+        10f64.powf(LOG_MIN + frac * (LOG_MAX - LOG_MIN))
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        self.buckets[Self::bucket_of(secs)] += 1;
+        self.count += 1;
+        self.sum += secs;
+        self.min = self.min.min(secs);
+        self.max = self.max.max(secs);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Quantile (0..=1) estimated from bucket midpoints.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_value(i);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// One-line human summary (durations in ms).
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms max={:.3}ms",
+            self.count,
+            self.mean() * 1e3,
+            self.p50() * 1e3,
+            self.p95() * 1e3,
+            self.p99() * 1e3,
+            self.max() * 1e3
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_roughly_correct() {
+        let mut h = Histogram::new();
+        // 1..=100 ms uniformly
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        let p50 = h.p50();
+        assert!(p50 > 0.035 && p50 < 0.065, "p50={p50}");
+        let p99 = h.p99();
+        assert!(p99 > 0.080 && p99 < 0.130, "p99={p99}");
+        assert!((h.mean() - 0.0505).abs() < 1e-6);
+    }
+
+    #[test]
+    fn min_max() {
+        let mut h = Histogram::new();
+        h.record(0.002);
+        h.record(0.2);
+        assert_eq!(h.min(), 0.002);
+        assert_eq!(h.max(), 0.2);
+    }
+
+    #[test]
+    fn extreme_values_clamp() {
+        let mut h = Histogram::new();
+        h.record(1e-9);
+        h.record(1e6);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(1.0) >= 1e2);
+    }
+}

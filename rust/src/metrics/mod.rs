@@ -1,0 +1,78 @@
+//! Measurement utilities: wall-clock timers, latency histograms and
+//! GFLOPS accounting, plus markdown/CSV table rendering shared by the
+//! benches and the coordinator's stats endpoint.
+
+mod histogram;
+mod table;
+
+pub use histogram::Histogram;
+pub use table::Table;
+
+use std::time::Instant;
+
+/// Measure a closure's wall time in seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// GFLOPS given a FLOP count and seconds.
+pub fn gflops(flops: u64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return 0.0;
+    }
+    flops as f64 / secs / 1e9
+}
+
+/// Simple throughput/latency summary used by the serving example.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub total_batch_occupancy: u64,
+    pub latency: Histogram,
+}
+
+impl ServeStats {
+    pub fn record_batch(&mut self, batch_size: usize) {
+        self.batches += 1;
+        self.requests += batch_size as u64;
+        self.total_batch_occupancy += batch_size as u64;
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.total_batch_occupancy as f64 / self.batches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gflops_math() {
+        assert!((gflops(2_000_000_000, 1.0) - 2.0).abs() < 1e-12);
+        assert_eq!(gflops(100, 0.0), 0.0);
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, secs) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn serve_stats_batches() {
+        let mut s = ServeStats::default();
+        s.record_batch(4);
+        s.record_batch(2);
+        assert_eq!(s.requests, 6);
+        assert!((s.mean_batch_size() - 3.0).abs() < 1e-12);
+    }
+}

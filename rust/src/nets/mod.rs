@@ -1,0 +1,206 @@
+//! Benchmark networks — every convolution layer of AlexNet, GoogLeNet and
+//! VGG-16, the three suites the paper evaluates (§5.1 Benchmarks).
+//!
+//! Only layer *shapes* matter for performance reproduction (the paper runs
+//! synthetic data through the layers); shapes follow the standard Caffe
+//! deploy definitions.
+
+use crate::conv::ConvShape;
+
+/// One convolution layer of a benchmark network.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub net: &'static str,
+    pub name: String,
+    pub shape: ConvShape,
+}
+
+impl Layer {
+    fn new(
+        net: &'static str,
+        name: impl Into<String>,
+        c_i: usize,
+        h_i: usize,
+        c_o: usize,
+        f: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Layer {
+        Layer {
+            net,
+            name: name.into(),
+            shape: ConvShape::new(c_i, h_i, h_i, c_o, f, f, stride, pad),
+        }
+    }
+
+    /// GFLOP count of the layer (2 FLOPs per MAC).
+    pub fn gflops(&self) -> f64 {
+        self.shape.flops() as f64 / 1e9
+    }
+}
+
+/// AlexNet (Krizhevsky et al. 2012) — the five convolution layers
+/// (ungrouped, as in the NNPACK/caffe benchmark shapes the paper uses).
+pub fn alexnet() -> Vec<Layer> {
+    vec![
+        Layer::new("alexnet", "conv1", 3, 227, 96, 11, 4, 0),
+        Layer::new("alexnet", "conv2", 96, 27, 256, 5, 1, 2),
+        Layer::new("alexnet", "conv3", 256, 13, 384, 3, 1, 1),
+        Layer::new("alexnet", "conv4", 384, 13, 384, 3, 1, 1),
+        Layer::new("alexnet", "conv5", 384, 13, 256, 3, 1, 1),
+    ]
+}
+
+/// VGG-16 (Simonyan & Zisserman 2014) — thirteen 3x3/s1/p1 layers.
+pub fn vgg16() -> Vec<Layer> {
+    let cfg: [(usize, usize, usize); 13] = [
+        (3, 224, 64),
+        (64, 224, 64),
+        (64, 112, 128),
+        (128, 112, 128),
+        (128, 56, 256),
+        (256, 56, 256),
+        (256, 56, 256),
+        (256, 28, 512),
+        (512, 28, 512),
+        (512, 28, 512),
+        (512, 14, 512),
+        (512, 14, 512),
+        (512, 14, 512),
+    ];
+    cfg.iter()
+        .enumerate()
+        .map(|(i, &(c_i, h, c_o))| {
+            Layer::new("vgg16", format!("conv{}_{}", block_of(i), idx_in_block(i)), c_i, h, c_o, 3, 1, 1)
+        })
+        .collect()
+}
+
+fn block_of(i: usize) -> usize {
+    match i {
+        0..=1 => 1,
+        2..=3 => 2,
+        4..=6 => 3,
+        7..=9 => 4,
+        _ => 5,
+    }
+}
+fn idx_in_block(i: usize) -> usize {
+    match i {
+        0 | 2 | 4 | 7 | 10 => 1,
+        1 | 3 | 5 | 8 | 11 => 2,
+        _ => 3,
+    }
+}
+
+/// GoogLeNet (Szegedy et al. 2015) — stem convolutions plus all six
+/// convolutions of each of the nine inception modules (57 conv layers).
+pub fn googlenet() -> Vec<Layer> {
+    let mut layers = vec![
+        Layer::new("googlenet", "conv1/7x7_s2", 3, 224, 64, 7, 2, 3),
+        Layer::new("googlenet", "conv2/3x3_reduce", 64, 56, 64, 1, 1, 0),
+        Layer::new("googlenet", "conv2/3x3", 64, 56, 192, 3, 1, 1),
+    ];
+    // (name, H, C_in, [n1x1, n3x3red, n3x3, n5x5red, n5x5, pool_proj])
+    let inception: [(&str, usize, usize, [usize; 6]); 9] = [
+        ("3a", 28, 192, [64, 96, 128, 16, 32, 32]),
+        ("3b", 28, 256, [128, 128, 192, 32, 96, 64]),
+        ("4a", 14, 480, [192, 96, 208, 16, 48, 64]),
+        ("4b", 14, 512, [160, 112, 224, 24, 64, 64]),
+        ("4c", 14, 512, [128, 128, 256, 24, 64, 64]),
+        ("4d", 14, 512, [112, 144, 288, 32, 64, 64]),
+        ("4e", 14, 528, [256, 160, 320, 32, 128, 128]),
+        ("5a", 7, 832, [256, 160, 320, 32, 128, 128]),
+        ("5b", 7, 832, [384, 192, 384, 48, 128, 128]),
+    ];
+    for (tag, h, c_in, n) in inception {
+        layers.push(Layer::new("googlenet", format!("inception_{tag}/1x1"), c_in, h, n[0], 1, 1, 0));
+        layers.push(Layer::new("googlenet", format!("inception_{tag}/3x3_reduce"), c_in, h, n[1], 1, 1, 0));
+        layers.push(Layer::new("googlenet", format!("inception_{tag}/3x3"), n[1], h, n[2], 3, 1, 1));
+        layers.push(Layer::new("googlenet", format!("inception_{tag}/5x5_reduce"), c_in, h, n[3], 1, 1, 0));
+        layers.push(Layer::new("googlenet", format!("inception_{tag}/5x5"), n[3], h, n[4], 5, 1, 2));
+        layers.push(Layer::new("googlenet", format!("inception_{tag}/pool_proj"), c_in, h, n[5], 1, 1, 0));
+    }
+    layers
+}
+
+/// Every conv layer of the three benchmark networks.
+pub fn all_layers() -> Vec<Layer> {
+    let mut v = alexnet();
+    v.extend(googlenet());
+    v.extend(vgg16());
+    v
+}
+
+/// Look a network up by name (`alexnet`, `googlenet`, `vgg16`).
+pub fn by_name(net: &str) -> Option<Vec<Layer>> {
+    match net {
+        "alexnet" => Some(alexnet()),
+        "googlenet" => Some(googlenet()),
+        "vgg16" | "vgg" => Some(vgg16()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_output_sizes() {
+        let l = alexnet();
+        assert_eq!(l[0].shape.h_o(), 55);
+        assert_eq!(l[1].shape.h_o(), 27);
+        assert_eq!(l[2].shape.h_o(), 13);
+        assert_eq!(l[4].shape.c_o, 256);
+    }
+
+    #[test]
+    fn counts() {
+        assert_eq!(alexnet().len(), 5);
+        assert_eq!(vgg16().len(), 13);
+        assert_eq!(googlenet().len(), 3 + 9 * 6);
+        assert_eq!(all_layers().len(), 5 + 13 + 57);
+    }
+
+    #[test]
+    fn vgg_layers_all_3x3_s1_p1() {
+        for l in vgg16() {
+            assert_eq!(l.shape.h_f, 3);
+            assert_eq!(l.shape.stride, 1);
+            assert_eq!(l.shape.pad, 1);
+            assert_eq!(l.shape.h_o(), l.shape.h_i, "same-padding");
+        }
+    }
+
+    #[test]
+    fn all_shapes_valid() {
+        for l in all_layers() {
+            l.shape.validate().unwrap_or_else(|e| panic!("{}: {e}", l.name));
+            assert!(l.shape.h_o() >= 1 && l.shape.w_o() >= 1);
+        }
+    }
+
+    #[test]
+    fn all_c_o_divisible_by_8() {
+        // Paper layouts rely on power-of-two C_o blocks; the three nets
+        // all choose C_o as multiples of 8 or better.
+        for l in all_layers() {
+            assert_eq!(l.shape.c_o % 8, 0, "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn vgg_flops_dominate_alexnet() {
+        let a: f64 = alexnet().iter().map(|l| l.gflops()).sum();
+        let v: f64 = vgg16().iter().map(|l| l.gflops()).sum();
+        assert!(v > 10.0 * a, "VGG ({v:.1}) should dwarf AlexNet ({a:.1})");
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("alexnet").is_some());
+        assert!(by_name("vgg").is_some());
+        assert!(by_name("resnet").is_none());
+    }
+}

@@ -1,0 +1,193 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`).
+
+use crate::json::Json;
+use crate::{Error, Result};
+use std::path::Path;
+
+/// Golden-output record: the seeded input is regenerated at verify time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Golden {
+    pub input_seed: u64,
+    pub sum: f64,
+    pub sum2: f64,
+    pub count: usize,
+    pub sample: Vec<f64>,
+    pub tol: f64,
+}
+
+/// One loadable artifact (a whole CNN at a fixed batch, or one layer).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    /// Batch size for `kind == "cnn"` artifacts; 0 otherwise.
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    /// Direct-conv FLOPs for `kind == "layer"` artifacts; 0 otherwise.
+    pub flops: u64,
+    pub golden: Option<Golden>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub models: Vec<Artifact>,
+    pub layers: Vec<Artifact>,
+}
+
+fn parse_shape(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| Error::Parse("shape must be an array".into()))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| Error::Parse("shape element".into())))
+        .collect()
+}
+
+fn parse_golden(j: &Json) -> Result<Golden> {
+    let need = |k: &str| j.get(k).ok_or_else(|| Error::Parse(format!("golden.{k} missing")));
+    Ok(Golden {
+        input_seed: need("input_seed")?.as_f64().unwrap_or(0.0) as u64,
+        sum: need("sum")?.as_f64().unwrap_or(0.0),
+        sum2: need("sum2")?.as_f64().unwrap_or(0.0),
+        count: need("count")?.as_usize().unwrap_or(0),
+        sample: need("sample")?
+            .as_arr()
+            .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+            .unwrap_or_default(),
+        tol: need("tol")?.as_f64().unwrap_or(1e-3),
+    })
+}
+
+fn parse_artifact(j: &Json) -> Result<Artifact> {
+    let s = |k: &str| -> Result<String> {
+        Ok(j.get(k)
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| Error::Parse(format!("artifact field '{k}' missing")))?
+            .to_string())
+    };
+    Ok(Artifact {
+        name: s("name")?,
+        file: s("file")?,
+        kind: s("kind")?,
+        batch: j.get("batch").and_then(|v| v.as_usize()).unwrap_or(0),
+        input_shape: parse_shape(
+            j.get("input_shape").ok_or_else(|| Error::Parse("input_shape".into()))?,
+        )?,
+        output_shape: parse_shape(
+            j.get("output_shape").ok_or_else(|| Error::Parse("output_shape".into()))?,
+        )?,
+        flops: j.get("flops").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+        golden: match j.get("golden") {
+            Some(g) => Some(parse_golden(g)?),
+            None => None,
+        },
+    })
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let arts = |key: &str| -> Result<Vec<Artifact>> {
+            j.get(key)
+                .and_then(|v| v.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(parse_artifact)
+                .collect()
+        };
+        Ok(Manifest { models: arts("models")?, layers: arts("layers")? })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.as_ref().display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// All artifacts (models then layers).
+    pub fn all(&self) -> impl Iterator<Item = &Artifact> {
+        self.models.iter().chain(self.layers.iter())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Artifact> {
+        self.all().find(|a| a.name == name)
+    }
+
+    /// CNN batch sizes available, ascending (the coordinator pads
+    /// requests up to the next available batch).
+    pub fn cnn_batches(&self) -> Vec<usize> {
+        let mut b: Vec<usize> =
+            self.models.iter().filter(|a| a.kind == "cnn").map(|a| a.batch).collect();
+        b.sort_unstable();
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": [
+        {"name": "cnn_b2", "file": "cnn_b2.hlo.txt", "kind": "cnn", "batch": 2,
+         "input_shape": [2, 32, 32, 3], "output_shape": [2, 10],
+         "golden": {"input_seed": 1002, "sum": 1.5, "sum2": 4.25, "count": 20,
+                     "sample": [0.1, -0.2], "tol": 0.001}}
+      ],
+      "layers": [
+        {"name": "l1", "file": "l1.hlo.txt", "kind": "layer", "stride": 1, "pad": 1,
+         "input_shape": [13, 13, 64], "output_shape": [13, 13, 96], "flops": 12345}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.models.len(), 1);
+        assert_eq!(m.layers.len(), 1);
+        let c = &m.models[0];
+        assert_eq!(c.batch, 2);
+        assert_eq!(c.input_shape, vec![2, 32, 32, 3]);
+        let g = c.golden.as_ref().unwrap();
+        assert_eq!(g.input_seed, 1002);
+        assert_eq!(g.count, 20);
+        assert_eq!(g.sample.len(), 2);
+        assert_eq!(m.layers[0].flops, 12345);
+        assert!(m.layers[0].golden.is_none());
+    }
+
+    #[test]
+    fn lookup_and_batches() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.get("cnn_b2").is_some());
+        assert!(m.get("l1").is_some());
+        assert!(m.get("nope").is_none());
+        assert_eq!(m.cnn_batches(), vec![2]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{").is_err());
+        assert!(Manifest::parse(r#"{"models": [{"name": "x"}]}"#).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Exercised against the actual artifacts when they exist.
+        if let Ok(m) = Manifest::load("artifacts/manifest.json") {
+            assert!(!m.models.is_empty());
+            assert_eq!(m.cnn_batches(), vec![1, 2, 4, 8]);
+            for a in m.all() {
+                assert!(a.golden.is_some(), "{} should have a golden", a.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Performance simulator — the substitute for the paper's Intel / AMD /
+//! ARM testbed (none of which exists here; see DESIGN.md §4).
+//!
+//! Two complementary parts:
+//!
+//! * [`model`] — the *analytical* model: closed-form time estimates for
+//!   each convolution algorithm on a [`crate::arch::Machine`], following
+//!   the same methodology the paper itself uses to derive its algorithm
+//!   (Low et al. 2016): FMA throughput/latency saturation, register-tile
+//!   utilization, cache-level traffic vs bandwidth (roofline), packing
+//!   costs, and the shape-efficiency of Goto-style SGEMM. One calibration
+//!   constant per machine (`Machine::micro_eff`) is pinned to the paper's
+//!   measured HPC-SGEMM peaks; *everything else is derived*, so relative
+//!   shapes (who wins per layer, crossovers, scaling knees) are model
+//!   output, not curve fitting.
+//! * [`cachesim`] — a trace-driven set-associative LRU cache simulator;
+//!   used by tests and the ablation bench to validate the analytic
+//!   traffic estimates on down-scaled layers.
+//!
+//! [`scaling`] models multi-threaded behaviour (Figure 5): direct
+//! convolution partitions `C_o` blocks (no shape skew), BLAS partitions
+//! matrix rows/columns (shape skew + bandwidth sharing).
+
+pub mod cachesim;
+pub mod model;
+pub mod scaling;
+
+pub use cachesim::{CacheSim, Hierarchy, TraceStats};
+pub use model::{estimate, gemm_time, Algo, Estimate};
+pub use scaling::{scaling_curve, ScalePoint};

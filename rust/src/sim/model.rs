@@ -1,0 +1,512 @@
+//! Analytical time models for every convolution algorithm the paper
+//! evaluates.
+
+use crate::arch::Machine;
+use crate::conv::{params, ConvShape};
+use crate::fftconv::transform_size;
+use crate::gemm::{MR, NR};
+use crate::lowering::{im2col_extra_bytes, mec_extra_bytes};
+
+/// Convolution algorithms the simulator can estimate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// The paper's blocked direct convolution (Algorithm 3).
+    Direct,
+    /// im2col lowering followed by Goto SGEMM (Caffe + OpenBLAS/MKL).
+    Im2colGemm,
+    /// The SGEMM call alone on pre-lowered operands — Figure 1's dashed
+    /// "packing is free" upper bound.
+    GemmOnly,
+    /// Cho & Brand memory-efficient lowering (H_o strided GEMMs).
+    Mec,
+    /// NNPACK-style transform conv: best of tiled-FFT and Winograd.
+    FftNnpack,
+    /// Winograd F(2x2,3x3) alone.
+    Winograd,
+}
+
+impl Algo {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Algo::Direct => "direct",
+            Algo::Im2colGemm => "im2col+sgemm",
+            Algo::GemmOnly => "sgemm-only",
+            Algo::Mec => "mec",
+            Algo::FftNnpack => "nnpack-best",
+            Algo::Winograd => "winograd",
+        }
+    }
+}
+
+/// A simulated layer execution.
+#[derive(Clone, Debug)]
+pub struct Estimate {
+    pub algo: Algo,
+    /// End-to-end seconds (compute + packing/transform overheads).
+    pub secs: f64,
+    /// Seconds spent in the main compute kernel.
+    pub secs_compute: f64,
+    /// Seconds spent packing / lowering / transforming.
+    pub secs_overhead: f64,
+    /// Effective GFLOPS counted in *direct-convolution* FLOPs (the
+    /// paper's convention: transform methods get credit for the same
+    /// useful work, so saved multiplies show up as >1 speedups).
+    pub gflops: f64,
+    /// Fraction of machine peak (same FLOP convention).
+    pub frac_peak: f64,
+    /// Extra bytes beyond input+kernel+output (the paper's zero-overhead
+    /// metric).
+    pub extra_bytes: u64,
+}
+
+/// Estimate one layer with one algorithm and `p` threads.
+pub fn estimate(m: &Machine, shape: &ConvShape, algo: Algo, p: usize) -> Estimate {
+    let p = p.max(1);
+    let (secs_compute, secs_overhead, extra_bytes) = match algo {
+        Algo::Direct => direct_time(m, shape, p),
+        Algo::GemmOnly => {
+            let (c, _o, _b) = im2col_gemm_time(m, shape, p);
+            (c, 0.0, 0) // lowered operand assumed free & preexisting
+        }
+        Algo::Im2colGemm => im2col_gemm_time(m, shape, p),
+        Algo::Mec => mec_time(m, shape, p),
+        Algo::Winograd => winograd_time(m, shape, p),
+        Algo::FftNnpack => {
+            // NNPACK has no transform path for pointwise convolutions and
+            // falls back to its GEMM-based path there.
+            if shape.h_f == 1 && shape.w_f == 1 {
+                return estimate(m, shape, Algo::Im2colGemm, p);
+            }
+            let f = fft_tiled_time(m, shape, p);
+            if crate::winograd::winograd_applicable(shape) {
+                let w = winograd_time(m, shape, p);
+                if w.0 + w.1 < f.0 + f.1 {
+                    w
+                } else {
+                    f
+                }
+            } else {
+                f
+            }
+        }
+    };
+    let secs = secs_compute + secs_overhead;
+    let gflops = shape.flops() as f64 / secs / 1e9;
+    Estimate {
+        algo,
+        secs,
+        secs_compute,
+        secs_overhead,
+        gflops,
+        frac_peak: gflops / m.peak_gflops(p),
+        extra_bytes,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Direct convolution (Algorithm 3)
+// ---------------------------------------------------------------------------
+
+/// (compute secs, overhead secs, extra bytes). Zero overhead by design.
+fn direct_time(m: &Machine, s: &ConvShape, p: usize) -> (f64, f64, u64) {
+    let bp = params::select_params(m, s);
+    let peak = m.peak_gflops(p) * 1e9; // FLOPs/sec
+
+    // -- Register-tile saturation (paper eq. 1): a tile of E = c_ob * w
+    // independent accumulators hides FMA latency only when
+    // E >= N_vec*N_fma*L_fma; narrower (edge) tiles run proportionally
+    // slower. Edge tiles are not wasted lanes in our implementation —
+    // they simply expose fewer independent FMA chains — so the row cost
+    // is a saturation-weighted sum over full tiles plus the remainder.
+    let e_min = m.min_independent_outputs() as f64;
+    let sat_of = |w: usize| ((bp.c_ob * w) as f64 / e_min).min(1.0);
+    let w_o = s.w_o();
+    let full = w_o / bp.w_ob;
+    let rem = w_o % bp.w_ob;
+    let mut row_cost = full as f64 * bp.w_ob as f64 / sat_of(bp.w_ob);
+    if rem > 0 {
+        row_cost += rem as f64 / sat_of(rem);
+    }
+    let sat = w_o as f64 / row_cost;
+
+    // -- Vector-lane utilization: a C_o,b smaller than the vector width
+    // wastes lanes (only for degenerate channel counts).
+    let lane_util = (bp.c_ob as f64 / m.n_vec as f64).min(1.0);
+    let util_c = s.c_o as f64 / (s.c_o.div_ceil(bp.c_ob) * bp.c_ob) as f64;
+
+    // -- Load-port pressure of the inner loop: per C_i,b reduction step
+    // the kernel issues (c_ob/n_vec) vector FMAs per tile column plus
+    // (c_ob/n_vec) weight loads and w_ob broadcasts.
+    let vregs_per_col = (bp.c_ob as f64 / m.n_vec as f64).max(1.0);
+    let fma_ops = vregs_per_col * bp.w_ob as f64; // per ii
+    let loads = vregs_per_col + bp.w_ob as f64; // weights + broadcasts
+    let cyc_fma = fma_ops / m.n_fma as f64;
+    let cyc_ld = loads / m.load_ports as f64;
+    let port_eff = (cyc_fma / cyc_fma.max(cyc_ld)).min(1.0);
+
+    let eff = m.micro_eff * sat * lane_util * util_c * port_eff;
+    let t_compute = s.flops() as f64 / (peak * eff);
+
+    // -- Memory (roofline) term: compulsory traffic + re-streaming when
+    // the working set exceeds the last-level cache.
+    let llc = m.caches.last().map(|c| c.bytes).unwrap_or(0) as f64;
+    let n_ob = (s.c_o / bp.c_ob).max(1);
+    let in_passes = if (s.input_bytes() as f64) < llc * 0.5 {
+        1.0
+    } else {
+        // each output-channel block pass re-streams the input from DRAM
+        (n_ob as f64 / p as f64).max(1.0)
+    };
+    let n_ib = (s.c_i / bp.c_ib).max(1) as f64;
+    let l2 = m.caches.get(1).map(|c| c.bytes).unwrap_or(0) as f64;
+    let out_passes = if (s.output_bytes() as f64 / p as f64) < l2 { 1.0 } else { n_ib };
+    let traffic = s.input_bytes() as f64 * in_passes
+        + s.kernel_bytes() as f64
+        + s.output_bytes() as f64 * (2.0 * out_passes - 1.0);
+    let bw = m.dram_bytes_per_cycle * m.freq_ghz * 1e9;
+    let t_mem = traffic / bw;
+
+    (t_compute.max(t_mem), 0.0, 0)
+}
+
+// ---------------------------------------------------------------------------
+// Goto SGEMM and the lowering-based algorithms
+// ---------------------------------------------------------------------------
+
+/// Analytical Goto-SGEMM time for an `mm x nn x kk` product on `p`
+/// threads (public: the peak-efficiency bench uses it for HPC shapes).
+pub fn gemm_time(m: &Machine, mm: usize, nn: usize, kk: usize, p: usize) -> f64 {
+    let p = p.max(1);
+    let peak = m.peak_gflops(p) * 1e9;
+
+    // BLAS thread partitioning (§2.2): the output is split across a
+    // near-square thread grid; each thread sees an (mm/pm) x (nn/pn)
+    // problem whose edge utilization degrades as partitions shrink.
+    let (pm, pn) = thread_grid(p, mm, nn);
+    let tm = mm.div_ceil(pm);
+    let tn = nn.div_ceil(pn);
+
+    let util_m = tm as f64 / (tm.div_ceil(MR) * MR) as f64;
+    let util_n = tn as f64 / (tn.div_ceil(NR) * NR) as f64;
+    // Load-balance across the grid: threads on the short edge idle.
+    let balance = (mm * nn) as f64 / ((tm * pm) * (tn * pn)) as f64;
+
+    // L2-block amortization: the Goto algorithm streams each packed
+    // KCxNC B panel from L3 once per MC-row block of A; when the
+    // (per-thread) m extent is small relative to MC the panel cost is
+    // amortized over too few FLOPs. This is the §2.2 shape penalty —
+    // conv matrices have modest m = C_o (and thread partitioning shrinks
+    // it further) while HPC matrices have m in the thousands.
+    let mc_amort = tm as f64 / (tm as f64 + 24.0);
+
+    // Rank-k amortization: the C micro-tile is loaded+stored once per KC
+    // panel; small kk cannot amortize it.
+    let kc = 256.0;
+    let k_passes = (kk as f64 / kc).ceil();
+    let tile_ld_st = (MR * NR) as f64 / m.n_vec as f64 * 2.0 / m.load_ports as f64;
+    let tile_fma_cyc = (MR * NR) as f64 * kk.min(256) as f64 / (kk as f64).max(1.0)
+        * (kk as f64)
+        / (m.n_vec * m.n_fma) as f64;
+    let eff_k = tile_fma_cyc / (tile_fma_cyc + tile_ld_st * k_passes);
+
+    // Microkernel load pressure: MR broadcasts + NR/n_vec B loads per
+    // rank-1 update vs MR*NR/n_vec FMAs.
+    let fma_ops = (MR * NR) as f64 / m.n_vec as f64;
+    let loads = MR as f64 / 4.0 + NR as f64 / m.n_vec as f64; // brdcst amortized 4x
+    let port_eff =
+        ((fma_ops / m.n_fma as f64) / (fma_ops / m.n_fma as f64).max(loads / m.load_ports as f64))
+            .min(1.0);
+
+    let eff = m.micro_eff * util_m * util_n * balance * mc_amort * eff_k * port_eff;
+    let mut t_compute = 2.0 * (mm as f64) * (nn as f64) * (kk as f64) / (peak * eff);
+    // Parallel overhead: OpenBLAS serializes shared-B packing and
+    // barriers between KC panels; measured cost grows with threads.
+    t_compute *= 1.0 + 0.05 * (p as f64 - 1.0);
+
+    // Memory: packing traffic (A per jc-stripe, B once per KC pass) plus
+    // C re-read/re-write per KC pass.
+    let nc = 2048.0;
+    let jc_stripes = (nn as f64 / nc).ceil();
+    let pack_a_traffic = 2.0 * (mm * kk) as f64 * 4.0 * jc_stripes;
+    let pack_b_traffic = 2.0 * (kk * nn) as f64 * 4.0;
+    // C streams to DRAM once (intermediate KC-pass updates hit cache).
+    let c_traffic = 2.0 * (mm * nn) as f64 * 4.0;
+    let bw = m.dram_bytes_per_cycle * m.freq_ghz * 1e9;
+    let t_mem = (pack_a_traffic + pack_b_traffic + c_traffic) / bw;
+
+    t_compute.max(t_mem)
+}
+
+/// Factorization of `p` that preserves the output aspect ratio (what
+/// BLIS/OpenBLAS aim for): minimize |tm/tn - mm/nn| over pm*pn = p.
+fn thread_grid(p: usize, mm: usize, nn: usize) -> (usize, usize) {
+    let target = mm as f64 / nn as f64;
+    let mut best = (1, p);
+    let mut best_score = f64::MAX;
+    for pm in 1..=p {
+        if p % pm != 0 {
+            continue;
+        }
+        let pn = p / pm;
+        let (tm, tn) = (mm as f64 / pm as f64, nn as f64 / pn as f64);
+        let score = (tm / tn - target).abs();
+        if score < best_score {
+            best_score = score;
+            best = (pm, pn);
+        }
+    }
+    best
+}
+
+/// im2col + SGEMM: packing is a bandwidth-bound pass over the lowered
+/// matrix (write k*n floats, gather-read the input).
+fn im2col_gemm_time(m: &Machine, s: &ConvShape, p: usize) -> (f64, f64, u64) {
+    let mm = s.c_o;
+    let nn = s.h_o() * s.w_o();
+    let kk = s.c_i * s.h_f * s.w_f;
+    let t_gemm = gemm_time(m, mm, nn, kk, p);
+    // Packing: Caffe's im2col is a single-threaded scalar gather; per
+    // element it does index arithmetic plus a scattered load (cache/TLB
+    // unfriendly). ~6 cycles/element on wide OoO cores, ~10 on the
+    // single-load-port cores. This is the bandwidth-bound "additional,
+    // non-trivial time penalty" of §1.
+    // 1x1/stride-1 lowering is a straight copy (frameworks often skip it
+    // entirely); spatial kernels pay the scattered gather.
+    let unit = s.h_f == 1 && s.w_f == 1 && s.stride == 1 && s.pad == 0;
+    let cyc_per_elt = if unit {
+        0.5
+    } else if m.load_ports >= 2 {
+        6.0
+    } else {
+        10.0
+    };
+    let t_pack = (kk * nn) as f64 * cyc_per_elt / (m.freq_ghz * 1e9);
+    (t_gemm, t_pack, im2col_extra_bytes(s))
+}
+
+/// MEC: leaner lowering, H_o smaller GEMMs (per-call overhead ~ fixed
+/// cost of re-entering the blocked GEMM with kc-sized k panels).
+fn mec_time(m: &Machine, s: &ConvShape, p: usize) -> (f64, f64, u64) {
+    let h_o = s.h_o();
+    let mm = s.w_o();
+    let nn = s.c_o;
+    let kk = s.h_f * s.w_f * s.c_i;
+    let t_one = gemm_time(m, mm, nn, kk, p);
+    let call_overhead = 2e-6; // library call + packing ramp per GEMM
+    let t_gemm = h_o as f64 * (t_one + call_overhead);
+    // MEC's lowering is contiguous memcpy (unit-stride pencils): ~1.5
+    // cycles/element vs im2col's scattered ~6-10.
+    let lowered_elts = (s.w_o() * (s.h_i + 2 * s.pad) * s.w_f * s.c_i) as f64;
+    let t_pack = lowered_elts * 1.5 / (m.freq_ghz * 1e9);
+    (t_gemm, t_pack, mec_extra_bytes(s))
+}
+
+// ---------------------------------------------------------------------------
+// Transform-domain algorithms (NNPACK stand-ins)
+// ---------------------------------------------------------------------------
+
+/// Tiled FFT convolution (NNPACK fft-16x16 style): 16x16 complex tiles,
+/// overlap H_f-1. Kernel spectra precomputed (NNPACK inference mode).
+fn fft_tiled_time(m: &Machine, s: &ConvShape, p: usize) -> (f64, f64, u64) {
+    if s.stride != 1 || s.h_f.max(s.w_f) > 8 {
+        // NNPACK transform paths require stride 1 and smallish kernels;
+        // fall back to untiled FFT over the whole image.
+        return fft_full_time(m, s, p);
+    }
+    let t: f64 = 16.0;
+    let step = t - (s.h_f as f64 - 1.0);
+    let tiles = (s.h_o() as f64 / step).ceil() * (s.w_o() as f64 / step).ceil();
+    // 2-D complex FFT of an NxN tile ~ 10 N^2 log2(N) real FLOPs.
+    let fft_flops = 10.0 * t * t * (t).log2();
+    let fwd = tiles * s.c_i as f64 * fft_flops;
+    let inv = tiles * s.c_o as f64 * fft_flops;
+    // complex pointwise multiply-accumulate: 8 FLOPs/point.
+    let cgemm = tiles * (s.c_i * s.c_o) as f64 * t * t * 8.0;
+    let peak = m.peak_gflops(p) * 1e9;
+    // Transforms are shuffle-heavy (≈35% of peak); the accumulation stage
+    // is complex-GEMM-like — same tuple load pressure as Winograd.
+    let tuple_factor = if m.load_ports >= 2 { 0.85 } else { 0.40 };
+    let t_transform = (fwd + inv) / (peak * 0.35);
+    let t_cgemm = cgemm / (peak * m.micro_eff * tuple_factor);
+    // Materialized spectra: inflated input/output coefficient tensors
+    // (complex, tile overlap) written and re-read, plus kernel spectra
+    // streamed once per image.
+    let inflate = 2.0 * (t * t) / (step * step); // complex + overlap
+    let spectra_bytes = (s.c_i * s.c_o) as f64 * t * t * 8.0;
+    let bw = m.dram_bytes_per_cycle * m.freq_ghz * 1e9;
+    let t_mem = (spectra_bytes
+        + 2.0 * inflate * s.input_bytes() as f64
+        + 2.0 * inflate * s.output_bytes() as f64)
+        / bw;
+    let extra = (s.c_i * s.c_o) as u64 * (t * t) as u64 * 8;
+    (t_cgemm + t_mem + t_transform, 0.0, extra)
+}
+
+/// Whole-image FFT (§2.1's memory blow-up case; also the stride>1 path).
+fn fft_full_time(m: &Machine, s: &ConvShape, p: usize) -> (f64, f64, u64) {
+    let n = transform_size(s) as f64;
+    let fft_flops = 10.0 * n * n * n.log2();
+    let fwd = s.c_i as f64 * fft_flops;
+    let inv = s.c_o as f64 * fft_flops;
+    let cgemm = (s.c_i * s.c_o) as f64 * n * n * 8.0;
+    let peak = m.peak_gflops(p) * 1e9;
+    let tuple_factor = if m.load_ports >= 2 { 0.85 } else { 0.40 };
+    let t_transform = (fwd + inv) / (peak * 0.35);
+    let t_cgemm = cgemm / (peak * m.micro_eff * tuple_factor);
+    let spectra_bytes = (s.c_i * s.c_o) as f64 * n * n * 8.0;
+    let bw = m.dram_bytes_per_cycle * m.freq_ghz * 1e9;
+    let t_mem = spectra_bytes / bw;
+    (t_cgemm + t_mem + t_transform, 0.0, spectra_bytes as u64)
+}
+
+/// Winograd F(2x2,3x3): 16 multiplies per 2x2 tile per (ci,co) pair
+/// (2.25x fewer than direct), GEMM-like accumulation, transform overhead
+/// on inputs and outputs.
+fn winograd_time(m: &Machine, s: &ConvShape, p: usize) -> (f64, f64, u64) {
+    if !crate::winograd::winograd_applicable(s) {
+        return fft_full_time(m, s, p);
+    }
+    let tiles = (s.h_o() as f64 / 2.0).ceil() * (s.w_o() as f64 / 2.0).ceil();
+    let mults = tiles * (s.c_i * s.c_o) as f64 * 16.0 * 2.0; // fma = 2 flops
+    let transform = tiles * (s.c_i as f64 * 32.0 + s.c_o as f64 * 24.0) * 2.0;
+    let peak = m.peak_gflops(p) * 1e9;
+    // The element-wise stage batches into per-coefficient GEMMs of shape
+    // (tiles x C_o x C_i). Tuple arithmetic roughly doubles the loads per
+    // FMA; with two load ports that costs ~15%, with one it halves the
+    // sustainable rate (this is why NNPACK's transform paths sink on the
+    // single-load-port ARM/AMD cores — §5.2).
+    let tuple_factor = if m.load_ports >= 2 { 0.85 } else { 0.40 };
+    let t_mult = mults / (peak * m.micro_eff * tuple_factor);
+    let t_transform = transform / (peak * 0.40);
+    // Materialized V (input transforms) and M (products) tensors are 4x
+    // the feature maps (16 coefficients per 2x2 tile) and each is written
+    // then re-read — a bandwidth bill direct convolution never pays.
+    let u_bytes = 16.0 * (s.c_i * s.c_o) as f64 * 4.0;
+    let bw = m.dram_bytes_per_cycle * m.freq_ghz * 1e9;
+    let t_mem = (u_bytes
+        + 2.0 * 4.0 * s.input_bytes() as f64
+        + 2.0 * 4.0 * s.output_bytes() as f64)
+        / bw;
+    (t_mult + t_mem + t_transform, 0.0, crate::winograd::winograd_extra_bytes(s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{cortex_a57, haswell, piledriver};
+    use crate::nets;
+
+    #[test]
+    fn hpc_gemm_matches_paper_peaks() {
+        // §6: SGEMM on HPC (square, large) matrices attains 89/54/92% of
+        // peak on Intel/AMD/ARM. The model should land within ~4 points.
+        for (m, want) in [(haswell(), 0.89), (piledriver(), 0.54), (cortex_a57(), 0.92)] {
+            let t = gemm_time(&m, 2000, 2000, 2000, 1);
+            let frac = 2.0 * 2000f64.powi(3) / t / 1e9 / m.peak_gflops(1);
+            assert!(
+                (frac - want).abs() < 0.05,
+                "{}: model {frac:.3} vs paper {want}",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn direct_matches_paper_peaks() {
+        // §6: direct convolution attains 87.5 / 58.2 / 88.9% of peak.
+        // Check the FLOP-weighted average over the AlexNet conv layers
+        // the paper plots (tolerance: these are model outputs).
+        for (m, want) in [(haswell(), 0.875), (piledriver(), 0.582), (cortex_a57(), 0.889)]
+        {
+            let layers = nets::alexnet();
+            let (mut num, mut den) = (0.0, 0.0);
+            for l in &layers[1..] {
+                // conv1 (C_i=3) is atypically shallow; the paper's peak
+                // numbers come from the bulk layers.
+                let e = estimate(&m, &l.shape, Algo::Direct, 1);
+                num += e.frac_peak * l.shape.flops() as f64;
+                den += l.shape.flops() as f64;
+            }
+            let avg = num / den;
+            assert!(
+                (avg - want).abs() < 0.08,
+                "{}: direct model {avg:.3} vs paper {want}",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn figure1_shape_on_piledriver() {
+        // Fig 1 (AMD, 4 threads, AlexNet): im2col+SGEMM < 0.8 x SGEMM-only;
+        // direct > 1.0 x SGEMM-only on every layer.
+        let m = piledriver();
+        for l in nets::alexnet() {
+            let gemm_only = estimate(&m, &l.shape, Algo::GemmOnly, 4);
+            let lowered = estimate(&m, &l.shape, Algo::Im2colGemm, 4);
+            let direct = estimate(&m, &l.shape, Algo::Direct, 4);
+            let rel_lowered = gemm_only.secs / lowered.secs;
+            let rel_direct = gemm_only.secs / direct.secs;
+            assert!(
+                rel_lowered < 0.85,
+                "{}: packing should cost >15% (got {rel_lowered:.2})",
+                l.name
+            );
+            assert!(
+                rel_direct > 1.0,
+                "{}: direct should beat even free-packing SGEMM (got {rel_direct:.2})",
+                l.name
+            );
+        }
+    }
+
+    #[test]
+    fn fft_loses_on_arm_wins_sometimes_on_intel() {
+        // Fig 4: NNPACK beats SGEMM+im2col only on large-image Intel
+        // layers; on ARM direct wins everywhere and FFT is poor.
+        let arm = cortex_a57();
+        for l in nets::vgg16() {
+            let d = estimate(&arm, &l.shape, Algo::Direct, arm.cores);
+            let f = estimate(&arm, &l.shape, Algo::FftNnpack, arm.cores);
+            assert!(d.secs < f.secs, "{}: direct should beat FFT on ARM", l.name);
+        }
+        let intel = haswell();
+        let big = &nets::vgg16()[1]; // 64->64 @ 224x224: large dataset
+        let f = estimate(&intel, &big.shape, Algo::FftNnpack, 4);
+        let g = estimate(&intel, &big.shape, Algo::Im2colGemm, 4);
+        assert!(
+            f.secs < g.secs,
+            "large VGG layer: transform conv should beat im2col+SGEMM on Intel"
+        );
+    }
+
+    #[test]
+    fn direct_zero_extra_memory_baselines_not() {
+        let m = haswell();
+        let s = &nets::alexnet()[2].shape;
+        assert_eq!(estimate(&m, s, Algo::Direct, 1).extra_bytes, 0);
+        assert!(estimate(&m, s, Algo::Im2colGemm, 1).extra_bytes > 0);
+        let mec = estimate(&m, s, Algo::Mec, 1).extra_bytes;
+        let im2col = estimate(&m, s, Algo::Im2colGemm, 1).extra_bytes;
+        assert!(mec < im2col, "MEC must be leaner than im2col");
+    }
+
+    #[test]
+    fn more_threads_never_slower_direct() {
+        let m = haswell();
+        for l in nets::alexnet() {
+            let t1 = estimate(&m, &l.shape, Algo::Direct, 1).secs;
+            let t4 = estimate(&m, &l.shape, Algo::Direct, 4).secs;
+            assert!(t4 < t1, "{}: 4 threads should be faster", l.name);
+        }
+    }
+
+    #[test]
+    fn gflops_accounting_consistent() {
+        let m = haswell();
+        let s = &nets::alexnet()[2].shape;
+        let e = estimate(&m, s, Algo::Direct, 1);
+        assert!((e.gflops - s.flops() as f64 / e.secs / 1e9).abs() < 1e-9);
+        assert!(e.frac_peak > 0.0 && e.frac_peak <= 1.0);
+    }
+}

@@ -1,0 +1,229 @@
+//! Dense row-major `f32` tensors.
+//!
+//! Deliberately minimal: every kernel in this crate works on contiguous
+//! row-major buffers (the paper's layouts are explicit re-orderings of
+//! contiguous memory, so strided views are never needed on the hot path).
+
+mod rng;
+pub use rng::XorShiftRng;
+
+use crate::{Error, Result};
+
+/// A dense, contiguous, row-major `f32` tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor with the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Tensor filled with a constant.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    /// Build from an existing buffer; `data.len()` must equal the shape volume.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            return Err(Error::Shape(format!(
+                "buffer of {} elements cannot have shape {:?} ({} elements)",
+                data.len(),
+                shape,
+                n
+            )));
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    /// Deterministic pseudo-random tensor in `[-1, 1)` (xorshift; seeded).
+    pub fn random(shape: &[usize], seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut rng = XorShiftRng::new(seed);
+        let data = (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Sequential values `0, 1, 2, ...` — handy for layout round-trip tests.
+    pub fn iota(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(|i| i as f32).collect() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Total number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of equal volume.
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {:?} -> {:?}",
+                self.shape, shape
+            )));
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Row-major linear index of a multi-dimensional coordinate.
+    pub fn index(&self, coord: &[usize]) -> usize {
+        debug_assert_eq!(coord.len(), self.shape.len());
+        let mut idx = 0;
+        for (c, d) in coord.iter().zip(self.shape.iter()) {
+            debug_assert!(c < d, "coord {:?} out of bounds for {:?}", coord, self.shape);
+            idx = idx * d + c;
+        }
+        idx
+    }
+
+    pub fn at(&self, coord: &[usize]) -> f32 {
+        self.data[self.index(coord)]
+    }
+
+    pub fn set(&mut self, coord: &[usize], v: f32) {
+        let i = self.index(coord);
+        self.data[i] = v;
+    }
+
+    /// Largest absolute element.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Largest absolute difference against another tensor of the same volume.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.len(), other.len(), "volume mismatch");
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .fold(0.0f32, |m, (&a, &b)| m.max((a - b).abs()))
+    }
+
+    /// Relative closeness check used by every kernel-vs-oracle test:
+    /// max |a-b| <= atol + rtol * max|b|.
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        if self.len() != other.len() {
+            return false;
+        }
+        let tol = atol + rtol * other.abs_max();
+        self.max_abs_diff(other) <= tol
+    }
+
+    /// A stable order-independent fingerprint (sum + sum of squares),
+    /// used for golden-output checks in the serving manifest.
+    pub fn checksum(&self) -> (f64, f64) {
+        let mut s = 0.0f64;
+        let mut s2 = 0.0f64;
+        for &v in &self.data {
+            s += v as f64;
+            s2 += (v as f64) * (v as f64);
+        }
+        (s, s2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_full_iota() {
+        let z = Tensor::zeros(&[2, 3]);
+        assert_eq!(z.len(), 6);
+        assert!(z.data().iter().all(|&v| v == 0.0));
+        let f = Tensor::full(&[4], 2.5);
+        assert!(f.data().iter().all(|&v| v == 2.5));
+        let i = Tensor::iota(&[2, 2]);
+        assert_eq!(i.data(), &[0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn from_vec_checks_volume() {
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 4]).is_ok());
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn indexing_row_major() {
+        let t = Tensor::iota(&[2, 3, 4]);
+        assert_eq!(t.at(&[0, 0, 0]), 0.0);
+        assert_eq!(t.at(&[0, 0, 3]), 3.0);
+        assert_eq!(t.at(&[0, 1, 0]), 4.0);
+        assert_eq!(t.at(&[1, 0, 0]), 12.0);
+        assert_eq!(t.at(&[1, 2, 3]), 23.0);
+    }
+
+    #[test]
+    fn set_then_get() {
+        let mut t = Tensor::zeros(&[3, 3]);
+        t.set(&[1, 2], 7.0);
+        assert_eq!(t.at(&[1, 2]), 7.0);
+        assert_eq!(t.data()[5], 7.0);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::iota(&[2, 6]).reshape(&[3, 4]).unwrap();
+        assert_eq!(t.shape(), &[3, 4]);
+        assert_eq!(t.at(&[2, 3]), 11.0);
+        assert!(Tensor::iota(&[2, 6]).reshape(&[5]).is_err());
+    }
+
+    #[test]
+    fn random_is_deterministic_and_bounded() {
+        let a = Tensor::random(&[100], 42);
+        let b = Tensor::random(&[100], 42);
+        let c = Tensor::random(&[100], 43);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.data().iter().all(|&v| (-1.0..1.0).contains(&v)));
+    }
+
+    #[test]
+    fn allclose_and_diff() {
+        let a = Tensor::full(&[8], 1.0);
+        let mut b = a.clone();
+        assert!(a.allclose(&b, 1e-6, 1e-6));
+        b.data_mut()[3] = 1.1;
+        assert!((a.max_abs_diff(&b) - 0.1).abs() < 1e-6);
+        assert!(!a.allclose(&b, 1e-3, 1e-3));
+    }
+
+    #[test]
+    fn checksum_stable() {
+        let a = Tensor::iota(&[10]);
+        let (s, s2) = a.checksum();
+        assert_eq!(s, 45.0);
+        assert_eq!(s2, 285.0);
+    }
+}

@@ -1,0 +1,80 @@
+//! Minimal deterministic PRNG (xorshift64*). No external `rand` needed —
+//! the offline registry does not carry it, and reproducible fills are all
+//! the kernels and benchmarks require.
+
+/// xorshift64* generator. Deterministic for a given seed; passes the
+/// basic equidistribution needs of test-data generation (not crypto).
+#[derive(Clone, Debug)]
+pub struct XorShiftRng {
+    state: u64,
+}
+
+impl XorShiftRng {
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zero fixed point.
+        XorShiftRng { state: seed.wrapping_mul(0x9E3779B97F4A7C15).max(1) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, 1)`.
+    pub fn next_f32(&mut self) -> f32 {
+        // 24 high-quality bits -> [0,1)
+        (self.next_u64() >> 40) as f32 / (1u32 << 24) as f32
+    }
+
+    /// Uniform integer in `[0, n)`.
+    pub fn next_usize(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = XorShiftRng::new(7);
+        let mut b = XorShiftRng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = XorShiftRng::new(1);
+        for _ in 0..10_000 {
+            let v = r.next_f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn rough_uniformity() {
+        let mut r = XorShiftRng::new(3);
+        let mut buckets = [0usize; 10];
+        for _ in 0..100_000 {
+            buckets[(r.next_f32() * 10.0) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!(b > 8_000 && b < 12_000, "bucket {b} far from uniform");
+        }
+    }
+
+    #[test]
+    fn zero_seed_not_stuck() {
+        let mut r = XorShiftRng::new(0);
+        let a = r.next_u64();
+        let b = r.next_u64();
+        assert_ne!(a, b);
+    }
+}

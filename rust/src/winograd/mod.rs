@@ -1,0 +1,237 @@
+//! Winograd F(2x2, 3x3) convolution — NNPACK's fast path for the
+//! ubiquitous 3x3/stride-1 layers (the paper's FFT/Winograd comparator
+//! reports whichever of NNPACK's transform implementations is fastest;
+//! for small kernels that is usually Winograd).
+//!
+//! Each 2x2 output tile costs 16 multiplies instead of 36 (2.25x fewer),
+//! paid for with input/output transforms and a transformed-weight tensor
+//! of `C_o*C_i*16` floats (16/9 ≈ 1.8x the weights) — again trading
+//! memory for FLOPs, which is the paper's §2 theme.
+
+use crate::conv::ConvShape;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Transformed-weight memory retained by Winograd (bytes).
+pub fn winograd_extra_bytes(shape: &ConvShape) -> u64 {
+    4 * 16 * (shape.c_o * shape.c_i) as u64
+}
+
+/// Whether the layer is eligible (3x3, stride 1).
+pub fn winograd_applicable(shape: &ConvShape) -> bool {
+    shape.h_f == 3 && shape.w_f == 3 && shape.stride == 1
+}
+
+/// `U = G g G^T` for one 3x3 kernel `g`, where
+/// `G = [[1,0,0],[1/2,1/2,1/2],[1/2,-1/2,1/2],[0,0,1]]`.
+fn transform_kernel(g: &[f32]) -> [f32; 16] {
+    // t = G g  (4x3)
+    let mut t = [0.0f32; 12];
+    for c in 0..3 {
+        let (g0, g1, g2) = (g[c], g[3 + c], g[6 + c]);
+        t[c] = g0;
+        t[3 + c] = 0.5 * (g0 + g1 + g2);
+        t[6 + c] = 0.5 * (g0 - g1 + g2);
+        t[9 + c] = g2;
+    }
+    // U = t G^T (4x4)
+    let mut u = [0.0f32; 16];
+    for r in 0..4 {
+        let (t0, t1, t2) = (t[r * 3], t[r * 3 + 1], t[r * 3 + 2]);
+        u[r * 4] = t0;
+        u[r * 4 + 1] = 0.5 * (t0 + t1 + t2);
+        u[r * 4 + 2] = 0.5 * (t0 - t1 + t2);
+        u[r * 4 + 3] = t2;
+    }
+    u
+}
+
+/// `V = B^T d B` for one 4x4 input tile `d`, where
+/// `B^T = [[1,0,-1,0],[0,1,1,0],[0,-1,1,0],[0,1,0,-1]]`.
+#[inline]
+fn transform_input(d: &[f32; 16]) -> [f32; 16] {
+    let mut t = [0.0f32; 16]; // B^T d
+    for c in 0..4 {
+        let (d0, d1, d2, d3) = (d[c], d[4 + c], d[8 + c], d[12 + c]);
+        t[c] = d0 - d2;
+        t[4 + c] = d1 + d2;
+        t[8 + c] = d2 - d1;
+        t[12 + c] = d1 - d3;
+    }
+    let mut v = [0.0f32; 16]; // t B
+    for r in 0..4 {
+        let (t0, t1, t2, t3) = (t[r * 4], t[r * 4 + 1], t[r * 4 + 2], t[r * 4 + 3]);
+        v[r * 4] = t0 - t2;
+        v[r * 4 + 1] = t1 + t2;
+        v[r * 4 + 2] = t2 - t1;
+        v[r * 4 + 3] = t1 - t3;
+    }
+    v
+}
+
+/// `Y = A^T M A` for one 4x4 element-product sum `m`, where
+/// `A^T = [[1,1,1,0],[0,1,-1,-1]]`.
+#[inline]
+fn transform_output(m: &[f32; 16]) -> [f32; 4] {
+    let mut t = [0.0f32; 8]; // A^T m (2x4)
+    for c in 0..4 {
+        let (m0, m1, m2, m3) = (m[c], m[4 + c], m[8 + c], m[12 + c]);
+        t[c] = m0 + m1 + m2;
+        t[4 + c] = m1 - m2 - m3;
+    }
+    let mut y = [0.0f32; 4]; // t A (2x2)
+    for r in 0..2 {
+        let (t0, t1, t2, t3) = (t[r * 4], t[r * 4 + 1], t[r * 4 + 2], t[r * 4 + 3]);
+        y[r * 2] = t0 + t1 + t2;
+        y[r * 2 + 1] = t1 - t2 - t3;
+    }
+    y
+}
+
+/// Winograd convolution. Input `[C_i][H_i][W_i]`, kernel
+/// `[C_o][C_i][3][3]`, stride 1, arbitrary pad; output `[C_o][H_o][W_o]`.
+pub fn conv_winograd(input: &Tensor, kernel: &Tensor, shape: &ConvShape) -> Result<Tensor> {
+    shape.validate()?;
+    crate::conv::naive::check_shapes(input, kernel, shape)?;
+    if !winograd_applicable(shape) {
+        return Err(Error::Shape(format!(
+            "winograd F(2x2,3x3) needs 3x3/s1, got {}x{}/s{}",
+            shape.h_f, shape.w_f, shape.stride
+        )));
+    }
+    let (h_o, w_o) = (shape.h_o(), shape.w_o());
+    let (c_i, h_i, w_i) = (shape.c_i, shape.h_i, shape.w_i);
+    let c_o = shape.c_o;
+    let p = shape.pad;
+
+    // Pre-transform all kernels: U[c_o][c_i][16].
+    let ks = kernel.data();
+    let mut u = vec![0.0f32; c_o * c_i * 16];
+    for o in 0..c_o {
+        for i in 0..c_i {
+            let g = &ks[(o * c_i + i) * 9..][..9];
+            u[(o * c_i + i) * 16..][..16].copy_from_slice(&transform_kernel(g));
+        }
+    }
+
+    let tiles_y = h_o.div_ceil(2);
+    let tiles_x = w_o.div_ceil(2);
+    let src = input.data();
+    let mut out = Tensor::zeros(&[c_o, h_o, w_o]);
+    let od = out.data_mut();
+
+    // Per tile: gather d per input channel, V = B^T d B, accumulate
+    // M[o] += U[o][i] ⊙ V, then Y = A^T M A.
+    let mut v_all = vec![0.0f32; c_i * 16];
+    for ty in 0..tiles_y {
+        for tx in 0..tiles_x {
+            let y0 = (ty * 2) as isize - p as isize;
+            let x0 = (tx * 2) as isize - p as isize;
+            // input tiles for all channels
+            for i in 0..c_i {
+                let mut d = [0.0f32; 16];
+                for r in 0..4 {
+                    let yy = y0 + r as isize;
+                    if yy < 0 || yy >= h_i as isize {
+                        continue;
+                    }
+                    for c in 0..4 {
+                        let xx = x0 + c as isize;
+                        if xx < 0 || xx >= w_i as isize {
+                            continue;
+                        }
+                        d[r * 4 + c] = src[(i * h_i + yy as usize) * w_i + xx as usize];
+                    }
+                }
+                v_all[i * 16..][..16].copy_from_slice(&transform_input(&d));
+            }
+            for o in 0..c_o {
+                let mut m = [0.0f32; 16];
+                for i in 0..c_i {
+                    let uu = &u[(o * c_i + i) * 16..][..16];
+                    let vv = &v_all[i * 16..][..16];
+                    for t in 0..16 {
+                        m[t] += uu[t] * vv[t];
+                    }
+                }
+                let y = transform_output(&m);
+                for r in 0..2 {
+                    let oy = ty * 2 + r;
+                    if oy >= h_o {
+                        continue;
+                    }
+                    for c in 0..2 {
+                        let ox = tx * 2 + c;
+                        if ox >= w_o {
+                            continue;
+                        }
+                        od[(o * h_o + oy) * w_o + ox] = y[r * 2 + c];
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conv_naive;
+
+    fn check(s: &ConvShape, seed: u64) {
+        let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], seed);
+        let kernel = Tensor::random(&[s.c_o, s.c_i, 3, 3], seed + 1);
+        let want = conv_naive(&input, &kernel, s).unwrap();
+        let got = conv_winograd(&input, &kernel, s).unwrap();
+        assert!(
+            got.allclose(&want, 1e-3, 1e-3),
+            "mismatch {:?}: {}",
+            s,
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn matches_naive() {
+        check(&ConvShape::new(2, 8, 8, 3, 3, 3, 1, 0), 90);
+        check(&ConvShape::new(3, 9, 9, 4, 3, 3, 1, 1), 91);
+        check(&ConvShape::new(4, 7, 11, 2, 3, 3, 1, 1), 92);
+    }
+
+    #[test]
+    fn odd_output_sizes() {
+        // H_o odd -> last tile row is partial.
+        check(&ConvShape::new(2, 7, 7, 2, 3, 3, 1, 0), 93); // 5x5 out
+        check(&ConvShape::new(1, 6, 6, 1, 3, 3, 1, 0), 94); // 4x4 out
+    }
+
+    #[test]
+    fn kernel_transform_identity() {
+        // delta kernel (center tap) convolved with anything = input crop;
+        // its Winograd transform must reproduce that.
+        let s = ConvShape::new(1, 6, 6, 1, 3, 3, 1, 1);
+        let input = Tensor::random(&[1, 6, 6], 95);
+        let mut k = vec![0.0f32; 9];
+        k[4] = 1.0; // center
+        let kernel = Tensor::from_vec(&[1, 1, 3, 3], k).unwrap();
+        let got = conv_winograd(&input, &kernel, &s).unwrap();
+        assert!(got.allclose(&input, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn rejects_non_3x3() {
+        let s = ConvShape::new(1, 8, 8, 1, 5, 5, 1, 0);
+        let input = Tensor::zeros(&[1, 8, 8]);
+        let kernel = Tensor::zeros(&[1, 1, 5, 5]);
+        assert!(conv_winograd(&input, &kernel, &s).is_err());
+        assert!(!winograd_applicable(&s));
+    }
+
+    #[test]
+    fn memory_overhead_ratio() {
+        let s = ConvShape::new(256, 13, 13, 384, 3, 3, 1, 1);
+        let ratio = winograd_extra_bytes(&s) as f64 / s.kernel_bytes() as f64;
+        assert!((ratio - 16.0 / 9.0).abs() < 0.01);
+    }
+}

@@ -1,0 +1,177 @@
+//! Cross-module integration tests: every convolution implementation in
+//! the crate must agree on the same layers, layers must chain in the §4
+//! blocked layout without repacking, and the simulator must stay
+//! consistent with the crate's structural ground truth.
+
+use dconv::arch::{haswell, host};
+use dconv::conv::reorder::kernel_to_hwio;
+use dconv::conv::{
+    conv_direct, conv_direct_blocked, conv_naive, conv_reorder, select_params, BlockParams,
+    ConvShape,
+};
+use dconv::fftconv::conv_fft;
+use dconv::layout::{
+    from_blocked_io, nchw_to_nhwc, nhwc_to_nchw, to_blocked_io, to_blocked_kernel,
+};
+use dconv::lowering::{conv_im2col, conv_mec};
+use dconv::nets;
+use dconv::sim::{estimate, Algo};
+use dconv::tensor::Tensor;
+use dconv::winograd::{conv_winograd, winograd_applicable};
+
+/// Every implementation on one battery of layers.
+#[test]
+fn all_algorithms_agree() {
+    let shapes = [
+        ConvShape::new(3, 11, 11, 8, 3, 3, 1, 0),
+        ConvShape::new(4, 9, 9, 8, 3, 3, 1, 1),
+        ConvShape::new(8, 13, 13, 16, 5, 5, 2, 2),
+        ConvShape::new(16, 8, 8, 8, 1, 1, 1, 0),
+        ConvShape::new(3, 23, 23, 16, 11, 11, 4, 0), // AlexNet conv1 geometry
+    ];
+    let m = host();
+    for (i, s) in shapes.iter().enumerate() {
+        let seed = 100 + i as u64;
+        let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], seed);
+        let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], seed + 1);
+        let want = conv_naive(&input, &kernel, s).unwrap();
+
+        let bp = select_params(&m, s);
+        let direct = conv_direct(&input, &kernel, s, bp, 2).unwrap();
+        assert!(direct.allclose(&want, 1e-3, 1e-4), "direct {s:?}");
+
+        let reord = nhwc_to_nchw(
+            &conv_reorder(&nchw_to_nhwc(&input).unwrap(), &kernel_to_hwio(&kernel).unwrap(), s)
+                .unwrap(),
+        )
+        .unwrap();
+        assert!(reord.allclose(&want, 1e-3, 1e-4), "reorder {s:?}");
+
+        let im2col = conv_im2col(&input, &kernel, s).unwrap();
+        assert!(im2col.allclose(&want, 1e-3, 1e-4), "im2col {s:?}");
+
+        let mec = conv_mec(&input, &kernel, s).unwrap();
+        assert!(mec.allclose(&want, 1e-3, 1e-4), "mec {s:?}");
+
+        let fft = conv_fft(&input, &kernel, s).unwrap();
+        assert!(fft.allclose(&want, 1e-2, 1e-2), "fft {s:?}");
+
+        if winograd_applicable(s) {
+            let wino = conv_winograd(&input, &kernel, s).unwrap();
+            assert!(wino.allclose(&want, 1e-2, 1e-2), "winograd {s:?}");
+        }
+    }
+}
+
+/// The §4 property the coordinator relies on: layer k's blocked output
+/// feeds layer k+1 directly — no repacking between layers, and the final
+/// result matches running each layer separately on conventional layouts.
+#[test]
+fn layers_chain_in_blocked_layout() {
+    let s1 = ConvShape::new(8, 16, 16, 16, 3, 3, 1, 1);
+    let s2 = ConvShape::new(16, 16, 16, 32, 3, 3, 1, 1);
+    let bp1 = BlockParams::new(8, 4, 8); // c_ob of layer1 == c_ib of layer2
+    let bp2 = BlockParams::new(8, 4, 16);
+
+    let input = Tensor::random(&[s1.c_i, s1.h_i, s1.w_i], 7);
+    let k1 = Tensor::random(&[s1.c_o, s1.c_i, s1.h_f, s1.w_f], 8);
+    let k2 = Tensor::random(&[s2.c_o, s2.c_i, s2.h_f, s2.w_f], 9);
+
+    // Conventional-path reference.
+    let mid = conv_naive(&input, &k1, &s1).unwrap();
+    let want = conv_naive(&mid, &k2, &s2).unwrap();
+
+    // Blocked chain: pack once at the entry, never again. Layer 1's
+    // output pencil (c_ob=8) is layer 2's input pencil... here layer 2
+    // uses c_ib=16 = full channels, so reinterpret the [2][16][16][8]
+    // blocked tensor: with c_ob=8 blocks and H_o=W_o=16 the chaining
+    // needs matching pencils; use c_ib2 = bp1.c_ob instead.
+    let bp2 = BlockParams::new(bp2.c_ob, bp2.w_ob, bp1.c_ob);
+    let bin = to_blocked_io(&input, bp1.c_ib).unwrap();
+    let bk1 = to_blocked_kernel(&k1, bp1.c_ob, bp1.c_ib).unwrap();
+    let bk2 = to_blocked_kernel(&k2, bp2.c_ob, bp2.c_ib).unwrap();
+    let bmid = conv_direct_blocked(&bin, &bk1, &s1, bp1, 1).unwrap();
+    // bmid IS the layer-2 input — same tensor, zero repacking:
+    let bout = conv_direct_blocked(&bmid, &bk2, &s2, bp2, 1).unwrap();
+    let got = from_blocked_io(&bout).unwrap();
+    assert!(got.allclose(&want, 1e-3, 1e-3), "chained: {}", got.max_abs_diff(&want));
+}
+
+/// Analytical parameters must be executable for every paper layer, and
+/// the resulting kernel must be correct on a downscaled version.
+#[test]
+fn selected_params_run_on_downscaled_paper_layers() {
+    let m = host();
+    for l in nets::all_layers().into_iter().step_by(7) {
+        let mut s = l.shape.clone();
+        while s.h_i > 28 && s.h_o() > 4 {
+            s.h_i /= 2;
+            s.w_i /= 2;
+        }
+        while s.c_i * s.c_o > 64 * 64 {
+            s.c_i = (s.c_i / 2).max(1);
+            s.c_o = (s.c_o / 2).max(8);
+        }
+        if s.validate().is_err() || s.h_i + 2 * s.pad < s.h_f {
+            continue;
+        }
+        let bp = select_params(&m, &s);
+        let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 3);
+        let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 4);
+        let want = conv_naive(&input, &kernel, &s).unwrap();
+        let got = conv_direct(&input, &kernel, &s, bp, 1).unwrap();
+        assert!(got.allclose(&want, 1e-3, 1e-3), "{} ({s:?}, {bp:?})", l.name);
+    }
+}
+
+/// The simulator's structural invariants against the real nets: direct
+/// beats im2col+SGEMM on every layer of every net on every machine
+/// (the paper's headline "10% to 400%"), with speedups within sane bounds.
+#[test]
+fn simulator_headline_claim_over_all_nets() {
+    for m in dconv::arch::table1() {
+        for l in nets::all_layers() {
+            let d = estimate(&m, &l.shape, Algo::Direct, m.cores);
+            let g = estimate(&m, &l.shape, Algo::Im2colGemm, m.cores);
+            let rel = g.secs / d.secs;
+            assert!(rel > 1.0, "{} on {}: direct should win (rel {rel:.2})", l.name, m.name);
+            assert!(rel < 20.0, "{} on {}: speedup implausible (rel {rel:.2})", l.name, m.name);
+        }
+    }
+}
+
+/// Memory accounting: direct = 0 extra bytes, baselines ordered
+/// im2col > mec > 0 on every standard layer.
+#[test]
+fn memory_overhead_ordering() {
+    let m = haswell();
+    for l in nets::all_layers() {
+        let d = estimate(&m, &l.shape, Algo::Direct, 1);
+        let g = estimate(&m, &l.shape, Algo::Im2colGemm, 1);
+        let mec = estimate(&m, &l.shape, Algo::Mec, 1);
+        assert_eq!(d.extra_bytes, 0, "{}", l.name);
+        assert!(g.extra_bytes > 0, "{}", l.name);
+        assert!(mec.extra_bytes > 0, "{}", l.name);
+        // Cho & Brand's saving comes from eliminating kernel-row
+        // duplication, so it only applies to spatial kernels — for 1x1
+        // convs im2col already duplicates nothing.
+        if l.shape.h_f * l.shape.w_f > 1 {
+            assert!(g.extra_bytes > mec.extra_bytes, "{}: im2col must exceed MEC", l.name);
+        }
+    }
+}
+
+/// Threaded direct convolution is exact (not approximately equal) vs the
+/// single-threaded result: thread partitioning touches disjoint blocks.
+#[test]
+fn threading_is_bitwise_deterministic() {
+    let s = ConvShape::new(8, 12, 12, 32, 3, 3, 1, 1);
+    let bp = BlockParams::new(8, 4, 4);
+    let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 21);
+    let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 22);
+    let t1 = conv_direct(&input, &kernel, &s, bp, 1).unwrap();
+    for p in [2, 3, 4, 8] {
+        let tp = conv_direct(&input, &kernel, &s, bp, p).unwrap();
+        assert_eq!(t1, tp, "threads={p} must be bitwise identical");
+    }
+}

@@ -1,0 +1,222 @@
+//! Randomized property tests (the `proptest` crate is absent from the
+//! offline registry; these use the crate's own deterministic xorshift to
+//! generate hundreds of cases per property — same idea, reproducible
+//! seeds printed on failure).
+
+use dconv::conv::{conv_direct, conv_naive, BlockParams, ConvShape};
+use dconv::coordinator::{Batcher, BatcherConfig};
+use dconv::gemm::{sgemm, sgemm_naive};
+use dconv::json::Json;
+use dconv::layout::{from_blocked_io, from_blocked_kernel, to_blocked_io, to_blocked_kernel};
+use dconv::tensor::{Tensor, XorShiftRng};
+
+fn random_shape(rng: &mut XorShiftRng) -> (ConvShape, BlockParams) {
+    // channels constrained so block params can divide them
+    let c_ib = [1usize, 2, 3, 4][rng.next_usize(4)];
+    let c_i = c_ib * (1 + rng.next_usize(5));
+    let c_ob = [1usize, 2, 4, 8, 16][rng.next_usize(5)];
+    let c_o = c_ob * (1 + rng.next_usize(4));
+    let h_f = 1 + rng.next_usize(5);
+    let w_f = 1 + rng.next_usize(5);
+    let stride = 1 + rng.next_usize(3);
+    let pad = rng.next_usize(3).min(h_f - 1).min(w_f - 1);
+    let h_i = (h_f + stride * rng.next_usize(6)).max(h_f.saturating_sub(2 * pad).max(1));
+    let w_i = (w_f + stride * rng.next_usize(6)).max(w_f.saturating_sub(2 * pad).max(1));
+    let w_ob = 1 + rng.next_usize(8);
+    (
+        ConvShape::new(c_i, h_i, w_i, c_o, h_f, w_f, stride, pad),
+        BlockParams::new(c_ob, w_ob, c_ib),
+    )
+}
+
+/// Property: Algorithm 3 == Algorithm 1 on random shapes and blockings.
+#[test]
+fn prop_direct_matches_naive() {
+    let mut rng = XorShiftRng::new(0xD1EC7);
+    let mut tested = 0;
+    while tested < 120 {
+        let (s, bp) = random_shape(&mut rng);
+        if s.validate().is_err() {
+            continue;
+        }
+        tested += 1;
+        let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], rng.next_u64());
+        let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], rng.next_u64());
+        let want = conv_naive(&input, &kernel, &s).unwrap();
+        let got = conv_direct(&input, &kernel, &s, bp, 1 + tested % 3).unwrap();
+        assert!(
+            got.allclose(&want, 1e-3, 1e-4),
+            "case {tested}: {s:?} {bp:?} diff {}",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+/// Property: convolution is linear in the input (direct kernel).
+#[test]
+fn prop_direct_is_linear() {
+    let mut rng = XorShiftRng::new(0x11EA2);
+    for case in 0..30 {
+        let (s, bp) = random_shape(&mut rng);
+        if s.validate().is_err() {
+            continue;
+        }
+        let x1 = Tensor::random(&[s.c_i, s.h_i, s.w_i], rng.next_u64());
+        let x2 = Tensor::random(&[s.c_i, s.h_i, s.w_i], rng.next_u64());
+        let k = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], rng.next_u64());
+        let y1 = conv_direct(&x1, &k, &s, bp, 1).unwrap();
+        let y2 = conv_direct(&x2, &k, &s, bp, 1).unwrap();
+        let sum =
+            Tensor::from_vec(x1.shape(), x1.data().iter().zip(x2.data()).map(|(a, b)| a + b).collect())
+                .unwrap();
+        let ysum = conv_direct(&sum, &k, &s, bp, 1).unwrap();
+        let want = Tensor::from_vec(
+            y1.shape(),
+            y1.data().iter().zip(y2.data()).map(|(a, b)| a + b).collect(),
+        )
+        .unwrap();
+        assert!(ysum.allclose(&want, 1e-3, 1e-4), "case {case}: additivity violated");
+    }
+}
+
+/// Property: layout conversions are lossless permutations (round trip,
+/// element conservation) for random block sizes.
+#[test]
+fn prop_layout_round_trips() {
+    let mut rng = XorShiftRng::new(0x1A707);
+    for _ in 0..200 {
+        let c_b = [1usize, 2, 4, 8][rng.next_usize(4)];
+        let c = c_b * (1 + rng.next_usize(8));
+        let h = 1 + rng.next_usize(12);
+        let w = 1 + rng.next_usize(12);
+        let t = Tensor::random(&[c, h, w], rng.next_u64());
+        let b = to_blocked_io(&t, c_b).unwrap();
+        assert_eq!(b.len(), t.len(), "permutation must conserve elements");
+        let mut sorted_a: Vec<u32> = t.data().iter().map(|v| v.to_bits()).collect();
+        let mut sorted_b: Vec<u32> = b.data().iter().map(|v| v.to_bits()).collect();
+        sorted_a.sort_unstable();
+        sorted_b.sort_unstable();
+        assert_eq!(sorted_a, sorted_b, "multiset of values must be preserved");
+        assert_eq!(from_blocked_io(&b).unwrap(), t);
+
+        let c_ob = [1usize, 2, 4][rng.next_usize(3)];
+        let c_o = c_ob * (1 + rng.next_usize(6));
+        let k = Tensor::random(&[c_o, c, 1 + rng.next_usize(4), 1 + rng.next_usize(4)], rng.next_u64());
+        let bk = to_blocked_kernel(&k, c_ob, c_b).unwrap();
+        assert_eq!(from_blocked_kernel(&bk).unwrap(), k);
+    }
+}
+
+/// Property: blocked GEMM == naive GEMM on random sizes/leading dims.
+#[test]
+fn prop_gemm_matches_naive() {
+    let mut rng = XorShiftRng::new(0x6E44);
+    for case in 0..60 {
+        let m = 1 + rng.next_usize(80);
+        let n = 1 + rng.next_usize(80);
+        let k = 1 + rng.next_usize(80);
+        let lda = k + rng.next_usize(5);
+        let a = Tensor::random(&[m, lda], rng.next_u64());
+        let b = Tensor::random(&[k, n], rng.next_u64());
+        let mut c1 = vec![0.0f32; m * n];
+        let mut c2 = vec![0.0f32; m * n];
+        sgemm(m, n, k, a.data(), lda, b.data(), n, &mut c1, n);
+        sgemm_naive(m, n, k, a.data(), lda, b.data(), n, &mut c2, n);
+        let md = c1.iter().zip(&c2).fold(0.0f32, |mx, (x, y)| mx.max((x - y).abs()));
+        assert!(md < 1e-3, "case {case}: m={m} n={n} k={k} lda={lda} diff {md}");
+    }
+}
+
+/// Coordinator invariants: for any request count and any compiled-size
+/// set, the plan covers the requests, never exceeds the largest size,
+/// and picks the padding-minimal compiled size.
+#[test]
+fn prop_batcher_invariants() {
+    let mut rng = XorShiftRng::new(0xBA7C4);
+    for _ in 0..300 {
+        // random compiled-size set
+        let mut sizes: Vec<usize> = (0..1 + rng.next_usize(5))
+            .map(|_| 1 << rng.next_usize(6))
+            .collect();
+        sizes.push(1 + rng.next_usize(16));
+        let b = Batcher::new(BatcherConfig {
+            sizes: sizes.clone(),
+            max_wait: std::time::Duration::from_millis(1),
+        });
+        let n = rng.next_usize(100);
+        let plan = b.plan(n);
+        // padded is one of the compiled sizes
+        assert!(b.cfg().sizes.contains(&plan.padded));
+        // occupancy never exceeds padded or n (when n >= 1)
+        assert!(plan.occupancy <= plan.padded);
+        assert!(plan.occupancy <= n.max(1));
+        // padding-minimality: no smaller compiled size also fits
+        for &s in &b.cfg().sizes {
+            if s >= n.max(1) {
+                assert!(plan.padded <= s, "picked {} but {} fits n={}", plan.padded, s, n);
+            }
+        }
+        // covering: everything fits in ceil(n/max) batches of max size
+        let max = b.max_size();
+        if n > max {
+            assert_eq!(plan.padded, max);
+        }
+    }
+}
+
+/// JSON round-trip on randomly generated documents.
+#[test]
+fn prop_json_round_trip() {
+    fn gen(rng: &mut XorShiftRng, depth: usize) -> Json {
+        match if depth == 0 { rng.next_usize(4) } else { rng.next_usize(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_usize(2) == 0),
+            2 => Json::Num((rng.next_usize(2_000_001) as f64 - 1e6) / 64.0),
+            3 => Json::Str(format!("s{}-\"quoted\"\n{}", rng.next_usize(100), rng.next_usize(10))),
+            4 => Json::Arr((0..rng.next_usize(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.next_usize(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = XorShiftRng::new(0x150);
+    for case in 0..200 {
+        let doc = gen(&mut rng, 3);
+        let text = doc.to_string_pretty();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(back, doc, "case {case}");
+    }
+}
+
+/// Property: stride-1 no-pad convolution of a shifted impulse shifts the
+/// output (translation equivariance away from borders).
+#[test]
+fn prop_translation_equivariance() {
+    let mut rng = XorShiftRng::new(0x7E5);
+    for _ in 0..20 {
+        let s = ConvShape::new(1, 12, 12, 4, 3, 3, 1, 0);
+        let bp = BlockParams::new(4, 4, 1);
+        let k = Tensor::random(&[4, 1, 3, 3], rng.next_u64());
+        // impulse at (y, x) and at (y+1, x+1)
+        let y = 1 + rng.next_usize(6);
+        let x = 1 + rng.next_usize(6);
+        let mut i1 = Tensor::zeros(&[1, 12, 12]);
+        i1.set(&[0, y, x], 1.0);
+        let mut i2 = Tensor::zeros(&[1, 12, 12]);
+        i2.set(&[0, y + 1, x + 1], 1.0);
+        let o1 = conv_direct(&i1, &k, &s, bp, 1).unwrap();
+        let o2 = conv_direct(&i2, &k, &s, bp, 1).unwrap();
+        // o2[c][l][m] == o1[c][l-1][m-1] in the interior
+        for c in 0..4 {
+            for l in 1..s.h_o() {
+                for m in 1..s.w_o() {
+                    let a = o2.at(&[c, l, m]);
+                    let b = o1.at(&[c, l - 1, m - 1]);
+                    assert!((a - b).abs() < 1e-6, "({c},{l},{m}): {a} vs {b}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! End-to-end runtime tests: load the real AOT artifacts, compile them on
+//! the PJRT CPU client, execute, and verify against the manifest goldens
+//! (which were computed by JAX at build time — this closes the
+//! python-compiles / rust-executes loop).
+//!
+//! Requires `make artifacts`; tests panic with a clear message otherwise.
+
+use dconv::coordinator::{Coordinator, CoordinatorConfig};
+use dconv::runtime::{verify_golden, Engine};
+use dconv::tensor::Tensor;
+
+fn engine() -> Engine {
+    Engine::start("artifacts").expect("run `make artifacts` before `cargo test`")
+}
+
+#[test]
+fn all_artifact_goldens_verify() {
+    let eng = engine();
+    let h = eng.handle();
+    for art in h.manifest().clone().all() {
+        let (d_sum, d_sum2) = verify_golden(&h, art)
+            .unwrap_or_else(|e| panic!("golden failed for {}: {e}", art.name));
+        assert!(d_sum.is_finite() && d_sum2.is_finite());
+    }
+}
+
+#[test]
+fn layer_artifact_shapes_and_determinism() {
+    let eng = engine();
+    let h = eng.handle();
+    let layer = h.manifest().layers[0].clone();
+    let n_in: usize = layer.input_shape.iter().product();
+    let n_out: usize = layer.output_shape.iter().product();
+    let x = Tensor::random(&layer.input_shape, 42).into_vec();
+    let y1 = h.run(&layer.name, x.clone()).unwrap();
+    let y2 = h.run(&layer.name, x).unwrap();
+    assert_eq!(y1.len(), n_out);
+    assert_eq!(y1, y2, "executions must be deterministic");
+    assert!(n_in > 0);
+}
+
+#[test]
+fn wrong_input_size_is_rejected() {
+    let eng = engine();
+    let h = eng.handle();
+    let err = h.run("cnn_b1", vec![0.0; 7]).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("elements"), "unexpected error: {msg}");
+    assert!(h.run("no_such_model", vec![]).is_err());
+}
+
+#[test]
+fn coordinator_serves_batches_and_matches_direct_execution() {
+    let eng = engine();
+    let h = eng.handle();
+    let coord = Coordinator::start(h.clone(), CoordinatorConfig::default()).unwrap();
+
+    // Direct execution of cnn_b1 as the reference for a single image.
+    let img = Tensor::random(&[1, 32, 32, 3], 777).into_vec();
+    let want = h.run("cnn_b1", img.clone()).unwrap();
+
+    // Same image through the coordinator (batched path).
+    let got = coord.submit(img.clone()).unwrap().wait().unwrap();
+    assert_eq!(got.len(), coord.classes());
+    for (a, b) in got.iter().zip(want.iter()) {
+        assert!((a - b).abs() < 1e-4, "coordinator result differs: {a} vs {b}");
+    }
+
+    // A burst: all results must come back and batching must kick in.
+    let pendings: Vec<_> = (0..12)
+        .map(|i| {
+            let x = Tensor::random(&[1, 32, 32, 3], 800 + i as u64).into_vec();
+            coord.submit_blocking(x).unwrap()
+        })
+        .collect();
+    for p in pendings {
+        let logits = p.wait().unwrap();
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+    let stats = coord.stats();
+    assert_eq!(stats.requests, 13);
+    assert!(stats.batches <= 13);
+    assert_eq!(stats.latency.count(), 13);
+}
+
+#[test]
+fn batch_padding_consistency() {
+    // Running 2 images via cnn_b4 (padded) must give the same logits as
+    // via cnn_b2 (exact) — padding slots must not leak into real ones.
+    let eng = engine();
+    let h = eng.handle();
+    let imgs = Tensor::random(&[2, 32, 32, 3], 31).into_vec();
+    let via_b2 = h.run("cnn_b2", imgs.clone()).unwrap();
+    let mut padded = imgs.clone();
+    padded.extend(vec![0.0; 2 * 32 * 32 * 3]);
+    let via_b4 = h.run("cnn_b4", padded).unwrap();
+    for i in 0..via_b2.len() {
+        assert!(
+            (via_b2[i] - via_b4[i]).abs() < 1e-4,
+            "padding changed result at {i}: {} vs {}",
+            via_b2[i],
+            via_b4[i]
+        );
+    }
+}

@@ -3,14 +3,19 @@
 //! the full layer would take too long — channel structure and kernel
 //! geometry are preserved, which is what the algorithms are sensitive to).
 //!
+//! Direct and im2col run through the engine's plan/execute API (planned
+//! once per layer, executed on pre-packed operands); MEC keeps its raw
+//! entry point as the non-registry comparator.
+//!
 //! ```sh
 //! cargo run --release --example layer_sweep -- --net alexnet [--full]
 //! ```
 
 use dconv::arch::host;
 use dconv::cli::Args;
-use dconv::conv::{conv_direct, select_params, ConvShape};
-use dconv::lowering::{conv_im2col, conv_mec};
+use dconv::conv::ConvShape;
+use dconv::engine::{io_shape, BackendRegistry, ConvPlan};
+use dconv::lowering::conv_mec;
 use dconv::metrics::{gflops, time_it, Table};
 use dconv::nets;
 use dconv::tensor::Tensor;
@@ -43,6 +48,7 @@ fn main() {
         std::process::exit(1);
     });
     let machine = host();
+    let registry = BackendRegistry::default();
     println!("sweeping {} ({} layers, threads={threads}, full={full})\n", net, layers.len());
 
     let mut t = Table::new(&[
@@ -53,13 +59,33 @@ fn main() {
         let s = downscale(&l.shape, full);
         let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 1);
         let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 2);
-        let bp = select_params(&machine, &s);
 
-        let (out_d, secs_d) = time_it(|| conv_direct(&input, &kernel, &s, bp, threads).unwrap());
-        let (out_g, secs_g) = time_it(|| conv_im2col(&input, &kernel, &s).unwrap());
+        // Planned once per layer; executed on pre-packed operands with
+        // caller-owned buffers, like a deployment would.
+        let direct = registry.plan("direct", &s, &kernel, &machine, threads).unwrap();
+        let im2col = registry.plan("im2col", &s, &kernel, &machine, threads).unwrap();
+        let out_len = s.c_o * s.h_o() * s.w_o();
+
+        let packed = direct.pack_input(&input).unwrap();
+        let mut out_d = vec![0.0f32; out_len];
+        let mut ws_d = vec![0.0f32; direct.workspace_len()];
+        let (_, secs_d) =
+            time_it(|| direct.execute_into(packed.data(), &mut out_d, &mut ws_d).unwrap());
+
+        let mut out_g = vec![0.0f32; out_len];
+        let mut ws_g = vec![0.0f32; im2col.workspace_len()];
+        let (_, secs_g) =
+            time_it(|| im2col.execute_into(input.data(), &mut out_g, &mut ws_g).unwrap());
+
         let (out_m, secs_m) = time_it(|| conv_mec(&input, &kernel, &s).unwrap());
-        assert!(out_d.allclose(&out_g, 1e-3, 1e-3), "{}: direct vs im2col mismatch", l.name);
-        assert!(out_m.allclose(&out_g, 1e-3, 1e-3), "{}: mec vs im2col mismatch", l.name);
+
+        // Validate the already-computed results (unpacking is a cheap
+        // permutation; no re-execution).
+        let native_d = io_shape(direct.output_layout(), s.c_o, s.h_o(), s.w_o());
+        let got_d = direct.unpack_output(&Tensor::from_vec(&native_d, out_d).unwrap()).unwrap();
+        let got_g = Tensor::from_vec(&[s.c_o, s.h_o(), s.w_o()], out_g).unwrap();
+        assert!(got_d.allclose(&got_g, 1e-3, 1e-3), "{}: direct vs im2col mismatch", l.name);
+        assert!(out_m.allclose(&got_g, 1e-3, 1e-3), "{}: mec vs im2col mismatch", l.name);
 
         t.row(vec![
             l.name.clone(),

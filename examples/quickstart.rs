@@ -1,12 +1,14 @@
-//! Quickstart: run the paper's direct convolution on one layer and verify
-//! it against the naive oracle.
+//! Quickstart: plan the paper's direct convolution for one layer through
+//! the engine registry, execute it allocation-free, and verify against
+//! the naive oracle.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
 use dconv::arch::host;
-use dconv::conv::{conv_direct, conv_naive, select_params, ConvShape};
+use dconv::conv::{conv_naive, ConvShape};
+use dconv::engine::{BackendRegistry, ConvAlgo, ConvPlan};
 use dconv::metrics::{gflops, time_it};
 use dconv::tensor::Tensor;
 
@@ -25,21 +27,42 @@ fn main() {
     let input = Tensor::random(&[shape.c_i, shape.h_i, shape.w_i], 1);
     let kernel = Tensor::random(&[shape.c_o, shape.c_i, shape.h_f, shape.w_f], 2);
 
-    // ...blocking parameters chosen analytically from the machine model
-    // (paper §3.1.4 / Low et al. 2016; no autotuning).
+    // ...planned once through the registry: the `auto` selector picks the
+    // paper's direct convolution, selects blocking parameters analytically
+    // from the machine model (§3.1.4 / Low et al. 2016; no autotuning) and
+    // packs the weights into the §4 layouts.
     let machine = host();
-    let bp = select_params(&machine, &shape);
-    println!("analytical blocking: C_o,b={} W_o,b={} C_i,b={}", bp.c_ob, bp.w_ob, bp.c_ib);
+    let registry = BackendRegistry::default();
+    let algo = registry.auto(&shape, &machine);
+    let (plan, secs_plan) = time_it(|| algo.plan(&shape, &kernel, &machine, 1).unwrap());
+    println!(
+        "planned backend '{}' in {:.1} ms — retained {} B, workspace {} B (zero overhead)",
+        plan.backend(),
+        secs_plan * 1e3,
+        plan.retained_bytes(),
+        plan.workspace_bytes()
+    );
 
-    // Run the paper's Algorithm 3. `conv_direct` packs into the §4
-    // layouts (a one-time cost in real deployments, §4.3) and runs the
-    // zero-memory-overhead kernel.
-    let (out, secs) = time_it(|| conv_direct(&input, &kernel, &shape, bp, 1).unwrap());
-    println!("direct convolution: {:.1} ms = {:.2} GFLOPS", secs * 1e3, gflops(shape.flops(), secs));
+    // Hot path: pack the input once (a deployment keeps activations in the
+    // blocked layout across layers, §4.3), then execute with caller-owned
+    // buffers — the call allocates nothing.
+    let packed = plan.pack_input(&input).unwrap();
+    let mut out_native = vec![0.0f32; shape.c_o * shape.h_o() * shape.w_o()];
+    let mut workspace = vec![0.0f32; plan.workspace_len()];
+    let (_, secs) = time_it(|| {
+        plan.execute_into(packed.data(), &mut out_native, &mut workspace).unwrap()
+    });
+    println!(
+        "execute_into: {:.1} ms = {:.2} GFLOPS",
+        secs * 1e3,
+        gflops(shape.flops(), secs)
+    );
 
-    // Verify against the six-loop oracle (Algorithm 1).
+    // Verify against the six-loop oracle (Algorithm 1) via the one-shot
+    // convenience path (packs/unpacks at the edges).
+    let out = plan.execute(&input).unwrap();
     let (want, secs_naive) = time_it(|| conv_naive(&input, &kernel, &shape).unwrap());
-    println!("naive oracle      : {:.1} ms", secs_naive * 1e3);
+    println!("naive oracle: {:.1} ms", secs_naive * 1e3);
     assert!(out.allclose(&want, 1e-3, 1e-3), "mismatch: {}", out.max_abs_diff(&want));
     println!("results agree ✓ (speedup {:.1}x, extra memory 0 bytes)", secs_naive / secs);
 }

@@ -6,6 +6,10 @@
 //! This isolates how much of the paper's win comes from loop order alone
 //! vs blocking + layout.
 
+// This ablation deliberately times the raw per-call algorithm entry
+// points (including their packing), not the engine's plan/execute path.
+#![allow(deprecated)]
+
 use dconv::arch::host;
 use dconv::bench_harness::{bench, emit, opts_from_env, sink};
 use dconv::conv::reorder::kernel_to_hwio;

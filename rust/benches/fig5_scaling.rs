@@ -11,7 +11,8 @@
 
 use dconv::arch::{cortex_a57, haswell, piledriver};
 use dconv::bench_harness::{bench, emit, opts_from_env, sink};
-use dconv::conv::{conv_direct, select_params, ConvShape};
+use dconv::conv::ConvShape;
+use dconv::engine::{BackendRegistry, ConvPlan};
 use dconv::metrics::{gflops, Table};
 use dconv::nets;
 use dconv::sim::{scaling_curve, Algo};
@@ -44,17 +45,23 @@ fn main() {
         );
     }
 
-    // Host-measured: the real threaded kernel at increasing thread counts.
+    // Host-measured: the real threaded kernel at increasing thread counts,
+    // planned once per thread count and timed on the execute_into hot path.
     let opts = opts_from_env();
     let host = dconv::arch::host();
+    let registry = BackendRegistry::default();
     let s = ConvShape::new(64, 28, 28, 64, 3, 3, 1, 1);
-    let bp = select_params(&host, &s);
     let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 5);
     let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 6);
     let mut t = Table::new(&["threads", "measured GFLOPS", "note"]);
     for p in [1usize, 2, 4] {
+        let plan = registry.plan("direct", &s, &kernel, &host, p).unwrap();
+        let packed = plan.pack_input(&input).unwrap();
+        let mut out = vec![0.0f32; s.c_o * s.h_o() * s.w_o()];
+        let mut ws = vec![0.0f32; plan.workspace_len()];
         let meas = bench(&format!("direct-{p}t"), opts, || {
-            sink(conv_direct(&input, &kernel, &s, bp, p).unwrap());
+            plan.execute_into(packed.data(), &mut out, &mut ws).unwrap();
+            sink(out[0]);
         });
         t.row(vec![
             p.to_string(),

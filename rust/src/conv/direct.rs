@@ -43,11 +43,10 @@ pub fn conv_direct_blocked(
     bp: BlockParams,
     threads: usize,
 ) -> Result<Tensor> {
+    // Validate before any h_o()/division so bad shapes return Err
+    // instead of panicking (stride 0, non-dividing blocks, ...).
     shape.validate()?;
     bp.validate_for(shape)?;
-    if bp.w_ob == 0 || bp.w_ob > MAX_WOB {
-        return Err(Error::Shape(format!("w_ob={} out of range 1..={}", bp.w_ob, MAX_WOB)));
-    }
     let want_in = [shape.c_i / bp.c_ib, shape.h_i, shape.w_i, bp.c_ib];
     if input.shape() != want_in {
         return Err(Error::Shape(format!(
@@ -71,14 +70,61 @@ pub fn conv_direct_blocked(
             want_k
         )));
     }
+    let mut out = Tensor::zeros(&[shape.c_o / bp.c_ob, shape.h_o(), shape.w_o(), bp.c_ob]);
+    conv_direct_blocked_into(input.data(), kernel.data(), shape, bp, threads, out.data_mut())?;
+    Ok(out)
+}
+
+/// Allocation-free core of Algorithm 3: operands and output are flat
+/// slices in the §4 blocked layouts (`[C_i/c_ib][H_i][W_i][c_ib]` input,
+/// `[C_o/c_ob][C_i/c_ib][H_f][W_f][c_ib][c_ob]` kernel,
+/// `[C_o/c_ob][H_o][W_o][c_ob]` output, all row-major). The output is
+/// overwritten (zeroed internally); nothing is allocated when
+/// `threads <= 1` — this is the `execute_into` hot path of the `direct`
+/// engine backend. With `threads > 1` the only allocations are the
+/// per-call thread-partition bookkeeping (independent of tensor sizes).
+pub fn conv_direct_blocked_into(
+    inp: &[f32],
+    ker: &[f32],
+    shape: &ConvShape,
+    bp: BlockParams,
+    threads: usize,
+    out: &mut [f32],
+) -> Result<()> {
+    shape.validate()?;
+    bp.validate_for(shape)?;
+    if bp.w_ob == 0 || bp.w_ob > MAX_WOB {
+        return Err(Error::Shape(format!("w_ob={} out of range 1..={}", bp.w_ob, MAX_WOB)));
+    }
+    let n_img = shape.c_i * shape.h_i * shape.w_i;
+    if inp.len() != n_img {
+        return Err(Error::Shape(format!(
+            "blocked input has {} elements, expected {n_img}",
+            inp.len()
+        )));
+    }
+    let n_ker = shape.c_o * shape.c_i * shape.h_f * shape.w_f;
+    if ker.len() != n_ker {
+        return Err(Error::Shape(format!(
+            "blocked kernel has {} elements, expected {n_ker}",
+            ker.len()
+        )));
+    }
+    let n_out = shape.c_o * shape.h_o() * shape.w_o();
+    if out.len() != n_out {
+        return Err(Error::Shape(format!(
+            "blocked output has {} elements, expected {n_out}",
+            out.len()
+        )));
+    }
     let threads = threads.max(1);
     match bp.c_ob {
-        1 => run::<1>(input, kernel, shape, bp, threads),
-        2 => run::<2>(input, kernel, shape, bp, threads),
-        4 => run::<4>(input, kernel, shape, bp, threads),
-        8 => run::<8>(input, kernel, shape, bp, threads),
-        16 => run::<16>(input, kernel, shape, bp, threads),
-        32 => run::<32>(input, kernel, shape, bp, threads),
+        1 => run_into::<1>(inp, ker, shape, bp, threads, out),
+        2 => run_into::<2>(inp, ker, shape, bp, threads, out),
+        4 => run_into::<4>(inp, ker, shape, bp, threads, out),
+        8 => run_into::<8>(inp, ker, shape, bp, threads, out),
+        16 => run_into::<16>(inp, ker, shape, bp, threads, out),
+        32 => run_into::<32>(inp, ker, shape, bp, threads, out),
         other => Err(Error::Shape(format!(
             "unsupported c_ob={other} (supported: 1,2,4,8,16,32)"
         ))),
@@ -90,6 +136,10 @@ pub fn conv_direct_blocked(
 /// [`conv_direct_blocked`], and unpacks the result to `[C_o][H_o][W_o]`.
 /// (Production use keeps everything blocked across layers — see the
 /// coordinator pipeline; this wrapper exists for tests and one-shot use.)
+#[deprecated(
+    note = "plan through engine::BackendRegistry (backend \"direct\") and reuse \
+            ConvPlan::execute_into; this wrapper re-packs both operands per call"
+)]
 pub fn conv_direct(
     input: &Tensor,
     kernel: &Tensor,
@@ -104,47 +154,43 @@ pub fn conv_direct(
     from_blocked_io(&bo)
 }
 
-fn run<const COB: usize>(
-    input: &Tensor,
-    kernel: &Tensor,
+fn run_into<const COB: usize>(
+    inp: &[f32],
+    ker: &[f32],
     shape: &ConvShape,
     bp: BlockParams,
     threads: usize,
-) -> Result<Tensor> {
+    out: &mut [f32],
+) -> Result<()> {
     let (h_o, w_o) = (shape.h_o(), shape.w_o());
     let n_ob = shape.c_o / COB;
-    let mut out = Tensor::zeros(&[n_ob, h_o, w_o, COB]);
-    {
-        let inp = input.data();
-        let ker = kernel.data();
-        let blk_len = h_o * w_o * COB;
-        let blocks: Vec<(usize, &mut [f32])> =
-            out.data_mut().chunks_mut(blk_len).enumerate().collect();
-        if threads <= 1 || n_ob <= 1 {
-            for (jb, out_blk) in blocks {
-                conv_block::<COB>(inp, ker, shape, bp, jb, out_blk);
-            }
-        } else {
-            // Paper §3.2: parallelism over the C_o dimension; each thread
-            // owns whole output-channel blocks (disjoint output, no
-            // synchronization on the hot path).
-            let mut per_thread: Vec<Vec<(usize, &mut [f32])>> =
-                (0..threads).map(|_| Vec::new()).collect();
-            for (idx, b) in blocks.into_iter().enumerate() {
-                per_thread[idx % threads].push(b);
-            }
-            std::thread::scope(|scope| {
-                for chunk in per_thread {
-                    scope.spawn(move || {
-                        for (jb, out_blk) in chunk {
-                            conv_block::<COB>(inp, ker, shape, bp, jb, out_blk);
-                        }
-                    });
-                }
-            });
+    let blk_len = h_o * w_o * COB;
+    out.fill(0.0);
+    if threads <= 1 || n_ob <= 1 {
+        // Serial path: no allocation of any kind.
+        for (jb, out_blk) in out.chunks_mut(blk_len).enumerate() {
+            conv_block::<COB>(inp, ker, shape, bp, jb, out_blk);
         }
+    } else {
+        // Paper §3.2: parallelism over the C_o dimension; each thread
+        // owns whole output-channel blocks (disjoint output, no
+        // synchronization on the hot path).
+        let mut per_thread: Vec<Vec<(usize, &mut [f32])>> =
+            (0..threads).map(|_| Vec::new()).collect();
+        for (idx, b) in out.chunks_mut(blk_len).enumerate() {
+            per_thread[idx % threads].push((idx, b));
+        }
+        std::thread::scope(|scope| {
+            for chunk in per_thread {
+                scope.spawn(move || {
+                    for (jb, out_blk) in chunk {
+                        conv_block::<COB>(inp, ker, shape, bp, jb, out_blk);
+                    }
+                });
+            }
+        });
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Compute one output-channel block `jb` (all rows/columns, all input
@@ -205,7 +251,7 @@ fn conv_block_t<const COB: usize, const TW: usize>(
                 load_tile_c::<COB, TW>(&mut acc, tile);
                 let g = TileGeom { h_f, w_f, c_ib, h_i, w_i, stride: s, pad: p, l, k0 };
                 reduce_tile::<COB, TW>(&mut acc, islab, kslab, &g);
-                store_tile_c::<COB, TW>(&acc, tile, );
+                store_tile_c::<COB, TW>(&acc, tile);
             }
             // Row remainder: dispatch to a narrower const-width kernel
             // (keeps the accumulators in registers; the dynamic-width
@@ -251,6 +297,7 @@ fn reduce_rem<const COB: usize>(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // conv_direct stays covered until the wrapper is removed
 mod tests {
     use super::*;
     use crate::conv::conv_naive;

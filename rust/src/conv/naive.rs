@@ -16,15 +16,46 @@ use crate::{Error, Result};
 pub fn conv_naive(input: &Tensor, kernel: &Tensor, shape: &ConvShape) -> Result<Tensor> {
     shape.validate()?;
     check_shapes(input, kernel, shape)?;
+    let mut out = Tensor::zeros(&[shape.c_o, shape.h_o(), shape.w_o()]);
+    conv_naive_into(input.data(), kernel.data(), shape, out.data_mut())?;
+    Ok(out)
+}
+
+/// Allocation-free core of [`conv_naive`]: writes the `[C_o][H_o][W_o]`
+/// result into a caller-owned buffer (overwritten, zeroed internally).
+/// This is the `execute_into` path of the `naive` engine backend.
+pub fn conv_naive_into(
+    inp: &[f32],
+    ker: &[f32],
+    shape: &ConvShape,
+    o: &mut [f32],
+) -> Result<()> {
     let (h_o, w_o) = (shape.h_o(), shape.w_o());
     let (c_i, h_i, w_i) = (shape.c_i, shape.h_i, shape.w_i);
     let (c_o, h_f, w_f) = (shape.c_o, shape.h_f, shape.w_f);
     let (s, p) = (shape.stride, shape.pad as isize);
-
-    let inp = input.data();
-    let ker = kernel.data();
-    let mut out = Tensor::zeros(&[c_o, h_o, w_o]);
-    let o = out.data_mut();
+    if inp.len() != c_i * h_i * w_i {
+        return Err(Error::Shape(format!(
+            "input has {} elements, expected {}",
+            inp.len(),
+            c_i * h_i * w_i
+        )));
+    }
+    if ker.len() != c_o * c_i * h_f * w_f {
+        return Err(Error::Shape(format!(
+            "kernel has {} elements, expected {}",
+            ker.len(),
+            c_o * c_i * h_f * w_f
+        )));
+    }
+    if o.len() != c_o * h_o * w_o {
+        return Err(Error::Shape(format!(
+            "output has {} elements, expected {}",
+            o.len(),
+            c_o * h_o * w_o
+        )));
+    }
+    o.fill(0.0);
 
     // Paper Algorithm 1: for i, j, k, l, m, n (plus padding guards).
     for i in 0..c_i {
@@ -47,7 +78,7 @@ pub fn conv_naive(input: &Tensor, kernel: &Tensor, shape: &ConvShape) -> Result<
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 pub(crate) fn check_shapes(input: &Tensor, kernel: &Tensor, shape: &ConvShape) -> Result<()> {

@@ -41,6 +41,10 @@ pub fn kernel_to_hwio(kernel: &Tensor) -> Result<Tensor> {
 
 /// Convolve channel-last input `[H_i][W_i][C_i]` with an HWIO kernel
 /// `[H_f][W_f][C_i][C_o]`, producing `[H_o][W_o][C_o]`.
+#[deprecated(
+    note = "plan through engine::BackendRegistry (backend \"reorder\"), which owns \
+            the HWIO pre-transform; or use conv_reorder_into for the raw kernel"
+)]
 pub fn conv_reorder(input: &Tensor, kernel_hwio: &Tensor, shape: &ConvShape) -> Result<Tensor> {
     shape.validate()?;
     let want_in = [shape.h_i, shape.w_i, shape.c_i];
@@ -59,15 +63,48 @@ pub fn conv_reorder(input: &Tensor, kernel_hwio: &Tensor, shape: &ConvShape) -> 
             want_k
         )));
     }
+    let mut out = Tensor::zeros(&[shape.h_o(), shape.w_o(), shape.c_o]);
+    conv_reorder_into(input.data(), kernel_hwio.data(), shape, out.data_mut())?;
+    Ok(out)
+}
+
+/// Allocation-free core of Algorithm 2: flat channel-last slices
+/// (`[H_i][W_i][C_i]` input, `[H_f][W_f][C_i][C_o]` kernel,
+/// `[H_o][W_o][C_o]` output). The output buffer is overwritten (zeroed
+/// internally). This is the `execute_into` path of the `reorder` engine
+/// backend.
+pub fn conv_reorder_into(
+    inp: &[f32],
+    ker: &[f32],
+    shape: &ConvShape,
+    o: &mut [f32],
+) -> Result<()> {
     let (h_o, w_o) = (shape.h_o(), shape.w_o());
     let (c_i, h_i, w_i) = (shape.c_i, shape.h_i, shape.w_i);
     let (c_o, h_f, w_f) = (shape.c_o, shape.h_f, shape.w_f);
     let (s, p) = (shape.stride, shape.pad as isize);
-
-    let inp = input.data();
-    let ker = kernel_hwio.data();
-    let mut out = Tensor::zeros(&[h_o, w_o, c_o]);
-    let o = out.data_mut();
+    if inp.len() != c_i * h_i * w_i {
+        return Err(Error::Shape(format!(
+            "input has {} elements, expected {}",
+            inp.len(),
+            c_i * h_i * w_i
+        )));
+    }
+    if ker.len() != c_o * c_i * h_f * w_f {
+        return Err(Error::Shape(format!(
+            "kernel has {} elements, expected {}",
+            ker.len(),
+            c_o * c_i * h_f * w_f
+        )));
+    }
+    if o.len() != c_o * h_o * w_o {
+        return Err(Error::Shape(format!(
+            "output has {} elements, expected {}",
+            o.len(),
+            c_o * h_o * w_o
+        )));
+    }
+    o.fill(0.0);
 
     // Paper Algorithm 2: for l, n, m, i, k, j.
     for l in 0..h_o {
@@ -96,10 +133,11 @@ pub fn conv_reorder(input: &Tensor, kernel_hwio: &Tensor, shape: &ConvShape) -> 
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // conv_reorder stays covered until the wrapper is removed
 mod tests {
     use super::*;
     use crate::conv::conv_naive;

@@ -8,9 +8,13 @@
 //! * a bounded request queue with backpressure ([`Coordinator::submit`]
 //!   fails fast when the queue is full rather than buffering unbounded);
 //! * a [`batcher`] that groups requests and pads them to the nearest
-//!   AOT-compiled batch size (`cnn_b{1,2,4,8}` artifacts);
-//! * a worker loop running batches on the PJRT [`crate::runtime`], and
-//!   scattering per-request outputs back to their reply channels;
+//!   compiled batch size (`{prefix}_b{1,2,4,8}` artifacts);
+//! * a worker loop running batches on any [`ModelExecutor`] — the
+//!   native cached-plan path ([`crate::engine::PlanEngine`]: one
+//!   [`crate::engine::ConvPlan`] per layer, planned once, buffers
+//!   reused across every batched request) or, behind the `pjrt`
+//!   feature, the XLA/PJRT engine — scattering per-request outputs
+//!   back to their reply channels;
 //! * [`crate::metrics`] (latency histogram, batch occupancy, throughput).
 
 pub mod batcher;
@@ -18,7 +22,7 @@ pub mod batcher;
 pub use batcher::{BatchPlan, Batcher, BatcherConfig};
 
 use crate::metrics::{Histogram, ServeStats};
-use crate::runtime::EngineHandle;
+use crate::runtime::ModelExecutor;
 use crate::{Error, Result};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -74,8 +78,11 @@ impl Pending {
 }
 
 impl Coordinator {
-    /// Start the batching worker on top of a running engine.
-    pub fn start(engine: EngineHandle, cfg: CoordinatorConfig) -> Result<Coordinator> {
+    /// Start the batching worker on top of any [`ModelExecutor`] — the
+    /// executor is moved onto the worker thread, which serves every
+    /// batch through it (for [`crate::engine::PlanEngine`] that means
+    /// one cached plan reused across all requests).
+    pub fn start<E: ModelExecutor>(engine: E, cfg: CoordinatorConfig) -> Result<Coordinator> {
         let batches = engine.manifest().cnn_batches();
         if batches.is_empty() {
             return Err(Error::Runtime("manifest has no cnn artifacts".into()));
@@ -146,8 +153,8 @@ impl Coordinator {
 }
 
 /// Worker loop: drain the queue into batches, execute, scatter replies.
-fn worker(
-    engine: EngineHandle,
+fn worker<E: ModelExecutor>(
+    engine: E,
     cfg: CoordinatorConfig,
     batches: Vec<usize>,
     image_elems: usize,

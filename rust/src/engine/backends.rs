@@ -1,0 +1,447 @@
+//! [`ConvAlgo`]/[`ConvPlan`] implementations for every convolution
+//! algorithm in the crate. Each plan owns its pre-transformed weights
+//! and executes through the allocation-free `*_into` kernel cores.
+
+use super::{check_execute_buffers, retained_over_kernel, ConvAlgo, ConvPlan};
+use crate::arch::Machine;
+use crate::conv::reorder::kernel_to_hwio;
+use crate::conv::{
+    conv_direct_blocked_into, conv_naive_into, conv_reorder_into, select_params, BlockParams,
+    ConvShape,
+};
+use crate::fftconv::FftConvPlan;
+use crate::layout::{to_blocked_kernel, IoLayout};
+use crate::lowering::conv_im2col_into;
+use crate::tensor::Tensor;
+use crate::winograd::{
+    conv_winograd_into, transform_kernels, winograd_applicable, winograd_workspace_len,
+};
+use crate::Result;
+
+fn check_plan_inputs(shape: &ConvShape, kernel: &Tensor) -> Result<()> {
+    shape.validate()?;
+    let want = [shape.c_o, shape.c_i, shape.h_f, shape.w_f];
+    if kernel.shape() != want {
+        return Err(crate::Error::Shape(format!(
+            "plan kernel shape {:?} != expected {:?}",
+            kernel.shape(),
+            want
+        )));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// direct — Algorithm 3 (the paper's contribution)
+// ---------------------------------------------------------------------
+
+/// The paper's blocked direct convolution: §4 layouts, analytic
+/// `C_o,b x W_o,b x C_i,b` blocking, zero memory overhead.
+pub struct DirectBackend;
+
+struct DirectPlan {
+    shape: ConvShape,
+    bp: BlockParams,
+    threads: usize,
+    /// §4 kernel layout `[C_o/C_ob][C_i/C_ib][H_f][W_f][C_ib][C_ob]` —
+    /// a pure permutation of the OIHW weights (same byte count).
+    kernel: Tensor,
+}
+
+impl ConvAlgo for DirectBackend {
+    fn name(&self) -> &'static str {
+        "direct"
+    }
+
+    fn applicable(&self, shape: &ConvShape) -> bool {
+        shape.validate().is_ok()
+    }
+
+    fn plan(
+        &self,
+        shape: &ConvShape,
+        kernel: &Tensor,
+        machine: &Machine,
+        threads: usize,
+    ) -> Result<Box<dyn ConvPlan>> {
+        check_plan_inputs(shape, kernel)?;
+        let bp = select_params(machine, shape);
+        bp.validate_for(shape)?;
+        let packed = to_blocked_kernel(kernel, bp.c_ob, bp.c_ib)?;
+        Ok(Box::new(DirectPlan {
+            shape: shape.clone(),
+            bp,
+            threads: threads.max(1),
+            kernel: packed,
+        }))
+    }
+}
+
+impl ConvPlan for DirectPlan {
+    fn backend(&self) -> &'static str {
+        "direct"
+    }
+    fn shape(&self) -> &ConvShape {
+        &self.shape
+    }
+    fn input_layout(&self) -> IoLayout {
+        IoLayout::Blocked { c_b: self.bp.c_ib }
+    }
+    fn output_layout(&self) -> IoLayout {
+        IoLayout::Blocked { c_b: self.bp.c_ob }
+    }
+    fn retained_bytes(&self) -> u64 {
+        // The blocked kernel is a permutation: exactly kernel_bytes().
+        retained_over_kernel(&self.shape, 4 * self.kernel.len() as u64)
+    }
+    fn workspace_len(&self) -> usize {
+        0
+    }
+    fn execute_into(&self, input: &[f32], output: &mut [f32], workspace: &mut [f32]) -> Result<()> {
+        check_execute_buffers(&self.shape, 0, input, output, workspace)?;
+        conv_direct_blocked_into(input, self.kernel.data(), &self.shape, self.bp, self.threads, output)
+    }
+}
+
+// ---------------------------------------------------------------------
+// reorder — Algorithm 2
+// ---------------------------------------------------------------------
+
+/// The paper's reordered loop nest over channel-last data (Algorithm 2);
+/// the unblocked midpoint between naive and direct.
+pub struct ReorderBackend;
+
+struct ReorderPlan {
+    shape: ConvShape,
+    /// HWIO weights `[H_f][W_f][C_i][C_o]` — a pure permutation.
+    kernel: Tensor,
+}
+
+impl ConvAlgo for ReorderBackend {
+    fn name(&self) -> &'static str {
+        "reorder"
+    }
+    fn applicable(&self, shape: &ConvShape) -> bool {
+        shape.validate().is_ok()
+    }
+    fn plan(
+        &self,
+        shape: &ConvShape,
+        kernel: &Tensor,
+        _machine: &Machine,
+        _threads: usize,
+    ) -> Result<Box<dyn ConvPlan>> {
+        check_plan_inputs(shape, kernel)?;
+        Ok(Box::new(ReorderPlan { shape: shape.clone(), kernel: kernel_to_hwio(kernel)? }))
+    }
+}
+
+impl ConvPlan for ReorderPlan {
+    fn backend(&self) -> &'static str {
+        "reorder"
+    }
+    fn shape(&self) -> &ConvShape {
+        &self.shape
+    }
+    fn input_layout(&self) -> IoLayout {
+        IoLayout::Nhwc
+    }
+    fn output_layout(&self) -> IoLayout {
+        IoLayout::Nhwc
+    }
+    fn retained_bytes(&self) -> u64 {
+        retained_over_kernel(&self.shape, 4 * self.kernel.len() as u64)
+    }
+    fn workspace_len(&self) -> usize {
+        0
+    }
+    fn execute_into(&self, input: &[f32], output: &mut [f32], workspace: &mut [f32]) -> Result<()> {
+        check_execute_buffers(&self.shape, 0, input, output, workspace)?;
+        conv_reorder_into(input, self.kernel.data(), &self.shape, output)
+    }
+}
+
+// ---------------------------------------------------------------------
+// naive — Algorithm 1 (correctness oracle)
+// ---------------------------------------------------------------------
+
+/// The six-loop oracle (Algorithm 1). Zero overhead, deliberately slow;
+/// the conformance reference every other backend is checked against.
+pub struct NaiveBackend;
+
+struct NaivePlan {
+    shape: ConvShape,
+    /// OIHW weights, held as-is.
+    kernel: Tensor,
+}
+
+impl ConvAlgo for NaiveBackend {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+    fn applicable(&self, shape: &ConvShape) -> bool {
+        shape.validate().is_ok()
+    }
+    fn plan(
+        &self,
+        shape: &ConvShape,
+        kernel: &Tensor,
+        _machine: &Machine,
+        _threads: usize,
+    ) -> Result<Box<dyn ConvPlan>> {
+        check_plan_inputs(shape, kernel)?;
+        Ok(Box::new(NaivePlan { shape: shape.clone(), kernel: kernel.clone() }))
+    }
+}
+
+impl ConvPlan for NaivePlan {
+    fn backend(&self) -> &'static str {
+        "naive"
+    }
+    fn shape(&self) -> &ConvShape {
+        &self.shape
+    }
+    fn input_layout(&self) -> IoLayout {
+        IoLayout::Nchw
+    }
+    fn output_layout(&self) -> IoLayout {
+        IoLayout::Nchw
+    }
+    fn retained_bytes(&self) -> u64 {
+        retained_over_kernel(&self.shape, 4 * self.kernel.len() as u64)
+    }
+    fn workspace_len(&self) -> usize {
+        0
+    }
+    fn execute_into(&self, input: &[f32], output: &mut [f32], workspace: &mut [f32]) -> Result<()> {
+        check_execute_buffers(&self.shape, 0, input, output, workspace)?;
+        conv_naive_into(input, self.kernel.data(), &self.shape, output)
+    }
+}
+
+// ---------------------------------------------------------------------
+// im2col — Caffe lowering + Goto SGEMM (§2.2 comparator)
+// ---------------------------------------------------------------------
+
+/// Caffe's im2col lowering followed by the crate's Goto SGEMM. The
+/// lowered matrix is the workspace the paper's §2.2 overhead analysis
+/// charges this approach with.
+pub struct Im2colBackend;
+
+struct Im2colPlan {
+    shape: ConvShape,
+    /// OIHW weights; the GEMM reads them as `C_o x (C_i*H_f*W_f)`.
+    kernel: Tensor,
+    threads: usize,
+}
+
+impl ConvAlgo for Im2colBackend {
+    fn name(&self) -> &'static str {
+        "im2col"
+    }
+    fn applicable(&self, shape: &ConvShape) -> bool {
+        shape.validate().is_ok()
+    }
+    fn plan(
+        &self,
+        shape: &ConvShape,
+        kernel: &Tensor,
+        _machine: &Machine,
+        threads: usize,
+    ) -> Result<Box<dyn ConvPlan>> {
+        check_plan_inputs(shape, kernel)?;
+        Ok(Box::new(Im2colPlan {
+            shape: shape.clone(),
+            kernel: kernel.clone(),
+            threads: threads.max(1),
+        }))
+    }
+}
+
+impl ConvPlan for Im2colPlan {
+    fn backend(&self) -> &'static str {
+        "im2col"
+    }
+    fn shape(&self) -> &ConvShape {
+        &self.shape
+    }
+    fn input_layout(&self) -> IoLayout {
+        IoLayout::Nchw
+    }
+    fn output_layout(&self) -> IoLayout {
+        IoLayout::Nchw
+    }
+    fn retained_bytes(&self) -> u64 {
+        retained_over_kernel(&self.shape, 4 * self.kernel.len() as u64)
+    }
+    fn workspace_len(&self) -> usize {
+        let s = &self.shape;
+        s.c_i * s.h_f * s.w_f * s.h_o() * s.w_o()
+    }
+    fn execute_into(&self, input: &[f32], output: &mut [f32], workspace: &mut [f32]) -> Result<()> {
+        check_execute_buffers(&self.shape, self.workspace_len(), input, output, workspace)?;
+        conv_im2col_into(input, self.kernel.data(), &self.shape, self.threads, output, workspace)
+    }
+}
+
+// ---------------------------------------------------------------------
+// fft — NNPACK-style frequency-domain convolution (§2.1 comparator)
+// ---------------------------------------------------------------------
+
+/// Frequency-domain convolution with precomputed kernel spectra (the
+/// NNPACK inference mode). Retains the §2.1 memory blow-up the paper
+/// describes: each `H_f x W_f` kernel becomes an `N x N` complex grid.
+pub struct FftBackend;
+
+struct FftPlan {
+    inner: FftConvPlan,
+}
+
+impl ConvAlgo for FftBackend {
+    fn name(&self) -> &'static str {
+        "fft"
+    }
+    fn applicable(&self, shape: &ConvShape) -> bool {
+        shape.validate().is_ok()
+    }
+    fn plan(
+        &self,
+        shape: &ConvShape,
+        kernel: &Tensor,
+        _machine: &Machine,
+        _threads: usize,
+    ) -> Result<Box<dyn ConvPlan>> {
+        check_plan_inputs(shape, kernel)?;
+        Ok(Box::new(FftPlan { inner: FftConvPlan::new(kernel, shape)? }))
+    }
+}
+
+impl ConvPlan for FftPlan {
+    fn backend(&self) -> &'static str {
+        "fft"
+    }
+    fn shape(&self) -> &ConvShape {
+        self.inner.shape()
+    }
+    fn input_layout(&self) -> IoLayout {
+        IoLayout::Nchw
+    }
+    fn output_layout(&self) -> IoLayout {
+        IoLayout::Nchw
+    }
+    fn retained_bytes(&self) -> u64 {
+        retained_over_kernel(self.inner.shape(), self.inner.retained_bytes())
+    }
+    fn workspace_len(&self) -> usize {
+        self.inner.workspace_len()
+    }
+    fn execute_into(&self, input: &[f32], output: &mut [f32], workspace: &mut [f32]) -> Result<()> {
+        check_execute_buffers(self.inner.shape(), self.workspace_len(), input, output, workspace)?;
+        self.inner.run_into(input, output, workspace)
+    }
+}
+
+// ---------------------------------------------------------------------
+// winograd — F(2x2, 3x3) (§2 comparator for 3x3/s1 layers)
+// ---------------------------------------------------------------------
+
+/// Winograd F(2x2,3x3) over pre-transformed weights. Only applicable to
+/// 3x3/stride-1 layers; retains the 16/9-sized transformed weights.
+pub struct WinogradBackend;
+
+struct WinogradPlan {
+    shape: ConvShape,
+    /// Transformed weights `U[C_o][C_i][16]`.
+    u: Vec<f32>,
+}
+
+impl ConvAlgo for WinogradBackend {
+    fn name(&self) -> &'static str {
+        "winograd"
+    }
+    fn applicable(&self, shape: &ConvShape) -> bool {
+        shape.validate().is_ok() && winograd_applicable(shape)
+    }
+    fn plan(
+        &self,
+        shape: &ConvShape,
+        kernel: &Tensor,
+        _machine: &Machine,
+        _threads: usize,
+    ) -> Result<Box<dyn ConvPlan>> {
+        check_plan_inputs(shape, kernel)?;
+        Ok(Box::new(WinogradPlan { shape: shape.clone(), u: transform_kernels(kernel, shape)? }))
+    }
+}
+
+impl ConvPlan for WinogradPlan {
+    fn backend(&self) -> &'static str {
+        "winograd"
+    }
+    fn shape(&self) -> &ConvShape {
+        &self.shape
+    }
+    fn input_layout(&self) -> IoLayout {
+        IoLayout::Nchw
+    }
+    fn output_layout(&self) -> IoLayout {
+        IoLayout::Nchw
+    }
+    fn retained_bytes(&self) -> u64 {
+        retained_over_kernel(&self.shape, 4 * self.u.len() as u64)
+    }
+    fn workspace_len(&self) -> usize {
+        winograd_workspace_len(&self.shape)
+    }
+    fn execute_into(&self, input: &[f32], output: &mut [f32], workspace: &mut [f32]) -> Result<()> {
+        check_execute_buffers(&self.shape, self.workspace_len(), input, output, workspace)?;
+        conv_winograd_into(input, &self.u, &self.shape, output, workspace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::haswell;
+
+    #[test]
+    fn plans_report_paper_overheads() {
+        let s = ConvShape::new(16, 13, 13, 32, 3, 3, 1, 1);
+        let k = Tensor::random(&[32, 16, 3, 3], 7);
+        let m = haswell();
+
+        let direct = DirectBackend.plan(&s, &k, &m, 1).unwrap();
+        assert_eq!(direct.retained_bytes(), 0, "§4 layouts are permutations");
+        assert_eq!(direct.workspace_bytes(), 0, "zero-memory-overhead claim");
+
+        let reorder = ReorderBackend.plan(&s, &k, &m, 1).unwrap();
+        assert_eq!(reorder.retained_bytes() + reorder.workspace_bytes(), 0);
+
+        let im2col = Im2colBackend.plan(&s, &k, &m, 1).unwrap();
+        assert_eq!(im2col.retained_bytes(), 0);
+        assert_eq!(im2col.workspace_bytes(), s.im2col_bytes());
+
+        let fft = FftBackend.plan(&s, &k, &m, 1).unwrap();
+        assert!(fft.retained_bytes() > 4 * s.kernel_bytes(), "§2.1 blow-up");
+
+        let wino = WinogradBackend.plan(&s, &k, &m, 1).unwrap();
+        // 16/9 transformed weights minus the 3x3 weights they replace.
+        assert_eq!(wino.retained_bytes(), 4u64 * 16 * 32 * 16 - s.kernel_bytes());
+    }
+
+    #[test]
+    fn winograd_rejects_non_3x3() {
+        let s = ConvShape::new(4, 9, 9, 8, 5, 5, 1, 2);
+        let k = Tensor::zeros(&[8, 4, 5, 5]);
+        assert!(!WinogradBackend.applicable(&s));
+        assert!(WinogradBackend.plan(&s, &k, &haswell(), 1).is_err());
+    }
+
+    #[test]
+    fn plan_rejects_mismatched_kernel() {
+        let s = ConvShape::new(4, 9, 9, 8, 3, 3, 1, 1);
+        let bad = Tensor::zeros(&[8, 4, 3, 2]);
+        assert!(DirectBackend.plan(&s, &bad, &haswell(), 1).is_err());
+        assert!(Im2colBackend.plan(&s, &bad, &haswell(), 1).is_err());
+    }
+}

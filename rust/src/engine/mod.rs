@@ -1,0 +1,315 @@
+//! The crate-wide plan/execute convolution API.
+//!
+//! # Lifecycle
+//!
+//! Every convolution backend in the crate — the paper's direct
+//! convolution and all of its §2 comparators — is exposed through one
+//! two-phase contract:
+//!
+//! 1. **Plan** ([`ConvAlgo::plan`]): given the layer shape, the OIHW
+//!    weights, a [`Machine`] descriptor and a thread count, the backend
+//!    performs every per-layer pre-transform *once* — blocking-parameter
+//!    selection and §4 kernel packing for `direct`, the HWIO permutation
+//!    for `reorder`, kernel spectra for `fft`, transformed weights for
+//!    `winograd` — and returns a [`ConvPlan`] that owns that state.
+//! 2. **Execute** ([`ConvPlan::execute_into`]): the hot path. Operands
+//!    are flat `f32` slices in the plan's native layouts
+//!    ([`ConvPlan::input_layout`] / [`ConvPlan::output_layout`]) plus a
+//!    caller-owned scratch buffer of exactly
+//!    [`ConvPlan::workspace_len`] floats. The call allocates nothing:
+//!    a serving loop plans once per layer, allocates output + workspace
+//!    once, and executes per request at zero memory cost. Two bounded
+//!    exceptions: `direct` planned with `threads > 1` allocates scoped
+//!    thread-spawn bookkeeping, and `im2col`'s Goto SGEMM packs its
+//!    panels into small internal buffers (capped by the GEMM's cache
+//!    block sizes, independent of layer shape and request count);
+//!    everything proportional to the tensors is caller-owned.
+//!
+//! [`ConvPlan::execute`] is the allocating one-shot convenience (NCHW
+//! in, NCHW out, layouts converted at the edges) used by tests, CLI
+//! commands and examples.
+//!
+//! # Memory-overhead accounting contract
+//!
+//! The paper's headline claim is *zero memory overhead*: direct
+//! convolution touches only the input, kernel and output bytes a layer
+//! intrinsically needs. Every plan reports its deviation from that
+//! budget through two numbers:
+//!
+//! * [`ConvPlan::retained_bytes`] — bytes the plan holds *for its
+//!   lifetime* beyond the layer's conventional weight storage
+//!   ([`ConvShape::kernel_bytes`]). A plan's packed weights *replace*
+//!   the caller's kernel (which may be dropped after planning), so pure
+//!   permutations — the §4 blocked layout, HWIO — retain **0** extra
+//!   bytes, while `fft` retains its `8·N²·C_o·C_i`-byte spectra minus
+//!   the weights they replace and `winograd` retains the `16/9`-sized
+//!   transformed weights minus the same.
+//! * [`ConvPlan::workspace_bytes`] — transient scratch bytes
+//!   `execute_into` needs per call (the caller owns and reuses them).
+//!   `im2col` reports its lowered matrix here; `direct`, `reorder` and
+//!   `naive` report **0**.
+//!
+//! `retained_bytes() + workspace_bytes() == 0` is therefore exactly the
+//! paper's zero-overhead property, and holds for the `direct` backend
+//! on every benchmark layer (asserted by the conformance suite).
+//!
+//! # Backends
+//!
+//! [`BackendRegistry`] maps names to implementations:
+//!
+//! | name       | algorithm                                   | overhead        |
+//! |------------|---------------------------------------------|-----------------|
+//! | `direct`   | Algorithm 3, §4 layouts, analytic blocking  | 0               |
+//! | `reorder`  | Algorithm 2, channel-last loop order        | 0               |
+//! | `naive`    | Algorithm 1 oracle                          | 0 (but slow)    |
+//! | `im2col`   | Caffe lowering + Goto SGEMM                 | workspace       |
+//! | `fft`      | NNPACK-style frequency domain               | retained        |
+//! | `winograd` | F(2x2,3x3), 3x3/stride-1 only               | retained        |
+//!
+//! `registry.auto(&shape, &machine)` (or the name `"auto"`) picks the
+//! best applicable backend for a layer: `direct` whenever its analytic
+//! output-channel block vectorizes on the machine, else `winograd` for
+//! eligible 3x3/s1 layers, else `im2col`.
+//!
+//! [`PlanEngine`] closes the loop with serving: it implements the
+//! coordinator's executor interface on top of a cached plan, so batched
+//! requests run through `execute_into` with every buffer reused.
+
+mod backends;
+mod registry;
+mod serving;
+
+pub use backends::{
+    DirectBackend, FftBackend, Im2colBackend, NaiveBackend, ReorderBackend, WinogradBackend,
+};
+pub use registry::{BackendRegistry, BACKEND_NAMES};
+pub use serving::PlanEngine;
+
+use crate::arch::Machine;
+use crate::conv::ConvShape;
+use crate::layout::{from_blocked_io, nchw_to_nhwc, nhwc_to_nchw, to_blocked_io, IoLayout};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// A convolution algorithm: a factory for per-layer [`ConvPlan`]s.
+pub trait ConvAlgo: Send + Sync {
+    /// Registry name (`"direct"`, `"im2col"`, ...).
+    fn name(&self) -> &'static str;
+
+    /// Whether the backend can run this layer at all (e.g. Winograd
+    /// F(2x2,3x3) requires 3x3/stride-1). [`ConvAlgo::plan`] fails on
+    /// non-applicable shapes.
+    fn applicable(&self, shape: &ConvShape) -> bool;
+
+    /// Build the per-layer plan: select parameters from the machine
+    /// model and pre-transform `kernel` (`[C_o][C_i][H_f][W_f]`) into
+    /// the backend's execution form. `threads` is retained by backends
+    /// that parallelize (`direct`, `im2col`); others execute
+    /// single-threaded.
+    fn plan(
+        &self,
+        shape: &ConvShape,
+        kernel: &Tensor,
+        machine: &Machine,
+        threads: usize,
+    ) -> Result<Box<dyn ConvPlan>>;
+}
+
+/// A planned convolution layer: pre-transformed weights plus everything
+/// needed to execute allocation-free. See the module docs for the
+/// lifecycle and the memory-accounting contract.
+pub trait ConvPlan: Send + Sync {
+    /// Name of the backend that produced this plan.
+    fn backend(&self) -> &'static str;
+
+    /// The layer shape the plan was built for.
+    fn shape(&self) -> &ConvShape;
+
+    /// Layout `execute_into` expects the input slice in.
+    fn input_layout(&self) -> IoLayout;
+
+    /// Layout `execute_into` produces the output slice in.
+    fn output_layout(&self) -> IoLayout;
+
+    /// Bytes retained for the plan's lifetime beyond the conventional
+    /// kernel storage (see module docs).
+    fn retained_bytes(&self) -> u64;
+
+    /// Per-execution scratch bytes (`4 * workspace_len()`).
+    fn workspace_bytes(&self) -> u64 {
+        4 * self.workspace_len() as u64
+    }
+
+    /// Scratch floats `execute_into` requires. `0` for zero-overhead
+    /// backends.
+    fn workspace_len(&self) -> usize;
+
+    /// Execute the layer on the hot path. `input` must hold
+    /// `C_i*H_i*W_i` floats in [`Self::input_layout`], `output`
+    /// `C_o*H_o*W_o` floats (overwritten) in [`Self::output_layout`],
+    /// `workspace` exactly [`Self::workspace_len`] floats (clobbered).
+    /// Allocation-free; buffers are validated by length.
+    fn execute_into(
+        &self,
+        input: &[f32],
+        output: &mut [f32],
+        workspace: &mut [f32],
+    ) -> Result<()>;
+
+    /// Pack a conventional `[C_i][H_i][W_i]` input into the plan's
+    /// native input layout (allocating convenience; staging at the
+    /// network edge, §4.3).
+    fn pack_input(&self, input: &Tensor) -> Result<Tensor> {
+        let s = self.shape();
+        let want = [s.c_i, s.h_i, s.w_i];
+        if input.shape() != want {
+            return Err(Error::Shape(format!(
+                "input shape {:?} != expected {:?}",
+                input.shape(),
+                want
+            )));
+        }
+        match self.input_layout() {
+            IoLayout::Nchw => Ok(input.clone()),
+            IoLayout::Nhwc => nchw_to_nhwc(input),
+            IoLayout::Blocked { c_b } => to_blocked_io(input, c_b),
+        }
+    }
+
+    /// Unpack a native-layout output tensor back to `[C_o][H_o][W_o]`
+    /// (allocating convenience).
+    fn unpack_output(&self, output: &Tensor) -> Result<Tensor> {
+        match self.output_layout() {
+            IoLayout::Nchw => Ok(output.clone()),
+            IoLayout::Nhwc => nhwc_to_nchw(output),
+            IoLayout::Blocked { .. } => from_blocked_io(output),
+        }
+    }
+
+    /// One-shot convenience: NCHW input in, NCHW output out, buffers
+    /// allocated internally. Not the hot path — serving loops hold the
+    /// buffers and call [`Self::execute_into`] directly.
+    fn execute(&self, input: &Tensor) -> Result<Tensor> {
+        let s = self.shape();
+        let want = [s.c_i, s.h_i, s.w_i];
+        if input.shape() != want {
+            return Err(Error::Shape(format!(
+                "input shape {:?} != expected {:?}",
+                input.shape(),
+                want
+            )));
+        }
+        let (h_o, w_o) = (s.h_o(), s.w_o());
+        let staged: Option<Tensor> = match self.input_layout() {
+            IoLayout::Nchw => None,
+            IoLayout::Nhwc => Some(nchw_to_nhwc(input)?),
+            IoLayout::Blocked { c_b } => Some(to_blocked_io(input, c_b)?),
+        };
+        let in_data = staged.as_ref().map(|t| t.data()).unwrap_or_else(|| input.data());
+        let mut out = vec![0.0f32; s.c_o * h_o * w_o];
+        let mut ws = vec![0.0f32; self.workspace_len()];
+        self.execute_into(in_data, &mut out, &mut ws)?;
+        match self.output_layout() {
+            IoLayout::Nchw => Tensor::from_vec(&[s.c_o, h_o, w_o], out),
+            IoLayout::Nhwc => {
+                let t = Tensor::from_vec(&[h_o, w_o, s.c_o], out)?;
+                nhwc_to_nchw(&t)
+            }
+            IoLayout::Blocked { c_b } => {
+                let t = Tensor::from_vec(&[s.c_o / c_b, h_o, w_o, c_b], out)?;
+                from_blocked_io(&t)
+            }
+        }
+    }
+}
+
+/// Row-major dimensions of a `C x H x W` feature map in `layout`.
+pub fn io_shape(layout: IoLayout, c: usize, h: usize, w: usize) -> Vec<usize> {
+    match layout {
+        IoLayout::Nchw => vec![c, h, w],
+        IoLayout::Nhwc => vec![h, w, c],
+        IoLayout::Blocked { c_b } => vec![c / c_b, h, w, c_b],
+    }
+}
+
+/// Shared length validation for `execute_into` implementations.
+pub(crate) fn check_execute_buffers(
+    shape: &ConvShape,
+    workspace_len: usize,
+    input: &[f32],
+    output: &[f32],
+    workspace: &[f32],
+) -> Result<()> {
+    let n_in = shape.c_i * shape.h_i * shape.w_i;
+    if input.len() != n_in {
+        return Err(Error::Shape(format!(
+            "execute_into input has {} elements, expected {n_in}",
+            input.len()
+        )));
+    }
+    let n_out = shape.c_o * shape.h_o() * shape.w_o();
+    if output.len() != n_out {
+        return Err(Error::Shape(format!(
+            "execute_into output has {} elements, expected {n_out}",
+            output.len()
+        )));
+    }
+    if workspace.len() != workspace_len {
+        return Err(Error::Shape(format!(
+            "execute_into workspace has {} floats, expected {workspace_len}",
+            workspace.len()
+        )));
+    }
+    Ok(())
+}
+
+/// Plan-held weight bytes in excess of the conventional kernel storage
+/// (the accounting rule from the module docs).
+pub(crate) fn retained_over_kernel(shape: &ConvShape, held_bytes: u64) -> u64 {
+    held_bytes.saturating_sub(shape.kernel_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::haswell;
+    use crate::conv::conv_naive;
+
+    #[test]
+    fn io_shape_covers_all_layouts() {
+        assert_eq!(io_shape(IoLayout::Nchw, 8, 3, 4), vec![8, 3, 4]);
+        assert_eq!(io_shape(IoLayout::Nhwc, 8, 3, 4), vec![3, 4, 8]);
+        assert_eq!(io_shape(IoLayout::Blocked { c_b: 4 }, 8, 3, 4), vec![2, 3, 4, 4]);
+    }
+
+    #[test]
+    fn plan_execute_round_trip_matches_naive() {
+        let s = ConvShape::new(8, 10, 10, 16, 3, 3, 1, 1);
+        let m = haswell();
+        let input = Tensor::random(&[8, 10, 10], 1);
+        let kernel = Tensor::random(&[16, 8, 3, 3], 2);
+        let want = conv_naive(&input, &kernel, &s).unwrap();
+        let registry = BackendRegistry::default();
+        let plan = registry.get("direct").unwrap().plan(&s, &kernel, &m, 1).unwrap();
+        let got = plan.execute(&input).unwrap();
+        assert!(got.allclose(&want, 1e-3, 1e-4), "diff {}", got.max_abs_diff(&want));
+        // pack/unpack helpers invert each other through the plan layouts
+        let packed = plan.pack_input(&input).unwrap();
+        assert_eq!(packed.len(), input.len(), "§4 layouts are permutations");
+    }
+
+    #[test]
+    fn execute_rejects_wrong_input_shape() {
+        let s = ConvShape::new(8, 10, 10, 16, 3, 3, 1, 1);
+        let m = haswell();
+        let kernel = Tensor::random(&[16, 8, 3, 3], 2);
+        let registry = BackendRegistry::default();
+        let plan = registry.get("direct").unwrap().plan(&s, &kernel, &m, 1).unwrap();
+        let bad = Tensor::zeros(&[8, 9, 10]);
+        assert!(plan.execute(&bad).is_err());
+        // wrong buffer lengths on the raw path
+        let mut out = vec![0.0f32; 5];
+        let mut ws = vec![0.0f32; plan.workspace_len()];
+        assert!(plan.execute_into(&[0.0; 3], &mut out, &mut ws).is_err());
+    }
+}

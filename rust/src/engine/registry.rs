@@ -1,0 +1,158 @@
+//! Name-indexed registry over every [`ConvAlgo`] backend, plus the
+//! `auto` per-layer selector.
+
+use super::backends::{
+    DirectBackend, FftBackend, Im2colBackend, NaiveBackend, ReorderBackend, WinogradBackend,
+};
+use super::{ConvAlgo, ConvPlan};
+use crate::arch::Machine;
+use crate::conv::params::select_c_ob;
+use crate::conv::ConvShape;
+use crate::tensor::Tensor;
+use crate::winograd::winograd_applicable;
+use crate::{Error, Result};
+
+/// Every backend name the default registry serves, selection-priority
+/// first. `"auto"` additionally resolves via [`BackendRegistry::auto`].
+pub const BACKEND_NAMES: [&str; 6] = ["direct", "reorder", "im2col", "fft", "winograd", "naive"];
+
+/// A set of convolution backends addressable by name.
+pub struct BackendRegistry {
+    backends: Vec<Box<dyn ConvAlgo>>,
+}
+
+impl Default for BackendRegistry {
+    /// Registry with all six built-in backends.
+    fn default() -> Self {
+        BackendRegistry {
+            backends: vec![
+                Box::new(DirectBackend),
+                Box::new(ReorderBackend),
+                Box::new(Im2colBackend),
+                Box::new(FftBackend),
+                Box::new(WinogradBackend),
+                Box::new(NaiveBackend),
+            ],
+        }
+    }
+}
+
+impl BackendRegistry {
+    /// Look a backend up by its registry name.
+    pub fn get(&self, name: &str) -> Option<&dyn ConvAlgo> {
+        self.backends.iter().find(|b| b.name() == name).map(|b| b.as_ref())
+    }
+
+    /// All registered backend names, in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.backends.iter().map(|b| b.name()).collect()
+    }
+
+    /// Iterate the registered backends.
+    pub fn iter(&self) -> impl Iterator<Item = &dyn ConvAlgo> {
+        self.backends.iter().map(|b| b.as_ref())
+    }
+
+    /// Register an additional (or replacement) backend. Later
+    /// registrations win on name collisions via [`Self::get`]'s first
+    /// match only if inserted in front, so push replacements first.
+    pub fn register(&mut self, backend: Box<dyn ConvAlgo>) {
+        self.backends.insert(0, backend);
+    }
+
+    /// Pick the best applicable backend for a layer on a machine.
+    ///
+    /// Heuristic (from the paper's results): `direct` wins whenever its
+    /// analytically selected output-channel block is at least one full
+    /// vector (`C_o,b >= N_vec`, the regime every Figure-4 layer is
+    /// in). Degenerate channel counts fall back to `winograd` where
+    /// eligible, else `im2col` — the robust baselines.
+    pub fn auto(&self, shape: &ConvShape, machine: &Machine) -> &dyn ConvAlgo {
+        if select_c_ob(machine, shape.c_o) >= machine.n_vec {
+            if let Some(b) = self.get("direct") {
+                return b;
+            }
+        }
+        if winograd_applicable(shape) {
+            if let Some(b) = self.get("winograd") {
+                return b;
+            }
+        }
+        self.get("im2col")
+            .or_else(|| self.backends.first().map(|b| b.as_ref()))
+            .expect("registry is empty")
+    }
+
+    /// Resolve a CLI-style backend name (`"auto"` included) for a layer.
+    pub fn resolve(&self, name: &str, shape: &ConvShape, machine: &Machine) -> Result<&dyn ConvAlgo> {
+        if name == "auto" {
+            return Ok(self.auto(shape, machine));
+        }
+        self.get(name).ok_or_else(|| {
+            Error::Parse(format!(
+                "unknown backend '{name}' (available: auto, {})",
+                self.names().join(", ")
+            ))
+        })
+    }
+
+    /// One-call convenience: resolve `name` and plan the layer.
+    pub fn plan(
+        &self,
+        name: &str,
+        shape: &ConvShape,
+        kernel: &Tensor,
+        machine: &Machine,
+        threads: usize,
+    ) -> Result<Box<dyn ConvPlan>> {
+        self.resolve(name, shape, machine)?.plan(shape, kernel, machine, threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{cortex_a57, haswell};
+
+    #[test]
+    fn all_six_backends_reachable_by_name() {
+        let r = BackendRegistry::default();
+        for name in BACKEND_NAMES {
+            let b = r.get(name).unwrap_or_else(|| panic!("backend '{name}' missing"));
+            assert_eq!(b.name(), name);
+        }
+        assert!(r.get("nope").is_none());
+        assert_eq!(r.names().len(), BACKEND_NAMES.len());
+    }
+
+    #[test]
+    fn auto_prefers_direct_on_paper_layers() {
+        let r = BackendRegistry::default();
+        for m in [haswell(), cortex_a57()] {
+            for l in crate::nets::all_layers().into_iter().step_by(9) {
+                assert_eq!(r.auto(&l.shape, &m).name(), "direct", "{}", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn auto_falls_back_on_degenerate_channels() {
+        let r = BackendRegistry::default();
+        let m = haswell();
+        // C_o = 5: no vector-width block divides it -> not direct.
+        let s3 = ConvShape::new(3, 9, 9, 5, 3, 3, 1, 1);
+        assert_eq!(r.auto(&s3, &m).name(), "winograd");
+        let s5 = ConvShape::new(3, 9, 9, 5, 5, 5, 1, 2);
+        assert_eq!(r.auto(&s5, &m).name(), "im2col");
+    }
+
+    #[test]
+    fn resolve_handles_auto_and_unknown() {
+        let r = BackendRegistry::default();
+        let m = haswell();
+        let s = ConvShape::new(64, 28, 28, 64, 3, 3, 1, 1);
+        assert_eq!(r.resolve("auto", &s, &m).unwrap().name(), "direct");
+        assert_eq!(r.resolve("fft", &s, &m).unwrap().name(), "fft");
+        assert!(r.resolve("blas", &s, &m).is_err());
+    }
+}

@@ -1,0 +1,204 @@
+//! [`PlanEngine`] — the native serving executor: a cached [`ConvPlan`]
+//! behind the coordinator's [`ModelExecutor`] interface.
+//!
+//! This is the zero-overhead hot path the ROADMAP's serving north-star
+//! needs: the plan (pre-transformed weights), the layout staging
+//! buffers, the native output buffer and the workspace are all built
+//! once at construction and reused for every request of every batch —
+//! per request, the conv path allocates nothing. (The reply buffer
+//! handed back through the coordinator's channel is the one per-batch
+//! allocation; it is the message, not conv state.)
+
+use super::{BackendRegistry, ConvPlan};
+use crate::arch::Machine;
+use crate::conv::ConvShape;
+use crate::layout::{nchw_to_nhwc_slice, nhwc_to_nchw_slice, pack_io_slice, unpack_io_slice, IoLayout};
+use crate::runtime::{Artifact, Manifest, ModelExecutor};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+use std::sync::Mutex;
+
+/// Reused per-execution buffers (one set per engine; requests are
+/// serialized by the coordinator's single worker).
+struct Scratch {
+    /// Native-layout input staging (unused when the plan consumes NCHW).
+    staged_in: Vec<f32>,
+    /// Native-layout output.
+    native_out: Vec<f32>,
+    /// Plan workspace ([`ConvPlan::workspace_len`] floats).
+    workspace: Vec<f32>,
+}
+
+/// A single conv layer served through a cached plan, at a set of
+/// batch sizes the coordinator's batcher can pad to.
+pub struct PlanEngine {
+    manifest: Manifest,
+    shape: ConvShape,
+    plan: Box<dyn ConvPlan>,
+    scratch: Mutex<Scratch>,
+    image_in: usize,
+    image_out: usize,
+    h_o: usize,
+    w_o: usize,
+}
+
+impl PlanEngine {
+    /// Plan `shape` x `kernel` on `backend` (a registry name or
+    /// `"auto"`) and expose it as batch models `{prefix}_b{N}` for each
+    /// `N` in `batch_sizes`. Inputs/outputs cross the interface in
+    /// conventional flat NCHW per image; layout packing happens inside,
+    /// against the cached staging buffers.
+    pub fn new(
+        shape: &ConvShape,
+        kernel: &Tensor,
+        backend: &str,
+        machine: &Machine,
+        threads: usize,
+        batch_sizes: &[usize],
+        prefix: &str,
+    ) -> Result<PlanEngine> {
+        if batch_sizes.is_empty() || batch_sizes.contains(&0) {
+            return Err(Error::Runtime("batch_sizes must be non-empty and non-zero".into()));
+        }
+        let registry = BackendRegistry::default();
+        let plan = registry.plan(backend, shape, kernel, machine, threads)?;
+        let image_in = shape.c_i * shape.h_i * shape.w_i;
+        let (h_o, w_o) = (shape.h_o(), shape.w_o());
+        let image_out = shape.c_o * h_o * w_o;
+        let mut sizes: Vec<usize> = batch_sizes.to_vec();
+        sizes.sort_unstable();
+        sizes.dedup();
+        let models = sizes
+            .iter()
+            .map(|&b| Artifact {
+                name: format!("{prefix}_b{b}"),
+                file: "<native-plan>".into(),
+                kind: "cnn".into(),
+                batch: b,
+                input_shape: vec![b, shape.c_i, shape.h_i, shape.w_i],
+                output_shape: vec![b, shape.c_o, h_o, w_o],
+                flops: shape.flops() * b as u64,
+                golden: None,
+            })
+            .collect();
+        let scratch = Scratch {
+            staged_in: vec![0.0; image_in],
+            native_out: vec![0.0; image_out],
+            workspace: vec![0.0; plan.workspace_len()],
+        };
+        Ok(PlanEngine {
+            manifest: Manifest { models, layers: Vec::new() },
+            shape: shape.clone(),
+            plan,
+            scratch: Mutex::new(scratch),
+            image_in,
+            image_out,
+            h_o,
+            w_o,
+        })
+    }
+
+    /// The cached plan (backend name, memory accounting, ...).
+    pub fn plan(&self) -> &dyn ConvPlan {
+        self.plan.as_ref()
+    }
+
+    /// The served layer shape.
+    pub fn shape(&self) -> &ConvShape {
+        &self.shape
+    }
+}
+
+impl ModelExecutor for PlanEngine {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn run(&self, model: &str, input: Vec<f32>) -> Result<Vec<f32>> {
+        let art = self
+            .manifest
+            .get(model)
+            .ok_or_else(|| Error::Runtime(format!("unknown artifact '{model}'")))?;
+        let b = art.batch;
+        if input.len() != b * self.image_in {
+            return Err(Error::Shape(format!(
+                "artifact '{model}' wants {} elements (shape {:?}), got {}",
+                b * self.image_in,
+                art.input_shape,
+                input.len()
+            )));
+        }
+        let s = &self.shape;
+        let mut scr = self.scratch.lock().map_err(|_| {
+            Error::Runtime("plan engine scratch poisoned by a previous panic".into())
+        })?;
+        let Scratch { staged_in, native_out, workspace } = &mut *scr;
+        // The reply buffer is the single per-batch allocation.
+        let mut out = vec![0.0f32; b * self.image_out];
+        for i in 0..b {
+            let img = &input[i * self.image_in..][..self.image_in];
+            let native_in: &[f32] = match self.plan.input_layout() {
+                IoLayout::Nchw => img,
+                IoLayout::Nhwc => {
+                    nchw_to_nhwc_slice(img, s.c_i, s.h_i, s.w_i, staged_in)?;
+                    &staged_in[..]
+                }
+                IoLayout::Blocked { c_b } => {
+                    pack_io_slice(img, s.c_i, s.h_i, s.w_i, c_b, staged_in)?;
+                    &staged_in[..]
+                }
+            };
+            self.plan.execute_into(native_in, native_out, workspace)?;
+            let dst = &mut out[i * self.image_out..][..self.image_out];
+            match self.plan.output_layout() {
+                IoLayout::Nchw => dst.copy_from_slice(native_out),
+                IoLayout::Nhwc => nhwc_to_nchw_slice(native_out, s.c_o, self.h_o, self.w_o, dst)?,
+                IoLayout::Blocked { c_b } => {
+                    unpack_io_slice(native_out, s.c_o, self.h_o, self.w_o, c_b, dst)?
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::haswell;
+    use crate::conv::conv_naive;
+
+    #[test]
+    fn serves_batches_matching_the_oracle() {
+        let s = ConvShape::new(8, 10, 10, 16, 3, 3, 1, 1);
+        let kernel = Tensor::random(&[16, 8, 3, 3], 3);
+        let m = haswell();
+        let eng = PlanEngine::new(&s, &kernel, "direct", &m, 1, &[1, 2, 4], "conv").unwrap();
+        assert_eq!(eng.plan().backend(), "direct");
+        assert_eq!(eng.manifest().cnn_batches(), vec![1, 2, 4]);
+
+        // Two images through the b2 model vs per-image oracle.
+        let i0 = Tensor::random(&[8, 10, 10], 10);
+        let i1 = Tensor::random(&[8, 10, 10], 11);
+        let mut batch = i0.data().to_vec();
+        batch.extend_from_slice(i1.data());
+        let out = eng.run("conv_b2", batch).unwrap();
+        for (idx, img) in [i0, i1].iter().enumerate() {
+            let want = conv_naive(img, &kernel, &s).unwrap();
+            let got = Tensor::from_vec(&[16, 10, 10], out[idx * want.len()..][..want.len()].to_vec())
+                .unwrap();
+            assert!(got.allclose(&want, 1e-3, 1e-4), "image {idx}");
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_model_and_bad_sizes() {
+        let s = ConvShape::new(4, 6, 6, 8, 3, 3, 1, 1);
+        let kernel = Tensor::random(&[8, 4, 3, 3], 3);
+        let m = haswell();
+        let eng = PlanEngine::new(&s, &kernel, "auto", &m, 1, &[1], "conv").unwrap();
+        assert!(eng.run("conv_b9", vec![0.0; 4 * 6 * 6]).is_err());
+        assert!(eng.run("conv_b1", vec![0.0; 7]).is_err());
+        assert!(PlanEngine::new(&s, &kernel, "auto", &m, 1, &[], "conv").is_err());
+    }
+}

@@ -73,20 +73,35 @@ pub fn fft(re: &mut [f32], im: &mut [f32], invert: bool) {
 
 /// In-place 2-D FFT of an `n x n` row-major grid (row-column algorithm).
 pub fn fft2d(re: &mut [f32], im: &mut [f32], n: usize, invert: bool) {
+    let mut cr = vec![0.0f32; n];
+    let mut ci = vec![0.0f32; n];
+    fft2d_with_scratch(re, im, n, invert, &mut cr, &mut ci);
+}
+
+/// [`fft2d`] with a caller-owned column scratch (`cr`/`ci`, `n` floats
+/// each) — the allocation-free variant the FFT conv plan's hot path
+/// uses, with the scratch carved from the plan workspace.
+pub fn fft2d_with_scratch(
+    re: &mut [f32],
+    im: &mut [f32],
+    n: usize,
+    invert: bool,
+    cr: &mut [f32],
+    ci: &mut [f32],
+) {
     assert_eq!(re.len(), n * n);
+    assert!(cr.len() == n && ci.len() == n, "column scratch must hold n floats");
     // Rows.
     for r in 0..n {
         fft(&mut re[r * n..(r + 1) * n], &mut im[r * n..(r + 1) * n], invert);
     }
-    // Columns (gather/scatter through a scratch row).
-    let mut cr = vec![0.0f32; n];
-    let mut ci = vec![0.0f32; n];
+    // Columns (gather/scatter through the scratch row).
     for c in 0..n {
         for r in 0..n {
             cr[r] = re[r * n + c];
             ci[r] = im[r * n + c];
         }
-        fft(&mut cr, &mut ci, invert);
+        fft(cr, ci, invert);
         for r in 0..n {
             re[r * n + c] = cr[r];
             im[r * n + c] = ci[r];

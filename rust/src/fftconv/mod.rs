@@ -16,7 +16,7 @@
 
 mod fft;
 
-pub use fft::{fft, fft2d, next_pow2};
+pub use fft::{fft, fft2d, fft2d_with_scratch, next_pow2};
 
 use crate::conv::ConvShape;
 use crate::tensor::Tensor;
@@ -36,6 +36,10 @@ pub fn fft_extra_bytes(shape: &ConvShape) -> u64 {
 }
 
 /// Convolution with on-the-fly kernel transforms.
+#[deprecated(
+    note = "plan through engine::BackendRegistry (backend \"fft\") or build an \
+            FftConvPlan directly; this wrapper re-transforms the weights per call"
+)]
 pub fn conv_fft(input: &Tensor, kernel: &Tensor, shape: &ConvShape) -> Result<Tensor> {
     let plan = FftConvPlan::new(kernel, shape)?;
     plan.run(input)
@@ -91,6 +95,19 @@ impl FftConvPlan {
         (self.k_re.len() + self.k_im.len()) as u64 * 4
     }
 
+    /// The layer shape this plan was built for.
+    pub fn shape(&self) -> &ConvShape {
+        &self.shape
+    }
+
+    /// Scratch floats [`Self::run_into`] needs: `C_i` input spectra plus
+    /// one accumulator grid (each `N x N` re + im) plus the 2-D FFT's
+    /// column scratch (`2 * N`).
+    pub fn workspace_len(&self) -> usize {
+        let nn = self.n * self.n;
+        2 * self.shape.c_i * nn + 2 * nn + 2 * self.n
+    }
+
     /// Run the layer: input `[C_i][H_i][W_i]` -> output `[C_o][H_o][W_o]`.
     pub fn run(&self, input: &Tensor) -> Result<Tensor> {
         let s = &self.shape;
@@ -102,12 +119,52 @@ impl FftConvPlan {
                 want_in
             )));
         }
+        let mut out = Tensor::zeros(&[s.c_o, s.h_o(), s.w_o()]);
+        let mut ws = vec![0.0f32; self.workspace_len()];
+        self.run_into(input.data(), out.data_mut(), &mut ws)?;
+        Ok(out)
+    }
+
+    /// Allocation-free execution into caller-owned buffers: `out` is the
+    /// flat `[C_o][H_o][W_o]` result (fully overwritten), `ws` a scratch
+    /// buffer of [`Self::workspace_len`] floats (contents irrelevant on
+    /// entry, clobbered). This is the `execute_into` path of the `fft`
+    /// engine backend.
+    pub fn run_into(&self, src: &[f32], od: &mut [f32], ws: &mut [f32]) -> Result<()> {
+        let s = &self.shape;
+        let (h_o, w_o) = (s.h_o(), s.w_o());
+        if src.len() != s.c_i * s.h_i * s.w_i {
+            return Err(Error::Shape(format!(
+                "input has {} elements, expected {}",
+                src.len(),
+                s.c_i * s.h_i * s.w_i
+            )));
+        }
+        if od.len() != s.c_o * h_o * w_o {
+            return Err(Error::Shape(format!(
+                "output has {} elements, expected {}",
+                od.len(),
+                s.c_o * h_o * w_o
+            )));
+        }
+        if ws.len() != self.workspace_len() {
+            return Err(Error::Shape(format!(
+                "workspace has {} floats, expected {}",
+                ws.len(),
+                self.workspace_len()
+            )));
+        }
         let n = self.n;
         let nn = n * n;
-        // Forward-transform every input channel once.
-        let mut x_re = vec![0.0f32; s.c_i * nn];
-        let mut x_im = vec![0.0f32; s.c_i * nn];
-        let src = input.data();
+        let (x_re, rest) = ws.split_at_mut(s.c_i * nn);
+        let (x_im, rest) = rest.split_at_mut(s.c_i * nn);
+        let (acc_re, rest) = rest.split_at_mut(nn);
+        let (acc_im, rest) = rest.split_at_mut(nn);
+        let (col_re, col_im) = rest.split_at_mut(n);
+        // Forward-transform every input channel once (zero-padded to NxN;
+        // the buffers are reused across calls, so clear them first).
+        x_re.fill(0.0);
+        x_im.fill(0.0);
         for i in 0..s.c_i {
             let re = &mut x_re[i * nn..][..nn];
             let im = &mut x_im[i * nn..][..nn];
@@ -116,13 +173,9 @@ impl FftConvPlan {
                     re[r * n + c] = src[(i * s.h_i + r) * s.w_i + c];
                 }
             }
-            fft2d(re, im, n, false);
+            fft2d_with_scratch(re, im, n, false, col_re, col_im);
         }
         // Accumulate per output channel in the frequency domain.
-        let (h_o, w_o) = (s.h_o(), s.w_o());
-        let mut out = Tensor::zeros(&[s.c_o, h_o, w_o]);
-        let mut acc_re = vec![0.0f32; nn];
-        let mut acc_im = vec![0.0f32; nn];
         for j in 0..s.c_o {
             acc_re.fill(0.0);
             acc_im.fill(0.0);
@@ -136,9 +189,8 @@ impl FftConvPlan {
                     acc_im[t] += xr[t] * ki[t] + xi[t] * kr[t];
                 }
             }
-            fft2d(&mut acc_re, &mut acc_im, n, true);
+            fft2d_with_scratch(acc_re, acc_im, n, true, col_re, col_im);
             // Correlation result at spatial offset t = l*s - pad (cyclic).
-            let od = out.data_mut();
             for l in 0..h_o {
                 let ty = (l * s.stride + n - s.pad) % n;
                 for k in 0..w_o {
@@ -147,11 +199,12 @@ impl FftConvPlan {
                 }
             }
         }
-        Ok(out)
+        Ok(())
     }
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // conv_fft stays covered until the wrapper is removed
 mod tests {
     use super::*;
     use crate::conv::conv_naive;

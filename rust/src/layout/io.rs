@@ -25,24 +25,113 @@ fn check_cb(c: usize, c_b: usize) -> Result<()> {
     Ok(())
 }
 
-/// `[C][H][W]` -> `[C/c_b][H][W][c_b]`.
-pub fn to_blocked_io(nchw: &Tensor, c_b: usize) -> Result<Tensor> {
-    let &[c, h, w] = nchw.shape() else {
-        return Err(Error::Layout(format!("expected [C][H][W], got {:?}", nchw.shape())));
-    };
+fn check_len(what: &str, got: usize, want: usize) -> Result<()> {
+    if got != want {
+        return Err(Error::Layout(format!("{what} has {got} elements, expected {want}")));
+    }
+    Ok(())
+}
+
+/// Slice-based `[C][H][W]` -> `[C/c_b][H][W][c_b]` pack into a
+/// caller-owned buffer — the allocation-free primitive the serving hot
+/// path ([`crate::engine::PlanEngine`]) stages inputs with.
+pub fn pack_io_slice(
+    src: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    c_b: usize,
+    dst: &mut [f32],
+) -> Result<()> {
     check_cb(c, c_b)?;
-    let src = nchw.data();
-    let mut out = vec![0.0f32; c * h * w];
+    check_len("pack_io_slice src", src.len(), c * h * w)?;
+    check_len("pack_io_slice dst", dst.len(), c * h * w)?;
     for blk in 0..c / c_b {
         for y in 0..h {
             for x in 0..w {
                 let dst_base = ((blk * h + y) * w + x) * c_b;
                 for cc in 0..c_b {
-                    out[dst_base + cc] = src[((blk * c_b + cc) * h + y) * w + x];
+                    dst[dst_base + cc] = src[((blk * c_b + cc) * h + y) * w + x];
                 }
             }
         }
     }
+    Ok(())
+}
+
+/// Slice-based `[C/c_b][H][W][c_b]` -> `[C][H][W]` unpack into a
+/// caller-owned buffer.
+pub fn unpack_io_slice(
+    src: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    c_b: usize,
+    dst: &mut [f32],
+) -> Result<()> {
+    check_cb(c, c_b)?;
+    check_len("unpack_io_slice src", src.len(), c * h * w)?;
+    check_len("unpack_io_slice dst", dst.len(), c * h * w)?;
+    for blk in 0..c / c_b {
+        for y in 0..h {
+            for x in 0..w {
+                let src_base = ((blk * h + y) * w + x) * c_b;
+                for cc in 0..c_b {
+                    dst[((blk * c_b + cc) * h + y) * w + x] = src[src_base + cc];
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Slice-based `[C][H][W]` -> `[H][W][C]` into a caller-owned buffer.
+pub fn nchw_to_nhwc_slice(
+    src: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    dst: &mut [f32],
+) -> Result<()> {
+    check_len("nchw_to_nhwc_slice src", src.len(), c * h * w)?;
+    check_len("nchw_to_nhwc_slice dst", dst.len(), c * h * w)?;
+    for ch in 0..c {
+        for y in 0..h {
+            for x in 0..w {
+                dst[(y * w + x) * c + ch] = src[(ch * h + y) * w + x];
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Slice-based `[H][W][C]` -> `[C][H][W]` into a caller-owned buffer.
+pub fn nhwc_to_nchw_slice(
+    src: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    dst: &mut [f32],
+) -> Result<()> {
+    check_len("nhwc_to_nchw_slice src", src.len(), c * h * w)?;
+    check_len("nhwc_to_nchw_slice dst", dst.len(), c * h * w)?;
+    for y in 0..h {
+        for x in 0..w {
+            for ch in 0..c {
+                dst[(ch * h + y) * w + x] = src[(y * w + x) * c + ch];
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `[C][H][W]` -> `[C/c_b][H][W][c_b]`.
+pub fn to_blocked_io(nchw: &Tensor, c_b: usize) -> Result<Tensor> {
+    let &[c, h, w] = nchw.shape() else {
+        return Err(Error::Layout(format!("expected [C][H][W], got {:?}", nchw.shape())));
+    };
+    let mut out = vec![0.0f32; c * h * w];
+    pack_io_slice(nchw.data(), c, h, w, c_b, &mut out)?;
     Tensor::from_vec(&[c / c_b, h, w, c_b], out)
 }
 
@@ -55,18 +144,8 @@ pub fn from_blocked_io(blocked: &Tensor) -> Result<Tensor> {
         )));
     };
     let c = nblk * c_b;
-    let src = blocked.data();
     let mut out = vec![0.0f32; c * h * w];
-    for blk in 0..nblk {
-        for y in 0..h {
-            for x in 0..w {
-                let src_base = ((blk * h + y) * w + x) * c_b;
-                for cc in 0..c_b {
-                    out[((blk * c_b + cc) * h + y) * w + x] = src[src_base + cc];
-                }
-            }
-        }
-    }
+    unpack_io_slice(blocked.data(), c, h, w, c_b, &mut out)?;
     Tensor::from_vec(&[c, h, w], out)
 }
 
@@ -97,15 +176,8 @@ pub fn nchw_to_nhwc(nchw: &Tensor) -> Result<Tensor> {
     let &[c, h, w] = nchw.shape() else {
         return Err(Error::Layout(format!("expected [C][H][W], got {:?}", nchw.shape())));
     };
-    let src = nchw.data();
     let mut out = vec![0.0f32; c * h * w];
-    for ch in 0..c {
-        for y in 0..h {
-            for x in 0..w {
-                out[(y * w + x) * c + ch] = src[(ch * h + y) * w + x];
-            }
-        }
-    }
+    nchw_to_nhwc_slice(nchw.data(), c, h, w, &mut out)?;
     Tensor::from_vec(&[h, w, c], out)
 }
 
@@ -114,15 +186,8 @@ pub fn nhwc_to_nchw(nhwc: &Tensor) -> Result<Tensor> {
     let &[h, w, c] = nhwc.shape() else {
         return Err(Error::Layout(format!("expected [H][W][C], got {:?}", nhwc.shape())));
     };
-    let src = nhwc.data();
     let mut out = vec![0.0f32; c * h * w];
-    for y in 0..h {
-        for x in 0..w {
-            for ch in 0..c {
-                out[(ch * h + y) * w + x] = src[(y * w + x) * c + ch];
-            }
-        }
-    }
+    nhwc_to_nchw_slice(nhwc.data(), c, h, w, &mut out)?;
     Tensor::from_vec(&[c, h, w], out)
 }
 
@@ -186,5 +251,32 @@ mod tests {
         let t = Tensor::zeros(&[6, 2, 2]);
         assert!(to_blocked_io(&t, 4).is_err());
         assert!(to_blocked_io(&t, 0).is_err());
+    }
+
+    #[test]
+    fn slice_helpers_round_trip_into_caller_buffers() {
+        let t = Tensor::random(&[8, 3, 5], 9);
+        let mut packed = vec![0.0f32; t.len()];
+        let mut back = vec![0.0f32; t.len()];
+        pack_io_slice(t.data(), 8, 3, 5, 4, &mut packed).unwrap();
+        assert_eq!(packed, to_blocked_io(&t, 4).unwrap().into_vec());
+        unpack_io_slice(&packed, 8, 3, 5, 4, &mut back).unwrap();
+        assert_eq!(back, t.data());
+
+        let mut nhwc = vec![0.0f32; t.len()];
+        nchw_to_nhwc_slice(t.data(), 8, 3, 5, &mut nhwc).unwrap();
+        assert_eq!(nhwc, nchw_to_nhwc(&t).unwrap().into_vec());
+        nhwc_to_nchw_slice(&nhwc, 8, 3, 5, &mut back).unwrap();
+        assert_eq!(back, t.data());
+    }
+
+    #[test]
+    fn slice_helpers_reject_bad_lengths() {
+        let t = Tensor::zeros(&[8, 2, 2]);
+        let mut short = vec![0.0f32; t.len() - 1];
+        assert!(pack_io_slice(t.data(), 8, 2, 2, 4, &mut short).is_err());
+        assert!(unpack_io_slice(t.data(), 8, 2, 2, 4, &mut short).is_err());
+        assert!(nchw_to_nhwc_slice(t.data(), 8, 2, 2, &mut short).is_err());
+        assert!(nhwc_to_nchw_slice(t.data(), 8, 2, 2, &mut short).is_err());
     }
 }

@@ -2,7 +2,42 @@
 //!
 //! Full-system reproduction of Zhang, Franchetti & Low (ICML 2018).
 //!
-//! The crate is organized in three tiers:
+//! ## The plan/execute API (start here)
+//!
+//! The paper's thesis is that direct convolution wins because it is
+//! *planned for the layer shape* — blocked layouts and analytically
+//! selected `C_o,b x W_o,b` register tiles — and then runs with *zero
+//! memory overhead*. The [`engine`] module is that thesis as an API:
+//!
+//! ```no_run
+//! use dconv::arch::host;
+//! use dconv::conv::ConvShape;
+//! use dconv::engine::{BackendRegistry, ConvAlgo, ConvPlan};
+//! use dconv::tensor::Tensor;
+//!
+//! let shape = ConvShape::new(64, 56, 56, 64, 3, 3, 1, 1);
+//! let kernel = Tensor::random(&[64, 64, 3, 3], 2);
+//! let machine = host();
+//!
+//! let registry = BackendRegistry::default();
+//! let algo = registry.auto(&shape, &machine);        // or .get("direct")
+//! let plan = algo.plan(&shape, &kernel, &machine, 1).unwrap();
+//! assert_eq!(plan.retained_bytes() + plan.workspace_bytes(), 0);
+//!
+//! let input = Tensor::random(&[64, 56, 56], 1);
+//! let out = plan.execute(&input).unwrap();           // one-shot convenience
+//! // hot path: plan.execute_into(...) with caller-owned buffers — see
+//! // the engine module docs for the allocation-free serving loop.
+//! # let _ = out;
+//! ```
+//!
+//! Every backend the paper evaluates — `direct`, `reorder`, `im2col`,
+//! `fft`, `winograd`, `naive` — sits behind [`engine::BackendRegistry`],
+//! each reporting its memory overhead through the same
+//! `retained_bytes()`/`workspace_bytes()` contract so the paper's
+//! overhead table falls out of the API uniformly.
+//!
+//! ## Crate layout
 //!
 //! 1. **Kernel substrates** — native-Rust implementations of every
 //!    convolution algorithm the paper evaluates:
@@ -15,19 +50,28 @@
 //!    paper's Intel Haswell / AMD Piledriver / ARM Cortex-A57 testbed
 //!    (Table 1), the [`sim`] analytical + cache-trace performance
 //!    simulator that regenerates Figures 1/4/5, and [`nets`] (all conv
-//!    layers of AlexNet, GoogLeNet and VGG-16).
-//! 3. **Serving stack** — [`runtime`] (PJRT artifact loading/execution
-//!    for the JAX/Pallas AOT compile path) and [`coordinator`]
-//!    (request router, dynamic batcher, worker pool) with [`metrics`].
+//!    layers of AlexNet, GoogLeNet and VGG-16, plus per-layer plan
+//!    tables built on the engine).
+//! 3. **Serving stack** — [`engine`] (the `ConvAlgo`/`ConvPlan`
+//!    plan/execute API and the native [`engine::PlanEngine`] executor)
+//!    and [`coordinator`] (request router, dynamic batcher, worker
+//!    pool) with [`metrics`]. [`runtime`] holds the artifact manifest
+//!    plus, behind the `pjrt` feature, the XLA/PJRT executor for the
+//!    JAX/Pallas AOT compile path.
 //!
 //! Support modules: [`bench_harness`] (criterion-lite), [`json`]
 //! (manifest/results I/O), [`cli`] (argument parsing).
+//!
+//! The pre-engine free functions (`conv_direct`, `conv_im2col`, ...)
+//! remain as deprecated thin wrappers; new code should plan through the
+//! registry instead.
 
 pub mod arch;
 pub mod bench_harness;
 pub mod cli;
 pub mod conv;
 pub mod coordinator;
+pub mod engine;
 pub mod fftconv;
 pub mod gemm;
 pub mod json;
@@ -41,18 +85,64 @@ pub mod tensor;
 pub mod winograd;
 
 /// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+///
+/// `Display`/`Error` are implemented by hand (not via `thiserror`) so
+/// the crate builds with zero dependencies in offline environments.
+#[derive(Debug)]
 pub enum Error {
-    #[error("shape mismatch: {0}")]
     Shape(String),
-    #[error("layout error: {0}")]
     Layout(String),
-    #[error("runtime error: {0}")]
     Runtime(String),
-    #[error("parse error: {0}")]
     Parse(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Layout(m) => write!(f, "layout error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_matches_seed_format() {
+        assert_eq!(format!("{}", Error::Shape("x".into())), "shape mismatch: x");
+        assert_eq!(format!("{}", Error::Layout("x".into())), "layout error: x");
+        assert_eq!(format!("{}", Error::Runtime("x".into())), "runtime error: x");
+        assert_eq!(format!("{}", Error::Parse("x".into())), "parse error: x");
+    }
+
+    #[test]
+    fn io_error_converts_and_sources() {
+        use std::error::Error as _;
+        let e: Error = std::io::Error::other("boom").into();
+        assert!(format!("{e}").contains("boom"));
+        assert!(e.source().is_some());
+    }
+}

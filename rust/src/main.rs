@@ -4,23 +4,31 @@
 //!   machines                    print Table 1 + derived model parameters
 //!   nets [--net NAME]           list benchmark network layers
 //!   layouts                     demonstrate the §4 layouts (zero overhead)
+//!   backends [--layer NAME] [--threads P]
+//!                               plan every applicable backend for a layer:
+//!                               plan/exec time + memory-overhead table
+//!   plan-net [--net N] [--backend B] [--threads P]
+//!                               per-layer plan table for a whole network
 //!   simulate [--net N] [--arch A] [--threads P]
 //!                               simulated per-layer comparison (Fig 4 rows)
-//!   run-layer [--layer NAME] [--threads P]
-//!                               host-measured single layer, all algorithms
-//!   serve [--dir artifacts] [--requests N] [--clients C]
-//!                               start the PJRT serving stack and load-test it
+//!   run-layer [--layer NAME] [--backend B] [--threads P]
+//!                               host-measured single layer via the engine
+//!   serve [--layer NAME] [--backend B] [--requests N] [--clients C]
+//!                               serve a layer through the coordinator over a
+//!                               cached ConvPlan (zero per-request conv
+//!                               allocations); with the `pjrt` feature and
+//!                               --dir, serves the PJRT artifacts instead
 //!   verify [--dir artifacts]    check every artifact against its golden
+//!                               (requires the `pjrt` feature)
 
 use dconv::arch::{self, render_table1, Machine};
 use dconv::cli::Args;
-use dconv::conv::{conv_direct, conv_naive, select_params};
+use dconv::conv::conv_naive;
 use dconv::coordinator::{Coordinator, CoordinatorConfig};
+use dconv::engine::{BackendRegistry, ConvAlgo, ConvPlan, PlanEngine};
 use dconv::layout::{io_layout_len, kernel_layout_len};
-use dconv::lowering::conv_im2col;
 use dconv::metrics::{gflops, time_it, Table};
-use dconv::nets;
-use dconv::runtime::{verify_golden, Engine};
+use dconv::nets::{self, NetPlans};
 use dconv::sim::{estimate, Algo};
 use dconv::tensor::Tensor;
 
@@ -31,6 +39,8 @@ fn main() {
         "machines" => machines(),
         "nets" => nets_cmd(&args),
         "layouts" => layouts(),
+        "backends" => backends_cmd(&args),
+        "plan-net" => plan_net(&args),
         "simulate" => simulate(&args),
         "run-layer" => run_layer(&args),
         "serve" => serve(&args),
@@ -47,10 +57,12 @@ fn help() {
            machines    Table 1 machines + derived model parameters\n\
            nets        list benchmark layers      [--net alexnet|googlenet|vgg16]\n\
            layouts     demonstrate the paper's data layouts\n\
+           backends    compare every backend on one layer [--layer alexnet/conv3]\n\
+           plan-net    plan a whole net through the engine [--net N --backend auto]\n\
            simulate    simulated Fig-4 comparison [--net N --arch intel|amd|arm --threads P]\n\
-           run-layer   measure one layer on this host [--layer alexnet/conv3 --threads P]\n\
-           serve       start the PJRT serving stack [--dir artifacts --requests N --clients C]\n\
-           verify      verify artifacts against goldens [--dir artifacts]"
+           run-layer   measure one layer on this host [--layer alexnet/conv3 --backend auto]\n\
+           serve       serve a layer via cached ConvPlans [--layer NAME --requests N]\n\
+           verify      verify PJRT artifacts against goldens [--dir artifacts] (pjrt feature)"
     );
 }
 
@@ -126,6 +138,97 @@ fn machine_by_tag(tag: &str) -> Machine {
     }
 }
 
+fn find_layer(name: &str) -> nets::Layer {
+    nets::all_layers()
+        .into_iter()
+        .find(|l| format!("{}/{}", l.net, l.name) == name)
+        .unwrap_or_else(|| {
+            eprintln!("unknown layer '{name}' (see `dconv nets`)");
+            std::process::exit(1);
+        })
+}
+
+/// Plan every applicable backend for one layer and print the uniform
+/// plan/execute/memory table — the paper's overhead comparison falling
+/// out of the engine accounting contract.
+fn backends_cmd(args: &Args) {
+    let name = args.get_or("layer", "alexnet/conv3");
+    let p = args.get_usize("threads", 1);
+    let layer = find_layer(name);
+    let s = &layer.shape;
+    let m = arch::host();
+    let registry = BackendRegistry::default();
+    let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 1);
+    let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 2);
+    let auto_pick = registry.auto(s, &m).name();
+    println!(
+        "{name} ({:.2} GFLOPs), {p} thread(s); auto would pick '{auto_pick}'\n",
+        layer.gflops()
+    );
+    let mib = |b: u64| format!("{:.2}", b as f64 / (1 << 20) as f64);
+    let mut t = Table::new(&[
+        "backend", "plan ms", "exec GFLOPS", "retained MiB", "workspace MiB",
+    ]);
+    for algo in registry.iter() {
+        if !algo.applicable(s) {
+            continue;
+        }
+        let (plan, secs_plan) = time_it(|| algo.plan(s, &kernel, &m, p).unwrap());
+        let packed = plan.pack_input(&input).unwrap();
+        let mut out = vec![0.0f32; s.c_o * s.h_o() * s.w_o()];
+        let mut ws = vec![0.0f32; plan.workspace_len()];
+        let (_, secs) = time_it(|| plan.execute_into(packed.data(), &mut out, &mut ws).unwrap());
+        t.row(vec![
+            algo.name().into(),
+            format!("{:.2}", secs_plan * 1e3),
+            format!("{:.2}", gflops(s.flops(), secs)),
+            mib(plan.retained_bytes()),
+            mib(plan.workspace_bytes()),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+}
+
+/// Plan a whole benchmark network and print the per-layer plan table.
+fn plan_net(args: &Args) {
+    let net = args.get_or("net", "alexnet");
+    let backend = args.get_or("backend", "auto");
+    let p = args.get_usize("threads", 1);
+    let m = arch::host();
+    let (plans, secs) = time_it(|| {
+        NetPlans::build(net, backend, &m, p).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(1);
+        })
+    });
+    println!(
+        "planned {} ({} layers) with backend '{backend}' in {:.1} ms\n",
+        net,
+        plans.layers.len(),
+        secs * 1e3
+    );
+    let mut t = Table::new(&["layer", "backend", "GFLOPs", "retained KiB", "workspace KiB"]);
+    for l in &plans.layers {
+        t.row(vec![
+            l.layer.name.clone(),
+            l.backend.into(),
+            format!("{:.3}", l.layer.gflops()),
+            format!("{:.1}", l.plan.retained_bytes() as f64 / 1024.0),
+            format!("{:.1}", l.plan.workspace_bytes() as f64 / 1024.0),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+    println!(
+        "\ntotals: retained {} B, workspace {} B (peak single-layer {} B)",
+        plans.total_retained_bytes(),
+        plans.total_workspace_bytes(),
+        plans.max_workspace_bytes()
+    );
+    if plans.total_retained_bytes() + plans.total_workspace_bytes() == 0 {
+        println!("zero memory overhead across the whole network ✓ (the paper's claim)");
+    }
+}
+
 fn simulate(args: &Args) {
     let m = machine_by_tag(args.get_or("arch", "intel"));
     let p = args.get_usize("threads", m.cores);
@@ -154,37 +257,116 @@ fn simulate(args: &Args) {
 
 fn run_layer(args: &Args) {
     let name = args.get_or("layer", "alexnet/conv3");
+    let backend = args.get_or("backend", "auto");
     let p = args.get_usize("threads", 1);
-    let layer = nets::all_layers()
-        .into_iter()
-        .find(|l| format!("{}/{}", l.net, l.name) == name)
-        .unwrap_or_else(|| {
-            eprintln!("unknown layer '{name}' (see `dconv nets`)");
-            std::process::exit(1);
-        });
+    let layer = find_layer(name);
     let s = &layer.shape;
-    println!("running {name} ({:.2} GFLOPs) with {p} threads on this host", layer.gflops());
+    let m = arch::host();
+    let registry = BackendRegistry::default();
+    let algo = registry.resolve(backend, s, &m).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(1);
+    });
+    println!(
+        "running {name} ({:.2} GFLOPs) via backend '{}' with {p} threads on this host",
+        layer.gflops(),
+        algo.name()
+    );
     let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 1);
     let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 2);
-    let bp = select_params(&arch::host(), s);
 
-    let (out_d, secs_d) = time_it(|| conv_direct(&input, &kernel, s, bp, p).unwrap());
-    println!("  direct       : {:.3}s = {:.2} GFLOPS (bp {:?})", secs_d, gflops(s.flops(), secs_d), bp);
-    let (out_g, secs_g) = time_it(|| conv_im2col(&input, &kernel, s).unwrap());
-    println!("  im2col+sgemm : {:.3}s = {:.2} GFLOPS", secs_g, gflops(s.flops(), secs_g));
+    let (plan, secs_plan) = time_it(|| algo.plan(s, &kernel, &m, p).unwrap());
+    println!(
+        "  plan         : {:.1} ms (retained {} B, workspace {} B)",
+        secs_plan * 1e3,
+        plan.retained_bytes(),
+        plan.workspace_bytes()
+    );
+    // Hot path: native-layout operands, caller-owned buffers.
+    let packed = plan.pack_input(&input).unwrap();
+    let mut out = vec![0.0f32; s.c_o * s.h_o() * s.w_o()];
+    let mut ws = vec![0.0f32; plan.workspace_len()];
+    let (_, secs) = time_it(|| plan.execute_into(packed.data(), &mut out, &mut ws).unwrap());
+    println!("  execute_into : {:.3}s = {:.2} GFLOPS", secs, gflops(s.flops(), secs));
+
     if s.flops() < 500_000_000 {
-        let (out_n, secs_n) = time_it(|| conv_naive(&input, &kernel, s).unwrap());
-        println!("  naive        : {:.3}s = {:.2} GFLOPS", secs_n, gflops(s.flops(), secs_n));
-        assert!(out_d.allclose(&out_n, 1e-3, 1e-3));
-        assert!(out_g.allclose(&out_n, 1e-3, 1e-3));
-        println!("  all agree ✓");
+        let (want, secs_naive) = time_it(|| conv_naive(&input, &kernel, s).unwrap());
+        println!("  naive        : {:.3}s = {:.2} GFLOPS", secs_naive, gflops(s.flops(), secs_naive));
+        let got = plan.execute(&input).unwrap();
+        assert!(got.allclose(&want, 1e-3, 1e-3));
+        println!("  backend agrees with the oracle ✓");
     } else {
-        assert!(out_d.allclose(&out_g, 1e-3, 1e-3));
-        println!("  direct & im2col agree ✓ (naive skipped: too slow)");
+        let im2col = registry.get("im2col").unwrap().plan(s, &kernel, &m, p).unwrap();
+        let want = im2col.execute(&input).unwrap();
+        let got = plan.execute(&input).unwrap();
+        assert!(got.allclose(&want, 1e-3, 1e-3));
+        println!("  backend agrees with im2col ✓ (naive skipped: too slow)");
     }
 }
 
+/// Serve one conv layer through the coordinator over a cached ConvPlan.
 fn serve(args: &Args) {
+    if args.get("dir").is_some() {
+        #[cfg(feature = "pjrt")]
+        return serve_pjrt(args);
+        #[cfg(not(feature = "pjrt"))]
+        {
+            eprintln!(
+                "`dconv serve --dir` serves PJRT artifacts and requires the `pjrt` \
+                 feature; omit --dir to serve a layer through the native plan engine."
+            );
+            std::process::exit(1);
+        }
+    }
+    let name = args.get_or("layer", "googlenet/inception_3a/3x3");
+    let backend = args.get_or("backend", "auto");
+    let requests = args.get_usize("requests", 200);
+    let clients = args.get_usize("clients", 4);
+    let threads = args.get_usize("threads", 1);
+    let layer = find_layer(name);
+    let s = layer.shape.clone();
+    let m = arch::host();
+    let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 2);
+    let engine = PlanEngine::new(&s, &kernel, backend, &m, threads, &[1, 2, 4, 8], "conv")
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(1);
+        });
+    println!(
+        "serving {name} via backend '{}' (retained {} B + workspace {} B, planned once)",
+        engine.plan().backend(),
+        engine.plan().retained_bytes(),
+        engine.plan().workspace_bytes()
+    );
+    let image_in = s.c_i * s.h_i * s.w_i;
+    let image_out = s.c_o * s.h_o() * s.w_o();
+    let cfg = CoordinatorConfig { model_prefix: "conv".into(), ..Default::default() };
+    let coord = Coordinator::start(engine, cfg).unwrap();
+    println!("serving {requests} requests from {clients} client threads");
+    let (_, secs) = time_it(|| {
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let coord = coord.clone();
+                let n = requests / clients;
+                scope.spawn(move || {
+                    for i in 0..n {
+                        let x = Tensor::random(&[image_in], (c * 10_000 + i) as u64);
+                        let out = coord.submit_blocking(x.into_vec()).unwrap().wait().unwrap();
+                        assert_eq!(out.len(), image_out);
+                    }
+                });
+            }
+        });
+    });
+    let st = coord.stats();
+    println!("\nthroughput : {:.1} img/s", st.requests as f64 / secs);
+    println!("batches    : {} (mean occupancy {:.2})", st.batches, st.mean_batch_size());
+    println!("latency    : {}", st.latency.summary());
+}
+
+#[cfg(feature = "pjrt")]
+fn serve_pjrt(args: &Args) {
+    use dconv::runtime::Engine;
     let dir = args.get_or("dir", "artifacts");
     let requests = args.get_usize("requests", 200);
     let clients = args.get_usize("clients", 4);
@@ -217,7 +399,9 @@ fn serve(args: &Args) {
     println!("latency    : {}", st.latency.summary());
 }
 
+#[cfg(feature = "pjrt")]
 fn verify(args: &Args) {
+    use dconv::runtime::{verify_golden, Engine};
     let dir = args.get_or("dir", "artifacts");
     let engine = Engine::start(dir).unwrap_or_else(|e| {
         eprintln!("{e}");
@@ -234,4 +418,13 @@ fn verify(args: &Args) {
         }
     }
     println!("all artifacts verified ✓");
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn verify(_args: &Args) {
+    eprintln!(
+        "`dconv verify` checks PJRT artifacts and requires the `pjrt` feature\n\
+         (cargo build --features pjrt, with xla-rs vendored — see Cargo.toml)."
+    );
+    std::process::exit(1);
 }

@@ -5,6 +5,10 @@
 //! synthetic data through the layers); shapes follow the standard Caffe
 //! deploy definitions.
 
+pub mod plans;
+
+pub use plans::{NetPlans, PlannedLayer};
+
 use crate::conv::ConvShape;
 
 /// One convolution layer of a benchmark network.

@@ -1,0 +1,99 @@
+//! Per-layer plan tables: a whole benchmark network planned through the
+//! engine, one cached [`ConvPlan`] per conv layer.
+//!
+//! This is the deployment shape the paper's §4.3 describes — weights
+//! pre-transformed once per layer at load time, every execution running
+//! against retained per-layer state — and what `dconv plan-net` prints,
+//! including the uniform memory-overhead accounting.
+
+use super::Layer;
+use crate::arch::Machine;
+use crate::engine::{BackendRegistry, ConvPlan};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// One planned conv layer of a network.
+pub struct PlannedLayer {
+    pub layer: Layer,
+    /// Backend the plan was produced by (resolved from `auto` if used).
+    pub backend: &'static str,
+    pub plan: Box<dyn ConvPlan>,
+}
+
+/// A benchmark network with every conv layer planned.
+pub struct NetPlans {
+    pub net: String,
+    pub layers: Vec<PlannedLayer>,
+}
+
+impl NetPlans {
+    /// Plan every conv layer of `net` (`alexnet`, `googlenet`, `vgg16`)
+    /// on `backend` (a registry name or `"auto"`). Weights are seeded
+    /// synthetic tensors — only shapes matter for the reproduction.
+    pub fn build(net: &str, backend: &str, machine: &Machine, threads: usize) -> Result<NetPlans> {
+        let layers = super::by_name(net)
+            .ok_or_else(|| Error::Parse(format!("unknown net '{net}' (alexnet|googlenet|vgg16)")))?;
+        let registry = BackendRegistry::default();
+        let mut planned = Vec::with_capacity(layers.len());
+        for (i, layer) in layers.into_iter().enumerate() {
+            let s = &layer.shape;
+            let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 0x5EED + i as u64);
+            let plan = registry.plan(backend, s, &kernel, machine, threads)?;
+            planned.push(PlannedLayer { backend: plan.backend(), layer, plan });
+        }
+        Ok(NetPlans { net: net.to_string(), layers: planned })
+    }
+
+    /// Total bytes retained by all plans beyond conventional weights.
+    pub fn total_retained_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.plan.retained_bytes()).sum()
+    }
+
+    /// Total per-execution workspace bytes across layers (each layer's
+    /// workspace is reusable; the peak concurrent need is the max).
+    pub fn total_workspace_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.plan.workspace_bytes()).sum()
+    }
+
+    /// Largest single-layer workspace — what a serving process that
+    /// shares one scratch buffer across layers must allocate.
+    pub fn max_workspace_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.plan.workspace_bytes()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::haswell;
+
+    #[test]
+    fn alexnet_auto_plans_are_all_direct_and_zero_overhead() {
+        let plans = NetPlans::build("alexnet", "auto", &haswell(), 1).unwrap();
+        assert_eq!(plans.layers.len(), 5);
+        for l in &plans.layers {
+            assert_eq!(l.backend, "direct", "{}", l.layer.name);
+            assert_eq!(
+                l.plan.retained_bytes() + l.plan.workspace_bytes(),
+                0,
+                "{} must be zero-overhead",
+                l.layer.name
+            );
+        }
+        assert_eq!(plans.total_retained_bytes() + plans.total_workspace_bytes(), 0);
+    }
+
+    #[test]
+    fn im2col_plans_report_lowering_workspace() {
+        let plans = NetPlans::build("alexnet", "im2col", &haswell(), 1).unwrap();
+        for l in &plans.layers {
+            assert_eq!(l.plan.workspace_bytes(), l.layer.shape.im2col_bytes(), "{}", l.layer.name);
+        }
+        assert!(plans.max_workspace_bytes() > 0);
+    }
+
+    #[test]
+    fn unknown_net_is_rejected() {
+        assert!(NetPlans::build("resnet", "auto", &haswell(), 1).is_err());
+    }
+}

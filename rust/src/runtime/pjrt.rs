@@ -1,0 +1,180 @@
+//! PJRT engine — loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them from Rust. Python is never
+//! on this path: the HLO text is compiled by the in-process XLA CPU
+//! backend at startup and the binary is self-contained afterwards.
+//!
+//! The `xla` crate's handles are not `Send`, so the [`Engine`] owns the
+//! client + executables on a dedicated thread and exposes a channel-based
+//! [`EngineHandle`] that is cheap to clone and freely shareable — the
+//! coordinator and examples talk to that.
+//!
+//! Compiled only with the `pjrt` cargo feature (requires a vendored
+//! xla-rs checkout; see `Cargo.toml`).
+
+use super::{Manifest, ModelExecutor};
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+
+/// A request to run one artifact. An empty `model` is the shutdown
+/// sentinel.
+struct Job {
+    model: String,
+    input: Vec<f32>,
+    reply: Option<SyncSender<Result<Vec<f32>>>>,
+}
+
+/// Cheap-to-clone handle to the engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: SyncSender<Job>,
+    manifest: Manifest,
+}
+
+impl EngineHandle {
+    /// Execute artifact `model` on a flat `f32` input (row-major, shape
+    /// per the manifest). Blocks until the result is ready.
+    pub fn run(&self, model: &str, input: Vec<f32>) -> Result<Vec<f32>> {
+        let (tx, rx) = sync_channel(1);
+        self.tx
+            .send(Job { model: model.to_string(), input, reply: Some(tx) })
+            .map_err(|_| Error::Runtime("engine thread gone".into()))?;
+        rx.recv().map_err(|_| Error::Runtime("engine dropped reply".into()))?
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}
+
+impl ModelExecutor for EngineHandle {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+    fn run(&self, model: &str, input: Vec<f32>) -> Result<Vec<f32>> {
+        EngineHandle::run(self, model, input)
+    }
+}
+
+/// The engine: a dedicated thread owning the PJRT client and all
+/// compiled executables listed in the manifest.
+pub struct Engine {
+    handle: EngineHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Load `<dir>/manifest.json`, compile every artifact on the CPU
+    /// PJRT client, and start serving. Compilation happens before this
+    /// returns (fail fast on bad artifacts).
+    pub fn start(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let (tx, rx) = sync_channel::<Job>(256);
+        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+        let m2 = manifest.clone();
+        let join = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || engine_thread(dir, m2, rx, ready_tx))
+            .map_err(|e| Error::Runtime(format!("spawn: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("engine died during startup".into()))??;
+        Ok(Engine { handle: EngineHandle { tx, manifest }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        // Shutdown sentinel; outstanding handle clones will observe a
+        // closed channel afterwards.
+        let _ = self.handle.tx.send(Job { model: String::new(), input: Vec::new(), reply: None });
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn engine_thread(
+    dir: PathBuf,
+    manifest: Manifest,
+    rx: Receiver<Job>,
+    ready: SyncSender<Result<()>>,
+) {
+    type Setup = (xla::PjRtClient, HashMap<String, xla::PjRtLoadedExecutable>);
+    let setup = (|| -> anyhow::Result<Setup> {
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = HashMap::new();
+        for art in manifest.all() {
+            let path = dir.join(&art.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("bad path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            exes.insert(art.name.clone(), exe);
+        }
+        Ok((client, exes))
+    })();
+
+    let (_client, exes) = match setup {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(Error::Runtime(format!("engine setup: {e}"))));
+            return;
+        }
+    };
+
+    while let Ok(job) = rx.recv() {
+        if job.model.is_empty() {
+            break; // shutdown sentinel
+        }
+        let result = run_one(&exes, &manifest, &job.model, &job.input);
+        if let Some(reply) = job.reply {
+            let _ = reply.send(result);
+        }
+    }
+}
+
+fn run_one(
+    exes: &HashMap<String, xla::PjRtLoadedExecutable>,
+    manifest: &Manifest,
+    model: &str,
+    input: &[f32],
+) -> Result<Vec<f32>> {
+    let art = manifest
+        .get(model)
+        .ok_or_else(|| Error::Runtime(format!("unknown artifact '{model}'")))?;
+    let want: usize = art.input_shape.iter().product();
+    if input.len() != want {
+        return Err(Error::Shape(format!(
+            "artifact '{model}' wants {} elements (shape {:?}), got {}",
+            want,
+            art.input_shape,
+            input.len()
+        )));
+    }
+    let exe = exes.get(model).expect("compiled at startup");
+    let dims: Vec<i64> = art.input_shape.iter().map(|&d| d as i64).collect();
+    let lit = xla::Literal::vec1(input)
+        .reshape(&dims)
+        .map_err(|e| Error::Runtime(format!("reshape: {e}")))?;
+    let result = exe
+        .execute::<xla::Literal>(&[lit])
+        .map_err(|e| Error::Runtime(format!("execute: {e}")))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| Error::Runtime(format!("to_literal: {e}")))?;
+    // aot.py lowers with return_tuple=True -> 1-tuple.
+    let out = result
+        .to_tuple1()
+        .map_err(|e| Error::Runtime(format!("tuple unwrap: {e}")))?;
+    out.to_vec::<f32>().map_err(|e| Error::Runtime(format!("to_vec: {e}")))
+}

@@ -88,12 +88,74 @@ fn transform_output(m: &[f32; 16]) -> [f32; 4] {
     y
 }
 
+/// Pre-transform all kernels of a layer: `U[c_o][c_i][16]`, the state a
+/// Winograd plan retains across executions. Weights are
+/// `[C_o][C_i][3][3]`; the layer must be [`winograd_applicable`].
+pub fn transform_kernels(kernel: &Tensor, shape: &ConvShape) -> Result<Vec<f32>> {
+    shape.validate()?;
+    if !winograd_applicable(shape) {
+        return Err(Error::Shape(format!(
+            "winograd F(2x2,3x3) needs 3x3/s1, got {}x{}/s{}",
+            shape.h_f, shape.w_f, shape.stride
+        )));
+    }
+    let want_k = [shape.c_o, shape.c_i, 3, 3];
+    if kernel.shape() != want_k {
+        return Err(Error::Shape(format!(
+            "kernel shape {:?} != expected {:?}",
+            kernel.shape(),
+            want_k
+        )));
+    }
+    let (c_o, c_i) = (shape.c_o, shape.c_i);
+    let ks = kernel.data();
+    let mut u = vec![0.0f32; c_o * c_i * 16];
+    for o in 0..c_o {
+        for i in 0..c_i {
+            let g = &ks[(o * c_i + i) * 9..][..9];
+            u[(o * c_i + i) * 16..][..16].copy_from_slice(&transform_kernel(g));
+        }
+    }
+    Ok(u)
+}
+
+/// Scratch floats [`conv_winograd_into`] needs (`C_i` transformed input
+/// tiles of 16 floats).
+pub fn winograd_workspace_len(shape: &ConvShape) -> usize {
+    shape.c_i * 16
+}
+
 /// Winograd convolution. Input `[C_i][H_i][W_i]`, kernel
 /// `[C_o][C_i][3][3]`, stride 1, arbitrary pad; output `[C_o][H_o][W_o]`.
+#[deprecated(
+    note = "plan through engine::BackendRegistry (backend \"winograd\"); this \
+            wrapper re-transforms the weights per call"
+)]
 pub fn conv_winograd(input: &Tensor, kernel: &Tensor, shape: &ConvShape) -> Result<Tensor> {
-    shape.validate()?;
     crate::conv::naive::check_shapes(input, kernel, shape)?;
+    let u = transform_kernels(kernel, shape)?;
+    let mut out = Tensor::zeros(&[shape.c_o, shape.h_o(), shape.w_o()]);
+    let mut v_all = vec![0.0f32; winograd_workspace_len(shape)];
+    conv_winograd_into(input.data(), &u, shape, out.data_mut(), &mut v_all)?;
+    Ok(out)
+}
+
+/// Allocation-free Winograd core over pre-transformed weights `u`
+/// (from [`transform_kernels`]): writes the flat `[C_o][H_o][W_o]`
+/// result into `od` (fully overwritten) using the caller-owned `v_all`
+/// scratch of [`winograd_workspace_len`] floats. This is the
+/// `execute_into` path of the `winograd` engine backend.
+pub fn conv_winograd_into(
+    src: &[f32],
+    u: &[f32],
+    shape: &ConvShape,
+    od: &mut [f32],
+    v_all: &mut [f32],
+) -> Result<()> {
+    shape.validate()?;
     if !winograd_applicable(shape) {
+        // The tile math below hardcodes stride 1 / 3x3; anything else
+        // would pass the length checks yet compute garbage.
         return Err(Error::Shape(format!(
             "winograd F(2x2,3x3) needs 3x3/s1, got {}x{}/s{}",
             shape.h_f, shape.w_f, shape.stride
@@ -103,26 +165,41 @@ pub fn conv_winograd(input: &Tensor, kernel: &Tensor, shape: &ConvShape) -> Resu
     let (c_i, h_i, w_i) = (shape.c_i, shape.h_i, shape.w_i);
     let c_o = shape.c_o;
     let p = shape.pad;
-
-    // Pre-transform all kernels: U[c_o][c_i][16].
-    let ks = kernel.data();
-    let mut u = vec![0.0f32; c_o * c_i * 16];
-    for o in 0..c_o {
-        for i in 0..c_i {
-            let g = &ks[(o * c_i + i) * 9..][..9];
-            u[(o * c_i + i) * 16..][..16].copy_from_slice(&transform_kernel(g));
-        }
+    if src.len() != c_i * h_i * w_i {
+        return Err(Error::Shape(format!(
+            "input has {} elements, expected {}",
+            src.len(),
+            c_i * h_i * w_i
+        )));
+    }
+    if u.len() != c_o * c_i * 16 {
+        return Err(Error::Shape(format!(
+            "transformed weights have {} elements, expected {}",
+            u.len(),
+            c_o * c_i * 16
+        )));
+    }
+    if od.len() != c_o * h_o * w_o {
+        return Err(Error::Shape(format!(
+            "output has {} elements, expected {}",
+            od.len(),
+            c_o * h_o * w_o
+        )));
+    }
+    if v_all.len() != winograd_workspace_len(shape) {
+        return Err(Error::Shape(format!(
+            "workspace has {} floats, expected {}",
+            v_all.len(),
+            winograd_workspace_len(shape)
+        )));
     }
 
     let tiles_y = h_o.div_ceil(2);
     let tiles_x = w_o.div_ceil(2);
-    let src = input.data();
-    let mut out = Tensor::zeros(&[c_o, h_o, w_o]);
-    let od = out.data_mut();
 
     // Per tile: gather d per input channel, V = B^T d B, accumulate
-    // M[o] += U[o][i] ⊙ V, then Y = A^T M A.
-    let mut v_all = vec![0.0f32; c_i * 16];
+    // M[o] += U[o][i] ⊙ V, then Y = A^T M A. Every output element is
+    // written by exactly one tile, so `od` needs no pre-zeroing.
     for ty in 0..tiles_y {
         for tx in 0..tiles_x {
             let y0 = (ty * 2) as isize - p as isize;
@@ -171,10 +248,11 @@ pub fn conv_winograd(input: &Tensor, kernel: &Tensor, shape: &ConvShape) -> Resu
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // conv_winograd stays covered until the wrapper is removed
 mod tests {
     use super::*;
     use crate::conv::conv_naive;

@@ -1,0 +1,268 @@
+//! Cross-backend conformance suite for the plan/execute engine:
+//!
+//! * every registry backend's `execute_into` output matches the
+//!   `conv_naive` oracle on a grid of adversarial shapes (odd sizes,
+//!   stride 2, channel counts that no block size divides);
+//! * the direct backend's hot path performs **zero allocations** after
+//!   planning (counted by a thread-local counting allocator) and
+//!   reports `retained_bytes() + workspace_bytes() == 0` on every
+//!   paper benchmark layer;
+//! * the coordinator serves repeated requests through one cached
+//!   `ConvPlan` (PlanEngine), with results identical to the oracle.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use dconv::arch::haswell;
+use dconv::conv::{conv_naive, ConvShape};
+use dconv::coordinator::{Coordinator, CoordinatorConfig};
+use dconv::engine::{BackendRegistry, ConvAlgo, ConvPlan, PlanEngine, BACKEND_NAMES};
+use dconv::nets;
+use dconv::tensor::Tensor;
+
+// ---------------------------------------------------------------------
+// Thread-local allocation counter. Thread-local (not a global atomic)
+// so the parallel test harness's other threads cannot perturb the
+// zero-alloc assertion.
+// ---------------------------------------------------------------------
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        // try_with: TLS may be unavailable during thread teardown.
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+fn allocs_now() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------
+// Conformance grid
+// ---------------------------------------------------------------------
+
+/// Odd spatial sizes, stride 2, and `c_i`/`c_o` that defeat every
+/// power-of-two block size — the shapes the zero-overhead layouts must
+/// still handle exactly.
+fn grid() -> Vec<ConvShape> {
+    vec![
+        ConvShape::new(3, 9, 9, 5, 3, 3, 1, 1),      // c_o=5: no vector block divides
+        ConvShape::new(5, 11, 11, 7, 3, 3, 2, 1),    // stride 2, odd channels
+        ConvShape::new(2, 8, 8, 6, 5, 5, 1, 2),      // 5x5, pad 2
+        ConvShape::new(16, 7, 7, 8, 1, 1, 1, 0),     // pointwise, odd spatial
+        ConvShape::new(3, 23, 23, 16, 11, 11, 4, 0), // AlexNet conv1 geometry
+        ConvShape::new(7, 10, 12, 9, 3, 3, 1, 0),    // non-square, c_i=7, c_o=9
+    ]
+}
+
+fn tolerance(backend: &str) -> (f32, f32) {
+    match backend {
+        // Transform-domain arithmetic accumulates more rounding.
+        "fft" | "winograd" => (1e-2, 1e-2),
+        _ => (1e-3, 1e-4),
+    }
+}
+
+#[test]
+fn every_backend_matches_naive_on_the_grid() {
+    let registry = BackendRegistry::default();
+    let machine = haswell();
+    for (i, s) in grid().iter().enumerate() {
+        let seed = 500 + i as u64;
+        let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], seed);
+        let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], seed + 1);
+        let want = conv_naive(&input, &kernel, s).unwrap();
+        for name in BACKEND_NAMES {
+            let algo = registry.get(name).unwrap();
+            if !algo.applicable(s) {
+                // Non-applicable backends must refuse to plan, not
+                // silently compute something else.
+                assert!(algo.plan(s, &kernel, &machine, 1).is_err(), "{name} {s:?}");
+                continue;
+            }
+            let plan = algo.plan(s, &kernel, &machine, 1).unwrap();
+            assert_eq!(plan.backend(), name);
+            let got = plan.execute(&input).unwrap();
+            let (rtol, atol) = tolerance(name);
+            assert!(
+                got.allclose(&want, rtol, atol),
+                "{name} mismatch on {s:?}: {}",
+                got.max_abs_diff(&want)
+            );
+            // Plans are reusable: a second execution is bit-identical.
+            let again = plan.execute(&input).unwrap();
+            assert_eq!(got, again, "{name} not deterministic across reuse on {s:?}");
+        }
+    }
+}
+
+#[test]
+fn multithreaded_direct_plans_match_on_the_grid() {
+    let registry = BackendRegistry::default();
+    let machine = haswell();
+    for (i, s) in grid().iter().enumerate() {
+        let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 700 + i as u64);
+        let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 800 + i as u64);
+        let p1 = registry.plan("direct", s, &kernel, &machine, 1).unwrap();
+        let p4 = registry.plan("direct", s, &kernel, &machine, 4).unwrap();
+        assert_eq!(
+            p1.execute(&input).unwrap(),
+            p4.execute(&input).unwrap(),
+            "thread partitioning must be bitwise deterministic on {s:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Zero-allocation / zero-overhead claims
+// ---------------------------------------------------------------------
+
+#[test]
+fn direct_execute_into_allocates_nothing_after_planning() {
+    let s = ConvShape::new(8, 12, 12, 16, 3, 3, 1, 1);
+    let machine = haswell();
+    let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 1);
+    let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 2);
+    let registry = BackendRegistry::default();
+
+    // Zero-overhead backends: direct plus the other permutation-layout
+    // algorithms, all with workspace_len() == 0.
+    for name in ["direct", "reorder", "naive"] {
+        let plan = registry.plan(name, &s, &kernel, &machine, 1).unwrap();
+        assert_eq!(plan.workspace_len(), 0, "{name}");
+        let packed = plan.pack_input(&input).unwrap();
+        let mut out = vec![0.0f32; s.c_o * s.h_o() * s.w_o()];
+        let mut ws = vec![0.0f32; 0];
+        // Warm-up, then count.
+        plan.execute_into(packed.data(), &mut out, &mut ws).unwrap();
+        let before = allocs_now();
+        plan.execute_into(packed.data(), &mut out, &mut ws).unwrap();
+        let after = allocs_now();
+        assert_eq!(after - before, 0, "{name}: execute_into allocated on the hot path");
+    }
+
+    // Workspace backends allocate nothing either once the caller owns
+    // the workspace.
+    for name in ["im2col", "fft", "winograd"] {
+        let plan = registry.plan(name, &s, &kernel, &machine, 1).unwrap();
+        let mut out = vec![0.0f32; s.c_o * s.h_o() * s.w_o()];
+        let mut ws = vec![0.0f32; plan.workspace_len()];
+        plan.execute_into(input.data(), &mut out, &mut ws).unwrap();
+        let before = allocs_now();
+        plan.execute_into(input.data(), &mut out, &mut ws).unwrap();
+        let after = allocs_now();
+        // The Goto SGEMM inside im2col grows two internal pack panels on
+        // first use per call-site; allow its bounded packing, forbid
+        // anything proportional to repetition for the rest.
+        if name == "im2col" {
+            assert!(after - before <= 4, "{name}: unexpected allocations ({})", after - before);
+        } else {
+            assert_eq!(after - before, 0, "{name}: execute_into allocated on the hot path");
+        }
+    }
+}
+
+#[test]
+fn direct_backend_is_zero_overhead_on_every_paper_layer() {
+    let registry = BackendRegistry::default();
+    let machine = haswell();
+    for l in nets::all_layers() {
+        let s = &l.shape;
+        let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 42);
+        let plan = registry.plan("direct", s, &kernel, &machine, 1).unwrap();
+        assert_eq!(
+            plan.retained_bytes() + plan.workspace_bytes(),
+            0,
+            "{}/{} must satisfy the zero-memory-overhead claim",
+            l.net,
+            l.name
+        );
+    }
+}
+
+#[test]
+fn workspace_accounting_matches_paper_formulas() {
+    let registry = BackendRegistry::default();
+    let machine = haswell();
+    let s = ConvShape::new(64, 56, 56, 64, 3, 3, 1, 1);
+    let kernel = Tensor::random(&[64, 64, 3, 3], 3);
+    let im2col = registry.plan("im2col", &s, &kernel, &machine, 1).unwrap();
+    assert_eq!(im2col.workspace_bytes(), s.im2col_bytes());
+    let wino = registry.plan("winograd", &s, &kernel, &machine, 1).unwrap();
+    // 16/9 transformed weights minus the weights they replace.
+    assert_eq!(
+        wino.retained_bytes(),
+        dconv::winograd::winograd_extra_bytes(&s) - s.kernel_bytes()
+    );
+    // Wrong workspace size must be rejected, not UB.
+    let mut out = vec![0.0f32; s.c_o * s.h_o() * s.w_o()];
+    let mut tiny = vec![0.0f32; 1];
+    let input = Tensor::random(&[64, 56, 56], 4);
+    assert!(im2col.execute_into(input.data(), &mut out, &mut tiny).is_err());
+}
+
+// ---------------------------------------------------------------------
+// Coordinator serves through a cached plan (native, no PJRT)
+// ---------------------------------------------------------------------
+
+#[test]
+fn coordinator_serves_batches_through_one_cached_plan() {
+    let s = ConvShape::new(8, 12, 12, 16, 3, 3, 1, 1);
+    let machine = haswell();
+    let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 9);
+    let engine = PlanEngine::new(&s, &kernel, "auto", &machine, 1, &[1, 2, 4], "conv").unwrap();
+    assert_eq!(engine.plan().backend(), "direct");
+    assert_eq!(
+        engine.plan().retained_bytes() + engine.plan().workspace_bytes(),
+        0,
+        "the served plan is zero-overhead"
+    );
+
+    let image_in = s.c_i * s.h_i * s.w_i;
+    let image_out = s.c_o * s.h_o() * s.w_o();
+    let cfg = CoordinatorConfig { model_prefix: "conv".into(), ..Default::default() };
+    let coord = Coordinator::start(engine, cfg).unwrap();
+
+    // Single request matches the oracle exactly.
+    let img = Tensor::random(&[s.c_i, s.h_i, s.w_i], 77);
+    let want = conv_naive(&img, &kernel, &s).unwrap();
+    let got = coord.submit(img.data().to_vec()).unwrap().wait().unwrap();
+    assert_eq!(got.len(), image_out);
+    let got = Tensor::from_vec(&[s.c_o, s.h_o(), s.w_o()], got).unwrap();
+    assert!(got.allclose(&want, 1e-3, 1e-4), "served result differs from oracle");
+
+    // A burst: batching kicks in, every response is correct for its own
+    // input (padding slots must not leak), all through the same plan.
+    let inputs: Vec<Tensor> =
+        (0..12).map(|i| Tensor::random(&[s.c_i, s.h_i, s.w_i], 100 + i as u64)).collect();
+    let pendings: Vec<_> = inputs
+        .iter()
+        .map(|x| coord.submit_blocking(x.data().to_vec()).unwrap())
+        .collect();
+    for (x, p) in inputs.iter().zip(pendings) {
+        let out = p.wait().unwrap();
+        let want = conv_naive(x, &kernel, &s).unwrap();
+        let got = Tensor::from_vec(&[s.c_o, s.h_o(), s.w_o()], out).unwrap();
+        assert!(got.allclose(&want, 1e-3, 1e-4));
+    }
+    let stats = coord.stats();
+    assert_eq!(stats.requests, 13);
+    assert!(stats.batches <= 13);
+    assert_eq!(stats.latency.count(), 13);
+
+    // Wrong-sized submissions are rejected up front.
+    assert!(coord.submit(vec![0.0; image_in + 1]).is_err());
+}

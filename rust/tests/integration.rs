@@ -2,6 +2,12 @@
 //! the crate must agree on the same layers, layers must chain in the §4
 //! blocked layout without repacking, and the simulator must stay
 //! consistent with the crate's structural ground truth.
+//!
+//! These tests intentionally keep exercising the deprecated free-function
+//! wrappers (legacy regression coverage); the plan/execute API has its
+//! own cross-backend suite in `conformance.rs`.
+
+#![allow(deprecated)]
 
 use dconv::arch::{haswell, host};
 use dconv::conv::reorder::kernel_to_hwio;

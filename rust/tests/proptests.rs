@@ -3,6 +3,8 @@
 //! generate hundreds of cases per property — same idea, reproducible
 //! seeds printed on failure).
 
+#![allow(deprecated)] // legacy wrappers stay property-tested until removed
+
 use dconv::conv::{conv_direct, conv_naive, BlockParams, ConvShape};
 use dconv::coordinator::{Batcher, BatcherConfig};
 use dconv::gemm::{sgemm, sgemm_naive};

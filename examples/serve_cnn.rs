@@ -80,7 +80,8 @@ fn main() {
     println!("requests      : {}", st.requests);
     println!("wall time     : {secs:.2}s");
     println!("throughput    : {:.1} images/s", st.requests as f64 / secs);
-    println!("batches       : {} (mean occupancy {:.2} of max 8)", st.batches, st.mean_batch_size());
+    let occupancy = st.mean_batch_size();
+    println!("batches       : {} (mean occupancy {occupancy:.2} of max 8)", st.batches);
     println!("latency       : {}", st.latency.summary());
     assert_eq!(st.requests as usize, per_client * clients);
     println!("\nall responses verified finite and correctly shaped ✓");

@@ -63,10 +63,15 @@ fn main() {
             plan.execute_into(packed.data(), &mut out, &mut ws).unwrap();
             sink(out[0]);
         });
+        let note = if host.cores == 1 {
+            "single-core host: expect flat/worse".to_string()
+        } else {
+            String::new()
+        };
         t.row(vec![
             p.to_string(),
             format!("{:.2}", gflops(s.flops(), meas.median_secs)),
-            if host.cores == 1 { "single-core host: expect flat/worse".into() } else { String::new() },
+            note,
         ]);
     }
     emit("fig5_host", "Figure 5 (host-measured threaded direct conv)", &t);

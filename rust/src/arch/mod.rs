@@ -92,7 +92,8 @@ impl Machine {
     /// Arithmetic intensity (FLOPs/byte) required to not be DRAM-bound at
     /// peak, for `p` cores.
     pub fn roofline_intensity(&self, p: usize) -> f64 {
-        let flops_per_cycle = (self.n_vec * self.n_fma * self.flops_per_lane * p.min(self.cores)) as f64;
+        let lane_flops = self.n_vec * self.n_fma * self.flops_per_lane;
+        let flops_per_cycle = (lane_flops * p.min(self.cores)) as f64;
         flops_per_cycle / self.dram_bytes_per_cycle
     }
 

@@ -83,7 +83,8 @@ pub fn conv_backward_kernel(
     shape: &ConvShape,
 ) -> Result<Tensor> {
     shape.validate()?;
-    super::naive::check_shapes(input, &Tensor::zeros(&[shape.c_o, shape.c_i, shape.h_f, shape.w_f]), shape)?;
+    let kshape = [shape.c_o, shape.c_i, shape.h_f, shape.w_f];
+    super::naive::check_shapes(input, &Tensor::zeros(&kshape), shape)?;
     let (h_o, w_o) = (shape.h_o(), shape.w_o());
     if grad_out.shape() != [shape.c_o, h_o, w_o] {
         return Err(Error::Shape("grad_out shape mismatch".into()));

@@ -95,6 +95,7 @@ pub fn reduce_tile<const COB: usize, const TW: usize>(
 
 /// Load `TW` pencils of the accumulator tile from the blocked output.
 #[inline(always)]
+#[allow(clippy::manual_memcpy)] // explicit loop keeps the tile in registers
 pub fn load_tile_c<const COB: usize, const TW: usize>(
     acc: &mut [[f32; COB]; TW],
     out: &[f32],
@@ -109,6 +110,7 @@ pub fn load_tile_c<const COB: usize, const TW: usize>(
 
 /// Store `TW` pencils of the accumulator tile back.
 #[inline(always)]
+#[allow(clippy::manual_memcpy)] // explicit loop keeps the tile in registers
 pub fn store_tile_c<const COB: usize, const TW: usize>(
     acc: &[[f32; COB]; TW],
     out: &mut [f32],
@@ -127,6 +129,7 @@ pub fn store_tile_c<const COB: usize, const TW: usize>(
 
 /// Load `tw` rows of the accumulator tile from the blocked output buffer.
 #[inline(always)]
+#[allow(clippy::manual_memcpy)] // explicit loop keeps the tile in registers
 pub fn load_tile<const COB: usize>(acc: &mut AccTile<COB>, out: &[f32], tw: usize) {
     for kk in 0..tw {
         let src = &out[kk * COB..][..COB];
@@ -138,6 +141,7 @@ pub fn load_tile<const COB: usize>(acc: &mut AccTile<COB>, out: &[f32], tw: usiz
 
 /// Store `tw` rows of the accumulator tile back to the blocked output.
 #[inline(always)]
+#[allow(clippy::manual_memcpy)] // explicit loop keeps the tile in registers
 pub fn store_tile<const COB: usize>(acc: &AccTile<COB>, out: &mut [f32], tw: usize) {
     for kk in 0..tw {
         let dst = &mut out[kk * COB..][..COB];

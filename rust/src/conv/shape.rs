@@ -21,6 +21,7 @@ pub struct ConvShape {
 }
 
 impl ConvShape {
+    #[allow(clippy::too_many_arguments)] // mirrors the paper's 8-parameter layer tuple
     pub fn new(
         c_i: usize,
         h_i: usize,

@@ -4,8 +4,9 @@
 //! AOT compilation fixes shapes, so the server cannot run arbitrary
 //! batch sizes — it pads up to the nearest compiled size (wasting the
 //! padded slots) or, when more requests are queued than the largest
-//! artifact, splits into multiple executions. The planner picks the
-//! padding-minimal choice; occupancy shows up in the serve stats.
+//! artifact, splits into multiple executions ([`Batcher::split`]). The
+//! planner minimizes total padding waste; occupancy shows up in the
+//! serve stats.
 
 /// Batcher configuration: available sizes (ascending) and the fill wait.
 #[derive(Clone, Debug)]
@@ -32,6 +33,7 @@ pub struct Batcher {
 impl Batcher {
     pub fn new(mut cfg: BatcherConfig) -> Batcher {
         assert!(!cfg.sizes.is_empty(), "need at least one compiled batch size");
+        assert!(!cfg.sizes.contains(&0), "compiled batch sizes must be non-zero");
         cfg.sizes.sort_unstable();
         cfg.sizes.dedup();
         Batcher { cfg }
@@ -41,10 +43,13 @@ impl Batcher {
         &self.cfg
     }
 
-    /// Smallest compiled size >= n (or the largest available: callers
-    /// split at `max_size()` before planning).
+    /// Single-execution plan: the smallest compiled size >= `n` (or the
+    /// largest available when `n` exceeds it — use [`Batcher::split`]
+    /// to cover the excess). An empty queue (`n == 0`) plans a
+    /// zero-occupancy batch of the smallest size; callers that must not
+    /// dispatch dead batches should use `split`, which returns no
+    /// executions for an empty queue.
     pub fn plan(&self, n: usize) -> BatchPlan {
-        let n = n.max(1);
         let padded = self
             .cfg
             .sizes
@@ -53,6 +58,47 @@ impl Batcher {
             .find(|&s| s >= n)
             .unwrap_or(*self.cfg.sizes.last().unwrap());
         BatchPlan { padded, occupancy: n.min(padded) }
+    }
+
+    /// Split `n` queued requests into one or more executions over the
+    /// compiled sizes, covering all of them. Chooses the cover with
+    /// minimal total padding waste (dynamic program over the size set —
+    /// greedy largest-first is not optimal, e.g. sizes `{5, 8}` with
+    /// `n = 10` is two 5s, not `8 + 5`); ties prefer fewer executions,
+    /// then larger compiled sizes (better amortization per dispatch).
+    /// `split(0)` is empty.
+    pub fn split(&self, n: usize) -> Vec<BatchPlan> {
+        if n == 0 {
+            return Vec::new();
+        }
+        let sizes = &self.cfg.sizes;
+        // f[r] = minimal (total padded, executions) covering r requests;
+        // choice[r] = the size that achieves it.
+        let mut f: Vec<(u64, u32)> = vec![(u64::MAX, u32::MAX); n + 1];
+        let mut choice: Vec<usize> = vec![0; n + 1];
+        f[0] = (0, 0);
+        for r in 1..=n {
+            // Larger sizes first so exact ties keep the larger batch.
+            for &s in sizes.iter().rev() {
+                let prev = f[r.saturating_sub(s)];
+                if prev.0 == u64::MAX {
+                    continue;
+                }
+                let cand = (prev.0 + s as u64, prev.1 + 1);
+                if cand < f[r] {
+                    f[r] = cand;
+                    choice[r] = s;
+                }
+            }
+        }
+        let mut plans = Vec::with_capacity(f[n].1 as usize);
+        let mut r = n;
+        while r > 0 {
+            let s = choice[r];
+            plans.push(BatchPlan { padded: s, occupancy: s.min(r) });
+            r = r.saturating_sub(s);
+        }
+        plans
     }
 
     pub fn max_size(&self) -> usize {
@@ -70,11 +116,20 @@ mod tests {
     use super::*;
     use std::time::Duration;
 
+    fn batcher_of(sizes: &[usize]) -> Batcher {
+        Batcher::new(BatcherConfig { sizes: sizes.to_vec(), max_wait: Duration::from_millis(1) })
+    }
+
     fn batcher() -> Batcher {
-        Batcher::new(BatcherConfig {
-            sizes: vec![1, 2, 4, 8],
-            max_wait: Duration::from_millis(1),
-        })
+        batcher_of(&[1, 2, 4, 8])
+    }
+
+    fn total_occupancy(plans: &[BatchPlan]) -> usize {
+        plans.iter().map(|p| p.occupancy).sum()
+    }
+
+    fn total_waste(plans: &[BatchPlan]) -> usize {
+        plans.iter().map(Batcher::waste).sum()
     }
 
     #[test]
@@ -96,8 +151,12 @@ mod tests {
     }
 
     #[test]
-    fn zero_is_treated_as_one() {
-        assert_eq!(batcher().plan(0).padded, 1);
+    fn empty_queue_plans_no_executions() {
+        let b = batcher();
+        // plan(0) reports a zero-occupancy batch (nothing live inside)…
+        assert_eq!(b.plan(0), BatchPlan { padded: 1, occupancy: 0 });
+        // …and split(0) dispatches nothing at all.
+        assert!(b.split(0).is_empty());
     }
 
     #[test]
@@ -106,6 +165,62 @@ mod tests {
         assert_eq!(b.plan(20).padded, 8);
         assert_eq!(b.plan(20).occupancy, 8);
         assert_eq!(b.max_size(), 8);
+    }
+
+    #[test]
+    fn split_covers_queues_beyond_the_largest_size() {
+        let b = batcher();
+        let plans = b.split(20);
+        assert_eq!(total_occupancy(&plans), 20);
+        assert_eq!(total_waste(&plans), 0, "20 = 8+8+4 has an exact cover");
+        assert!(plans.iter().all(|p| b.cfg().sizes.contains(&p.padded)));
+        let mut padded: Vec<usize> = plans.iter().map(|p| p.padded).collect();
+        padded.sort_unstable();
+        assert_eq!(padded, vec![4, 8, 8]);
+    }
+
+    #[test]
+    fn split_is_not_greedy_largest_first() {
+        // Greedy would pick 8 then pad 2 into 5 (13 padded); the optimal
+        // cover is two 5s (10 padded, zero waste).
+        let b = batcher_of(&[5, 8]);
+        let plans = b.split(10);
+        assert_eq!(total_occupancy(&plans), 10);
+        assert_eq!(total_waste(&plans), 0);
+        assert_eq!(plans.len(), 2);
+        assert!(plans.iter().all(|p| p.padded == 5));
+    }
+
+    #[test]
+    fn split_tie_prefers_fewer_executions() {
+        // n=5 over {4, 8}: one 8 and 4+4 both waste 3; one dispatch wins.
+        let b = batcher_of(&[4, 8]);
+        let plans = b.split(5);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0], BatchPlan { padded: 8, occupancy: 5 });
+    }
+
+    #[test]
+    fn split_tie_at_equal_count_prefers_larger_sizes() {
+        // n=6 over {2, 4}: 4+2 and 2+2+2 both waste 0; fewer executions
+        // picks 4+2 (the larger size leads).
+        let b = batcher_of(&[2, 4]);
+        let plans = b.split(6);
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0], BatchPlan { padded: 4, occupancy: 4 });
+        assert_eq!(plans[1], BatchPlan { padded: 2, occupancy: 2 });
+    }
+
+    #[test]
+    fn split_matches_plan_within_the_largest_size() {
+        // For n <= max the single padded batch is already optimal
+        // whenever no multi-batch cover wastes less.
+        let b = batcher();
+        for n in 1..=8 {
+            let plans = b.split(n);
+            assert_eq!(total_occupancy(&plans), n);
+            assert!(total_waste(&plans) <= Batcher::waste(&b.plan(n)));
+        }
     }
 
     #[test]

@@ -8,7 +8,9 @@
 //! * a bounded request queue with backpressure ([`Coordinator::submit`]
 //!   fails fast when the queue is full rather than buffering unbounded);
 //! * a [`batcher`] that groups requests and pads them to the nearest
-//!   compiled batch size (`{prefix}_b{1,2,4,8}` artifacts);
+//!   compiled batch size (`{prefix}_b{1,2,4,8}` artifacts), splitting a
+//!   backlog deeper than the largest artifact into multiple executions
+//!   with minimal total padding ([`Batcher::split`]);
 //! * a worker loop running batches on any [`ModelExecutor`] — the
 //!   native cached-plan path ([`crate::engine::PlanEngine`]: one
 //!   [`crate::engine::ConvPlan`] per layer, planned once, buffers
@@ -24,7 +26,7 @@ pub use batcher::{BatchPlan, Batcher, BatcherConfig};
 use crate::metrics::{Histogram, ServeStats};
 use crate::runtime::ModelExecutor;
 use crate::{Error, Result};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -152,7 +154,9 @@ impl Coordinator {
     }
 }
 
-/// Worker loop: drain the queue into batches, execute, scatter replies.
+/// Worker loop: drain the queue, split it onto the compiled batch
+/// sizes ([`Batcher::split`] — one execution per sub-batch when the
+/// backlog exceeds the largest artifact), execute, scatter replies.
 fn worker<E: ModelExecutor>(
     engine: E,
     cfg: CoordinatorConfig,
@@ -164,15 +168,32 @@ fn worker<E: ModelExecutor>(
 ) {
     let max_batch = *batches.last().unwrap();
     let batcher = Batcher::new(BatcherConfig { sizes: batches, max_wait: cfg.max_wait });
+    // Drain beyond one compiled batch when the queue is deep — the
+    // split planner covers the backlog with multiple executions.
+    let cap = cfg.queue_depth.max(max_batch);
     loop {
-        // Collect one batch (blocking on the first request).
-        let mut reqs: Vec<Request> = Vec::with_capacity(max_batch);
+        // Collect a backlog (blocking on the first request).
+        let mut reqs: Vec<Request> = Vec::with_capacity(cap);
         match rx.recv() {
             Ok(r) => reqs.push(r),
             Err(_) => return, // all submitters gone
         }
         let deadline = Instant::now() + batcher.cfg().max_wait;
-        while reqs.len() < max_batch {
+        while reqs.len() < cap {
+            // Anything already queued is free to take.
+            match rx.try_recv() {
+                Ok(r) => {
+                    reqs.push(r);
+                    continue;
+                }
+                Err(TryRecvError::Disconnected) => break,
+                Err(TryRecvError::Empty) => {}
+            }
+            // Below a full batch it pays to wait for stragglers; at or
+            // beyond one, dispatch rather than hold requests hostage.
+            if reqs.len() >= max_batch {
+                break;
+            }
             let now = Instant::now();
             if now >= deadline {
                 break;
@@ -183,31 +204,47 @@ fn worker<E: ModelExecutor>(
             }
         }
 
-        let plan = batcher.plan(reqs.len());
-        // Gather into the padded batch buffer.
-        let mut buf = vec![0.0f32; plan.padded * image_elems];
-        for (i, r) in reqs.iter().enumerate() {
-            buf[i * image_elems..][..image_elems].copy_from_slice(&r.input);
+        let n = reqs.len();
+        let mut iter = reqs.into_iter();
+        for plan in batcher.split(n) {
+            let group: Vec<Request> = iter.by_ref().take(plan.occupancy).collect();
+            run_group(&engine, &cfg, plan, group, image_elems, classes, &stats);
         }
-        let model = format!("{}_b{}", cfg.model_prefix, plan.padded);
-        let result = engine.run(&model, buf);
+    }
+}
 
-        // Scatter outputs and record metrics.
-        let mut st = stats.lock().unwrap();
-        st.record_batch(reqs.len());
-        match result {
-            Ok(out) => {
-                for (i, r) in reqs.into_iter().enumerate() {
-                    let logits = out[i * classes..][..classes].to_vec();
-                    st.latency.record(r.enqueued.elapsed().as_secs_f64());
-                    let _ = r.reply.send(Ok(logits));
-                }
+/// Execute one sub-batch: gather into the padded buffer, run, scatter
+/// outputs to the reply channels, record metrics.
+fn run_group<E: ModelExecutor>(
+    engine: &E,
+    cfg: &CoordinatorConfig,
+    plan: BatchPlan,
+    group: Vec<Request>,
+    image_elems: usize,
+    classes: usize,
+    stats: &Arc<Mutex<ServeStats>>,
+) {
+    let mut buf = vec![0.0f32; plan.padded * image_elems];
+    for (i, r) in group.iter().enumerate() {
+        buf[i * image_elems..][..image_elems].copy_from_slice(&r.input);
+    }
+    let model = format!("{}_b{}", cfg.model_prefix, plan.padded);
+    let result = engine.run(&model, buf);
+
+    let mut st = stats.lock().unwrap();
+    st.record_batch(group.len());
+    match result {
+        Ok(out) => {
+            for (i, r) in group.into_iter().enumerate() {
+                let logits = out[i * classes..][..classes].to_vec();
+                st.latency.record(r.enqueued.elapsed().as_secs_f64());
+                let _ = r.reply.send(Ok(logits));
             }
-            Err(e) => {
-                let msg = format!("batch failed: {e}");
-                for r in reqs {
-                    let _ = r.reply.send(Err(Error::Runtime(msg.clone())));
-                }
+        }
+        Err(e) => {
+            let msg = format!("batch failed: {e}");
+            for r in group {
+                let _ = r.reply.send(Err(Error::Runtime(msg.clone())));
             }
         }
     }

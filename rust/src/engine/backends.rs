@@ -99,7 +99,8 @@ impl ConvPlan for DirectPlan {
     }
     fn execute_into(&self, input: &[f32], output: &mut [f32], workspace: &mut [f32]) -> Result<()> {
         check_execute_buffers(&self.shape, 0, input, output, workspace)?;
-        conv_direct_blocked_into(input, self.kernel.data(), &self.shape, self.bp, self.threads, output)
+        let ker = self.kernel.data();
+        conv_direct_blocked_into(input, ker, &self.shape, self.bp, self.threads, output)
     }
 }
 

@@ -74,16 +74,29 @@
 //! [`PlanEngine`] closes the loop with serving: it implements the
 //! coordinator's executor interface on top of a cached plan, so batched
 //! requests run through `execute_into` with every buffer reused.
+//!
+//! # Whole networks
+//!
+//! [`NetRunner`] lifts the per-layer contract to entire benchmark nets:
+//! every layer of a [`crate::nets::NetPlans`] table planned once, one
+//! ping-pong activation arena (two buffers of the largest inter-layer
+//! activation plus the largest per-layer workspace, shared across
+//! layers), and an allocation-free forward pass through repeated
+//! `execute_into` — the zero-overhead claim asserted network-wide.
+//! [`NetEngine`] serves it: batch items fan out across a scoped worker
+//! pool, each worker owning its own arena.
 
 mod backends;
+mod net_runner;
 mod registry;
 mod serving;
 
 pub use backends::{
     DirectBackend, FftBackend, Im2colBackend, NaiveBackend, ReorderBackend, WinogradBackend,
 };
+pub use net_runner::{adapt_nchw, NetArena, NetRunner};
 pub use registry::{BackendRegistry, BACKEND_NAMES};
-pub use serving::PlanEngine;
+pub use serving::{NetEngine, PlanEngine};
 
 use crate::arch::Machine;
 use crate::conv::ConvShape;

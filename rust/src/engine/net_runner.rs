@@ -1,0 +1,594 @@
+//! [`NetRunner`] — the zero-allocation whole-network forward executor.
+//!
+//! The paper states its zero-memory-overhead claim per layer; the payoff
+//! the ROADMAP cares about — fitting bigger networks on fixed-memory
+//! devices, serving under heavy traffic — only materializes when an
+//! *entire* network runs through direct convolution with no intermediate
+//! allocations. `NetRunner` is that network-level contract on top of the
+//! per-layer [`ConvPlan`] cache:
+//!
+//! 1. **Plan once.** A [`NetPlans`] table (every conv layer of a
+//!    benchmark net planned through the registry) is turned into an
+//!    executable schedule at construction. Weight pre-transforms,
+//!    blocking parameters and layouts are all fixed here.
+//! 2. **Size the arena once.** The *activation arena* is two ping-pong
+//!    buffers, each of `max_activation_floats()` — the largest single
+//!    inter-layer activation in the net — plus one shared scratch buffer
+//!    of the largest per-layer [`ConvPlan::workspace_len`]. Nothing else
+//!    is ever needed: layer `k` reads one buffer and writes the other.
+//! 3. **Execute allocation-free.** [`NetRunner::forward_with`] runs
+//!    every layer through [`ConvPlan::execute_into`] against the arena.
+//!    After planning, a forward pass performs **zero** heap allocations
+//!    (asserted by the counting-allocator test in `tests/net_forward.rs`).
+//!
+//! # Memory accounting
+//!
+//! The arena holds the network's *intrinsic* state — the layer inputs
+//! and outputs every inference engine must materialize — so it is not
+//! overhead in the paper's sense. The network-wide overhead is
+//! [`NetRunner::retained_bytes`] (sum of per-plan retained bytes) plus
+//! [`NetRunner::workspace_bytes`] (the *max* per-layer workspace, since
+//! the single scratch buffer is shared across layers). For the `direct`
+//! backend both are **0 on every paper net** — the zero-overhead claim,
+//! asserted network-wide.
+//!
+//! # Inter-layer glue
+//!
+//! The benchmark tables list conv layers only; the pooling (and, for
+//! GoogLeNet, the inception branch plumbing) between them is not part of
+//! the paper's measurements. Where consecutive layers do not chain
+//! directly, `NetRunner` inserts a deterministic, allocation-free
+//! *adapt* step that is fused with the §4 layout conversion:
+//!
+//! * **spatial**: an adaptive max-pool whose kernel/stride are derived
+//!   from the shapes (`stride = H_prev / H_next`,
+//!   `kernel = H_prev - (H_next-1)*stride`) — this reproduces the real
+//!   AlexNet (3x3/s2) and VGG (2x2/s2) pooling exactly;
+//! * **channels**: channel `c` of the next input reads channel
+//!   `c % C_prev` of the previous output (GoogLeNet's layer list is a
+//!   branch traversal, not a sequential chain; cycling keeps the data
+//!   nontrivial while staying shape-exact);
+//! * **layout**: the gather reads the previous plan's native output
+//!   layout and writes the next plan's native input layout directly.
+//!
+//! When shapes, channels and layouts all match (the §4 zero-repacking
+//! chain), the adapt step disappears entirely — the output buffer is
+//! handed to the next layer by pointer swap, no copy.
+//!
+//! [`adapt_nchw`] is an independent NCHW reference implementation of the
+//! same glue, used by the conformance tests to cross-check a whole
+//! forward pass against a layer-by-layer `conv_naive` chain.
+
+use crate::conv::ConvShape;
+use crate::layout::{
+    blocked_io_index, nchw_to_nhwc_slice, nhwc_to_nchw_slice, pack_io_slice, unpack_io_slice,
+    IoLayout,
+};
+use crate::nets::NetPlans;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+use super::ConvPlan;
+
+/// Linear index of logical element `(c, y, x)` of a `c_t x h x w`
+/// feature map stored in `layout`.
+#[inline]
+fn io_index(
+    layout: IoLayout,
+    c: usize,
+    y: usize,
+    x: usize,
+    c_t: usize,
+    h: usize,
+    w: usize,
+) -> usize {
+    match layout {
+        IoLayout::Nchw => (c * h + y) * w + x,
+        IoLayout::Nhwc => (y * w + x) * c_t + c,
+        IoLayout::Blocked { c_b } => blocked_io_index(c, y, x, h, w, c_b),
+    }
+}
+
+/// Kernel/stride of the adaptive max-pool mapping a spatial extent of
+/// `from` onto `to` (`to <= from`): `stride = from / to`,
+/// `kernel = from - (to-1)*stride`, which tiles `from` exactly.
+fn pool_spec(from: usize, to: usize) -> Result<(usize, usize)> {
+    if to == 0 || from == 0 {
+        return Err(Error::Shape("zero spatial extent in net chain".into()));
+    }
+    if from < to {
+        return Err(Error::Shape(format!(
+            "cannot chain: next layer needs spatial extent {to} > previous output {from} \
+             (upsampling glue is not modeled)"
+        )));
+    }
+    let stride = from / to;
+    let kernel = from - (to - 1) * stride;
+    Ok((kernel, stride))
+}
+
+/// Allocation-free glue between two consecutive layers: channel cycling
+/// plus adaptive max-pool plus layout conversion, in one gather pass.
+#[derive(Clone, Copy, Debug)]
+struct Adapt {
+    src_c: usize,
+    src_h: usize,
+    src_w: usize,
+    src_layout: IoLayout,
+    dst_c: usize,
+    dst_h: usize,
+    dst_w: usize,
+    dst_layout: IoLayout,
+    pool_kh: usize,
+    pool_sh: usize,
+    pool_kw: usize,
+    pool_sw: usize,
+    /// True when the previous output *is* the next input (same shape,
+    /// same layout): the §4 zero-repacking chain, no copy at all.
+    identity: bool,
+}
+
+impl Adapt {
+    fn between(
+        prev_shape: &ConvShape,
+        prev_out: IoLayout,
+        next_shape: &ConvShape,
+        next_in: IoLayout,
+    ) -> Result<Adapt> {
+        let (src_c, src_h, src_w) = (prev_shape.c_o, prev_shape.h_o(), prev_shape.w_o());
+        let (dst_c, dst_h, dst_w) = (next_shape.c_i, next_shape.h_i, next_shape.w_i);
+        let (pool_kh, pool_sh) = pool_spec(src_h, dst_h)?;
+        let (pool_kw, pool_sw) = pool_spec(src_w, dst_w)?;
+        let identity = src_c == dst_c && src_h == dst_h && src_w == dst_w && prev_out == next_in;
+        Ok(Adapt {
+            src_c,
+            src_h,
+            src_w,
+            src_layout: prev_out,
+            dst_c,
+            dst_h,
+            dst_w,
+            dst_layout: next_in,
+            pool_kh,
+            pool_sh,
+            pool_kw,
+            pool_sw,
+            identity,
+        })
+    }
+
+    /// Gather `src` (previous output, native layout) into `dst` (next
+    /// input, native layout). Allocation-free.
+    fn apply(&self, src: &[f32], dst: &mut [f32]) {
+        debug_assert_eq!(src.len(), self.src_c * self.src_h * self.src_w);
+        debug_assert_eq!(dst.len(), self.dst_c * self.dst_h * self.dst_w);
+        for c in 0..self.dst_c {
+            let sc = c % self.src_c;
+            for y in 0..self.dst_h {
+                let y0 = y * self.pool_sh;
+                for x in 0..self.dst_w {
+                    let x0 = x * self.pool_sw;
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..self.pool_kh {
+                        for dx in 0..self.pool_kw {
+                            let v = src[io_index(
+                                self.src_layout,
+                                sc,
+                                y0 + dy,
+                                x0 + dx,
+                                self.src_c,
+                                self.src_h,
+                                self.src_w,
+                            )];
+                            if v > m {
+                                m = v;
+                            }
+                        }
+                    }
+                    dst[io_index(self.dst_layout, c, y, x, self.dst_c, self.dst_h, self.dst_w)] = m;
+                }
+            }
+        }
+    }
+}
+
+/// NCHW reference implementation of the inter-layer glue: channel `c`
+/// of the result reads channel `c % C_src`, spatial extents are reduced
+/// by the same adaptive max-pool [`NetRunner`] uses. Independent of the
+/// arena/layout machinery so tests can cross-check a whole-network
+/// forward against a layer-by-layer naive chain.
+pub fn adapt_nchw(src: &Tensor, c: usize, h: usize, w: usize) -> Result<Tensor> {
+    let &[sc, sh, sw] = src.shape() else {
+        return Err(Error::Shape(format!("expected [C][H][W], got {:?}", src.shape())));
+    };
+    let (kh, strh) = pool_spec(sh, h)?;
+    let (kw, strw) = pool_spec(sw, w)?;
+    let s = src.data();
+    let mut out = vec![0.0f32; c * h * w];
+    for (cc, plane) in out.chunks_mut(h * w).enumerate() {
+        let sp = &s[(cc % sc) * sh * sw..][..sh * sw];
+        for y in 0..h {
+            for x in 0..w {
+                let mut m = f32::NEG_INFINITY;
+                for dy in 0..kh {
+                    for dx in 0..kw {
+                        let v = sp[(y * strh + dy) * sw + (x * strw + dx)];
+                        if v > m {
+                            m = v;
+                        }
+                    }
+                }
+                plane[y * w + x] = m;
+            }
+        }
+    }
+    Tensor::from_vec(&[c, h, w], out)
+}
+
+/// One layer of the executable schedule.
+struct Step {
+    /// Glue from the previous layer's output (`None` for the first
+    /// layer, which is fed by the packed network input).
+    adapt: Option<Adapt>,
+    in_len: usize,
+    out_len: usize,
+}
+
+/// Caller-owned execution state for one in-flight forward pass: the two
+/// ping-pong activation buffers plus the shared per-layer workspace.
+/// Create with [`NetRunner::arena`]; reuse across requests (that reuse
+/// is exactly what makes the forward pass allocation-free). One arena
+/// per concurrent request — workers in a pool each own one.
+pub struct NetArena {
+    bufs: [Vec<f32>; 2],
+    workspace: Vec<f32>,
+}
+
+/// A whole benchmark network compiled to an allocation-free executable:
+/// per-layer [`ConvPlan`]s, inter-layer glue, and the arena sizing
+/// contract. See the module docs.
+pub struct NetRunner {
+    plans: NetPlans,
+    steps: Vec<Step>,
+    input_len: usize,
+    output_len: usize,
+    max_act: usize,
+    max_ws: usize,
+}
+
+impl NetRunner {
+    /// Compile a planned net into an executable schedule. Fails if the
+    /// layer list cannot be chained (a later layer needs a larger
+    /// spatial extent than its predecessor produces).
+    pub fn new(plans: NetPlans) -> Result<NetRunner> {
+        if plans.layers.is_empty() {
+            return Err(Error::Shape(format!("net '{}' has no planned layers", plans.net)));
+        }
+        let mut steps = Vec::with_capacity(plans.layers.len());
+        let mut max_act = 0usize;
+        let mut max_ws = 0usize;
+        for (i, pl) in plans.layers.iter().enumerate() {
+            let s = &pl.layer.shape;
+            let in_len = s.c_i * s.h_i * s.w_i;
+            let out_len = s.c_o * s.h_o() * s.w_o();
+            max_act = max_act.max(in_len).max(out_len);
+            max_ws = max_ws.max(pl.plan.workspace_len());
+            let adapt = if i == 0 {
+                None
+            } else {
+                let prev = &plans.layers[i - 1];
+                let a = Adapt::between(
+                    &prev.layer.shape,
+                    prev.plan.output_layout(),
+                    s,
+                    pl.plan.input_layout(),
+                )
+                .map_err(|e| {
+                    Error::Shape(format!(
+                        "{}: {} -> {}: {e}",
+                        plans.net, prev.layer.name, pl.layer.name
+                    ))
+                })?;
+                Some(a)
+            };
+            steps.push(Step { adapt, in_len, out_len });
+        }
+        let first = &plans.layers[0].layer.shape;
+        let last = &plans.layers[plans.layers.len() - 1].layer.shape;
+        let input_len = first.c_i * first.h_i * first.w_i;
+        let output_len = last.c_o * last.h_o() * last.w_o();
+        Ok(NetRunner { plans, steps, input_len, output_len, max_act, max_ws })
+    }
+
+    /// The planned layers this runner executes.
+    pub fn plans(&self) -> &NetPlans {
+        &self.plans
+    }
+
+    /// Number of conv layers in the schedule.
+    pub fn layers(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Floats of the whole-network NCHW input (first layer).
+    pub fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    /// Floats of the whole-network NCHW output (last layer).
+    pub fn output_len(&self) -> usize {
+        self.output_len
+    }
+
+    /// Largest single inter-layer activation (floats) — the size of each
+    /// of the two ping-pong buffers.
+    pub fn max_activation_floats(&self) -> usize {
+        self.max_act
+    }
+
+    /// Bytes of the two ping-pong activation buffers. Intrinsic network
+    /// state (layer inputs/outputs), not overhead.
+    pub fn activation_bytes(&self) -> u64 {
+        2 * 4 * self.max_act as u64
+    }
+
+    /// Sum of per-plan retained bytes beyond conventional weights.
+    pub fn retained_bytes(&self) -> u64 {
+        self.plans.total_retained_bytes()
+    }
+
+    /// Scratch bytes of the shared workspace: the *max* per-layer
+    /// workspace, since one buffer serves every layer in turn.
+    pub fn workspace_bytes(&self) -> u64 {
+        4 * self.max_ws as u64
+    }
+
+    /// Network-wide memory overhead in the paper's sense:
+    /// `retained + shared workspace`. **0** for the `direct` backend on
+    /// every paper net.
+    pub fn overhead_bytes(&self) -> u64 {
+        self.retained_bytes() + self.workspace_bytes()
+    }
+
+    /// Total bytes of one execution arena (activations + workspace).
+    pub fn arena_bytes(&self) -> u64 {
+        self.activation_bytes() + self.workspace_bytes()
+    }
+
+    /// Allocate one execution arena (the only allocation site; do it
+    /// once, reuse per request).
+    pub fn arena(&self) -> NetArena {
+        NetArena {
+            bufs: [vec![0.0; self.max_act], vec![0.0; self.max_act]],
+            workspace: vec![0.0; self.max_ws],
+        }
+    }
+
+    /// Run the whole network forward, allocation-free. `input` is the
+    /// first layer's flat NCHW image (`input_len()` floats), `output`
+    /// receives the last layer's flat NCHW map (`output_len()` floats),
+    /// `arena` is a (reused) buffer set from [`NetRunner::arena`].
+    pub fn forward_with(
+        &self,
+        arena: &mut NetArena,
+        input: &[f32],
+        output: &mut [f32],
+    ) -> Result<()> {
+        if input.len() != self.input_len {
+            return Err(Error::Shape(format!(
+                "net input has {} floats, expected {}",
+                input.len(),
+                self.input_len
+            )));
+        }
+        if output.len() != self.output_len {
+            return Err(Error::Shape(format!(
+                "net output has {} floats, expected {}",
+                output.len(),
+                self.output_len
+            )));
+        }
+        if arena.bufs[0].len() != self.max_act
+            || arena.bufs[1].len() != self.max_act
+            || arena.workspace.len() != self.max_ws
+        {
+            return Err(Error::Shape("arena was not built by this runner".into()));
+        }
+        let NetArena { bufs, workspace } = arena;
+
+        // Stage the NCHW input into the first layer's native layout.
+        let first = &self.plans.layers[0];
+        let fs = &first.layer.shape;
+        let stage = &mut bufs[0][..self.input_len];
+        match first.plan.input_layout() {
+            IoLayout::Nchw => stage.copy_from_slice(input),
+            IoLayout::Nhwc => nchw_to_nhwc_slice(input, fs.c_i, fs.h_i, fs.w_i, stage)?,
+            IoLayout::Blocked { c_b } => pack_io_slice(input, fs.c_i, fs.h_i, fs.w_i, c_b, stage)?,
+        }
+
+        // Ping-pong through the layers: `cur` is the buffer holding the
+        // live activation at each point.
+        let mut cur = 0usize;
+        for (pl, step) in self.plans.layers.iter().zip(&self.steps) {
+            if let Some(ad) = &step.adapt {
+                if !ad.identity {
+                    let (src, dst) = two(bufs, cur);
+                    let src_len = ad.src_c * ad.src_h * ad.src_w;
+                    ad.apply(&src[..src_len], &mut dst[..step.in_len]);
+                    cur = 1 - cur;
+                }
+            }
+            let (inb, outb) = two(bufs, cur);
+            pl.plan.execute_into(
+                &inb[..step.in_len],
+                &mut outb[..step.out_len],
+                &mut workspace[..pl.plan.workspace_len()],
+            )?;
+            cur = 1 - cur;
+        }
+
+        // Unpack the last activation back to NCHW.
+        let last = &self.plans.layers[self.plans.layers.len() - 1];
+        let ls = &last.layer.shape;
+        let (h_o, w_o) = (ls.h_o(), ls.w_o());
+        let native = &bufs[cur][..self.output_len];
+        match last.plan.output_layout() {
+            IoLayout::Nchw => output.copy_from_slice(native),
+            IoLayout::Nhwc => nhwc_to_nchw_slice(native, ls.c_o, h_o, w_o, output)?,
+            IoLayout::Blocked { c_b } => unpack_io_slice(native, ls.c_o, h_o, w_o, c_b, output)?,
+        }
+        Ok(())
+    }
+
+    /// One-shot convenience: allocates a fresh arena and the output
+    /// tensor. Not the hot path — serving holds arenas and calls
+    /// [`NetRunner::forward_with`].
+    pub fn forward(&self, input: &Tensor) -> Result<Tensor> {
+        let fs = &self.plans.layers[0].layer.shape;
+        let want = [fs.c_i, fs.h_i, fs.w_i];
+        if input.shape() != want {
+            return Err(Error::Shape(format!(
+                "net input shape {:?} != expected {want:?}",
+                input.shape()
+            )));
+        }
+        let ls = &self.plans.layers[self.plans.layers.len() - 1].layer.shape;
+        let mut arena = self.arena();
+        let mut out = vec![0.0f32; self.output_len];
+        self.forward_with(&mut arena, input.data(), &mut out)?;
+        Tensor::from_vec(&[ls.c_o, ls.h_o(), ls.w_o()], out)
+    }
+}
+
+/// Disjoint (read, write) views of the two ping-pong buffers: read from
+/// `bufs[cur]`, write into the other.
+fn two(bufs: &mut [Vec<f32>; 2], cur: usize) -> (&[f32], &mut [f32]) {
+    let (a, b) = bufs.split_at_mut(1);
+    if cur == 0 {
+        (&a[0], &mut b[0])
+    } else {
+        (&b[0], &mut a[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::haswell;
+
+    fn custom_plans(shapes: &[ConvShape], backend: &str, seed: u64) -> NetPlans {
+        NetPlans::from_shapes("custom", shapes, backend, &haswell(), seed).unwrap()
+    }
+
+    #[test]
+    fn pool_spec_reproduces_real_pools() {
+        assert_eq!(pool_spec(55, 27).unwrap(), (3, 2)); // AlexNet 3x3/s2
+        assert_eq!(pool_spec(27, 13).unwrap(), (3, 2));
+        assert_eq!(pool_spec(224, 112).unwrap(), (2, 2)); // VGG 2x2/s2
+        assert_eq!(pool_spec(14, 14).unwrap(), (1, 1)); // identity
+        assert_eq!(pool_spec(7, 1).unwrap(), (7, 7)); // global pool
+        assert!(pool_spec(13, 14).is_err()); // upsampling is not modeled
+    }
+
+    #[test]
+    fn adapt_nchw_pools_and_cycles_channels() {
+        let src = Tensor::iota(&[2, 4, 4]);
+        // 2 channels, 4x4 -> 3 channels, 2x2 (2x2/s2 max pool).
+        let out = adapt_nchw(&src, 3, 2, 2).unwrap();
+        assert_eq!(out.shape(), &[3, 2, 2]);
+        // max of each 2x2 window of channel 0: 5, 7, 13, 15
+        assert_eq!(out.at(&[0, 0, 0]), 5.0);
+        assert_eq!(out.at(&[0, 1, 1]), 15.0);
+        // channel 2 cycles back to source channel 0
+        assert_eq!(out.at(&[2, 0, 0]), out.at(&[0, 0, 0]));
+        // channel 1 is source channel 1 (offset by 16)
+        assert_eq!(out.at(&[1, 0, 0]), 21.0);
+    }
+
+    #[test]
+    fn identity_chain_swaps_instead_of_copying() {
+        // Two layers whose pencils line up would chain with zero
+        // repacking only if c_ob(k) == c_ib(k+1); with the naive backend
+        // both layouts are NCHW, so an equal-shape chain is an identity.
+        let shapes = [
+            ConvShape::new(8, 10, 10, 8, 3, 3, 1, 1),
+            ConvShape::new(8, 10, 10, 8, 3, 3, 1, 1),
+        ];
+        let runner = NetRunner::new(custom_plans(&shapes, "naive", 5)).unwrap();
+        assert!(runner.steps[1].adapt.unwrap().identity);
+    }
+
+    #[test]
+    fn forward_matches_naive_chain_on_custom_net() {
+        use crate::conv::conv_naive;
+        // conv -> pool(2x2/s2 via adapt) -> conv, direct backend.
+        let shapes = [
+            ConvShape::new(8, 12, 12, 16, 3, 3, 1, 1),
+            ConvShape::new(16, 6, 6, 16, 3, 3, 1, 1),
+        ];
+        let plans = custom_plans(&shapes, "direct", 40);
+        let kernels: Vec<Tensor> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 40 + i as u64))
+            .collect();
+        let runner = NetRunner::new(plans).unwrap();
+        let input = Tensor::random(&[8, 12, 12], 99);
+        let got = runner.forward(&input).unwrap();
+
+        let mut act = input.clone();
+        for (s, k) in shapes.iter().zip(&kernels) {
+            let adapted = adapt_nchw(&act, s.c_i, s.h_i, s.w_i).unwrap();
+            act = conv_naive(&adapted, k, s).unwrap();
+        }
+        assert!(got.allclose(&act, 1e-3, 1e-3), "diverged: {}", got.max_abs_diff(&act));
+    }
+
+    #[test]
+    fn arena_sizing_and_overhead_accounting() {
+        let shapes = [
+            ConvShape::new(8, 12, 12, 16, 3, 3, 1, 1),
+            ConvShape::new(16, 6, 6, 16, 3, 3, 1, 1),
+        ];
+        let runner = NetRunner::new(custom_plans(&shapes, "direct", 7)).unwrap();
+        // Largest activation is layer 0's output: 16 * 12 * 12.
+        assert_eq!(runner.max_activation_floats(), 16 * 12 * 12);
+        assert_eq!(runner.activation_bytes(), 2 * 4 * 16 * 12 * 12);
+        assert_eq!(runner.overhead_bytes(), 0, "direct must be zero-overhead");
+        assert_eq!(runner.arena_bytes(), runner.activation_bytes());
+        assert_eq!(runner.input_len(), 8 * 12 * 12);
+        assert_eq!(runner.output_len(), 16 * 6 * 6);
+
+        // im2col charges its lowering workspace; the arena shares one
+        // buffer so the network-wide workspace is the per-layer max.
+        let r2 = NetRunner::new(custom_plans(&shapes, "im2col", 7)).unwrap();
+        let per_layer: Vec<u64> = shapes.iter().map(ConvShape::im2col_bytes).collect();
+        assert_eq!(r2.workspace_bytes(), per_layer.iter().copied().max().unwrap());
+    }
+
+    #[test]
+    fn rejects_unchainable_and_empty_nets() {
+        // Second layer needs a LARGER spatial input than layer 1 emits.
+        let shapes = [
+            ConvShape::new(4, 8, 8, 8, 3, 3, 1, 1),
+            ConvShape::new(8, 16, 16, 8, 3, 3, 1, 1),
+        ];
+        assert!(NetRunner::new(custom_plans(&shapes, "naive", 1)).is_err());
+        let empty = NetPlans { net: "empty".into(), layers: Vec::new() };
+        assert!(NetRunner::new(empty).is_err());
+    }
+
+    #[test]
+    fn forward_with_validates_buffers() {
+        let shapes = [ConvShape::new(4, 8, 8, 8, 3, 3, 1, 1)];
+        let runner = NetRunner::new(custom_plans(&shapes, "direct", 3)).unwrap();
+        let mut arena = runner.arena();
+        let input = vec![0.0f32; runner.input_len()];
+        let mut out = vec![0.0f32; runner.output_len()];
+        assert!(runner.forward_with(&mut arena, &input[1..], &mut out).is_err());
+        assert!(runner.forward_with(&mut arena, &input, &mut out[1..]).is_err());
+        assert!(runner.forward_with(&mut arena, &input, &mut out).is_ok());
+        let bad = Tensor::zeros(&[4, 8, 9]);
+        assert!(runner.forward(&bad).is_err());
+    }
+}

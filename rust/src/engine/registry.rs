@@ -38,6 +38,15 @@ impl Default for BackendRegistry {
 }
 
 impl BackendRegistry {
+    /// Process-wide shared default registry (the six built-in
+    /// backends). Planning paths that never register custom backends —
+    /// [`crate::nets::NetPlans`], the serving engines, the CLI — share
+    /// this instance instead of rebuilding the backend list per call.
+    pub fn shared() -> &'static BackendRegistry {
+        static SHARED: std::sync::OnceLock<BackendRegistry> = std::sync::OnceLock::new();
+        SHARED.get_or_init(BackendRegistry::default)
+    }
+
     /// Look a backend up by its registry name.
     pub fn get(&self, name: &str) -> Option<&dyn ConvAlgo> {
         self.backends.iter().find(|b| b.name() == name).map(|b| b.as_ref())
@@ -84,7 +93,12 @@ impl BackendRegistry {
     }
 
     /// Resolve a CLI-style backend name (`"auto"` included) for a layer.
-    pub fn resolve(&self, name: &str, shape: &ConvShape, machine: &Machine) -> Result<&dyn ConvAlgo> {
+    pub fn resolve(
+        &self,
+        name: &str,
+        shape: &ConvShape,
+        machine: &Machine,
+    ) -> Result<&dyn ConvAlgo> {
         if name == "auto" {
             return Ok(self.auto(shape, machine));
         }
@@ -113,6 +127,14 @@ impl BackendRegistry {
 mod tests {
     use super::*;
     use crate::arch::{cortex_a57, haswell};
+
+    #[test]
+    fn shared_registry_is_one_instance() {
+        let a = BackendRegistry::shared() as *const BackendRegistry;
+        let b = BackendRegistry::shared() as *const BackendRegistry;
+        assert_eq!(a, b);
+        assert!(BackendRegistry::shared().get("direct").is_some());
+    }
 
     #[test]
     fn all_six_backends_reachable_by_name() {

@@ -1,22 +1,70 @@
-//! [`PlanEngine`] — the native serving executor: a cached [`ConvPlan`]
-//! behind the coordinator's [`ModelExecutor`] interface.
+//! Native serving executors behind the coordinator's [`ModelExecutor`]
+//! interface:
 //!
-//! This is the zero-overhead hot path the ROADMAP's serving north-star
-//! needs: the plan (pre-transformed weights), the layout staging
-//! buffers, the native output buffer and the workspace are all built
-//! once at construction and reused for every request of every batch —
-//! per request, the conv path allocates nothing. (The reply buffer
-//! handed back through the coordinator's channel is the one per-batch
-//! allocation; it is the message, not conv state.)
+//! * [`PlanEngine`] — one conv layer through a cached [`ConvPlan`];
+//! * [`NetEngine`] — a whole network through a [`NetRunner`], with batch
+//!   items fanned out across a scoped worker pool (one [`NetArena`] per
+//!   worker, so the workers never contend and never allocate).
+//!
+//! Both are the zero-overhead hot path the ROADMAP's serving north-star
+//! needs: plans (pre-transformed weights), staging buffers and
+//! workspaces are all built once at construction and reused for every
+//! request of every batch — per request, the conv path allocates
+//! nothing. (The reply buffer handed back through the coordinator's
+//! channel is the one per-batch allocation; it is the message, not conv
+//! state.)
 
-use super::{BackendRegistry, ConvPlan};
+use super::{BackendRegistry, ConvPlan, NetArena, NetRunner};
 use crate::arch::Machine;
 use crate::conv::ConvShape;
-use crate::layout::{nchw_to_nhwc_slice, nhwc_to_nchw_slice, pack_io_slice, unpack_io_slice, IoLayout};
+use crate::layout::{
+    nchw_to_nhwc_slice, nhwc_to_nchw_slice, pack_io_slice, unpack_io_slice, IoLayout,
+};
 use crate::runtime::{Artifact, Manifest, ModelExecutor};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 use std::sync::Mutex;
+
+/// Build the `{prefix}_b{N}` batch-artifact manifest both native
+/// engines expose: one `cnn` artifact per (deduped, ascending) batch
+/// size over the given per-image input/output dims and FLOP count.
+fn batch_manifest(
+    prefix: &str,
+    batch_sizes: &[usize],
+    image_dims: (&[usize], &[usize]),
+    flops_per_image: u64,
+    file: &str,
+) -> Result<Manifest> {
+    if batch_sizes.is_empty() || batch_sizes.contains(&0) {
+        return Err(Error::Runtime("batch_sizes must be non-empty and non-zero".into()));
+    }
+    let (in_dims, out_dims) = image_dims;
+    let mut sizes: Vec<usize> = batch_sizes.to_vec();
+    sizes.sort_unstable();
+    sizes.dedup();
+    let models = sizes
+        .iter()
+        .map(|&b| {
+            let dims = |d: &[usize]| {
+                let mut v = Vec::with_capacity(d.len() + 1);
+                v.push(b);
+                v.extend_from_slice(d);
+                v
+            };
+            Artifact {
+                name: format!("{prefix}_b{b}"),
+                file: file.into(),
+                kind: "cnn".into(),
+                batch: b,
+                input_shape: dims(in_dims),
+                output_shape: dims(out_dims),
+                flops: flops_per_image * b as u64,
+                golden: None,
+            }
+        })
+        .collect();
+    Ok(Manifest { models, layers: Vec::new() })
+}
 
 /// Reused per-execution buffers (one set per engine; requests are
 /// serialized by the coordinator's single worker).
@@ -57,37 +105,24 @@ impl PlanEngine {
         batch_sizes: &[usize],
         prefix: &str,
     ) -> Result<PlanEngine> {
-        if batch_sizes.is_empty() || batch_sizes.contains(&0) {
-            return Err(Error::Runtime("batch_sizes must be non-empty and non-zero".into()));
-        }
-        let registry = BackendRegistry::default();
-        let plan = registry.plan(backend, shape, kernel, machine, threads)?;
+        let plan = BackendRegistry::shared().plan(backend, shape, kernel, machine, threads)?;
         let image_in = shape.c_i * shape.h_i * shape.w_i;
         let (h_o, w_o) = (shape.h_o(), shape.w_o());
         let image_out = shape.c_o * h_o * w_o;
-        let mut sizes: Vec<usize> = batch_sizes.to_vec();
-        sizes.sort_unstable();
-        sizes.dedup();
-        let models = sizes
-            .iter()
-            .map(|&b| Artifact {
-                name: format!("{prefix}_b{b}"),
-                file: "<native-plan>".into(),
-                kind: "cnn".into(),
-                batch: b,
-                input_shape: vec![b, shape.c_i, shape.h_i, shape.w_i],
-                output_shape: vec![b, shape.c_o, h_o, w_o],
-                flops: shape.flops() * b as u64,
-                golden: None,
-            })
-            .collect();
+        let manifest = batch_manifest(
+            prefix,
+            batch_sizes,
+            (&[shape.c_i, shape.h_i, shape.w_i], &[shape.c_o, h_o, w_o]),
+            shape.flops(),
+            "<native-plan>",
+        )?;
         let scratch = Scratch {
             staged_in: vec![0.0; image_in],
             native_out: vec![0.0; image_out],
             workspace: vec![0.0; plan.workspace_len()],
         };
         Ok(PlanEngine {
-            manifest: Manifest { models, layers: Vec::new() },
+            manifest,
             shape: shape.clone(),
             plan,
             scratch: Mutex::new(scratch),
@@ -162,6 +197,126 @@ impl ModelExecutor for PlanEngine {
     }
 }
 
+/// A whole network served through a [`NetRunner`], at a set of batch
+/// sizes the coordinator's batcher can pad to. Batch items fan out
+/// across up to `workers` scoped threads; each worker owns one
+/// [`NetArena`], so the per-image forward passes are allocation-free
+/// and contention-free.
+pub struct NetEngine {
+    manifest: Manifest,
+    runner: NetRunner,
+    arenas: Vec<Mutex<NetArena>>,
+    image_in: usize,
+    image_out: usize,
+}
+
+impl NetEngine {
+    /// Expose `runner` as batch models `{prefix}_b{N}` for each `N` in
+    /// `batch_sizes`, executed by a pool of `workers` threads (1 =
+    /// serial). Inputs/outputs cross the interface as conventional flat
+    /// NCHW per image.
+    pub fn new(
+        runner: NetRunner,
+        workers: usize,
+        batch_sizes: &[usize],
+        prefix: &str,
+    ) -> Result<NetEngine> {
+        let layers = &runner.plans().layers;
+        let first = &layers[0].layer.shape;
+        let last = &layers[layers.len() - 1].layer.shape;
+        let flops: u64 = layers.iter().map(|l| l.layer.shape.flops()).sum();
+        let manifest = batch_manifest(
+            prefix,
+            batch_sizes,
+            (&[first.c_i, first.h_i, first.w_i], &[last.c_o, last.h_o(), last.w_o()]),
+            flops,
+            "<net-runner>",
+        )?;
+        let arenas = (0..workers.max(1)).map(|_| Mutex::new(runner.arena())).collect();
+        Ok(NetEngine {
+            manifest,
+            image_in: runner.input_len(),
+            image_out: runner.output_len(),
+            runner,
+            arenas,
+        })
+    }
+
+    /// The compiled network (aggregate accounting, layer plans).
+    pub fn runner(&self) -> &NetRunner {
+        &self.runner
+    }
+
+    /// Worker-pool width (number of per-worker arenas).
+    pub fn workers(&self) -> usize {
+        self.arenas.len()
+    }
+
+    fn run_images(&self, arena: &mut NetArena, input: &[f32], output: &mut [f32]) -> Result<()> {
+        let ins = input.chunks(self.image_in);
+        let outs = output.chunks_mut(self.image_out);
+        for (img, dst) in ins.zip(outs) {
+            self.runner.forward_with(arena, img, dst)?;
+        }
+        Ok(())
+    }
+}
+
+impl ModelExecutor for NetEngine {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn run(&self, model: &str, input: Vec<f32>) -> Result<Vec<f32>> {
+        let art = self
+            .manifest
+            .get(model)
+            .ok_or_else(|| Error::Runtime(format!("unknown artifact '{model}'")))?;
+        let b = art.batch;
+        if input.len() != b * self.image_in {
+            return Err(Error::Shape(format!(
+                "artifact '{model}' wants {} elements (shape {:?}), got {}",
+                b * self.image_in,
+                art.input_shape,
+                input.len()
+            )));
+        }
+        // The reply buffer is the single per-batch allocation.
+        let mut out = vec![0.0f32; b * self.image_out];
+        let workers = self.arenas.len().min(b).max(1);
+        if workers <= 1 {
+            let mut arena = self.arenas[0]
+                .lock()
+                .map_err(|_| Error::Runtime("net arena poisoned by a previous panic".into()))?;
+            self.run_images(&mut arena, &input, &mut out)?;
+            return Ok(out);
+        }
+        // Fan the batch out across the worker pool: contiguous image
+        // ranges, one scoped thread and one arena per worker.
+        let per = b.div_ceil(workers);
+        let chunk_in = per * self.image_in;
+        let chunk_out = per * self.image_out;
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::with_capacity(workers);
+            let chunks = input.chunks(chunk_in).zip(out.chunks_mut(chunk_out));
+            for (w, (ichunk, ochunk)) in chunks.enumerate() {
+                let arena_mx = &self.arenas[w];
+                handles.push(scope.spawn(move || -> Result<()> {
+                    let mut arena = arena_mx.lock().map_err(|_| {
+                        Error::Runtime("net arena poisoned by a previous panic".into())
+                    })?;
+                    self.run_images(&mut arena, ichunk, ochunk)
+                }));
+            }
+            for h in handles {
+                h.join().map_err(|_| Error::Runtime("net worker panicked".into()))??;
+            }
+            Ok(())
+        })?;
+        Ok(out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,10 +340,47 @@ mod tests {
         let out = eng.run("conv_b2", batch).unwrap();
         for (idx, img) in [i0, i1].iter().enumerate() {
             let want = conv_naive(img, &kernel, &s).unwrap();
-            let got = Tensor::from_vec(&[16, 10, 10], out[idx * want.len()..][..want.len()].to_vec())
-                .unwrap();
+            let logits = out[idx * want.len()..][..want.len()].to_vec();
+            let got = Tensor::from_vec(&[16, 10, 10], logits).unwrap();
             assert!(got.allclose(&want, 1e-3, 1e-4), "image {idx}");
         }
+    }
+
+    fn chain_runner(seed: u64) -> NetRunner {
+        use crate::nets::NetPlans;
+        let shapes = [
+            ConvShape::new(8, 12, 12, 16, 3, 3, 1, 1),
+            ConvShape::new(16, 6, 6, 16, 3, 3, 1, 1),
+        ];
+        let plans = NetPlans::from_shapes("chain", &shapes, "direct", &haswell(), seed).unwrap();
+        NetRunner::new(plans).unwrap()
+    }
+
+    #[test]
+    fn net_engine_worker_pool_matches_serial() {
+        let e1 = NetEngine::new(chain_runner(11), 1, &[4], "net").unwrap();
+        let e4 = NetEngine::new(chain_runner(11), 4, &[4], "net").unwrap();
+        assert_eq!(e1.workers(), 1);
+        assert_eq!(e4.workers(), 4);
+        assert_eq!(e1.manifest().cnn_batches(), vec![4]);
+
+        let image_in = e1.runner().input_len();
+        let mut batch = Vec::new();
+        for i in 0..4u64 {
+            batch.extend_from_slice(Tensor::random(&[image_in], 100 + i).data());
+        }
+        let o1 = e1.run("net_b4", batch.clone()).unwrap();
+        let o4 = e4.run("net_b4", batch.clone()).unwrap();
+        assert_eq!(o1, o4, "worker pool must be bitwise identical to serial");
+
+        // The first batch item matches the one-shot forward path.
+        let img = Tensor::from_vec(&[8, 12, 12], batch[..image_in].to_vec()).unwrap();
+        let want = e1.runner().forward(&img).unwrap();
+        assert_eq!(&o1[..want.len()], want.data());
+
+        assert!(e1.run("net_b9", batch.clone()).is_err());
+        assert!(e1.run("net_b4", vec![0.0; 3]).is_err());
+        assert!(NetEngine::new(chain_runner(11), 2, &[], "net").is_err());
     }
 
     #[test]

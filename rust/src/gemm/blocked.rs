@@ -20,6 +20,7 @@ impl Default for BlockSizes {
 }
 
 /// `C[m x n] += A[m x k] * B[k x n]` (row-major, leading dimensions).
+#[allow(clippy::too_many_arguments)] // the BLAS sgemm signature
 pub fn sgemm(
     m: usize,
     n: usize,

@@ -13,6 +13,7 @@ use crate::{Error, Result};
 /// Linear index of logical weight `(o, i, n, m)` (output channel, input
 /// channel, kernel row, kernel col) in the blocked kernel layout.
 #[inline]
+#[allow(clippy::too_many_arguments)] // four logical coords + three layout params
 pub fn blocked_kernel_index(
     o: usize,
     i: usize,

@@ -37,6 +37,30 @@
 //! `retained_bytes()`/`workspace_bytes()` contract so the paper's
 //! overhead table falls out of the API uniformly.
 //!
+//! ## Whole networks: `NetRunner` and the arena-sizing contract
+//!
+//! [`engine::NetRunner`] lifts the per-layer claim to entire benchmark
+//! nets. Given a [`nets::NetPlans`] table (every conv layer planned
+//! once), it sizes **one** execution arena and never allocates again:
+//!
+//! * two ping-pong activation buffers, each of the *largest single
+//!   inter-layer activation* in the net (layer `k` reads one and writes
+//!   the other; an adapt/pool/layout glue step runs in place between
+//!   mismatched layers, and disappears entirely when the §4 layouts
+//!   chain);
+//! * one shared workspace of the *largest per-layer*
+//!   `workspace_len()` — a single scratch buffer serves every layer in
+//!   turn, so the network-wide workspace charge is a `max`, not a sum.
+//!
+//! Activations are intrinsic network state, not overhead; the
+//! network-wide overhead is `retained + shared workspace`, and for the
+//! `direct` backend it is **0 on every paper net** (asserted by
+//! `tests/net_forward.rs`, together with a counting-allocator proof
+//! that a whole forward pass allocates nothing after planning).
+//! [`engine::NetEngine`] serves the runner through the coordinator,
+//! fanning batch items across a scoped worker pool with one arena per
+//! worker.
+//!
 //! ## Crate layout
 //!
 //! 1. **Kernel substrates** — native-Rust implementations of every
@@ -53,10 +77,12 @@
 //!    layers of AlexNet, GoogLeNet and VGG-16, plus per-layer plan
 //!    tables built on the engine).
 //! 3. **Serving stack** — [`engine`] (the `ConvAlgo`/`ConvPlan`
-//!    plan/execute API and the native [`engine::PlanEngine`] executor)
-//!    and [`coordinator`] (request router, dynamic batcher, worker
-//!    pool) with [`metrics`]. [`runtime`] holds the artifact manifest
-//!    plus, behind the `pjrt` feature, the XLA/PJRT executor for the
+//!    plan/execute API, the [`engine::NetRunner`] whole-network
+//!    executor, and the native [`engine::PlanEngine`] /
+//!    [`engine::NetEngine`] executors) and [`coordinator`] (request
+//!    router, dynamic batcher with multi-execution split, worker pool)
+//!    with [`metrics`]. [`runtime`] holds the artifact manifest plus,
+//!    behind the `pjrt` feature, the XLA/PJRT executor for the
 //!    JAX/Pallas AOT compile path.
 //!
 //! Support modules: [`bench_harness`] (criterion-lite), [`json`]

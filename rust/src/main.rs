@@ -13,11 +13,14 @@
 //!                               simulated per-layer comparison (Fig 4 rows)
 //!   run-layer [--layer NAME] [--backend B] [--threads P]
 //!                               host-measured single layer via the engine
-//!   serve [--layer NAME] [--backend B] [--requests N] [--clients C]
-//!                               serve a layer through the coordinator over a
-//!                               cached ConvPlan (zero per-request conv
-//!                               allocations); with the `pjrt` feature and
-//!                               --dir, serves the PJRT artifacts instead
+//!   serve [--layer NAME | --net NET] [--backend B] [--requests N]
+//!         [--clients C] [--workers W]
+//!                               serve a layer (cached ConvPlan) or a whole
+//!                               network (NetRunner + worker pool, one
+//!                               activation arena per worker) through the
+//!                               coordinator — zero per-request conv
+//!                               allocations either way; with the `pjrt`
+//!                               feature and --dir, serves PJRT artifacts
 //!   verify [--dir artifacts]    check every artifact against its golden
 //!                               (requires the `pjrt` feature)
 
@@ -25,7 +28,7 @@ use dconv::arch::{self, render_table1, Machine};
 use dconv::cli::Args;
 use dconv::conv::conv_naive;
 use dconv::coordinator::{Coordinator, CoordinatorConfig};
-use dconv::engine::{BackendRegistry, ConvAlgo, ConvPlan, PlanEngine};
+use dconv::engine::{BackendRegistry, ConvAlgo, ConvPlan, NetEngine, NetRunner, PlanEngine};
 use dconv::layout::{io_layout_len, kernel_layout_len};
 use dconv::metrics::{gflops, time_it, Table};
 use dconv::nets::{self, NetPlans};
@@ -61,7 +64,7 @@ fn help() {
            plan-net    plan a whole net through the engine [--net N --backend auto]\n\
            simulate    simulated Fig-4 comparison [--net N --arch intel|amd|arm --threads P]\n\
            run-layer   measure one layer on this host [--layer alexnet/conv3 --backend auto]\n\
-           serve       serve a layer via cached ConvPlans [--layer NAME --requests N]\n\
+           serve       serve a layer or whole net [--layer NAME | --net N] [--workers W]\n\
            verify      verify PJRT artifacts against goldens [--dir artifacts] (pjrt feature)"
     );
 }
@@ -227,6 +230,16 @@ fn plan_net(args: &Args) {
     if plans.total_retained_bytes() + plans.total_workspace_bytes() == 0 {
         println!("zero memory overhead across the whole network ✓ (the paper's claim)");
     }
+    match NetRunner::new(plans) {
+        Ok(r) => println!(
+            "NetRunner arena: 2 x {} floats of activations ({} B) + {} B shared workspace; \
+             the whole-network forward allocates nothing after planning",
+            r.max_activation_floats(),
+            r.activation_bytes(),
+            r.workspace_bytes()
+        ),
+        Err(e) => println!("NetRunner: net is not sequentially executable ({e})"),
+    }
 }
 
 fn simulate(args: &Args) {
@@ -238,8 +251,8 @@ fn simulate(args: &Args) {
         std::process::exit(1);
     });
     println!("simulating {} on {} with {p} threads\n", net, m.name);
-    let mut t =
-        Table::new(&["layer", "direct GFLOPS", "sgemm+im2col GFLOPS", "nnpack GFLOPS", "direct rel"]);
+    let cols = ["layer", "direct GFLOPS", "sgemm+im2col GFLOPS", "nnpack GFLOPS", "direct rel"];
+    let mut t = Table::new(&cols);
     for l in layers {
         let d = estimate(&m, &l.shape, Algo::Direct, p);
         let g = estimate(&m, &l.shape, Algo::Im2colGemm, p);
@@ -291,7 +304,8 @@ fn run_layer(args: &Args) {
 
     if s.flops() < 500_000_000 {
         let (want, secs_naive) = time_it(|| conv_naive(&input, &kernel, s).unwrap());
-        println!("  naive        : {:.3}s = {:.2} GFLOPS", secs_naive, gflops(s.flops(), secs_naive));
+        let g = gflops(s.flops(), secs_naive);
+        println!("  naive        : {secs_naive:.3}s = {g:.2} GFLOPS");
         let got = plan.execute(&input).unwrap();
         assert!(got.allclose(&want, 1e-3, 1e-3));
         println!("  backend agrees with the oracle ✓");
@@ -317,6 +331,9 @@ fn serve(args: &Args) {
             );
             std::process::exit(1);
         }
+    }
+    if let Some(net) = args.get("net") {
+        return serve_net(args, net);
     }
     let name = args.get_or("layer", "googlenet/inception_3a/3x3");
     let backend = args.get_or("backend", "auto");
@@ -347,7 +364,67 @@ fn serve(args: &Args) {
         std::thread::scope(|scope| {
             for c in 0..clients {
                 let coord = coord.clone();
-                let n = requests / clients;
+                // Spread the remainder so the counts sum to `requests`.
+                let n = requests / clients + usize::from(c < requests % clients);
+                scope.spawn(move || {
+                    for i in 0..n {
+                        let x = Tensor::random(&[image_in], (c * 10_000 + i) as u64);
+                        let out = coord.submit_blocking(x.into_vec()).unwrap().wait().unwrap();
+                        assert_eq!(out.len(), image_out);
+                    }
+                });
+            }
+        });
+    });
+    let st = coord.stats();
+    println!("\nthroughput : {:.1} img/s", st.requests as f64 / secs);
+    println!("batches    : {} (mean occupancy {:.2})", st.batches, st.mean_batch_size());
+    println!("latency    : {}", st.latency.summary());
+}
+
+/// Serve a whole benchmark network through the coordinator: every layer
+/// planned once at startup (NetRunner), batch items fanned out across
+/// the NetEngine worker pool, one activation arena per worker.
+fn serve_net(args: &Args, net: &str) {
+    let backend = args.get_or("backend", "auto");
+    let requests = args.get_usize("requests", 64);
+    let clients = args.get_usize("clients", 4);
+    let threads = args.get_usize("threads", 1);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let workers = args.get_usize("workers", cores);
+    let m = arch::host();
+    let plans = NetPlans::build(net, backend, &m, threads).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(1);
+    });
+    let runner = NetRunner::new(plans).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(1);
+    });
+    println!(
+        "serving {net}: {} layers, retained {} B + shared workspace {} B (network overhead \
+         {} B), activation arena {} B per worker",
+        runner.layers(),
+        runner.retained_bytes(),
+        runner.workspace_bytes(),
+        runner.overhead_bytes(),
+        runner.arena_bytes()
+    );
+    let image_in = runner.input_len();
+    let image_out = runner.output_len();
+    let engine = NetEngine::new(runner, workers, &[1, 2, 4, 8], "net").unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(1);
+    });
+    let cfg = CoordinatorConfig { model_prefix: "net".into(), ..Default::default() };
+    let coord = Coordinator::start(engine, cfg).unwrap();
+    println!("serving {requests} requests from {clients} client threads, {workers} net workers");
+    let (_, secs) = time_it(|| {
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let coord = coord.clone();
+                // Spread the remainder so the counts sum to `requests`.
+                let n = requests / clients + usize::from(c < requests % clients);
                 scope.spawn(move || {
                     for i in 0..n {
                         let x = Tensor::random(&[image_in], (c * 10_000 + i) as u64);

@@ -7,7 +7,7 @@
 
 pub mod plans;
 
-pub use plans::{NetPlans, PlannedLayer};
+pub use plans::{net_kernel, NetPlans, PlannedLayer};
 
 use crate::conv::ConvShape;
 
@@ -20,6 +20,7 @@ pub struct Layer {
 }
 
 impl Layer {
+    #[allow(clippy::too_many_arguments)] // one row of the Caffe deploy table
     fn new(
         net: &'static str,
         name: impl Into<String>,
@@ -75,7 +76,8 @@ pub fn vgg16() -> Vec<Layer> {
     cfg.iter()
         .enumerate()
         .map(|(i, &(c_i, h, c_o))| {
-            Layer::new("vgg16", format!("conv{}_{}", block_of(i), idx_in_block(i)), c_i, h, c_o, 3, 1, 1)
+            let name = format!("conv{}_{}", block_of(i), idx_in_block(i));
+            Layer::new("vgg16", name, c_i, h, c_o, 3, 1, 1)
         })
         .collect()
 }
@@ -118,12 +120,15 @@ pub fn googlenet() -> Vec<Layer> {
         ("5b", 7, 832, [384, 192, 384, 48, 128, 128]),
     ];
     for (tag, h, c_in, n) in inception {
-        layers.push(Layer::new("googlenet", format!("inception_{tag}/1x1"), c_in, h, n[0], 1, 1, 0));
-        layers.push(Layer::new("googlenet", format!("inception_{tag}/3x3_reduce"), c_in, h, n[1], 1, 1, 0));
-        layers.push(Layer::new("googlenet", format!("inception_{tag}/3x3"), n[1], h, n[2], 3, 1, 1));
-        layers.push(Layer::new("googlenet", format!("inception_{tag}/5x5_reduce"), c_in, h, n[3], 1, 1, 0));
-        layers.push(Layer::new("googlenet", format!("inception_{tag}/5x5"), n[3], h, n[4], 5, 1, 2));
-        layers.push(Layer::new("googlenet", format!("inception_{tag}/pool_proj"), c_in, h, n[5], 1, 1, 0));
+        let mut push = |name: String, c_i: usize, c_o: usize, f: usize, s: usize, p: usize| {
+            layers.push(Layer::new("googlenet", name, c_i, h, c_o, f, s, p));
+        };
+        push(format!("inception_{tag}/1x1"), c_in, n[0], 1, 1, 0);
+        push(format!("inception_{tag}/3x3_reduce"), c_in, n[1], 1, 1, 0);
+        push(format!("inception_{tag}/3x3"), n[1], n[2], 3, 1, 1);
+        push(format!("inception_{tag}/5x5_reduce"), c_in, n[3], 1, 1, 0);
+        push(format!("inception_{tag}/5x5"), n[3], n[4], 5, 1, 2);
+        push(format!("inception_{tag}/pool_proj"), c_in, n[5], 1, 1, 0);
     }
     layers
 }

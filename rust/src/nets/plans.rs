@@ -8,9 +8,19 @@
 
 use super::Layer;
 use crate::arch::Machine;
+use crate::conv::ConvShape;
 use crate::engine::{BackendRegistry, ConvPlan};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
+
+/// The deterministic synthetic OIHW weights [`NetPlans::build`] plans
+/// layer `index` with (seeded xorshift; only shapes matter for the
+/// reproduction). Exposed so reference implementations — the naive
+/// layer-by-layer cross-check in the `NetRunner` conformance tests —
+/// can regenerate bit-identical tensors.
+pub fn net_kernel(index: usize, shape: &ConvShape) -> Tensor {
+    Tensor::random(&[shape.c_o, shape.c_i, shape.h_f, shape.w_f], 0x5EED + index as u64)
+}
 
 /// One planned conv layer of a network.
 pub struct PlannedLayer {
@@ -33,15 +43,41 @@ impl NetPlans {
     pub fn build(net: &str, backend: &str, machine: &Machine, threads: usize) -> Result<NetPlans> {
         let layers = super::by_name(net)
             .ok_or_else(|| Error::Parse(format!("unknown net '{net}' (alexnet|googlenet|vgg16)")))?;
-        let registry = BackendRegistry::default();
+        let registry = BackendRegistry::shared();
         let mut planned = Vec::with_capacity(layers.len());
         for (i, layer) in layers.into_iter().enumerate() {
             let s = &layer.shape;
-            let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 0x5EED + i as u64);
+            let kernel = net_kernel(i, s);
             let plan = registry.plan(backend, s, &kernel, machine, threads)?;
             planned.push(PlannedLayer { backend: plan.backend(), layer, plan });
         }
         Ok(NetPlans { net: net.to_string(), layers: planned })
+    }
+
+    /// Plan an ad-hoc chain of layer shapes (single-threaded plans,
+    /// synthetic seeded weights: layer `i` uses `Tensor::random` seed
+    /// `seed + i`, regenerable by callers needing a reference) — the
+    /// fixture constructor shared by benches and tests; [`Self::build`]
+    /// is the paper-net equivalent.
+    pub fn from_shapes(
+        name: &str,
+        shapes: &[ConvShape],
+        backend: &str,
+        machine: &Machine,
+        seed: u64,
+    ) -> Result<NetPlans> {
+        let registry = BackendRegistry::shared();
+        let mut planned = Vec::with_capacity(shapes.len());
+        for (i, s) in shapes.iter().enumerate() {
+            let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], seed + i as u64);
+            let plan = registry.plan(backend, s, &kernel, machine, 1)?;
+            planned.push(PlannedLayer {
+                backend: plan.backend(),
+                layer: Layer { net: "custom", name: format!("l{i}"), shape: s.clone() },
+                plan,
+            });
+        }
+        Ok(NetPlans { net: name.to_string(), layers: planned })
     }
 
     /// Total bytes retained by all plans beyond conventional weights.

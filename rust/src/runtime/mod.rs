@@ -8,7 +8,9 @@
 //!   [`crate::engine::ConvPlan`] serving conv layers with every buffer
 //!   reused. Always available; what `dconv serve` and the default test
 //!   suite use.
-//! * [`Engine`]/[`EngineHandle`] — the XLA/PJRT path, which compiles
+//! * `Engine`/`EngineHandle` (plain names: the items — and so the doc
+//!   links — only exist when the `pjrt` feature is on) — the
+//!   XLA/PJRT path, which compiles
 //!   the manifest's HLO artifacts on the in-process CPU client. Gated
 //!   behind the `pjrt` cargo feature because the `xla` (xla-rs) crate
 //!   is not on crates.io: enabling the feature requires vendoring

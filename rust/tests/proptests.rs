@@ -68,9 +68,8 @@ fn prop_direct_is_linear() {
         let k = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], rng.next_u64());
         let y1 = conv_direct(&x1, &k, &s, bp, 1).unwrap();
         let y2 = conv_direct(&x2, &k, &s, bp, 1).unwrap();
-        let sum =
-            Tensor::from_vec(x1.shape(), x1.data().iter().zip(x2.data()).map(|(a, b)| a + b).collect())
-                .unwrap();
+        let added: Vec<f32> = x1.data().iter().zip(x2.data()).map(|(a, b)| a + b).collect();
+        let sum = Tensor::from_vec(x1.shape(), added).unwrap();
         let ysum = conv_direct(&sum, &k, &s, bp, 1).unwrap();
         let want = Tensor::from_vec(
             y1.shape(),
@@ -103,7 +102,8 @@ fn prop_layout_round_trips() {
 
         let c_ob = [1usize, 2, 4][rng.next_usize(3)];
         let c_o = c_ob * (1 + rng.next_usize(6));
-        let k = Tensor::random(&[c_o, c, 1 + rng.next_usize(4), 1 + rng.next_usize(4)], rng.next_u64());
+        let kshape = [c_o, c, 1 + rng.next_usize(4), 1 + rng.next_usize(4)];
+        let k = Tensor::random(&kshape, rng.next_u64());
         let bk = to_blocked_kernel(&k, c_ob, c_b).unwrap();
         assert_eq!(from_blocked_kernel(&bk).unwrap(), k);
     }
@@ -162,6 +162,21 @@ fn prop_batcher_invariants() {
         let max = b.max_size();
         if n > max {
             assert_eq!(plan.padded, max);
+        }
+        // split covers the whole queue with compiled sizes and never
+        // wastes more than the single padded batch would.
+        let split = b.split(n);
+        let occupancy: usize = split.iter().map(|p| p.occupancy).sum();
+        assert_eq!(occupancy, n, "split must cover every request exactly");
+        let total_padded: usize = split.iter().map(|p| p.padded).sum();
+        for p in &split {
+            assert!(b.cfg().sizes.contains(&p.padded));
+            assert!(p.occupancy >= 1 && p.occupancy <= p.padded);
+        }
+        if n == 0 {
+            assert!(split.is_empty());
+        } else if n <= max {
+            assert!(total_padded - n <= Batcher::waste(&plan), "split beat by one batch");
         }
     }
 }

@@ -1,0 +1,230 @@
+#!/usr/bin/env python3
+"""Generate rust/tests/fixtures/net_golden.json — the golden-value
+fixtures for `cargo test --test net_golden`.
+
+This is an INDEPENDENT f64/NumPy implementation of the Rust graph
+executor's semantics:
+
+* weights:  ``net_kernel(i, shape)`` == ``Tensor::random(shape, 0x5EED+i)``
+  (xorshift64* stream, bit-identical f32 values held in f64);
+* input:    ``Tensor::random([C,H,W], 0x601D)`` per net;
+* networks: AlexNet / VGG-16 as chains with ``pool_spec``-derived
+  max-pools, GoogLeNet as the inception DAG (branches
+  ``1x1 | 3x3_reduce->3x3 | 5x5_reduce->5x5 | pool3x3s1p1->pool_proj``
+  concatenated in that order) — mirroring ``nets::NetGraph``.
+
+The Rust test compares with relative tolerances that absorb the
+f32-vs-f64 accumulation drift. Regenerate with:
+
+    python3 python/golden_gen.py
+"""
+
+import json
+import os
+
+import numpy as np
+
+MASK = (1 << 64) - 1
+WEIGHT_SEED = 0x5EED
+INPUT_SEED = 0x601D
+
+
+def xorshift_f32(seed, n):
+    """The crate's XorShiftRng::next_f32 stream mapped to [-1, 1)."""
+    state = (seed * 0x9E3779B97F4A7C15) & MASK
+    if state == 0:
+        state = 1
+    out = np.empty(n, dtype=np.float64)
+    for i in range(n):
+        x = state
+        x ^= x >> 12
+        x = (x ^ (x << 25)) & MASK
+        x ^= x >> 27
+        state = x
+        r = (x * 0x2545F4914F6CDD1D) & MASK
+        # f32 of (r >> 40) / 2^24 is exact; *2-1 stays exact.
+        out[i] = (r >> 40) / float(1 << 24) * 2.0 - 1.0
+    return out
+
+
+def tensor_random(shape, seed):
+    return xorshift_f32(seed, int(np.prod(shape))).reshape(shape)
+
+
+def conv(x, k, stride, pad):
+    """conv_naive: zero padding, cross-correlation, NCHW/OIHW."""
+    c_i, h, w = x.shape
+    c_o, _, f_h, f_w = k.shape
+    xp = np.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    h_o = (h + 2 * pad - f_h) // stride + 1
+    w_o = (w + 2 * pad - f_w) // stride + 1
+    cols = np.empty((c_i * f_h * f_w, h_o * w_o), dtype=np.float64)
+    r = 0
+    for c in range(c_i):
+        for dy in range(f_h):
+            for dx in range(f_w):
+                cols[r] = xp[c, dy:dy + h_o * stride:stride, dx:dx + w_o * stride:stride].ravel()
+                r += 1
+    return (k.reshape(c_o, -1) @ cols).reshape(c_o, h_o, w_o)
+
+
+def max_pool(x, kh, kw, sh, sw, ph, pw):
+    """pool_nchw: max with -inf padding."""
+    c, h, w = x.shape
+    xp = np.pad(x, ((0, 0), (ph, ph), (pw, pw)), constant_values=-np.inf)
+    h_o = (h + 2 * ph - kh) // sh + 1
+    w_o = (w + 2 * pw - kw) // sw + 1
+    out = np.full((c, h_o, w_o), -np.inf)
+    for dy in range(kh):
+        for dx in range(kw):
+            out = np.maximum(out, xp[:, dy:dy + h_o * sh:sh, dx:dx + w_o * sw:sw])
+    return out
+
+
+def pool_spec(frm, to):
+    """Derived inter-block pooling: stride = frm//to, kernel tiles exactly."""
+    assert 0 < to <= frm, (frm, to)
+    stride = frm // to
+    kernel = frm - (to - 1) * stride
+    return kernel, stride
+
+
+def fit(x, c_i, h_i, w_i):
+    """adapt_nchw: channel counts must match; pool extents down if needed."""
+    c, h, w = x.shape
+    assert c == c_i, f"channel mismatch {c} vs {c_i}"
+    if (h, w) == (h_i, w_i):
+        return x
+    kh, sh = pool_spec(h, h_i)
+    kw, sw = pool_spec(w, w_i)
+    return max_pool(x, kh, kw, sh, sw, 0, 0)
+
+
+# --- layer tables (mirrors rust/src/nets/mod.rs) ----------------------
+
+def alexnet():
+    return [
+        (3, 227, 96, 11, 4, 0),
+        (96, 27, 256, 5, 1, 2),
+        (256, 13, 384, 3, 1, 1),
+        (384, 13, 384, 3, 1, 1),
+        (384, 13, 256, 3, 1, 1),
+    ]
+
+
+def vgg16():
+    cfg = [(3, 224, 64), (64, 224, 64), (64, 112, 128), (128, 112, 128),
+           (128, 56, 256), (256, 56, 256), (256, 56, 256), (256, 28, 512),
+           (512, 28, 512), (512, 28, 512), (512, 14, 512), (512, 14, 512),
+           (512, 14, 512)]
+    return [(c_i, h, c_o, 3, 1, 1) for (c_i, h, c_o) in cfg]
+
+
+INCEPTION = [
+    ("3a", 28, 192, [64, 96, 128, 16, 32, 32]),
+    ("3b", 28, 256, [128, 128, 192, 32, 96, 64]),
+    ("4a", 14, 480, [192, 96, 208, 16, 48, 64]),
+    ("4b", 14, 512, [160, 112, 224, 24, 64, 64]),
+    ("4c", 14, 512, [128, 128, 256, 24, 64, 64]),
+    ("4d", 14, 512, [112, 144, 288, 32, 64, 64]),
+    ("4e", 14, 528, [256, 160, 320, 32, 128, 128]),
+    ("5a", 7, 832, [256, 160, 320, 32, 128, 128]),
+    ("5b", 7, 832, [384, 192, 384, 48, 128, 128]),
+]
+
+
+def googlenet():
+    layers = [
+        (3, 224, 64, 7, 2, 3),
+        (64, 56, 64, 1, 1, 0),
+        (64, 56, 192, 3, 1, 1),
+    ]
+    for (_tag, h, c_in, n) in INCEPTION:
+        layers.append((c_in, h, n[0], 1, 1, 0))
+        layers.append((c_in, h, n[1], 1, 1, 0))
+        layers.append((n[1], h, n[2], 3, 1, 1))
+        layers.append((c_in, h, n[3], 1, 1, 0))
+        layers.append((n[3], h, n[4], 5, 1, 2))
+        layers.append((c_in, h, n[5], 1, 1, 0))
+    return layers
+
+
+def kernels_for(layers):
+    ks = []
+    for i, (c_i, _h, c_o, f, _s, _p) in enumerate(layers):
+        print(f"  weights layer {i}: {c_o}x{c_i}x{f}x{f}", flush=True)
+        ks.append(tensor_random((c_o, c_i, f, f), WEIGHT_SEED + i))
+    return ks
+
+
+def run_chain(layers, ks, x):
+    for i, (c_i, h, _c_o, _f, s, p) in enumerate(layers):
+        x = fit(x, c_i, h, h)
+        x = conv(x, ks[i], s, p)
+    return x
+
+
+def run_inception(layers, ks, x):
+    for i in range(3):
+        c_i, h, _c_o, _f, s, p = layers[i]
+        x = fit(x, c_i, h, h)
+        x = conv(x, ks[i], s, p)
+    modules = (len(layers) - 3) // 6
+    for m in range(modules):
+        base = 3 + 6 * m
+        c_i, h, _c_o, _f, _s, _p = layers[base]
+        x = fit(x, c_i, h, h)
+        b0 = conv(x, ks[base], 1, 0)
+        b1 = conv(conv(x, ks[base + 1], 1, 0), ks[base + 2], 1, 1)
+        b2 = conv(conv(x, ks[base + 3], 1, 0), ks[base + 4], 1, 2)
+        b3 = conv(max_pool(x, 3, 3, 1, 1, 1, 1), ks[base + 5], 1, 0)
+        x = np.concatenate([b0, b1, b2, b3], axis=0)
+        print(f"  module {m}: out {x.shape}", flush=True)
+    return x
+
+
+def sample_indices(n):
+    idx = [k * n // 5 for k in range(5)] + [n - 1]
+    out = []
+    for i in idx:
+        if i not in out:
+            out.append(i)
+    return out
+
+
+def golden(net, layers, runner):
+    print(f"{net}:", flush=True)
+    ks = kernels_for(layers)
+    c_i, h, *_ = layers[0]
+    x = tensor_random((c_i, h, h), INPUT_SEED)
+    out = runner(layers, ks, x)
+    flat = out.ravel()
+    assert np.isfinite(flat).all(), f"{net}: non-finite outputs"
+    peak = float(np.abs(flat).max())
+    print(f"  {net}: shape {out.shape}, abs_sum {np.abs(flat).sum():.4e}, max |x| {peak:.4e}",
+          flush=True)
+    assert peak < 1e35, f"{net}: too close to f32 overflow for a safe golden"
+    return {
+        "shape": list(out.shape),
+        "abs_sum": float(np.abs(flat).sum()),
+        "samples": [[int(i), float(flat[i])] for i in sample_indices(flat.size)],
+    }
+
+
+def main():
+    fixtures = {
+        "alexnet": golden("alexnet", alexnet(), run_chain),
+        "googlenet": golden("googlenet", googlenet(), run_inception),
+        "vgg16": golden("vgg16", vgg16(), run_chain),
+    }
+    path = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "fixtures",
+                        "net_golden.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(fixtures, f, indent=2)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(path)}")
+
+
+if __name__ == "__main__":
+    main()

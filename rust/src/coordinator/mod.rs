@@ -14,9 +14,11 @@
 //! * a worker loop running batches on any [`ModelExecutor`] — the
 //!   native cached-plan path ([`crate::engine::PlanEngine`]: one
 //!   [`crate::engine::ConvPlan`] per layer, planned once, buffers
-//!   reused across every batched request) or, behind the `pjrt`
-//!   feature, the XLA/PJRT engine — scattering per-request outputs
-//!   back to their reply channels;
+//!   reused across every batched request), whole networks executed as
+//!   dataflow graphs ([`crate::engine::NetEngine`] over a
+//!   [`crate::engine::NetRunner`]) or, behind the `pjrt` feature, the
+//!   XLA/PJRT engine — scattering per-request outputs back to their
+//!   reply channels;
 //! * [`crate::metrics`] (latency histogram, batch occupancy, throughput).
 
 pub mod batcher;
@@ -76,6 +78,16 @@ impl Pending {
     /// Block until the logits arrive.
     pub fn wait(self) -> Result<Vec<f32>> {
         self.rx.recv().map_err(|_| Error::Runtime("coordinator dropped request".into()))?
+    }
+
+    /// Block for at most `timeout`; `Err` on expiry or a dropped
+    /// coordinator. Lets callers with latency budgets (deadline-bound
+    /// serving loops, watchdog tests) bail out instead of hanging on a
+    /// wedged worker.
+    pub fn wait_timeout(self, timeout: std::time::Duration) -> Result<Vec<f32>> {
+        self.rx
+            .recv_timeout(timeout)
+            .map_err(|e| Error::Runtime(format!("coordinator reply: {e}")))?
     }
 }
 

@@ -78,13 +78,17 @@
 //! # Whole networks
 //!
 //! [`NetRunner`] lifts the per-layer contract to entire benchmark nets:
-//! every layer of a [`crate::nets::NetPlans`] table planned once, one
-//! ping-pong activation arena (two buffers of the largest inter-layer
-//! activation plus the largest per-layer workspace, shared across
-//! layers), and an allocation-free forward pass through repeated
-//! `execute_into` — the zero-overhead claim asserted network-wide.
-//! [`NetEngine`] serves it: batch items fan out across a scoped worker
-//! pool, each worker owning its own arena.
+//! every layer of a [`crate::nets::NetPlans`] table planned once, the
+//! net's [`crate::nets::NetGraph`] (GoogLeNet's inception modules as
+//! real fan-out branches joined by channel concats; AlexNet/VGG as
+//! trivial chains) compiled to a flat schedule, and every activation
+//! placed in ONE arena by a liveness-driven region allocator sized by
+//! the max live-set — plus the largest per-layer workspace, shared
+//! across layers. The forward pass replays the schedule through
+//! repeated `execute_into`, allocation-free — the zero-overhead claim
+//! asserted network-wide over the true dataflow. [`NetEngine`] serves
+//! it: batch items fan out across a scoped worker pool, each worker
+//! owning its own arena.
 
 mod backends;
 mod net_runner;
@@ -94,7 +98,7 @@ mod serving;
 pub use backends::{
     DirectBackend, FftBackend, Im2colBackend, NaiveBackend, ReorderBackend, WinogradBackend,
 };
-pub use net_runner::{adapt_nchw, NetArena, NetRunner};
+pub use net_runner::{adapt_nchw, pool_nchw, ArenaRegion, NetArena, NetRunner};
 pub use registry::{BackendRegistry, BACKEND_NAMES};
 pub use serving::{NetEngine, PlanEngine};
 

@@ -221,14 +221,15 @@ impl NetEngine {
         batch_sizes: &[usize],
         prefix: &str,
     ) -> Result<NetEngine> {
-        let layers = &runner.plans().layers;
-        let first = &layers[0].layer.shape;
-        let last = &layers[layers.len() - 1].layer.shape;
-        let flops: u64 = layers.iter().map(|l| l.layer.shape.flops()).sum();
+        let flops: u64 = runner.plans().layers.iter().map(|l| l.layer.shape.flops()).sum();
+        // Ask the runner for the graph's real edge shapes — the output
+        // of a DAG net (GoogLeNet's final concat) is not the last conv
+        // layer of the table.
+        let (i, o) = (runner.input_dims(), runner.output_dims());
         let manifest = batch_manifest(
             prefix,
             batch_sizes,
-            (&[first.c_i, first.h_i, first.w_i], &[last.c_o, last.h_o(), last.w_o()]),
+            (&[i.c, i.h, i.w], &[o.c, o.h, o.w]),
             flops,
             "<net-runner>",
         )?;

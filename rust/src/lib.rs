@@ -37,26 +37,36 @@
 //! `retained_bytes()`/`workspace_bytes()` contract so the paper's
 //! overhead table falls out of the API uniformly.
 //!
-//! ## Whole networks: `NetRunner` and the arena-sizing contract
+//! ## Whole networks: the graph IR and the arena-sizing contract
 //!
 //! [`engine::NetRunner`] lifts the per-layer claim to entire benchmark
-//! nets. Given a [`nets::NetPlans`] table (every conv layer planned
-//! once), it sizes **one** execution arena and never allocates again:
+//! nets, executed as real dataflow graphs. A [`nets::NetGraph`]
+//! (conv/pool/concat nodes; GoogLeNet's nine inception modules as
+//! genuine fan-out branches re-joined by channel concats, AlexNet/VGG
+//! as trivial chains) is compiled together with its [`nets::NetPlans`]
+//! table into a flat schedule, and **one** execution arena is sized
+//! once — then the forward pass never allocates again:
 //!
-//! * two ping-pong activation buffers, each of the *largest single
-//!   inter-layer activation* in the net (layer `k` reads one and writes
-//!   the other; an adapt/pool/layout glue step runs in place between
-//!   mismatched layers, and disappears entirely when the §4 layouts
-//!   chain);
+//! * every activation (graph edge) gets a region from a
+//!   liveness-driven allocator: lifetimes over the topological
+//!   schedule, placement greedy-by-size, arena sized by the **max
+//!   live-set** (inside an inception module that is the sum of the
+//!   live branch outputs — not twice the largest activation);
 //! * one shared workspace of the *largest per-layer*
 //!   `workspace_len()` — a single scratch buffer serves every layer in
 //!   turn, so the network-wide workspace charge is a `max`, not a sum.
 //!
 //! Activations are intrinsic network state, not overhead; the
 //! network-wide overhead is `retained + shared workspace`, and for the
-//! `direct` backend it is **0 on every paper net** (asserted by
-//! `tests/net_forward.rs`, together with a counting-allocator proof
-//! that a whole forward pass allocates nothing after planning).
+//! `direct` backend it is **0 on every paper net** over the true DAG
+//! (asserted by `tests/net_forward.rs` and `tests/net_graph.rs`: a
+//! branch-by-branch naive reference with explicit concatenation,
+//! a counting-allocator proof that a whole forward pass allocates
+//! nothing after planning, and golden-value fixtures in
+//! `tests/net_golden.rs`). [`nets::NetPlans::build_autotuned`] measures
+//! per-layer thread counts at plan time, and independent inception
+//! branches can run on scoped lanes
+//! ([`engine::NetRunner::with_branch_lanes`]).
 //! [`engine::NetEngine`] serves the runner through the coordinator,
 //! fanning batch items across a scoped worker pool with one arena per
 //! worker.

@@ -7,16 +7,19 @@
 //!   backends [--layer NAME] [--threads P]
 //!                               plan every applicable backend for a layer:
 //!                               plan/exec time + memory-overhead table
-//!   plan-net [--net N] [--backend B] [--threads P]
-//!                               per-layer plan table for a whole network
+//!   plan-net [--net N] [--backend B] [--threads P] [--autotune]
+//!                               per-layer plan table for a whole network,
+//!                               with measured per-layer thread counts
+//!                               under --autotune
 //!   simulate [--net N] [--arch A] [--threads P]
 //!                               simulated per-layer comparison (Fig 4 rows)
 //!   run-layer [--layer NAME] [--backend B] [--threads P]
 //!                               host-measured single layer via the engine
 //!   serve [--layer NAME | --net NET] [--backend B] [--requests N]
-//!         [--clients C] [--workers W]
+//!         [--clients C] [--workers W] [--autotune] [--branch-lanes L]
 //!                               serve a layer (cached ConvPlan) or a whole
-//!                               network (NetRunner + worker pool, one
+//!                               network (NetRunner over the dataflow
+//!                               graph + worker pool, one liveness-sized
 //!                               activation arena per worker) through the
 //!                               coordinator — zero per-request conv
 //!                               allocations either way; with the `pjrt`
@@ -61,10 +64,11 @@ fn help() {
            nets        list benchmark layers      [--net alexnet|googlenet|vgg16]\n\
            layouts     demonstrate the paper's data layouts\n\
            backends    compare every backend on one layer [--layer alexnet/conv3]\n\
-           plan-net    plan a whole net through the engine [--net N --backend auto]\n\
+           plan-net    plan a whole net through the engine [--net N --backend auto --autotune]\n\
            simulate    simulated Fig-4 comparison [--net N --arch intel|amd|arm --threads P]\n\
            run-layer   measure one layer on this host [--layer alexnet/conv3 --backend auto]\n\
            serve       serve a layer or whole net [--layer NAME | --net N] [--workers W]\n\
+                       [--autotune] [--branch-lanes L]\n\
            verify      verify PJRT artifacts against goldens [--dir artifacts] (pjrt feature)"
     );
 }
@@ -192,29 +196,68 @@ fn backends_cmd(args: &Args) {
     print!("{}", t.to_markdown());
 }
 
+/// Thread-count candidates for the per-layer autotuner: powers of two
+/// up to this host's parallelism (inclusive of the exact core count).
+fn thread_candidates() -> Vec<usize> {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut v = vec![1usize];
+    let mut t = 2;
+    while t < cores {
+        v.push(t);
+        t *= 2;
+    }
+    if cores > 1 {
+        v.push(cores);
+    }
+    v
+}
+
+fn die(e: dconv::Error) -> ! {
+    eprintln!("{e}");
+    std::process::exit(1);
+}
+
 /// Plan a whole benchmark network and print the per-layer plan table.
+/// With `--autotune`, each layer's thread count is measured at plan
+/// time ([`NetPlans::build_autotuned`]) instead of fixed by `--threads`.
 fn plan_net(args: &Args) {
     let net = args.get_or("net", "alexnet");
     let backend = args.get_or("backend", "auto");
     let p = args.get_usize("threads", 1);
     let m = arch::host();
-    let (plans, secs) = time_it(|| {
-        NetPlans::build(net, backend, &m, p).unwrap_or_else(|e| {
-            eprintln!("{e}");
-            std::process::exit(1);
+    let (plans, secs) = if args.flag("autotune") {
+        let cands = thread_candidates();
+        let ((plans, report), secs) =
+            time_it(|| match NetPlans::build_autotuned(net, backend, &m, &cands) {
+                Ok(r) => r,
+                Err(e) => die(e),
+            });
+        let tuned: usize = report.iter().filter(|c| c.threads > 1).count();
+        println!(
+            "autotuned {} layers over thread candidates {cands:?}: {} kept more than one thread",
+            report.len(),
+            tuned
+        );
+        (plans, secs)
+    } else {
+        time_it(|| match NetPlans::build(net, backend, &m, p) {
+            Ok(r) => r,
+            Err(e) => die(e),
         })
-    });
+    };
     println!(
         "planned {} ({} layers) with backend '{backend}' in {:.1} ms\n",
         net,
         plans.layers.len(),
         secs * 1e3
     );
-    let mut t = Table::new(&["layer", "backend", "GFLOPs", "retained KiB", "workspace KiB"]);
+    let mut t =
+        Table::new(&["layer", "backend", "threads", "GFLOPs", "retained KiB", "workspace KiB"]);
     for l in &plans.layers {
         t.row(vec![
             l.layer.name.clone(),
             l.backend.into(),
+            l.threads.to_string(),
             format!("{:.3}", l.layer.gflops()),
             format!("{:.1}", l.plan.retained_bytes() as f64 / 1024.0),
             format!("{:.1}", l.plan.workspace_bytes() as f64 / 1024.0),
@@ -232,13 +275,17 @@ fn plan_net(args: &Args) {
     }
     match NetRunner::new(plans) {
         Ok(r) => println!(
-            "NetRunner arena: 2 x {} floats of activations ({} B) + {} B shared workspace; \
-             the whole-network forward allocates nothing after planning",
-            r.max_activation_floats(),
-            r.activation_bytes(),
+            "NetRunner graph: {} nodes / {} conv layers, {} arena regions; liveness-sized \
+             activation arena {} floats (= max live-set: {}) + {} B shared workspace; the \
+             whole-network forward allocates nothing after planning",
+            r.graph().len(),
+            r.layers(),
+            r.arena_regions().len(),
+            r.arena_floats(),
+            if r.arena_floats() == r.max_live_floats() { "yes" } else { "no" },
             r.workspace_bytes()
         ),
-        Err(e) => println!("NetRunner: net is not sequentially executable ({e})"),
+        Err(e) => println!("NetRunner: net is not graph-executable ({e})"),
     }
 }
 
@@ -383,32 +430,52 @@ fn serve(args: &Args) {
 }
 
 /// Serve a whole benchmark network through the coordinator: every layer
-/// planned once at startup (NetRunner), batch items fanned out across
-/// the NetEngine worker pool, one activation arena per worker.
+/// planned once at startup (NetRunner over the net's dataflow graph),
+/// batch items fanned out across the NetEngine worker pool, one
+/// liveness-sized activation arena per worker. `--autotune` measures
+/// per-layer thread counts at plan time; `--branch-lanes L` runs
+/// independent inception branches on up to L scoped threads per image.
 fn serve_net(args: &Args, net: &str) {
     let backend = args.get_or("backend", "auto");
     let requests = args.get_usize("requests", 64);
     let clients = args.get_usize("clients", 4);
     let threads = args.get_usize("threads", 1);
+    let lanes = args.get_usize("branch-lanes", 1);
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let workers = args.get_usize("workers", cores);
     let m = arch::host();
-    let plans = NetPlans::build(net, backend, &m, threads).unwrap_or_else(|e| {
-        eprintln!("{e}");
-        std::process::exit(1);
-    });
-    let runner = NetRunner::new(plans).unwrap_or_else(|e| {
+    let plans = if args.flag("autotune") {
+        match NetPlans::build_autotuned(net, backend, &m, &thread_candidates()) {
+            Ok((plans, report)) => {
+                let tuned: usize = report.iter().filter(|c| c.threads > 1).count();
+                println!("autotuned per-layer threads: {tuned}/{} layers kept > 1", report.len());
+                plans
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(1);
+            }
+        }
+    } else {
+        NetPlans::build(net, backend, &m, threads).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(1);
+        })
+    };
+    let runner = NetRunner::with_branch_lanes(plans, lanes).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(1);
     });
     println!(
-        "serving {net}: {} layers, retained {} B + shared workspace {} B (network overhead \
-         {} B), activation arena {} B per worker",
+        "serving {net}: {} graph nodes / {} layers, retained {} B + shared workspace {} B \
+         (network overhead {} B), activation arena {} B per worker, {} branch lane(s)",
+        runner.graph().len(),
         runner.layers(),
         runner.retained_bytes(),
         runner.workspace_bytes(),
         runner.overhead_bytes(),
-        runner.arena_bytes()
+        runner.arena_bytes(),
+        runner.branch_lanes()
     );
     let image_in = runner.input_len();
     let image_out = runner.output_len();

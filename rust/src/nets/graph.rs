@@ -1,0 +1,573 @@
+//! [`NetGraph`] — the static dataflow IR whole networks execute through.
+//!
+//! The benchmark tables in [`super`] list *conv layers*; a network is a
+//! graph over them. AlexNet and VGG are chains with max-pools between
+//! blocks, but GoogLeNet's nine inception modules are genuine DAGs: four
+//! branches fan out of each module input and re-join through a channel
+//! concatenation. Running that structure as a flattened sequence (what
+//! the pre-graph `NetRunner` did, with channel-cycling glue) measures
+//! the zero-memory-overhead claim against the wrong dataflow; the graph
+//! IR makes the branch/concat structure first-class so the network-wide
+//! accounting is honest.
+//!
+//! Nodes are deliberately minimal — the four things the paper nets need:
+//!
+//! * [`GraphOp::Input`] — the network image (exactly one, node 0);
+//! * [`GraphOp::Conv`] — one row of the layer table, by index, so a
+//!   [`super::NetPlans`] table maps 1:1 onto the graph;
+//! * [`GraphOp::Pool`] — max-pool glue with explicit kernel/stride/pad
+//!   (inter-block pools are derived from the shape tables via
+//!   [`pool_spec`]; inception branch pools are the classic 3x3/s1/p1);
+//! * [`GraphOp::Concat`] — channel concatenation of same-extent maps.
+//!
+//! Nodes are stored in topological order (every predecessor index is
+//! smaller than the node's own), and the last node is the network
+//! output. [`NetGraph::validate`] infers and checks every activation
+//! shape against the conv table — channel counts must match *exactly*;
+//! there is no cycling fallback.
+//!
+//! Branch tags ([`BranchTag`]) mark the independent lanes of a module
+//! (set by the inception builder) so the executor may schedule sibling
+//! branches across threads; lanes of one group must be mutually
+//! independent, which [`NetGraph::validate`] enforces.
+
+use crate::conv::ConvShape;
+use crate::{Error, Result};
+
+/// Kernel/stride of the adaptive max-pool mapping a spatial extent of
+/// `from` onto `to` (`to <= from`): `stride = from / to`,
+/// `kernel = from - (to-1)*stride`, which tiles `from` exactly and
+/// reproduces the real AlexNet (3x3/s2), VGG (2x2/s2) and GoogLeNet
+/// (2x2/s2 inter-module) pooling geometry from the shape tables alone.
+pub fn pool_spec(from: usize, to: usize) -> Result<(usize, usize)> {
+    if to == 0 || from == 0 {
+        return Err(Error::Shape("zero spatial extent in net graph".into()));
+    }
+    if from < to {
+        return Err(Error::Shape(format!(
+            "cannot chain: next layer needs spatial extent {to} > previous output {from} \
+             (upsampling glue is not modeled)"
+        )));
+    }
+    let stride = from / to;
+    let kernel = from - (to - 1) * stride;
+    Ok((kernel, stride))
+}
+
+/// Parallel-schedulable branch marker: nodes sharing `(group, lane)`
+/// depend only on each other (and on untagged nodes); different lanes of
+/// one group are mutually independent and may execute concurrently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BranchTag {
+    /// Fan-out region (one inception module = one group).
+    pub group: usize,
+    /// Branch index within the group.
+    pub lane: usize,
+}
+
+/// What a graph node computes.
+#[derive(Clone, Debug)]
+pub enum GraphOp {
+    /// The network input image (`C x H x W`). Exactly one, at node 0.
+    Input { c: usize, h: usize, w: usize },
+    /// One conv layer: an index into the net's layer/plan table.
+    Conv { layer: usize },
+    /// Max-pool with explicit geometry; `pad` cells beyond the border
+    /// act as `-inf` (they never win the max).
+    Pool { kh: usize, kw: usize, sh: usize, sw: usize, ph: usize, pw: usize },
+    /// Channel concatenation of all predecessors (equal `H x W`).
+    Concat,
+}
+
+/// One node of the dataflow graph.
+#[derive(Clone, Debug)]
+pub struct GraphNode {
+    pub name: String,
+    pub op: GraphOp,
+    /// Predecessor node indices (all smaller than this node's index).
+    pub preds: Vec<usize>,
+    /// Branch lane for parallel scheduling (`None` = serial backbone).
+    pub branch: Option<BranchTag>,
+}
+
+/// A whole network as a static DAG over a conv-layer table. Construct
+/// with [`NetGraph::chain`], [`NetGraph::inception`], or
+/// [`NetGraph::for_net`]; check with [`NetGraph::validate`].
+#[derive(Clone, Debug)]
+pub struct NetGraph {
+    pub net: String,
+    pub nodes: Vec<GraphNode>,
+}
+
+/// Inferred `C x H x W` dims of one node's output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Dims {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Dims {
+    pub fn floats(&self) -> usize {
+        self.c * self.h * self.w
+    }
+}
+
+fn pool_out(extent: usize, k: usize, s: usize, p: usize) -> Result<usize> {
+    if k == 0 || s == 0 {
+        return Err(Error::Shape("pool kernel/stride must be >= 1".into()));
+    }
+    if p >= k {
+        return Err(Error::Shape(format!(
+            "pool pad {p} >= kernel {k} would leave windows entirely outside the image"
+        )));
+    }
+    if extent + 2 * p < k {
+        return Err(Error::Shape(format!(
+            "pool kernel {k} larger than padded extent {extent}+2*{p}"
+        )));
+    }
+    Ok((extent + 2 * p - k) / s + 1)
+}
+
+impl NetGraph {
+    /// Linear chain: `Input -> conv_0 -> [pool] -> conv_1 -> ...`, with a
+    /// max-pool inserted (geometry from [`pool_spec`]) wherever a layer's
+    /// spatial input is smaller than its predecessor's output. Channel
+    /// counts must match exactly — a table that is not channel-chainable
+    /// (e.g. GoogLeNet's branch traversal) is rejected.
+    pub fn chain(net: &str, shapes: &[ConvShape]) -> Result<NetGraph> {
+        let first = shapes
+            .first()
+            .ok_or_else(|| Error::Shape(format!("net '{net}' has no conv layers")))?;
+        let mut nodes = vec![GraphNode {
+            name: "input".into(),
+            op: GraphOp::Input { c: first.c_i, h: first.h_i, w: first.w_i },
+            preds: Vec::new(),
+            branch: None,
+        }];
+        let mut prev = 0usize;
+        let mut dims = Dims { c: first.c_i, h: first.h_i, w: first.w_i };
+        for (i, s) in shapes.iter().enumerate() {
+            if dims.c != s.c_i {
+                return Err(Error::Shape(format!(
+                    "net '{net}' is not a chain: layer {i} wants {} input channels but the \
+                     previous node produces {} (branch structure needs an explicit graph)",
+                    s.c_i, dims.c
+                )));
+            }
+            if dims.h != s.h_i || dims.w != s.w_i {
+                let (kh, sh) = pool_spec(dims.h, s.h_i)?;
+                let (kw, sw) = pool_spec(dims.w, s.w_i)?;
+                nodes.push(GraphNode {
+                    name: format!("pool_before_l{i}"),
+                    op: GraphOp::Pool { kh, kw, sh, sw, ph: 0, pw: 0 },
+                    preds: vec![prev],
+                    branch: None,
+                });
+                prev = nodes.len() - 1;
+                dims = Dims { c: dims.c, h: s.h_i, w: s.w_i };
+            }
+            nodes.push(GraphNode {
+                name: format!("l{i}"),
+                op: GraphOp::Conv { layer: i },
+                preds: vec![prev],
+                branch: None,
+            });
+            prev = nodes.len() - 1;
+            dims = Dims { c: s.c_o, h: s.h_o(), w: s.w_o() };
+        }
+        Ok(NetGraph { net: net.to_string(), nodes })
+    }
+
+    /// GoogLeNet-style DAG over a layer table shaped `3 stem convs +
+    /// 6 convs per inception module` (the order [`super::googlenet`]
+    /// emits: `1x1, 3x3_reduce, 3x3, 5x5_reduce, 5x5, pool_proj`). Each
+    /// module fans four tagged branches out of its input and re-joins
+    /// them with a channel concat; inter-block max-pools are derived
+    /// from the shape table, the branch pool is the classic 3x3/s1/p1.
+    /// Works for any table with that structure (e.g. downscaled test
+    /// nets), not just the full 57-layer GoogLeNet.
+    pub fn inception(net: &str, shapes: &[ConvShape]) -> Result<NetGraph> {
+        const STEM: usize = 3;
+        const PER_MODULE: usize = 6;
+        if shapes.len() < STEM + PER_MODULE || (shapes.len() - STEM) % PER_MODULE != 0 {
+            return Err(Error::Shape(format!(
+                "inception table must hold {STEM} stem convs plus a multiple of {PER_MODULE} \
+                 module convs, got {} layers",
+                shapes.len()
+            )));
+        }
+        let modules = (shapes.len() - STEM) / PER_MODULE;
+        // Stem is a chain; reuse the chain builder then graft modules on.
+        let mut g = NetGraph::chain(net, &shapes[..STEM])?;
+        let mut prev = g.nodes.len() - 1;
+        let stem_out = &shapes[STEM - 1];
+        let mut dims = Dims { c: stem_out.c_o, h: stem_out.h_o(), w: stem_out.w_o() };
+        for m in 0..modules {
+            let base = STEM + m * PER_MODULE;
+            let s1x1 = &shapes[base];
+            if dims.h != s1x1.h_i || dims.w != s1x1.w_i {
+                let (kh, sh) = pool_spec(dims.h, s1x1.h_i)?;
+                let (kw, sw) = pool_spec(dims.w, s1x1.w_i)?;
+                g.nodes.push(GraphNode {
+                    name: format!("pool_before_m{m}"),
+                    op: GraphOp::Pool { kh, kw, sh, sw, ph: 0, pw: 0 },
+                    preds: vec![prev],
+                    branch: None,
+                });
+                prev = g.nodes.len() - 1;
+                dims = Dims { c: dims.c, h: s1x1.h_i, w: s1x1.w_i };
+            }
+            let x = prev;
+            let tag = |lane| Some(BranchTag { group: m, lane });
+            let conv = |g: &mut NetGraph, layer: usize, pred: usize, lane: usize| {
+                g.nodes.push(GraphNode {
+                    name: format!("m{m}/conv{}", layer - base),
+                    op: GraphOp::Conv { layer },
+                    preds: vec![pred],
+                    branch: tag(lane),
+                });
+                g.nodes.len() - 1
+            };
+            // lane 0: 1x1
+            let b0 = conv(&mut g, base, x, 0);
+            // lane 1: 3x3_reduce -> 3x3
+            let r1 = conv(&mut g, base + 1, x, 1);
+            let b1 = conv(&mut g, base + 2, r1, 1);
+            // lane 2: 5x5_reduce -> 5x5
+            let r2 = conv(&mut g, base + 3, x, 2);
+            let b2 = conv(&mut g, base + 4, r2, 2);
+            // lane 3: 3x3/s1/p1 max-pool -> pool_proj
+            g.nodes.push(GraphNode {
+                name: format!("m{m}/pool"),
+                op: GraphOp::Pool { kh: 3, kw: 3, sh: 1, sw: 1, ph: 1, pw: 1 },
+                preds: vec![x],
+                branch: tag(3),
+            });
+            let p3 = g.nodes.len() - 1;
+            let b3 = conv(&mut g, base + 5, p3, 3);
+            g.nodes.push(GraphNode {
+                name: format!("m{m}/concat"),
+                op: GraphOp::Concat,
+                preds: vec![b0, b1, b2, b3],
+                branch: None,
+            });
+            prev = g.nodes.len() - 1;
+            let out_c = shapes[base].c_o
+                + shapes[base + 2].c_o
+                + shapes[base + 4].c_o
+                + shapes[base + 5].c_o;
+            dims = Dims { c: out_c, h: s1x1.h_o(), w: s1x1.w_o() };
+        }
+        Ok(g)
+    }
+
+    /// Build the canonical graph for a named net's layer table:
+    /// GoogLeNet gets the inception DAG, everything else (AlexNet, VGG,
+    /// ad-hoc test chains) lowers to a trivial chain so all nets share
+    /// one executor.
+    pub fn for_net(net: &str, shapes: &[ConvShape]) -> Result<NetGraph> {
+        if net == "googlenet" {
+            NetGraph::inception(net, shapes)
+        } else {
+            NetGraph::chain(net, shapes)
+        }
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Index of the network output node (the last node).
+    pub fn output(&self) -> usize {
+        self.nodes.len() - 1
+    }
+
+    /// Consumer count per node (how many nodes list it as predecessor).
+    pub fn consumer_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.nodes.len()];
+        for n in &self.nodes {
+            for &p in &n.preds {
+                counts[p] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Check the graph against a conv table and infer every node's
+    /// output dims. Verifies: topological node order, exactly one
+    /// `Input` (node 0), every conv layer used exactly once with its
+    /// predecessor dims matching the table *exactly* (no channel
+    /// adaptation), pool geometry validity, concat extent agreement,
+    /// no dead nodes, and branch-tag independence (a tagged node's
+    /// predecessors are untagged or share its tag).
+    pub fn validate(&self, shapes: &[ConvShape]) -> Result<Vec<Dims>> {
+        if self.nodes.is_empty() {
+            return Err(Error::Shape(format!("net '{}' graph is empty", self.net)));
+        }
+        let mut dims: Vec<Dims> = Vec::with_capacity(self.nodes.len());
+        let mut layer_used = vec![false; shapes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            for &p in &n.preds {
+                if p >= i {
+                    return Err(Error::Shape(format!(
+                        "{}: node {i} ('{}') lists predecessor {p} at or after itself \
+                         (nodes must be topologically ordered)",
+                        self.net, n.name
+                    )));
+                }
+                if let Some(tag) = n.branch {
+                    let pt = self.nodes[p].branch;
+                    if pt.is_some() && pt != Some(tag) {
+                        return Err(Error::Shape(format!(
+                            "{}: node '{}' (group {} lane {}) depends on another lane — \
+                             branch lanes must be independent",
+                            self.net, n.name, tag.group, tag.lane
+                        )));
+                    }
+                }
+            }
+            let d = match &n.op {
+                GraphOp::Input { c, h, w } => {
+                    if i != 0 || !n.preds.is_empty() {
+                        return Err(Error::Shape(format!(
+                            "{}: Input must be node 0 with no predecessors",
+                            self.net
+                        )));
+                    }
+                    Dims { c: *c, h: *h, w: *w }
+                }
+                GraphOp::Conv { layer } => {
+                    let [p] = n.preds[..] else {
+                        return Err(Error::Shape(format!(
+                            "{}: conv node '{}' needs exactly one predecessor",
+                            self.net, n.name
+                        )));
+                    };
+                    let s = shapes.get(*layer).ok_or_else(|| {
+                        Error::Shape(format!(
+                            "{}: node '{}' references layer {layer} but the table has {}",
+                            self.net,
+                            n.name,
+                            shapes.len()
+                        ))
+                    })?;
+                    if layer_used[*layer] {
+                        return Err(Error::Shape(format!(
+                            "{}: layer {layer} used by more than one conv node",
+                            self.net
+                        )));
+                    }
+                    layer_used[*layer] = true;
+                    let pd = dims[p];
+                    if (pd.c, pd.h, pd.w) != (s.c_i, s.h_i, s.w_i) {
+                        return Err(Error::Shape(format!(
+                            "{}: conv '{}' wants {}x{}x{} but its input produces {}x{}x{}",
+                            self.net, n.name, s.c_i, s.h_i, s.w_i, pd.c, pd.h, pd.w
+                        )));
+                    }
+                    Dims { c: s.c_o, h: s.h_o(), w: s.w_o() }
+                }
+                GraphOp::Pool { kh, kw, sh, sw, ph, pw } => {
+                    let [p] = n.preds[..] else {
+                        return Err(Error::Shape(format!(
+                            "{}: pool node '{}' needs exactly one predecessor",
+                            self.net, n.name
+                        )));
+                    };
+                    let pd = dims[p];
+                    Dims {
+                        c: pd.c,
+                        h: pool_out(pd.h, *kh, *sh, *ph)?,
+                        w: pool_out(pd.w, *kw, *sw, *pw)?,
+                    }
+                }
+                GraphOp::Concat => {
+                    if n.preds.is_empty() {
+                        return Err(Error::Shape(format!(
+                            "{}: concat node '{}' has no inputs",
+                            self.net, n.name
+                        )));
+                    }
+                    let first = dims[n.preds[0]];
+                    let mut c = 0usize;
+                    for &p in &n.preds {
+                        let pd = dims[p];
+                        if (pd.h, pd.w) != (first.h, first.w) {
+                            return Err(Error::Shape(format!(
+                                "{}: concat '{}' mixes extents {}x{} and {}x{}",
+                                self.net, n.name, first.h, first.w, pd.h, pd.w
+                            )));
+                        }
+                        c += pd.c;
+                    }
+                    Dims { c, h: first.h, w: first.w }
+                }
+            };
+            dims.push(d);
+        }
+        if let Some(missing) = layer_used.iter().position(|u| !u) {
+            return Err(Error::Shape(format!(
+                "{}: conv layer {missing} of the table is not reachable in the graph",
+                self.net
+            )));
+        }
+        let counts = self.consumer_counts();
+        for (i, &c) in counts.iter().enumerate().take(self.nodes.len() - 1) {
+            if c == 0 {
+                return Err(Error::Shape(format!(
+                    "{}: node {i} ('{}') has no consumers and is not the output",
+                    self.net, self.nodes[i].name
+                )));
+            }
+        }
+        Ok(dims)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets;
+
+    fn shapes_of(net: &str) -> Vec<ConvShape> {
+        nets::by_name(net).unwrap().into_iter().map(|l| l.shape).collect()
+    }
+
+    #[test]
+    fn pool_spec_reproduces_real_pools() {
+        assert_eq!(pool_spec(55, 27).unwrap(), (3, 2)); // AlexNet 3x3/s2
+        assert_eq!(pool_spec(27, 13).unwrap(), (3, 2));
+        assert_eq!(pool_spec(224, 112).unwrap(), (2, 2)); // VGG 2x2/s2
+        assert_eq!(pool_spec(14, 14).unwrap(), (1, 1)); // identity
+        assert_eq!(pool_spec(7, 1).unwrap(), (7, 7)); // global pool
+        assert!(pool_spec(13, 14).is_err()); // upsampling is not modeled
+    }
+
+    #[test]
+    fn alexnet_chain_validates() {
+        let shapes = shapes_of("alexnet");
+        let g = NetGraph::for_net("alexnet", &shapes).unwrap();
+        let dims = g.validate(&shapes).unwrap();
+        // input + 5 convs + pools after conv1 and conv2
+        assert_eq!(g.len(), 1 + 5 + 2);
+        assert_eq!(dims[g.output()], Dims { c: 256, h: 13, w: 13 });
+    }
+
+    #[test]
+    fn vgg_chain_has_four_interblock_pools() {
+        let shapes = shapes_of("vgg16");
+        let g = NetGraph::for_net("vgg16", &shapes).unwrap();
+        let pools = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, GraphOp::Pool { .. }))
+            .count();
+        assert_eq!(pools, 4, "blocks 1-5 are joined by 2x2/s2 pools");
+        let dims = g.validate(&shapes).unwrap();
+        assert_eq!(dims[g.output()], Dims { c: 512, h: 14, w: 14 });
+    }
+
+    #[test]
+    fn googlenet_graph_is_a_dag_with_nine_concats() {
+        let shapes = shapes_of("googlenet");
+        let g = NetGraph::for_net("googlenet", &shapes).unwrap();
+        let dims = g.validate(&shapes).unwrap();
+        let concats = g.nodes.iter().filter(|n| matches!(n.op, GraphOp::Concat)).count();
+        assert_eq!(concats, 9);
+        // 1024 = 384 + 384 + 128 + 128 channels out of inception 5b.
+        assert_eq!(dims[g.output()], Dims { c: 1024, h: 7, w: 7 });
+        // Every module input fans out to four consumers (the branches).
+        let counts = g.consumer_counts();
+        let fan_outs = counts.iter().filter(|&&c| c >= 4).count();
+        assert_eq!(fan_outs, 9, "nine module inputs feed four branches each");
+        // Inter-module pools at 3b->4a and 4e->5a plus the two stem
+        // pools, plus nine 3x3/s1 branch pools.
+        let pools = g.nodes.iter().filter(|n| matches!(n.op, GraphOp::Pool { .. })).count();
+        assert_eq!(pools, 2 + 2 + 9);
+    }
+
+    #[test]
+    fn googlenet_rejected_as_chain() {
+        let shapes = shapes_of("googlenet");
+        assert!(NetGraph::chain("googlenet", &shapes).is_err(), "branch table is not a chain");
+    }
+
+    #[test]
+    fn chain_rejects_upsampling_and_empty() {
+        let shapes = [
+            ConvShape::new(4, 8, 8, 8, 3, 3, 1, 1),
+            ConvShape::new(8, 16, 16, 8, 3, 3, 1, 1),
+        ];
+        assert!(NetGraph::chain("bad", &shapes).is_err());
+        assert!(NetGraph::chain("empty", &[]).is_err());
+    }
+
+    #[test]
+    fn validate_catches_structural_errors() {
+        let shapes = [ConvShape::new(4, 8, 8, 8, 3, 3, 1, 1)];
+        let mut g = NetGraph::chain("t", &shapes).unwrap();
+        // Dead node: insert an unused pool at the end... (pool after the
+        // output conv, then the conv is no longer the output but the
+        // pool has no consumers either way it is fine as output; instead
+        // make a node reference a missing layer.)
+        g.nodes.push(GraphNode {
+            name: "bogus".into(),
+            op: GraphOp::Conv { layer: 7 },
+            preds: vec![1],
+            branch: None,
+        });
+        assert!(g.validate(&shapes).is_err(), "layer index out of table");
+
+        let g2 = NetGraph {
+            net: "t".into(),
+            nodes: vec![GraphNode {
+                name: "i".into(),
+                op: GraphOp::Input { c: 1, h: 1, w: 1 },
+                preds: vec![],
+                branch: None,
+            }],
+        };
+        assert!(g2.validate(&[]).is_ok(), "input-only graph with empty table is degenerate-ok");
+    }
+
+    #[test]
+    fn branch_tags_must_stay_in_lane() {
+        // Two 1x1 convs chained but tagged as *different* lanes of one
+        // group: validate must reject the cross-lane dependency.
+        let shapes = [
+            ConvShape::new(4, 4, 4, 8, 1, 1, 1, 0),
+            ConvShape::new(8, 4, 4, 8, 1, 1, 1, 0),
+        ];
+        let g = NetGraph {
+            net: "t".into(),
+            nodes: vec![
+                GraphNode {
+                    name: "i".into(),
+                    op: GraphOp::Input { c: 4, h: 4, w: 4 },
+                    preds: vec![],
+                    branch: None,
+                },
+                GraphNode {
+                    name: "a".into(),
+                    op: GraphOp::Conv { layer: 0 },
+                    preds: vec![0],
+                    branch: Some(BranchTag { group: 0, lane: 0 }),
+                },
+                GraphNode {
+                    name: "b".into(),
+                    op: GraphOp::Conv { layer: 1 },
+                    preds: vec![1],
+                    branch: Some(BranchTag { group: 0, lane: 1 }),
+                },
+            ],
+        };
+        assert!(g.validate(&shapes).is_err());
+    }
+}

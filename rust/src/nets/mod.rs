@@ -5,9 +5,11 @@
 //! synthetic data through the layers); shapes follow the standard Caffe
 //! deploy definitions.
 
+pub mod graph;
 pub mod plans;
 
-pub use plans::{net_kernel, NetPlans, PlannedLayer};
+pub use graph::{pool_spec, BranchTag, Dims, GraphNode, GraphOp, NetGraph};
+pub use plans::{net_kernel, AutotuneChoice, NetPlans, PlannedLayer};
 
 use crate::conv::ConvShape;
 

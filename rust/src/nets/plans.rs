@@ -27,7 +27,20 @@ pub struct PlannedLayer {
     pub layer: Layer,
     /// Backend the plan was produced by (resolved from `auto` if used).
     pub backend: &'static str,
+    /// Thread count the plan was built with (what the per-layer
+    /// autotuner selected, when [`NetPlans::build_autotuned`] was used).
+    pub threads: usize,
     pub plan: Box<dyn ConvPlan>,
+}
+
+/// One row of the [`NetPlans::build_autotuned`] measurement report.
+#[derive(Clone, Debug)]
+pub struct AutotuneChoice {
+    pub layer: String,
+    /// Selected thread count (fastest measured candidate).
+    pub threads: usize,
+    /// Measured execute seconds at the selected count.
+    pub secs: f64,
 }
 
 /// A benchmark network with every conv layer planned.
@@ -49,9 +62,58 @@ impl NetPlans {
             let s = &layer.shape;
             let kernel = net_kernel(i, s);
             let plan = registry.plan(backend, s, &kernel, machine, threads)?;
-            planned.push(PlannedLayer { backend: plan.backend(), layer, plan });
+            planned.push(PlannedLayer { backend: plan.backend(), layer, threads, plan });
         }
         Ok(NetPlans { net: net.to_string(), layers: planned })
+    }
+
+    /// Plan every conv layer of `net`, choosing each layer's thread
+    /// count by measurement: every candidate in `candidates` is planned
+    /// and timed once (one warm-up + one timed `execute`), and the
+    /// fastest plan is kept — measure-once-at-plan-time, stored in the
+    /// plan. This is what stops narrow 1x1 branch convs from
+    /// over-subscribing threads inside a whole-net schedule: small
+    /// layers measure fastest at 1 thread and keep it, while the wide
+    /// stem/3x3 layers keep the high counts. Returns the planned net
+    /// plus the per-layer measurement report. Thread counts do not
+    /// change results (each output element keeps its summation order),
+    /// so autotuned plans stay bitwise-deterministic.
+    pub fn build_autotuned(
+        net: &str,
+        backend: &str,
+        machine: &Machine,
+        candidates: &[usize],
+    ) -> Result<(NetPlans, Vec<AutotuneChoice>)> {
+        let layers = super::by_name(net)
+            .ok_or_else(|| Error::Parse(format!("unknown net '{net}' (alexnet|googlenet|vgg16)")))?;
+        let mut cand: Vec<usize> = candidates.iter().copied().filter(|&t| t > 0).collect();
+        cand.sort_unstable();
+        cand.dedup();
+        if cand.is_empty() {
+            cand.push(1);
+        }
+        let registry = BackendRegistry::shared();
+        let mut planned = Vec::with_capacity(layers.len());
+        let mut report = Vec::with_capacity(layers.len());
+        for (i, layer) in layers.into_iter().enumerate() {
+            let s = &layer.shape;
+            let kernel = net_kernel(i, s);
+            let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 0xA070 + i as u64);
+            let mut best: Option<(f64, usize, Box<dyn ConvPlan>)> = None;
+            for &t in &cand {
+                let plan = registry.plan(backend, s, &kernel, machine, t)?;
+                plan.execute(&input)?; // warm-up (first touch, page faults)
+                let (timed, secs) = crate::metrics::time_it(|| plan.execute(&input));
+                timed?;
+                if best.as_ref().map(|(b, _, _)| secs < *b).unwrap_or(true) {
+                    best = Some((secs, t, plan));
+                }
+            }
+            let (secs, threads, plan) = best.expect("at least one candidate");
+            report.push(AutotuneChoice { layer: layer.name.clone(), threads, secs });
+            planned.push(PlannedLayer { backend: plan.backend(), layer, threads, plan });
+        }
+        Ok((NetPlans { net: net.to_string(), layers: planned }, report))
     }
 
     /// Plan an ad-hoc chain of layer shapes (single-threaded plans,
@@ -74,6 +136,7 @@ impl NetPlans {
             planned.push(PlannedLayer {
                 backend: plan.backend(),
                 layer: Layer { net: "custom", name: format!("l{i}"), shape: s.clone() },
+                threads: 1,
                 plan,
             });
         }
@@ -131,5 +194,23 @@ mod tests {
     #[test]
     fn unknown_net_is_rejected() {
         assert!(NetPlans::build("resnet", "auto", &haswell(), 1).is_err());
+        assert!(NetPlans::build_autotuned("resnet", "auto", &haswell(), &[1]).is_err());
+    }
+
+    #[test]
+    fn autotune_selects_and_records_per_layer_threads() {
+        let (plans, report) =
+            NetPlans::build_autotuned("alexnet", "direct", &haswell(), &[2, 1, 2]).unwrap();
+        assert_eq!(plans.layers.len(), 5);
+        assert_eq!(report.len(), 5);
+        for (l, r) in plans.layers.iter().zip(&report) {
+            assert_eq!(l.layer.name, r.layer);
+            assert_eq!(l.threads, r.threads, "{}: report and plan disagree", r.layer);
+            assert!([1, 2].contains(&l.threads), "{}: candidate list violated", r.layer);
+            assert!(r.secs >= 0.0);
+        }
+        // Degenerate candidate lists fall back to single-threaded.
+        let (p1, _) = NetPlans::build_autotuned("alexnet", "direct", &haswell(), &[0]).unwrap();
+        assert!(p1.layers.iter().all(|l| l.threads == 1));
     }
 }

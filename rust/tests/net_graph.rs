@@ -1,0 +1,284 @@
+//! DAG conformance for the graph executor: GoogLeNet (and friends) run
+//! as real branch/concat dataflow, proven against branch-by-branch
+//! naive references with *explicit* channel concatenation — no
+//! channel-cycling approximation anywhere.
+//!
+//! * GoogLeNet full forward through [`NetGraph`] matches the reference
+//!   exactly (structure) and numerically (f32 reassociation tolerance);
+//! * the counting allocator proves the graph executor's hot path
+//!   allocates nothing after planning, on all three paper nets;
+//! * `overhead_bytes() == 0` network-wide for the direct backend over
+//!   the true dataflow, and the liveness arena equals the max live-set;
+//! * branch-parallel lanes are bitwise identical to the serial
+//!   schedule;
+//! * `NetEngine` serves an inception DAG through the coordinator with
+//!   the concat output shape (not the last conv layer) in its manifest.
+//!
+//! The full-size VGG-16 cross-check is `#[ignore]`d (minutes of naive
+//! reference work) and runs in CI's `--include-ignored` job.
+
+use std::alloc::{GlobalAlloc, Layout as AllocLayout, System};
+use std::cell::Cell;
+
+use dconv::arch::haswell;
+use dconv::conv::{conv_naive, ConvShape};
+use dconv::coordinator::{Coordinator, CoordinatorConfig};
+use dconv::engine::{adapt_nchw, pool_nchw, NetEngine, NetRunner};
+use dconv::nets::{self, net_kernel, NetGraph, NetPlans};
+use dconv::runtime::ModelExecutor;
+use dconv::tensor::Tensor;
+
+// ---------------------------------------------------------------------
+// Thread-local allocation counter (same design as conformance.rs).
+// ---------------------------------------------------------------------
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: AllocLayout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: AllocLayout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+fn allocs_now() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------
+// Branch-by-branch naive reference for inception-structured tables
+// (3 stem convs + 6 convs per module, the `NetGraph::inception` layout)
+// ---------------------------------------------------------------------
+
+/// Mirror of the graph builder in plain NCHW tensors: stem chain with
+/// derived pooling, then per module four explicit branches —
+/// `1x1 | 3x3_reduce->3x3 | 5x5_reduce->5x5 | pool3x3s1p1->pool_proj` —
+/// concatenated channel-wise in that order. Entirely independent of the
+/// arena/layout/scheduling machinery under test.
+fn inception_reference(shapes: &[ConvShape], kernels: &[Tensor], input: &Tensor) -> Tensor {
+    let conv = |x: &Tensor, i: usize| conv_naive(x, &kernels[i], &shapes[i]).unwrap();
+    let fit = |x: &Tensor, s: &ConvShape| adapt_nchw(x, s.c_i, s.h_i, s.w_i).unwrap();
+    let mut x = fit(input, &shapes[0]);
+    for i in 0..3 {
+        x = conv(&fit(&x, &shapes[i]), i);
+    }
+    let modules = (shapes.len() - 3) / 6;
+    for m in 0..modules {
+        let base = 3 + 6 * m;
+        x = fit(&x, &shapes[base]);
+        let b0 = conv(&x, base);
+        let b1 = conv(&conv(&x, base + 1), base + 2);
+        let b2 = conv(&conv(&x, base + 3), base + 4);
+        let b3 = conv(&pool_nchw(&x, 3, 3, 1, 1, 1, 1).unwrap(), base + 5);
+        let branches = [&b0, &b1, &b2, &b3];
+        let mut data = Vec::new();
+        for b in branches {
+            data.extend_from_slice(b.data());
+        }
+        let c: usize = branches.iter().map(|t| t.shape()[0]).sum();
+        x = Tensor::from_vec(&[c, b0.shape()[1], b0.shape()[2]], data).unwrap();
+    }
+    x
+}
+
+fn paper_shapes(net: &str) -> Vec<ConvShape> {
+    nets::by_name(net).unwrap().into_iter().map(|l| l.shape).collect()
+}
+
+fn paper_kernels(shapes: &[ConvShape]) -> Vec<Tensor> {
+    shapes.iter().enumerate().map(|(i, s)| net_kernel(i, s)).collect()
+}
+
+// ---------------------------------------------------------------------
+// GoogLeNet: the DAG acceptance test
+// ---------------------------------------------------------------------
+
+#[test]
+fn googlenet_forward_matches_branch_by_branch_reference() {
+    let plans = NetPlans::build("googlenet", "auto", &haswell(), 1).unwrap();
+    let runner = NetRunner::new(plans).unwrap();
+    // The output is the final inception concat — 1024 channels — not
+    // the 128-channel pool_proj that ends the flat layer table. This is
+    // the structural point of the graph executor.
+    assert_eq!(runner.output_len(), 1024 * 7 * 7);
+
+    let shapes = paper_shapes("googlenet");
+    let kernels = paper_kernels(&shapes);
+    let input = Tensor::random(&[3, 224, 224], 0x6006);
+
+    let got = runner.forward(&input).unwrap();
+    let want = inception_reference(&shapes, &kernels, &input);
+    assert_eq!(got.shape(), want.shape());
+    assert_eq!(got.shape(), &[1024, 7, 7]);
+    assert!(
+        got.allclose(&want, 1e-2, 1e-2),
+        "googlenet DAG forward diverged from the branch-by-branch reference: {}",
+        got.max_abs_diff(&want)
+    );
+}
+
+#[test]
+fn googlenet_branch_lanes_are_bitwise_serial() {
+    let input = Tensor::random(&[3, 224, 224], 0x6007);
+    let build = |lanes| {
+        let plans = NetPlans::build("googlenet", "direct", &haswell(), 1).unwrap();
+        NetRunner::with_branch_lanes(plans, lanes).unwrap()
+    };
+    let serial = build(1);
+    let laned = build(4);
+    assert_eq!(laned.branch_lanes(), 4);
+    let a = serial.forward(&input).unwrap();
+    let b = laned.forward(&input).unwrap();
+    assert_eq!(a.data(), b.data(), "branch scheduling must not change a single bit");
+}
+
+// ---------------------------------------------------------------------
+// Zero allocations + zero overhead over the graph executor
+// ---------------------------------------------------------------------
+
+#[test]
+fn graph_executor_allocates_nothing_after_planning_on_every_net() {
+    for net in ["alexnet", "googlenet", "vgg16"] {
+        let plans = NetPlans::build(net, "auto", &haswell(), 1).unwrap();
+        let runner = NetRunner::new(plans).unwrap();
+        let mut arena = runner.arena();
+        let input = vec![0.1f32; runner.input_len()];
+        let mut output = vec![0.0f32; runner.output_len()];
+
+        // Warm up once (first touch), then count a full forward.
+        runner.forward_with(&mut arena, &input, &mut output).unwrap();
+        let before = allocs_now();
+        runner.forward_with(&mut arena, &input, &mut output).unwrap();
+        let after = allocs_now();
+        assert_eq!(after - before, 0, "{net}: graph forward allocated on the hot path");
+        assert!(output.iter().any(|v| *v != 0.0), "{net}: forward produced no output");
+    }
+}
+
+#[test]
+fn overhead_is_zero_and_arena_is_max_live_on_every_net() {
+    for net in ["alexnet", "googlenet", "vgg16"] {
+        let plans = NetPlans::build(net, "direct", &haswell(), 1).unwrap();
+        let runner = NetRunner::new(plans).unwrap();
+        assert_eq!(runner.retained_bytes(), 0, "{net}");
+        assert_eq!(runner.workspace_bytes(), 0, "{net}");
+        assert_eq!(runner.overhead_bytes(), 0, "{net}: zero overhead over the true dataflow");
+        assert_eq!(
+            runner.arena_floats(),
+            runner.max_live_floats(),
+            "{net}: liveness placement fragmented"
+        );
+        // No live pair of arena regions may alias.
+        let regions = runner.arena_regions();
+        for (i, a) in regions.iter().enumerate() {
+            for b in &regions[i + 1..] {
+                let overlap_t = a.first_step <= b.last_step && b.first_step <= a.last_step;
+                let overlap_s = a.offset < b.offset + b.floats && b.offset < a.offset + a.floats;
+                assert!(!(overlap_t && overlap_s), "{net}: {} aliases {}", a.name, b.name);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Serving an inception DAG through the coordinator
+// ---------------------------------------------------------------------
+
+/// Small inception-style table: stem (3 convs) + 2 modules; cheap
+/// enough for a naive reference and a serving burst.
+fn mini_inception_shapes() -> Vec<ConvShape> {
+    let mut v = vec![
+        ConvShape::new(3, 32, 32, 16, 7, 7, 2, 3),
+        ConvShape::new(16, 8, 8, 16, 1, 1, 1, 0),
+        ConvShape::new(16, 8, 8, 32, 3, 3, 1, 1),
+    ];
+    let ma =
+        [(32, 16, 1, 0), (32, 8, 1, 0), (8, 16, 3, 1), (32, 4, 1, 0), (4, 8, 5, 2), (32, 8, 1, 0)];
+    for (ci, co, f, p) in ma {
+        v.push(ConvShape::new(ci, 8, 8, co, f, f, 1, p));
+    }
+    let mb = [
+        (48, 32, 1, 0),
+        (48, 16, 1, 0),
+        (16, 32, 3, 1),
+        (48, 8, 1, 0),
+        (8, 16, 5, 2),
+        (48, 16, 1, 0),
+    ];
+    for (ci, co, f, p) in mb {
+        v.push(ConvShape::new(ci, 4, 4, co, f, f, 1, p));
+    }
+    v
+}
+
+#[test]
+fn coordinator_serves_an_inception_dag_through_net_engine() {
+    let shapes = mini_inception_shapes();
+    let seed = 0xD0;
+    let plans = NetPlans::from_shapes("mini", &shapes, "direct", &haswell(), seed).unwrap();
+    let kernels: Vec<Tensor> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, s)| Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], seed + i as u64))
+        .collect();
+    let graph = NetGraph::inception("mini", &shapes).unwrap();
+    let runner = NetRunner::from_graph(plans, graph, 1).unwrap();
+    let image_out = runner.output_len();
+    assert_eq!(image_out, 96 * 4 * 4);
+
+    let engine = NetEngine::new(runner, 2, &[1, 2, 4], "net").unwrap();
+    // The manifest must advertise the concat output, not the last conv.
+    let art = engine.manifest().get("net_b1").unwrap();
+    assert_eq!(art.output_shape, vec![1, 96, 4, 4]);
+
+    let cfg = CoordinatorConfig { model_prefix: "net".into(), ..Default::default() };
+    let coord = Coordinator::start(engine, cfg).unwrap();
+    let inputs: Vec<Tensor> = (0..9).map(|i| Tensor::random(&[3, 32, 32], 500 + i)).collect();
+    let pendings: Vec<_> =
+        inputs.iter().map(|x| coord.submit_blocking(x.data().to_vec()).unwrap()).collect();
+    for (x, p) in inputs.iter().zip(pendings) {
+        let out = p.wait_timeout(std::time::Duration::from_secs(120)).unwrap();
+        assert_eq!(out.len(), image_out);
+        let want = inception_reference(&shapes, &kernels, x);
+        let got = Tensor::from_vec(&[96, 4, 4], out).unwrap();
+        assert!(got.allclose(&want, 1e-3, 1e-3), "served DAG output differs from reference");
+    }
+    assert_eq!(coord.stats().requests, 9);
+}
+
+// ---------------------------------------------------------------------
+// Slow full-size cross-checks (CI --include-ignored job)
+// ---------------------------------------------------------------------
+
+#[test]
+#[ignore = "full-size VGG-16 naive reference takes minutes; run with --include-ignored"]
+fn full_vgg16_forward_matches_layerwise_naive_reference() {
+    let plans = NetPlans::build("vgg16", "auto", &haswell(), 1).unwrap();
+    let runner = NetRunner::new(plans).unwrap();
+    let shapes = paper_shapes("vgg16");
+    let kernels = paper_kernels(&shapes);
+    let input = Tensor::random(&[3, 224, 224], 0x7716);
+
+    let got = runner.forward(&input).unwrap();
+    let mut act = input.clone();
+    for (s, k) in shapes.iter().zip(&kernels) {
+        let adapted = adapt_nchw(&act, s.c_i, s.h_i, s.w_i).unwrap();
+        act = conv_naive(&adapted, k, s).unwrap();
+    }
+    assert_eq!(got.shape(), act.shape());
+    assert!(
+        got.allclose(&act, 1e-2, 1e-2),
+        "full vgg16 graph forward diverged: {}",
+        got.max_abs_diff(&act)
+    );
+}

@@ -5,11 +5,14 @@
 
 #![allow(deprecated)] // legacy wrappers stay property-tested until removed
 
+use dconv::arch::haswell;
 use dconv::conv::{conv_direct, conv_naive, BlockParams, ConvShape};
 use dconv::coordinator::{Batcher, BatcherConfig};
+use dconv::engine::{pool_nchw, NetRunner};
 use dconv::gemm::{sgemm, sgemm_naive};
 use dconv::json::Json;
 use dconv::layout::{from_blocked_io, from_blocked_kernel, to_blocked_io, to_blocked_kernel};
+use dconv::nets::{BranchTag, GraphNode, GraphOp, NetGraph, NetPlans};
 use dconv::tensor::{Tensor, XorShiftRng};
 
 fn random_shape(rng: &mut XorShiftRng) -> (ConvShape, BlockParams) {
@@ -178,6 +181,225 @@ fn prop_batcher_invariants() {
         } else if n <= max {
             assert!(total_padded - n <= Batcher::waste(&plan), "split beat by one batch");
         }
+    }
+}
+
+/// Random module-structured DAG (the family the graph builders emit):
+/// a backbone of fan-out/concat modules with optional inter-module
+/// pools, every conv a 1x1 so references stay cheap. Returns the conv
+/// table and the tagged graph.
+fn random_module_net(rng: &mut XorShiftRng) -> (Vec<ConvShape>, NetGraph) {
+    let mut shapes: Vec<ConvShape> = Vec::new();
+    let c0 = 1 + rng.next_usize(12);
+    let mut h = 8usize;
+    let mut nodes = vec![GraphNode {
+        name: "input".into(),
+        op: GraphOp::Input { c: c0, h, w: h },
+        preds: Vec::new(),
+        branch: None,
+    }];
+    let mut x = 0usize;
+    let mut c = c0;
+    let modules = 1 + rng.next_usize(3);
+    for m in 0..modules {
+        if h >= 4 && rng.next_usize(2) == 0 {
+            nodes.push(GraphNode {
+                name: format!("pool{m}"),
+                op: GraphOp::Pool { kh: 2, kw: 2, sh: 2, sw: 2, ph: 0, pw: 0 },
+                preds: vec![x],
+                branch: None,
+            });
+            x = nodes.len() - 1;
+            h /= 2;
+        }
+        let branches = 1 + rng.next_usize(4);
+        let mut ends = Vec::new();
+        let mut out_c = 0usize;
+        for lane in 0..branches {
+            let tag = Some(BranchTag { group: m, lane });
+            let depth = 1 + rng.next_usize(2);
+            let mut pred = x;
+            let mut c_in = c;
+            for d in 0..depth {
+                let c_out = 1 + rng.next_usize(20);
+                shapes.push(ConvShape::new(c_in, h, h, c_out, 1, 1, 1, 0));
+                nodes.push(GraphNode {
+                    name: format!("m{m}b{lane}d{d}"),
+                    op: GraphOp::Conv { layer: shapes.len() - 1 },
+                    preds: vec![pred],
+                    branch: tag,
+                });
+                pred = nodes.len() - 1;
+                c_in = c_out;
+            }
+            ends.push(pred);
+            out_c += c_in;
+        }
+        nodes.push(GraphNode {
+            name: format!("concat{m}"),
+            op: GraphOp::Concat,
+            preds: ends,
+            branch: None,
+        });
+        x = nodes.len() - 1;
+        c = out_c;
+    }
+    (shapes, NetGraph { net: "prop".into(), nodes })
+}
+
+/// NCHW interpreter over an arbitrary graph — the executor-independent
+/// oracle for the random-DAG forward cross-check.
+fn graph_reference(
+    graph: &NetGraph,
+    shapes: &[ConvShape],
+    kernels: &[Tensor],
+    input: &Tensor,
+) -> Tensor {
+    let mut outs: Vec<Option<Tensor>> = (0..graph.len()).map(|_| None).collect();
+    for (i, n) in graph.nodes.iter().enumerate() {
+        let t = match &n.op {
+            GraphOp::Input { .. } => input.clone(),
+            GraphOp::Conv { layer } => {
+                let x = outs[n.preds[0]].as_ref().unwrap();
+                conv_naive(x, &kernels[*layer], &shapes[*layer]).unwrap()
+            }
+            GraphOp::Pool { kh, kw, sh, sw, ph, pw } => {
+                let x = outs[n.preds[0]].as_ref().unwrap();
+                pool_nchw(x, *kh, *kw, *sh, *sw, *ph, *pw).unwrap()
+            }
+            GraphOp::Concat => {
+                let parts: Vec<&Tensor> =
+                    n.preds.iter().map(|&p| outs[p].as_ref().unwrap()).collect();
+                let (ch, cw) = (parts[0].shape()[1], parts[0].shape()[2]);
+                let c: usize = parts.iter().map(|t| t.shape()[0]).sum();
+                let mut data = Vec::with_capacity(c * ch * cw);
+                for p in &parts {
+                    data.extend_from_slice(p.data());
+                }
+                Tensor::from_vec(&[c, ch, cw], data).unwrap()
+            }
+        };
+        outs[i] = Some(t);
+    }
+    outs[graph.output()].take().unwrap()
+}
+
+/// Property: for random module DAGs (serial and branch-parallel
+/// liveness), the arena region allocator never lets two live
+/// activations alias, and the placed arena stays within the max
+/// live-set bounds: never below it (it is a hard lower bound) and
+/// never more than 2x above it. Exact equality cannot be promised on
+/// arbitrary DAGs — offline offset allocation has instances whose
+/// optimum provably exceeds the max live-set (classic dynamic-storage
+/// allocation fragmentation; 5-value chains suffice) — but the
+/// allocator does place every paper net *exactly* at its max live-set,
+/// which `net_forward`/`net_graph` assert separately.
+#[test]
+fn prop_arena_regions_never_alias_and_stay_near_max_live() {
+    let mut rng = XorShiftRng::new(0xA3E4A);
+    for case in 0..40 {
+        let (shapes, graph) = random_module_net(&mut rng);
+        let lanes = [1usize, 3][rng.next_usize(2)];
+        let seed = rng.next_u64();
+        let plans = NetPlans::from_shapes("prop", &shapes, "direct", &haswell(), seed).unwrap();
+        let runner = NetRunner::from_graph(plans, graph.clone(), lanes).unwrap();
+
+        let regions = runner.arena_regions();
+        for (i, a) in regions.iter().enumerate() {
+            for b in &regions[i + 1..] {
+                let overlap_t = a.first_step <= b.last_step && b.first_step <= a.last_step;
+                let overlap_s = a.offset < b.offset + b.floats && b.offset < a.offset + a.floats;
+                assert!(
+                    !(overlap_t && overlap_s),
+                    "case {case}: live regions alias ({} vs {}, lanes {lanes})",
+                    a.name,
+                    b.name
+                );
+            }
+        }
+        assert!(
+            runner.arena_floats() >= runner.max_live_floats(),
+            "case {case}: arena below the max live-set is impossible"
+        );
+        assert!(
+            runner.arena_floats() <= 2 * runner.max_live_floats(),
+            "case {case}: fragmentation blew past 2x the max live-set \
+             (lanes {lanes}, {} nodes, arena {} vs live {})",
+            graph.len(),
+            runner.arena_floats(),
+            runner.max_live_floats()
+        );
+
+        // Cross-check the executor against the NCHW oracle on a subset
+        // (1x1 convs keep this cheap).
+        if case % 4 == 0 {
+            let kernels: Vec<Tensor> = shapes
+                .iter()
+                .enumerate()
+                .map(|(i, s)| Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], seed + i as u64))
+                .collect();
+            let d = runner.input_dims();
+            let input = Tensor::random(&[d.c, d.h, d.w], rng.next_u64());
+            let got = runner.forward(&input).unwrap();
+            let want = graph_reference(&graph, &shapes, &kernels, &input);
+            assert_eq!(got.shape(), want.shape(), "case {case}");
+            assert!(
+                got.allclose(&want, 1e-3, 1e-3),
+                "case {case}: random DAG forward diverged by {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+}
+
+/// Exhaustive reachability oracle: the minimum total padded slots any
+/// multiset of compiled sizes covering `n` requests can achieve.
+/// Deliberately different machinery from `Batcher::split`'s cost DP.
+fn brute_force_min_padded(sizes: &[usize], n: usize) -> usize {
+    let max = *sizes.iter().max().unwrap();
+    // reachable[s] = some multiset of sizes sums to exactly s.
+    let bound = n + max;
+    let mut reachable = vec![false; bound + 1];
+    reachable[0] = true;
+    for s in 0..=bound {
+        if !reachable[s] {
+            continue;
+        }
+        for &k in sizes {
+            if s + k <= bound {
+                reachable[s + k] = true;
+            }
+        }
+    }
+    (n..=bound).find(|&s| reachable[s]).expect("padding by one extra batch always covers")
+}
+
+/// Property: `Batcher::split` is padding-minimal — its total padded
+/// slots equal the brute-force optimum over all covers — while still
+/// covering every request exactly once.
+#[test]
+fn prop_split_padding_minimality_vs_brute_force() {
+    let mut rng = XorShiftRng::new(0x5B117);
+    for case in 0..200 {
+        let mut sizes: Vec<usize> =
+            (0..1 + rng.next_usize(4)).map(|_| 1 + rng.next_usize(12)).collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        let b = Batcher::new(BatcherConfig {
+            sizes: sizes.clone(),
+            max_wait: std::time::Duration::from_millis(1),
+        });
+        let n = 1 + rng.next_usize(40);
+        let plans = b.split(n);
+        let occupancy: usize = plans.iter().map(|p| p.occupancy).sum();
+        let padded: usize = plans.iter().map(|p| p.padded).sum();
+        assert_eq!(occupancy, n, "case {case}: split must cover every request");
+        let best = brute_force_min_padded(b.cfg().sizes.as_slice(), n);
+        assert_eq!(
+            padded, best,
+            "case {case}: split padded {padded} but brute force found {best} (sizes {:?}, n={n})",
+            b.cfg().sizes
+        );
     }
 }
 

@@ -11,7 +11,10 @@ executor's semantics:
 * networks: AlexNet / VGG-16 as chains with ``pool_spec``-derived
   max-pools, GoogLeNet as the inception DAG (branches
   ``1x1 | 3x3_reduce->3x3 | 5x5_reduce->5x5 | pool3x3s1p1->pool_proj``
-  concatenated in that order) — mirroring ``nets::NetGraph``.
+  concatenated in that order) — mirroring ``nets::NetGraph`` — and
+  ``resnet_micro``, the builder/JSON example net with two residual Add
+  joins (mirroring ``nets::builder::resnet_micro`` /
+  ``examples/models/resnet_micro.json``).
 
 The Rust test compares with relative tolerances that absorb the
 f32-vs-f64 accumulation drift. Regenerate with:
@@ -149,6 +152,27 @@ def googlenet():
     return layers
 
 
+def resnet_micro():
+    """examples/models/resnet_micro.json: conv0 -> [conv1,conv2]+skip
+    -> [conv3,conv4]+skip -> 2x2/s2 pool -> conv5."""
+    return [
+        (3, 32, 16, 3, 1, 1),
+        (16, 32, 16, 3, 1, 1),
+        (16, 32, 16, 3, 1, 1),
+        (16, 32, 16, 3, 1, 1),
+        (16, 32, 16, 3, 1, 1),
+        (16, 16, 32, 3, 1, 1),
+    ]
+
+
+def run_resnet_micro(layers, ks, x):
+    del layers  # geometry is fixed by the example spec
+    stem = conv(x, ks[0], 1, 1)
+    j1 = stem + conv(conv(stem, ks[1], 1, 1), ks[2], 1, 1)
+    j2 = j1 + conv(conv(j1, ks[3], 1, 1), ks[4], 1, 1)
+    return conv(max_pool(j2, 2, 2, 2, 2, 0, 0), ks[5], 1, 1)
+
+
 def kernels_for(layers):
     ks = []
     for i, (c_i, _h, c_o, f, _s, _p) in enumerate(layers):
@@ -216,6 +240,7 @@ def main():
         "alexnet": golden("alexnet", alexnet(), run_chain),
         "googlenet": golden("googlenet", googlenet(), run_inception),
         "vgg16": golden("vgg16", vgg16(), run_chain),
+        "resnet_micro": golden("resnet_micro", resnet_micro(), run_resnet_micro),
     }
     path = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "fixtures",
                         "net_golden.json")

@@ -6,17 +6,34 @@
 //! This isolates how much of the paper's win comes from loop order alone
 //! vs blocking + layout.
 
-// This ablation deliberately times the raw per-call algorithm entry
-// points (including their packing), not the engine's plan/execute path.
-#![allow(deprecated)]
+// This ablation deliberately times the raw per-call algorithm stages
+// (including their packing), not the engine's plan/execute path.
 
 use dconv::arch::host;
 use dconv::bench_harness::{bench, emit, opts_from_env, sink};
 use dconv::conv::reorder::kernel_to_hwio;
-use dconv::conv::{conv_direct, conv_naive, conv_reorder, select_params, ConvShape};
-use dconv::layout::nchw_to_nhwc;
+use dconv::conv::{
+    conv_direct_blocked, conv_naive, conv_reorder_into, select_params, BlockParams, ConvShape,
+};
+use dconv::layout::{from_blocked_io, nchw_to_nhwc, to_blocked_io, to_blocked_kernel};
 use dconv::metrics::{gflops, Table};
 use dconv::tensor::Tensor;
+
+/// Per-call Algorithm 3 including its §4 packing (what the removed
+/// `conv_direct` wrapper measured).
+fn direct_oneshot(input: &Tensor, kernel: &Tensor, s: &ConvShape, bp: BlockParams) -> Tensor {
+    let bi = to_blocked_io(input, bp.c_ib).unwrap();
+    let bk = to_blocked_kernel(kernel, bp.c_ob, bp.c_ib).unwrap();
+    let bo = conv_direct_blocked(&bi, &bk, s, bp, 1).unwrap();
+    from_blocked_io(&bo).unwrap()
+}
+
+/// Per-call Algorithm 2 over pre-permuted channel-last operands.
+fn reorder_oneshot(nhwc: &Tensor, hwio: &Tensor, s: &ConvShape) -> Tensor {
+    let mut out = Tensor::zeros(&[s.h_o(), s.w_o(), s.c_o]);
+    conv_reorder_into(nhwc.data(), hwio.data(), s, out.data_mut()).unwrap();
+    out
+}
 
 fn main() {
     let opts = opts_from_env();
@@ -36,9 +53,9 @@ fn main() {
         let bp = select_params(&m, &s);
 
         let t_naive = bench("alg1", opts, || { sink(conv_naive(&input, &kernel, &s).unwrap()); });
-        let t_reord = bench("alg2", opts, || { sink(conv_reorder(&nhwc, &hwio, &s).unwrap()); });
+        let t_reord = bench("alg2", opts, || { sink(reorder_oneshot(&nhwc, &hwio, &s)); });
         let t_direct =
-            bench("alg3", opts, || { sink(conv_direct(&input, &kernel, &s, bp, 1).unwrap()); });
+            bench("alg3", opts, || { sink(direct_oneshot(&input, &kernel, &s, bp)); });
 
         for (alg, meas) in [
             ("alg1 naive", &t_naive),

@@ -28,7 +28,6 @@ use super::microkernel::{
     load_tile_c, reduce_tile, store_tile_c, TileGeom, MAX_WOB,
 };
 use super::{BlockParams, ConvShape};
-use crate::layout::{from_blocked_io, to_blocked_io, to_blocked_kernel};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
@@ -129,29 +128,6 @@ pub fn conv_direct_blocked_into(
             "unsupported c_ob={other} (supported: 1,2,4,8,16,32)"
         ))),
     }
-}
-
-/// Convenience wrapper for conventional operands: packs `[C_i][H_i][W_i]`
-/// input and `[C_o][C_i][H_f][W_f]` weights into the §4 layouts, runs
-/// [`conv_direct_blocked`], and unpacks the result to `[C_o][H_o][W_o]`.
-/// (Production use keeps everything blocked across layers — see the
-/// coordinator pipeline; this wrapper exists for tests and one-shot use.)
-#[deprecated(
-    note = "plan through engine::BackendRegistry (backend \"direct\") and reuse \
-            ConvPlan::execute_into; this wrapper re-packs both operands per call"
-)]
-pub fn conv_direct(
-    input: &Tensor,
-    kernel: &Tensor,
-    shape: &ConvShape,
-    bp: BlockParams,
-    threads: usize,
-) -> Result<Tensor> {
-    super::naive::check_shapes(input, kernel, shape)?;
-    let bi = to_blocked_io(input, bp.c_ib)?;
-    let bk = to_blocked_kernel(kernel, bp.c_ob, bp.c_ib)?;
-    let bo = conv_direct_blocked(&bi, &bk, shape, bp, threads)?;
-    from_blocked_io(&bo)
 }
 
 fn run_into<const COB: usize>(
@@ -297,16 +273,32 @@ fn reduce_rem<const COB: usize>(
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // conv_direct stays covered until the wrapper is removed
 mod tests {
     use super::*;
     use crate::conv::conv_naive;
+    use crate::layout::{from_blocked_io, to_blocked_io, to_blocked_kernel};
+
+    /// One-shot pack -> blocked conv -> unpack over conventional
+    /// operands (what the removed `conv_direct` wrapper did; production
+    /// code plans through the engine's `direct` backend instead).
+    fn direct_oneshot(
+        input: &Tensor,
+        kernel: &Tensor,
+        s: &ConvShape,
+        bp: BlockParams,
+        threads: usize,
+    ) -> Result<Tensor> {
+        let bi = to_blocked_io(input, bp.c_ib)?;
+        let bk = to_blocked_kernel(kernel, bp.c_ob, bp.c_ib)?;
+        let bo = conv_direct_blocked(&bi, &bk, s, bp, threads)?;
+        from_blocked_io(&bo)
+    }
 
     fn check(s: &ConvShape, bp: BlockParams, threads: usize, seed: u64) {
         let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], seed);
         let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], seed + 1);
         let want = conv_naive(&input, &kernel, s).unwrap();
-        let got = conv_direct(&input, &kernel, s, bp, threads).unwrap();
+        let got = direct_oneshot(&input, &kernel, s, bp, threads).unwrap();
         assert!(
             got.allclose(&want, 1e-4, 1e-5),
             "mismatch {:?} bp={:?}: {}",
@@ -368,9 +360,9 @@ mod tests {
         let input = Tensor::zeros(&[8, 8, 8]);
         let kernel = Tensor::zeros(&[16, 8, 3, 3]);
         // w_ob beyond MAX_WOB
-        assert!(conv_direct(&input, &kernel, &s, BlockParams::new(8, 9, 4), 1).is_err());
+        assert!(direct_oneshot(&input, &kernel, &s, BlockParams::new(8, 9, 4), 1).is_err());
         // c_ob not dividing C_o
-        assert!(conv_direct(&input, &kernel, &s, BlockParams::new(5, 4, 4), 1).is_err());
+        assert!(direct_oneshot(&input, &kernel, &s, BlockParams::new(5, 4, 4), 1).is_err());
     }
 
     #[test]

@@ -23,12 +23,8 @@ pub mod reorder;
 mod shape;
 
 pub use backward::{conv_backward_input, conv_backward_kernel};
-#[allow(deprecated)] // re-exported for downstream migration; see crate::engine
-pub use direct::conv_direct;
 pub use direct::{conv_direct_blocked, conv_direct_blocked_into};
 pub use naive::{conv_naive, conv_naive_into};
 pub use params::select_params;
-#[allow(deprecated)] // re-exported for downstream migration; see crate::engine
-pub use reorder::conv_reorder;
 pub use reorder::conv_reorder_into;
 pub use shape::{BlockParams, ConvShape};

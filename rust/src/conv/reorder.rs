@@ -39,35 +39,6 @@ pub fn kernel_to_hwio(kernel: &Tensor) -> Result<Tensor> {
     Tensor::from_vec(&[h_f, w_f, c_i, c_o], out)
 }
 
-/// Convolve channel-last input `[H_i][W_i][C_i]` with an HWIO kernel
-/// `[H_f][W_f][C_i][C_o]`, producing `[H_o][W_o][C_o]`.
-#[deprecated(
-    note = "plan through engine::BackendRegistry (backend \"reorder\"), which owns \
-            the HWIO pre-transform; or use conv_reorder_into for the raw kernel"
-)]
-pub fn conv_reorder(input: &Tensor, kernel_hwio: &Tensor, shape: &ConvShape) -> Result<Tensor> {
-    shape.validate()?;
-    let want_in = [shape.h_i, shape.w_i, shape.c_i];
-    if input.shape() != want_in {
-        return Err(Error::Shape(format!(
-            "input shape {:?} != expected {:?}",
-            input.shape(),
-            want_in
-        )));
-    }
-    let want_k = [shape.h_f, shape.w_f, shape.c_i, shape.c_o];
-    if kernel_hwio.shape() != want_k {
-        return Err(Error::Shape(format!(
-            "kernel shape {:?} != expected {:?}",
-            kernel_hwio.shape(),
-            want_k
-        )));
-    }
-    let mut out = Tensor::zeros(&[shape.h_o(), shape.w_o(), shape.c_o]);
-    conv_reorder_into(input.data(), kernel_hwio.data(), shape, out.data_mut())?;
-    Ok(out)
-}
-
 /// Allocation-free core of Algorithm 2: flat channel-last slices
 /// (`[H_i][W_i][C_i]` input, `[H_f][W_f][C_i][C_o]` kernel,
 /// `[H_o][W_o][C_o]` output). The output buffer is overwritten (zeroed
@@ -137,18 +108,27 @@ pub fn conv_reorder_into(
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // conv_reorder stays covered until the wrapper is removed
 mod tests {
     use super::*;
     use crate::conv::conv_naive;
     use crate::layout::{nchw_to_nhwc, nhwc_to_nchw};
+
+    /// Channel-last one-shot over `conv_reorder_into` (what the removed
+    /// `conv_reorder` wrapper did; the engine's `reorder` backend owns
+    /// the HWIO pre-transform in production).
+    fn reorder_oneshot(nhwc: &Tensor, hwio: &Tensor, s: &ConvShape) -> Result<Tensor> {
+        s.validate()?;
+        let mut out = Tensor::zeros(&[s.h_o(), s.w_o(), s.c_o]);
+        conv_reorder_into(nhwc.data(), hwio.data(), s, out.data_mut())?;
+        Ok(out)
+    }
 
     fn check_against_naive(s: &ConvShape, seed: u64) {
         let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], seed);
         let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], seed + 1);
         let want = conv_naive(&input, &kernel, s).unwrap();
 
-        let got_nhwc = conv_reorder(
+        let got_nhwc = reorder_oneshot(
             &nchw_to_nhwc(&input).unwrap(),
             &kernel_to_hwio(&kernel).unwrap(),
             s,

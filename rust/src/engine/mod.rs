@@ -77,11 +77,13 @@
 //!
 //! # Whole networks
 //!
-//! [`NetRunner`] lifts the per-layer contract to entire benchmark nets:
+//! [`NetRunner`] lifts the per-layer contract to entire networks:
 //! every layer of a [`crate::nets::NetPlans`] table planned once, the
-//! net's [`crate::nets::NetGraph`] (GoogLeNet's inception modules as
-//! real fan-out branches joined by channel concats; AlexNet/VGG as
-//! trivial chains) compiled to a flat schedule, and every activation
+//! net's [`crate::nets::NetGraph`] (built by [`crate::nets::GraphBuilder`]
+//! or a JSON model spec: GoogLeNet's inception modules as real fan-out
+//! branches joined by channel concats, AlexNet/VGG as trivial chains,
+//! residual ResNet-style `Add` joins) compiled to a flat schedule, and
+//! every activation
 //! placed in ONE arena by a liveness-driven region allocator sized by
 //! the max live-set — plus the largest per-layer workspace, shared
 //! across layers. The forward pass replays the schedule through
@@ -98,7 +100,7 @@ mod serving;
 pub use backends::{
     DirectBackend, FftBackend, Im2colBackend, NaiveBackend, ReorderBackend, WinogradBackend,
 };
-pub use net_runner::{adapt_nchw, pool_nchw, ArenaRegion, NetArena, NetRunner};
+pub use net_runner::{adapt_nchw, add_nchw, pool_nchw, ArenaRegion, NetArena, NetRunner};
 pub use registry::{BackendRegistry, BACKEND_NAMES};
 pub use serving::{NetEngine, PlanEngine};
 

@@ -62,10 +62,22 @@
 //! strictly allocation-free hot path; parallel stages pay bounded
 //! `thread::scope` spawn bookkeeping, like any `threads > 1` plan.
 //!
-//! [`adapt_nchw`] / [`pool_nchw`] are independent NCHW reference
-//! implementations of the pooling glue, used by the conformance tests to
-//! cross-check whole forward passes against branch-by-branch
-//! `conv_naive` references with explicit concatenation.
+//! # Residual joins
+//!
+//! [`crate::nets::GraphOp::Add`] (the ResNet skip connection) compiles
+//! to per-operand gather passes over one destination region: the first
+//! operand's pass stores, later operands accumulate (`+=`), with any
+//! needed layout conversion fused in. No temporary is materialized —
+//! the join costs exactly its output region, and liveness keeps every
+//! operand alive to the join, so the arena accounting charges residual
+//! topologies honestly. This is where direct convolution's zero
+//! overhead compounds: GEMM-based rivals pay their per-branch packing
+//! on *both* arms of every skip connection.
+//!
+//! [`adapt_nchw`] / [`pool_nchw`] / [`add_nchw`] are independent NCHW
+//! reference implementations of the glue ops, used by the conformance
+//! tests to cross-check whole forward passes against branch-by-branch
+//! `conv_naive` references with explicit concatenation/summation.
 
 use std::collections::BTreeMap;
 use std::ops::Range;
@@ -103,6 +115,9 @@ fn io_index(
 /// One fused, channel-preserving gather pass: max-pool (with `-inf`
 /// padding) plus layout conversion, any layout to any layout. With
 /// `1x1/s1/p0` geometry it degenerates to a pure layout conversion.
+/// With `accumulate` set the gathered value is *added* to the
+/// destination instead of stored — the second and later operands of a
+/// residual [`GraphOp::Add`] join fuse into the same pass.
 #[derive(Clone, Copy, Debug)]
 struct Adapt {
     src_c: usize,
@@ -119,6 +134,7 @@ struct Adapt {
     sw: usize,
     ph: usize,
     pw: usize,
+    accumulate: bool,
 }
 
 impl Adapt {
@@ -139,6 +155,7 @@ impl Adapt {
             sw: 1,
             ph: 0,
             pw: 0,
+            accumulate: false,
         }
     }
 
@@ -177,8 +194,12 @@ impl Adapt {
                             }
                         }
                     }
-                    dst[io_index(self.dst_layout, c, y, x, self.dst_c, self.dst_h, self.dst_w)] =
-                        m;
+                    let d = io_index(self.dst_layout, c, y, x, self.dst_c, self.dst_h, self.dst_w);
+                    if self.accumulate {
+                        dst[d] += m;
+                    } else {
+                        dst[d] = m;
+                    }
                 }
             }
         }
@@ -235,6 +256,22 @@ pub fn pool_nchw(
         }
     }
     Tensor::from_vec(&[c, h_o, w_o], out)
+}
+
+/// NCHW reference elementwise sum (the residual [`GraphOp::Add`] join),
+/// left-folded in operand order exactly like the compiled accumulate
+/// gathers — independent of the arena/layout machinery so tests can
+/// build naive references for residual graphs.
+pub fn add_nchw(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if a.shape() != b.shape() {
+        return Err(Error::Shape(format!(
+            "add operands differ: {:?} vs {:?} (residual joins need identical shapes)",
+            a.shape(),
+            b.shape()
+        )));
+    }
+    let data = a.data().iter().zip(b.data()).map(|(x, y)| x + y).collect();
+    Tensor::from_vec(a.shape(), data)
 }
 
 /// NCHW reference for the derived inter-block pooling glue: reduce
@@ -757,7 +794,7 @@ impl<'a> Compiler<'a> {
     fn value_layout(&self, node: usize, consumers: &[Vec<usize>]) -> IoLayout {
         match self.graph.nodes[node].op {
             GraphOp::Conv { layer } => self.plans.layers[layer].plan.output_layout(),
-            GraphOp::Concat => IoLayout::Nchw,
+            GraphOp::Concat | GraphOp::Add => IoLayout::Nchw,
             GraphOp::Input { .. } | GraphOp::Pool { .. } => {
                 if let [single] = consumers[node][..] {
                     if let GraphOp::Conv { layer } = self.graph.nodes[single].op {
@@ -846,6 +883,7 @@ impl<'a> Compiler<'a> {
                         sw: *sw,
                         ph: *ph,
                         pw: *pw,
+                        accumulate: false,
                     };
                     self.push_op(Op::Adapt { src: pv, dst: v, dst_c_off: 0, adapt }, node.branch);
                 }
@@ -870,6 +908,7 @@ impl<'a> Compiler<'a> {
                             sw: 1,
                             ph: 0,
                             pw: 0,
+                            accumulate: false,
                         };
                         // The gather runs in the producing branch's lane.
                         self.push_op(
@@ -877,6 +916,33 @@ impl<'a> Compiler<'a> {
                             self.graph.nodes[p].branch,
                         );
                         c_off += pd.c;
+                    }
+                }
+                GraphOp::Add => {
+                    // Residual join: the first operand's gather *sets*
+                    // the destination, each later operand *accumulates*
+                    // into it — the sum fuses into the same layout-
+                    // converting pass (no extra temporaries, so both
+                    // operands stay live to the join and the arena
+                    // accounting charges them honestly). The ops share
+                    // the join node's lane tag: accumulation into one
+                    // region must stay sequenced, never fanned across
+                    // concurrent lanes.
+                    let d = self.dims[i];
+                    for (j, &p) in node.preds.iter().enumerate() {
+                        let pv = self.node_value[p];
+                        let mut adapt = Adapt::convert(
+                            d.c,
+                            d.h,
+                            d.w,
+                            self.values[pv].layout,
+                            self.values[v].layout,
+                        );
+                        adapt.accumulate = j > 0;
+                        self.push_op(
+                            Op::Adapt { src: pv, dst: v, dst_c_off: 0, adapt },
+                            node.branch,
+                        );
                     }
                 }
             }
@@ -1237,6 +1303,58 @@ mod tests {
                 runner.max_live_floats(),
                 "placement fragmented beyond the max live-set (lanes {lanes})"
             );
+        }
+    }
+
+    #[test]
+    fn add_nchw_sums_and_rejects_mismatch() {
+        let a = Tensor::iota(&[2, 2, 2]);
+        let b = Tensor::iota(&[2, 2, 2]);
+        let s = add_nchw(&a, &b).unwrap();
+        assert_eq!(s.at(&[1, 1, 1]), 14.0);
+        assert!(add_nchw(&a, &Tensor::zeros(&[2, 2, 3])).is_err());
+    }
+
+    /// Two-block residual micro-net (the `resnet_micro` topology) via
+    /// the builder; direct backend.
+    #[test]
+    fn residual_add_forward_matches_naive_reference() {
+        use crate::nets::builder::resnet_micro;
+        let model = resnet_micro();
+        let plans = NetPlans::build_model(&model, "direct", &haswell(), 1).unwrap();
+        let kernels: Vec<Tensor> =
+            model.shapes.iter().enumerate().map(|(i, s)| crate::nets::net_kernel(i, s)).collect();
+        let runner = NetRunner::from_graph(plans, model.graph.clone(), 1).unwrap();
+        assert_eq!(runner.overhead_bytes(), 0, "direct residual net must stay zero-overhead");
+
+        let input = Tensor::random(&[3, 32, 32], 0xADD);
+        let got = runner.forward(&input).unwrap();
+
+        let conv = |x: &Tensor, i: usize| conv_naive(x, &kernels[i], &model.shapes[i]).unwrap();
+        let stem = conv(&input, 0);
+        let j1 = add_nchw(&stem, &conv(&conv(&stem, 1), 2)).unwrap();
+        let j2 = add_nchw(&j1, &conv(&conv(&j1, 3), 4)).unwrap();
+        let want = conv(&pool_nchw(&j2, 2, 2, 2, 2, 0, 0).unwrap(), 5);
+        assert_eq!(got.shape(), want.shape());
+        assert!(got.allclose(&want, 1e-3, 1e-3), "diverged: {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn add_operands_stay_live_to_the_join() {
+        // stem feeds both the residual arm and the join: its region must
+        // not be reused while the arm computes.
+        use crate::nets::builder::resnet_micro;
+        let model = resnet_micro();
+        let plans = NetPlans::build_model(&model, "direct", &haswell(), 1).unwrap();
+        let runner = NetRunner::from_graph(plans, model.graph.clone(), 1).unwrap();
+        let regions = runner.arena_regions();
+        for (i, a) in regions.iter().enumerate() {
+            for b in &regions[i + 1..] {
+                let overlap_t = a.first_step <= b.last_step && b.first_step <= a.last_step;
+                let overlap_s =
+                    a.offset < b.offset + b.floats && b.offset < a.offset + a.floats;
+                assert!(!(overlap_t && overlap_s), "live alias: {} vs {}", a.name, b.name);
+            }
         }
     }
 

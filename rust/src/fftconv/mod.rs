@@ -7,12 +7,10 @@
 //! accumulated over input channels and inverse-transformed per output
 //! channel.
 //!
-//! Two entry points:
-//! * [`conv_fft`] — transforms the weights on the fly (what a framework
-//!   does on the first call);
-//! * [`FftConvPlan`] — pre-transforms weights once and reports the
-//!   retained memory, mirroring NNPACK's precomputed mode and feeding the
-//!   memory-overhead table in EXPERIMENTS.md.
+//! Entry point: [`FftConvPlan`] — pre-transforms weights once and
+//! reports the retained memory, mirroring NNPACK's precomputed mode and
+//! feeding the memory-overhead table in EXPERIMENTS.md. (The engine's
+//! `fft` backend wraps it behind the plan/execute contract.)
 
 mod fft;
 
@@ -33,16 +31,6 @@ pub fn transform_size(shape: &ConvShape) -> usize {
 pub fn fft_extra_bytes(shape: &ConvShape) -> u64 {
     let n = transform_size(shape) as u64;
     8 * n * n * (shape.c_o * shape.c_i) as u64
-}
-
-/// Convolution with on-the-fly kernel transforms.
-#[deprecated(
-    note = "plan through engine::BackendRegistry (backend \"fft\") or build an \
-            FftConvPlan directly; this wrapper re-transforms the weights per call"
-)]
-pub fn conv_fft(input: &Tensor, kernel: &Tensor, shape: &ConvShape) -> Result<Tensor> {
-    let plan = FftConvPlan::new(kernel, shape)?;
-    plan.run(input)
 }
 
 /// Precomputed kernel spectra for one layer.
@@ -204,7 +192,6 @@ impl FftConvPlan {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // conv_fft stays covered until the wrapper is removed
 mod tests {
     use super::*;
     use crate::conv::conv_naive;
@@ -213,7 +200,7 @@ mod tests {
         let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], seed);
         let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], seed + 1);
         let want = conv_naive(&input, &kernel, s).unwrap();
-        let got = conv_fft(&input, &kernel, s).unwrap();
+        let got = FftConvPlan::new(&kernel, s).unwrap().run(&input).unwrap();
         assert!(
             got.allclose(&want, 1e-3, 1e-3),
             "mismatch {:?}: {}",

@@ -39,13 +39,17 @@
 //!
 //! ## Whole networks: the graph IR and the arena-sizing contract
 //!
-//! [`engine::NetRunner`] lifts the per-layer claim to entire benchmark
-//! nets, executed as real dataflow graphs. A [`nets::NetGraph`]
-//! (conv/pool/concat nodes; GoogLeNet's nine inception modules as
-//! genuine fan-out branches re-joined by channel concats, AlexNet/VGG
-//! as trivial chains) is compiled together with its [`nets::NetPlans`]
-//! table into a flat schedule, and **one** execution arena is sized
-//! once — then the forward pass never allocates again:
+//! [`engine::NetRunner`] lifts the per-layer claim to entire networks,
+//! executed as real dataflow graphs. A [`nets::NetGraph`]
+//! (conv/pool/concat/add nodes) is built through the public
+//! [`nets::GraphBuilder`] API — the paper nets are builder programs
+//! (GoogLeNet's nine inception modules as genuine fan-out branches
+//! re-joined by channel concats, AlexNet/VGG as trivial chains,
+//! ResNet-style residual joins as first-class `Add` nodes) — or loaded
+//! from a JSON model spec ([`nets::Model`], CLI `--model path.json`).
+//! The graph is compiled together with its [`nets::NetPlans`] table
+//! into a flat schedule, and **one** execution arena is sized once —
+//! then the forward pass never allocates again:
 //!
 //! * every activation (graph edge) gets a region from a
 //!   liveness-driven allocator: lifetimes over the topological
@@ -98,9 +102,10 @@
 //! Support modules: [`bench_harness`] (criterion-lite), [`json`]
 //! (manifest/results I/O), [`cli`] (argument parsing).
 //!
-//! The pre-engine free functions (`conv_direct`, `conv_im2col`, ...)
-//! remain as deprecated thin wrappers; new code should plan through the
-//! registry instead.
+//! The pre-engine one-shot free functions (`conv_direct`,
+//! `conv_im2col`, ...) are gone: every backend is reached through the
+//! registry's plan/execute contract (the allocation-free `*_into` cores
+//! remain public for callers that manage their own buffers).
 
 pub mod arch;
 pub mod bench_harness;

@@ -73,38 +73,6 @@ pub fn im2col_extra_bytes(shape: &ConvShape) -> u64 {
     shape.im2col_bytes()
 }
 
-/// Convolution via `im2col` + SGEMM: the kernel tensor reshapes for free
-/// to `C_o x (C_i*H_f*W_f)`, the output to `C_o x (H_o*W_o)`.
-#[deprecated(
-    note = "plan through engine::BackendRegistry (backend \"im2col\"), which \
-            reuses the lowering workspace across calls"
-)]
-pub fn conv_im2col(input: &Tensor, kernel: &Tensor, shape: &ConvShape) -> Result<Tensor> {
-    #[allow(deprecated)]
-    conv_im2col_threaded(input, kernel, shape, 1)
-}
-
-/// Threaded variant (threads passed to the SGEMM; the lowering itself is
-/// single-threaded, exactly like Caffe's).
-#[deprecated(
-    note = "plan through engine::BackendRegistry (backend \"im2col\"), which \
-            reuses the lowering workspace across calls"
-)]
-pub fn conv_im2col_threaded(
-    input: &Tensor,
-    kernel: &Tensor,
-    shape: &ConvShape,
-    threads: usize,
-) -> Result<Tensor> {
-    shape.validate()?;
-    crate::conv::naive::check_shapes(input, kernel, shape)?;
-    let (h_o, w_o) = (shape.h_o(), shape.w_o());
-    let mut workspace = vec![0.0f32; shape.c_i * shape.h_f * shape.w_f * h_o * w_o];
-    let mut out = Tensor::zeros(&[shape.c_o, h_o, w_o]);
-    conv_im2col_into(input.data(), kernel.data(), shape, threads, out.data_mut(), &mut workspace)?;
-    Ok(out)
-}
-
 /// Allocation-free im2col + SGEMM core: lowers into the caller-owned
 /// `workspace` (`C_i*H_f*W_f * H_o*W_o` floats) and accumulates the
 /// GEMM into `out` (`[C_o][H_o][W_o]`, overwritten). The Goto SGEMM
@@ -165,23 +133,39 @@ pub fn conv_gemm_only(
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // conv_im2col stays covered until the wrapper is removed
 mod tests {
     use super::*;
     use crate::conv::conv_naive;
+
+    /// One-shot lowering + SGEMM over a fresh workspace (what the
+    /// removed `conv_im2col[_threaded]` wrappers did; the engine's
+    /// `im2col` backend reuses the workspace across calls).
+    fn im2col_oneshot(
+        input: &Tensor,
+        kernel: &Tensor,
+        s: &ConvShape,
+        threads: usize,
+    ) -> Result<Tensor> {
+        s.validate()?;
+        let (h_o, w_o) = (s.h_o(), s.w_o());
+        let mut workspace = vec![0.0f32; s.c_i * s.h_f * s.w_f * h_o * w_o];
+        let mut out = Tensor::zeros(&[s.c_o, h_o, w_o]);
+        conv_im2col_into(input.data(), kernel.data(), s, threads, out.data_mut(), &mut workspace)?;
+        Ok(out)
+    }
 
     fn check(s: &ConvShape, seed: u64) {
         let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], seed);
         let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], seed + 1);
         let want = conv_naive(&input, &kernel, s).unwrap();
-        let got = conv_im2col(&input, &kernel, s).unwrap();
+        let got = im2col_oneshot(&input, &kernel, s, 1).unwrap();
         assert!(
             got.allclose(&want, 1e-4, 1e-5),
             "mismatch {:?}: {}",
             s,
             got.max_abs_diff(&want)
         );
-        let got4 = conv_im2col_threaded(&input, &kernel, s, 4).unwrap();
+        let got4 = im2col_oneshot(&input, &kernel, s, 4).unwrap();
         assert!(got4.allclose(&want, 1e-4, 1e-5));
     }
 

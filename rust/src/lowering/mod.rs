@@ -16,7 +16,5 @@
 mod im2col;
 mod mec;
 
-#[allow(deprecated)] // re-exported for downstream migration; see crate::engine
-pub use im2col::{conv_im2col, conv_im2col_threaded};
 pub use im2col::{conv_gemm_only, conv_im2col_into, im2col, im2col_extra_bytes, im2col_into};
 pub use mec::{conv_mec, mec_extra_bytes};

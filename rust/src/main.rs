@@ -7,19 +7,22 @@
 //!   backends [--layer NAME] [--threads P]
 //!                               plan every applicable backend for a layer:
 //!                               plan/exec time + memory-overhead table
-//!   plan-net [--net N] [--backend B] [--threads P] [--autotune]
-//!                               per-layer plan table for a whole network,
-//!                               with measured per-layer thread counts
-//!                               under --autotune
+//!   plan-net [--net N | --model path.json] [--backend B] [--threads P]
+//!            [--autotune]       per-layer plan table for a whole network
+//!                               (built-in or JSON model spec), with
+//!                               measured per-layer thread counts under
+//!                               --autotune
 //!   simulate [--net N] [--arch A] [--threads P]
 //!                               simulated per-layer comparison (Fig 4 rows)
 //!   run-layer [--layer NAME] [--backend B] [--threads P]
 //!                               host-measured single layer via the engine
-//!   serve [--layer NAME | --net NET] [--backend B] [--requests N]
-//!         [--clients C] [--workers W] [--autotune] [--branch-lanes L]
+//!   serve [--layer NAME | --net NET | --model path.json] [--backend B]
+//!         [--requests N] [--clients C] [--workers W] [--autotune]
+//!         [--branch-lanes L]
 //!                               serve a layer (cached ConvPlan) or a whole
-//!                               network (NetRunner over the dataflow
-//!                               graph + worker pool, one liveness-sized
+//!                               network — built-in or JSON model spec —
+//!                               (NetRunner over the dataflow graph +
+//!                               worker pool, one liveness-sized
 //!                               activation arena per worker) through the
 //!                               coordinator — zero per-request conv
 //!                               allocations either way; with the `pjrt`
@@ -64,10 +67,12 @@ fn help() {
            nets        list benchmark layers      [--net alexnet|googlenet|vgg16]\n\
            layouts     demonstrate the paper's data layouts\n\
            backends    compare every backend on one layer [--layer alexnet/conv3]\n\
-           plan-net    plan a whole net through the engine [--net N --backend auto --autotune]\n\
+           plan-net    plan a whole net through the engine\n\
+                       [--net N | --model path.json] [--backend auto] [--autotune]\n\
            simulate    simulated Fig-4 comparison [--net N --arch intel|amd|arm --threads P]\n\
            run-layer   measure one layer on this host [--layer alexnet/conv3 --backend auto]\n\
-           serve       serve a layer or whole net [--layer NAME | --net N] [--workers W]\n\
+           serve       serve a layer or whole net\n\
+                       [--layer NAME | --net N | --model path.json] [--workers W]\n\
                        [--autotune] [--branch-lanes L]\n\
            verify      verify PJRT artifacts against goldens [--dir artifacts] (pjrt feature)"
     );
@@ -217,21 +222,90 @@ fn die(e: dconv::Error) -> ! {
     std::process::exit(1);
 }
 
-/// Plan a whole benchmark network and print the per-layer plan table.
-/// With `--autotune`, each layer's thread count is measured at plan
-/// time ([`NetPlans::build_autotuned`]) instead of fixed by `--threads`.
+/// Where `plan-net`/`serve` get their network from: a built-in layer
+/// table (`--net alexnet|googlenet|vgg16`), a built-in builder program
+/// (`--net resnet_micro`), or a JSON model spec (`--model path.json`).
+enum NetSource {
+    Table(String),
+    Model(nets::Model),
+}
+
+impl NetSource {
+    fn resolve(args: &Args) -> NetSource {
+        if let Some(path) = args.get("model") {
+            return match nets::Model::from_file(path) {
+                Ok(model) => NetSource::Model(model),
+                Err(e) => die(e),
+            };
+        }
+        let net = args.get_or("net", "alexnet");
+        if nets::by_name(net).is_none() {
+            if let Some(model) = nets::model_by_name(net) {
+                return NetSource::Model(model);
+            }
+        }
+        // Unknown names stay on the table path so NetPlans::build
+        // reports the canonical error.
+        NetSource::Table(net.to_string())
+    }
+
+    fn name(&self) -> String {
+        match self {
+            NetSource::Table(net) => net.clone(),
+            NetSource::Model(model) => model.name.clone(),
+        }
+    }
+
+    fn build(&self, backend: &str, m: &Machine, threads: usize) -> dconv::Result<NetPlans> {
+        match self {
+            NetSource::Table(net) => NetPlans::build(net, backend, m, threads),
+            NetSource::Model(model) => NetPlans::build_model(model, backend, m, threads),
+        }
+    }
+
+    fn build_autotuned(
+        &self,
+        backend: &str,
+        m: &Machine,
+        candidates: &[usize],
+    ) -> dconv::Result<(NetPlans, Vec<nets::AutotuneChoice>)> {
+        match self {
+            NetSource::Table(net) => NetPlans::build_autotuned(net, backend, m, candidates),
+            NetSource::Model(model) => {
+                NetPlans::build_model_autotuned(model, backend, m, candidates)
+            }
+        }
+    }
+
+    /// Compile the planned net with this source's graph (the canonical
+    /// table graph, or the model's own).
+    fn runner(self, plans: NetPlans, lanes: usize) -> dconv::Result<NetRunner> {
+        match self {
+            NetSource::Table(_) => NetRunner::with_branch_lanes(plans, lanes),
+            NetSource::Model(model) => NetRunner::from_graph(plans, model.graph, lanes),
+        }
+    }
+}
+
+/// Plan a whole network — a built-in benchmark net (`--net`) or a JSON
+/// model spec (`--model path.json`) — and print the per-layer plan
+/// table. With `--autotune`, each layer's thread count is measured at
+/// plan time ([`NetPlans::build_autotuned`]) instead of fixed by
+/// `--threads`.
 fn plan_net(args: &Args) {
-    let net = args.get_or("net", "alexnet");
     let backend = args.get_or("backend", "auto");
     let p = args.get_usize("threads", 1);
     let m = arch::host();
+    let source = NetSource::resolve(args);
+    let net = source.name();
     let (plans, secs) = if args.flag("autotune") {
         let cands = thread_candidates();
-        let ((plans, report), secs) =
-            time_it(|| match NetPlans::build_autotuned(net, backend, &m, &cands) {
+        let ((plans, report), secs) = time_it(|| {
+            match source.build_autotuned(backend, &m, &cands) {
                 Ok(r) => r,
                 Err(e) => die(e),
-            });
+            }
+        });
         let tuned: usize = report.iter().filter(|c| c.threads > 1).count();
         println!(
             "autotuned {} layers over thread candidates {cands:?}: {} kept more than one thread",
@@ -240,7 +314,7 @@ fn plan_net(args: &Args) {
         );
         (plans, secs)
     } else {
-        time_it(|| match NetPlans::build(net, backend, &m, p) {
+        time_it(|| match source.build(backend, &m, p) {
             Ok(r) => r,
             Err(e) => die(e),
         })
@@ -273,7 +347,7 @@ fn plan_net(args: &Args) {
     if plans.total_retained_bytes() + plans.total_workspace_bytes() == 0 {
         println!("zero memory overhead across the whole network ✓ (the paper's claim)");
     }
-    match NetRunner::new(plans) {
+    match source.runner(plans, 1) {
         Ok(r) => println!(
             "NetRunner graph: {} nodes / {} conv layers, {} arena regions; liveness-sized \
              activation arena {} floats (= max live-set: {}) + {} B shared workspace; the \
@@ -379,8 +453,8 @@ fn serve(args: &Args) {
             std::process::exit(1);
         }
     }
-    if let Some(net) = args.get("net") {
-        return serve_net(args, net);
+    if args.get("model").is_some() || args.get("net").is_some() {
+        return serve_net(args);
     }
     let name = args.get_or("layer", "googlenet/inception_3a/3x3");
     let backend = args.get_or("backend", "auto");
@@ -429,13 +503,14 @@ fn serve(args: &Args) {
     println!("latency    : {}", st.latency.summary());
 }
 
-/// Serve a whole benchmark network through the coordinator: every layer
-/// planned once at startup (NetRunner over the net's dataflow graph),
-/// batch items fanned out across the NetEngine worker pool, one
+/// Serve a whole network — a built-in benchmark net (`--net`) or a JSON
+/// model spec (`--model path.json`) — through the coordinator: every
+/// layer planned once at startup (NetRunner over the net's dataflow
+/// graph), batch items fanned out across the NetEngine worker pool, one
 /// liveness-sized activation arena per worker. `--autotune` measures
 /// per-layer thread counts at plan time; `--branch-lanes L` runs
 /// independent inception branches on up to L scoped threads per image.
-fn serve_net(args: &Args, net: &str) {
+fn serve_net(args: &Args) {
     let backend = args.get_or("backend", "auto");
     let requests = args.get_usize("requests", 64);
     let clients = args.get_usize("clients", 4);
@@ -444,28 +519,27 @@ fn serve_net(args: &Args, net: &str) {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let workers = args.get_usize("workers", cores);
     let m = arch::host();
+    let source = NetSource::resolve(args);
+    let net = source.name();
     let plans = if args.flag("autotune") {
-        match NetPlans::build_autotuned(net, backend, &m, &thread_candidates()) {
+        match source.build_autotuned(backend, &m, &thread_candidates()) {
             Ok((plans, report)) => {
                 let tuned: usize = report.iter().filter(|c| c.threads > 1).count();
                 println!("autotuned per-layer threads: {tuned}/{} layers kept > 1", report.len());
                 plans
             }
-            Err(e) => {
-                eprintln!("{e}");
-                std::process::exit(1);
-            }
+            Err(e) => die(e),
         }
     } else {
-        NetPlans::build(net, backend, &m, threads).unwrap_or_else(|e| {
-            eprintln!("{e}");
-            std::process::exit(1);
-        })
+        match source.build(backend, &m, threads) {
+            Ok(plans) => plans,
+            Err(e) => die(e),
+        }
     };
-    let runner = NetRunner::with_branch_lanes(plans, lanes).unwrap_or_else(|e| {
-        eprintln!("{e}");
-        std::process::exit(1);
-    });
+    let runner = match source.runner(plans, lanes) {
+        Ok(r) => r,
+        Err(e) => die(e),
+    };
     println!(
         "serving {net}: {} graph nodes / {} layers, retained {} B + shared workspace {} B \
          (network overhead {} B), activation arena {} B per worker, {} branch lane(s)",

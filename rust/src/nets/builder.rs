@@ -1,0 +1,599 @@
+//! [`GraphBuilder`] — the public model-description API.
+//!
+//! Until this module existed, the zero-memory-overhead executor was only
+//! reachable through three hardcoded shape tables; defining a new
+//! network meant editing library internals. The builder opens the graph
+//! IR: any CNN over the supported node set (conv / max-pool / channel
+//! concat / residual add) can be described as a short validated program
+//! and handed straight to [`super::NetPlans::build_model`] and
+//! [`crate::engine::NetRunner`] — planned once, served allocation-free.
+//!
+//! ```
+//! use dconv::nets::GraphBuilder;
+//!
+//! let mut b = GraphBuilder::new("tiny_resnet");
+//! let image = b.input(3, 32, 32).unwrap();
+//! let stem = b.conv("stem", image, 16, 3, 1, 1).unwrap();
+//! let c1 = b.conv("c1", stem, 16, 3, 1, 1).unwrap();
+//! let join = b.add("join", &[stem, c1]).unwrap();
+//! let model = b.build(join).unwrap();
+//! assert_eq!(model.shapes.len(), 2);
+//! ```
+//!
+//! Every method validates as it goes — dangling predecessors, duplicate
+//! names, shape mismatches, bad pool geometry and join-arity errors are
+//! reported at the call site with the node's name — and [`build`]
+//! (which runs [`NetGraph::validate`]) catches whole-graph properties:
+//! dead nodes, branch-lane crossings, the output convention.
+//!
+//! Shape inference is implicit: a conv node takes its input channel
+//! count and extents from its predecessor, so a builder program only
+//! states what the layer *adds* (output channels, kernel, stride, pad),
+//! exactly like the JSON spec format in [`super::spec`].
+//!
+//! The three paper nets are builder programs here ([`alexnet`],
+//! [`vgg16`], [`googlenet`]) and the legacy shape-table constructors
+//! ([`NetGraph::chain`], [`NetGraph::inception`], [`NetGraph::for_net`])
+//! are thin wrappers over the builder, so there is exactly one graph
+//! construction path.
+//!
+//! [`build`]: GraphBuilder::build
+
+use std::collections::BTreeMap;
+
+use crate::conv::ConvShape;
+use crate::{Error, Result};
+
+use super::graph::{pool_out, pool_spec, BranchTag, Dims, GraphNode, GraphOp, NetGraph};
+use super::spec::Model;
+use super::INCEPTION;
+
+/// Handle to a node under construction. Only the builder that returned
+/// it can consume it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NodeId(usize);
+
+/// Fluent, validated constructor for [`Model`]s. See the module docs.
+pub struct GraphBuilder {
+    net: String,
+    nodes: Vec<GraphNode>,
+    shapes: Vec<ConvShape>,
+    dims: Vec<Dims>,
+    names: BTreeMap<String, usize>,
+    branch: Option<BranchTag>,
+}
+
+impl GraphBuilder {
+    /// Start a model named `net`.
+    pub fn new(net: &str) -> GraphBuilder {
+        GraphBuilder {
+            net: net.to_string(),
+            nodes: Vec::new(),
+            shapes: Vec::new(),
+            dims: Vec::new(),
+            names: BTreeMap::new(),
+            branch: None,
+        }
+    }
+
+    fn err(&self, msg: String) -> Error {
+        Error::Shape(format!("builder '{}': {msg}", self.net))
+    }
+
+    fn check_pred(&self, node: &str, id: NodeId) -> Result<Dims> {
+        self.dims.get(id.0).copied().ok_or_else(|| {
+            self.err(format!("node '{node}': predecessor id is not from this builder"))
+        })
+    }
+
+    fn push(&mut self, name: &str, op: GraphOp, preds: Vec<usize>, d: Dims) -> Result<NodeId> {
+        if name.is_empty() {
+            return Err(self.err("node names must be non-empty".into()));
+        }
+        if self.names.contains_key(name) {
+            return Err(self.err(format!("duplicate node name '{name}'")));
+        }
+        self.names.insert(name.to_string(), self.nodes.len());
+        self.nodes.push(GraphNode {
+            name: name.to_string(),
+            op,
+            preds,
+            branch: self.branch,
+        });
+        self.dims.push(d);
+        Ok(NodeId(self.nodes.len() - 1))
+    }
+
+    /// The network input image, named `input` — must be the first node.
+    pub fn input(&mut self, c: usize, h: usize, w: usize) -> Result<NodeId> {
+        self.input_named("input", c, h, w)
+    }
+
+    /// The network input image with an explicit node name.
+    pub fn input_named(&mut self, name: &str, c: usize, h: usize, w: usize) -> Result<NodeId> {
+        if !self.nodes.is_empty() {
+            return Err(self.err(format!(
+                "input '{name}' must be the first node (and there is exactly one input)"
+            )));
+        }
+        if c == 0 || h == 0 || w == 0 {
+            return Err(self.err(format!("input '{name}': zero dimension in {c}x{h}x{w}")));
+        }
+        self.push(name, GraphOp::Input { c, h, w }, Vec::new(), Dims { c, h, w })
+    }
+
+    /// Square-kernel convolution: `c_o` output channels, `k x k` kernel,
+    /// symmetric `stride`/`pad`. Input channels and extents are inferred
+    /// from `pred`.
+    pub fn conv(
+        &mut self,
+        name: &str,
+        pred: NodeId,
+        c_o: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Result<NodeId> {
+        self.conv_rect(name, pred, c_o, k, k, stride, pad)
+    }
+
+    /// Rectangular-kernel convolution (`kh x kw`).
+    #[allow(clippy::too_many_arguments)] // the conv geometry tuple
+    pub fn conv_rect(
+        &mut self,
+        name: &str,
+        pred: NodeId,
+        c_o: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Result<NodeId> {
+        let d = self.check_pred(name, pred)?;
+        let shape = ConvShape::new(d.c, d.h, d.w, c_o, kh, kw, stride, pad);
+        self.conv_with(name, pred, shape)
+    }
+
+    /// Convolution from an explicit [`ConvShape`] (the shape-table entry
+    /// points use this); its declared input must match `pred`'s output
+    /// exactly.
+    pub fn conv_with(&mut self, name: &str, pred: NodeId, shape: ConvShape) -> Result<NodeId> {
+        let d = self.check_pred(name, pred)?;
+        if (d.c, d.h, d.w) != (shape.c_i, shape.h_i, shape.w_i) {
+            return Err(self.err(format!(
+                "conv '{name}' wants {}x{}x{} but its input produces {}x{}x{}",
+                shape.c_i, shape.h_i, shape.w_i, d.c, d.h, d.w
+            )));
+        }
+        shape.validate().map_err(|e| self.err(format!("conv '{name}': {e}")))?;
+        let out = Dims { c: shape.c_o, h: shape.h_o(), w: shape.w_o() };
+        // Push the node first: if it is rejected (duplicate name), the
+        // shape table must not grow an orphan entry.
+        let layer = self.shapes.len();
+        let id = self.push(name, GraphOp::Conv { layer }, vec![pred.0], out)?;
+        self.shapes.push(shape);
+        Ok(id)
+    }
+
+    /// Square max-pool: `k x k` window, stride `s`, symmetric pad `p`
+    /// (padding cells act as `-inf`).
+    pub fn pool(
+        &mut self,
+        name: &str,
+        pred: NodeId,
+        k: usize,
+        s: usize,
+        p: usize,
+    ) -> Result<NodeId> {
+        self.pool_geom(name, pred, k, k, s, s, p, p)
+    }
+
+    /// Max-pool with full geometry.
+    #[allow(clippy::too_many_arguments)] // the pool geometry tuple
+    pub fn pool_geom(
+        &mut self,
+        name: &str,
+        pred: NodeId,
+        kh: usize,
+        kw: usize,
+        sh: usize,
+        sw: usize,
+        ph: usize,
+        pw: usize,
+    ) -> Result<NodeId> {
+        let d = self.check_pred(name, pred)?;
+        let h = pool_out(d.h, kh, sh, ph).map_err(|e| self.err(format!("pool '{name}': {e}")))?;
+        let w = pool_out(d.w, kw, sw, pw).map_err(|e| self.err(format!("pool '{name}': {e}")))?;
+        self.push(
+            name,
+            GraphOp::Pool { kh, kw, sh, sw, ph, pw },
+            vec![pred.0],
+            Dims { c: d.c, h, w },
+        )
+    }
+
+    /// Derived down-pool: reduce `pred`'s extents onto `h x w` with the
+    /// [`pool_spec`] max-pool geometry (what the paper nets use between
+    /// blocks). Errors if the target extent is larger (upsampling glue
+    /// is not modeled).
+    pub fn pool_to(&mut self, name: &str, pred: NodeId, h: usize, w: usize) -> Result<NodeId> {
+        let d = self.check_pred(name, pred)?;
+        let (kh, sh) = pool_spec(d.h, h).map_err(|e| self.err(format!("pool '{name}': {e}")))?;
+        let (kw, sw) = pool_spec(d.w, w).map_err(|e| self.err(format!("pool '{name}': {e}")))?;
+        self.pool_geom(name, pred, kh, kw, sh, sw, 0, 0)
+    }
+
+    /// Channel concatenation of two or more equal-extent maps.
+    pub fn concat(&mut self, name: &str, preds: &[NodeId]) -> Result<NodeId> {
+        if preds.len() < 2 {
+            return Err(self.err(format!(
+                "concat '{name}' needs at least two operands, got {}",
+                preds.len()
+            )));
+        }
+        let first = self.check_pred(name, preds[0])?;
+        let mut c = 0usize;
+        for &p in preds {
+            let d = self.check_pred(name, p)?;
+            if (d.h, d.w) != (first.h, first.w) {
+                return Err(self.err(format!(
+                    "concat '{name}' mixes extents {}x{} and {}x{}",
+                    first.h, first.w, d.h, d.w
+                )));
+            }
+            c += d.c;
+        }
+        let preds = preds.iter().map(|p| p.0).collect();
+        self.push(name, GraphOp::Concat, preds, Dims { c, h: first.h, w: first.w })
+    }
+
+    /// Elementwise residual join of two or more identically shaped maps.
+    pub fn add(&mut self, name: &str, preds: &[NodeId]) -> Result<NodeId> {
+        if preds.len() < 2 {
+            return Err(self.err(format!(
+                "add '{name}' needs at least two operands, got {}",
+                preds.len()
+            )));
+        }
+        let first = self.check_pred(name, preds[0])?;
+        for &p in preds {
+            let d = self.check_pred(name, p)?;
+            if d != first {
+                return Err(self.err(format!(
+                    "add '{name}' mixes shapes {}x{}x{} and {}x{}x{} \
+                     (residual joins need identical operands)",
+                    first.c, first.h, first.w, d.c, d.h, d.w
+                )));
+            }
+        }
+        let preds = preds.iter().map(|p| p.0).collect();
+        self.push(name, GraphOp::Add, preds, first)
+    }
+
+    /// Tag subsequently added nodes as `lane` of fan-out group `group`
+    /// (lanes of one group must be mutually independent and may execute
+    /// on concurrent threads). Clear with [`GraphBuilder::backbone`].
+    pub fn lane(&mut self, group: usize, lane: usize) -> &mut Self {
+        self.branch = Some(BranchTag { group, lane });
+        self
+    }
+
+    /// Return to untagged (serial backbone) node construction.
+    pub fn backbone(&mut self) -> &mut Self {
+        self.branch = None;
+        self
+    }
+
+    /// Inferred `C x H x W` output dims of a node built so far.
+    pub fn dims_of(&self, id: NodeId) -> Dims {
+        self.dims[id.0]
+    }
+
+    /// Finish the model. `output` must be the last node added (the graph
+    /// convention: the final node is the network output); the whole
+    /// graph is then re-checked with [`NetGraph::validate`] — dead
+    /// nodes, lane crossings and every shape are verified against the
+    /// inferred conv table.
+    pub fn build(self, output: NodeId) -> Result<Model> {
+        if self.nodes.is_empty() {
+            return Err(Error::Shape(format!("builder '{}': the model has no nodes", self.net)));
+        }
+        if output.0 != self.nodes.len() - 1 {
+            return Err(Error::Shape(format!(
+                "builder '{}': output '{}' must be the last node added ('{}' is)",
+                self.net,
+                self.nodes.get(output.0).map(|n| n.name.as_str()).unwrap_or("<foreign id>"),
+                self.nodes[self.nodes.len() - 1].name
+            )));
+        }
+        let graph = NetGraph { net: self.net.clone(), nodes: self.nodes };
+        graph.validate(&self.shapes)?;
+        Ok(Model { name: self.net, graph, shapes: self.shapes })
+    }
+}
+
+// ---------------------------------------------------------------------
+// The paper nets as builder programs
+// ---------------------------------------------------------------------
+
+/// AlexNet's five conv layers with the two real 3x3/s2 inter-block
+/// max-pools, as a builder program.
+pub fn alexnet() -> Model {
+    let build = || -> Result<Model> {
+        let mut b = GraphBuilder::new("alexnet");
+        let x = b.input(3, 227, 227)?;
+        let x = b.conv("conv1", x, 96, 11, 4, 0)?;
+        let x = b.pool_to("pool1", x, 27, 27)?;
+        let x = b.conv("conv2", x, 256, 5, 1, 2)?;
+        let x = b.pool_to("pool2", x, 13, 13)?;
+        let x = b.conv("conv3", x, 384, 3, 1, 1)?;
+        let x = b.conv("conv4", x, 384, 3, 1, 1)?;
+        let x = b.conv("conv5", x, 256, 3, 1, 1)?;
+        b.build(x)
+    };
+    build().expect("alexnet builder program is statically valid")
+}
+
+/// VGG-16's thirteen 3x3/s1/p1 layers in five blocks joined by 2x2/s2
+/// max-pools, as a builder program.
+pub fn vgg16() -> Model {
+    let build = || -> Result<Model> {
+        let mut b = GraphBuilder::new("vgg16");
+        let mut x = b.input(3, 224, 224)?;
+        let mut h = 224;
+        for (block, &(c_o, convs)) in
+            [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)].iter().enumerate()
+        {
+            if block > 0 {
+                h /= 2;
+                x = b.pool_to(&format!("pool{block}"), x, h, h)?;
+            }
+            for i in 0..convs {
+                x = b.conv(&format!("conv{}_{}", block + 1, i + 1), x, c_o, 3, 1, 1)?;
+            }
+        }
+        b.build(x)
+    };
+    build().expect("vgg16 builder program is statically valid")
+}
+
+/// GoogLeNet — the three stem convs and all nine inception modules as
+/// genuine four-lane fan-outs re-joined by channel concats — as a
+/// builder program (same `INCEPTION` table as the layer list in
+/// [`super::googlenet`]).
+pub fn googlenet() -> Model {
+    let build = || -> Result<Model> {
+        let mut b = GraphBuilder::new("googlenet");
+        let x = b.input(3, 224, 224)?;
+        let x = b.conv("conv1/7x7_s2", x, 64, 7, 2, 3)?;
+        let x = b.pool_to("pool1", x, 56, 56)?;
+        let x = b.conv("conv2/3x3_reduce", x, 64, 1, 1, 0)?;
+        let mut x = b.conv("conv2/3x3", x, 192, 3, 1, 1)?;
+        for (m, &(tag, h, _c_in, n)) in INCEPTION.iter().enumerate() {
+            if b.dims_of(x).h != h {
+                x = b.pool_to(&format!("pool_before_{tag}"), x, h, h)?;
+            }
+            let name = |part: &str| format!("inception_{tag}/{part}");
+            b.lane(m, 0);
+            let b0 = b.conv(&name("1x1"), x, n[0], 1, 1, 0)?;
+            b.lane(m, 1);
+            let r1 = b.conv(&name("3x3_reduce"), x, n[1], 1, 1, 0)?;
+            let b1 = b.conv(&name("3x3"), r1, n[2], 3, 1, 1)?;
+            b.lane(m, 2);
+            let r2 = b.conv(&name("5x5_reduce"), x, n[3], 1, 1, 0)?;
+            let b2 = b.conv(&name("5x5"), r2, n[4], 5, 1, 2)?;
+            b.lane(m, 3);
+            let p3 = b.pool(&name("pool"), x, 3, 1, 1)?;
+            let b3 = b.conv(&name("pool_proj"), p3, n[5], 1, 1, 0)?;
+            b.backbone();
+            x = b.concat(&name("output"), &[b0, b1, b2, b3])?;
+        }
+        b.build(x)
+    };
+    build().expect("googlenet builder program is statically valid")
+}
+
+/// A ResNet-style micro-net with two residual [`GraphOp::Add`] joins —
+/// the committed example model (`examples/models/resnet_micro.json` is
+/// this program's JSON serialization, golden-pinned in `net_golden`).
+pub fn resnet_micro() -> Model {
+    let build = || -> Result<Model> {
+        let mut b = GraphBuilder::new("resnet_micro");
+        let x = b.input(3, 32, 32)?;
+        let stem = b.conv("conv0", x, 16, 3, 1, 1)?;
+        let c1 = b.conv("conv1", stem, 16, 3, 1, 1)?;
+        let c2 = b.conv("conv2", c1, 16, 3, 1, 1)?;
+        let j1 = b.add("add1", &[stem, c2])?;
+        let c3 = b.conv("conv3", j1, 16, 3, 1, 1)?;
+        let c4 = b.conv("conv4", c3, 16, 3, 1, 1)?;
+        let j2 = b.add("add2", &[j1, c4])?;
+        let p = b.pool("pool", j2, 2, 2, 0)?;
+        let out = b.conv("conv5", p, 32, 3, 1, 1)?;
+        b.build(out)
+    };
+    build().expect("resnet_micro builder program is statically valid")
+}
+
+/// Built-in builder-program models by name. The CLI's `plan-net`/`serve
+/// --net NAME` fall back to this when NAME is not one of the
+/// [`super::by_name`] layer tables — which is how `--net resnet_micro`
+/// resolves.
+pub fn model_by_name(net: &str) -> Option<Model> {
+    match net {
+        "alexnet" => Some(alexnet()),
+        "googlenet" => Some(googlenet()),
+        "vgg16" | "vgg" => Some(vgg16()),
+        "resnet_micro" => Some(resnet_micro()),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Legacy shape-table constructors — thin wrappers over the builder
+// ---------------------------------------------------------------------
+
+impl NetGraph {
+    /// Linear chain: `Input -> conv_0 -> [pool] -> conv_1 -> ...`, with a
+    /// max-pool inserted (geometry from [`pool_spec`]) wherever a layer's
+    /// spatial input is smaller than its predecessor's output. Channel
+    /// counts must match exactly — a table that is not channel-chainable
+    /// (e.g. GoogLeNet's branch traversal) is rejected. Thin wrapper
+    /// over [`GraphBuilder`].
+    pub fn chain(net: &str, shapes: &[ConvShape]) -> Result<NetGraph> {
+        let mut b = GraphBuilder::new(net);
+        let x = chain_onto(&mut b, net, shapes)?;
+        Ok(b.build(x)?.graph)
+    }
+
+    /// GoogLeNet-style DAG over a layer table shaped `3 stem convs +
+    /// 6 convs per inception module` (the order [`super::googlenet`]
+    /// emits: `1x1, 3x3_reduce, 3x3, 5x5_reduce, 5x5, pool_proj`). Each
+    /// module fans four tagged branches out of its input and re-joins
+    /// them with a channel concat; inter-block max-pools are derived
+    /// from the shape table, the branch pool is the classic 3x3/s1/p1.
+    /// Works for any table with that structure (e.g. downscaled test
+    /// nets), not just the full 57-layer GoogLeNet. Thin wrapper over
+    /// [`GraphBuilder`].
+    pub fn inception(net: &str, shapes: &[ConvShape]) -> Result<NetGraph> {
+        const STEM: usize = 3;
+        const PER_MODULE: usize = 6;
+        if shapes.len() < STEM + PER_MODULE || (shapes.len() - STEM) % PER_MODULE != 0 {
+            return Err(Error::Shape(format!(
+                "inception table must hold {STEM} stem convs plus a multiple of {PER_MODULE} \
+                 module convs, got {} layers",
+                shapes.len()
+            )));
+        }
+        let modules = (shapes.len() - STEM) / PER_MODULE;
+        let mut b = GraphBuilder::new(net);
+        let mut x = chain_onto(&mut b, net, &shapes[..STEM])?;
+        for m in 0..modules {
+            let base = STEM + m * PER_MODULE;
+            let s1x1 = &shapes[base];
+            let d = b.dims_of(x);
+            if (d.h, d.w) != (s1x1.h_i, s1x1.w_i) {
+                x = b.pool_to(&format!("pool_before_m{m}"), x, s1x1.h_i, s1x1.w_i)?;
+            }
+            b.lane(m, 0);
+            let b0 = b.conv_with(&format!("m{m}/conv0"), x, shapes[base].clone())?;
+            b.lane(m, 1);
+            let r1 = b.conv_with(&format!("m{m}/conv1"), x, shapes[base + 1].clone())?;
+            let b1 = b.conv_with(&format!("m{m}/conv2"), r1, shapes[base + 2].clone())?;
+            b.lane(m, 2);
+            let r2 = b.conv_with(&format!("m{m}/conv3"), x, shapes[base + 3].clone())?;
+            let b2 = b.conv_with(&format!("m{m}/conv4"), r2, shapes[base + 4].clone())?;
+            b.lane(m, 3);
+            let p3 = b.pool(&format!("m{m}/pool"), x, 3, 1, 1)?;
+            let b3 = b.conv_with(&format!("m{m}/conv5"), p3, shapes[base + 5].clone())?;
+            b.backbone();
+            x = b.concat(&format!("m{m}/concat"), &[b0, b1, b2, b3])?;
+        }
+        Ok(b.build(x)?.graph)
+    }
+
+    /// Build the canonical graph for a named net's layer table:
+    /// GoogLeNet gets the inception DAG, everything else (AlexNet, VGG,
+    /// ad-hoc test chains) lowers to a trivial chain so all nets share
+    /// one executor.
+    pub fn for_net(net: &str, shapes: &[ConvShape]) -> Result<NetGraph> {
+        if net == "googlenet" {
+            NetGraph::inception(net, shapes)
+        } else {
+            NetGraph::chain(net, shapes)
+        }
+    }
+}
+
+/// Append a conv chain over `shapes` to the builder (creating the input
+/// node), returning the last node. Layer names are `l{i}` with derived
+/// `pool_before_l{i}` glue — the legacy table-constructor naming.
+fn chain_onto(b: &mut GraphBuilder, net: &str, shapes: &[ConvShape]) -> Result<NodeId> {
+    let first = shapes
+        .first()
+        .ok_or_else(|| Error::Shape(format!("net '{net}' has no conv layers")))?;
+    let mut x = b.input(first.c_i, first.h_i, first.w_i)?;
+    for (i, s) in shapes.iter().enumerate() {
+        let d = b.dims_of(x);
+        if d.c != s.c_i {
+            return Err(Error::Shape(format!(
+                "net '{net}' is not a chain: layer {i} wants {} input channels but the \
+                 previous node produces {} (branch structure needs an explicit graph)",
+                s.c_i, d.c
+            )));
+        }
+        if (d.h, d.w) != (s.h_i, s.w_i) {
+            x = b.pool_to(&format!("pool_before_l{i}"), x, s.h_i, s.w_i)?;
+        }
+        x = b.conv_with(&format!("l{i}"), x, s.clone())?;
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets;
+
+    #[test]
+    fn builder_infers_shapes_and_counts_layers() {
+        let m = resnet_micro();
+        assert_eq!(m.shapes.len(), 6);
+        assert_eq!(m.shapes[0], ConvShape::new(3, 32, 32, 16, 3, 3, 1, 1));
+        assert_eq!(m.shapes[5], ConvShape::new(16, 16, 16, 32, 3, 3, 1, 1));
+        let dims = m.validate().unwrap();
+        let out = dims[m.graph.output()];
+        assert_eq!((out.c, out.h, out.w), (32, 16, 16));
+        let adds = m.graph.nodes.iter().filter(|n| matches!(n.op, GraphOp::Add)).count();
+        assert_eq!(adds, 2);
+    }
+
+    #[test]
+    fn paper_net_programs_match_their_layer_tables() {
+        for (model, net) in [(alexnet(), "alexnet"), (vgg16(), "vgg16"), (googlenet(), "googlenet")]
+        {
+            let table: Vec<ConvShape> =
+                nets::by_name(net).unwrap().into_iter().map(|l| l.shape).collect();
+            assert_eq!(model.shapes, table, "{net}: builder shapes drifted from the table");
+            model.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn builder_rejects_structural_mistakes() {
+        // Input not first.
+        let mut b = GraphBuilder::new("t");
+        let x = b.input(3, 8, 8).unwrap();
+        assert!(b.input(3, 8, 8).is_err(), "second input");
+        // Duplicate name.
+        let _c = b.conv("c", x, 8, 3, 1, 1).unwrap();
+        assert!(b.conv("c", x, 8, 3, 1, 1).is_err(), "duplicate node name");
+        // Kernel larger than padded input.
+        assert!(b.conv("big", x, 8, 11, 1, 0).is_err(), "kernel exceeds input");
+        // Pool pad >= kernel.
+        assert!(b.pool("p", x, 2, 1, 2).is_err(), "pad >= kernel");
+        // Upsampling pool_to.
+        assert!(b.pool_to("up", x, 16, 16).is_err(), "upsampling glue");
+        // Join arity.
+        assert!(b.concat("cat1", &[x]).is_err(), "concat of one");
+        assert!(b.add("add1", &[x]).is_err(), "add of one");
+    }
+
+    #[test]
+    fn build_enforces_output_convention_and_dead_nodes() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input(4, 8, 8).unwrap();
+        let c0 = b.conv("c0", x, 8, 3, 1, 1).unwrap();
+        let _c1 = b.conv("c1", c0, 8, 3, 1, 1).unwrap();
+        // c1 is the last node; naming c0 the output leaves c1 dead.
+        assert!(b.build(c0).is_err());
+    }
+
+    #[test]
+    fn add_requires_identical_shapes() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input(4, 8, 8).unwrap();
+        let a = b.conv("a", x, 8, 3, 1, 1).unwrap();
+        let c = b.conv("b", x, 16, 3, 1, 1).unwrap();
+        assert!(b.add("join", &[a, c]).is_err(), "channel mismatch across add");
+    }
+}

@@ -10,7 +10,7 @@
 //! IR makes the branch/concat structure first-class so the network-wide
 //! accounting is honest.
 //!
-//! Nodes are deliberately minimal — the four things the paper nets need:
+//! Nodes are deliberately minimal — the five things CNN topologies need:
 //!
 //! * [`GraphOp::Input`] — the network image (exactly one, node 0);
 //! * [`GraphOp::Conv`] — one row of the layer table, by index, so a
@@ -18,7 +18,15 @@
 //! * [`GraphOp::Pool`] — max-pool glue with explicit kernel/stride/pad
 //!   (inter-block pools are derived from the shape tables via
 //!   [`pool_spec`]; inception branch pools are the classic 3x3/s1/p1);
-//! * [`GraphOp::Concat`] — channel concatenation of same-extent maps.
+//! * [`GraphOp::Concat`] — channel concatenation of same-extent maps;
+//! * [`GraphOp::Add`] — elementwise residual join of identically shaped
+//!   maps (the ResNet skip connection), which keeps *both* operands
+//!   live until the join in the executor's arena accounting.
+//!
+//! Graphs are built through [`super::GraphBuilder`] (the public
+//! model-description API) — [`NetGraph::chain`] and
+//! [`NetGraph::inception`] are thin wrappers over it that keep the
+//! legacy shape-table entry points working.
 //!
 //! Nodes are stored in topological order (every predecessor index is
 //! smaller than the node's own), and the last node is the network
@@ -66,7 +74,7 @@ pub struct BranchTag {
 }
 
 /// What a graph node computes.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum GraphOp {
     /// The network input image (`C x H x W`). Exactly one, at node 0.
     Input { c: usize, h: usize, w: usize },
@@ -77,10 +85,13 @@ pub enum GraphOp {
     Pool { kh: usize, kw: usize, sh: usize, sw: usize, ph: usize, pw: usize },
     /// Channel concatenation of all predecessors (equal `H x W`).
     Concat,
+    /// Elementwise sum of all predecessors (identical `C x H x W`) —
+    /// the residual join.
+    Add,
 }
 
 /// One node of the dataflow graph.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct GraphNode {
     pub name: String,
     pub op: GraphOp,
@@ -91,9 +102,10 @@ pub struct GraphNode {
 }
 
 /// A whole network as a static DAG over a conv-layer table. Construct
-/// with [`NetGraph::chain`], [`NetGraph::inception`], or
-/// [`NetGraph::for_net`]; check with [`NetGraph::validate`].
-#[derive(Clone, Debug)]
+/// with [`super::GraphBuilder`] (or the [`NetGraph::chain`] /
+/// [`NetGraph::inception`] / [`NetGraph::for_net`] table wrappers);
+/// check with [`NetGraph::validate`].
+#[derive(Clone, Debug, PartialEq)]
 pub struct NetGraph {
     pub net: String,
     pub nodes: Vec<GraphNode>,
@@ -113,7 +125,7 @@ impl Dims {
     }
 }
 
-fn pool_out(extent: usize, k: usize, s: usize, p: usize) -> Result<usize> {
+pub(crate) fn pool_out(extent: usize, k: usize, s: usize, p: usize) -> Result<usize> {
     if k == 0 || s == 0 {
         return Err(Error::Shape("pool kernel/stride must be >= 1".into()));
     }
@@ -131,149 +143,9 @@ fn pool_out(extent: usize, k: usize, s: usize, p: usize) -> Result<usize> {
 }
 
 impl NetGraph {
-    /// Linear chain: `Input -> conv_0 -> [pool] -> conv_1 -> ...`, with a
-    /// max-pool inserted (geometry from [`pool_spec`]) wherever a layer's
-    /// spatial input is smaller than its predecessor's output. Channel
-    /// counts must match exactly — a table that is not channel-chainable
-    /// (e.g. GoogLeNet's branch traversal) is rejected.
-    pub fn chain(net: &str, shapes: &[ConvShape]) -> Result<NetGraph> {
-        let first = shapes
-            .first()
-            .ok_or_else(|| Error::Shape(format!("net '{net}' has no conv layers")))?;
-        let mut nodes = vec![GraphNode {
-            name: "input".into(),
-            op: GraphOp::Input { c: first.c_i, h: first.h_i, w: first.w_i },
-            preds: Vec::new(),
-            branch: None,
-        }];
-        let mut prev = 0usize;
-        let mut dims = Dims { c: first.c_i, h: first.h_i, w: first.w_i };
-        for (i, s) in shapes.iter().enumerate() {
-            if dims.c != s.c_i {
-                return Err(Error::Shape(format!(
-                    "net '{net}' is not a chain: layer {i} wants {} input channels but the \
-                     previous node produces {} (branch structure needs an explicit graph)",
-                    s.c_i, dims.c
-                )));
-            }
-            if dims.h != s.h_i || dims.w != s.w_i {
-                let (kh, sh) = pool_spec(dims.h, s.h_i)?;
-                let (kw, sw) = pool_spec(dims.w, s.w_i)?;
-                nodes.push(GraphNode {
-                    name: format!("pool_before_l{i}"),
-                    op: GraphOp::Pool { kh, kw, sh, sw, ph: 0, pw: 0 },
-                    preds: vec![prev],
-                    branch: None,
-                });
-                prev = nodes.len() - 1;
-                dims = Dims { c: dims.c, h: s.h_i, w: s.w_i };
-            }
-            nodes.push(GraphNode {
-                name: format!("l{i}"),
-                op: GraphOp::Conv { layer: i },
-                preds: vec![prev],
-                branch: None,
-            });
-            prev = nodes.len() - 1;
-            dims = Dims { c: s.c_o, h: s.h_o(), w: s.w_o() };
-        }
-        Ok(NetGraph { net: net.to_string(), nodes })
-    }
-
-    /// GoogLeNet-style DAG over a layer table shaped `3 stem convs +
-    /// 6 convs per inception module` (the order [`super::googlenet`]
-    /// emits: `1x1, 3x3_reduce, 3x3, 5x5_reduce, 5x5, pool_proj`). Each
-    /// module fans four tagged branches out of its input and re-joins
-    /// them with a channel concat; inter-block max-pools are derived
-    /// from the shape table, the branch pool is the classic 3x3/s1/p1.
-    /// Works for any table with that structure (e.g. downscaled test
-    /// nets), not just the full 57-layer GoogLeNet.
-    pub fn inception(net: &str, shapes: &[ConvShape]) -> Result<NetGraph> {
-        const STEM: usize = 3;
-        const PER_MODULE: usize = 6;
-        if shapes.len() < STEM + PER_MODULE || (shapes.len() - STEM) % PER_MODULE != 0 {
-            return Err(Error::Shape(format!(
-                "inception table must hold {STEM} stem convs plus a multiple of {PER_MODULE} \
-                 module convs, got {} layers",
-                shapes.len()
-            )));
-        }
-        let modules = (shapes.len() - STEM) / PER_MODULE;
-        // Stem is a chain; reuse the chain builder then graft modules on.
-        let mut g = NetGraph::chain(net, &shapes[..STEM])?;
-        let mut prev = g.nodes.len() - 1;
-        let stem_out = &shapes[STEM - 1];
-        let mut dims = Dims { c: stem_out.c_o, h: stem_out.h_o(), w: stem_out.w_o() };
-        for m in 0..modules {
-            let base = STEM + m * PER_MODULE;
-            let s1x1 = &shapes[base];
-            if dims.h != s1x1.h_i || dims.w != s1x1.w_i {
-                let (kh, sh) = pool_spec(dims.h, s1x1.h_i)?;
-                let (kw, sw) = pool_spec(dims.w, s1x1.w_i)?;
-                g.nodes.push(GraphNode {
-                    name: format!("pool_before_m{m}"),
-                    op: GraphOp::Pool { kh, kw, sh, sw, ph: 0, pw: 0 },
-                    preds: vec![prev],
-                    branch: None,
-                });
-                prev = g.nodes.len() - 1;
-                dims = Dims { c: dims.c, h: s1x1.h_i, w: s1x1.w_i };
-            }
-            let x = prev;
-            let tag = |lane| Some(BranchTag { group: m, lane });
-            let conv = |g: &mut NetGraph, layer: usize, pred: usize, lane: usize| {
-                g.nodes.push(GraphNode {
-                    name: format!("m{m}/conv{}", layer - base),
-                    op: GraphOp::Conv { layer },
-                    preds: vec![pred],
-                    branch: tag(lane),
-                });
-                g.nodes.len() - 1
-            };
-            // lane 0: 1x1
-            let b0 = conv(&mut g, base, x, 0);
-            // lane 1: 3x3_reduce -> 3x3
-            let r1 = conv(&mut g, base + 1, x, 1);
-            let b1 = conv(&mut g, base + 2, r1, 1);
-            // lane 2: 5x5_reduce -> 5x5
-            let r2 = conv(&mut g, base + 3, x, 2);
-            let b2 = conv(&mut g, base + 4, r2, 2);
-            // lane 3: 3x3/s1/p1 max-pool -> pool_proj
-            g.nodes.push(GraphNode {
-                name: format!("m{m}/pool"),
-                op: GraphOp::Pool { kh: 3, kw: 3, sh: 1, sw: 1, ph: 1, pw: 1 },
-                preds: vec![x],
-                branch: tag(3),
-            });
-            let p3 = g.nodes.len() - 1;
-            let b3 = conv(&mut g, base + 5, p3, 3);
-            g.nodes.push(GraphNode {
-                name: format!("m{m}/concat"),
-                op: GraphOp::Concat,
-                preds: vec![b0, b1, b2, b3],
-                branch: None,
-            });
-            prev = g.nodes.len() - 1;
-            let out_c = shapes[base].c_o
-                + shapes[base + 2].c_o
-                + shapes[base + 4].c_o
-                + shapes[base + 5].c_o;
-            dims = Dims { c: out_c, h: s1x1.h_o(), w: s1x1.w_o() };
-        }
-        Ok(g)
-    }
-
-    /// Build the canonical graph for a named net's layer table:
-    /// GoogLeNet gets the inception DAG, everything else (AlexNet, VGG,
-    /// ad-hoc test chains) lowers to a trivial chain so all nets share
-    /// one executor.
-    pub fn for_net(net: &str, shapes: &[ConvShape]) -> Result<NetGraph> {
-        if net == "googlenet" {
-            NetGraph::inception(net, shapes)
-        } else {
-            NetGraph::chain(net, shapes)
-        }
-    }
+    // NB: the `chain` / `inception` / `for_net` shape-table constructors
+    // live in `super::builder` — they are thin wrappers over
+    // [`super::GraphBuilder`], the public model-description API.
 
     /// Number of nodes.
     pub fn len(&self) -> usize {
@@ -305,8 +177,9 @@ impl NetGraph {
     /// `Input` (node 0), every conv layer used exactly once with its
     /// predecessor dims matching the table *exactly* (no channel
     /// adaptation), pool geometry validity, concat extent agreement,
-    /// no dead nodes, and branch-tag independence (a tagged node's
-    /// predecessors are untagged or share its tag).
+    /// add operand-shape identity, no dead nodes, and branch-tag
+    /// independence (a tagged node's predecessors are untagged or share
+    /// its tag).
     pub fn validate(&self, shapes: &[ConvShape]) -> Result<Vec<Dims>> {
         if self.nodes.is_empty() {
             return Err(Error::Shape(format!("net '{}' graph is empty", self.net)));
@@ -387,6 +260,28 @@ impl NetGraph {
                         h: pool_out(pd.h, *kh, *sh, *ph)?,
                         w: pool_out(pd.w, *kw, *sw, *pw)?,
                     }
+                }
+                GraphOp::Add => {
+                    if n.preds.len() < 2 {
+                        return Err(Error::Shape(format!(
+                            "{}: add node '{}' needs at least two operands, got {}",
+                            self.net,
+                            n.name,
+                            n.preds.len()
+                        )));
+                    }
+                    let first = dims[n.preds[0]];
+                    for &p in &n.preds[1..] {
+                        let pd = dims[p];
+                        if pd != first {
+                            return Err(Error::Shape(format!(
+                                "{}: add '{}' mixes shapes {}x{}x{} and {}x{}x{} \
+                                 (residual joins need identical operands)",
+                                self.net, n.name, first.c, first.h, first.w, pd.c, pd.h, pd.w
+                            )));
+                        }
+                    }
+                    first
                 }
                 GraphOp::Concat => {
                     if n.preds.is_empty() {

@@ -5,18 +5,22 @@
 //! synthetic data through the layers); shapes follow the standard Caffe
 //! deploy definitions.
 
+pub mod builder;
 pub mod graph;
 pub mod plans;
+pub mod spec;
 
+pub use builder::{model_by_name, GraphBuilder, NodeId};
 pub use graph::{pool_spec, BranchTag, Dims, GraphNode, GraphOp, NetGraph};
 pub use plans::{net_kernel, AutotuneChoice, NetPlans, PlannedLayer};
+pub use spec::Model;
 
 use crate::conv::ConvShape;
 
 /// One convolution layer of a benchmark network.
 #[derive(Clone, Debug)]
 pub struct Layer {
-    pub net: &'static str,
+    pub net: String,
     pub name: String,
     pub shape: ConvShape,
 }
@@ -24,7 +28,7 @@ pub struct Layer {
 impl Layer {
     #[allow(clippy::too_many_arguments)] // one row of the Caffe deploy table
     fn new(
-        net: &'static str,
+        net: &str,
         name: impl Into<String>,
         c_i: usize,
         h_i: usize,
@@ -34,7 +38,7 @@ impl Layer {
         pad: usize,
     ) -> Layer {
         Layer {
-            net,
+            net: net.to_string(),
             name: name.into(),
             shape: ConvShape::new(c_i, h_i, h_i, c_o, f, f, stride, pad),
         }
@@ -101,6 +105,22 @@ fn idx_in_block(i: usize) -> usize {
     }
 }
 
+/// The nine inception modules:
+/// `(name, H, C_in, [n1x1, n3x3red, n3x3, n5x5red, n5x5, pool_proj])`.
+/// Shared by the [`googlenet`] layer table and the
+/// [`builder::googlenet`] builder program — one source of truth.
+pub(crate) const INCEPTION: [(&str, usize, usize, [usize; 6]); 9] = [
+    ("3a", 28, 192, [64, 96, 128, 16, 32, 32]),
+    ("3b", 28, 256, [128, 128, 192, 32, 96, 64]),
+    ("4a", 14, 480, [192, 96, 208, 16, 48, 64]),
+    ("4b", 14, 512, [160, 112, 224, 24, 64, 64]),
+    ("4c", 14, 512, [128, 128, 256, 24, 64, 64]),
+    ("4d", 14, 512, [112, 144, 288, 32, 64, 64]),
+    ("4e", 14, 528, [256, 160, 320, 32, 128, 128]),
+    ("5a", 7, 832, [256, 160, 320, 32, 128, 128]),
+    ("5b", 7, 832, [384, 192, 384, 48, 128, 128]),
+];
+
 /// GoogLeNet (Szegedy et al. 2015) — stem convolutions plus all six
 /// convolutions of each of the nine inception modules (57 conv layers).
 pub fn googlenet() -> Vec<Layer> {
@@ -109,19 +129,7 @@ pub fn googlenet() -> Vec<Layer> {
         Layer::new("googlenet", "conv2/3x3_reduce", 64, 56, 64, 1, 1, 0),
         Layer::new("googlenet", "conv2/3x3", 64, 56, 192, 3, 1, 1),
     ];
-    // (name, H, C_in, [n1x1, n3x3red, n3x3, n5x5red, n5x5, pool_proj])
-    let inception: [(&str, usize, usize, [usize; 6]); 9] = [
-        ("3a", 28, 192, [64, 96, 128, 16, 32, 32]),
-        ("3b", 28, 256, [128, 128, 192, 32, 96, 64]),
-        ("4a", 14, 480, [192, 96, 208, 16, 48, 64]),
-        ("4b", 14, 512, [160, 112, 224, 24, 64, 64]),
-        ("4c", 14, 512, [128, 128, 256, 24, 64, 64]),
-        ("4d", 14, 512, [112, 144, 288, 32, 64, 64]),
-        ("4e", 14, 528, [256, 160, 320, 32, 128, 128]),
-        ("5a", 7, 832, [256, 160, 320, 32, 128, 128]),
-        ("5b", 7, 832, [384, 192, 384, 48, 128, 128]),
-    ];
-    for (tag, h, c_in, n) in inception {
+    for (tag, h, c_in, n) in INCEPTION {
         let mut push = |name: String, c_i: usize, c_o: usize, f: usize, s: usize, p: usize| {
             layers.push(Layer::new("googlenet", name, c_i, h, c_o, f, s, p));
         };

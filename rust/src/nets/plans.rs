@@ -6,7 +6,7 @@
 //! against retained per-layer state — and what `dconv plan-net` prints,
 //! including the uniform memory-overhead accounting.
 
-use super::Layer;
+use super::{Layer, Model};
 use crate::arch::Machine;
 use crate::conv::ConvShape;
 use crate::engine::{BackendRegistry, ConvPlan};
@@ -56,6 +56,30 @@ impl NetPlans {
     pub fn build(net: &str, backend: &str, machine: &Machine, threads: usize) -> Result<NetPlans> {
         let layers = super::by_name(net)
             .ok_or_else(|| Error::Parse(format!("unknown net '{net}' (alexnet|googlenet|vgg16)")))?;
+        Self::plan_table(net, layers, backend, machine, threads)
+    }
+
+    /// Plan every conv layer of a builder- or spec-produced [`Model`]
+    /// (the graph is validated against its shape table first). Weights
+    /// use the same deterministic [`net_kernel`] seeds as the built-in
+    /// nets, so independent references can regenerate them.
+    pub fn build_model(
+        model: &Model,
+        backend: &str,
+        machine: &Machine,
+        threads: usize,
+    ) -> Result<NetPlans> {
+        model.validate()?;
+        Self::plan_table(&model.name, model.layers(), backend, machine, threads)
+    }
+
+    fn plan_table(
+        net: &str,
+        layers: Vec<Layer>,
+        backend: &str,
+        machine: &Machine,
+        threads: usize,
+    ) -> Result<NetPlans> {
         let registry = BackendRegistry::shared();
         let mut planned = Vec::with_capacity(layers.len());
         for (i, layer) in layers.into_iter().enumerate() {
@@ -86,6 +110,28 @@ impl NetPlans {
     ) -> Result<(NetPlans, Vec<AutotuneChoice>)> {
         let layers = super::by_name(net)
             .ok_or_else(|| Error::Parse(format!("unknown net '{net}' (alexnet|googlenet|vgg16)")))?;
+        Self::autotune_table(net, layers, backend, machine, candidates)
+    }
+
+    /// [`NetPlans::build_autotuned`] for a builder- or spec-produced
+    /// [`Model`]: per-layer thread counts measured once at plan time.
+    pub fn build_model_autotuned(
+        model: &Model,
+        backend: &str,
+        machine: &Machine,
+        candidates: &[usize],
+    ) -> Result<(NetPlans, Vec<AutotuneChoice>)> {
+        model.validate()?;
+        Self::autotune_table(&model.name, model.layers(), backend, machine, candidates)
+    }
+
+    fn autotune_table(
+        net: &str,
+        layers: Vec<Layer>,
+        backend: &str,
+        machine: &Machine,
+        candidates: &[usize],
+    ) -> Result<(NetPlans, Vec<AutotuneChoice>)> {
         let mut cand: Vec<usize> = candidates.iter().copied().filter(|&t| t > 0).collect();
         cand.sort_unstable();
         cand.dedup();
@@ -135,7 +181,7 @@ impl NetPlans {
             let plan = registry.plan(backend, s, &kernel, machine, 1)?;
             planned.push(PlannedLayer {
                 backend: plan.backend(),
-                layer: Layer { net: "custom", name: format!("l{i}"), shape: s.clone() },
+                layer: Layer { net: "custom".into(), name: format!("l{i}"), shape: s.clone() },
                 threads: 1,
                 plan,
             });
@@ -195,6 +241,22 @@ mod tests {
     fn unknown_net_is_rejected() {
         assert!(NetPlans::build("resnet", "auto", &haswell(), 1).is_err());
         assert!(NetPlans::build_autotuned("resnet", "auto", &haswell(), &[1]).is_err());
+    }
+
+    #[test]
+    fn model_plans_carry_node_names_and_stay_zero_overhead() {
+        let model = crate::nets::builder::resnet_micro();
+        let plans = NetPlans::build_model(&model, "direct", &haswell(), 1).unwrap();
+        assert_eq!(plans.net, "resnet_micro");
+        assert_eq!(plans.layers.len(), 6);
+        assert_eq!(plans.layers[0].layer.name, "conv0");
+        assert_eq!(plans.layers[0].layer.net, "resnet_micro");
+        assert_eq!(plans.total_retained_bytes() + plans.total_workspace_bytes(), 0);
+
+        let (tuned, report) =
+            NetPlans::build_model_autotuned(&model, "direct", &haswell(), &[1]).unwrap();
+        assert_eq!(tuned.layers.len(), report.len());
+        assert!(tuned.layers.iter().all(|l| l.threads == 1));
     }
 
     #[test]

@@ -1,0 +1,419 @@
+//! JSON model specs — the serialized form of the model-description API.
+//!
+//! A [`Model`] is a validated [`NetGraph`] plus its conv-shape table:
+//! everything [`super::NetPlans::build_model`] needs to plan a network
+//! and [`crate::engine::NetRunner`] needs to execute it allocation-free.
+//! Models come from three places: [`super::GraphBuilder`] programs, the
+//! built-in paper nets ([`super::builder::alexnet`] and friends), and
+//! JSON files parsed here — so any CNN can be described in a text file
+//! and served without touching library code
+//! (`dconv serve --model my_net.json`).
+//!
+//! # Schema
+//!
+//! ```json
+//! {
+//!   "name": "resnet_micro",
+//!   "nodes": [
+//!     {"op": "input",  "name": "image", "c": 3, "h": 32, "w": 32},
+//!     {"op": "conv",   "name": "conv0", "pred": "image",
+//!      "c_o": 16, "k": 3, "stride": 1, "pad": 1},
+//!     {"op": "pool",   "name": "pool0", "pred": "conv0", "k": 2},
+//!     {"op": "concat", "name": "cat",   "preds": ["a", "b"]},
+//!     {"op": "add",    "name": "join",  "preds": ["a", "b"]}
+//!   ]
+//! }
+//! ```
+//!
+//! * Nodes appear in topological order; predecessors are referenced by
+//!   node name; the **last node is the network output**.
+//! * `conv` — `c_o` output channels; kernel `k` (or `kh`/`kw` for
+//!   rectangular); `stride` (default 1) and `pad` (default 0) are
+//!   symmetric. Input channels and extents are inferred from `pred`.
+//!   Conv layers are numbered in node order; that numbering is the
+//!   plan-table index (and the deterministic weight seed).
+//! * `pool` — max-pool; kernel `k` (or `kh`/`kw`), stride `s` (or
+//!   `sh`/`sw`, default = kernel), pad `p` (or `ph`/`pw`, default 0).
+//! * `concat` / `add` — two or more `preds`; concat joins channels of
+//!   equal-extent maps, add sums identically shaped maps (the residual
+//!   join).
+//! * Any node may carry `"group"` and `"lane"` (together) to tag it as
+//!   part of a parallel branch lane — see [`super::BranchTag`].
+//!
+//! The schema is **strict**: unknown fields on a node are errors (a
+//! typoed `"s"` on a conv — which spells `"stride"` — must not silently
+//! default), and parsing goes through [`super::GraphBuilder`], so every
+//! structural error a builder program would hit (shape mismatch,
+//! dangling pred, arity, lane crossing) is reported for JSON input too.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::conv::ConvShape;
+use crate::json::Json;
+use crate::{Error, Result};
+
+use super::builder::GraphBuilder;
+use super::graph::{Dims, GraphOp, NetGraph};
+use super::Layer;
+
+/// A complete model description: the dataflow graph and the conv-layer
+/// shape table its `Conv` nodes index. Built by [`GraphBuilder::build`]
+/// or parsed from JSON ([`Model::from_json`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Model {
+    pub name: String,
+    pub graph: NetGraph,
+    pub shapes: Vec<ConvShape>,
+}
+
+impl Model {
+    /// Re-check the graph against the shape table and return every
+    /// node's inferred output dims (see [`NetGraph::validate`]).
+    pub fn validate(&self) -> Result<Vec<Dims>> {
+        self.graph.validate(&self.shapes)
+    }
+
+    /// The conv layers as a [`Layer`] table (plan-table order), names
+    /// taken from the graph's conv nodes.
+    pub fn layers(&self) -> Vec<Layer> {
+        let mut names = vec![String::new(); self.shapes.len()];
+        for n in &self.graph.nodes {
+            if let GraphOp::Conv { layer } = n.op {
+                if let Some(slot) = names.get_mut(layer) {
+                    slot.clone_from(&n.name);
+                }
+            }
+        }
+        self.shapes
+            .iter()
+            .zip(names)
+            .map(|(s, name)| Layer { net: self.name.clone(), name, shape: s.clone() })
+            .collect()
+    }
+
+    /// Parse a JSON model spec (schema in the module docs). All graph
+    /// construction runs through [`GraphBuilder`], so structural errors
+    /// surface with the same messages as builder programs.
+    pub fn from_json(text: &str) -> Result<Model> {
+        let root = Json::parse(text)?;
+        let name = root
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Parse("model spec: missing string field 'name'".into()))?;
+        let nodes = root
+            .get("nodes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Parse("model spec: missing array field 'nodes'".into()))?;
+        if nodes.is_empty() {
+            return Err(Error::Parse("model spec: 'nodes' is empty".into()));
+        }
+        let mut b = GraphBuilder::new(name);
+        let mut ids = BTreeMap::new();
+        let mut last = None;
+        for spec in nodes {
+            let node_name = field_str(spec, "name")?;
+            let op = field_str(spec, "op")?;
+            check_keys(spec, node_name, op)?;
+            set_lane(&mut b, spec, node_name)?;
+            let id = match op {
+                "input" => b.input_named(
+                    node_name,
+                    field_usize(spec, node_name, "c")?,
+                    field_usize(spec, node_name, "h")?,
+                    field_usize(spec, node_name, "w")?,
+                )?,
+                "conv" => {
+                    let pred = lookup(&ids, spec, node_name)?;
+                    let (kh, kw) = kernel_pair(spec, node_name, "k", "kh", "kw", None)?;
+                    b.conv_rect(
+                        node_name,
+                        pred,
+                        field_usize(spec, node_name, "c_o")?,
+                        kh,
+                        kw,
+                        opt_usize(spec, node_name, "stride")?.unwrap_or(1),
+                        opt_usize(spec, node_name, "pad")?.unwrap_or(0),
+                    )?
+                }
+                "pool" => {
+                    let pred = lookup(&ids, spec, node_name)?;
+                    let (kh, kw) = kernel_pair(spec, node_name, "k", "kh", "kw", None)?;
+                    let (sh, sw) = kernel_pair(spec, node_name, "s", "sh", "sw", Some((kh, kw)))?;
+                    let (ph, pw) = kernel_pair(spec, node_name, "p", "ph", "pw", Some((0, 0)))?;
+                    b.pool_geom(node_name, pred, kh, kw, sh, sw, ph, pw)?
+                }
+                "concat" => b.concat(node_name, &pred_list(&ids, spec, node_name)?)?,
+                "add" => b.add(node_name, &pred_list(&ids, spec, node_name)?)?,
+                other => {
+                    return Err(Error::Parse(format!(
+                        "model spec node '{node_name}': unknown op '{other}' \
+                         (input|conv|pool|concat|add)"
+                    )));
+                }
+            };
+            ids.insert(node_name.to_string(), id);
+            last = Some(id);
+        }
+        b.build(last.expect("nodes checked non-empty"))
+    }
+
+    /// Load a model spec from a JSON file.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Model> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Parse(format!("cannot read model spec {}: {e}", path.display())))?;
+        Model::from_json(&text)
+    }
+
+    /// Serialize back to the JSON schema ([`Model::from_json`] inverts
+    /// this; conv layers are renumbered in node order, which is the
+    /// order they already hold in any builder-produced graph).
+    pub fn to_json(&self) -> String {
+        let num = |v: usize| Json::Num(v as f64);
+        let nodes = self
+            .graph
+            .nodes
+            .iter()
+            .map(|n| {
+                let mut o = BTreeMap::new();
+                o.insert("name".into(), Json::Str(n.name.clone()));
+                if let Some(tag) = n.branch {
+                    o.insert("group".into(), num(tag.group));
+                    o.insert("lane".into(), num(tag.lane));
+                }
+                let pred_name = |i: usize| Json::Str(self.graph.nodes[i].name.clone());
+                match &n.op {
+                    GraphOp::Input { c, h, w } => {
+                        o.insert("op".into(), Json::Str("input".into()));
+                        o.insert("c".into(), num(*c));
+                        o.insert("h".into(), num(*h));
+                        o.insert("w".into(), num(*w));
+                    }
+                    GraphOp::Conv { layer } => {
+                        let s = &self.shapes[*layer];
+                        o.insert("op".into(), Json::Str("conv".into()));
+                        o.insert("pred".into(), pred_name(n.preds[0]));
+                        o.insert("c_o".into(), num(s.c_o));
+                        o.insert("kh".into(), num(s.h_f));
+                        o.insert("kw".into(), num(s.w_f));
+                        o.insert("stride".into(), num(s.stride));
+                        o.insert("pad".into(), num(s.pad));
+                    }
+                    GraphOp::Pool { kh, kw, sh, sw, ph, pw } => {
+                        o.insert("op".into(), Json::Str("pool".into()));
+                        o.insert("pred".into(), pred_name(n.preds[0]));
+                        o.insert("kh".into(), num(*kh));
+                        o.insert("kw".into(), num(*kw));
+                        o.insert("sh".into(), num(*sh));
+                        o.insert("sw".into(), num(*sw));
+                        o.insert("ph".into(), num(*ph));
+                        o.insert("pw".into(), num(*pw));
+                    }
+                    GraphOp::Concat | GraphOp::Add => {
+                        let kind = if matches!(n.op, GraphOp::Concat) { "concat" } else { "add" };
+                        o.insert("op".into(), Json::Str(kind.into()));
+                        o.insert(
+                            "preds".into(),
+                            Json::Arr(n.preds.iter().map(|&p| pred_name(p)).collect()),
+                        );
+                    }
+                }
+                Json::Obj(o)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("name".into(), Json::Str(self.name.clone()));
+        root.insert("nodes".into(), Json::Arr(nodes));
+        Json::Obj(root).to_string_pretty()
+    }
+}
+
+/// Reject unknown fields: the schema is strict, so a mis-keyed or
+/// typoed field (e.g. `"s"` on a conv, which spells `"stride"`) is an
+/// error instead of a silently dropped default.
+fn check_keys(spec: &Json, node: &str, op: &str) -> Result<()> {
+    const COMMON: [&str; 4] = ["op", "name", "group", "lane"];
+    let allowed: &[&str] = match op {
+        "input" => &["c", "h", "w"],
+        "conv" => &["pred", "c_o", "k", "kh", "kw", "stride", "pad"],
+        "pool" => &["pred", "k", "kh", "kw", "s", "sh", "sw", "p", "ph", "pw"],
+        "concat" | "add" => &["preds"],
+        _ => &[], // unknown op is reported by the caller's match
+    };
+    let obj = spec
+        .as_obj()
+        .ok_or_else(|| Error::Parse(format!("model spec node '{node}': not an object")))?;
+    for key in obj.keys() {
+        if !COMMON.contains(&key.as_str()) && !allowed.contains(&key.as_str()) {
+            return Err(Error::Parse(format!(
+                "model spec node '{node}' (op '{op}'): unknown field '{key}' \
+                 (allowed: {COMMON:?} + {allowed:?})"
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn field_str<'j>(spec: &'j Json, key: &str) -> Result<&'j str> {
+    spec.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Parse(format!("model spec node: missing string field '{key}'")))
+}
+
+fn field_usize(spec: &Json, node: &str, key: &str) -> Result<usize> {
+    opt_usize(spec, node, key)?.ok_or_else(|| {
+        Error::Parse(format!("model spec node '{node}': missing numeric field '{key}'"))
+    })
+}
+
+fn opt_usize(spec: &Json, node: &str, key: &str) -> Result<Option<usize>> {
+    match spec.get(key) {
+        None => Ok(None),
+        Some(v) => v.as_usize().map(Some).ok_or_else(|| {
+            Error::Parse(format!("model spec node '{node}': field '{key}' must be a number"))
+        }),
+    }
+}
+
+/// Resolve `k`-style geometry: either the square shorthand `short` or
+/// the `kh`/`kw` pair (both present); `default` applies when neither
+/// form is given.
+fn kernel_pair(
+    spec: &Json,
+    node: &str,
+    short: &str,
+    h_key: &str,
+    w_key: &str,
+    default: Option<(usize, usize)>,
+) -> Result<(usize, usize)> {
+    if let Some(k) = opt_usize(spec, node, short)? {
+        return Ok((k, k));
+    }
+    match (opt_usize(spec, node, h_key)?, opt_usize(spec, node, w_key)?) {
+        (Some(h), Some(w)) => Ok((h, w)),
+        (None, None) => default.ok_or_else(|| {
+            Error::Parse(format!(
+                "model spec node '{node}': needs '{short}' or '{h_key}'+'{w_key}'"
+            ))
+        }),
+        _ => Err(Error::Parse(format!(
+            "model spec node '{node}': '{h_key}' and '{w_key}' must appear together"
+        ))),
+    }
+}
+
+fn set_lane(b: &mut GraphBuilder, spec: &Json, node: &str) -> Result<()> {
+    match (opt_usize(spec, node, "group")?, opt_usize(spec, node, "lane")?) {
+        (Some(g), Some(l)) => {
+            b.lane(g, l);
+            Ok(())
+        }
+        (None, None) => {
+            b.backbone();
+            Ok(())
+        }
+        _ => Err(Error::Parse(format!(
+            "model spec node '{node}': 'group' and 'lane' must appear together"
+        ))),
+    }
+}
+
+fn lookup(
+    ids: &BTreeMap<String, super::builder::NodeId>,
+    spec: &Json,
+    node: &str,
+) -> Result<super::builder::NodeId> {
+    let pred = spec.get("pred").and_then(Json::as_str).ok_or_else(|| {
+        Error::Parse(format!("model spec node '{node}': missing string field 'pred'"))
+    })?;
+    ids.get(pred).copied().ok_or_else(|| {
+        Error::Parse(format!(
+            "model spec node '{node}': predecessor '{pred}' is not defined above it"
+        ))
+    })
+}
+
+fn pred_list(
+    ids: &BTreeMap<String, super::builder::NodeId>,
+    spec: &Json,
+    node: &str,
+) -> Result<Vec<super::builder::NodeId>> {
+    let arr = spec.get("preds").and_then(Json::as_arr).ok_or_else(|| {
+        Error::Parse(format!("model spec node '{node}': missing array field 'preds'"))
+    })?;
+    arr.iter()
+        .map(|p| {
+            let name = p.as_str().ok_or_else(|| {
+                Error::Parse(format!("model spec node '{node}': 'preds' entries must be strings"))
+            })?;
+            ids.get(name).copied().ok_or_else(|| {
+                Error::Parse(format!(
+                    "model spec node '{node}': predecessor '{name}' is not defined above it"
+                ))
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::builder;
+
+    const MINI: &str = r#"{
+        "name": "mini",
+        "nodes": [
+            {"op": "input", "name": "image", "c": 4, "h": 8, "w": 8},
+            {"op": "conv", "name": "c0", "pred": "image", "c_o": 8, "k": 3, "pad": 1},
+            {"op": "conv", "name": "c1", "pred": "c0", "c_o": 8, "k": 3, "pad": 1},
+            {"op": "add", "name": "join", "preds": ["c0", "c1"]},
+            {"op": "pool", "name": "down", "pred": "join", "k": 2, "s": 2}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_and_infers_shapes() {
+        let m = Model::from_json(MINI).unwrap();
+        assert_eq!(m.name, "mini");
+        assert_eq!(m.shapes.len(), 2);
+        assert_eq!(m.shapes[0], ConvShape::new(4, 8, 8, 8, 3, 3, 1, 1));
+        let dims = m.validate().unwrap();
+        let out = dims[m.graph.output()];
+        assert_eq!((out.c, out.h, out.w), (8, 4, 4));
+        let layers = m.layers();
+        assert_eq!(layers[1].name, "c1");
+        assert_eq!(layers[0].net, "mini");
+    }
+
+    #[test]
+    fn json_round_trip_is_identity() {
+        let m = Model::from_json(MINI).unwrap();
+        let again = Model::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, again);
+    }
+
+    #[test]
+    fn paper_net_round_trips_with_lanes() {
+        let m = builder::googlenet();
+        let again = Model::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, again, "googlenet spec must round-trip including branch tags");
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(Model::from_json("{}").is_err(), "missing name/nodes");
+        assert!(Model::from_json(r#"{"name": "x", "nodes": []}"#).is_err(), "no nodes");
+        let bad_pred = MINI.replace("\"pred\": \"c0\"", "\"pred\": \"nope\"");
+        assert!(Model::from_json(&bad_pred).is_err(), "dangling pred name");
+        let bad_op = MINI.replace("\"op\": \"pool\"", "\"op\": \"relu\"");
+        assert!(Model::from_json(&bad_op).is_err(), "unknown op");
+        let half_lane = MINI.replace(
+            r#"{"op": "input", "name": "image", "c": 4"#,
+            r#"{"op": "input", "name": "image", "group": 0, "c": 4"#,
+        );
+        assert!(Model::from_json(&half_lane).is_err(), "group without lane");
+        let typo = MINI.replace("\"pad\": 1", "\"pad\": 1, \"s\": 1");
+        assert!(Model::from_json(&typo).is_err(), "strict schema: 's' on a conv is unknown");
+    }
+}

@@ -125,21 +125,6 @@ pub fn winograd_workspace_len(shape: &ConvShape) -> usize {
     shape.c_i * 16
 }
 
-/// Winograd convolution. Input `[C_i][H_i][W_i]`, kernel
-/// `[C_o][C_i][3][3]`, stride 1, arbitrary pad; output `[C_o][H_o][W_o]`.
-#[deprecated(
-    note = "plan through engine::BackendRegistry (backend \"winograd\"); this \
-            wrapper re-transforms the weights per call"
-)]
-pub fn conv_winograd(input: &Tensor, kernel: &Tensor, shape: &ConvShape) -> Result<Tensor> {
-    crate::conv::naive::check_shapes(input, kernel, shape)?;
-    let u = transform_kernels(kernel, shape)?;
-    let mut out = Tensor::zeros(&[shape.c_o, shape.h_o(), shape.w_o()]);
-    let mut v_all = vec![0.0f32; winograd_workspace_len(shape)];
-    conv_winograd_into(input.data(), &u, shape, out.data_mut(), &mut v_all)?;
-    Ok(out)
-}
-
 /// Allocation-free Winograd core over pre-transformed weights `u`
 /// (from [`transform_kernels`]): writes the flat `[C_o][H_o][W_o]`
 /// result into `od` (fully overwritten) using the caller-owned `v_all`
@@ -252,16 +237,26 @@ pub fn conv_winograd_into(
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // conv_winograd stays covered until the wrapper is removed
 mod tests {
     use super::*;
     use crate::conv::conv_naive;
+
+    /// Transform weights then run the `_into` core (what the removed
+    /// `conv_winograd` wrapper did; production plans through the
+    /// engine's `winograd` backend, which retains the transform).
+    fn winograd_oneshot(input: &Tensor, kernel: &Tensor, s: &ConvShape) -> Result<Tensor> {
+        let u = transform_kernels(kernel, s)?;
+        let mut out = Tensor::zeros(&[s.c_o, s.h_o(), s.w_o()]);
+        let mut v_all = vec![0.0f32; winograd_workspace_len(s)];
+        conv_winograd_into(input.data(), &u, s, out.data_mut(), &mut v_all)?;
+        Ok(out)
+    }
 
     fn check(s: &ConvShape, seed: u64) {
         let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], seed);
         let kernel = Tensor::random(&[s.c_o, s.c_i, 3, 3], seed + 1);
         let want = conv_naive(&input, &kernel, s).unwrap();
-        let got = conv_winograd(&input, &kernel, s).unwrap();
+        let got = winograd_oneshot(&input, &kernel, s).unwrap();
         assert!(
             got.allclose(&want, 1e-3, 1e-3),
             "mismatch {:?}: {}",
@@ -293,7 +288,7 @@ mod tests {
         let mut k = vec![0.0f32; 9];
         k[4] = 1.0; // center
         let kernel = Tensor::from_vec(&[1, 1, 3, 3], k).unwrap();
-        let got = conv_winograd(&input, &kernel, &s).unwrap();
+        let got = winograd_oneshot(&input, &kernel, &s).unwrap();
         assert!(got.allclose(&input, 1e-4, 1e-4));
     }
 
@@ -302,7 +297,7 @@ mod tests {
         let s = ConvShape::new(1, 8, 8, 1, 5, 5, 1, 0);
         let input = Tensor::zeros(&[1, 8, 8]);
         let kernel = Tensor::zeros(&[1, 1, 5, 5]);
-        assert!(conv_winograd(&input, &kernel, &s).is_err());
+        assert!(winograd_oneshot(&input, &kernel, &s).is_err());
         assert!(!winograd_applicable(&s));
     }
 

@@ -3,27 +3,67 @@
 //! blocked layout without repacking, and the simulator must stay
 //! consistent with the crate's structural ground truth.
 //!
-//! These tests intentionally keep exercising the deprecated free-function
-//! wrappers (legacy regression coverage); the plan/execute API has its
-//! own cross-backend suite in `conformance.rs`.
-
-#![allow(deprecated)]
+//! Each algorithm is exercised through its non-deprecated core
+//! (`conv_direct_blocked`, the `*_into` slice kernels, `FftConvPlan`)
+//! via small one-shot helpers below; the plan/execute API has its own
+//! cross-backend suite in `conformance.rs`.
 
 use dconv::arch::{haswell, host};
 use dconv::conv::reorder::kernel_to_hwio;
 use dconv::conv::{
-    conv_direct, conv_direct_blocked, conv_naive, conv_reorder, select_params, BlockParams,
-    ConvShape,
+    conv_direct_blocked, conv_naive, conv_reorder_into, select_params, BlockParams, ConvShape,
 };
-use dconv::fftconv::conv_fft;
+use dconv::fftconv::FftConvPlan;
 use dconv::layout::{
     from_blocked_io, nchw_to_nhwc, nhwc_to_nchw, to_blocked_io, to_blocked_kernel,
 };
-use dconv::lowering::{conv_im2col, conv_mec};
+use dconv::lowering::{conv_im2col_into, conv_mec};
 use dconv::nets;
 use dconv::sim::{estimate, Algo};
 use dconv::tensor::Tensor;
-use dconv::winograd::{conv_winograd, winograd_applicable};
+use dconv::winograd::{
+    conv_winograd_into, transform_kernels, winograd_applicable, winograd_workspace_len,
+};
+
+/// One-shot §4 pack -> blocked direct conv -> unpack with explicit
+/// `BlockParams`.
+fn conv_direct(
+    input: &Tensor,
+    kernel: &Tensor,
+    s: &ConvShape,
+    bp: BlockParams,
+    threads: usize,
+) -> Tensor {
+    let bi = to_blocked_io(input, bp.c_ib).unwrap();
+    let bk = to_blocked_kernel(kernel, bp.c_ob, bp.c_ib).unwrap();
+    let bo = conv_direct_blocked(&bi, &bk, s, bp, threads).unwrap();
+    from_blocked_io(&bo).unwrap()
+}
+
+/// Channel-last one-shot over the Algorithm-2 `_into` core.
+fn conv_reorder(nhwc: &Tensor, hwio: &Tensor, s: &ConvShape) -> Tensor {
+    let mut out = Tensor::zeros(&[s.h_o(), s.w_o(), s.c_o]);
+    conv_reorder_into(nhwc.data(), hwio.data(), s, out.data_mut()).unwrap();
+    out
+}
+
+/// One-shot im2col + SGEMM over a fresh lowering workspace.
+fn conv_im2col(input: &Tensor, kernel: &Tensor, s: &ConvShape) -> Tensor {
+    let (h_o, w_o) = (s.h_o(), s.w_o());
+    let mut ws = vec![0.0f32; s.c_i * s.h_f * s.w_f * h_o * w_o];
+    let mut out = Tensor::zeros(&[s.c_o, h_o, w_o]);
+    conv_im2col_into(input.data(), kernel.data(), s, 1, out.data_mut(), &mut ws).unwrap();
+    out
+}
+
+/// One-shot Winograd F(2x2,3x3) over freshly transformed weights.
+fn conv_winograd(input: &Tensor, kernel: &Tensor, s: &ConvShape) -> Tensor {
+    let u = transform_kernels(kernel, s).unwrap();
+    let mut out = Tensor::zeros(&[s.c_o, s.h_o(), s.w_o()]);
+    let mut v = vec![0.0f32; winograd_workspace_len(s)];
+    conv_winograd_into(input.data(), &u, s, out.data_mut(), &mut v).unwrap();
+    out
+}
 
 /// Every implementation on one battery of layers.
 #[test]
@@ -43,27 +83,28 @@ fn all_algorithms_agree() {
         let want = conv_naive(&input, &kernel, s).unwrap();
 
         let bp = select_params(&m, s);
-        let direct = conv_direct(&input, &kernel, s, bp, 2).unwrap();
+        let direct = conv_direct(&input, &kernel, s, bp, 2);
         assert!(direct.allclose(&want, 1e-3, 1e-4), "direct {s:?}");
 
-        let reord = nhwc_to_nchw(
-            &conv_reorder(&nchw_to_nhwc(&input).unwrap(), &kernel_to_hwio(&kernel).unwrap(), s)
-                .unwrap(),
-        )
+        let reord = nhwc_to_nchw(&conv_reorder(
+            &nchw_to_nhwc(&input).unwrap(),
+            &kernel_to_hwio(&kernel).unwrap(),
+            s,
+        ))
         .unwrap();
         assert!(reord.allclose(&want, 1e-3, 1e-4), "reorder {s:?}");
 
-        let im2col = conv_im2col(&input, &kernel, s).unwrap();
+        let im2col = conv_im2col(&input, &kernel, s);
         assert!(im2col.allclose(&want, 1e-3, 1e-4), "im2col {s:?}");
 
         let mec = conv_mec(&input, &kernel, s).unwrap();
         assert!(mec.allclose(&want, 1e-3, 1e-4), "mec {s:?}");
 
-        let fft = conv_fft(&input, &kernel, s).unwrap();
+        let fft = FftConvPlan::new(&kernel, s).unwrap().run(&input).unwrap();
         assert!(fft.allclose(&want, 1e-2, 1e-2), "fft {s:?}");
 
         if winograd_applicable(s) {
-            let wino = conv_winograd(&input, &kernel, s).unwrap();
+            let wino = conv_winograd(&input, &kernel, s);
             assert!(wino.allclose(&want, 1e-2, 1e-2), "winograd {s:?}");
         }
     }
@@ -125,7 +166,7 @@ fn selected_params_run_on_downscaled_paper_layers() {
         let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 3);
         let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 4);
         let want = conv_naive(&input, &kernel, &s).unwrap();
-        let got = conv_direct(&input, &kernel, &s, bp, 1).unwrap();
+        let got = conv_direct(&input, &kernel, &s, bp, 1);
         assert!(got.allclose(&want, 1e-3, 1e-3), "{} ({s:?}, {bp:?})", l.name);
     }
 }
@@ -175,9 +216,9 @@ fn threading_is_bitwise_deterministic() {
     let bp = BlockParams::new(8, 4, 4);
     let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 21);
     let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 22);
-    let t1 = conv_direct(&input, &kernel, &s, bp, 1).unwrap();
+    let t1 = conv_direct(&input, &kernel, &s, bp, 1);
     for p in [2, 3, 4, 8] {
-        let tp = conv_direct(&input, &kernel, &s, bp, p).unwrap();
+        let tp = conv_direct(&input, &kernel, &s, bp, p);
         assert_eq!(t1, tp, "threads={p} must be bitwise identical");
     }
 }

@@ -3,10 +3,8 @@
 //! generate hundreds of cases per property — same idea, reproducible
 //! seeds printed on failure).
 
-#![allow(deprecated)] // legacy wrappers stay property-tested until removed
-
 use dconv::arch::haswell;
-use dconv::conv::{conv_direct, conv_naive, BlockParams, ConvShape};
+use dconv::conv::{conv_direct_blocked, conv_naive, BlockParams, ConvShape};
 use dconv::coordinator::{Batcher, BatcherConfig};
 use dconv::engine::{pool_nchw, NetRunner};
 use dconv::gemm::{sgemm, sgemm_naive};
@@ -14,6 +12,22 @@ use dconv::json::Json;
 use dconv::layout::{from_blocked_io, from_blocked_kernel, to_blocked_io, to_blocked_kernel};
 use dconv::nets::{BranchTag, GraphNode, GraphOp, NetGraph, NetPlans};
 use dconv::tensor::{Tensor, XorShiftRng};
+
+/// One-shot §4 pack -> blocked direct conv -> unpack with explicit
+/// `BlockParams` (the raw Algorithm-3 kernel under property test; the
+/// engine's `direct` backend is the production entry point).
+fn conv_direct(
+    input: &Tensor,
+    kernel: &Tensor,
+    s: &ConvShape,
+    bp: BlockParams,
+    threads: usize,
+) -> dconv::Result<Tensor> {
+    let bi = to_blocked_io(input, bp.c_ib)?;
+    let bk = to_blocked_kernel(kernel, bp.c_ob, bp.c_ib)?;
+    let bo = conv_direct_blocked(&bi, &bk, s, bp, threads)?;
+    from_blocked_io(&bo)
+}
 
 fn random_shape(rng: &mut XorShiftRng) -> (ConvShape, BlockParams) {
     // channels constrained so block params can divide them

@@ -1,6 +1,7 @@
 #!/usr/bin/env python3
 """Generate rust/tests/fixtures/net_golden.json — the golden-value
-fixtures for `cargo test --test net_golden`.
+fixtures for `cargo test --test net_golden` and (the `_i8` entries)
+`cargo test --test quant`.
 
 This is an INDEPENDENT f64/NumPy implementation of the Rust graph
 executor's semantics:
@@ -16,8 +17,19 @@ executor's semantics:
   joins (mirroring ``nets::builder::resnet_micro`` /
   ``examples/models/resnet_micro.json``).
 
-The Rust test compares with relative tolerances that absorb the
-f32-vs-f64 accumulation drift. Regenerate with:
+The f32 entries are compared with relative tolerances that absorb the
+f32-vs-f64 accumulation drift.
+
+The ``alexnet_i8`` / ``resnet_micro_i8`` entries pin the **quantized**
+executor (``rust/src/quant``) to *exact integers*: this script picks
+per-node activation params (min/max over its own f64 forward), commits
+them to the fixture, and runs the int8 program — i32 accumulation of
+``(x_q - zp) * w_q``, per-output-channel f64 requantize multipliers,
+round-half-away-from-zero — exactly as documented in the ``quant``
+module. The Rust side loads the same params
+(``QuantNet::with_node_params``) and must reproduce every output byte.
+
+Regenerate with:
 
     python3 python/golden_gen.py
 """
@@ -207,6 +219,210 @@ def run_inception(layers, ks, x):
     return x
 
 
+# --- int8 reference (mirrors rust/src/quant bit-exactly) --------------
+
+Q_MIN, Q_MAX = -127, 127
+
+
+def round_half_away(x):
+    """f64 round-half-away-from-zero == Rust's f64::round, bit-exactly.
+
+    floor(x + 0.5) mis-rounds values one ulp below .5, and even
+    ``x - floor(x)`` is NOT exact (e.g. x = -0.49999999999999994 has
+    x - floor(x) round to exactly 0.5). The comparisons below ARE
+    exact: for integer f with |f| < 2^52, ``f + 0.5`` and ``c - 0.5``
+    are exactly representable, so ``x >= f + 0.5`` decides the true
+    fraction-vs-half ordering with no intermediate rounding.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    f = np.floor(x)
+    c = np.ceil(x)
+    pos = np.where(x >= f + 0.5, f + 1.0, f)   # x >= 0: away == up on ties
+    neg = np.where(x <= c - 0.5, c - 1.0, c)   # x <  0: away == down on ties
+    return np.where(x >= 0.0, pos, neg)
+
+
+def quantize(x, scale, zp):
+    """clamp(round(x / s) + zp) in f64, to the [-127, 127] budget."""
+    q = round_half_away(np.asarray(x, dtype=np.float64) / np.float64(scale)) + zp
+    return np.clip(q, Q_MIN, Q_MAX).astype(np.int64)
+
+
+def requantize(acc, m, zp_out):
+    """clamp(round(acc * m) + zp_out) — acc integer, m f64 multiplier."""
+    q = round_half_away(np.asarray(acc, dtype=np.float64) * np.float64(m)) + zp_out
+    return np.clip(q, Q_MIN, Q_MAX).astype(np.int64)
+
+
+def act_params(x):
+    """Per-tensor affine params over an f64 activation map, f32 scale
+    (these are *prescribed* to Rust through the fixture, so only the
+    f32 representability matters, not the derivation)."""
+    mn = min(float(x.min()), 0.0)
+    mx = max(float(x.max()), 0.0)
+    scale = np.float32(max(mx - mn, 1e-30) / (Q_MAX - Q_MIN))
+    zp = int(np.clip(round_half_away(Q_MIN - mn / np.float64(scale)), Q_MIN, Q_MAX))
+    return float(scale), zp
+
+
+def weight_scales(k):
+    """Symmetric per-output-channel scales, f32 arithmetic exactly as
+    ``quant::per_channel_weight_scales``: max|W_j| / 127 in f32."""
+    maxabs = np.abs(k).reshape(k.shape[0], -1).max(axis=1).astype(np.float32)
+    return (np.maximum(maxabs, np.float32(1e-30)) / np.float32(127.0)).astype(np.float32)
+
+
+def quantize_weights(k):
+    """Per-channel symmetric int8 weights + their f32 scales."""
+    s = weight_scales(k)
+    wq = np.empty(k.shape, dtype=np.int64)
+    for j in range(k.shape[0]):
+        wq[j] = np.clip(round_half_away(k[j] / np.float64(s[j])), Q_MIN, Q_MAX)
+    return wq, s
+
+
+def conv_q(xq, zp_in, wq, stride, pad):
+    """i32 accumulator of sum((x_q - zp) * w_q); zero padding == zp."""
+    xc = (xq - zp_in).astype(np.int64)
+    c_i, h, w = xc.shape
+    c_o, _, f_h, f_w = wq.shape
+    xp = np.pad(xc, ((0, 0), (pad, pad), (pad, pad)))
+    h_o = (h + 2 * pad - f_h) // stride + 1
+    w_o = (w + 2 * pad - f_w) // stride + 1
+    cols = np.empty((c_i * f_h * f_w, h_o * w_o), dtype=np.int64)
+    r = 0
+    for c in range(c_i):
+        for dy in range(f_h):
+            for dx in range(f_w):
+                cols[r] = xp[c, dy:dy + h_o * stride:stride,
+                             dx:dx + w_o * stride:stride].ravel()
+                r += 1
+    return (wq.reshape(c_o, -1) @ cols).reshape(c_o, h_o, w_o)
+
+
+def conv_node(xq, in_p, out_p, k_f32, stride, pad):
+    """One quantized conv edge: quantize weights, accumulate, requantize
+    with m_j = f64(s_in) * f64(s_wj) / f64(s_out) per output channel."""
+    wq, ws = quantize_weights(k_f32)
+    acc = conv_q(xq, in_p[1], wq, stride, pad)
+    out = np.empty(acc.shape, dtype=np.int64)
+    for j in range(acc.shape[0]):
+        m = np.float64(np.float32(in_p[0])) * np.float64(ws[j]) / np.float64(np.float32(out_p[0]))
+        out[j] = requantize(acc[j], m, out_p[1])
+    return out
+
+
+def requant_edge(xq, src_p, dst_p):
+    """Requantize whole map from src params to dst params."""
+    m = np.float64(np.float32(src_p[0])) / np.float64(np.float32(dst_p[0]))
+    return requantize(xq - src_p[1], m, dst_p[1])
+
+
+def max_pool_q(xq, src_p, dst_p, kh, kw, sh, sw, ph, pw):
+    """Integer max over the window (padding never wins), then requant."""
+    c, h, w = xq.shape
+    xp = np.pad(xq, ((0, 0), (ph, ph), (pw, pw)), constant_values=-(10 ** 9))
+    h_o = (h + 2 * ph - kh) // sh + 1
+    w_o = (w + 2 * pw - kw) // sw + 1
+    out = np.full((c, h_o, w_o), -(10 ** 9), dtype=np.int64)
+    for dy in range(kh):
+        for dx in range(kw):
+            out = np.maximum(out, xp[:, dy:dy + h_o * sh:sh, dx:dx + w_o * sw:sw])
+    return requant_edge(out, src_p, dst_p)
+
+
+def add_accumulate(dst, xq, src_p, dst_p):
+    """Later residual operands: saturating add of centered requants."""
+    q = requant_edge(xq, src_p, dst_p)
+    return np.clip(dst + q - dst_p[1], Q_MIN, Q_MAX)
+
+
+def golden_i8(net, layers, params, node_q, out_node):
+    """Package the i8 fixture entry: prescribed per-node params plus the
+    exact integer outputs of node ``out_node``."""
+    del layers
+    out = node_q[out_node]
+    flat = out.ravel()
+    entry = {
+        "node_params": [[float(s), int(z)] for (s, z) in params],
+        "shape": list(out.shape),
+        "sum_q": int(flat.sum()),
+        "abs_sum_q": int(np.abs(flat).sum()),
+        "samples": [[int(i), int(flat[i])] for i in sample_indices(flat.size)],
+    }
+    print(f"  {net}: i8 shape {out.shape}, sum_q {entry['sum_q']}, "
+          f"abs_sum_q {entry['abs_sum_q']}", flush=True)
+    return entry
+
+
+def alexnet_i8():
+    """AlexNet in int8, following the builder graph node order:
+    input, conv1, pool1, conv2, pool2, conv3, conv4, conv5."""
+    print("alexnet_i8:", flush=True)
+    layers = alexnet()
+    ks = kernels_for(layers)
+    x = tensor_random((3, 227, 227), INPUT_SEED)
+
+    # f64 reference forward per node, for calibration.
+    f = [x]
+    f.append(conv(f[0], ks[0], 4, 0))                    # conv1
+    f.append(max_pool(f[1], 3, 3, 2, 2, 0, 0))           # pool1 (55->27)
+    f.append(conv(f[2], ks[1], 1, 2))                    # conv2
+    f.append(max_pool(f[3], 3, 3, 2, 2, 0, 0))           # pool2 (27->13)
+    f.append(conv(f[4], ks[2], 1, 1))                    # conv3
+    f.append(conv(f[5], ks[3], 1, 1))                    # conv4
+    f.append(conv(f[6], ks[4], 1, 1))                    # conv5
+    params = [act_params(t) for t in f]
+
+    q = [quantize(x, *params[0])]
+    q.append(conv_node(q[0], params[0], params[1], ks[0], 4, 0))
+    q.append(max_pool_q(q[1], params[1], params[2], 3, 3, 2, 2, 0, 0))
+    q.append(conv_node(q[2], params[2], params[3], ks[1], 1, 2))
+    q.append(max_pool_q(q[3], params[3], params[4], 3, 3, 2, 2, 0, 0))
+    q.append(conv_node(q[4], params[4], params[5], ks[2], 1, 1))
+    q.append(conv_node(q[5], params[5], params[6], ks[3], 1, 1))
+    q.append(conv_node(q[6], params[6], params[7], ks[4], 1, 1))
+    return golden_i8("alexnet_i8", layers, params, q, 7)
+
+
+def resnet_micro_i8():
+    """resnet_micro in int8, builder graph node order: input, conv0,
+    conv1, conv2, add1, conv3, conv4, add2, pool, conv5. Add joins
+    accumulate operands in pred order (store, then saturating adds)."""
+    print("resnet_micro_i8:", flush=True)
+    layers = resnet_micro()
+    ks = kernels_for(layers)
+    x = tensor_random((3, 32, 32), INPUT_SEED)
+
+    f = [x]
+    f.append(conv(f[0], ks[0], 1, 1))                    # conv0
+    f.append(conv(f[1], ks[1], 1, 1))                    # conv1
+    f.append(conv(f[2], ks[2], 1, 1))                    # conv2
+    f.append(f[1] + f[3])                                # add1 = conv0 + conv2
+    f.append(conv(f[4], ks[3], 1, 1))                    # conv3
+    f.append(conv(f[5], ks[4], 1, 1))                    # conv4
+    f.append(f[4] + f[6])                                # add2 = add1 + conv4
+    f.append(max_pool(f[7], 2, 2, 2, 2, 0, 0))           # pool
+    f.append(conv(f[8], ks[5], 1, 1))                    # conv5
+    params = [act_params(t) for t in f]
+
+    q = [quantize(x, *params[0])]
+    q.append(conv_node(q[0], params[0], params[1], ks[0], 1, 1))   # conv0
+    q.append(conv_node(q[1], params[1], params[2], ks[1], 1, 1))   # conv1
+    q.append(conv_node(q[2], params[2], params[3], ks[2], 1, 1))   # conv2
+    j1 = requant_edge(q[1], params[1], params[4])                  # add1: store conv0
+    j1 = add_accumulate(j1, q[3], params[3], params[4])            #       += conv2
+    q.append(j1)
+    q.append(conv_node(q[4], params[4], params[5], ks[3], 1, 1))   # conv3
+    q.append(conv_node(q[5], params[5], params[6], ks[4], 1, 1))   # conv4
+    j2 = requant_edge(q[4], params[4], params[7])                  # add2: store add1
+    j2 = add_accumulate(j2, q[6], params[6], params[7])            #       += conv4
+    q.append(j2)
+    q.append(max_pool_q(q[7], params[7], params[8], 2, 2, 2, 2, 0, 0))
+    q.append(conv_node(q[8], params[8], params[9], ks[5], 1, 1))   # conv5
+    return golden_i8("resnet_micro_i8", layers, params, q, 9)
+
+
 def sample_indices(n):
     idx = [k * n // 5 for k in range(5)] + [n - 1]
     out = []
@@ -241,6 +457,8 @@ def main():
         "googlenet": golden("googlenet", googlenet(), run_inception),
         "vgg16": golden("vgg16", vgg16(), run_chain),
         "resnet_micro": golden("resnet_micro", resnet_micro(), run_resnet_micro),
+        "alexnet_i8": alexnet_i8(),
+        "resnet_micro_i8": resnet_micro_i8(),
     }
     path = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "fixtures",
                         "net_golden.json")

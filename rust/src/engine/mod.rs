@@ -57,14 +57,15 @@
 //!
 //! [`BackendRegistry`] maps names to implementations:
 //!
-//! | name       | algorithm                                   | overhead        |
-//! |------------|---------------------------------------------|-----------------|
-//! | `direct`   | Algorithm 3, §4 layouts, analytic blocking  | 0               |
-//! | `reorder`  | Algorithm 2, channel-last loop order        | 0               |
-//! | `naive`    | Algorithm 1 oracle                          | 0 (but slow)    |
-//! | `im2col`   | Caffe lowering + Goto SGEMM                 | workspace       |
-//! | `fft`      | NNPACK-style frequency domain               | retained        |
-//! | `winograd` | F(2x2,3x3), 3x3/stride-1 only               | retained        |
+//! | name        | algorithm                                   | overhead        |
+//! |-------------|---------------------------------------------|-----------------|
+//! | `direct`    | Algorithm 3, §4 layouts, analytic blocking  | 0               |
+//! | `reorder`   | Algorithm 2, channel-last loop order        | 0               |
+//! | `naive`     | Algorithm 1 oracle                          | 0 (but slow)    |
+//! | `im2col`    | Caffe lowering + Goto SGEMM                 | workspace       |
+//! | `fft`       | NNPACK-style frequency domain               | retained        |
+//! | `winograd`  | F(2x2,3x3), 3x3/stride-1 only               | retained        |
+//! | `direct_i8` | int8 Algorithm 3, i32 acc + fused requant   | 0 (4x smaller)  |
 //!
 //! `registry.auto(&shape, &machine)` (or the name `"auto"`) picks the
 //! best applicable backend for a layer: `direct` whenever its analytic
@@ -100,7 +101,9 @@ mod serving;
 pub use backends::{
     DirectBackend, FftBackend, Im2colBackend, NaiveBackend, ReorderBackend, WinogradBackend,
 };
-pub use net_runner::{adapt_nchw, add_nchw, pool_nchw, ArenaRegion, NetArena, NetRunner};
+pub use net_runner::{
+    adapt_nchw, add_nchw, avg_pool_nchw, pool_nchw, ArenaRegion, NetArena, NetRunner,
+};
 pub use registry::{BackendRegistry, BACKEND_NAMES};
 pub use serving::{NetEngine, PlanEngine};
 
@@ -162,6 +165,14 @@ pub trait ConvPlan: Send + Sync {
     /// Scratch floats `execute_into` requires. `0` for zero-overhead
     /// backends.
     fn workspace_len(&self) -> usize;
+
+    /// The plan's native int8 execution surface, if it has one. The
+    /// quantized backend (`direct_i8`) returns itself here so the
+    /// whole-network executor can run it on an i8 byte arena
+    /// ([`crate::quant::QuantExecute`]); f32 backends return `None`.
+    fn as_quantized(&self) -> Option<&dyn crate::quant::QuantExecute> {
+        None
+    }
 
     /// Execute the layer on the hot path. `input` must hold
     /// `C_i*H_i*W_i` floats in [`Self::input_layout`], `output`

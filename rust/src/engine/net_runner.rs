@@ -74,10 +74,27 @@
 //! overhead compounds: GEMM-based rivals pay their per-branch packing
 //! on *both* arms of every skip connection.
 //!
-//! [`adapt_nchw`] / [`pool_nchw`] / [`add_nchw`] are independent NCHW
-//! reference implementations of the glue ops, used by the conformance
-//! tests to cross-check whole forward passes against branch-by-branch
-//! `conv_naive` references with explicit concatenation/summation.
+//! # Quantized (i8) schedules
+//!
+//! [`NetRunner::from_graph_quant`] compiles the same graph over an
+//! **i8 byte arena**: every conv plan must expose the int8 surface
+//! ([`ConvPlan::as_quantized`] — i.e. `direct_i8` plans built by
+//! [`crate::quant::QuantNet`] with per-edge calibrated
+//! [`QuantParams`]), activations live as single bytes (same element
+//! count and placement as the f32 arena, exactly a quarter of the
+//! bytes), and the producer→consumer requantize steps are fused into
+//! the existing Adapt gathers — scale chaining costs no extra pass.
+//! The f32 boundary survives: [`NetRunner::forward_with`] quantizes
+//! the input while staging and dequantizes the output while unpacking;
+//! [`NetRunner::forward_q8_with`] exposes the raw integers (what the
+//! golden fixtures pin). Zero-alloc and `overhead_bytes() == 0` hold
+//! exactly as in f32 mode.
+//!
+//! [`adapt_nchw`] / [`pool_nchw`] / [`avg_pool_nchw`] / [`add_nchw`]
+//! are independent NCHW reference implementations of the glue ops,
+//! used by the conformance tests to cross-check whole forward passes
+//! against branch-by-branch `conv_naive` references with explicit
+//! concatenation/summation.
 
 use std::collections::BTreeMap;
 use std::ops::Range;
@@ -87,7 +104,8 @@ use crate::layout::{
     blocked_io_index, nchw_to_nhwc_slice, nhwc_to_nchw_slice, pack_io_slice, unpack_io_slice,
     IoLayout,
 };
-use crate::nets::{pool_spec, Dims, GraphOp, NetGraph, NetPlans};
+use crate::nets::{pool_spec, Dims, GraphOp, NetGraph, NetPlans, PoolKind};
+use crate::quant::{dequantize, quantize, requantize, DType, QuantParams, Q_MAX, Q_MIN};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
@@ -112,12 +130,16 @@ fn io_index(
     }
 }
 
-/// One fused, channel-preserving gather pass: max-pool (with `-inf`
-/// padding) plus layout conversion, any layout to any layout. With
-/// `1x1/s1/p0` geometry it degenerates to a pure layout conversion.
-/// With `accumulate` set the gathered value is *added* to the
-/// destination instead of stored — the second and later operands of a
-/// residual [`GraphOp::Add`] join fuse into the same pass.
+/// One fused, channel-preserving gather pass: pooling (max with `-inf`
+/// padding, or average over the in-bounds cells) plus layout
+/// conversion, any layout to any layout. With `1x1/s1/p0` geometry it
+/// degenerates to a pure layout conversion. With `accumulate` set the
+/// gathered value is *added* to the destination instead of stored —
+/// the second and later operands of a residual [`GraphOp::Add`] join
+/// fuse into the same pass. In a quantized (i8) schedule the same pass
+/// additionally requantizes from the producer's [`QuantParams`] to the
+/// consumer's ([`Adapt::apply_i8`]), so scale chaining costs no extra
+/// pass either.
 #[derive(Clone, Copy, Debug)]
 struct Adapt {
     src_c: usize,
@@ -128,6 +150,7 @@ struct Adapt {
     dst_h: usize,
     dst_w: usize,
     dst_layout: IoLayout,
+    kind: PoolKind,
     kh: usize,
     kw: usize,
     sh: usize,
@@ -135,6 +158,10 @@ struct Adapt {
     ph: usize,
     pw: usize,
     accumulate: bool,
+    /// Quantization of the source / destination values (i8 schedules
+    /// only; [`QuantParams::IDENT`] in f32 schedules).
+    src_qp: QuantParams,
+    dst_qp: QuantParams,
 }
 
 impl Adapt {
@@ -149,6 +176,7 @@ impl Adapt {
             dst_h: h,
             dst_w: w,
             dst_layout: to,
+            kind: PoolKind::Max,
             kh: 1,
             kw: 1,
             sh: 1,
@@ -156,11 +184,15 @@ impl Adapt {
             ph: 0,
             pw: 0,
             accumulate: false,
+            src_qp: QuantParams::IDENT,
+            dst_qp: QuantParams::IDENT,
         }
     }
 
     /// Gather `src` into `dst`, both in their declared layouts.
-    /// Allocation-free; out-of-bounds window cells act as `-inf`.
+    /// Allocation-free; out-of-bounds window cells act as `-inf` under
+    /// max pooling and are excluded from sum and count under average
+    /// pooling.
     fn apply(&self, src: &[f32], dst: &mut [f32]) {
         debug_assert_eq!(src.len(), self.src_c * self.src_h * self.src_w);
         debug_assert_eq!(dst.len(), self.dst_c * self.dst_h * self.dst_w);
@@ -170,6 +202,8 @@ impl Adapt {
                 for x in 0..self.dst_w {
                     let x0 = (x * self.sw) as isize - self.pw as isize;
                     let mut m = f32::NEG_INFINITY;
+                    let mut sum = 0.0f32;
+                    let mut count = 0u32;
                     for dy in 0..self.kh {
                         let yy = y0 + dy as isize;
                         if yy < 0 || yy >= self.src_h as isize {
@@ -189,16 +223,95 @@ impl Adapt {
                                 self.src_h,
                                 self.src_w,
                             )];
-                            if v > m {
-                                m = v;
+                            match self.kind {
+                                PoolKind::Max => {
+                                    if v > m {
+                                        m = v;
+                                    }
+                                }
+                                PoolKind::Avg => {
+                                    sum += v;
+                                    count += 1;
+                                }
                             }
                         }
                     }
+                    let v = match self.kind {
+                        PoolKind::Max => m,
+                        // Running sum scaled by the reciprocal count of
+                        // in-bounds cells (geometry guarantees >= 1).
+                        PoolKind::Avg => sum * (1.0 / count.max(1) as f32),
+                    };
                     let d = io_index(self.dst_layout, c, y, x, self.dst_c, self.dst_h, self.dst_w);
                     if self.accumulate {
-                        dst[d] += m;
+                        dst[d] += v;
                     } else {
-                        dst[d] = m;
+                        dst[d] = v;
+                    }
+                }
+            }
+        }
+    }
+
+    /// The i8 twin of [`Adapt::apply`]: same gather, integer pooling,
+    /// and the producer→consumer requantize fused in. Every arithmetic
+    /// step is pinned for the NumPy reference (see [`crate::quant`]):
+    /// max pools compare raw i8 (monotone under affine quantization),
+    /// then `q' = clamp(round((q - zp_s) · m) + zp_d)` with
+    /// `m = f64(s_src) / f64(s_dst)`; averages requantize the i32 sum
+    /// of centered values through `m / count`; `accumulate` saturating-
+    /// adds centered contributions into the destination.
+    fn apply_i8(&self, src: &[i8], dst: &mut [i8]) {
+        debug_assert_eq!(src.len(), self.src_c * self.src_h * self.src_w);
+        debug_assert_eq!(dst.len(), self.dst_c * self.dst_h * self.dst_w);
+        let m = self.src_qp.scale as f64 / self.dst_qp.scale as f64;
+        let (szp, dzp) = (self.src_qp.zero_point, self.dst_qp.zero_point);
+        for c in 0..self.dst_c {
+            for y in 0..self.dst_h {
+                let y0 = (y * self.sh) as isize - self.ph as isize;
+                for x in 0..self.dst_w {
+                    let x0 = (x * self.sw) as isize - self.pw as isize;
+                    let mut mx = i32::MIN;
+                    let mut sum = 0i32;
+                    let mut count = 0i64;
+                    for dy in 0..self.kh {
+                        let yy = y0 + dy as isize;
+                        if yy < 0 || yy >= self.src_h as isize {
+                            continue;
+                        }
+                        for dx in 0..self.kw {
+                            let xx = x0 + dx as isize;
+                            if xx < 0 || xx >= self.src_w as isize {
+                                continue;
+                            }
+                            let v = src[io_index(
+                                self.src_layout,
+                                c,
+                                yy as usize,
+                                xx as usize,
+                                self.src_c,
+                                self.src_h,
+                                self.src_w,
+                            )] as i32;
+                            match self.kind {
+                                PoolKind::Max => mx = mx.max(v),
+                                PoolKind::Avg => {
+                                    sum += v - szp;
+                                    count += 1;
+                                }
+                            }
+                        }
+                    }
+                    let q = match self.kind {
+                        PoolKind::Max => requantize(mx - szp, m, dzp),
+                        PoolKind::Avg => requantize(sum, m / count.max(1) as f64, dzp),
+                    };
+                    let d = io_index(self.dst_layout, c, y, x, self.dst_c, self.dst_h, self.dst_w);
+                    if self.accumulate {
+                        let t = dst[d] as i32 + q as i32 - dzp;
+                        dst[d] = t.clamp(Q_MIN, Q_MAX) as i8;
+                    } else {
+                        dst[d] = q;
                     }
                 }
             }
@@ -258,6 +371,58 @@ pub fn pool_nchw(
     Tensor::from_vec(&[c, h_o, w_o], out)
 }
 
+/// NCHW reference average-pool with explicit geometry — the mean over
+/// the *in-bounds* window cells (padding excluded from sum and count,
+/// classifier-head semantics), matching the fused Adapt gather's
+/// [`PoolKind::Avg`] arithmetic exactly.
+pub fn avg_pool_nchw(
+    src: &Tensor,
+    kh: usize,
+    kw: usize,
+    sh: usize,
+    sw: usize,
+    ph: usize,
+    pw: usize,
+) -> Result<Tensor> {
+    let &[c, h, w] = src.shape() else {
+        return Err(Error::Shape(format!("expected [C][H][W], got {:?}", src.shape())));
+    };
+    if kh == 0 || kw == 0 || sh == 0 || sw == 0 || ph >= kh || pw >= kw {
+        return Err(Error::Shape(format!("bad pool geometry {kh}x{kw}/s{sh}x{sw}/p{ph}x{pw}")));
+    }
+    if h + 2 * ph < kh || w + 2 * pw < kw {
+        return Err(Error::Shape("pool kernel larger than padded input".into()));
+    }
+    let (h_o, w_o) = ((h + 2 * ph - kh) / sh + 1, (w + 2 * pw - kw) / sw + 1);
+    let s = src.data();
+    let mut out = vec![0.0f32; c * h_o * w_o];
+    for (cc, plane) in out.chunks_mut(h_o * w_o).enumerate() {
+        let sp = &s[cc * h * w..][..h * w];
+        for y in 0..h_o {
+            for x in 0..w_o {
+                let mut sum = 0.0f32;
+                let mut count = 0u32;
+                for dy in 0..kh {
+                    let yy = (y * sh + dy) as isize - ph as isize;
+                    if yy < 0 || yy >= h as isize {
+                        continue;
+                    }
+                    for dx in 0..kw {
+                        let xx = (x * sw + dx) as isize - pw as isize;
+                        if xx < 0 || xx >= w as isize {
+                            continue;
+                        }
+                        sum += sp[yy as usize * w + xx as usize];
+                        count += 1;
+                    }
+                }
+                plane[y * w_o + x] = sum * (1.0 / count.max(1) as f32);
+            }
+        }
+    }
+    Tensor::from_vec(&[c, h_o, w_o], out)
+}
+
 /// NCHW reference elementwise sum (the residual [`GraphOp::Add`] join),
 /// left-folded in operand order exactly like the compiled accumulate
 /// gathers — independent of the arena/layout machinery so tests can
@@ -304,6 +469,9 @@ struct Value {
     offset: usize,
     def_t: usize,
     last_t: usize,
+    /// Quantization of this value in an i8 schedule
+    /// ([`QuantParams::IDENT`] in f32 schedules).
+    qp: QuantParams,
 }
 
 /// One step of the compiled schedule.
@@ -342,7 +510,11 @@ pub struct ArenaRegion {
 /// what makes the forward pass allocation-free). One arena per
 /// concurrent request — workers in a pool each own one.
 pub struct NetArena {
+    /// f32 activation regions (empty in i8 schedules).
     buf: Vec<f32>,
+    /// i8 activation regions (empty in f32 schedules) — same element
+    /// count as `buf` would hold, a quarter of the bytes.
+    qbuf: Vec<i8>,
     ws: Vec<f32>,
 }
 
@@ -363,6 +535,7 @@ pub struct NetRunner {
     max_live: usize,
     max_ws: usize,
     lanes: usize,
+    dtype: DType,
 }
 
 impl NetRunner {
@@ -385,6 +558,41 @@ impl NetRunner {
     /// Compile an explicit graph over `plans` (the graph's conv nodes
     /// index the plan table 1:1; validated).
     pub fn from_graph(plans: NetPlans, graph: NetGraph, lanes: usize) -> Result<NetRunner> {
+        Self::compile(plans, graph, lanes, DType::F32, None)
+    }
+
+    /// Compile a **quantized** schedule: every conv plan must expose an
+    /// i8 surface ([`ConvPlan::as_quantized`], i.e. `direct_i8` plans),
+    /// `node_params` holds one calibrated [`QuantParams`] per graph
+    /// node (what [`crate::quant::QuantNet`] produces), and the
+    /// activation arena becomes a byte arena — same element count as
+    /// the f32 schedule, a quarter of the bytes. The producer→consumer
+    /// requantize steps are fused into the existing Adapt gathers, so
+    /// the op schedule is identical to the f32 one.
+    pub fn from_graph_quant(
+        plans: NetPlans,
+        graph: NetGraph,
+        lanes: usize,
+        node_params: &[QuantParams],
+    ) -> Result<NetRunner> {
+        if node_params.len() != graph.len() {
+            return Err(Error::Shape(format!(
+                "quantized net '{}': {} node params for {} graph nodes",
+                plans.net,
+                node_params.len(),
+                graph.len()
+            )));
+        }
+        Self::compile(plans, graph, lanes, DType::I8, Some(node_params))
+    }
+
+    fn compile(
+        plans: NetPlans,
+        graph: NetGraph,
+        lanes: usize,
+        dtype: DType,
+        node_params: Option<&[QuantParams]>,
+    ) -> Result<NetRunner> {
         let lanes = lanes.max(1);
         if plans.layers.is_empty() {
             return Err(Error::Shape(format!("net '{}' has no planned layers", plans.net)));
@@ -392,6 +600,8 @@ impl NetRunner {
         let shapes: Vec<ConvShape> = plans.layers.iter().map(|l| l.layer.shape.clone()).collect();
         let dims = graph.validate(&shapes)?;
         let mut c = Compiler::new(&plans, &graph, &dims, lanes);
+        c.dtype = dtype;
+        c.node_qp = node_params.map(<[QuantParams]>::to_vec);
         c.emit()?;
         // Copy everything out of the compiler before `plans`/`graph`
         // move into the runner (the compiler borrows both).
@@ -430,6 +640,7 @@ impl NetRunner {
             max_live,
             max_ws,
             lanes,
+            dtype,
         })
     }
 
@@ -478,7 +689,16 @@ impl NetRunner {
         self.output_len
     }
 
-    /// Total floats of the region-allocated activation arena.
+    /// Element type of the activation arena ([`DType::F32`] unless the
+    /// schedule was compiled with [`NetRunner::from_graph_quant`]).
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    /// Total *elements* of the region-allocated activation arena (f32
+    /// in the default schedule, i8 bytes in a quantized one — the
+    /// element count is identical because the layouts are shared, so
+    /// the i8 arena is exactly a quarter of the f32 bytes).
     pub fn arena_floats(&self) -> usize {
         self.arena_floats
     }
@@ -508,10 +728,11 @@ impl NetRunner {
             .collect()
     }
 
-    /// Bytes of the activation arena. Intrinsic network state (the
-    /// graph's live activations), not overhead.
+    /// Bytes of the activation arena (element count times the dtype's
+    /// element size — a quantized net's arena is 4x smaller). Intrinsic
+    /// network state (the graph's live activations), not overhead.
     pub fn activation_bytes(&self) -> u64 {
-        4 * self.arena_floats as u64
+        (self.dtype.elem_bytes() * self.arena_floats) as u64
     }
 
     /// Sum of per-plan retained bytes beyond conventional weights.
@@ -539,12 +760,42 @@ impl NetRunner {
     }
 
     /// Allocate one execution arena (the only allocation site; do it
-    /// once, reuse per request).
+    /// once, reuse per request). Quantized schedules get an i8 byte
+    /// arena — same element count, a quarter of the bytes.
     pub fn arena(&self) -> NetArena {
-        NetArena {
-            buf: vec![0.0; self.arena_floats],
-            ws: vec![0.0; self.max_ws * self.lanes],
+        let (buf, qbuf) = match self.dtype {
+            DType::F32 => (vec![0.0; self.arena_floats], Vec::new()),
+            DType::I8 => (Vec::new(), vec![0i8; self.arena_floats]),
+        };
+        NetArena { buf, qbuf, ws: vec![0.0; self.max_ws * self.lanes] }
+    }
+
+    fn check_forward_buffers(
+        &self,
+        arena: &NetArena,
+        input_len: usize,
+        output_len: usize,
+    ) -> Result<()> {
+        if input_len != self.input_len {
+            return Err(Error::Shape(format!(
+                "net input has {input_len} floats, expected {}",
+                self.input_len
+            )));
         }
+        if output_len != self.output_len {
+            return Err(Error::Shape(format!(
+                "net output has {output_len} elements, expected {}",
+                self.output_len
+            )));
+        }
+        let act_ok = match self.dtype {
+            DType::F32 => arena.buf.len() == self.arena_floats && arena.qbuf.is_empty(),
+            DType::I8 => arena.qbuf.len() == self.arena_floats && arena.buf.is_empty(),
+        };
+        if !act_ok || arena.ws.len() != self.max_ws * self.lanes {
+            return Err(Error::Shape("arena was not built by this runner".into()));
+        }
+        Ok(())
     }
 
     /// Run the whole network forward, allocation-free (serial schedule;
@@ -552,31 +803,72 @@ impl NetRunner {
     /// bookkeeping). `input` is the flat NCHW image (`input_len()`
     /// floats), `output` receives the flat NCHW output map
     /// (`output_len()` floats), `arena` is a (reused) buffer set from
-    /// [`NetRunner::arena`].
+    /// [`NetRunner::arena`]. On a quantized schedule the input is
+    /// quantized while staging and the output dequantized while
+    /// unpacking — both fused into the boundary layout passes, still
+    /// allocation-free.
     pub fn forward_with(
         &self,
         arena: &mut NetArena,
         input: &[f32],
         output: &mut [f32],
     ) -> Result<()> {
-        if input.len() != self.input_len {
-            return Err(Error::Shape(format!(
-                "net input has {} floats, expected {}",
-                input.len(),
-                self.input_len
-            )));
+        self.check_forward_buffers(arena, input.len(), output.len())?;
+        match self.dtype {
+            DType::F32 => self.forward_f32(arena, input, output),
+            DType::I8 => {
+                self.forward_i8(arena, input)?;
+                let qp = self.values[self.output_value].qp;
+                self.unpack_output_q8(arena, |i, q| output[i] = dequantize(q, &qp));
+                Ok(())
+            }
         }
-        if output.len() != self.output_len {
-            return Err(Error::Shape(format!(
-                "net output has {} floats, expected {}",
-                output.len(),
-                self.output_len
-            )));
-        }
-        if arena.buf.len() != self.arena_floats || arena.ws.len() != self.max_ws * self.lanes {
-            return Err(Error::Shape("arena was not built by this runner".into()));
-        }
+    }
 
+    /// Walk the i8 output value in NCHW order, handing each element's
+    /// flat NCHW index and raw quantized byte to `sink` — the single
+    /// unpack loop shared by the dequantizing and raw-integer output
+    /// paths (so a layout/indexing fix cannot diverge between them).
+    fn unpack_output_q8(&self, arena: &NetArena, mut sink: impl FnMut(usize, i8)) {
+        let ov = &self.values[self.output_value];
+        let native = &arena.qbuf[ov.offset..ov.offset + ov.len];
+        for c in 0..ov.c {
+            for y in 0..ov.h {
+                for x in 0..ov.w {
+                    let q = native[io_index(ov.layout, c, y, x, ov.c, ov.h, ov.w)];
+                    sink((c * ov.h + y) * ov.w + x, q);
+                }
+            }
+        }
+    }
+
+    /// Quantized forward with a **raw i8** NCHW output (no dequantize)
+    /// — the exact integers the golden fixtures pin, and what an
+    /// int8-consuming classifier head would read. Errors on f32
+    /// schedules.
+    pub fn forward_q8_with(
+        &self,
+        arena: &mut NetArena,
+        input: &[f32],
+        output: &mut [i8],
+    ) -> Result<()> {
+        if self.dtype != DType::I8 {
+            return Err(Error::Shape(
+                "forward_q8_with requires a quantized schedule (from_graph_quant)".into(),
+            ));
+        }
+        self.check_forward_buffers(arena, input.len(), output.len())?;
+        self.forward_i8(arena, input)?;
+        self.unpack_output_q8(arena, |i, q| output[i] = q);
+        Ok(())
+    }
+
+    fn forward_f32(
+        &self,
+        arena: &mut NetArena,
+        input: &[f32],
+        output: &mut [f32],
+    ) -> Result<()> {
         // Stage the NCHW input into the input value's native layout.
         {
             let iv = &self.values[self.input_value];
@@ -593,11 +885,17 @@ impl NetRunner {
                 Stage::Serial(range) => {
                     let ws = &mut arena.ws[..self.max_ws];
                     for idx in range.clone() {
-                        self.run_op_serial(&mut arena.buf, idx, ws)?;
+                        let op = &self.ops[idx];
+                        let (so, sl, dofs, dl) = self.op_regions(op);
+                        let (src, dst) = split_src_dst(&mut arena.buf, so, sl, dofs, dl);
+                        self.run_op(op, src, dst, ws)?;
                     }
                 }
                 Stage::Parallel(lanes_ops) => {
-                    self.run_parallel(arena, lanes_ops)?;
+                    let NetArena { buf, ws, .. } = arena;
+                    run_parallel_t(self, buf, ws, self.max_ws, lanes_ops, &|op, src, dst, ws| {
+                        self.run_op(op, src, dst, ws)
+                    })?;
                 }
             }
         }
@@ -609,6 +907,46 @@ impl NetRunner {
             IoLayout::Nchw => output.copy_from_slice(native),
             IoLayout::Nhwc => nhwc_to_nchw_slice(native, ov.c, ov.h, ov.w, output)?,
             IoLayout::Blocked { c_b } => unpack_io_slice(native, ov.c, ov.h, ov.w, c_b, output)?,
+        }
+        Ok(())
+    }
+
+    /// Replay the schedule over the i8 byte arena: quantize + stage the
+    /// f32 input, then run every op in integer form (convs through
+    /// [`crate::quant::QuantExecute`], glue through
+    /// [`Adapt::apply_i8`]). The output stays in the arena in the
+    /// output value's native layout; callers unpack it.
+    fn forward_i8(&self, arena: &mut NetArena, input: &[f32]) -> Result<()> {
+        {
+            let iv = &self.values[self.input_value];
+            let region = &mut arena.qbuf[iv.offset..iv.offset + iv.len];
+            for c in 0..iv.c {
+                for y in 0..iv.h {
+                    for x in 0..iv.w {
+                        let v = input[(c * iv.h + y) * iv.w + x];
+                        region[io_index(iv.layout, c, y, x, iv.c, iv.h, iv.w)] =
+                            quantize(v, &iv.qp);
+                    }
+                }
+            }
+        }
+        for stage in &self.stages {
+            match stage {
+                Stage::Serial(range) => {
+                    for idx in range.clone() {
+                        let op = &self.ops[idx];
+                        let (so, sl, dofs, dl) = self.op_regions(op);
+                        let (src, dst) = split_src_dst(&mut arena.qbuf, so, sl, dofs, dl);
+                        self.run_op_i8(op, src, dst)?;
+                    }
+                }
+                Stage::Parallel(lanes_ops) => {
+                    let NetArena { qbuf, ws, .. } = arena;
+                    run_parallel_t(self, qbuf, ws, self.max_ws, lanes_ops, &|op, src, dst, _| {
+                        self.run_op_i8(op, src, dst)
+                    })?;
+                }
+            }
         }
         Ok(())
     }
@@ -650,13 +988,6 @@ impl NetRunner {
         }
     }
 
-    fn run_op_serial(&self, buf: &mut [f32], idx: usize, ws: &mut [f32]) -> Result<()> {
-        let op = &self.ops[idx];
-        let (so, sl, dofs, dl) = self.op_regions(op);
-        let (src, dst) = split_src_dst(buf, so, sl, dofs, dl);
-        self.run_op(op, src, dst, ws)
-    }
-
     fn run_op(&self, op: &Op, src: &[f32], dst: &mut [f32], ws: &mut [f32]) -> Result<()> {
         match op {
             Op::Adapt { adapt, .. } => {
@@ -670,81 +1001,105 @@ impl NetRunner {
         }
     }
 
-    /// Execute one parallel group: lanes are distributed round-robin
-    /// over up to `self.lanes` scoped workers, each with its own
-    /// workspace slice. Group-time liveness (see [`build_stages`])
-    /// guarantees every region written here is disjoint from every
-    /// other region touched by the group, so the raw-pointer slicing
-    /// below never creates aliasing references.
-    fn run_parallel(&self, arena: &mut NetArena, lanes_ops: &[Vec<usize>]) -> Result<()> {
-        let workers = self.lanes.min(lanes_ops.len()).max(1);
-        let base = ArenaPtr { ptr: arena.buf.as_mut_ptr(), len: arena.buf.len() };
-        let mut ws_slices: Vec<&mut [f32]> = Vec::with_capacity(workers);
-        let mut rest: &mut [f32] = &mut arena.ws;
-        for _ in 0..workers {
-            let (a, b) = rest.split_at_mut(self.max_ws);
-            ws_slices.push(a);
-            rest = b;
+    fn run_op_i8(&self, op: &Op, src: &[i8], dst: &mut [i8]) -> Result<()> {
+        match op {
+            Op::Adapt { adapt, .. } => {
+                adapt.apply_i8(src, dst);
+                Ok(())
+            }
+            Op::Conv { layer, .. } => {
+                let plan = &self.plans.layers[*layer].plan;
+                // Presence of the i8 surface is validated at compile.
+                let q = plan.as_quantized().ok_or_else(|| {
+                    Error::Runtime("i8 schedule holds a plan without an i8 surface".into())
+                })?;
+                q.execute_i8_into(src, dst)
+            }
         }
-        std::thread::scope(|scope| -> Result<()> {
-            let mut handles = Vec::with_capacity(workers);
-            for (w, ws) in ws_slices.into_iter().enumerate() {
-                let base = &base;
-                handles.push(scope.spawn(move || -> Result<()> {
-                    let mut ws = ws;
-                    for lane in (w..lanes_ops.len()).step_by(workers) {
-                        for &idx in &lanes_ops[lane] {
-                            let op = &self.ops[idx];
-                            let (so, sl, dofs, dl) = self.op_regions(op);
-                            debug_assert!(so + sl <= dofs || dofs + dl <= so);
-                            debug_assert!(so + sl <= base.len && dofs + dl <= base.len);
-                            // SAFETY: regions of concurrently executing
-                            // ops are pairwise disjoint — values live at
-                            // the same group time never share arena
-                            // space (region allocator invariant), and
-                            // concat slice writes use disjoint channel
-                            // offsets of one value. Reads may overlap
-                            // other reads only. Bounds checked above.
-                            let (src, dst) = unsafe {
-                                (
-                                    std::slice::from_raw_parts(base.ptr.add(so), sl),
-                                    std::slice::from_raw_parts_mut(base.ptr.add(dofs), dl),
-                                )
-                            };
-                            self.run_op(op, src, dst, ws)?;
-                        }
-                    }
-                    Ok(())
-                }));
-            }
-            for h in handles {
-                h.join().map_err(|_| Error::Runtime("net branch worker panicked".into()))??;
-            }
-            Ok(())
-        })
     }
 }
 
+/// Execute one parallel group over an arena of element type `T`: lanes
+/// are distributed round-robin over up to `runner.lanes` scoped
+/// workers, each with its own workspace slice. Group-time liveness
+/// (see [`build_stages`]) guarantees every region written here is
+/// disjoint from every other region touched by the group, so the
+/// raw-pointer slicing below never creates aliasing references.
+fn run_parallel_t<T: Copy + Send + Sync>(
+    runner: &NetRunner,
+    buf: &mut [T],
+    ws_all: &mut [f32],
+    max_ws: usize,
+    lanes_ops: &[Vec<usize>],
+    exec: &(dyn Fn(&Op, &[T], &mut [T], &mut [f32]) -> Result<()> + Sync),
+) -> Result<()> {
+    let workers = runner.lanes.min(lanes_ops.len()).max(1);
+    let base = ArenaPtr { ptr: buf.as_mut_ptr(), len: buf.len() };
+    let mut ws_slices: Vec<&mut [f32]> = Vec::with_capacity(workers);
+    let mut rest: &mut [f32] = ws_all;
+    for _ in 0..workers {
+        let (a, b) = rest.split_at_mut(max_ws);
+        ws_slices.push(a);
+        rest = b;
+    }
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(workers);
+        for (w, ws) in ws_slices.into_iter().enumerate() {
+            let base = &base;
+            handles.push(scope.spawn(move || -> Result<()> {
+                let mut ws = ws;
+                for lane in (w..lanes_ops.len()).step_by(workers) {
+                    for &idx in &lanes_ops[lane] {
+                        let op = &runner.ops[idx];
+                        let (so, sl, dofs, dl) = runner.op_regions(op);
+                        debug_assert!(so + sl <= dofs || dofs + dl <= so);
+                        debug_assert!(so + sl <= base.len && dofs + dl <= base.len);
+                        // SAFETY: regions of concurrently executing
+                        // ops are pairwise disjoint — values live at
+                        // the same group time never share arena
+                        // space (region allocator invariant), and
+                        // concat slice writes use disjoint channel
+                        // offsets of one value. Reads may overlap
+                        // other reads only. Bounds checked above.
+                        let (src, dst) = unsafe {
+                            (
+                                std::slice::from_raw_parts(base.ptr.add(so), sl),
+                                std::slice::from_raw_parts_mut(base.ptr.add(dofs), dl),
+                            )
+                        };
+                        exec(op, src, dst, ws)?;
+                    }
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().map_err(|_| Error::Runtime("net branch worker panicked".into()))??;
+        }
+        Ok(())
+    })
+}
+
 /// Shared arena base pointer for branch-parallel stages. Lanes write
-/// provably disjoint regions (see [`NetRunner::run_parallel`]).
-struct ArenaPtr {
-    ptr: *mut f32,
+/// provably disjoint regions (see [`run_parallel_t`]).
+struct ArenaPtr<T> {
+    ptr: *mut T,
     len: usize,
 }
 
 // SAFETY: the pointer is only dereferenced through the disjoint-region
 // protocol documented at the single use site.
-unsafe impl Send for ArenaPtr {}
-unsafe impl Sync for ArenaPtr {}
+unsafe impl<T: Send> Send for ArenaPtr<T> {}
+unsafe impl<T: Sync> Sync for ArenaPtr<T> {}
 
-/// Disjoint (read, write) views into the arena buffer.
-fn split_src_dst(
-    buf: &mut [f32],
+/// Disjoint (read, write) views into the arena buffer (f32 or i8).
+fn split_src_dst<T>(
+    buf: &mut [T],
     so: usize,
     sl: usize,
     dofs: usize,
     dl: usize,
-) -> (&[f32], &mut [f32]) {
+) -> (&[T], &mut [T]) {
     debug_assert!(so + sl <= dofs || dofs + dl <= so, "live regions must not alias");
     if so < dofs {
         let (a, b) = buf.split_at_mut(dofs);
@@ -769,6 +1124,9 @@ struct Compiler<'a> {
     node_value: Vec<usize>,
     input_value: usize,
     output_value: usize,
+    dtype: DType,
+    /// Calibrated per-node activation params (i8 schedules only).
+    node_qp: Option<Vec<QuantParams>>,
 }
 
 impl<'a> Compiler<'a> {
@@ -783,7 +1141,13 @@ impl<'a> Compiler<'a> {
             node_value: vec![usize::MAX; graph.len()],
             input_value: 0,
             output_value: 0,
+            dtype: DType::F32,
+            node_qp: None,
         }
+    }
+
+    fn qp_of_node(&self, node: usize) -> QuantParams {
+        self.node_qp.as_ref().map(|v| v[node]).unwrap_or(QuantParams::IDENT)
     }
 
     /// The storage layout a node's value uses: convs write their plan's
@@ -806,7 +1170,7 @@ impl<'a> Compiler<'a> {
         }
     }
 
-    fn new_value(&mut self, name: String, d: Dims, layout: IoLayout) -> usize {
+    fn new_value(&mut self, name: String, d: Dims, layout: IoLayout, qp: QuantParams) -> usize {
         self.values.push(Value {
             name,
             c: d.c,
@@ -817,6 +1181,7 @@ impl<'a> Compiler<'a> {
             offset: 0,
             def_t: 0,
             last_t: 0,
+            qp,
         });
         self.values.len() - 1
     }
@@ -837,7 +1202,8 @@ impl<'a> Compiler<'a> {
         for i in 0..self.graph.len() {
             let layout = self.value_layout(i, &consumers);
             let node = &self.graph.nodes[i];
-            let v = self.new_value(node.name.clone(), self.dims[i], layout);
+            let node_qp = self.qp_of_node(i);
+            let v = self.new_value(node.name.clone(), self.dims[i], layout, node_qp);
             self.node_value[i] = v;
             match &node.op {
                 GraphOp::Input { .. } => {
@@ -847,15 +1213,48 @@ impl<'a> Compiler<'a> {
                     let p = node.preds[0];
                     let pv = self.node_value[p];
                     let plan = &self.plans.layers[*layer].plan;
+                    if self.dtype == DType::I8 {
+                        // A quantized schedule can only drive plans that
+                        // expose the i8 surface, and the plan's params
+                        // must agree with the calibrated edge params —
+                        // scale chaining is constructed, not hoped for.
+                        let q = plan.as_quantized().ok_or_else(|| {
+                            Error::Shape(format!(
+                                "i8 net '{}': layer '{}' was planned by backend '{}' which \
+                                 has no i8 surface (plan with direct_i8 / QuantNet)",
+                                self.plans.net,
+                                node.name,
+                                plan.backend()
+                            ))
+                        })?;
+                        if plan.workspace_len() != 0 {
+                            return Err(Error::Shape(format!(
+                                "i8 net '{}': layer '{}' wants f32 workspace",
+                                self.plans.net, node.name
+                            )));
+                        }
+                        if q.input_qparams() != self.values[pv].qp
+                            || q.output_qparams() != node_qp
+                        {
+                            return Err(Error::Shape(format!(
+                                "i8 net '{}': layer '{}' was quantized with different edge \
+                                 params than the graph calibration",
+                                self.plans.net, node.name
+                            )));
+                        }
+                    }
                     let want = plan.input_layout();
                     let src = if self.values[pv].layout == want {
                         pv // §4 zero-repacking chain: read the region directly
                     } else {
                         let pd = self.dims[p];
+                        let src_qp = self.values[pv].qp;
                         let stage =
-                            self.new_value(format!("stage:{}", node.name), pd, want);
-                        let adapt =
+                            self.new_value(format!("stage:{}", node.name), pd, want, src_qp);
+                        let mut adapt =
                             Adapt::convert(pd.c, pd.h, pd.w, self.values[pv].layout, want);
+                        adapt.src_qp = src_qp;
+                        adapt.dst_qp = src_qp; // pure layout permutation
                         self.push_op(
                             Op::Adapt { src: pv, dst: stage, dst_c_off: 0, adapt },
                             node.branch,
@@ -864,7 +1263,7 @@ impl<'a> Compiler<'a> {
                     };
                     self.push_op(Op::Conv { layer: *layer, src, dst: v }, node.branch);
                 }
-                GraphOp::Pool { kh, kw, sh, sw, ph, pw } => {
+                GraphOp::Pool { kind, kh, kw, sh, sw, ph, pw } => {
                     let p = node.preds[0];
                     let pv = self.node_value[p];
                     let (pd, d) = (self.dims[p], self.dims[i]);
@@ -877,6 +1276,7 @@ impl<'a> Compiler<'a> {
                         dst_h: d.h,
                         dst_w: d.w,
                         dst_layout: self.values[v].layout,
+                        kind: *kind,
                         kh: *kh,
                         kw: *kw,
                         sh: *sh,
@@ -884,6 +1284,8 @@ impl<'a> Compiler<'a> {
                         ph: *ph,
                         pw: *pw,
                         accumulate: false,
+                        src_qp: self.values[pv].qp,
+                        dst_qp: node_qp,
                     };
                     self.push_op(Op::Adapt { src: pv, dst: v, dst_c_off: 0, adapt }, node.branch);
                 }
@@ -902,6 +1304,7 @@ impl<'a> Compiler<'a> {
                             dst_h: d.h,
                             dst_w: d.w,
                             dst_layout: IoLayout::Nchw,
+                            kind: PoolKind::Max,
                             kh: 1,
                             kw: 1,
                             sh: 1,
@@ -909,6 +1312,10 @@ impl<'a> Compiler<'a> {
                             ph: 0,
                             pw: 0,
                             accumulate: false,
+                            // Branches land on the concat's common scale
+                            // — the requantize fuses into the slice copy.
+                            src_qp: self.values[pv].qp,
+                            dst_qp: node_qp,
                         };
                         // The gather runs in the producing branch's lane.
                         self.push_op(
@@ -927,7 +1334,9 @@ impl<'a> Compiler<'a> {
                     // accounting charges them honestly). The ops share
                     // the join node's lane tag: accumulation into one
                     // region must stay sequenced, never fanned across
-                    // concurrent lanes.
+                    // concurrent lanes. In i8 schedules each operand is
+                    // requantized to the join's scale as it lands and
+                    // the accumulation saturates (see Adapt::apply_i8).
                     let d = self.dims[i];
                     for (j, &p) in node.preds.iter().enumerate() {
                         let pv = self.node_value[p];
@@ -939,6 +1348,8 @@ impl<'a> Compiler<'a> {
                             self.values[v].layout,
                         );
                         adapt.accumulate = j > 0;
+                        adapt.src_qp = self.values[pv].qp;
+                        adapt.dst_qp = node_qp;
                         self.push_op(
                             Op::Adapt { src: pv, dst: v, dst_c_off: 0, adapt },
                             node.branch,
@@ -1113,6 +1524,41 @@ mod tests {
         assert_eq!(q.at(&[0, 3, 3]), 15.0);
         assert!(pool_nchw(&src, 0, 1, 1, 1, 0, 0).is_err());
         assert!(pool_nchw(&src, 2, 2, 1, 1, 2, 0).is_err(), "pad >= kernel rejected");
+    }
+
+    #[test]
+    fn avg_pool_nchw_means_and_border_counts() {
+        let src = Tensor::iota(&[1, 4, 4]);
+        // 2x2/s2, no pad: means of {0,1,4,5} etc.
+        let p = avg_pool_nchw(&src, 2, 2, 2, 2, 0, 0).unwrap();
+        assert_eq!(p.shape(), &[1, 2, 2]);
+        assert_eq!(p.data(), &[2.5, 4.5, 10.5, 12.5]);
+        // 3x3/s1/p1: the corner window holds 4 valid cells — padding is
+        // excluded from sum AND count.
+        let q = avg_pool_nchw(&src, 3, 3, 1, 1, 1, 1).unwrap();
+        assert_eq!(q.at(&[0, 0, 0]), (0.0 + 1.0 + 4.0 + 5.0) / 4.0);
+        assert!(avg_pool_nchw(&src, 2, 2, 1, 1, 2, 0).is_err(), "pad >= kernel rejected");
+    }
+
+    #[test]
+    fn graph_avg_pool_matches_reference() {
+        // input -> conv -> avg_pool head, via the builder.
+        use crate::nets::{builder::GraphBuilder, NetPlans};
+        let mut b = GraphBuilder::new("avg");
+        let x = b.input(4, 8, 8).unwrap();
+        let c = b.conv("c0", x, 8, 3, 1, 1).unwrap();
+        let p = b.avg_pool("head", c, 4, 4, 0).unwrap();
+        let model = b.build(p).unwrap();
+        let plans = NetPlans::build_model(&model, "direct", &haswell(), 1).unwrap();
+        let kernels: Vec<Tensor> =
+            model.shapes.iter().enumerate().map(|(i, s)| crate::nets::net_kernel(i, s)).collect();
+        let runner = NetRunner::from_graph(plans, model.graph.clone(), 1).unwrap();
+        let input = Tensor::random(&[4, 8, 8], 0xA76);
+        let got = runner.forward(&input).unwrap();
+        let convolved = conv_naive(&input, &kernels[0], &model.shapes[0]).unwrap();
+        let want = avg_pool_nchw(&convolved, 4, 4, 4, 4, 0, 0).unwrap();
+        assert_eq!(got.shape(), want.shape());
+        assert!(got.allclose(&want, 1e-4, 1e-4), "avg head diverged: {}", got.max_abs_diff(&want));
     }
 
     #[test]

@@ -8,13 +8,17 @@ use super::{ConvAlgo, ConvPlan};
 use crate::arch::Machine;
 use crate::conv::params::select_c_ob;
 use crate::conv::ConvShape;
+use crate::quant::DirectI8Backend;
 use crate::tensor::Tensor;
 use crate::winograd::winograd_applicable;
 use crate::{Error, Result};
 
 /// Every backend name the default registry serves, selection-priority
-/// first. `"auto"` additionally resolves via [`BackendRegistry::auto`].
-pub const BACKEND_NAMES: [&str; 6] = ["direct", "reorder", "im2col", "fft", "winograd", "naive"];
+/// first. `"auto"` additionally resolves via [`BackendRegistry::auto`]
+/// (which never picks `direct_i8` — quantization is an explicit
+/// opt-in, not an accuracy-silent fallback).
+pub const BACKEND_NAMES: [&str; 7] =
+    ["direct", "reorder", "im2col", "fft", "winograd", "naive", "direct_i8"];
 
 /// A set of convolution backends addressable by name.
 pub struct BackendRegistry {
@@ -22,7 +26,7 @@ pub struct BackendRegistry {
 }
 
 impl Default for BackendRegistry {
-    /// Registry with all six built-in backends.
+    /// Registry with all seven built-in backends.
     fn default() -> Self {
         BackendRegistry {
             backends: vec![
@@ -32,6 +36,7 @@ impl Default for BackendRegistry {
                 Box::new(FftBackend),
                 Box::new(WinogradBackend),
                 Box::new(NaiveBackend),
+                Box::new(DirectI8Backend),
             ],
         }
     }
@@ -137,7 +142,7 @@ mod tests {
     }
 
     #[test]
-    fn all_six_backends_reachable_by_name() {
+    fn all_seven_backends_reachable_by_name() {
         let r = BackendRegistry::default();
         for name in BACKEND_NAMES {
             let b = r.get(name).unwrap_or_else(|| panic!("backend '{name}' missing"));
@@ -145,6 +150,16 @@ mod tests {
         }
         assert!(r.get("nope").is_none());
         assert_eq!(r.names().len(), BACKEND_NAMES.len());
+    }
+
+    #[test]
+    fn auto_never_picks_quantization_silently() {
+        let r = BackendRegistry::default();
+        for m in [haswell(), cortex_a57()] {
+            for l in crate::nets::all_layers().into_iter().step_by(7) {
+                assert_ne!(r.auto(&l.shape, &m).name(), "direct_i8", "{}", l.name);
+            }
+        }
     }
 
     #[test]

@@ -32,16 +32,17 @@ fn check_len(what: &str, got: usize, want: usize) -> Result<()> {
     Ok(())
 }
 
-/// Slice-based `[C][H][W]` -> `[C/c_b][H][W][c_b]` pack into a
-/// caller-owned buffer — the allocation-free primitive the serving hot
-/// path ([`crate::engine::PlanEngine`]) stages inputs with.
-pub fn pack_io_slice(
-    src: &[f32],
+/// Element-generic `[C][H][W]` -> `[C/c_b][H][W][c_b]` pack into a
+/// caller-owned buffer. The layouts are pure permutations, so the pack
+/// is element-type agnostic — the quantized engine runs it over `i8`
+/// maps, the f32 stack over `f32`.
+pub fn pack_io_slice_t<T: Copy>(
+    src: &[T],
     c: usize,
     h: usize,
     w: usize,
     c_b: usize,
-    dst: &mut [f32],
+    dst: &mut [T],
 ) -> Result<()> {
     check_cb(c, c_b)?;
     check_len("pack_io_slice src", src.len(), c * h * w)?;
@@ -59,15 +60,15 @@ pub fn pack_io_slice(
     Ok(())
 }
 
-/// Slice-based `[C/c_b][H][W][c_b]` -> `[C][H][W]` unpack into a
-/// caller-owned buffer.
-pub fn unpack_io_slice(
-    src: &[f32],
+/// Element-generic `[C/c_b][H][W][c_b]` -> `[C][H][W]` unpack into a
+/// caller-owned buffer (see [`pack_io_slice_t`]).
+pub fn unpack_io_slice_t<T: Copy>(
+    src: &[T],
     c: usize,
     h: usize,
     w: usize,
     c_b: usize,
-    dst: &mut [f32],
+    dst: &mut [T],
 ) -> Result<()> {
     check_cb(c, c_b)?;
     check_len("unpack_io_slice src", src.len(), c * h * w)?;
@@ -83,6 +84,33 @@ pub fn unpack_io_slice(
         }
     }
     Ok(())
+}
+
+/// Slice-based `[C][H][W]` -> `[C/c_b][H][W][c_b]` pack into a
+/// caller-owned buffer — the allocation-free primitive the serving hot
+/// path ([`crate::engine::PlanEngine`]) stages inputs with.
+pub fn pack_io_slice(
+    src: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    c_b: usize,
+    dst: &mut [f32],
+) -> Result<()> {
+    pack_io_slice_t(src, c, h, w, c_b, dst)
+}
+
+/// Slice-based `[C/c_b][H][W][c_b]` -> `[C][H][W]` unpack into a
+/// caller-owned buffer.
+pub fn unpack_io_slice(
+    src: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    c_b: usize,
+    dst: &mut [f32],
+) -> Result<()> {
+    unpack_io_slice_t(src, c, h, w, c_b, dst)
 }
 
 /// Slice-based `[C][H][W]` -> `[H][W][C]` into a caller-owned buffer.
@@ -268,6 +296,23 @@ mod tests {
         assert_eq!(nhwc, nchw_to_nhwc(&t).unwrap().into_vec());
         nhwc_to_nchw_slice(&nhwc, 8, 3, 5, &mut back).unwrap();
         assert_eq!(back, t.data());
+    }
+
+    #[test]
+    fn generic_pack_round_trips_i8() {
+        // The §4 layouts are element-type agnostic permutations: the
+        // quantized engine packs i8 maps through the same helpers.
+        let src: Vec<i8> = (0..8 * 3 * 5).map(|v| (v % 251) as i8).collect();
+        let mut packed = vec![0i8; src.len()];
+        let mut back = vec![0i8; src.len()];
+        pack_io_slice_t(&src, 8, 3, 5, 4, &mut packed).unwrap();
+        unpack_io_slice_t(&packed, 8, 3, 5, 4, &mut back).unwrap();
+        assert_eq!(back, src);
+        // Same permutation as the f32 path, element for element.
+        let as_f: Vec<f32> = src.iter().map(|&v| v as f32).collect();
+        let mut packed_f = vec![0.0f32; src.len()];
+        pack_io_slice(&as_f, 8, 3, 5, 4, &mut packed_f).unwrap();
+        assert!(packed.iter().zip(&packed_f).all(|(&q, &f)| q as f32 == f));
     }
 
     #[test]

@@ -19,8 +19,8 @@ mod kernel;
 
 pub use io::{
     blocked_io_index, from_blocked_io, io_layout_len, nchw_to_nhwc, nchw_to_nhwc_slice,
-    nhwc_to_nchw, nhwc_to_nchw_slice, pack_io_slice, to_blocked_io, to_blocked_io_nhwc,
-    unpack_io_slice,
+    nhwc_to_nchw, nhwc_to_nchw_slice, pack_io_slice, pack_io_slice_t, to_blocked_io,
+    to_blocked_io_nhwc, unpack_io_slice, unpack_io_slice_t,
 };
 pub use kernel::{
     blocked_kernel_index, from_blocked_kernel, kernel_layout_len, to_blocked_kernel,

@@ -35,7 +35,12 @@
 //! `fft`, `winograd`, `naive` — sits behind [`engine::BackendRegistry`],
 //! each reporting its memory overhead through the same
 //! `retained_bytes()`/`workspace_bytes()` contract so the paper's
-//! overhead table falls out of the API uniformly.
+//! overhead table falls out of the API uniformly. A seventh backend,
+//! [`quant`]'s `direct_i8`, carries the zero-overhead property into
+//! int8: weights quantized per output channel, i32 accumulation over
+//! the same blocked layouts, requantize fused into the epilogue —
+//! quartering weight and activation bytes for the embedded-memory
+//! regime the paper motivates (see the [`quant`] module docs).
 //!
 //! ## Whole networks: the graph IR and the arena-sizing contract
 //!
@@ -120,6 +125,7 @@ pub mod layout;
 pub mod lowering;
 pub mod metrics;
 pub mod nets;
+pub mod quant;
 pub mod runtime;
 pub mod sim;
 pub mod tensor;

@@ -8,17 +8,20 @@
 //!                               plan every applicable backend for a layer:
 //!                               plan/exec time + memory-overhead table
 //!   plan-net [--net N | --model path.json] [--backend B] [--threads P]
-//!            [--autotune]       per-layer plan table for a whole network
+//!            [--autotune] [--dtype f32|i8]
+//!                               per-layer plan table for a whole network
 //!                               (built-in or JSON model spec), with
 //!                               measured per-layer thread counts under
-//!                               --autotune
+//!                               --autotune; --dtype i8 calibrates and
+//!                               quantizes the net and reports the 4x
+//!                               weight/arena shrink next to f32
 //!   simulate [--net N] [--arch A] [--threads P]
 //!                               simulated per-layer comparison (Fig 4 rows)
 //!   run-layer [--layer NAME] [--backend B] [--threads P]
 //!                               host-measured single layer via the engine
 //!   serve [--layer NAME | --net NET | --model path.json] [--backend B]
 //!         [--requests N] [--clients C] [--workers W] [--autotune]
-//!         [--branch-lanes L]
+//!         [--branch-lanes L] [--dtype f32|i8]
 //!                               serve a layer (cached ConvPlan) or a whole
 //!                               network — built-in or JSON model spec —
 //!                               (NetRunner over the dataflow graph +
@@ -38,6 +41,7 @@ use dconv::engine::{BackendRegistry, ConvAlgo, ConvPlan, NetEngine, NetRunner, P
 use dconv::layout::{io_layout_len, kernel_layout_len};
 use dconv::metrics::{gflops, time_it, Table};
 use dconv::nets::{self, NetPlans};
+use dconv::quant::{DType, QuantNet, CALIBRATION_SEED};
 use dconv::sim::{estimate, Algo};
 use dconv::tensor::Tensor;
 
@@ -69,11 +73,12 @@ fn help() {
            backends    compare every backend on one layer [--layer alexnet/conv3]\n\
            plan-net    plan a whole net through the engine\n\
                        [--net N | --model path.json] [--backend auto] [--autotune]\n\
+                       [--dtype f32|i8]  (i8: calibrated int8 plans, 4x smaller arena)\n\
            simulate    simulated Fig-4 comparison [--net N --arch intel|amd|arm --threads P]\n\
            run-layer   measure one layer on this host [--layer alexnet/conv3 --backend auto]\n\
            serve       serve a layer or whole net\n\
                        [--layer NAME | --net N | --model path.json] [--workers W]\n\
-                       [--autotune] [--branch-lanes L]\n\
+                       [--autotune] [--branch-lanes L] [--dtype f32|i8]\n\
            verify      verify PJRT artifacts against goldens [--dir artifacts] (pjrt feature)"
     );
 }
@@ -231,6 +236,38 @@ enum NetSource {
 }
 
 impl NetSource {
+    /// Effective element type: the `--dtype` flag wins, else a JSON
+    /// model's own `"dtype"` field, else f32.
+    fn dtype(&self, args: &Args) -> DType {
+        if let Some(s) = args.get("dtype") {
+            return DType::from_str_opt(s).unwrap_or_else(|| {
+                eprintln!("unknown --dtype '{s}' (f32|i8)");
+                std::process::exit(1);
+            });
+        }
+        match self {
+            NetSource::Model(model) => model.dtype,
+            NetSource::Table(_) => DType::F32,
+        }
+    }
+
+    /// The source as a graph [`nets::Model`] — what quantized planning
+    /// needs (per-edge calibration runs over the graph). Every built-in
+    /// net has a builder program, so `--net NAME --dtype i8` works for
+    /// all of them.
+    fn into_model(self) -> nets::Model {
+        match self {
+            NetSource::Model(model) => model,
+            NetSource::Table(net) => nets::model_by_name(&net).unwrap_or_else(|| {
+                eprintln!(
+                    "--dtype i8 plans over the model graph; unknown net '{net}' \
+                     (alexnet|googlenet|vgg16|resnet_micro or --model path.json)"
+                );
+                std::process::exit(1);
+            }),
+        }
+    }
+
     fn resolve(args: &Args) -> NetSource {
         if let Some(path) = args.get("model") {
             return match nets::Model::from_file(path) {
@@ -297,6 +334,9 @@ fn plan_net(args: &Args) {
     let p = args.get_usize("threads", 1);
     let m = arch::host();
     let source = NetSource::resolve(args);
+    if source.dtype(args) == DType::I8 {
+        return plan_net_i8(args, source, &m);
+    }
     let net = source.name();
     let (plans, secs) = if args.flag("autotune") {
         let cands = thread_candidates();
@@ -360,6 +400,90 @@ fn plan_net(args: &Args) {
             r.workspace_bytes()
         ),
         Err(e) => println!("NetRunner: net is not graph-executable ({e})"),
+    }
+}
+
+/// `plan-net --dtype i8`: calibrate from the synthetic sample batch,
+/// quantize every layer, and print the i8 plan table next to the f32
+/// numbers — weight and activation-arena shrink included.
+fn plan_net_i8(args: &Args, source: NetSource, m: &Machine) {
+    let threads = args.get_usize("threads", 1);
+    if args.flag("autotune") {
+        println!("note: --autotune measures f32 plans and is ignored with --dtype i8");
+    }
+    let model = source.into_model();
+    println!(
+        "calibrating {} activation ranges from a sample batch (seed {CALIBRATION_SEED:#x}) ...",
+        model.name
+    );
+    let (q, secs) = time_it(|| match QuantNet::build_model(&model, m, threads) {
+        Ok(q) => q,
+        Err(e) => die(e),
+    });
+    println!(
+        "quantized {} ({} layers, per-channel int8 weights) in {:.1} ms\n",
+        model.name,
+        q.plans.layers.len(),
+        secs * 1e3
+    );
+    let mut t = Table::new(&[
+        "layer", "backend", "weights f32 KiB", "weights i8 KiB", "out scale", "out zp",
+    ]);
+    for l in &q.plans.layers {
+        let quant = l.plan.as_quantized().expect("direct_i8 plans expose the i8 surface");
+        let out_qp = quant.output_qparams();
+        t.row(vec![
+            l.layer.name.clone(),
+            l.backend.into(),
+            format!("{:.1}", l.layer.shape.kernel_bytes() as f64 / 1024.0),
+            format!("{:.1}", quant.weight_bytes() as f64 / 1024.0),
+            format!("{:.3e}", out_qp.scale),
+            out_qp.zero_point.to_string(),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+
+    // The f32 twin over the same graph, for the honest comparison.
+    let f32_plans = match NetPlans::build_model(&model, "direct", m, threads) {
+        Ok(p) => p,
+        Err(e) => die(e),
+    };
+    let f32_runner = match NetRunner::from_graph(f32_plans, model.graph.clone(), 1) {
+        Ok(r) => r,
+        Err(e) => die(e),
+    };
+    let w_f32: u64 = q.plans.layers.iter().map(|l| l.layer.shape.kernel_bytes()).sum();
+    let w_i8: u64 = q
+        .plans
+        .layers
+        .iter()
+        .map(|l| l.plan.as_quantized().expect("direct_i8").weight_bytes())
+        .sum();
+    let runner = match q.runner(1) {
+        Ok(r) => r,
+        Err(e) => die(e),
+    };
+    println!(
+        "\nweights    : {} B f32 -> {} B i8 ({:.2}x smaller)",
+        w_f32,
+        w_i8,
+        w_f32 as f64 / w_i8 as f64
+    );
+    println!(
+        "activations: {} B f32 arena -> {} B i8 arena ({:.2}x smaller, {} elements each)",
+        f32_runner.activation_bytes(),
+        runner.activation_bytes(),
+        f32_runner.activation_bytes() as f64 / runner.activation_bytes() as f64,
+        runner.arena_floats()
+    );
+    println!(
+        "overhead   : retained {} B + workspace {} B = {} B network-wide",
+        runner.retained_bytes(),
+        runner.workspace_bytes(),
+        runner.overhead_bytes()
+    );
+    if runner.overhead_bytes() == 0 {
+        println!("zero memory overhead in int8 ✓ (the paper's claim, at a quarter of the bytes)");
     }
 }
 
@@ -456,6 +580,13 @@ fn serve(args: &Args) {
     if args.get("model").is_some() || args.get("net").is_some() {
         return serve_net(args);
     }
+    if matches!(args.get("dtype"), Some(d) if DType::from_str_opt(d) != Some(DType::F32)) {
+        eprintln!(
+            "--dtype i8 is a whole-network mode (calibration runs over the model graph); \
+             use --net NAME or --model path.json instead of --layer"
+        );
+        std::process::exit(1);
+    }
     let name = args.get_or("layer", "googlenet/inception_3a/3x3");
     let backend = args.get_or("backend", "auto");
     let requests = args.get_usize("requests", 200);
@@ -521,28 +652,49 @@ fn serve_net(args: &Args) {
     let m = arch::host();
     let source = NetSource::resolve(args);
     let net = source.name();
-    let plans = if args.flag("autotune") {
-        match source.build_autotuned(backend, &m, &thread_candidates()) {
-            Ok((plans, report)) => {
-                let tuned: usize = report.iter().filter(|c| c.threads > 1).count();
-                println!("autotuned per-layer threads: {tuned}/{} layers kept > 1", report.len());
-                plans
-            }
+    let dtype = source.dtype(args);
+    let runner = if dtype == DType::I8 {
+        if args.flag("autotune") {
+            println!("note: --autotune measures f32 plans and is ignored with --dtype i8");
+        }
+        let model = source.into_model();
+        println!(
+            "calibrating {} activation ranges from a sample batch (seed {CALIBRATION_SEED:#x}) \
+             ...",
+            model.name
+        );
+        match QuantNet::build_model(&model, &m, threads).and_then(|q| q.runner(lanes)) {
+            Ok(r) => r,
             Err(e) => die(e),
         }
     } else {
-        match source.build(backend, &m, threads) {
-            Ok(plans) => plans,
+        let plans = if args.flag("autotune") {
+            match source.build_autotuned(backend, &m, &thread_candidates()) {
+                Ok((plans, report)) => {
+                    let tuned: usize = report.iter().filter(|c| c.threads > 1).count();
+                    println!(
+                        "autotuned per-layer threads: {tuned}/{} layers kept > 1",
+                        report.len()
+                    );
+                    plans
+                }
+                Err(e) => die(e),
+            }
+        } else {
+            match source.build(backend, &m, threads) {
+                Ok(plans) => plans,
+                Err(e) => die(e),
+            }
+        };
+        match source.runner(plans, lanes) {
+            Ok(r) => r,
             Err(e) => die(e),
         }
     };
-    let runner = match source.runner(plans, lanes) {
-        Ok(r) => r,
-        Err(e) => die(e),
-    };
     println!(
-        "serving {net}: {} graph nodes / {} layers, retained {} B + shared workspace {} B \
-         (network overhead {} B), activation arena {} B per worker, {} branch lane(s)",
+        "serving {net} ({dtype}): {} graph nodes / {} layers, retained {} B + shared \
+         workspace {} B (network overhead {} B), activation arena {} B per worker, {} branch \
+         lane(s)",
         runner.graph().len(),
         runner.layers(),
         runner.retained_bytes(),

@@ -44,7 +44,7 @@ use std::collections::BTreeMap;
 use crate::conv::ConvShape;
 use crate::{Error, Result};
 
-use super::graph::{pool_out, pool_spec, BranchTag, Dims, GraphNode, GraphOp, NetGraph};
+use super::graph::{pool_out, pool_spec, BranchTag, Dims, GraphNode, GraphOp, NetGraph, PoolKind};
 use super::spec::Model;
 use super::INCEPTION;
 
@@ -188,6 +188,20 @@ impl GraphBuilder {
         self.pool_geom(name, pred, k, k, s, s, p, p)
     }
 
+    /// Square average-pool (classifier-head semantics: the mean over
+    /// the in-bounds window cells; padding is excluded from sum and
+    /// count).
+    pub fn avg_pool(
+        &mut self,
+        name: &str,
+        pred: NodeId,
+        k: usize,
+        s: usize,
+        p: usize,
+    ) -> Result<NodeId> {
+        self.pool_kind_geom(name, pred, PoolKind::Avg, k, k, s, s, p, p)
+    }
+
     /// Max-pool with full geometry.
     #[allow(clippy::too_many_arguments)] // the pool geometry tuple
     pub fn pool_geom(
@@ -201,12 +215,29 @@ impl GraphBuilder {
         ph: usize,
         pw: usize,
     ) -> Result<NodeId> {
+        self.pool_kind_geom(name, pred, PoolKind::Max, kh, kw, sh, sw, ph, pw)
+    }
+
+    /// Pool with full geometry and an explicit [`PoolKind`].
+    #[allow(clippy::too_many_arguments)] // the pool geometry tuple
+    pub fn pool_kind_geom(
+        &mut self,
+        name: &str,
+        pred: NodeId,
+        kind: PoolKind,
+        kh: usize,
+        kw: usize,
+        sh: usize,
+        sw: usize,
+        ph: usize,
+        pw: usize,
+    ) -> Result<NodeId> {
         let d = self.check_pred(name, pred)?;
         let h = pool_out(d.h, kh, sh, ph).map_err(|e| self.err(format!("pool '{name}': {e}")))?;
         let w = pool_out(d.w, kw, sw, pw).map_err(|e| self.err(format!("pool '{name}': {e}")))?;
         self.push(
             name,
-            GraphOp::Pool { kh, kw, sh, sw, ph, pw },
+            GraphOp::Pool { kind, kh, kw, sh, sw, ph, pw },
             vec![pred.0],
             Dims { c: d.c, h, w },
         )
@@ -308,7 +339,12 @@ impl GraphBuilder {
         }
         let graph = NetGraph { net: self.net.clone(), nodes: self.nodes };
         graph.validate(&self.shapes)?;
-        Ok(Model { name: self.net, graph, shapes: self.shapes })
+        Ok(Model {
+            name: self.net,
+            graph,
+            shapes: self.shapes,
+            dtype: crate::quant::DType::F32,
+        })
     }
 }
 
@@ -586,6 +622,21 @@ mod tests {
         let _c1 = b.conv("c1", c0, 8, 3, 1, 1).unwrap();
         // c1 is the last node; naming c0 the output leaves c1 dead.
         assert!(b.build(c0).is_err());
+    }
+
+    #[test]
+    fn avg_pool_builds_and_rejects_bad_geometry() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input(4, 8, 8).unwrap();
+        let p = b.avg_pool("head", x, 2, 2, 0).unwrap();
+        assert_eq!(b.dims_of(p), Dims { c: 4, h: 4, w: 4 });
+        // Bad geometry is rejected exactly like max pooling: pad >=
+        // kernel leaves windows fully outside the image...
+        assert!(b.avg_pool("bad_pad", x, 2, 1, 2).is_err());
+        // ...and a window larger than the padded input cannot gather.
+        assert!(b.pool_kind_geom("bad_k", x, PoolKind::Avg, 11, 11, 1, 1, 0, 0).is_err());
+        // zero stride
+        assert!(b.pool_kind_geom("bad_s", x, PoolKind::Avg, 2, 2, 0, 0, 0, 0).is_err());
     }
 
     #[test]

@@ -15,9 +15,10 @@
 //! * [`GraphOp::Input`] — the network image (exactly one, node 0);
 //! * [`GraphOp::Conv`] — one row of the layer table, by index, so a
 //!   [`super::NetPlans`] table maps 1:1 onto the graph;
-//! * [`GraphOp::Pool`] — max-pool glue with explicit kernel/stride/pad
-//!   (inter-block pools are derived from the shape tables via
-//!   [`pool_spec`]; inception branch pools are the classic 3x3/s1/p1);
+//! * [`GraphOp::Pool`] — pooling glue with explicit kernel/stride/pad
+//!   and a [`PoolKind`] (max for the paper nets' inter-block and branch
+//!   pools — derived from the shape tables via [`pool_spec`], or the
+//!   classic 3x3/s1/p1 — average for classifier heads);
 //! * [`GraphOp::Concat`] — channel concatenation of same-extent maps;
 //! * [`GraphOp::Add`] — elementwise residual join of identically shaped
 //!   maps (the ResNet skip connection), which keeps *both* operands
@@ -73,6 +74,37 @@ pub struct BranchTag {
     pub lane: usize,
 }
 
+/// Pooling reduction of a [`GraphOp::Pool`] node.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PoolKind {
+    /// Max pooling; padding cells act as `-inf` (never win the max).
+    #[default]
+    Max,
+    /// Average pooling over the *in-bounds* window cells (running sum
+    /// scaled by the reciprocal valid-cell count; padding cells are
+    /// excluded from both sum and count — classifier-head semantics).
+    Avg,
+}
+
+impl PoolKind {
+    /// The JSON spec spelling (`"max"` / `"avg"`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PoolKind::Max => "max",
+            PoolKind::Avg => "avg",
+        }
+    }
+
+    /// Parse the JSON spec spelling.
+    pub fn from_str_opt(s: &str) -> Option<PoolKind> {
+        match s {
+            "max" => Some(PoolKind::Max),
+            "avg" | "average" => Some(PoolKind::Avg),
+            _ => None,
+        }
+    }
+}
+
 /// What a graph node computes.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum GraphOp {
@@ -80,9 +112,9 @@ pub enum GraphOp {
     Input { c: usize, h: usize, w: usize },
     /// One conv layer: an index into the net's layer/plan table.
     Conv { layer: usize },
-    /// Max-pool with explicit geometry; `pad` cells beyond the border
-    /// act as `-inf` (they never win the max).
-    Pool { kh: usize, kw: usize, sh: usize, sw: usize, ph: usize, pw: usize },
+    /// Pooling with explicit geometry (max or average, see
+    /// [`PoolKind`]).
+    Pool { kind: PoolKind, kh: usize, kw: usize, sh: usize, sw: usize, ph: usize, pw: usize },
     /// Channel concatenation of all predecessors (equal `H x W`).
     Concat,
     /// Elementwise sum of all predecessors (identical `C x H x W`) —
@@ -247,7 +279,7 @@ impl NetGraph {
                     }
                     Dims { c: s.c_o, h: s.h_o(), w: s.w_o() }
                 }
-                GraphOp::Pool { kh, kw, sh, sw, ph, pw } => {
+                GraphOp::Pool { kind: _, kh, kw, sh, sw, ph, pw } => {
                     let [p] = n.preds[..] else {
                         return Err(Error::Shape(format!(
                             "{}: pool node '{}' needs exactly one predecessor",

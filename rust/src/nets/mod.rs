@@ -11,7 +11,7 @@ pub mod plans;
 pub mod spec;
 
 pub use builder::{model_by_name, GraphBuilder, NodeId};
-pub use graph::{pool_spec, BranchTag, Dims, GraphNode, GraphOp, NetGraph};
+pub use graph::{pool_spec, BranchTag, Dims, GraphNode, GraphOp, NetGraph, PoolKind};
 pub use plans::{net_kernel, AutotuneChoice, NetPlans, PlannedLayer};
 pub use spec::Model;
 

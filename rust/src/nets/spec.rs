@@ -27,13 +27,20 @@
 //!
 //! * Nodes appear in topological order; predecessors are referenced by
 //!   node name; the **last node is the network output**.
+//! * The optional root field `"dtype"` selects the element type the
+//!   network is planned and executed in: `"f32"` (default) or `"i8"`
+//!   (the quantized engine — per-edge min/max calibration, `direct_i8`
+//!   plans, an i8 byte arena; see [`crate::quant`]). The CLI `--dtype`
+//!   flag overrides it.
 //! * `conv` — `c_o` output channels; kernel `k` (or `kh`/`kw` for
 //!   rectangular); `stride` (default 1) and `pad` (default 0) are
 //!   symmetric. Input channels and extents are inferred from `pred`.
 //!   Conv layers are numbered in node order; that numbering is the
 //!   plan-table index (and the deterministic weight seed).
-//! * `pool` — max-pool; kernel `k` (or `kh`/`kw`), stride `s` (or
-//!   `sh`/`sw`, default = kernel), pad `p` (or `ph`/`pw`, default 0).
+//! * `pool` — kernel `k` (or `kh`/`kw`), stride `s` (or `sh`/`sw`,
+//!   default = kernel), pad `p` (or `ph`/`pw`, default 0), and `kind`
+//!   (`"max"`, the default, or `"avg"` — average over the in-bounds
+//!   window cells, the classifier-head reduction).
 //! * `concat` / `add` — two or more `preds`; concat joins channels of
 //!   equal-extent maps, add sums identically shaped maps (the residual
 //!   join).
@@ -51,20 +58,24 @@ use std::path::Path;
 
 use crate::conv::ConvShape;
 use crate::json::Json;
+use crate::quant::DType;
 use crate::{Error, Result};
 
 use super::builder::GraphBuilder;
-use super::graph::{Dims, GraphOp, NetGraph};
+use super::graph::{Dims, GraphOp, NetGraph, PoolKind};
 use super::Layer;
 
 /// A complete model description: the dataflow graph and the conv-layer
-/// shape table its `Conv` nodes index. Built by [`GraphBuilder::build`]
-/// or parsed from JSON ([`Model::from_json`]).
+/// shape table its `Conv` nodes index, plus the element type the net
+/// is planned in ([`DType::F32`] unless the spec opts into `"i8"`).
+/// Built by [`GraphBuilder::build`] or parsed from JSON
+/// ([`Model::from_json`]).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Model {
     pub name: String,
     pub graph: NetGraph,
     pub shapes: Vec<ConvShape>,
+    pub dtype: DType,
 }
 
 impl Model {
@@ -101,6 +112,17 @@ impl Model {
             .get("name")
             .and_then(Json::as_str)
             .ok_or_else(|| Error::Parse("model spec: missing string field 'name'".into()))?;
+        let dtype = match root.get("dtype") {
+            None => DType::F32,
+            Some(v) => {
+                let s = v.as_str().ok_or_else(|| {
+                    Error::Parse("model spec: 'dtype' must be a string".into())
+                })?;
+                DType::from_str_opt(s).ok_or_else(|| {
+                    Error::Parse(format!("model spec: unknown dtype '{s}' (f32|i8)"))
+                })?
+            }
+        };
         let nodes = root
             .get("nodes")
             .and_then(Json::as_arr)
@@ -138,10 +160,26 @@ impl Model {
                 }
                 "pool" => {
                     let pred = lookup(&ids, spec, node_name)?;
+                    let kind = match spec.get("kind") {
+                        None => PoolKind::Max,
+                        Some(v) => {
+                            let s = v.as_str().ok_or_else(|| {
+                                Error::Parse(format!(
+                                    "model spec node '{node_name}': 'kind' must be a string"
+                                ))
+                            })?;
+                            PoolKind::from_str_opt(s).ok_or_else(|| {
+                                Error::Parse(format!(
+                                    "model spec node '{node_name}': unknown pool kind '{s}' \
+                                     (max|avg)"
+                                ))
+                            })?
+                        }
+                    };
                     let (kh, kw) = kernel_pair(spec, node_name, "k", "kh", "kw", None)?;
                     let (sh, sw) = kernel_pair(spec, node_name, "s", "sh", "sw", Some((kh, kw)))?;
                     let (ph, pw) = kernel_pair(spec, node_name, "p", "ph", "pw", Some((0, 0)))?;
-                    b.pool_geom(node_name, pred, kh, kw, sh, sw, ph, pw)?
+                    b.pool_kind_geom(node_name, pred, kind, kh, kw, sh, sw, ph, pw)?
                 }
                 "concat" => b.concat(node_name, &pred_list(&ids, spec, node_name)?)?,
                 "add" => b.add(node_name, &pred_list(&ids, spec, node_name)?)?,
@@ -155,7 +193,9 @@ impl Model {
             ids.insert(node_name.to_string(), id);
             last = Some(id);
         }
-        b.build(last.expect("nodes checked non-empty"))
+        let mut model = b.build(last.expect("nodes checked non-empty"))?;
+        model.dtype = dtype;
+        Ok(model)
     }
 
     /// Load a model spec from a JSON file.
@@ -200,9 +240,14 @@ impl Model {
                         o.insert("stride".into(), num(s.stride));
                         o.insert("pad".into(), num(s.pad));
                     }
-                    GraphOp::Pool { kh, kw, sh, sw, ph, pw } => {
+                    GraphOp::Pool { kind, kh, kw, sh, sw, ph, pw } => {
                         o.insert("op".into(), Json::Str("pool".into()));
                         o.insert("pred".into(), pred_name(n.preds[0]));
+                        if *kind != PoolKind::Max {
+                            // Max is the default; omitting it keeps
+                            // previously committed specs byte-stable.
+                            o.insert("kind".into(), Json::Str(kind.as_str().into()));
+                        }
                         o.insert("kh".into(), num(*kh));
                         o.insert("kw".into(), num(*kw));
                         o.insert("sh".into(), num(*sh));
@@ -224,6 +269,10 @@ impl Model {
             .collect();
         let mut root = BTreeMap::new();
         root.insert("name".into(), Json::Str(self.name.clone()));
+        if self.dtype != DType::F32 {
+            // f32 is the default; omitting it keeps old specs stable.
+            root.insert("dtype".into(), Json::Str(self.dtype.as_str().into()));
+        }
         root.insert("nodes".into(), Json::Arr(nodes));
         Json::Obj(root).to_string_pretty()
     }
@@ -237,7 +286,7 @@ fn check_keys(spec: &Json, node: &str, op: &str) -> Result<()> {
     let allowed: &[&str] = match op {
         "input" => &["c", "h", "w"],
         "conv" => &["pred", "c_o", "k", "kh", "kw", "stride", "pad"],
-        "pool" => &["pred", "k", "kh", "kw", "s", "sh", "sw", "p", "ph", "pw"],
+        "pool" => &["pred", "kind", "k", "kh", "kw", "s", "sh", "sw", "p", "ph", "pw"],
         "concat" | "add" => &["preds"],
         _ => &[], // unknown op is reported by the caller's match
     };
@@ -398,6 +447,39 @@ mod tests {
         let m = builder::googlenet();
         let again = Model::from_json(&m.to_json()).unwrap();
         assert_eq!(m, again, "googlenet spec must round-trip including branch tags");
+    }
+
+    #[test]
+    fn dtype_and_pool_kind_round_trip() {
+        let spec = MINI
+            .replace("\"name\": \"mini\"", "\"name\": \"mini\", \"dtype\": \"i8\"")
+            .replace(
+                r#"{"op": "pool", "name": "down", "pred": "join", "k": 2, "s": 2}"#,
+                r#"{"op": "pool", "name": "down", "pred": "join", "kind": "avg", "k": 2, "s": 2}"#,
+            );
+        let m = Model::from_json(&spec).unwrap();
+        assert_eq!(m.dtype, DType::I8);
+        let pool = m.graph.nodes.iter().find(|n| n.name == "down").unwrap();
+        assert!(matches!(pool.op, GraphOp::Pool { kind: PoolKind::Avg, .. }));
+        let again = Model::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, again, "dtype + avg kind must survive the round trip");
+        // Defaults stay implicit: an f32/max model's JSON has neither key.
+        let plain = Model::from_json(MINI).unwrap();
+        assert_eq!(plain.dtype, DType::F32);
+        assert!(!plain.to_json().contains("dtype"));
+        assert!(!plain.to_json().contains("kind"));
+    }
+
+    #[test]
+    fn rejects_bad_dtype_and_pool_kind() {
+        let bad_dtype =
+            MINI.replace("\"name\": \"mini\"", "\"name\": \"mini\", \"dtype\": \"f16\"");
+        assert!(Model::from_json(&bad_dtype).is_err());
+        let bad_kind = MINI.replace(
+            r#""name": "down", "pred": "join""#,
+            r#""name": "down", "pred": "join", "kind": "median""#,
+        );
+        assert!(Model::from_json(&bad_kind).is_err());
     }
 
     #[test]

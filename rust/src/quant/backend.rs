@@ -1,0 +1,300 @@
+//! [`DirectI8Backend`] — the engine's seventh backend (`"direct_i8"`).
+//!
+//! A [`DirectI8Plan`] owns the per-output-channel-quantized §4 blocked
+//! i8 kernel plus the requantize multipliers, and executes through the
+//! shared integer core in [`super::direct`]:
+//!
+//! * through the ordinary f32 [`ConvPlan`] contract (inputs quantized
+//!   on the fly per load, outputs dequantized per store — **no**
+//!   staging buffer, so `workspace_bytes() == 0` is honest);
+//! * through [`QuantExecute`] on real i8 slices — the byte-arena hot
+//!   path the quantized [`crate::engine::NetRunner`] drives.
+//!
+//! Both paths share every integer operation, so their quantized values
+//! are bit-identical.
+//!
+//! # Memory accounting
+//!
+//! The plan's weights are the caller's OIHW f32 kernel *re-expressed*
+//! in i8 — a quarter of [`ConvShape::kernel_bytes`] — plus `8·C_o`
+//! bytes of multipliers, so under the engine's accounting rule (held
+//! bytes minus the conventional weight storage the plan replaces) the
+//! retained overhead is 0 on every benchmark layer, and
+//! [`QuantExecute::weight_bytes`] reports the ~4x shrink explicitly.
+//!
+//! # Default calibration
+//!
+//! Planned standalone (through the registry, without a network-level
+//! calibration pass), the plan self-calibrates: activations are assumed
+//! in `[-1, 1)` (the crate's synthetic serving inputs) and the output
+//! range is measured by running the layer once in f32 on a seeded
+//! sample image, inflated 1.5x as clipping headroom. Whole-network
+//! planning ([`super::QuantNet`]) replaces both with per-edge min/max
+//! calibration via [`DirectI8Plan::with_params`].
+
+use super::direct::{conv_quant_core, QuantGeom};
+use super::params::{
+    per_channel_weight_scales, quantize, requant_multiplier, QuantParams,
+};
+use super::QuantExecute;
+use crate::arch::Machine;
+use crate::conv::{conv_direct_blocked_into, select_params, BlockParams, ConvShape};
+use crate::engine::{check_execute_buffers, retained_over_kernel, ConvAlgo, ConvPlan};
+use crate::layout::{blocked_kernel_index, to_blocked_io, to_blocked_kernel, IoLayout};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Seed of the synthetic sample image the standalone (registry) plan
+/// path calibrates its output range with.
+const SAMPLE_SEED: u64 = 0xCA11B;
+
+/// Int8 direct convolution behind the engine API. See the module docs.
+pub struct DirectI8Backend;
+
+/// A planned int8 direct-convolution layer.
+pub struct DirectI8Plan {
+    shape: ConvShape,
+    bp: BlockParams,
+    threads: usize,
+    /// §4 blocked kernel `[C_o/C_ob][C_i/C_ib][H_f][W_f][C_ib][C_ob]`,
+    /// symmetric per-output-channel int8.
+    kernel_q: Vec<i8>,
+    /// Per-output-channel requantize multipliers (`s_in·s_w_j/s_out`).
+    mult: Vec<f64>,
+    in_qp: QuantParams,
+    out_qp: QuantParams,
+}
+
+impl DirectI8Plan {
+    /// Quantize and plan one layer with explicit activation params:
+    /// per-channel symmetric weight quantization, §4 blocked i8
+    /// packing, analytic blocking from the machine model (same
+    /// [`select_params`] as the f32 direct backend, so the i8 layouts
+    /// block exactly like their f32 counterparts and a quantized net
+    /// reuses the f32 net's layout chain).
+    pub fn with_params(
+        shape: &ConvShape,
+        kernel: &Tensor,
+        machine: &Machine,
+        threads: usize,
+        in_qp: QuantParams,
+        out_qp: QuantParams,
+    ) -> Result<DirectI8Plan> {
+        shape.validate()?;
+        let want = [shape.c_o, shape.c_i, shape.h_f, shape.w_f];
+        if kernel.shape() != want {
+            return Err(Error::Shape(format!(
+                "plan kernel shape {:?} != expected {:?}",
+                kernel.shape(),
+                want
+            )));
+        }
+        let bp = select_params(machine, shape);
+        bp.validate_for(shape)?;
+        let w_scales = per_channel_weight_scales(kernel);
+        let mult: Vec<f64> = w_scales
+            .iter()
+            .map(|&sw| requant_multiplier(in_qp.scale, sw, out_qp.scale))
+            .collect();
+        // Quantize straight into the blocked layout (one pass, no OIHW
+        // i8 intermediate).
+        let src = kernel.data();
+        let mut kernel_q = vec![0i8; src.len()];
+        let per = shape.c_i * shape.h_f * shape.w_f;
+        for o in 0..shape.c_o {
+            let wq = QuantParams { scale: w_scales[o], zero_point: 0 };
+            for i in 0..shape.c_i {
+                for n in 0..shape.h_f {
+                    for m in 0..shape.w_f {
+                        let d = blocked_kernel_index(
+                            o, i, n, m, shape.c_i, shape.h_f, shape.w_f, bp.c_ib, bp.c_ob,
+                        );
+                        kernel_q[d] =
+                            quantize(src[o * per + (i * shape.h_f + n) * shape.w_f + m], &wq);
+                    }
+                }
+            }
+        }
+        Ok(DirectI8Plan {
+            shape: shape.clone(),
+            bp,
+            threads: threads.max(1),
+            kernel_q,
+            mult,
+            in_qp,
+            out_qp,
+        })
+    }
+
+    /// The analytic blocking the plan executes with.
+    pub fn block_params(&self) -> BlockParams {
+        self.bp
+    }
+
+    fn geom(&self) -> QuantGeom<'_> {
+        QuantGeom {
+            shape: &self.shape,
+            bp: self.bp,
+            in_qp: self.in_qp,
+            out_qp: self.out_qp,
+            mult: &self.mult,
+        }
+    }
+}
+
+impl ConvAlgo for DirectI8Backend {
+    fn name(&self) -> &'static str {
+        "direct_i8"
+    }
+
+    fn applicable(&self, shape: &ConvShape) -> bool {
+        shape.validate().is_ok()
+    }
+
+    fn plan(
+        &self,
+        shape: &ConvShape,
+        kernel: &Tensor,
+        machine: &Machine,
+        threads: usize,
+    ) -> Result<Box<dyn ConvPlan>> {
+        // Standalone self-calibration: assume [-1, 1) activations and
+        // measure the output range on one seeded f32 sample (1.5x
+        // headroom against inputs drawn from the same distribution but
+        // other seeds). See the module docs.
+        let in_qp = QuantParams::from_range(-1.0, 1.0);
+        let bp = select_params(machine, shape);
+        bp.validate_for(shape)?;
+        let sample = Tensor::random(&[shape.c_i, shape.h_i, shape.w_i], SAMPLE_SEED);
+        let bi = to_blocked_io(&sample, bp.c_ib)?;
+        let bk = to_blocked_kernel(kernel, bp.c_ob, bp.c_ib)?;
+        let mut out = vec![0.0f32; shape.c_o * shape.h_o() * shape.w_o()];
+        conv_direct_blocked_into(bi.data(), bk.data(), shape, bp, threads.max(1), &mut out)?;
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &v in &out {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let mid = 0.5 * (lo + hi);
+        let half = 0.75 * (hi - lo).max(1e-6); // 1.5x headroom
+        let out_qp = QuantParams::from_range(mid - half, mid + half);
+        Ok(Box::new(DirectI8Plan::with_params(shape, kernel, machine, threads, in_qp, out_qp)?))
+    }
+}
+
+impl ConvPlan for DirectI8Plan {
+    fn backend(&self) -> &'static str {
+        "direct_i8"
+    }
+    fn shape(&self) -> &ConvShape {
+        &self.shape
+    }
+    fn input_layout(&self) -> IoLayout {
+        IoLayout::Blocked { c_b: self.bp.c_ib }
+    }
+    fn output_layout(&self) -> IoLayout {
+        IoLayout::Blocked { c_b: self.bp.c_ob }
+    }
+    fn retained_bytes(&self) -> u64 {
+        // i8 weights + f64 multipliers replace the caller's f32 kernel;
+        // the sum sits far below kernel_bytes() on every real layer.
+        let held = self.kernel_q.len() as u64 + 8 * self.mult.len() as u64;
+        retained_over_kernel(&self.shape, held)
+    }
+    fn workspace_len(&self) -> usize {
+        0 // on-the-fly quantization: nothing is staged, see module docs
+    }
+    fn execute_into(&self, input: &[f32], output: &mut [f32], workspace: &mut [f32]) -> Result<()> {
+        check_execute_buffers(&self.shape, 0, input, output, workspace)?;
+        conv_quant_core(input, &self.kernel_q, &self.geom(), self.threads, output)
+    }
+    fn as_quantized(&self) -> Option<&dyn QuantExecute> {
+        Some(self)
+    }
+}
+
+impl QuantExecute for DirectI8Plan {
+    fn input_qparams(&self) -> QuantParams {
+        self.in_qp
+    }
+    fn output_qparams(&self) -> QuantParams {
+        self.out_qp
+    }
+    fn weight_bytes(&self) -> u64 {
+        self.kernel_q.len() as u64
+    }
+    fn execute_i8_into(&self, input: &[i8], output: &mut [i8]) -> Result<()> {
+        conv_quant_core(input, &self.kernel_q, &self.geom(), self.threads, output)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::haswell;
+    use crate::conv::conv_naive;
+    use crate::layout::pack_io_slice_t;
+
+    #[test]
+    fn plan_reports_zero_overhead_and_quarter_weights() {
+        let s = ConvShape::new(16, 13, 13, 32, 3, 3, 1, 1);
+        let k = Tensor::random(&[32, 16, 3, 3], 7);
+        let plan = DirectI8Backend.plan(&s, &k, &haswell(), 1).unwrap();
+        assert_eq!(plan.backend(), "direct_i8");
+        assert_eq!(plan.retained_bytes(), 0, "i8 weights replace (and undercut) f32 storage");
+        assert_eq!(plan.workspace_bytes(), 0, "on-the-fly quantization needs no staging");
+        let q = plan.as_quantized().expect("direct_i8 exposes the i8 surface");
+        assert_eq!(4 * q.weight_bytes(), s.kernel_bytes(), "exactly a quarter of the bytes");
+    }
+
+    #[test]
+    fn f32_boundary_tracks_the_oracle_within_quant_error() {
+        let s = ConvShape::new(8, 10, 10, 16, 3, 3, 1, 1);
+        let k = Tensor::random(&[16, 8, 3, 3], 11);
+        let input = Tensor::random(&[8, 10, 10], 12);
+        let plan = DirectI8Backend.plan(&s, &k, &haswell(), 1).unwrap();
+        let got = plan.execute(&input).unwrap();
+        let want = conv_naive(&input, &k, &s).unwrap();
+        assert!(
+            got.allclose(&want, 0.08, 0.08),
+            "quantized conv drifted beyond 8-bit error: {}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn i8_path_is_bit_identical_to_the_f32_boundary() {
+        let s = ConvShape::new(8, 9, 9, 16, 3, 3, 1, 1);
+        let k = Tensor::random(&[16, 8, 3, 3], 21);
+        let input = Tensor::random(&[8, 9, 9], 22);
+        let m = haswell();
+        let in_qp = QuantParams::from_range(-1.0, 1.0);
+        let out_qp = QuantParams::from_range(-15.0, 15.0);
+        let plan = DirectI8Plan::with_params(&s, &k, &m, 1, in_qp, out_qp).unwrap();
+        let bp = plan.block_params();
+
+        // f32 boundary: pack f32, execute, re-quantize the output.
+        let packed = plan.pack_input(&input).unwrap();
+        let mut out_f = vec![0.0f32; s.c_o * s.h_o() * s.w_o()];
+        plan.execute_into(packed.data(), &mut out_f, &mut []).unwrap();
+
+        // i8 native: quantize + pack the input, execute on bytes.
+        let x_q: Vec<i8> = input.data().iter().map(|&v| quantize(v, &in_qp)).collect();
+        let mut bi = vec![0i8; x_q.len()];
+        pack_io_slice_t(&x_q, s.c_i, s.h_i, s.w_i, bp.c_ib, &mut bi).unwrap();
+        let mut out_q = vec![0i8; out_f.len()];
+        plan.execute_i8_into(&bi, &mut out_q).unwrap();
+
+        for (f, q) in out_f.iter().zip(&out_q) {
+            assert_eq!(*f, super::super::dequantize(*q, &out_qp), "paths diverged");
+        }
+    }
+
+    #[test]
+    fn with_params_rejects_mismatched_kernel() {
+        let s = ConvShape::new(4, 9, 9, 8, 3, 3, 1, 1);
+        let bad = Tensor::zeros(&[8, 4, 3, 2]);
+        let qp = QuantParams::IDENT;
+        assert!(DirectI8Plan::with_params(&s, &bad, &haswell(), 1, qp, qp).is_err());
+    }
+}

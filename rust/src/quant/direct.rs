@@ -1,0 +1,444 @@
+//! The int8 blocked direct convolution core.
+//!
+//! Same §4 layouts and `jb / l / k0` traversal as the f32 Algorithm 3
+//! ([`crate::conv::direct`]): input `[C_i/c_ib][H_i][W_i][c_ib]`,
+//! kernel `[C_o/c_ob][C_i/c_ib][H_f][W_f][C_ib][C_ob]`, output
+//! `[C_o/c_ob][H_o][W_o][c_ob]` — all i8, all pure permutations, zero
+//! workspace. One deliberate deviation from the f32 loop nest: the
+//! `C_i,b` cache-block loop sits *inside* the register tile instead of
+//! outside it, because i32 partial sums cannot round-trip through the
+//! i8 output the way f32 partials round-trip through the f32 output —
+//! the full input-channel reduction must finish in the i32 accumulator
+//! before the (lossy) requantize epilogue runs.
+//!
+//! The core is generic over [`QuantIo`], so the same integer arithmetic
+//! serves two element types:
+//!
+//! * `i8`/`i8` — the byte-arena hot path ([`super::QuantExecute`]);
+//! * `f32`/`f32` — the engine-API boundary ([`super::DirectI8Plan`]'s
+//!   `execute_into`), which quantizes each input element on the fly and
+//!   dequantizes outputs on store. No staging buffer exists in either
+//!   direction, which is what lets the `direct_i8` backend report
+//!   `workspace_bytes() == 0` honestly; both paths produce bit-identical
+//!   quantized values because they share every integer op.
+//!
+//! Border taps are skipped exactly like the f32 kernel (a skipped tap
+//! contributes `(zp - zp) * w == 0`, the quantized image of zero
+//! padding). Accumulator bound: `|x_q - zp| <= 254`, `|w_q| <= 127`, so
+//! a tap term is at most `32258` and i32 holds `> 66k` input-channel
+//! taps — an order of magnitude beyond the largest benchmark layer
+//! (VGG 512·3·3 = 4608).
+
+use super::params::{dequantize, quantize, requantize, QuantParams};
+use crate::conv::microkernel::MAX_WOB;
+use crate::conv::{BlockParams, ConvShape};
+use crate::{Error, Result};
+
+/// Element type the quantized core reads and writes: either real i8
+/// values or f32 values converted at the load/store (see module docs).
+pub(crate) trait QuantIo: Copy + Send + Sync {
+    /// Load as a zero-centered quantized value (`q - zero_point`).
+    fn to_centered(self, qp: &QuantParams) -> i32;
+    /// Store a freshly requantized i8 value.
+    fn from_q(q: i8, qp: &QuantParams) -> Self;
+}
+
+impl QuantIo for i8 {
+    #[inline(always)]
+    fn to_centered(self, qp: &QuantParams) -> i32 {
+        self as i32 - qp.zero_point
+    }
+    #[inline(always)]
+    fn from_q(q: i8, _qp: &QuantParams) -> i8 {
+        q
+    }
+}
+
+impl QuantIo for f32 {
+    #[inline(always)]
+    fn to_centered(self, qp: &QuantParams) -> i32 {
+        quantize(self, qp) as i32 - qp.zero_point
+    }
+    #[inline(always)]
+    fn from_q(q: i8, qp: &QuantParams) -> f32 {
+        dequantize(q, qp)
+    }
+}
+
+/// Geometry + params of one quantized layer execution.
+pub(crate) struct QuantGeom<'a> {
+    pub shape: &'a ConvShape,
+    pub bp: BlockParams,
+    pub in_qp: QuantParams,
+    pub out_qp: QuantParams,
+    /// Per-output-channel requantize multipliers (`len == c_o`).
+    pub mult: &'a [f64],
+}
+
+/// Allocation-free i8 direct convolution over blocked i8 operands (the
+/// public slice core; [`super::DirectI8Plan`] is the planned entry).
+#[allow(clippy::too_many_arguments)] // mirrors the f32 core's signature plus quant params
+pub fn conv_direct_blocked_i8_into(
+    inp: &[i8],
+    ker: &[i8],
+    shape: &ConvShape,
+    bp: BlockParams,
+    threads: usize,
+    in_qp: QuantParams,
+    out_qp: QuantParams,
+    mult: &[f64],
+    out: &mut [i8],
+) -> Result<()> {
+    let g = QuantGeom { shape, bp, in_qp, out_qp, mult };
+    conv_quant_core(inp, ker, &g, threads, out)
+}
+
+/// The generic core shared by the i8 and f32-boundary paths.
+pub(crate) fn conv_quant_core<T: QuantIo>(
+    inp: &[T],
+    ker: &[i8],
+    g: &QuantGeom<'_>,
+    threads: usize,
+    out: &mut [T],
+) -> Result<()> {
+    let (shape, bp) = (g.shape, g.bp);
+    shape.validate()?;
+    bp.validate_for(shape)?;
+    if bp.w_ob == 0 || bp.w_ob > MAX_WOB {
+        return Err(Error::Shape(format!("w_ob={} out of range 1..={}", bp.w_ob, MAX_WOB)));
+    }
+    let n_img = shape.c_i * shape.h_i * shape.w_i;
+    if inp.len() != n_img {
+        return Err(Error::Shape(format!(
+            "quant blocked input has {} elements, expected {n_img}",
+            inp.len()
+        )));
+    }
+    let n_ker = shape.c_o * shape.c_i * shape.h_f * shape.w_f;
+    if ker.len() != n_ker {
+        return Err(Error::Shape(format!(
+            "quant blocked kernel has {} elements, expected {n_ker}",
+            ker.len()
+        )));
+    }
+    let n_out = shape.c_o * shape.h_o() * shape.w_o();
+    if out.len() != n_out {
+        return Err(Error::Shape(format!(
+            "quant blocked output has {} elements, expected {n_out}",
+            out.len()
+        )));
+    }
+    if g.mult.len() != shape.c_o {
+        return Err(Error::Shape(format!(
+            "requant multipliers: {} entries for C_o={}",
+            g.mult.len(),
+            shape.c_o
+        )));
+    }
+    let threads = threads.max(1);
+    match bp.c_ob {
+        1 => run_q::<T, 1>(inp, ker, g, threads, out),
+        2 => run_q::<T, 2>(inp, ker, g, threads, out),
+        4 => run_q::<T, 4>(inp, ker, g, threads, out),
+        8 => run_q::<T, 8>(inp, ker, g, threads, out),
+        16 => run_q::<T, 16>(inp, ker, g, threads, out),
+        32 => run_q::<T, 32>(inp, ker, g, threads, out),
+        other => Err(Error::Shape(format!(
+            "unsupported c_ob={other} (supported: 1,2,4,8,16,32)"
+        ))),
+    }
+}
+
+fn run_q<T: QuantIo, const COB: usize>(
+    inp: &[T],
+    ker: &[i8],
+    g: &QuantGeom<'_>,
+    threads: usize,
+    out: &mut [T],
+) -> Result<()> {
+    let (h_o, w_o) = (g.shape.h_o(), g.shape.w_o());
+    let n_ob = g.shape.c_o / COB;
+    let blk_len = h_o * w_o * COB;
+    if threads <= 1 || n_ob <= 1 {
+        for (jb, out_blk) in out.chunks_mut(blk_len).enumerate() {
+            conv_block_q::<T, COB>(inp, ker, g, jb, out_blk);
+        }
+    } else {
+        // §3.2 thread partition over C_o blocks, as in the f32 kernel.
+        let mut per_thread: Vec<Vec<(usize, &mut [T])>> =
+            (0..threads).map(|_| Vec::new()).collect();
+        for (idx, b) in out.chunks_mut(blk_len).enumerate() {
+            per_thread[idx % threads].push((idx, b));
+        }
+        std::thread::scope(|scope| {
+            for chunk in per_thread {
+                scope.spawn(move || {
+                    for (jb, out_blk) in chunk {
+                        conv_block_q::<T, COB>(inp, ker, g, jb, out_blk);
+                    }
+                });
+            }
+        });
+    }
+    Ok(())
+}
+
+/// One output-channel block: full `C_i` reduction in i32 per register
+/// tile, then the fused requantize epilogue.
+fn conv_block_q<T: QuantIo, const COB: usize>(
+    inp: &[T],
+    ker: &[i8],
+    g: &QuantGeom<'_>,
+    jb: usize,
+    out_blk: &mut [T],
+) {
+    let s = g.shape;
+    let (h_o, w_o) = (s.h_o(), s.w_o());
+    let (h_i, w_i) = (s.h_i, s.w_i);
+    let (h_f, w_f) = (s.h_f, s.w_f);
+    let (stride, pad) = (s.stride, s.pad);
+    let c_ib = g.bp.c_ib;
+    let n_ib = s.c_i / c_ib;
+    let ker_ib = h_f * w_f * c_ib * COB;
+    let ker_jb = n_ib * ker_ib;
+    let islab_len = h_i * w_i * c_ib;
+    let row_stride = w_i * c_ib;
+    let tw_max = g.bp.w_ob.min(MAX_WOB);
+
+    for l in 0..h_o {
+        let mut k0 = 0usize;
+        while k0 < w_o {
+            let tw = tw_max.min(w_o - k0);
+            let mut acc = [[0i32; COB]; MAX_WOB];
+            for ib in 0..n_ib {
+                let kslab = &ker[jb * ker_jb + ib * ker_ib..][..ker_ib];
+                let islab = &inp[ib * islab_len..][..islab_len];
+                for n in 0..h_f {
+                    let iy = (l * stride + n) as isize - pad as isize;
+                    if iy < 0 || iy >= h_i as isize {
+                        continue; // whole kernel row outside the image
+                    }
+                    let row = &islab[iy as usize * row_stride..][..row_stride];
+                    for m in 0..w_f {
+                        let kptr = &kslab[(n * w_f + m) * c_ib * COB..][..c_ib * COB];
+                        let x0 = (k0 * stride + m) as isize - pad as isize;
+                        let x_last = x0 + ((tw - 1) * stride) as isize;
+                        if x0 >= 0 && x_last < w_i as isize {
+                            // Interior fast path: every tile column valid.
+                            let base = x0 as usize * c_ib;
+                            for ii in 0..c_ib {
+                                let w = &kptr[ii * COB..][..COB];
+                                for (kk, a) in acc.iter_mut().enumerate().take(tw) {
+                                    let xv = row[base + kk * stride * c_ib + ii]
+                                        .to_centered(&g.in_qp);
+                                    for j in 0..COB {
+                                        a[j] += xv * w[j] as i32;
+                                    }
+                                }
+                            }
+                        } else {
+                            // Border tap: guard each column (skip == 0
+                            // contribution, the quantized zero padding).
+                            for (kk, a) in acc.iter_mut().enumerate().take(tw) {
+                                let x = x0 + (kk * stride) as isize;
+                                if x < 0 || x >= w_i as isize {
+                                    continue;
+                                }
+                                let base = x as usize * c_ib;
+                                for ii in 0..c_ib {
+                                    let w = &kptr[ii * COB..][..COB];
+                                    let xv = row[base + ii].to_centered(&g.in_qp);
+                                    for j in 0..COB {
+                                        a[j] += xv * w[j] as i32;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // Fused requantize epilogue: i32 -> i8 (or dequantized f32).
+            let tile = &mut out_blk[(l * w_o + k0) * COB..][..tw * COB];
+            let mults = &g.mult[jb * COB..][..COB];
+            for kk in 0..tw {
+                for j in 0..COB {
+                    let q = requantize(acc[kk][j], mults[j], g.out_qp.zero_point);
+                    tile[kk * COB + j] = T::from_q(q, &g.out_qp);
+                }
+            }
+            k0 += tw;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::params::{per_channel_weight_scales, requant_multiplier};
+    use crate::tensor::Tensor;
+
+    /// Scalar NCHW oracle performing the documented integer arithmetic
+    /// directly (no blocking) — the in-crate cross-check; the NumPy
+    /// reference in `python/golden_gen.py` pins the same contract
+    /// externally.
+    #[allow(clippy::too_many_arguments)]
+    fn naive_q8(
+        x_q: &[i8],
+        w_q: &[i8],
+        s: &ConvShape,
+        in_qp: QuantParams,
+        out_qp: QuantParams,
+        mult: &[f64],
+    ) -> Vec<i8> {
+        let (h_o, w_o) = (s.h_o(), s.w_o());
+        let mut out = vec![0i8; s.c_o * h_o * w_o];
+        for o in 0..s.c_o {
+            for y in 0..h_o {
+                for x in 0..w_o {
+                    let mut acc = 0i32;
+                    for c in 0..s.c_i {
+                        for n in 0..s.h_f {
+                            let iy = (y * s.stride + n) as isize - s.pad as isize;
+                            if iy < 0 || iy >= s.h_i as isize {
+                                continue;
+                            }
+                            for m in 0..s.w_f {
+                                let ix = (x * s.stride + m) as isize - s.pad as isize;
+                                if ix < 0 || ix >= s.w_i as isize {
+                                    continue;
+                                }
+                                let xv = x_q[(c * s.h_i + iy as usize) * s.w_i + ix as usize]
+                                    as i32
+                                    - in_qp.zero_point;
+                                let wv = w_q[((o * s.c_i + c) * s.h_f + n) * s.w_f + m] as i32;
+                                acc += xv * wv;
+                            }
+                        }
+                    }
+                    out[(o * h_o + y) * w_o + x] =
+                        requantize(acc, mult[o], out_qp.zero_point);
+                }
+            }
+        }
+        out
+    }
+
+    fn quantize_nchw(t: &Tensor, qp: &QuantParams) -> Vec<i8> {
+        t.data().iter().map(|&v| quantize(v, qp)).collect()
+    }
+
+    fn pack_i8_io(src: &[i8], c: usize, h: usize, w: usize, c_b: usize) -> Vec<i8> {
+        let mut dst = vec![0i8; src.len()];
+        crate::layout::pack_io_slice_t(src, c, h, w, c_b, &mut dst).unwrap();
+        dst
+    }
+
+    fn unpack_i8_io(src: &[i8], c: usize, h: usize, w: usize, c_b: usize) -> Vec<i8> {
+        let mut dst = vec![0i8; src.len()];
+        crate::layout::unpack_io_slice_t(src, c, h, w, c_b, &mut dst).unwrap();
+        dst
+    }
+
+    fn pack_i8_kernel(w_q: &[i8], s: &ConvShape, c_ob: usize, c_ib: usize) -> Vec<i8> {
+        let mut out = vec![0i8; w_q.len()];
+        for o in 0..s.c_o {
+            for i in 0..s.c_i {
+                for n in 0..s.h_f {
+                    for m in 0..s.w_f {
+                        let d = crate::layout::blocked_kernel_index(
+                            o, i, n, m, s.c_i, s.h_f, s.w_f, c_ib, c_ob,
+                        );
+                        out[d] = w_q[((o * s.c_i + i) * s.h_f + n) * s.w_f + m];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn check(s: &ConvShape, bp: BlockParams, threads: usize, seed: u64) {
+        let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], seed);
+        let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], seed + 1);
+        let in_qp = QuantParams::from_range(-1.0, 1.0);
+        let out_qp = QuantParams::from_range(-20.0, 20.0);
+        let w_scales = per_channel_weight_scales(&kernel);
+        let w_q: Vec<i8> = kernel
+            .data()
+            .chunks(s.c_i * s.h_f * s.w_f)
+            .zip(&w_scales)
+            .flat_map(|(ch, &sc)| {
+                ch.iter()
+                    .map(|&v| quantize(v, &QuantParams { scale: sc, zero_point: 0 }))
+                    .collect::<Vec<i8>>()
+            })
+            .collect();
+        let mult: Vec<f64> = w_scales
+            .iter()
+            .map(|&sw| requant_multiplier(in_qp.scale, sw, out_qp.scale))
+            .collect();
+
+        let x_q = quantize_nchw(&input, &in_qp);
+        let want = naive_q8(&x_q, &w_q, s, in_qp, out_qp, &mult);
+
+        let bi = pack_i8_io(&x_q, s.c_i, s.h_i, s.w_i, bp.c_ib);
+        let bk = pack_i8_kernel(&w_q, s, bp.c_ob, bp.c_ib);
+        let mut bo = vec![0i8; s.c_o * s.h_o() * s.w_o()];
+        conv_direct_blocked_i8_into(&bi, &bk, s, bp, threads, in_qp, out_qp, &mult, &mut bo)
+            .unwrap();
+        let got = unpack_i8_io(&bo, s.c_o, s.h_o(), s.w_o(), bp.c_ob);
+        assert_eq!(got, want, "integer mismatch on {s:?} bp={bp:?} threads={threads}");
+    }
+
+    #[test]
+    fn blocked_i8_matches_scalar_oracle_exactly() {
+        check(&ConvShape::new(8, 10, 10, 16, 3, 3, 1, 0), BlockParams::new(8, 4, 4), 1, 21);
+        check(&ConvShape::new(8, 9, 9, 16, 3, 3, 1, 1), BlockParams::new(16, 3, 8), 1, 22);
+        check(&ConvShape::new(4, 7, 7, 8, 5, 5, 1, 2), BlockParams::new(8, 4, 4), 1, 23);
+        check(&ConvShape::new(8, 14, 14, 8, 3, 3, 2, 1), BlockParams::new(8, 2, 8), 1, 25);
+        check(&ConvShape::new(16, 7, 7, 32, 1, 1, 1, 0), BlockParams::new(16, 4, 8), 1, 40);
+    }
+
+    #[test]
+    fn threaded_i8_is_bitwise_identical() {
+        check(&ConvShape::new(8, 12, 12, 32, 3, 3, 1, 1), BlockParams::new(8, 4, 4), 4, 26);
+        check(&ConvShape::new(8, 12, 12, 32, 3, 3, 1, 1), BlockParams::new(8, 4, 4), 7, 27);
+    }
+
+    #[test]
+    fn all_cob_variants_exact() {
+        for &cob in &[1usize, 2, 4, 8, 16, 32] {
+            let s = ConvShape::new(4, 8, 8, 32, 3, 3, 1, 1);
+            check(&s, BlockParams::new(cob, 4, 2), 1, 31 + cob as u64);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_buffers_and_params() {
+        let s = ConvShape::new(4, 6, 6, 8, 3, 3, 1, 1);
+        let bp = BlockParams::new(8, 4, 4);
+        let qp = QuantParams::IDENT;
+        let mut out = vec![0i8; s.c_o * s.h_o() * s.w_o()];
+        let inp = vec![0i8; s.c_i * s.h_i * s.w_i];
+        let ker = vec![0i8; s.c_o * s.c_i * 9];
+        // wrong multiplier count
+        assert!(conv_direct_blocked_i8_into(&inp, &ker, &s, bp, 1, qp, qp, &[1.0], &mut out)
+            .is_err());
+        let mult = vec![1.0f64; s.c_o];
+        // wrong input length
+        assert!(conv_direct_blocked_i8_into(&inp[1..], &ker, &s, bp, 1, qp, qp, &mult, &mut out)
+            .is_err());
+        // non-dividing c_ib
+        assert!(conv_direct_blocked_i8_into(
+            &inp,
+            &ker,
+            &s,
+            BlockParams::new(8, 4, 3),
+            1,
+            qp,
+            qp,
+            &mult,
+            &mut out
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,84 @@
+//! Int8 quantized direct convolution — the zero-overhead engine for the
+//! memory regime the paper motivates.
+//!
+//! The paper's headline argument is that direct convolution "eliminates
+//! all memory overhead", which matters most on embedded devices with
+//! limited memory capacity — yet everything else in this crate moves
+//! f32. This module quarters the bytes *again*: kernels are quantized
+//! to int8 with **symmetric per-output-channel** scales, activations
+//! with a **per-tensor affine** scheme (`QuantParams {scale,
+//! zero_point}`, calibrated from a sample batch via min/max), the
+//! convolution accumulates in i32 over the same §4 blocked layouts and
+//! loop order as [`crate::conv::direct`], and the requantize-to-i8 step
+//! is fused into the microkernel epilogue — no f32 intermediate, no
+//! workspace, no retained state beyond the (4x smaller) weights.
+//!
+//! # The arithmetic contract (exactly reproducible)
+//!
+//! Quantized inference is only trustworthy if its integer arithmetic is
+//! pinned, so every step here is defined to be bit-exactly reproducible
+//! by the independent NumPy reference in `python/golden_gen.py`:
+//!
+//! * quantize:   `q = clamp(round_half_away(x_f64 / scale_f64) + zp)`,
+//!   clamped to `[-127, 127]` (the symmetric i8 budget; -128 is never
+//!   produced, so negation and accumulation never overflow);
+//! * convolution: `acc_i32 = sum over taps of (x_q - zp_in) * w_q` —
+//!   skipped border taps contribute exactly 0, matching f32
+//!   zero-padding (the f32 zero quantizes to `zp_in`);
+//! * requantize: `q_out = clamp(round_half_away(acc * m_j) + zp_out)`
+//!   with the per-output-channel multiplier
+//!   `m_j = f64(s_in) * f64(s_w[j]) / f64(s_out)`;
+//! * `round_half_away` is `f64::round` (half away from zero), mirrored
+//!   in NumPy as `floor(x + 0.5)` / `ceil(x - 0.5)` by sign.
+//!
+//! # Entry points
+//!
+//! * [`QuantParams`] / [`quantize`] / [`dequantize`] — the scalar
+//!   contract plus min/max calibration.
+//! * [`DirectI8Backend`] — the engine's seventh backend
+//!   (`"direct_i8"`): plans through the ordinary
+//!   [`crate::engine::ConvAlgo`] API with an f32 boundary (inputs are
+//!   quantized on the fly — **zero** workspace, nothing staged) and
+//!   additionally exposes the native i8 hot path through
+//!   [`QuantExecute`].
+//! * [`QuantNet`] — whole-network quantization: calibrate every graph
+//!   edge from a sample forward pass, plan each conv with its
+//!   edge-chained requantize params, and compile to an i8 byte arena
+//!   via [`crate::engine::NetRunner`] (activation memory shrinks 4x,
+//!   `overhead_bytes()` stays 0).
+
+mod backend;
+mod direct;
+mod net;
+mod params;
+
+pub use backend::{DirectI8Backend, DirectI8Plan};
+pub use direct::conv_direct_blocked_i8_into;
+pub use net::{calibrate_graph, QuantNet, CALIBRATION_SEED};
+pub use params::{
+    dequantize, per_channel_weight_scales, quantize, requant_multiplier, requantize,
+    round_half_away, DType, QuantParams, Q_MAX, Q_MIN,
+};
+
+use crate::Result;
+
+/// Native int8 execution surface of a quantized [`crate::engine::ConvPlan`]
+/// (reached through [`crate::engine::ConvPlan::as_quantized`]). This is
+/// the byte-arena hot path: operands are i8 slices in the plan's §4
+/// blocked layouts, quantized with the plan's own params, and the call
+/// allocates nothing and needs no workspace.
+pub trait QuantExecute: Send + Sync {
+    /// Quantization of the i8 input slice the plan expects.
+    fn input_qparams(&self) -> QuantParams;
+
+    /// Quantization of the i8 output slice the plan produces.
+    fn output_qparams(&self) -> QuantParams;
+
+    /// Bytes of the plan's quantized weights (the 4x shrink vs
+    /// [`crate::conv::ConvShape::kernel_bytes`]).
+    fn weight_bytes(&self) -> u64;
+
+    /// Execute the layer on i8 operands (blocked layouts, validated by
+    /// length). Allocation-free with `threads <= 1`.
+    fn execute_i8_into(&self, input: &[i8], output: &mut [i8]) -> Result<()>;
+}

@@ -1,0 +1,250 @@
+//! Whole-network quantization: calibrate every graph edge, plan every
+//! conv with edge-chained requantize params, compile to the i8 byte
+//! arena.
+//!
+//! Post-training quantization needs one piece of information the
+//! weights cannot provide: the dynamic range of every activation. A
+//! [`QuantNet`] gets it the classic way — a **sample batch forward
+//! pass** in f32 (one deterministic synthetic image, seed
+//! [`CALIBRATION_SEED`]), recording per-node min/max and turning each
+//! into affine [`QuantParams`]. Each conv layer is then quantized with
+//! *its producer edge's* input params and *its own* output params
+//! ([`DirectI8Plan::with_params`]), so requantize scales chain
+//! layer-to-layer by construction; pooling / concat / residual glue
+//! between differently scaled edges is requantized inside the
+//! executor's fused Adapt gathers at no extra pass.
+//!
+//! Calibration is a plan-time cost (one f32 forward through the
+//! per-layer engine plus min/max scans, with intermediate activations
+//! freed as their last consumer finishes); the resulting runner's hot
+//! path is pure int8.
+
+use crate::arch::Machine;
+use crate::engine::{add_nchw, avg_pool_nchw, pool_nchw, BackendRegistry, NetRunner};
+use crate::nets::{
+    net_kernel, GraphOp, Layer, Model, NetGraph, NetPlans, PlannedLayer, PoolKind,
+};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+use super::backend::DirectI8Plan;
+use super::params::QuantParams;
+
+/// Seed of the deterministic synthetic calibration image — the same
+/// seed the golden fixtures feed forward, so the calibrated ranges are
+/// exact for the pinned input.
+pub const CALIBRATION_SEED: u64 = 0x601D;
+
+/// Min/max-calibrate every node of a graph from one sample input:
+/// run the f32 reference forward (direct plans per layer, NCHW glue)
+/// and return one [`QuantParams`] per graph node, in node order.
+pub fn calibrate_graph(
+    graph: &NetGraph,
+    shapes: &[crate::conv::ConvShape],
+    machine: &Machine,
+    threads: usize,
+    input: &Tensor,
+) -> Result<Vec<QuantParams>> {
+    graph.validate(shapes)?;
+    let registry = BackendRegistry::shared();
+    let mut outs: Vec<Option<Tensor>> = (0..graph.len()).map(|_| None).collect();
+    let mut remaining = graph.consumer_counts();
+    let mut params = Vec::with_capacity(graph.len());
+    for (i, node) in graph.nodes.iter().enumerate() {
+        let t = match &node.op {
+            GraphOp::Input { .. } => input.clone(),
+            GraphOp::Conv { layer } => {
+                let s = &shapes[*layer];
+                let kernel = net_kernel(*layer, s);
+                // Thread count only affects calibration speed: the
+                // direct kernel is bitwise deterministic across thread
+                // partitions, so the measured ranges are too.
+                let plan = registry.plan("direct", s, &kernel, machine, threads)?;
+                plan.execute(outs[node.preds[0]].as_ref().expect("topological order"))?
+            }
+            GraphOp::Pool { kind, kh, kw, sh, sw, ph, pw } => {
+                let src = outs[node.preds[0]].as_ref().expect("topological order");
+                match kind {
+                    PoolKind::Max => pool_nchw(src, *kh, *kw, *sh, *sw, *ph, *pw)?,
+                    PoolKind::Avg => avg_pool_nchw(src, *kh, *kw, *sh, *sw, *ph, *pw)?,
+                }
+            }
+            GraphOp::Concat => {
+                let parts: Vec<&Tensor> =
+                    node.preds.iter().map(|&p| outs[p].as_ref().expect("topo")).collect();
+                let (h, w) = (parts[0].shape()[1], parts[0].shape()[2]);
+                let c: usize = parts.iter().map(|t| t.shape()[0]).sum();
+                let mut data = Vec::with_capacity(c * h * w);
+                for p in &parts {
+                    data.extend_from_slice(p.data());
+                }
+                Tensor::from_vec(&[c, h, w], data)?
+            }
+            GraphOp::Add => {
+                let mut acc = outs[node.preds[0]].as_ref().expect("topo").clone();
+                for &p in &node.preds[1..] {
+                    acc = add_nchw(&acc, outs[p].as_ref().expect("topo"))?;
+                }
+                acc
+            }
+        };
+        if !t.data().iter().all(|v| v.is_finite()) {
+            return Err(Error::Runtime(format!(
+                "calibration forward produced non-finite activations at node '{}' — \
+                 ranges cannot be quantized",
+                node.name
+            )));
+        }
+        params.push(QuantParams::calibrate(t.data()));
+        outs[i] = Some(t);
+        // Free activations whose last consumer just ran (bounds peak
+        // calibration memory at the live set, like the executor).
+        for &p in &node.preds {
+            remaining[p] -= 1;
+            if remaining[p] == 0 {
+                outs[p] = None;
+            }
+        }
+    }
+    Ok(params)
+}
+
+/// A fully quantized network: `direct_i8` plans with edge-chained
+/// requantize params, the per-node calibration table, and the graph —
+/// everything [`NetRunner::from_graph_quant`] needs.
+pub struct QuantNet {
+    pub plans: NetPlans,
+    pub node_params: Vec<QuantParams>,
+    pub graph: NetGraph,
+}
+
+impl QuantNet {
+    /// Calibrate and quantize a [`Model`] (same deterministic
+    /// [`net_kernel`] weights as the f32 planning paths, so f32 and i8
+    /// nets are directly comparable).
+    pub fn build_model(model: &Model, machine: &Machine, threads: usize) -> Result<QuantNet> {
+        let dims = model.validate()?;
+        let d = dims[0];
+        let input = Tensor::random(&[d.c, d.h, d.w], CALIBRATION_SEED);
+        let params = calibrate_graph(&model.graph, &model.shapes, machine, threads, &input)?;
+        Self::with_node_params(&model.name, &model.graph, &model.shapes, machine, threads, params)
+    }
+
+    /// Calibrate and quantize a built-in net by name (every net with a
+    /// builder program: `alexnet`, `googlenet`, `vgg16`,
+    /// `resnet_micro`).
+    pub fn build(net: &str, machine: &Machine, threads: usize) -> Result<QuantNet> {
+        let model = crate::nets::model_by_name(net).ok_or_else(|| {
+            Error::Parse(format!(
+                "unknown net '{net}' (alexnet|googlenet|vgg16|resnet_micro)"
+            ))
+        })?;
+        Self::build_model(&model, machine, threads)
+    }
+
+    /// Quantize a graph with **prescribed** per-node activation params
+    /// (one per graph node, node order). This is how the golden tests
+    /// pin exact integer outputs: the independent NumPy reference picks
+    /// the params, commits them to the fixture, and both sides run the
+    /// identical integer program.
+    pub fn with_node_params(
+        name: &str,
+        graph: &NetGraph,
+        shapes: &[crate::conv::ConvShape],
+        machine: &Machine,
+        threads: usize,
+        node_params: Vec<QuantParams>,
+    ) -> Result<QuantNet> {
+        graph.validate(shapes)?;
+        if node_params.len() != graph.len() {
+            return Err(Error::Shape(format!(
+                "quantizing '{name}': {} node params for {} graph nodes",
+                node_params.len(),
+                graph.len()
+            )));
+        }
+        let mut planned: Vec<Option<PlannedLayer>> = (0..shapes.len()).map(|_| None).collect();
+        for (i, node) in graph.nodes.iter().enumerate() {
+            let GraphOp::Conv { layer } = &node.op else {
+                continue;
+            };
+            let layer = *layer;
+            let s = &shapes[layer];
+            let kernel = net_kernel(layer, s);
+            let in_qp = node_params[node.preds[0]];
+            let out_qp = node_params[i];
+            let plan =
+                DirectI8Plan::with_params(s, &kernel, machine, threads, in_qp, out_qp)?;
+            planned[layer] = Some(PlannedLayer {
+                layer: Layer { net: name.to_string(), name: node.name.clone(), shape: s.clone() },
+                backend: "direct_i8",
+                threads: threads.max(1),
+                plan: Box::new(plan),
+            });
+        }
+        let layers = planned
+            .into_iter()
+            .map(|p| p.expect("graph validation guarantees every layer is used"))
+            .collect();
+        Ok(QuantNet {
+            plans: NetPlans { net: name.to_string(), layers },
+            node_params,
+            graph: graph.clone(),
+        })
+    }
+
+    /// Compile to the i8 byte-arena executor.
+    pub fn runner(self, lanes: usize) -> Result<NetRunner> {
+        NetRunner::from_graph_quant(self.plans, self.graph, lanes, &self.node_params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::haswell;
+    use crate::engine::ConvPlan;
+
+    #[test]
+    fn calibration_covers_every_node_and_frees_as_it_goes() {
+        let model = crate::nets::builder::resnet_micro();
+        let input = Tensor::random(&[3, 32, 32], CALIBRATION_SEED);
+        let params =
+            calibrate_graph(&model.graph, &model.shapes, &haswell(), 1, &input).unwrap();
+        assert_eq!(params.len(), model.graph.len());
+        for (p, n) in params.iter().zip(&model.graph.nodes) {
+            assert!(p.scale > 0.0, "{}: degenerate scale", n.name);
+            assert!((-127..=127).contains(&p.zero_point), "{}: zp out of budget", n.name);
+        }
+    }
+
+    #[test]
+    fn quant_net_builds_with_chained_edges() {
+        let q = QuantNet::build("resnet_micro", &haswell(), 1).unwrap();
+        assert_eq!(q.plans.layers.len(), 6);
+        assert!(q.plans.layers.iter().all(|l| l.backend == "direct_i8"));
+        // Edge chaining: conv1's input params are conv0's output params
+        // (conv0 is conv1's producer in resnet_micro).
+        let p0 = q.plans.layers[0].plan.as_quantized().unwrap().output_qparams();
+        let p1 = q.plans.layers[1].plan.as_quantized().unwrap().input_qparams();
+        assert_eq!(p0, p1, "requantize params must chain producer -> consumer");
+        let runner = q.runner(1).unwrap();
+        assert_eq!(runner.dtype(), crate::quant::DType::I8);
+        assert_eq!(runner.overhead_bytes(), 0);
+    }
+
+    #[test]
+    fn unknown_net_and_bad_param_counts_are_rejected() {
+        assert!(QuantNet::build("resnet", &haswell(), 1).is_err());
+        let model = crate::nets::builder::resnet_micro();
+        assert!(QuantNet::with_node_params(
+            "t",
+            &model.graph,
+            &model.shapes,
+            &haswell(),
+            1,
+            vec![QuantParams::IDENT; 3],
+        )
+        .is_err());
+    }
+}

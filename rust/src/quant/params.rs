@@ -1,0 +1,249 @@
+//! Quantization parameters and the scalar quantize/requantize contract.
+//!
+//! Every arithmetic step here is deliberately pinned to a bit-exact
+//! definition (f64 intermediates, round-half-away-from-zero, the
+//! `[-127, 127]` clamp) so the independent NumPy reference in
+//! `python/golden_gen.py` reproduces the integers exactly — see the
+//! [`super`] module docs.
+
+use crate::tensor::Tensor;
+
+/// Smallest representable quantized value. `-128` is deliberately
+/// excluded: the symmetric budget keeps `-q` and `q - zp` in range, so
+/// i32 accumulation bounds stay trivial.
+pub const Q_MIN: i32 = -127;
+/// Largest representable quantized value.
+pub const Q_MAX: i32 = 127;
+
+/// Element type of a planned network. The default everywhere is
+/// [`DType::F32`]; [`DType::I8`] selects the quantized engine (i8 byte
+/// arena, `direct_i8` plans, requantize fused into the glue passes).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DType {
+    #[default]
+    F32,
+    I8,
+}
+
+impl DType {
+    /// Bytes per activation element.
+    pub fn elem_bytes(&self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::I8 => 1,
+        }
+    }
+
+    /// The JSON spec / CLI spelling (`"f32"` / `"i8"`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I8 => "i8",
+        }
+    }
+
+    /// Parse the JSON spec / CLI spelling.
+    pub fn from_str_opt(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "i8" | "int8" => Some(DType::I8),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Per-tensor affine quantization: `x ≈ (q - zero_point) * scale`.
+///
+/// The f32 value `0.0` always quantizes to exactly `zero_point`, so
+/// zero padding and skipped border taps are exact under quantization.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantParams {
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+impl QuantParams {
+    /// Identity-ish params (scale 1, zero point 0) — the placeholder
+    /// carried by f32 values, never used arithmetically in f32 mode.
+    pub const IDENT: QuantParams = QuantParams { scale: 1.0, zero_point: 0 };
+
+    /// Affine params covering `[min, max]`: `scale = (max - min) / 253`
+    /// with the zero point anchored at the range midpoint. The one-step
+    /// slack (253 of the 254 available steps) plus midpoint anchoring
+    /// guarantee that **no value inside the calibrated range ever
+    /// clamps** — `|round(x/s) - round(c/s)| <= 127` for all
+    /// `x ∈ [min, max]` regardless of rounding alignment — which is
+    /// what makes the `<= scale/2` round-trip bound unconditional.
+    /// Degenerate ranges get a tiny scale so `quantize` stays
+    /// well-defined.
+    pub fn from_range(min: f32, max: f32) -> QuantParams {
+        // The representable range must include 0 so that zero padding
+        // is exact and the midpoint-anchored zero point stays inside
+        // the budget: widen to cover 0.
+        let min = min.min(0.0);
+        let max = max.max(0.0);
+        let range = (max - min).max(1e-30);
+        let scale = range / (Q_MAX - Q_MIN - 1) as f32;
+        let center = 0.5 * (min as f64 + max as f64);
+        let zp = (-center / scale as f64).round();
+        QuantParams { scale, zero_point: (zp as i32).clamp(Q_MIN, Q_MAX) }
+    }
+
+    /// Symmetric params covering `[-a, a]` (zero point 0).
+    pub fn symmetric(abs_max: f32) -> QuantParams {
+        QuantParams { scale: abs_max.max(1e-30) / Q_MAX as f32, zero_point: 0 }
+    }
+
+    /// Min/max calibration over a sample of f32 values (the "sample
+    /// batch" of the classic post-training quantization recipe).
+    pub fn calibrate(sample: &[f32]) -> QuantParams {
+        let mut min = f32::INFINITY;
+        let mut max = f32::NEG_INFINITY;
+        for &v in sample {
+            min = min.min(v);
+            max = max.max(v);
+        }
+        if !min.is_finite() || !max.is_finite() {
+            return QuantParams::IDENT;
+        }
+        QuantParams::from_range(min, max)
+    }
+}
+
+/// `f64::round` — rounds half away from zero. Named so call sites and
+/// the NumPy mirror (`np.floor(x+0.5)` / `np.ceil(x-0.5)` by sign)
+/// agree on the convention.
+#[inline]
+pub fn round_half_away(x: f64) -> f64 {
+    x.round()
+}
+
+/// Quantize one f32 value: `clamp(round(x / s) + zp)` in f64.
+#[inline]
+pub fn quantize(x: f32, qp: &QuantParams) -> i8 {
+    let q = round_half_away(x as f64 / qp.scale as f64) + qp.zero_point as f64;
+    (q.clamp(Q_MIN as f64, Q_MAX as f64)) as i8
+}
+
+/// Dequantize one i8 value: `(q - zp) * s`.
+#[inline]
+pub fn dequantize(q: i8, qp: &QuantParams) -> f32 {
+    (q as i32 - qp.zero_point) as f32 * qp.scale
+}
+
+/// Requantize an i32 accumulator (or centered value) through the f64
+/// multiplier `m`: `clamp(round(acc * m) + zp_out)`.
+#[inline]
+pub fn requantize(acc: i32, m: f64, zp_out: i32) -> i8 {
+    let q = round_half_away(acc as f64 * m) + zp_out as f64;
+    (q.clamp(Q_MIN as f64, Q_MAX as f64)) as i8
+}
+
+/// The per-output-channel requantize multiplier
+/// `m_j = f64(s_in) * f64(s_w_j) / f64(s_out)`.
+#[inline]
+pub fn requant_multiplier(s_in: f32, s_w: f32, s_out: f32) -> f64 {
+    s_in as f64 * s_w as f64 / s_out as f64
+}
+
+/// Symmetric per-output-channel weight scales: `s_j = max|W_j| / 127`
+/// over the OIHW kernel (one scale per output channel, zero point 0 —
+/// the standard int8 weight scheme).
+pub fn per_channel_weight_scales(kernel: &Tensor) -> Vec<f32> {
+    let &[c_o, c_i, h_f, w_f] = kernel.shape() else {
+        return Vec::new();
+    };
+    let per = c_i * h_f * w_f;
+    kernel
+        .data()
+        .chunks(per)
+        .map(|ch| {
+            let abs_max = ch.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            abs_max.max(1e-30) / Q_MAX as f32
+        })
+        .take(c_o)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_is_exact_under_any_range() {
+        for &(lo, hi) in &[(-1.0f32, 1.0f32), (0.0, 5.0), (-3.0, 0.5), (-2.0, -0.5)] {
+            let qp = QuantParams::from_range(lo, hi);
+            assert_eq!(quantize(0.0, &qp) as i32, qp.zero_point);
+            assert_eq!(dequantize(quantize(0.0, &qp), &qp), 0.0);
+        }
+    }
+
+    #[test]
+    fn round_trip_error_is_bounded_by_half_scale() {
+        let qp = QuantParams::from_range(-2.0, 3.0);
+        for i in 0..=1000 {
+            let x = -2.0 + 5.0 * i as f32 / 1000.0;
+            let back = dequantize(quantize(x, &qp), &qp);
+            assert!(
+                (back - x).abs() <= 0.5 * qp.scale * (1.0 + 1e-5),
+                "x={x}: err {} > scale/2 {}",
+                (back - x).abs(),
+                0.5 * qp.scale
+            );
+        }
+    }
+
+    #[test]
+    fn endpoints_stay_in_budget() {
+        let qp = QuantParams::from_range(-7.5, 11.25);
+        assert!((Q_MIN..=Q_MAX).contains(&(quantize(-7.5, &qp) as i32)));
+        assert!((Q_MIN..=Q_MAX).contains(&(quantize(11.25, &qp) as i32)));
+        // Out-of-range values clamp instead of wrapping.
+        assert_eq!(quantize(1e9, &qp) as i32, Q_MAX);
+        assert_eq!(quantize(-1e9, &qp) as i32, Q_MIN);
+    }
+
+    #[test]
+    fn calibrate_matches_from_range() {
+        let sample = [0.5f32, -1.25, 3.0, 0.0, 2.9];
+        assert_eq!(QuantParams::calibrate(&sample), QuantParams::from_range(-1.25, 3.0));
+        assert_eq!(QuantParams::calibrate(&[]), QuantParams::IDENT);
+    }
+
+    #[test]
+    fn weight_scales_are_per_channel_symmetric() {
+        let mut k = Tensor::zeros(&[2, 1, 2, 2]);
+        k.set(&[0, 0, 1, 1], -4.0);
+        k.set(&[1, 0, 0, 0], 0.5);
+        let s = per_channel_weight_scales(&k);
+        assert_eq!(s.len(), 2);
+        assert!((s[0] - 4.0 / 127.0).abs() < 1e-9);
+        assert!((s[1] - 0.5 / 127.0).abs() < 1e-9);
+        // The channel max itself quantizes to exactly ±127.
+        assert_eq!(quantize(-4.0, &QuantParams { scale: s[0], zero_point: 0 }), -127);
+    }
+
+    #[test]
+    fn requantize_rounds_half_away_and_clamps() {
+        assert_eq!(requantize(5, 0.5, 0), 3, "2.5 rounds away from zero");
+        assert_eq!(requantize(-5, 0.5, 0), -3);
+        assert_eq!(requantize(1_000_000, 1.0, 0), 127);
+        assert_eq!(requantize(-1_000_000, 1.0, 10), -127);
+    }
+
+    #[test]
+    fn dtype_strings_round_trip() {
+        for d in [DType::F32, DType::I8] {
+            assert_eq!(DType::from_str_opt(d.as_str()), Some(d));
+            assert_eq!(d.elem_bytes(), if d == DType::I8 { 1 } else { 4 });
+        }
+        assert_eq!(DType::from_str_opt("int8"), Some(DType::I8));
+        assert!(DType::from_str_opt("f16").is_none());
+    }
+}

@@ -72,6 +72,10 @@ fn tolerance(backend: &str) -> (f32, f32) {
     match backend {
         // Transform-domain arithmetic accumulates more rounding.
         "fft" | "winograd" => (1e-2, 1e-2),
+        // 8-bit quantization: per-element error is bounded by half the
+        // input scale times the weight L1 norm plus half the output
+        // scale (self-calibrated with 1.5x range headroom).
+        "direct_i8" => (0.1, 0.1),
         _ => (1e-3, 1e-4),
     }
 }
@@ -139,8 +143,9 @@ fn direct_execute_into_allocates_nothing_after_planning() {
     let registry = BackendRegistry::default();
 
     // Zero-overhead backends: direct plus the other permutation-layout
-    // algorithms, all with workspace_len() == 0.
-    for name in ["direct", "reorder", "naive"] {
+    // algorithms, all with workspace_len() == 0 — including the int8
+    // backend, whose f32 boundary quantizes on the fly (nothing staged).
+    for name in ["direct", "reorder", "naive", "direct_i8"] {
         let plan = registry.plan(name, &s, &kernel, &machine, 1).unwrap();
         assert_eq!(plan.workspace_len(), 0, "{name}");
         let packed = plan.pack_input(&input).unwrap();

@@ -10,7 +10,7 @@ use dconv::engine::{pool_nchw, NetRunner};
 use dconv::gemm::{sgemm, sgemm_naive};
 use dconv::json::Json;
 use dconv::layout::{from_blocked_io, from_blocked_kernel, to_blocked_io, to_blocked_kernel};
-use dconv::nets::{BranchTag, GraphNode, GraphOp, NetGraph, NetPlans};
+use dconv::nets::{BranchTag, GraphNode, GraphOp, NetGraph, NetPlans, PoolKind};
 use dconv::tensor::{Tensor, XorShiftRng};
 
 /// One-shot §4 pack -> blocked direct conv -> unpack with explicit
@@ -219,7 +219,15 @@ fn random_module_net(rng: &mut XorShiftRng) -> (Vec<ConvShape>, NetGraph) {
         if h >= 4 && rng.next_usize(2) == 0 {
             nodes.push(GraphNode {
                 name: format!("pool{m}"),
-                op: GraphOp::Pool { kh: 2, kw: 2, sh: 2, sw: 2, ph: 0, pw: 0 },
+                op: GraphOp::Pool {
+                    kind: PoolKind::Max,
+                    kh: 2,
+                    kw: 2,
+                    sh: 2,
+                    sw: 2,
+                    ph: 0,
+                    pw: 0,
+                },
                 preds: vec![x],
                 branch: None,
             });
@@ -277,9 +285,12 @@ fn graph_reference(
                 let x = outs[n.preds[0]].as_ref().unwrap();
                 conv_naive(x, &kernels[*layer], &shapes[*layer]).unwrap()
             }
-            GraphOp::Pool { kh, kw, sh, sw, ph, pw } => {
+            GraphOp::Pool { kind: PoolKind::Max, kh, kw, sh, sw, ph, pw } => {
                 let x = outs[n.preds[0]].as_ref().unwrap();
                 pool_nchw(x, *kh, *kw, *sh, *sw, *ph, *pw).unwrap()
+            }
+            GraphOp::Pool { kind: PoolKind::Avg, .. } => {
+                unreachable!("random module nets only emit max pools")
             }
             GraphOp::Concat => {
                 let parts: Vec<&Tensor> =

@@ -1,17 +1,31 @@
-//! Whole-network batched serving: `NetEngine` throughput on a conv
-//! chain, one worker vs a full worker pool. Batch items are independent
-//! images fanned out across scoped threads with per-worker activation
-//! arenas, so on any multi-core host the threaded batch beats the
-//! single-thread path — the serving-side payoff of the zero-allocation
-//! forward (no allocator contention, no cross-worker state).
+//! Whole-network batched serving, two sections:
+//!
+//! 1. `NetEngine` throughput on a conv chain, one worker vs a full
+//!    worker pool. Batch items are independent images fanned out across
+//!    scoped threads with per-worker activation arenas, so on any
+//!    multi-core host the threaded batch beats the single-thread path —
+//!    the serving-side payoff of the zero-allocation forward (no
+//!    allocator contention, no cross-worker state).
+//! 2. The production server (`dconv::serve`) with an f32 and an i8
+//!    compile of the same net resident at once, driven by the *same
+//!    seeded arrival schedule* (loadgen): completed throughput, server
+//!    latency split (queue wait / e2e p50/p99) and the ~4x activation
+//!    arena delta, emitted as `net_serve_i8` plus a loadgen JSON
+//!    artifact under `bench_results/`.
+
+use std::time::Duration;
 
 use dconv::arch::host;
 use dconv::bench_harness::{bench, emit, opts_from_env, sink};
 use dconv::conv::ConvShape;
 use dconv::engine::{NetEngine, NetRunner};
 use dconv::metrics::{gflops, Table};
+use dconv::nets::builder::resnet_micro;
 use dconv::nets::NetPlans;
+use dconv::quant::DType;
 use dconv::runtime::ModelExecutor;
+use dconv::serve::{loadgen, LoadSpec, ModelLoad, ServeConfig, ServerBuilder};
+use dconv::sim::ArrivalPattern;
 use dconv::tensor::Tensor;
 
 const BATCH: usize = 8;
@@ -77,4 +91,79 @@ fn main() {
     if cores > 1 && tp.median_secs >= t1.median_secs {
         println!("note: pool did not beat serial on this host/run (cores={cores})");
     }
+
+    serve_i8_vs_f32();
+}
+
+/// Section 2: i8 vs f32 under the same offered load, through the full
+/// production serving path (admission, continuous batching, telemetry).
+fn serve_i8_vs_f32() {
+    let fast = std::env::var("DCONV_BENCH_FAST").is_ok();
+    let (requests, rate) = if fast { (40, 400.0) } else { (240, 800.0) };
+
+    let f32_model = resnet_micro();
+    let mut i8_model = resnet_micro();
+    i8_model.dtype = DType::I8;
+    let cfg = ServeConfig {
+        queue_depth: 128,
+        batch_wait: Duration::from_millis(1),
+        workers: 2,
+        batch_sizes: vec![1, 2, 4, 8],
+        ..Default::default()
+    };
+    let mut b = ServerBuilder::new(&host(), cfg).backend("direct");
+    b.add_model("rm_f32", &f32_model).unwrap();
+    b.add_model("rm_i8", &i8_model).unwrap();
+    let server = b.start().unwrap();
+
+    // The same seeded schedule offered to both models concurrently.
+    let seed = 0xBE9C;
+    let spec = LoadSpec::default()
+        .push(ModelLoad::new("rm_f32", ArrivalPattern::Burst, rate, requests).seed(seed))
+        .push(ModelLoad::new("rm_i8", ArrivalPattern::Burst, rate, requests).seed(seed));
+    let report = loadgen::run(&server, &spec).unwrap();
+
+    let mut t = Table::new(&[
+        "model", "arena B/worker", "offered", "done", "shed", "req/s",
+        "wait p50 ms", "e2e p50 ms", "e2e p99 ms",
+    ]);
+    for r in &report.results {
+        let h = server.model(&r.model).unwrap();
+        t.row(vec![
+            r.model.clone(),
+            h.runner().arena_bytes().to_string(),
+            r.requests.to_string(),
+            r.completed.to_string(),
+            r.shed.to_string(),
+            format!("{:.1}", r.throughput()),
+            format!("{:.2}", r.server.queue_wait.p50() * 1e3),
+            format!("{:.2}", r.server.e2e.p50() * 1e3),
+            format!("{:.2}", r.server.e2e.p99() * 1e3),
+        ]);
+    }
+    emit(
+        "net_serve_i8",
+        &format!(
+            "i8 vs f32 serving — same net, same seeded {} schedule ({rate:.0} req/s), \
+             fingerprint {:016x}",
+            ArrivalPattern::Burst.name(),
+            report.results[0].fingerprint
+        ),
+        &t,
+    );
+    let hf = server.model("rm_f32").unwrap();
+    let hq = server.model("rm_i8").unwrap();
+    println!(
+        "arena delta: {} B f32 -> {} B i8 ({:.2}x smaller per worker); both zero-overhead \
+         (f32 {} B, i8 {} B)",
+        hf.runner().arena_bytes(),
+        hq.runner().arena_bytes(),
+        hf.runner().arena_bytes() as f64 / hq.runner().arena_bytes() as f64,
+        hf.runner().overhead_bytes(),
+        hq.runner().overhead_bytes()
+    );
+    if let Err(e) = report.write_artifact("bench_results/net_serve_loadgen.json") {
+        println!("note: could not write loadgen artifact: {e}");
+    }
+    server.shutdown().unwrap();
 }

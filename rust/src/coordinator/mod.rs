@@ -27,6 +27,7 @@ pub use batcher::{BatchPlan, Batcher, BatcherConfig};
 
 use crate::metrics::{Histogram, ServeStats};
 use crate::runtime::ModelExecutor;
+use crate::serve::Rejected;
 use crate::{Error, Result};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -67,6 +68,7 @@ pub struct Coordinator {
     stats: Arc<Mutex<ServeStats>>,
     image_elems: usize,
     classes: usize,
+    queue_depth: usize,
 }
 
 /// A pending response.
@@ -119,12 +121,14 @@ impl Coordinator {
             .name("coordinator".into())
             .spawn(move || worker(engine, cfg2, batches, image_elems, classes, rx, st2))
             .map_err(|e| Error::Runtime(format!("spawn: {e}")))?;
-        Ok(Coordinator { tx, stats, image_elems, classes })
+        Ok(Coordinator { tx, stats, image_elems, classes, queue_depth: cfg.queue_depth })
     }
 
-    /// Submit one image. Returns immediately with a [`Pending`]; fails
-    /// with `Error::Runtime` if the queue is full (backpressure) or the
-    /// input has the wrong size.
+    /// Submit one image. Returns immediately with a [`Pending`]; sheds
+    /// with `Error::Rejected(Rejected::QueueFull)` when the bounded
+    /// queue is full, `Rejected::ShuttingDown` once the worker is gone,
+    /// and fails with `Error::Shape` on a wrong-size input — the same
+    /// typed vocabulary as [`crate::serve::Server`].
     pub fn submit(&self, input: Vec<f32>) -> Result<Pending> {
         if input.len() != self.image_elems {
             return Err(Error::Shape(format!(
@@ -137,11 +141,9 @@ impl Coordinator {
         match self.tx.try_send(Request { input, enqueued: Instant::now(), reply }) {
             Ok(()) => Ok(Pending { rx }),
             Err(TrySendError::Full(_)) => {
-                Err(Error::Runtime("queue full (backpressure)".into()))
+                Err(Rejected::QueueFull { depth: self.queue_depth }.into())
             }
-            Err(TrySendError::Disconnected(_)) => {
-                Err(Error::Runtime("coordinator stopped".into()))
-            }
+            Err(TrySendError::Disconnected(_)) => Err(Rejected::ShuttingDown.into()),
         }
     }
 
@@ -149,9 +151,7 @@ impl Coordinator {
     pub fn submit_blocking(&self, input: Vec<f32>) -> Result<Pending> {
         loop {
             match self.submit(input.clone()) {
-                Err(Error::Runtime(ref m)) if m.starts_with("queue full") => {
-                    std::thread::yield_now();
-                }
+                Err(Error::Rejected(Rejected::QueueFull { .. })) => std::thread::yield_now(),
                 other => return other,
             }
         }

@@ -98,9 +98,15 @@
 //! 3. **Serving stack** — [`engine`] (the `ConvAlgo`/`ConvPlan`
 //!    plan/execute API, the [`engine::NetRunner`] whole-network
 //!    executor, and the native [`engine::PlanEngine`] /
-//!    [`engine::NetEngine`] executors) and [`coordinator`] (request
+//!    [`engine::NetEngine`] executors), [`coordinator`] (request
 //!    router, dynamic batcher with multi-execution split, worker pool)
-//!    with [`metrics`]. [`runtime`] holds the artifact manifest plus,
+//!    and [`serve`] — the production path: multi-model server with
+//!    bounded admission queues and typed shedding
+//!    ([`serve::Rejected`]), continuous cross-request batching,
+//!    spec-hash plan cache, per-model [`metrics::ServeMetrics`]
+//!    telemetry, and the seeded heavy-tail load generator
+//!    ([`serve::loadgen`], CLI `loadgen`) — with [`metrics`].
+//!    [`runtime`] holds the artifact manifest plus,
 //!    behind the `pjrt` feature, the XLA/PJRT executor for the
 //!    JAX/Pallas AOT compile path.
 //!
@@ -127,6 +133,7 @@ pub mod metrics;
 pub mod nets;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod tensor;
 pub mod winograd;
@@ -142,6 +149,10 @@ pub enum Error {
     Runtime(String),
     Parse(String),
     Io(std::io::Error),
+    /// A serving request was not admitted or was dropped before
+    /// execution, with the typed [`serve::Rejected`] reason. Raised by
+    /// [`serve::Server`] and the [`coordinator`]'s admission edge.
+    Rejected(serve::Rejected),
 }
 
 impl std::fmt::Display for Error {
@@ -152,6 +163,7 @@ impl std::fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Parse(m) => write!(f, "parse error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Rejected(r) => write!(f, "rejected: {r}"),
         }
     }
 }

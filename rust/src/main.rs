@@ -19,17 +19,28 @@
 //!                               simulated per-layer comparison (Fig 4 rows)
 //!   run-layer [--layer NAME] [--backend B] [--threads P]
 //!                               host-measured single layer via the engine
-//!   serve [--layer NAME | --net NET | --model path.json] [--backend B]
-//!         [--requests N] [--clients C] [--workers W] [--autotune]
-//!         [--branch-lanes L] [--dtype f32|i8]
-//!                               serve a layer (cached ConvPlan) or a whole
-//!                               network — built-in or JSON model spec —
-//!                               (NetRunner over the dataflow graph +
-//!                               worker pool, one liveness-sized
-//!                               activation arena per worker) through the
-//!                               coordinator — zero per-request conv
-//!                               allocations either way; with the `pjrt`
+//!   serve [--layer NAME | --net NET | --model path.json |
+//!          --models A,B:i8,...] [--backend B] [--requests N] [--clients C]
+//!         [--workers W] [--branch-lanes L] [--dtype f32|i8]
+//!         [--queue-depth D] [--batch-wait-ms MS] [--deadline-ms MS]
+//!         [--stats SECS]
+//!                               serve a layer (cached ConvPlan through the
+//!                               coordinator) or whole networks through the
+//!                               production server (`dconv::serve`):
+//!                               several models — f32 and i8 — resident at
+//!                               once behind bounded admission queues,
+//!                               continuous batching, per-worker arenas
+//!                               (zero per-request conv allocations),
+//!                               periodic --stats telemetry reports and a
+//!                               final per-model summary; with the `pjrt`
 //!                               feature and --dir, serves PJRT artifacts
+//!   loadgen [--smoke] [same model/server flags as serve]
+//!           [--pattern poisson|pareto|burst] [--rate R] [--requests N]
+//!           [--seed S] [--out path.json]
+//!                               replay a seeded heavy-tail arrival schedule
+//!                               against the server (open loop) and write a
+//!                               JSON results artifact; --smoke is the small
+//!                               deterministic CI run
 //!   verify [--dir artifacts]    check every artifact against its golden
 //!                               (requires the `pjrt` feature)
 
@@ -37,13 +48,16 @@ use dconv::arch::{self, render_table1, Machine};
 use dconv::cli::Args;
 use dconv::conv::conv_naive;
 use dconv::coordinator::{Coordinator, CoordinatorConfig};
-use dconv::engine::{BackendRegistry, ConvAlgo, ConvPlan, NetEngine, NetRunner, PlanEngine};
+use dconv::engine::{BackendRegistry, ConvAlgo, ConvPlan, NetRunner, PlanEngine};
 use dconv::layout::{io_layout_len, kernel_layout_len};
 use dconv::metrics::{gflops, time_it, Table};
 use dconv::nets::{self, NetPlans};
 use dconv::quant::{DType, QuantNet, CALIBRATION_SEED};
-use dconv::sim::{estimate, Algo};
+use dconv::serve::{loadgen, LoadSpec, ModelHandle, ModelLoad, ServeConfig, Server, ServerBuilder};
+use dconv::sim::{estimate, Algo, ArrivalPattern};
 use dconv::tensor::Tensor;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
 
 fn main() {
     let args = Args::parse();
@@ -57,6 +71,7 @@ fn main() {
         "simulate" => simulate(&args),
         "run-layer" => run_layer(&args),
         "serve" => serve(&args),
+        "loadgen" => loadgen_cmd(&args),
         "verify" => verify(&args),
         _ => help(),
     }
@@ -76,9 +91,14 @@ fn help() {
                        [--dtype f32|i8]  (i8: calibrated int8 plans, 4x smaller arena)\n\
            simulate    simulated Fig-4 comparison [--net N --arch intel|amd|arm --threads P]\n\
            run-layer   measure one layer on this host [--layer alexnet/conv3 --backend auto]\n\
-           serve       serve a layer or whole net\n\
-                       [--layer NAME | --net N | --model path.json] [--workers W]\n\
-                       [--autotune] [--branch-lanes L] [--dtype f32|i8]\n\
+           serve       serve a layer, or whole nets through the production server\n\
+                       [--layer NAME | --net N | --model path.json | --models A,B:i8]\n\
+                       [--workers W] [--branch-lanes L] [--dtype f32|i8]\n\
+                       [--queue-depth D] [--batch-wait-ms MS] [--deadline-ms MS]\n\
+                       [--stats SECS] [--requests N] [--clients C]\n\
+           loadgen     seeded heavy-tail load replay + JSON artifact\n\
+                       [--smoke] [--pattern poisson|pareto|burst] [--rate R]\n\
+                       [--requests N] [--seed S] [--out path.json] + serve flags\n\
            verify      verify PJRT artifacts against goldens [--dir artifacts] (pjrt feature)"
     );
 }
@@ -577,7 +597,7 @@ fn serve(args: &Args) {
             std::process::exit(1);
         }
     }
-    if args.get("model").is_some() || args.get("net").is_some() {
+    if args.get("model").is_some() || args.get("net").is_some() || args.get("models").is_some() {
         return serve_net(args);
     }
     if matches!(args.get("dtype"), Some(d) if DType::from_str_opt(d) != Some(DType::F32)) {
@@ -634,104 +654,239 @@ fn serve(args: &Args) {
     println!("latency    : {}", st.latency.summary());
 }
 
-/// Serve a whole network — a built-in benchmark net (`--net`) or a JSON
-/// model spec (`--model path.json`) — through the coordinator: every
-/// layer planned once at startup (NetRunner over the net's dataflow
-/// graph), batch items fanned out across the NetEngine worker pool, one
-/// liveness-sized activation arena per worker. `--autotune` measures
-/// per-layer thread counts at plan time; `--branch-lanes L` runs
-/// independent inception branches on up to L scoped threads per image.
-fn serve_net(args: &Args) {
-    let backend = args.get_or("backend", "auto");
-    let requests = args.get_usize("requests", 64);
-    let clients = args.get_usize("clients", 4);
-    let threads = args.get_usize("threads", 1);
-    let lanes = args.get_usize("branch-lanes", 1);
-    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let workers = args.get_usize("workers", cores);
-    let m = arch::host();
-    let source = NetSource::resolve(args);
-    let net = source.name();
-    let dtype = source.dtype(args);
-    let runner = if dtype == DType::I8 {
-        if args.flag("autotune") {
-            println!("note: --autotune measures f32 plans and is ignored with --dtype i8");
-        }
-        let model = source.into_model();
-        println!(
-            "calibrating {} activation ranges from a sample batch (seed {CALIBRATION_SEED:#x}) \
-             ...",
-            model.name
-        );
-        match QuantNet::build_model(&model, &m, threads).and_then(|q| q.runner(lanes)) {
-            Ok(r) => r,
+/// One `--models` entry: `NAME`, `NAME:dtype`, or `path.json[:dtype]`.
+/// The entry string itself is the served name, so two entries differing
+/// only in dtype coexist behind one server.
+fn served_entry(entry: &str) -> (String, nets::Model) {
+    let (spec, dt) = match entry.rsplit_once(':') {
+        Some((s, d)) if DType::from_str_opt(d).is_some() => (s, DType::from_str_opt(d)),
+        _ => (entry, None),
+    };
+    let mut model = if spec.ends_with(".json") {
+        match nets::Model::from_file(spec) {
+            Ok(m) => m,
             Err(e) => die(e),
         }
     } else {
-        let plans = if args.flag("autotune") {
-            match source.build_autotuned(backend, &m, &thread_candidates()) {
-                Ok((plans, report)) => {
-                    let tuned: usize = report.iter().filter(|c| c.threads > 1).count();
-                    println!(
-                        "autotuned per-layer threads: {tuned}/{} layers kept > 1",
-                        report.len()
-                    );
-                    plans
-                }
-                Err(e) => die(e),
-            }
-        } else {
-            match source.build(backend, &m, threads) {
-                Ok(plans) => plans,
-                Err(e) => die(e),
-            }
-        };
-        match source.runner(plans, lanes) {
-            Ok(r) => r,
-            Err(e) => die(e),
-        }
+        nets::model_by_name(spec).unwrap_or_else(|| {
+            eprintln!(
+                "unknown model '{spec}' \
+                 (alexnet|googlenet|vgg16|resnet_micro or a path.json model spec)"
+            );
+            std::process::exit(1);
+        })
     };
+    if let Some(d) = dt {
+        model.dtype = d;
+    }
+    (entry.to_string(), model)
+}
+
+/// The models a `serve`/`loadgen` server hosts: the `--models` list, or
+/// the single net from `--net`/`--model` (+`--dtype`).
+fn resolve_served_models(args: &Args) -> Vec<(String, nets::Model)> {
+    if let Some(list) = args.get("models") {
+        let entries: Vec<_> =
+            list.split(',').filter(|e| !e.is_empty()).map(served_entry).collect();
+        if entries.is_empty() {
+            eprintln!("--models needs at least one entry (e.g. resnet_micro,resnet_micro:i8)");
+            std::process::exit(1);
+        }
+        return entries;
+    }
+    let source = NetSource::resolve(args);
+    let dtype = source.dtype(args);
+    let mut model = source.into_model();
+    model.dtype = dtype;
+    vec![(model.name.clone(), model)]
+}
+
+/// Build and start the production server from the shared CLI flags;
+/// returns one handle per served model, in registration order.
+fn build_server(args: &Args) -> (Server, Vec<ModelHandle>) {
+    let backend = args.get_or("backend", "auto");
+    let threads = args.get_usize("threads", 1);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let cfg = ServeConfig {
+        queue_depth: args.get_usize("queue-depth", 256),
+        batch_wait: Duration::from_millis(args.get_usize("batch-wait-ms", 2) as u64),
+        deadline: args
+            .get("deadline-ms")
+            .and_then(|v| v.parse::<u64>().ok())
+            .map(Duration::from_millis),
+        workers: args.get_usize("workers", cores),
+        batch_sizes: vec![1, 2, 4, 8],
+        branch_lanes: args.get_usize("branch-lanes", 1),
+    };
+    if args.flag("autotune") {
+        println!("note: the production server plans with fixed --threads; --autotune ignored");
+    }
+    let m = arch::host();
+    let entries = resolve_served_models(args);
+    let mut b = ServerBuilder::new(&m, cfg).backend(backend).plan_threads(threads);
+    for (name, model) in &entries {
+        if model.dtype == DType::I8 {
+            println!(
+                "calibrating {} activation ranges from a sample batch \
+                 (seed {CALIBRATION_SEED:#x}) ...",
+                name
+            );
+        }
+        if let Err(e) = b.add_model(name, model) {
+            die(e);
+        }
+    }
+    let cached = b.cached_plans();
+    let server = match b.start() {
+        Ok(s) => s,
+        Err(e) => die(e),
+    };
+    let handles: Vec<ModelHandle> =
+        entries.iter().map(|(n, _)| server.model(n).expect("registered above")).collect();
+    for h in &handles {
+        let r = h.runner();
+        println!(
+            "  {} ({}): spec {:016x}, {} worker(s), queue depth {}, arena {} B/worker, \
+             network overhead {} B",
+            h.name(),
+            h.dtype(),
+            h.spec_hash(),
+            h.workers(),
+            h.queue_depth(),
+            r.arena_bytes(),
+            r.overhead_bytes()
+        );
+    }
+    println!("compiled {cached} distinct plan(s) for {} served model(s)", handles.len());
+    (server, handles)
+}
+
+/// Periodic `--stats` reporter: prints the per-model telemetry table
+/// every `every` seconds until `stop` flips.
+fn stats_reporter(server: &Server, stop: &AtomicBool, every: u64) {
+    let period = Duration::from_secs(every.max(1));
+    let mut next = Instant::now() + period;
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(Duration::from_millis(50));
+        if Instant::now() >= next {
+            println!("--- stats @ {:.1}s ---", server.uptime().as_secs_f64());
+            print!("{}", server.report());
+            next += period;
+        }
+    }
+}
+
+/// Serve whole networks through the production server
+/// ([`dconv::serve::Server`]): several models (f32 and i8) resident at
+/// once behind bounded admission queues, continuous batching across
+/// requests, one liveness-sized arena per worker (zero per-request conv
+/// allocations), and per-model telemetry (`--stats SECS` for periodic
+/// reports; a final summary always prints).
+fn serve_net(args: &Args) {
+    let requests = args.get_usize("requests", 64);
+    let clients = args.get_usize("clients", 4);
+    let stats_every = match args.get("stats") {
+        None => 0,
+        Some(v) => v.parse::<u64>().unwrap_or(2).max(1),
+    };
+    let (server, handles) = build_server(args);
     println!(
-        "serving {net} ({dtype}): {} graph nodes / {} layers, retained {} B + shared \
-         workspace {} B (network overhead {} B), activation arena {} B per worker, {} branch \
-         lane(s)",
-        runner.graph().len(),
-        runner.layers(),
-        runner.retained_bytes(),
-        runner.workspace_bytes(),
-        runner.overhead_bytes(),
-        runner.arena_bytes(),
-        runner.branch_lanes()
+        "serving {requests} requests from {clients} client thread(s), round-robin over {:?}",
+        server.models()
     );
-    let image_in = runner.input_len();
-    let image_out = runner.output_len();
-    let engine = NetEngine::new(runner, workers, &[1, 2, 4, 8], "net").unwrap_or_else(|e| {
-        eprintln!("{e}");
-        std::process::exit(1);
-    });
-    let cfg = CoordinatorConfig { model_prefix: "net".into(), ..Default::default() };
-    let coord = Coordinator::start(engine, cfg).unwrap();
-    println!("serving {requests} requests from {clients} client threads, {workers} net workers");
+    let stop = AtomicBool::new(false);
     let (_, secs) = time_it(|| {
         std::thread::scope(|scope| {
+            if stats_every > 0 {
+                scope.spawn(|| stats_reporter(&server, &stop, stats_every));
+            }
+            let mut drivers = Vec::new();
             for c in 0..clients {
-                let coord = coord.clone();
                 // Spread the remainder so the counts sum to `requests`.
                 let n = requests / clients + usize::from(c < requests % clients);
-                scope.spawn(move || {
+                let (server, handles) = (&server, &handles);
+                drivers.push(scope.spawn(move || {
                     for i in 0..n {
-                        let x = Tensor::random(&[image_in], (c * 10_000 + i) as u64);
-                        let out = coord.submit_blocking(x.into_vec()).unwrap().wait().unwrap();
-                        assert_eq!(out.len(), image_out);
+                        let h = &handles[(c + i) % handles.len()];
+                        let x = Tensor::random(&[h.image_in()], (c * 10_000 + i) as u64);
+                        let out = server
+                            .submit_blocking(h.name(), x.into_vec())
+                            .unwrap()
+                            .wait()
+                            .unwrap();
+                        assert_eq!(out.len(), h.image_out());
                     }
-                });
+                }));
             }
+            for d in drivers {
+                d.join().expect("client thread panicked");
+            }
+            stop.store(true, Ordering::Relaxed);
         });
     });
-    let st = coord.stats();
-    println!("\nthroughput : {:.1} img/s", st.requests as f64 / secs);
-    println!("batches    : {} (mean occupancy {:.2})", st.batches, st.mean_batch_size());
-    println!("latency    : {}", st.latency.summary());
+    let total: u64 = handles.iter().map(|h| h.stats().completed).sum();
+    println!("\nthroughput : {:.1} img/s over {:.2}s", total as f64 / secs, secs);
+    print!("{}", server.report());
+    if let Err(e) = server.shutdown() {
+        die(e);
+    }
+}
+
+/// `dconv loadgen`: replay seeded heavy-tail arrival schedules against
+/// the production server and write the JSON results artifact. `--smoke`
+/// is the small deterministic CI run (f32 + i8 resnet_micro, watchdog
+/// bounded, fails on zero completions).
+fn loadgen_cmd(args: &Args) {
+    if args.flag("smoke") {
+        match loadgen::smoke() {
+            Ok(report) => {
+                print!("{}", report.summary());
+                println!(
+                    "loadgen smoke ok: {} request(s) completed in {:.2}s",
+                    report.total_completed(),
+                    report.wall_secs
+                );
+            }
+            Err(e) => die(e),
+        }
+        return;
+    }
+    let pattern_name = args.get_or("pattern", "burst");
+    let pattern = ArrivalPattern::from_name(pattern_name).unwrap_or_else(|| {
+        eprintln!("unknown --pattern '{pattern_name}' (poisson|pareto|burst)");
+        std::process::exit(1);
+    });
+    let rate = args.get_f64("rate", 500.0);
+    let requests = args.get_usize("requests", 200);
+    let seed = args.get_usize("seed", 0xC0FFEE) as u64;
+    let (server, handles) = build_server(args);
+    let mut spec = LoadSpec::default();
+    for (i, h) in handles.iter().enumerate() {
+        spec = spec.push(
+            ModelLoad::new(h.name(), pattern, rate, requests).seed(seed.wrapping_add(i as u64)),
+        );
+    }
+    println!(
+        "replaying {requests} {pattern_name} arrival(s)/model at {rate:.0} req/s (seed {seed:#x})"
+    );
+    let report = match loadgen::run(&server, &spec) {
+        Ok(r) => r,
+        Err(e) => die(e),
+    };
+    print!("{}", report.summary());
+    println!();
+    print!("{}", server.report());
+    for r in &report.results {
+        println!("  {} schedule fingerprint: {:016x}", r.model, r.fingerprint);
+    }
+    let out = args.get_or("out", "bench_results/loadgen.json");
+    match report.write_artifact(out) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => die(e),
+    }
+    if let Err(e) = server.shutdown() {
+        die(e);
+    }
 }
 
 #[cfg(feature = "pjrt")]

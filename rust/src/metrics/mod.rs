@@ -50,6 +50,105 @@ impl ServeStats {
     }
 }
 
+/// Per-model serving telemetry for the [`crate::serve`] subsystem:
+/// admission counters plus the latency split into queue wait and
+/// execution. Kept behind one mutex per model; workers lock it once per
+/// sub-batch, so contention stays off the conv hot path.
+///
+/// The three histograms decompose end-to-end latency:
+///
+/// * `queue_wait` — submit to dispatch (admission + batching delay);
+/// * `execute` — per-batch wall time inside the worker's forward loop;
+/// * `e2e` — submit to reply, per request (what the client feels).
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    /// Requests offered to admission (accepted + shed).
+    pub submitted: u64,
+    /// Requests that completed with a successful reply.
+    pub completed: u64,
+    /// Requests rejected at admission because the bounded queue was
+    /// full (explicit shedding — the producer was never blocked).
+    pub shed_queue_full: u64,
+    /// Requests dropped *before execution* because their deadline had
+    /// already passed when a worker picked them up.
+    pub deadline_missed: u64,
+    /// Requests that reached execution but failed.
+    pub failed: u64,
+    /// Sub-batches executed.
+    pub batches: u64,
+    /// Sum of live requests over all executed sub-batches.
+    pub total_occupancy: u64,
+    pub queue_wait: Histogram,
+    pub execute: Histogram,
+    pub e2e: Histogram,
+}
+
+impl ServeMetrics {
+    /// One executed sub-batch of `occupancy` live requests taking
+    /// `exec_secs` of worker wall time.
+    pub fn record_batch(&mut self, occupancy: usize, exec_secs: f64) {
+        self.batches += 1;
+        self.total_occupancy += occupancy as u64;
+        self.execute.record(exec_secs);
+    }
+
+    /// One successfully completed request with its latency split.
+    pub fn record_done(&mut self, queue_wait_secs: f64, e2e_secs: f64) {
+        self.completed += 1;
+        self.queue_wait.record(queue_wait_secs);
+        self.e2e.record(e2e_secs);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.total_occupancy as f64 / self.batches as f64
+        }
+    }
+
+    /// Completed-request throughput over a measurement window.
+    pub fn throughput(&self, secs: f64) -> f64 {
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / secs
+        }
+    }
+
+    /// Accounting identity: every offered request is exactly one of
+    /// completed / shed / deadline-missed / failed / still in flight.
+    pub fn in_flight(&self) -> u64 {
+        self.submitted
+            .saturating_sub(self.completed)
+            .saturating_sub(self.shed_queue_full)
+            .saturating_sub(self.deadline_missed)
+            .saturating_sub(self.failed)
+    }
+
+    /// Multi-line human report (the `serve --stats` block body).
+    pub fn report(&self) -> String {
+        format!(
+            "offered={} completed={} shed={} deadline_missed={} failed={} in_flight={}\n\
+             batches={} (mean occupancy {:.2})\n\
+             queue wait : {}\n\
+             execute    : {}\n\
+             end-to-end : {}",
+            self.submitted,
+            self.completed,
+            self.shed_queue_full,
+            self.deadline_missed,
+            self.failed,
+            self.in_flight(),
+            self.batches,
+            self.mean_batch_size(),
+            self.queue_wait.summary(),
+            self.execute.summary(),
+            self.e2e.summary(),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -74,5 +173,25 @@ mod tests {
         s.record_batch(2);
         assert_eq!(s.requests, 6);
         assert!((s.mean_batch_size() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serve_metrics_accounting_identity() {
+        let mut m = ServeMetrics::default();
+        m.submitted = 10;
+        m.shed_queue_full = 2;
+        m.deadline_missed = 1;
+        m.record_batch(3, 0.010);
+        m.record_batch(3, 0.012);
+        for _ in 0..6 {
+            m.record_done(0.001, 0.015);
+        }
+        assert_eq!(m.completed, 6);
+        assert_eq!(m.in_flight(), 1);
+        assert!((m.mean_batch_size() - 3.0).abs() < 1e-12);
+        assert!((m.throughput(2.0) - 3.0).abs() < 1e-12);
+        assert_eq!(m.throughput(0.0), 0.0);
+        let r = m.report();
+        assert!(r.contains("offered=10") && r.contains("shed=2"));
     }
 }

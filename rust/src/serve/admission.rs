@@ -1,0 +1,237 @@
+//! Bounded admission queue with explicit shedding and graceful close.
+//!
+//! The contract the serving path needs and `std::sync::mpsc` doesn't
+//! quite give:
+//!
+//! * **producers never block** — [`AdmissionQueue::try_push`] either
+//!   admits or returns the item back with a typed [`Rejected`] reason
+//!   (`QueueFull` under overload, `ShuttingDown` after close), so
+//!   overload is shed at the edge instead of propagating backpressure
+//!   into the caller's thread;
+//! * **consumers drain on close** — [`AdmissionQueue::close`] stops
+//!   admission but [`AdmissionQueue::pop_blocking`] keeps returning
+//!   already-accepted items until the queue is empty, which is exactly
+//!   the graceful-drain semantic shutdown wants (`recv` on a dropped
+//!   mpsc channel loses nothing either, but mpsc cannot shed without
+//!   consuming the slot bound, nor share one queue across N workers);
+//! * **many consumers** — workers pull batches concurrently from one
+//!   queue (mpsc receivers cannot be shared).
+//!
+//! Plain `Mutex<VecDeque> + Condvar`; the lock is held only for O(1)
+//! push/pop, never across execution.
+
+use super::Rejected;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+struct Shared<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+}
+
+/// Bounded multi-producer multi-consumer queue. Clone freely: clones
+/// share the queue.
+pub struct AdmissionQueue<T> {
+    shared: Arc<Shared<T>>,
+    depth: usize,
+}
+
+impl<T> Clone for AdmissionQueue<T> {
+    fn clone(&self) -> Self {
+        AdmissionQueue { shared: Arc::clone(&self.shared), depth: self.depth }
+    }
+}
+
+impl<T> AdmissionQueue<T> {
+    /// A queue admitting at most `depth` queued items (min 1).
+    pub fn bounded(depth: usize) -> AdmissionQueue<T> {
+        let depth = depth.max(1);
+        AdmissionQueue {
+            shared: Arc::new(Shared {
+                state: Mutex::new(State {
+                    items: VecDeque::with_capacity(depth),
+                    closed: false,
+                }),
+                not_empty: Condvar::new(),
+            }),
+            depth,
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, State<T>> {
+        // A worker panicking while holding this O(1) lock leaves the
+        // queue structurally intact; serving degraded beats deadlock.
+        self.shared.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Admit `item`, or hand it back with the shedding reason. Never
+    /// blocks.
+    pub fn try_push(&self, item: T) -> Result<(), (T, Rejected)> {
+        let mut st = self.lock();
+        if st.closed {
+            return Err((item, Rejected::ShuttingDown));
+        }
+        if st.items.len() >= self.depth {
+            return Err((item, Rejected::QueueFull { depth: self.depth }));
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.shared.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Take the oldest item without waiting.
+    pub fn try_pop(&self) -> Option<T> {
+        self.lock().items.pop_front()
+    }
+
+    /// Block until an item is available or the queue is closed *and*
+    /// drained (`None` — the consumer should exit).
+    pub fn pop_blocking(&self) -> Option<T> {
+        let mut st = self.lock();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.shared.not_empty.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Block until an item is available, the queue closes empty, or
+    /// `deadline` passes — the batch-window accumulate step.
+    pub fn pop_deadline(&self, deadline: Instant) -> Option<T> {
+        let mut st = self.lock();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, timeout) = self
+                .shared
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
+            st = guard;
+            if timeout.timed_out() {
+                return st.items.pop_front();
+            }
+        }
+    }
+
+    /// Stop admission (producers get [`Rejected::ShuttingDown`]) and
+    /// wake every blocked consumer so it can drain and exit.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.shared.not_empty.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.lock().closed
+    }
+
+    /// Currently queued items (the `--stats` queue-depth gauge).
+    pub fn len(&self) -> usize {
+        self.lock().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The configured admission bound.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn sheds_when_full_and_hands_the_item_back() {
+        let q = AdmissionQueue::bounded(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        let (item, why) = q.try_push(3).unwrap_err();
+        assert_eq!(item, 3);
+        assert_eq!(why, Rejected::QueueFull { depth: 2 });
+        assert_eq!(q.len(), 2);
+        // Freeing a slot re-admits.
+        assert_eq!(q.try_pop(), Some(1));
+        assert!(q.try_push(3).is_ok());
+    }
+
+    #[test]
+    fn close_drains_then_signals_exit() {
+        let q = AdmissionQueue::bounded(4);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        let (item, why) = q.try_push(9).unwrap_err();
+        assert_eq!((item, why), (9, Rejected::ShuttingDown));
+        // Already-admitted items still drain...
+        assert_eq!(q.pop_blocking(), Some(1));
+        assert_eq!(q.pop_blocking(), Some(2));
+        // ...then consumers are told to exit instead of blocking forever.
+        assert_eq!(q.pop_blocking(), None);
+        assert_eq!(q.pop_deadline(Instant::now() + Duration::from_millis(5)), None);
+    }
+
+    #[test]
+    fn pop_deadline_times_out_without_items() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::bounded(4);
+        let t0 = Instant::now();
+        assert_eq!(q.pop_deadline(t0 + Duration::from_millis(10)), None);
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn cross_thread_handoff_and_close_wakeup() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::bounded(8);
+        let consumer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = q.pop_blocking() {
+                    got.push(v);
+                }
+                got
+            })
+        };
+        for v in 0..5 {
+            while q.try_push(v).is_err() {
+                std::thread::yield_now();
+            }
+        }
+        q.close();
+        let got = consumer.join().unwrap();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn depth_floor_is_one() {
+        let q: AdmissionQueue<u8> = AdmissionQueue::bounded(0);
+        assert_eq!(q.depth(), 1);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_err());
+        assert!(!q.is_empty());
+    }
+}

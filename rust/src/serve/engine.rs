@@ -1,0 +1,736 @@
+//! The multi-model serving engine: compiled-once plans behind bounded
+//! admission, continuously-batched workers, and per-model telemetry.
+//!
+//! # Architecture
+//!
+//! ```text
+//!   submit(model, image) ──► AdmissionQueue (bounded; sheds QueueFull)
+//!                                 │
+//!              worker pull loop (per model, N workers)
+//!                                 │
+//!        collect: first request opens a batch window; accumulate
+//!        arrivals until batch_wait or the largest batch size
+//!                                 │
+//!        expire: deadline-passed requests dropped BEFORE execution
+//!                                 │
+//!        Batcher::split(backlog) ─► sub-batches
+//!                                 │
+//!        gather → NetRunner::forward_with per image (per-worker
+//!        arena + staging buffers, allocation-free) → scatter replies
+//! ```
+//!
+//! Each worker owns its [`WorkerState`] (one [`NetArena`] plus input/
+//! output staging sized for the largest batch) for its whole life, so
+//! the steady-state execute path — [`ModelHandle::execute_staged`], the
+//! exact function the workers run — performs **zero** heap allocations
+//! (proven by the counting-allocator test in `tests/serve.rs`).
+//! Allocations are confined to the admission edge: the request's input
+//! `Vec` (the message in), the reply logits `Vec` (the message out),
+//! and the backlog bookkeeping around `Batcher::split`.
+//!
+//! # Plan cache
+//!
+//! Models are compiled once per distinct spec: [`spec_hash`] (FNV-1a
+//! over the canonical JSON plus the dtype) keys a cache of
+//! `Arc<NetRunner>`, so serving the same spec under two names — or
+//! re-adding a model — shares one set of packed weights and plans.
+
+use super::admission::AdmissionQueue;
+use super::Rejected;
+use crate::arch::Machine;
+use crate::coordinator::{Batcher, BatcherConfig};
+use crate::engine::{NetArena, NetRunner};
+use crate::metrics::{ServeMetrics, Table};
+use crate::nets::{Model, NetPlans};
+use crate::quant::{DType, QuantNet};
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Serving knobs. One config per server; workers can be overridden per
+/// model ([`ServerBuilder::add_model_with_workers`]).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bounded admission-queue depth per model (requests beyond it are
+    /// shed with [`Rejected::QueueFull`]).
+    pub queue_depth: usize,
+    /// How long the first request in a batch window waits for
+    /// stragglers before the batch dispatches.
+    pub batch_wait: Duration,
+    /// Default per-request deadline (None = no deadline). Measured from
+    /// submit; expired requests are dropped before execution.
+    pub deadline: Option<Duration>,
+    /// Worker threads per model (each owns an arena + staging buffers).
+    pub workers: usize,
+    /// Batch sizes the [`Batcher`] may dispatch (the DP split covers
+    /// any backlog with these).
+    pub batch_sizes: Vec<usize>,
+    /// Branch lanes inside each forward pass (1 = serial; workers are
+    /// the primary parallelism axis here).
+    pub branch_lanes: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            queue_depth: 128,
+            batch_wait: Duration::from_millis(2),
+            deadline: None,
+            workers: 2,
+            batch_sizes: vec![1, 2, 4, 8],
+            branch_lanes: 1,
+        }
+    }
+}
+
+/// FNV-1a 64 over a canonical serialization of the model spec plus its
+/// element type — the plan-cache key. Two specs hash equal iff their
+/// JSON form and dtype are identical.
+pub fn spec_hash(model: &Model, dtype: DType) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    eat(model.to_json().as_bytes());
+    eat(dtype.as_str().as_bytes());
+    h
+}
+
+/// One queued inference request.
+struct Req {
+    input: Vec<f32>,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+    reply: SyncSender<Result<Vec<f32>>>,
+}
+
+/// A pending reply from [`Server::submit`].
+pub struct Ticket {
+    rx: Receiver<Result<Vec<f32>>>,
+}
+
+impl Ticket {
+    /// Block until the logits arrive.
+    pub fn wait(self) -> Result<Vec<f32>> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::Runtime("server dropped the request".into()))?
+    }
+
+    /// Block for at most `timeout`. Lets load generators and watchdog
+    /// tests bound their exposure to a wedged worker.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Vec<f32>> {
+        self.rx
+            .recv_timeout(timeout)
+            .map_err(|e| Error::Runtime(format!("server reply: {e}")))?
+    }
+}
+
+/// Per-worker execution state: one arena plus input/output staging
+/// sized for the largest dispatchable batch. Built once per worker
+/// (or per test) via [`ModelHandle::worker_state`]; reusing it is what
+/// makes the execute path allocation-free.
+pub struct WorkerState {
+    arena: NetArena,
+    inbuf: Vec<f32>,
+    outbuf: Vec<f32>,
+}
+
+/// One resident model: compiled runner, admission queue, batcher,
+/// telemetry.
+struct ServiceInner {
+    name: String,
+    spec_hash: u64,
+    dtype: DType,
+    runner: Arc<NetRunner>,
+    queue: AdmissionQueue<Req>,
+    batcher: Batcher,
+    workers: usize,
+    /// Deepest backlog one worker drains per wakeup.
+    max_backlog: usize,
+    deadline: Option<Duration>,
+    stats: Mutex<ServeMetrics>,
+    image_in: usize,
+    image_out: usize,
+}
+
+impl ServiceInner {
+    fn stats_lock(&self) -> std::sync::MutexGuard<'_, ServeMetrics> {
+        self.stats.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn worker_state(&self) -> WorkerState {
+        let max_batch = self.batcher.max_size();
+        WorkerState {
+            arena: self.runner.arena(),
+            inbuf: vec![0.0; max_batch * self.image_in],
+            outbuf: vec![0.0; max_batch * self.image_out],
+        }
+    }
+
+    /// Pull one backlog: block for the first request (or exit on
+    /// close+drained), then accumulate arrivals until the batch window
+    /// closes, the largest batch size fills, or the backlog cap hits.
+    fn collect_backlog(&self) -> Option<Vec<Req>> {
+        let first = self.queue.pop_blocking()?;
+        let mut reqs = Vec::with_capacity(self.max_backlog);
+        reqs.push(first);
+        let window = Instant::now() + self.batcher.cfg().max_wait;
+        while reqs.len() < self.max_backlog {
+            if let Some(r) = self.queue.try_pop() {
+                reqs.push(r);
+                continue;
+            }
+            // Below a full batch it pays to wait for stragglers; at or
+            // beyond one, dispatch.
+            if reqs.len() >= self.batcher.max_size() || Instant::now() >= window {
+                break;
+            }
+            match self.queue.pop_deadline(window) {
+                Some(r) => reqs.push(r),
+                None => break,
+            }
+        }
+        Some(reqs)
+    }
+
+    /// Serve one collected backlog: expire stale requests, cover the
+    /// rest with the DP batch split, execute each sub-batch.
+    fn serve_backlog(&self, state: &mut WorkerState, reqs: Vec<Req>) {
+        let now = Instant::now();
+        let mut live = Vec::with_capacity(reqs.len());
+        let mut missed = 0u64;
+        for r in reqs {
+            if r.deadline.is_some_and(|d| now >= d) {
+                missed += 1;
+                let _ = r.reply.send(Err(Rejected::DeadlineExceeded.into()));
+            } else {
+                live.push(r);
+            }
+        }
+        if missed > 0 {
+            self.stats_lock().deadline_missed += missed;
+        }
+        let mut it = live.into_iter();
+        for plan in self.batcher.split(it.len()) {
+            let group: Vec<Req> = it.by_ref().take(plan.occupancy).collect();
+            self.execute_group(state, group);
+        }
+    }
+
+    /// Gather → forward → scatter for one sub-batch. The forward loop
+    /// ([`ModelHandle::execute_staged`] drives the same function) is
+    /// allocation-free; the reply `Vec`s are the messages out.
+    fn execute_group(&self, state: &mut WorkerState, group: Vec<Req>) {
+        let t0 = Instant::now();
+        for (i, r) in group.iter().enumerate() {
+            state.inbuf[i * self.image_in..][..self.image_in].copy_from_slice(&r.input);
+        }
+        let res = self.forward_staged(state, group.len());
+        let exec = t0.elapsed().as_secs_f64();
+
+        let mut st = self.stats_lock();
+        st.record_batch(group.len(), exec);
+        match res {
+            Ok(()) => {
+                for (i, r) in group.into_iter().enumerate() {
+                    let out = state.outbuf[i * self.image_out..][..self.image_out].to_vec();
+                    let wait = t0.saturating_duration_since(r.enqueued).as_secs_f64();
+                    st.record_done(wait, r.enqueued.elapsed().as_secs_f64());
+                    let _ = r.reply.send(Ok(out));
+                }
+            }
+            Err(e) => {
+                st.failed += group.len() as u64;
+                let msg = format!("batch failed: {e}");
+                for r in group {
+                    let _ = r.reply.send(Err(Error::Runtime(msg.clone())));
+                }
+            }
+        }
+    }
+
+    /// The zero-alloc hot path: forward `n` staged images over the
+    /// worker's arena.
+    fn forward_staged(&self, state: &mut WorkerState, n: usize) -> Result<()> {
+        for i in 0..n {
+            let img = &state.inbuf[i * self.image_in..][..self.image_in];
+            let dst = &mut state.outbuf[i * self.image_out..][..self.image_out];
+            self.runner.forward_with(&mut state.arena, img, dst)?;
+        }
+        Ok(())
+    }
+}
+
+fn worker_loop(svc: Arc<ServiceInner>) {
+    let mut state = svc.worker_state();
+    while let Some(reqs) = svc.collect_backlog() {
+        svc.serve_backlog(&mut state, reqs);
+    }
+}
+
+/// Introspection + test handle for one resident model.
+#[derive(Clone)]
+pub struct ModelHandle {
+    inner: Arc<ServiceInner>,
+}
+
+impl ModelHandle {
+    pub fn name(&self) -> &str {
+        &self.inner.name
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.inner.dtype
+    }
+
+    /// The plan-cache key this model was compiled under.
+    pub fn spec_hash(&self) -> u64 {
+        self.inner.spec_hash
+    }
+
+    /// Whether two served names share one compiled plan (the cache hit).
+    pub fn shares_plans_with(&self, other: &ModelHandle) -> bool {
+        Arc::ptr_eq(&self.inner.runner, &other.inner.runner)
+    }
+
+    /// The compiled network (accounting, arena sizing, graph).
+    pub fn runner(&self) -> &NetRunner {
+        &self.inner.runner
+    }
+
+    pub fn workers(&self) -> usize {
+        self.inner.workers
+    }
+
+    /// Current queued requests (telemetry gauge).
+    pub fn queue_len(&self) -> usize {
+        self.inner.queue.len()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.inner.queue.depth()
+    }
+
+    pub fn image_in(&self) -> usize {
+        self.inner.image_in
+    }
+
+    pub fn image_out(&self) -> usize {
+        self.inner.image_out
+    }
+
+    /// Snapshot of the model's telemetry.
+    pub fn stats(&self) -> ServeMetrics {
+        self.inner.stats_lock().clone()
+    }
+
+    /// Build one worker's execution state (arena + staging). The only
+    /// allocation site of the execute path; workers do this once.
+    pub fn worker_state(&self) -> WorkerState {
+        self.inner.worker_state()
+    }
+
+    /// Stage one image into batch slot `slot` of `state`.
+    pub fn stage(&self, state: &mut WorkerState, slot: usize, image: &[f32]) -> Result<()> {
+        if image.len() != self.inner.image_in {
+            return Err(Error::Shape(format!(
+                "model '{}' wants {} floats per image, got {}",
+                self.inner.name,
+                self.inner.image_in,
+                image.len()
+            )));
+        }
+        if (slot + 1) * self.inner.image_in > state.inbuf.len() {
+            return Err(Error::Shape(format!(
+                "slot {slot} exceeds the staged batch capacity {}",
+                state.inbuf.len() / self.inner.image_in
+            )));
+        }
+        state.inbuf[slot * self.inner.image_in..][..self.inner.image_in].copy_from_slice(image);
+        Ok(())
+    }
+
+    /// Execute `n` staged images — the exact allocation-free function
+    /// the serving workers run in steady state (the counting-allocator
+    /// test drives this directly).
+    pub fn execute_staged(&self, state: &mut WorkerState, n: usize) -> Result<()> {
+        if n * self.inner.image_in > state.inbuf.len() {
+            return Err(Error::Shape(format!(
+                "{n} images exceed the staged batch capacity {}",
+                state.inbuf.len() / self.inner.image_in
+            )));
+        }
+        self.inner.forward_staged(state, n)
+    }
+
+    /// Read batch slot `slot` of the staged output.
+    pub fn staged_output<'a>(&self, state: &'a WorkerState, slot: usize) -> &'a [f32] {
+        &state.outbuf[slot * self.inner.image_out..][..self.inner.image_out]
+    }
+}
+
+/// Builds a [`Server`]: compile models (through the spec-hash plan
+/// cache), then [`ServerBuilder::start`] spawns the worker pools.
+pub struct ServerBuilder {
+    cfg: ServeConfig,
+    machine: Machine,
+    backend: String,
+    plan_threads: usize,
+    cache: BTreeMap<u64, Arc<NetRunner>>,
+    services: Vec<Arc<ServiceInner>>,
+}
+
+impl ServerBuilder {
+    pub fn new(machine: &Machine, cfg: ServeConfig) -> ServerBuilder {
+        ServerBuilder {
+            cfg,
+            machine: machine.clone(),
+            backend: "auto".into(),
+            plan_threads: 1,
+            cache: BTreeMap::new(),
+            services: Vec::new(),
+        }
+    }
+
+    /// Backend for f32 plans (registry name or `"auto"`; i8 models
+    /// always plan `direct_i8`).
+    pub fn backend(mut self, backend: &str) -> ServerBuilder {
+        self.backend = backend.to_string();
+        self
+    }
+
+    /// Intra-layer threads handed to planning.
+    pub fn plan_threads(mut self, threads: usize) -> ServerBuilder {
+        self.plan_threads = threads.max(1);
+        self
+    }
+
+    /// Compiled runners currently cached (distinct spec hashes).
+    pub fn cached_plans(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Make `model` resident under `served_name` with the default
+    /// worker allocation. The model's own `dtype` picks the f32 or i8
+    /// compile path; identical specs share one compiled plan.
+    pub fn add_model(&mut self, served_name: &str, model: &Model) -> Result<()> {
+        self.add_model_with_workers(served_name, model, self.cfg.workers)
+    }
+
+    /// [`ServerBuilder::add_model`] with a per-model worker count.
+    pub fn add_model_with_workers(
+        &mut self,
+        served_name: &str,
+        model: &Model,
+        workers: usize,
+    ) -> Result<()> {
+        if self.services.iter().any(|s| s.name == served_name) {
+            return Err(Error::Runtime(format!(
+                "model name '{served_name}' is already served"
+            )));
+        }
+        let dtype = model.dtype;
+        let hash = spec_hash(model, dtype);
+        let runner = match self.cache.get(&hash) {
+            Some(r) => Arc::clone(r),
+            None => {
+                let compiled = match dtype {
+                    DType::F32 => {
+                        let plans = NetPlans::build_model(
+                            model,
+                            &self.backend,
+                            &self.machine,
+                            self.plan_threads,
+                        )?;
+                        NetRunner::from_graph(plans, model.graph.clone(), self.cfg.branch_lanes)?
+                    }
+                    DType::I8 => QuantNet::build_model(model, &self.machine, self.plan_threads)?
+                        .runner(self.cfg.branch_lanes)?,
+                };
+                let arc = Arc::new(compiled);
+                self.cache.insert(hash, Arc::clone(&arc));
+                arc
+            }
+        };
+        let batcher = Batcher::new(BatcherConfig {
+            sizes: self.cfg.batch_sizes.clone(),
+            max_wait: self.cfg.batch_wait,
+        });
+        let max_backlog = self.cfg.queue_depth.max(batcher.max_size());
+        self.services.push(Arc::new(ServiceInner {
+            name: served_name.to_string(),
+            spec_hash: hash,
+            dtype,
+            image_in: runner.input_len(),
+            image_out: runner.output_len(),
+            runner,
+            queue: AdmissionQueue::bounded(self.cfg.queue_depth),
+            batcher,
+            workers: workers.max(1),
+            max_backlog,
+            deadline: self.cfg.deadline,
+            stats: Mutex::new(ServeMetrics::default()),
+        }));
+        Ok(())
+    }
+
+    /// Spawn every model's worker pool and hand back the live server.
+    pub fn start(self) -> Result<Server> {
+        if self.services.is_empty() {
+            return Err(Error::Runtime("server has no resident models".into()));
+        }
+        let mut handles = Vec::new();
+        for svc in &self.services {
+            for w in 0..svc.workers {
+                let svc = Arc::clone(svc);
+                let h = std::thread::Builder::new()
+                    .name(format!("serve-{}-{w}", svc.name))
+                    .spawn(move || worker_loop(svc))
+                    .map_err(|e| Error::Runtime(format!("spawn worker: {e}")))?;
+                handles.push(h);
+            }
+        }
+        Ok(Server { services: self.services, handles, started: Instant::now() })
+    }
+}
+
+/// A live multi-model inference server. Submit with [`Server::submit`];
+/// stop with [`Server::shutdown`] (graceful: closes admission, drains
+/// accepted work, joins every worker). Dropping without `shutdown`
+/// closes admission too, so workers always terminate.
+pub struct Server {
+    services: Vec<Arc<ServiceInner>>,
+    handles: Vec<JoinHandle<()>>,
+    started: Instant,
+}
+
+impl Server {
+    fn service(&self, model: &str) -> Result<&Arc<ServiceInner>> {
+        self.services
+            .iter()
+            .find(|s| s.name == model)
+            .ok_or_else(|| Rejected::UnknownModel(model.to_string()).into())
+    }
+
+    /// Resident model names, in registration order.
+    pub fn models(&self) -> Vec<&str> {
+        self.services.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    pub fn model(&self, name: &str) -> Option<ModelHandle> {
+        self.services
+            .iter()
+            .find(|s| s.name == name)
+            .map(|s| ModelHandle { inner: Arc::clone(s) })
+    }
+
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Submit one image under the model's default deadline. Never
+    /// blocks: overload sheds with `Error::Rejected(QueueFull)`.
+    pub fn submit(&self, model: &str, input: Vec<f32>) -> Result<Ticket> {
+        let svc = self.service(model)?;
+        self.submit_to(svc, input, svc.deadline)
+    }
+
+    /// Submit with an explicit per-request deadline (None = none),
+    /// overriding the config default.
+    pub fn submit_with_deadline(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<Ticket> {
+        let svc = self.service(model)?;
+        self.submit_to(svc, input, deadline)
+    }
+
+    /// Closed-loop convenience for drivers that want every request
+    /// admitted: yield-retry while the queue sheds. Still fails fast on
+    /// shutdown / unknown model / bad input.
+    pub fn submit_blocking(&self, model: &str, input: Vec<f32>) -> Result<Ticket> {
+        loop {
+            match self.submit(model, input.clone()) {
+                Err(Error::Rejected(Rejected::QueueFull { .. })) => std::thread::yield_now(),
+                other => return other,
+            }
+        }
+    }
+
+    fn submit_to(
+        &self,
+        svc: &Arc<ServiceInner>,
+        input: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<Ticket> {
+        if input.len() != svc.image_in {
+            return Err(Error::Shape(format!(
+                "model '{}' wants {} floats per image, got {}",
+                svc.name,
+                svc.image_in,
+                input.len()
+            )));
+        }
+        let (reply, rx) = sync_channel(1);
+        let now = Instant::now();
+        let req = Req {
+            input,
+            enqueued: now,
+            deadline: deadline.map(|d| now + d),
+            reply,
+        };
+        svc.stats_lock().submitted += 1;
+        match svc.queue.try_push(req) {
+            Ok(()) => Ok(Ticket { rx }),
+            Err((_req, why)) => {
+                if matches!(why, Rejected::QueueFull { .. }) {
+                    svc.stats_lock().shed_queue_full += 1;
+                }
+                Err(why.into())
+            }
+        }
+    }
+
+    /// Snapshot one model's telemetry.
+    pub fn stats(&self, model: &str) -> Option<ServeMetrics> {
+        self.model(model).map(|h| h.stats())
+    }
+
+    /// Render the per-model telemetry table (the `--stats` report and
+    /// the final summary).
+    pub fn report(&self) -> String {
+        let secs = self.uptime().as_secs_f64();
+        let ms = |s: f64| format!("{:.2}", s * 1e3);
+        let mut t = Table::new(&[
+            "model", "dtype", "queue", "offered", "done", "shed", "miss", "req/s",
+            "wait p50 ms", "exec p50 ms", "e2e p50 ms", "e2e p99 ms",
+        ]);
+        for svc in &self.services {
+            let st = svc.stats_lock().clone();
+            t.row(vec![
+                svc.name.clone(),
+                svc.dtype.to_string(),
+                format!("{}/{}", svc.queue.len(), svc.queue.depth()),
+                st.submitted.to_string(),
+                st.completed.to_string(),
+                st.shed_queue_full.to_string(),
+                st.deadline_missed.to_string(),
+                format!("{:.1}", st.throughput(secs)),
+                ms(st.queue_wait.p50()),
+                ms(st.execute.p50()),
+                ms(st.e2e.p50()),
+                ms(st.e2e.p99()),
+            ]);
+        }
+        t.to_markdown()
+    }
+
+    /// Graceful shutdown: close every admission queue (new submits get
+    /// [`Rejected::ShuttingDown`]), let the workers drain everything
+    /// already accepted, and join them.
+    pub fn shutdown(mut self) -> Result<()> {
+        for svc in &self.services {
+            svc.queue.close();
+        }
+        let mut panicked = 0;
+        for h in self.handles.drain(..) {
+            if h.join().is_err() {
+                panicked += 1;
+            }
+        }
+        if panicked > 0 {
+            return Err(Error::Runtime(format!("{panicked} serving worker(s) panicked")));
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // Wake blocked workers so their threads terminate even when the
+        // caller skipped shutdown(); handles detach, work drains.
+        for svc in &self.services {
+            svc.queue.close();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::haswell;
+    use crate::nets::builder::resnet_micro;
+
+    fn tiny_cfg() -> ServeConfig {
+        ServeConfig {
+            queue_depth: 32,
+            batch_wait: Duration::from_millis(1),
+            workers: 1,
+            batch_sizes: vec![1, 2, 4],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn spec_hash_distinguishes_dtype_and_spec() {
+        let m = resnet_micro();
+        let a = spec_hash(&m, DType::F32);
+        let b = spec_hash(&m, DType::I8);
+        assert_ne!(a, b, "dtype must be part of the cache key");
+        assert_eq!(a, spec_hash(&m, DType::F32), "hash is deterministic");
+        let other = crate::nets::builder::alexnet();
+        assert_ne!(a, spec_hash(&other, DType::F32));
+    }
+
+    #[test]
+    fn builder_rejects_duplicates_and_empty_servers() {
+        let m = resnet_micro();
+        let mut b = ServerBuilder::new(&haswell(), tiny_cfg()).backend("direct");
+        b.add_model("rm", &m).unwrap();
+        assert!(b.add_model("rm", &m).is_err(), "duplicate served name");
+        let empty = ServerBuilder::new(&haswell(), tiny_cfg());
+        assert!(empty.start().is_err());
+    }
+
+    #[test]
+    fn plan_cache_shares_identical_specs() {
+        let m = resnet_micro();
+        let mut b = ServerBuilder::new(&haswell(), tiny_cfg()).backend("direct");
+        b.add_model("a", &m).unwrap();
+        b.add_model("b", &m).unwrap();
+        assert_eq!(b.cached_plans(), 1, "identical specs compile once");
+        let srv = b.start().unwrap();
+        let (ha, hb) = (srv.model("a").unwrap(), srv.model("b").unwrap());
+        assert!(ha.shares_plans_with(&hb));
+        assert_eq!(ha.spec_hash(), hb.spec_hash());
+        srv.shutdown().unwrap();
+    }
+
+    #[test]
+    fn serves_and_reports() {
+        let m = resnet_micro();
+        let mut b = ServerBuilder::new(&haswell(), tiny_cfg()).backend("direct");
+        b.add_model("rm", &m).unwrap();
+        let srv = b.start().unwrap();
+        let h = srv.model("rm").unwrap();
+        let img = crate::tensor::Tensor::random(&[h.image_in()], 5).into_vec();
+        let out = srv.submit("rm", img).unwrap().wait().unwrap();
+        assert_eq!(out.len(), h.image_out());
+        assert!(srv.submit("nope", vec![0.0; 4]).is_err());
+        assert!(srv.submit("rm", vec![0.0; 4]).is_err(), "bad input length");
+        let report = srv.report();
+        assert!(report.contains("rm"), "report lists the model: {report}");
+        let st = srv.stats("rm").unwrap();
+        assert_eq!(st.completed, 1);
+        srv.shutdown().unwrap();
+    }
+}

@@ -1,0 +1,412 @@
+//! Seeded heavy-tail traffic generator for the serving engine.
+//!
+//! Replays [`crate::sim::arrivals`] schedules against a live
+//! [`Server`] in open loop: requests are submitted at their scheduled
+//! offsets whether or not earlier ones finished, which is what exposes
+//! queue growth, shedding and deadline misses under burst. Everything is
+//! derived from the per-load seed, so a run is bit-reproducible down to
+//! the arrival schedule ([`ModelLoadResult::fingerprint`] proves two
+//! runs replayed the same schedule) and the whole report serializes to a
+//! JSON artifact for the benches and CI.
+//!
+//! Client-side the generator only counts outcomes and wall time; the
+//! latency story (queue wait vs execute, p50/p95/p99) comes from the
+//! server's own [`ServeMetrics`], snapshotted into each result.
+
+use super::engine::Server;
+use super::Rejected;
+use crate::json::Json;
+use crate::metrics::{ServeMetrics, Table};
+use crate::sim::{arrival_offsets, schedule_fingerprint, ArrivalPattern};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// One stream of traffic aimed at one served model.
+#[derive(Clone, Debug)]
+pub struct ModelLoad {
+    /// Served model name ([`Server::models`]).
+    pub model: String,
+    pub pattern: ArrivalPattern,
+    /// Mean offered rate, requests/second.
+    pub rate: f64,
+    /// Requests in the schedule.
+    pub requests: usize,
+    /// Seeds both the arrival schedule and the input image.
+    pub seed: u64,
+    /// Per-request deadline override (None = server default).
+    pub deadline: Option<Duration>,
+}
+
+impl ModelLoad {
+    pub fn new(model: &str, pattern: ArrivalPattern, rate: f64, requests: usize) -> ModelLoad {
+        ModelLoad {
+            model: model.to_string(),
+            pattern,
+            rate,
+            requests,
+            seed: 0xC0FFEE,
+            deadline: None,
+        }
+    }
+
+    pub fn seed(mut self, seed: u64) -> ModelLoad {
+        self.seed = seed;
+        self
+    }
+
+    pub fn deadline(mut self, d: Duration) -> ModelLoad {
+        self.deadline = Some(d);
+        self
+    }
+}
+
+/// A full load-generation run: several streams replayed concurrently
+/// (one driver thread each), e.g. an f32 and an i8 model under the same
+/// offered load.
+#[derive(Clone, Debug)]
+pub struct LoadSpec {
+    pub loads: Vec<ModelLoad>,
+    /// Watchdog bound on any single reply wait; a wedged server turns
+    /// into a counted failure instead of a hung generator.
+    pub reply_timeout: Duration,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        LoadSpec { loads: Vec::new(), reply_timeout: Duration::from_secs(30) }
+    }
+}
+
+impl LoadSpec {
+    pub fn one(load: ModelLoad) -> LoadSpec {
+        LoadSpec { loads: vec![load], ..Default::default() }
+    }
+
+    pub fn push(mut self, load: ModelLoad) -> LoadSpec {
+        self.loads.push(load);
+        self
+    }
+}
+
+/// Outcome of one [`ModelLoad`] stream.
+#[derive(Clone, Debug)]
+pub struct ModelLoadResult {
+    pub model: String,
+    pub pattern: ArrivalPattern,
+    pub rate: f64,
+    pub requests: usize,
+    pub seed: u64,
+    /// FNV-1a over the replayed arrival schedule — equal across runs
+    /// with the same (pattern, rate, requests, seed).
+    pub fingerprint: u64,
+    /// Admitted into the model's queue.
+    pub accepted: u64,
+    /// Shed at admission with [`Rejected::QueueFull`].
+    pub shed: u64,
+    /// Rejected for any other reason (shutdown, unknown model, shape).
+    pub rejected_other: u64,
+    /// Replies that arrived with logits.
+    pub completed: u64,
+    /// Replies that arrived as [`Rejected::DeadlineExceeded`].
+    pub deadline_missed: u64,
+    /// Execution failures plus reply-timeout watchdog hits.
+    pub failed: u64,
+    /// Submit of the first request to last reply, seconds.
+    pub wall_secs: f64,
+    /// The served model's telemetry, snapshotted when this stream's
+    /// replies finished (streams sharing a model share these numbers).
+    pub server: ServeMetrics,
+}
+
+impl ModelLoadResult {
+    /// Completed requests per second of stream wall time.
+    pub fn throughput(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / self.wall_secs
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let ms = |s: f64| s * 1e3;
+        let mut o = BTreeMap::new();
+        o.insert("model".into(), Json::Str(self.model.clone()));
+        o.insert("pattern".into(), Json::Str(self.pattern.name().into()));
+        o.insert("rate_rps".into(), Json::Num(self.rate));
+        o.insert("requests".into(), Json::Num(self.requests as f64));
+        o.insert("seed".into(), Json::Num(self.seed as f64));
+        o.insert("fingerprint".into(), Json::Str(format!("{:016x}", self.fingerprint)));
+        o.insert("accepted".into(), Json::Num(self.accepted as f64));
+        o.insert("shed".into(), Json::Num(self.shed as f64));
+        o.insert("rejected_other".into(), Json::Num(self.rejected_other as f64));
+        o.insert("completed".into(), Json::Num(self.completed as f64));
+        o.insert("deadline_missed".into(), Json::Num(self.deadline_missed as f64));
+        o.insert("failed".into(), Json::Num(self.failed as f64));
+        o.insert("wall_secs".into(), Json::Num(self.wall_secs));
+        o.insert("throughput_rps".into(), Json::Num(self.throughput()));
+        let mut srv = BTreeMap::new();
+        srv.insert("queue_wait_p50_ms".into(), Json::Num(ms(self.server.queue_wait.p50())));
+        srv.insert("queue_wait_p99_ms".into(), Json::Num(ms(self.server.queue_wait.p99())));
+        srv.insert("execute_p50_ms".into(), Json::Num(ms(self.server.execute.p50())));
+        srv.insert("e2e_p50_ms".into(), Json::Num(ms(self.server.e2e.p50())));
+        srv.insert("e2e_p95_ms".into(), Json::Num(ms(self.server.e2e.p95())));
+        srv.insert("e2e_p99_ms".into(), Json::Num(ms(self.server.e2e.p99())));
+        srv.insert("mean_batch".into(), Json::Num(self.server.mean_batch_size()));
+        srv.insert("batches".into(), Json::Num(self.server.batches as f64));
+        o.insert("server".into(), Json::Obj(srv));
+        Json::Obj(o)
+    }
+}
+
+/// Results of a [`run`]: one entry per load stream plus the run's wall
+/// time. Serializes to the JSON artifact the benches and CI consume.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub results: Vec<ModelLoadResult>,
+    pub wall_secs: f64,
+}
+
+impl LoadReport {
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("kind".into(), Json::Str("loadgen".into()));
+        o.insert("wall_secs".into(), Json::Num(self.wall_secs));
+        o.insert(
+            "results".into(),
+            Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+        );
+        Json::Obj(o)
+    }
+
+    /// Write the JSON artifact (pretty-printed, trailing newline).
+    pub fn write_artifact(&self, path: &str) -> Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| Error::Runtime(format!("create {}: {e}", dir.display())))?;
+            }
+        }
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text).map_err(|e| Error::Runtime(format!("write {path}: {e}")))
+    }
+
+    /// Markdown summary table (one row per stream).
+    pub fn summary(&self) -> String {
+        let mut t = Table::new(&[
+            "model", "pattern", "rate", "offered", "done", "shed", "miss", "fail", "req/s",
+            "e2e p50 ms", "e2e p99 ms",
+        ]);
+        for r in &self.results {
+            t.row(vec![
+                r.model.clone(),
+                r.pattern.name().into(),
+                format!("{:.0}", r.rate),
+                r.requests.to_string(),
+                r.completed.to_string(),
+                r.shed.to_string(),
+                r.deadline_missed.to_string(),
+                (r.rejected_other + r.failed).to_string(),
+                format!("{:.1}", r.throughput()),
+                format!("{:.2}", r.server.e2e.p50() * 1e3),
+                format!("{:.2}", r.server.e2e.p99() * 1e3),
+            ]);
+        }
+        t.to_markdown()
+    }
+
+    /// Total requests completed across every stream.
+    pub fn total_completed(&self) -> u64 {
+        self.results.iter().map(|r| r.completed).sum()
+    }
+}
+
+/// Replay one stream against the server (open loop, real-time pacing).
+fn drive(server: &Server, load: &ModelLoad, reply_timeout: Duration) -> Result<ModelLoadResult> {
+    let handle = server
+        .model(&load.model)
+        .ok_or_else(|| Error::from(Rejected::UnknownModel(load.model.clone())))?;
+    let offsets = arrival_offsets(load.pattern, load.rate, load.requests, load.seed);
+    let fingerprint = schedule_fingerprint(&offsets);
+    let input = Tensor::random(&[handle.image_in()], load.seed ^ 0x1A6E).into_vec();
+
+    let mut res = ModelLoadResult {
+        model: load.model.clone(),
+        pattern: load.pattern,
+        rate: load.rate,
+        requests: load.requests,
+        seed: load.seed,
+        fingerprint,
+        accepted: 0,
+        shed: 0,
+        rejected_other: 0,
+        completed: 0,
+        deadline_missed: 0,
+        failed: 0,
+        wall_secs: 0.0,
+        server: ServeMetrics::default(),
+    };
+
+    let t0 = Instant::now();
+    let mut tickets = Vec::with_capacity(load.requests);
+    for &off in &offsets {
+        let target = Duration::from_secs_f64(off);
+        let elapsed = t0.elapsed();
+        if target > elapsed {
+            std::thread::sleep(target - elapsed);
+        }
+        match server.submit_with_deadline(&load.model, input.clone(), load.deadline) {
+            Ok(t) => {
+                res.accepted += 1;
+                tickets.push(t);
+            }
+            Err(Error::Rejected(Rejected::QueueFull { .. })) => res.shed += 1,
+            Err(_) => res.rejected_other += 1,
+        }
+    }
+    for t in tickets {
+        match t.wait_timeout(reply_timeout) {
+            Ok(_) => res.completed += 1,
+            Err(Error::Rejected(Rejected::DeadlineExceeded)) => res.deadline_missed += 1,
+            Err(_) => res.failed += 1,
+        }
+    }
+    res.wall_secs = t0.elapsed().as_secs_f64();
+    res.server = handle.stats();
+    Ok(res)
+}
+
+/// Run every stream in `spec` concurrently (one driver thread each)
+/// against `server`. Returns per-stream results in spec order.
+pub fn run(server: &Server, spec: &LoadSpec) -> Result<LoadReport> {
+    if spec.loads.is_empty() {
+        return Err(Error::Runtime("load spec has no streams".into()));
+    }
+    let t0 = Instant::now();
+    let results: Vec<Result<ModelLoadResult>> = std::thread::scope(|s| {
+        let handles: Vec<_> = spec
+            .loads
+            .iter()
+            .map(|load| s.spawn(move || drive(server, load, spec.reply_timeout)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(Error::Runtime("load driver panicked".into())))
+            })
+            .collect()
+    });
+    let mut out = Vec::with_capacity(results.len());
+    for r in results {
+        out.push(r?);
+    }
+    Ok(LoadReport { results: out, wall_secs: t0.elapsed().as_secs_f64() })
+}
+
+/// The CI smoke run: a small f32 and i8 model behind one server, two
+/// seeded bursty streams, bounded by `reply_timeout` watchdogs so a
+/// deadlock turns into an error instead of a hang. Errors if either
+/// stream completes zero requests.
+pub fn smoke() -> Result<LoadReport> {
+    use super::engine::{ServeConfig, ServerBuilder};
+    use crate::nets::builder::resnet_micro;
+    use crate::quant::DType;
+
+    let machine = crate::arch::host();
+    let cfg = ServeConfig {
+        queue_depth: 64,
+        batch_wait: Duration::from_millis(1),
+        workers: 1,
+        batch_sizes: vec![1, 2, 4],
+        ..Default::default()
+    };
+    let f32_model = resnet_micro();
+    let mut i8_model = resnet_micro();
+    i8_model.dtype = DType::I8;
+
+    let mut b = ServerBuilder::new(&machine, cfg).backend("direct");
+    b.add_model("rm_f32", &f32_model)?;
+    b.add_model("rm_i8", &i8_model)?;
+    let server = b.start()?;
+
+    let spec = LoadSpec::default()
+        .push(ModelLoad::new("rm_f32", ArrivalPattern::Burst, 400.0, 40).seed(11))
+        .push(ModelLoad::new("rm_i8", ArrivalPattern::Poisson, 400.0, 40).seed(12));
+    let report = run(&server, &spec)?;
+    server.shutdown()?;
+    for r in &report.results {
+        if r.completed == 0 {
+            return Err(Error::Runtime(format!(
+                "smoke: stream '{}' completed zero requests",
+                r.model
+            )));
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::engine::{ServeConfig, ServerBuilder};
+
+    fn tiny_server(queue_depth: usize) -> Server {
+        let cfg = ServeConfig {
+            queue_depth,
+            batch_wait: Duration::from_millis(1),
+            workers: 1,
+            batch_sizes: vec![1, 2, 4],
+            ..Default::default()
+        };
+        let model = crate::nets::builder::resnet_micro();
+        let mut b = ServerBuilder::new(&crate::arch::haswell(), cfg).backend("direct");
+        b.add_model("rm", &model).unwrap();
+        b.start().unwrap()
+    }
+
+    #[test]
+    fn loadgen_counts_balance_and_fingerprint_is_reproducible() {
+        let server = tiny_server(32);
+        let load = ModelLoad::new("rm", ArrivalPattern::Poisson, 500.0, 20).seed(7);
+        let spec = LoadSpec::one(load.clone());
+        let report = run(&server, &spec).unwrap();
+        let r = &report.results[0];
+        assert_eq!(r.accepted + r.shed + r.rejected_other, 20);
+        assert_eq!(r.completed + r.deadline_missed + r.failed, r.accepted);
+        assert!(r.completed > 0, "some requests must complete");
+        let again = run(&server, &LoadSpec::one(load)).unwrap();
+        assert_eq!(r.fingerprint, again.results[0].fingerprint);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn unknown_model_is_an_error_not_a_hang() {
+        let server = tiny_server(8);
+        let spec = LoadSpec::one(ModelLoad::new("nope", ArrivalPattern::Poisson, 100.0, 4));
+        assert!(run(&server, &spec).is_err());
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn report_serializes_to_json_artifact_shape() {
+        let server = tiny_server(16);
+        let spec = LoadSpec::one(ModelLoad::new("rm", ArrivalPattern::Pareto, 800.0, 8).seed(3));
+        let report = run(&server, &spec).unwrap();
+        server.shutdown().unwrap();
+        let text = report.to_json().to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        let arr = parsed.get("results").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("model").and_then(|m| m.as_str()), Some("rm"));
+        assert_eq!(
+            arr[0].get("fingerprint").and_then(|f| f.as_str()).map(str::len),
+            Some(16),
+            "fingerprint is a 16-hex-digit string"
+        );
+        assert!(report.summary().contains("rm"));
+    }
+}

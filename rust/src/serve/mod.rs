@@ -1,0 +1,108 @@
+//! Production serving subsystem — the network-serving path that
+//! replaces the bare [`crate::coordinator`] loop for whole-model
+//! traffic.
+//!
+//! The paper's system-level claim (§5) is that direct convolution
+//! *scales*: zero memory overhead per request means adding threads adds
+//! throughput without allocator contention or working-set growth. This
+//! module makes that a measured, load-tested property instead of a
+//! slogan. Four pieces:
+//!
+//! * **Admission control** ([`admission`]) — every model sits behind a
+//!   bounded queue. A full queue rejects immediately with a typed
+//!   reason ([`Rejected::QueueFull`]) instead of blocking the producer;
+//!   per-request deadlines drop stale work *before* execution
+//!   ([`Rejected::DeadlineExceeded`]); shutdown closes admission
+//!   ([`Rejected::ShuttingDown`]) and then drains everything already
+//!   accepted.
+//! * **Continuous batching** ([`engine`]) — workers pull from the
+//!   queue continuously: the first request opens a batch window, the
+//!   worker accumulates compatible arrivals until the window's deadline
+//!   or the largest batch size, then covers the backlog with the DP
+//!   [`crate::coordinator::Batcher::split`]. While one worker executes,
+//!   the next is already accumulating — batching happens *across*
+//!   arrivals, not within whatever one drain happened to find.
+//! * **Multi-model engine** ([`engine::Server`]) — several JSON model
+//!   specs (f32 and i8) resident behind one server. Each spec is
+//!   compiled once — [`crate::engine::NetRunner`] plan + per-worker
+//!   arena pool — and cached by spec hash, so two served names with the
+//!   same spec share one compiled plan. Workers are allocated per
+//!   model; the forward hot path stays allocation-free
+//!   (`overhead_bytes() == 0` for direct plans), with allocations
+//!   confined to the admission/queueing edges (request and reply
+//!   buffers are messages, not conv state).
+//! * **Telemetry** ([`crate::metrics::ServeMetrics`]) — per-model
+//!   p50/p95/p99 latency split into queue wait vs execute, throughput,
+//!   queue depth, shed and deadline-miss counters; periodic
+//!   `serve --stats` reports and a final summary.
+//!
+//! [`loadgen`] closes the loop: it replays seeded heavy-tail arrival
+//! schedules ([`crate::sim::arrivals`]) against the server and emits a
+//! JSON results artifact, so throughput-vs-offered-load and
+//! latency-under-burst curves are reproducible benchmarks.
+
+pub mod admission;
+pub mod engine;
+pub mod loadgen;
+
+pub use admission::AdmissionQueue;
+pub use engine::{
+    spec_hash, ModelHandle, Server, ServerBuilder, ServeConfig, Ticket, WorkerState,
+};
+pub use loadgen::{LoadReport, LoadSpec, ModelLoad, ModelLoadResult};
+
+/// Why a request was not served. The typed vocabulary shared by the new
+/// serving path and the legacy [`crate::coordinator`] (whose `submit`
+/// sheds with [`Rejected::QueueFull`] too), so overload looks the same
+/// to every caller. Carried by [`crate::Error::Rejected`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Rejected {
+    /// The model's bounded admission queue was full; the request was
+    /// shed immediately rather than blocking the producer.
+    QueueFull {
+        /// The configured queue depth that was exhausted.
+        depth: usize,
+    },
+    /// The request's deadline expired while it waited in the queue; it
+    /// was dropped before execution.
+    DeadlineExceeded,
+    /// The server (or coordinator) is shutting down and no longer
+    /// admits new work. Already-accepted requests still drain.
+    ShuttingDown,
+    /// No model with this name is resident behind the server.
+    UnknownModel(String),
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejected::QueueFull { depth } => {
+                write!(f, "queue full (depth {depth}, request shed)")
+            }
+            Rejected::DeadlineExceeded => write!(f, "deadline exceeded before execution"),
+            Rejected::ShuttingDown => write!(f, "server shutting down"),
+            Rejected::UnknownModel(m) => write!(f, "unknown model '{m}'"),
+        }
+    }
+}
+
+impl From<Rejected> for crate::Error {
+    fn from(r: Rejected) -> crate::Error {
+        crate::Error::Rejected(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejection_reasons_render() {
+        assert!(format!("{}", Rejected::QueueFull { depth: 8 }).contains("depth 8"));
+        assert!(format!("{}", Rejected::DeadlineExceeded).contains("deadline"));
+        assert!(format!("{}", Rejected::ShuttingDown).contains("shutting down"));
+        assert!(format!("{}", Rejected::UnknownModel("x".into())).contains("'x'"));
+        let e: crate::Error = Rejected::ShuttingDown.into();
+        assert!(matches!(e, crate::Error::Rejected(Rejected::ShuttingDown)));
+    }
+}

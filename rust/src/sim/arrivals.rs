@@ -1,0 +1,227 @@
+//! Heavy-tail arrival processes for the serving load generator.
+//!
+//! The ROADMAP's "millions of users" north star needs traffic that
+//! looks like production traffic, not a closed loop of clients politely
+//! taking turns: real inference arrivals are bursty (diurnal swings,
+//! retry storms, fan-out from upstream batch jobs) and heavy-tailed.
+//! This module generates *deterministic, seeded* arrival schedules —
+//! the full schedule is materialized up front as offsets from t=0, so a
+//! load test is bit-reproducible given `(pattern, rate, n, seed)` and
+//! the latency/throughput curves it produces are comparable across
+//! commits ([`crate::serve::loadgen`] replays them and emits the JSON
+//! artifact).
+//!
+//! Three processes, all parameterized by a mean offered `rate` (req/s):
+//!
+//! * [`ArrivalPattern::Poisson`] — memoryless baseline: i.i.d.
+//!   exponential inter-arrivals, `Δ = -ln(1-u)/λ`.
+//! * [`ArrivalPattern::Pareto`] — heavy-tailed inter-arrivals
+//!   (`α = 1.5`, so variance is infinite while the mean stays `1/λ`):
+//!   most gaps are much shorter than the Poisson mean, a few are *much*
+//!   longer — micro-bursts separated by lulls.
+//! * [`ArrivalPattern::Burst`] — an on/off modulated Poisson process
+//!   (the classic MMPP(2) traffic model): exponential on-phases arriving
+//!   at `4λ` alternate with silent off-phases, duty cycle 1/4, so the
+//!   long-run offered rate is still `λ` but the server sees sustained
+//!   bursts at 4x the provisioned load — exactly the regime where
+//!   admission control must shed instead of block.
+
+use crate::tensor::XorShiftRng;
+
+/// Arrival process family. See the module docs for the math.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalPattern {
+    Poisson,
+    Pareto,
+    Burst,
+}
+
+/// Pareto shape: α in (1, 2] gives a finite mean with infinite
+/// variance — the canonical heavy-tail regime.
+const PARETO_ALPHA: f64 = 1.5;
+/// Burst mode: on-phase arrival rate is `BURST_FACTOR * rate`, and the
+/// on/off duty cycle is `1 / BURST_FACTOR`, keeping the long-run mean
+/// offered rate equal to `rate`.
+const BURST_FACTOR: f64 = 4.0;
+/// Mean arrivals per on-phase burst.
+const BURST_MEAN_ARRIVALS: f64 = 8.0;
+
+impl ArrivalPattern {
+    /// CLI / JSON spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalPattern::Poisson => "poisson",
+            ArrivalPattern::Pareto => "pareto",
+            ArrivalPattern::Burst => "burst",
+        }
+    }
+
+    /// Parse the CLI / JSON spelling.
+    pub fn from_name(s: &str) -> Option<ArrivalPattern> {
+        match s {
+            "poisson" => Some(ArrivalPattern::Poisson),
+            "pareto" => Some(ArrivalPattern::Pareto),
+            "burst" => Some(ArrivalPattern::Burst),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ArrivalPattern {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Uniform in (0, 1]: never 0, so `ln` and negative powers are safe.
+fn open_unit(rng: &mut XorShiftRng) -> f64 {
+    // 53 bits of mantissa, shifted into (0, 1].
+    ((rng.next_u64() >> 11) + 1) as f64 / (1u64 << 53) as f64
+}
+
+/// Exponential with mean `1/rate`.
+fn exp_gap(rng: &mut XorShiftRng, rate: f64) -> f64 {
+    -open_unit(rng).ln() / rate
+}
+
+/// Pareto inter-arrival with mean `1/rate`: scale
+/// `x_m = (α-1)/(α·rate)` so `E = x_m·α/(α-1) = 1/rate`.
+fn pareto_gap(rng: &mut XorShiftRng, rate: f64) -> f64 {
+    let x_m = (PARETO_ALPHA - 1.0) / (PARETO_ALPHA * rate);
+    x_m * open_unit(rng).powf(-1.0 / PARETO_ALPHA)
+}
+
+/// Generate `n` arrival offsets (seconds from t=0, strictly ascending)
+/// with mean offered rate `rate` req/s. Deterministic for a given
+/// `(pattern, rate, n, seed)` — the whole point: a load test that can
+/// be replayed bit-identically on every commit.
+pub fn arrival_offsets(pattern: ArrivalPattern, rate: f64, n: usize, seed: u64) -> Vec<f64> {
+    assert!(rate > 0.0, "offered rate must be positive");
+    let mut rng = XorShiftRng::new(seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    match pattern {
+        ArrivalPattern::Poisson => {
+            for _ in 0..n {
+                t += exp_gap(&mut rng, rate);
+                out.push(t);
+            }
+        }
+        ArrivalPattern::Pareto => {
+            for _ in 0..n {
+                t += pareto_gap(&mut rng, rate);
+                out.push(t);
+            }
+        }
+        ArrivalPattern::Burst => {
+            // On-phase: Poisson at `BURST_FACTOR * rate` for a mean of
+            // BURST_MEAN_ARRIVALS arrivals; off-phase: silence sized for
+            // a 1/BURST_FACTOR duty cycle.
+            let on_rate = BURST_FACTOR * rate;
+            let mean_on = BURST_MEAN_ARRIVALS / on_rate;
+            let mean_off = mean_on * (BURST_FACTOR - 1.0);
+            while out.len() < n {
+                let on_end = t + exp_gap(&mut rng, 1.0 / mean_on);
+                loop {
+                    let gap = exp_gap(&mut rng, on_rate);
+                    if t + gap > on_end {
+                        break;
+                    }
+                    t += gap;
+                    out.push(t);
+                    if out.len() == n {
+                        break;
+                    }
+                }
+                t = on_end + exp_gap(&mut rng, 1.0 / mean_off);
+            }
+        }
+    }
+    out
+}
+
+/// FNV-1a over the raw le-bytes of a schedule — the fingerprint the
+/// loadgen JSON artifact records so two runs can prove they replayed
+/// the identical arrival sequence.
+pub fn schedule_fingerprint(offsets: &[f64]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for x in offsets {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_gap(offsets: &[f64]) -> f64 {
+        offsets.last().unwrap() / offsets.len() as f64
+    }
+
+    #[test]
+    fn seeded_schedules_are_bit_reproducible() {
+        for pat in [ArrivalPattern::Poisson, ArrivalPattern::Pareto, ArrivalPattern::Burst] {
+            let a = arrival_offsets(pat, 100.0, 500, 42);
+            let b = arrival_offsets(pat, 100.0, 500, 42);
+            assert_eq!(a, b, "{pat}: same seed must replay bit-identically");
+            assert_eq!(schedule_fingerprint(&a), schedule_fingerprint(&b));
+            let c = arrival_offsets(pat, 100.0, 500, 43);
+            assert_ne!(a, c, "{pat}: different seeds must differ");
+        }
+    }
+
+    #[test]
+    fn offsets_ascend_and_hit_the_mean_rate() {
+        for pat in [ArrivalPattern::Poisson, ArrivalPattern::Pareto, ArrivalPattern::Burst] {
+            let offs = arrival_offsets(pat, 200.0, 4000, 7);
+            assert_eq!(offs.len(), 4000);
+            assert!(offs.windows(2).all(|w| w[1] > w[0]), "{pat}: not ascending");
+            let m = mean_gap(&offs);
+            // Long-run mean gap ~ 1/rate = 5ms; heavy tails converge
+            // slowly, so the band is generous.
+            assert!(m > 1.5e-3 && m < 15e-3, "{pat}: mean gap {m}");
+        }
+    }
+
+    #[test]
+    fn pareto_tail_is_heavier_than_poisson() {
+        let po = arrival_offsets(ArrivalPattern::Poisson, 100.0, 4000, 11);
+        let pa = arrival_offsets(ArrivalPattern::Pareto, 100.0, 4000, 11);
+        let max_gap = |o: &[f64]| {
+            o.windows(2).map(|w| w[1] - w[0]).fold(0.0f64, f64::max)
+        };
+        assert!(
+            max_gap(&pa) > 2.0 * max_gap(&po),
+            "pareto max gap {} vs poisson {}",
+            max_gap(&pa),
+            max_gap(&po)
+        );
+    }
+
+    #[test]
+    fn burst_is_burstier_than_poisson() {
+        // Squared coefficient of variation of the inter-arrival gaps:
+        // 1 for Poisson, > 1 for the on/off modulated process.
+        let cv2 = |o: &[f64]| {
+            let gaps: Vec<f64> = o.windows(2).map(|w| w[1] - w[0]).collect();
+            let m = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var = gaps.iter().map(|g| (g - m) * (g - m)).sum::<f64>() / gaps.len() as f64;
+            var / (m * m)
+        };
+        let po = arrival_offsets(ArrivalPattern::Poisson, 100.0, 4000, 3);
+        let bu = arrival_offsets(ArrivalPattern::Burst, 100.0, 4000, 3);
+        assert!(cv2(&bu) > 1.5 * cv2(&po), "burst cv2 {} vs poisson {}", cv2(&bu), cv2(&po));
+    }
+
+    #[test]
+    fn pattern_names_round_trip() {
+        for pat in [ArrivalPattern::Poisson, ArrivalPattern::Pareto, ArrivalPattern::Burst] {
+            assert_eq!(ArrivalPattern::from_name(pat.name()), Some(pat));
+        }
+        assert_eq!(ArrivalPattern::from_name("uniform"), None);
+    }
+}

@@ -20,11 +20,19 @@
 //! [`scaling`] models multi-threaded behaviour (Figure 5): direct
 //! convolution partitions `C_o` blocks (no shape skew), BLAS partitions
 //! matrix rows/columns (shape skew + bandwidth sharing).
+//!
+//! [`arrivals`] is the serving-side counterpart: seeded deterministic
+//! heavy-tail arrival processes (Poisson / Pareto / on-off burst) that
+//! [`crate::serve::loadgen`] replays against the server, so
+//! throughput-vs-offered-load and latency-under-burst curves are
+//! reproducible artifacts rather than one-off measurements.
 
+pub mod arrivals;
 pub mod cachesim;
 pub mod model;
 pub mod scaling;
 
+pub use arrivals::{arrival_offsets, schedule_fingerprint, ArrivalPattern};
 pub use cachesim::{CacheSim, Hierarchy, TraceStats};
 pub use model::{estimate, gemm_time, Algo, Estimate};
 pub use scaling::{scaling_curve, ScalePoint};

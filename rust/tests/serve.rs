@@ -1,0 +1,429 @@
+//! Production serving subsystem (`dconv::serve`) under load:
+//!
+//! * **multi-model** — an f32 and an i8 compile of the same spec
+//!   resident behind one server, each with its own queue, workers and
+//!   telemetry; f32 replies match a directly-driven [`NetRunner`], the
+//!   i8 arena is ~4x smaller;
+//! * **overload** — a burst far beyond the bounded queue sheds with the
+//!   typed [`Rejected::QueueFull`] and never deadlocks (every accepted
+//!   request still completes);
+//! * **deadlines** — expired requests are dropped *before* execution
+//!   (zero batches dispatched when every request is stale);
+//! * **graceful drain** — shutdown completes all in-flight work before
+//!   the workers exit;
+//! * **zero-alloc execute path** — the exact staged-execute function
+//!   the workers run performs no heap allocations in steady state, for
+//!   f32 and i8 (counting allocator);
+//! * **coordinator parity** — the legacy coordinator sheds with the
+//!   same typed rejection vocabulary;
+//! * **loadgen** — seeded schedules are bit-reproducible across fresh
+//!   servers and the JSON artifact round-trips.
+
+use std::alloc::{GlobalAlloc, Layout as AllocLayout, System};
+use std::cell::Cell;
+use std::time::Duration;
+
+use dconv::arch::haswell;
+use dconv::conv::ConvShape;
+use dconv::coordinator::{Coordinator, CoordinatorConfig};
+use dconv::engine::{NetRunner, PlanEngine};
+use dconv::nets::builder::resnet_micro;
+use dconv::nets::{Model, NetPlans};
+use dconv::quant::DType;
+use dconv::runtime::{Manifest, ModelExecutor};
+use dconv::serve::{
+    loadgen, LoadSpec, ModelLoad, Rejected, ServeConfig, Server, ServerBuilder,
+};
+use dconv::sim::ArrivalPattern;
+use dconv::tensor::Tensor;
+use dconv::{Error, Result};
+
+// ---------------------------------------------------------------------
+// Thread-local allocation counter (same design as net_forward.rs: the
+// parallel test harness's other threads cannot perturb the assertion).
+// ---------------------------------------------------------------------
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: AllocLayout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: AllocLayout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+fn allocs_now() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------
+// Helpers
+// ---------------------------------------------------------------------
+
+fn tiny_cfg(queue_depth: usize) -> ServeConfig {
+    ServeConfig {
+        queue_depth,
+        batch_wait: Duration::from_millis(1),
+        workers: 1,
+        batch_sizes: vec![1, 2, 4],
+        ..Default::default()
+    }
+}
+
+fn i8_model() -> Model {
+    let mut m = resnet_micro();
+    m.dtype = DType::I8;
+    m
+}
+
+/// One-model f32 server over resnet_micro with the direct backend.
+fn f32_server(queue_depth: usize) -> Server {
+    let mut b = ServerBuilder::new(&haswell(), tiny_cfg(queue_depth)).backend("direct");
+    b.add_model("rm", &resnet_micro()).unwrap();
+    b.start().unwrap()
+}
+
+const WATCHDOG: Duration = Duration::from_secs(60);
+
+// ---------------------------------------------------------------------
+// Multi-model: f32 + i8 behind one server
+// ---------------------------------------------------------------------
+
+#[test]
+fn f32_and_i8_models_serve_concurrently_with_per_model_stats() {
+    let machine = haswell();
+    let mut b = ServerBuilder::new(&machine, tiny_cfg(32)).backend("direct");
+    b.add_model("rm_f32", &resnet_micro()).unwrap();
+    b.add_model("rm_i8", &i8_model()).unwrap();
+    let server = b.start().unwrap();
+    assert_eq!(server.models(), vec!["rm_f32", "rm_i8"]);
+
+    let hf = server.model("rm_f32").unwrap();
+    let hq = server.model("rm_i8").unwrap();
+    assert_ne!(hf.spec_hash(), hq.spec_hash(), "dtype is part of the plan-cache key");
+    assert!(!hf.shares_plans_with(&hq));
+    let ratio = hf.runner().arena_bytes() as f64 / hq.runner().arena_bytes() as f64;
+    assert!(ratio > 3.5, "i8 activation arena should be ~4x smaller, got {ratio:.2}x");
+    assert_eq!(hf.runner().overhead_bytes(), 0, "direct f32 plans stay zero-overhead");
+    assert_eq!(hq.runner().overhead_bytes(), 0, "direct_i8 plans stay zero-overhead");
+
+    // The f32 replies must match a directly-driven runner over the same
+    // (deterministically regenerated) plans.
+    let model = resnet_micro();
+    let plans = NetPlans::build_model(&model, "direct", &machine, 1).unwrap();
+    let reference = NetRunner::from_graph(plans, model.graph.clone(), 1).unwrap();
+    let mut arena = reference.arena();
+    let mut want = vec![0.0f32; reference.output_len()];
+
+    let inputs: Vec<Vec<f32>> = (0..6)
+        .map(|i| Tensor::random(&[hf.image_in()], 900 + i as u64).into_vec())
+        .collect();
+    let tickets: Vec<_> = inputs
+        .iter()
+        .map(|x| {
+            (
+                server.submit("rm_f32", x.clone()).unwrap(),
+                server.submit("rm_i8", x.clone()).unwrap(),
+            )
+        })
+        .collect();
+    for (x, (tf, tq)) in inputs.iter().zip(tickets) {
+        let got = tf.wait_timeout(WATCHDOG).unwrap();
+        reference.forward_with(&mut arena, x, &mut want).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-4 + 1e-4 * w.abs(), "served f32 differs: {g} vs {w}");
+        }
+        let qout = tq.wait_timeout(WATCHDOG).unwrap();
+        assert_eq!(qout.len(), hq.image_out());
+        assert!(qout.iter().all(|v| v.is_finite()));
+    }
+
+    let (sf, sq) = (hf.stats(), hq.stats());
+    assert_eq!(sf.completed, 6);
+    assert_eq!(sq.completed, 6);
+    assert_eq!(sf.in_flight(), 0);
+    assert_eq!(sq.in_flight(), 0);
+    assert!(sf.e2e.count() == 6 && sf.queue_wait.count() == 6, "latency split is recorded");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn identical_specs_share_one_compiled_plan_across_served_names() {
+    let mut b = ServerBuilder::new(&haswell(), tiny_cfg(8)).backend("direct");
+    b.add_model("a", &resnet_micro()).unwrap();
+    b.add_model("b", &resnet_micro()).unwrap();
+    assert_eq!(b.cached_plans(), 1, "same spec + dtype compiles once");
+    let server = b.start().unwrap();
+    let (ha, hb) = (server.model("a").unwrap(), server.model("b").unwrap());
+    assert!(ha.shares_plans_with(&hb));
+    // Both served names still answer independently.
+    let x = Tensor::random(&[ha.image_in()], 4).into_vec();
+    let oa = server.submit("a", x.clone()).unwrap().wait_timeout(WATCHDOG).unwrap();
+    let ob = server.submit("b", x).unwrap().wait_timeout(WATCHDOG).unwrap();
+    assert_eq!(oa, ob, "one shared plan, same answer under either name");
+    server.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Overload: bounded queue + explicit shedding, no deadlock
+// ---------------------------------------------------------------------
+
+#[test]
+fn burst_beyond_capacity_sheds_queue_full_and_never_deadlocks() {
+    let server = f32_server(2);
+    let h = server.model("rm").unwrap();
+    let x = Tensor::random(&[h.image_in()], 7).into_vec();
+
+    let mut tickets = Vec::new();
+    let mut shed = 0u64;
+    for _ in 0..64 {
+        match server.submit("rm", x.clone()) {
+            Ok(t) => tickets.push(t),
+            Err(Error::Rejected(Rejected::QueueFull { depth })) => {
+                assert_eq!(depth, 2, "rejection reports the configured bound");
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(shed > 0, "a 64-deep burst into a depth-2 queue must shed");
+    assert!(h.queue_len() <= h.queue_depth(), "queue never exceeds its bound");
+
+    // Every accepted request still completes — bounded waits prove the
+    // burst wedged nothing.
+    for t in tickets {
+        t.wait_timeout(WATCHDOG).unwrap();
+    }
+    let st = h.stats();
+    assert_eq!(st.shed_queue_full, shed);
+    assert_eq!(st.submitted, 64);
+    assert_eq!(st.completed, 64 - shed);
+    assert_eq!(st.in_flight(), 0, "accounting identity closes after the burst");
+    server.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Deadlines: stale requests dropped before execution
+// ---------------------------------------------------------------------
+
+#[test]
+fn expired_deadlines_are_dropped_before_execution() {
+    let server = f32_server(16);
+    let h = server.model("rm").unwrap();
+    let x = Tensor::random(&[h.image_in()], 3).into_vec();
+
+    // A zero deadline has always expired by the time a worker picks the
+    // request up, deterministically.
+    let tickets: Vec<_> = (0..4)
+        .map(|_| {
+            server.submit_with_deadline("rm", x.clone(), Some(Duration::ZERO)).unwrap()
+        })
+        .collect();
+    for t in tickets {
+        match t.wait_timeout(WATCHDOG) {
+            Err(Error::Rejected(Rejected::DeadlineExceeded)) => {}
+            other => panic!("expected a typed deadline rejection, got {other:?}"),
+        }
+    }
+    let st = h.stats();
+    assert_eq!(st.deadline_missed, 4);
+    assert_eq!(st.batches, 0, "stale requests never reached execution");
+    assert_eq!(st.completed, 0);
+
+    // A generous deadline still serves normally afterwards.
+    let out = server
+        .submit_with_deadline("rm", x, Some(Duration::from_secs(30)))
+        .unwrap()
+        .wait_timeout(WATCHDOG)
+        .unwrap();
+    assert_eq!(out.len(), h.image_out());
+    assert_eq!(h.stats().completed, 1);
+    server.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Graceful drain
+// ---------------------------------------------------------------------
+
+#[test]
+fn shutdown_drains_in_flight_work_before_workers_exit() {
+    let server = f32_server(32);
+    let h = server.model("rm").unwrap();
+    let x = Tensor::random(&[h.image_in()], 5).into_vec();
+    let tickets: Vec<_> =
+        (0..8).map(|_| server.submit("rm", x.clone()).unwrap()).collect();
+    // Close admission immediately; the accepted backlog must still be
+    // served (shutdown joins the workers only after the queues drain).
+    server.shutdown().unwrap();
+    for t in tickets {
+        let out = t.wait_timeout(WATCHDOG).expect("accepted work completes during drain");
+        assert_eq!(out.len(), h.image_out());
+    }
+    assert_eq!(h.stats().completed, 8);
+    assert_eq!(h.stats().in_flight(), 0);
+}
+
+// ---------------------------------------------------------------------
+// Zero-allocation execute path (counting allocator)
+// ---------------------------------------------------------------------
+
+#[test]
+fn steady_state_execute_path_is_allocation_free_for_f32_and_i8() {
+    let mut b = ServerBuilder::new(&haswell(), tiny_cfg(8)).backend("direct");
+    b.add_model("rm_f32", &resnet_micro()).unwrap();
+    b.add_model("rm_i8", &i8_model()).unwrap();
+    let server = b.start().unwrap();
+
+    for name in ["rm_f32", "rm_i8"] {
+        let h = server.model(name).unwrap();
+        // The one allocation site: arena + staging, built once per
+        // worker. Drive the exact function the workers run, on this
+        // thread, so the thread-local counter sees it.
+        let mut state = h.worker_state();
+        let imgs: Vec<Vec<f32>> =
+            (0..2).map(|i| Tensor::random(&[h.image_in()], 40 + i).into_vec()).collect();
+        for (slot, img) in imgs.iter().enumerate() {
+            h.stage(&mut state, slot, img).unwrap();
+        }
+        h.execute_staged(&mut state, 2).unwrap(); // warm-up
+        let before = allocs_now();
+        h.execute_staged(&mut state, 2).unwrap();
+        let after = allocs_now();
+        assert_eq!(
+            after - before,
+            0,
+            "{name}: steady-state staged execute must not allocate"
+        );
+        assert_eq!(h.staged_output(&state, 0).len(), h.image_out());
+    }
+    server.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Coordinator parity: typed shedding on the legacy path
+// ---------------------------------------------------------------------
+
+/// Wraps any executor with a fixed per-batch delay, so the coordinator
+/// queue reliably fills during a synchronous submit burst.
+struct SlowExec<E: ModelExecutor> {
+    inner: E,
+    delay: Duration,
+}
+
+impl<E: ModelExecutor> ModelExecutor for SlowExec<E> {
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+    fn run(&self, model: &str, input: Vec<f32>) -> Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        self.inner.run(model, input)
+    }
+}
+
+#[test]
+fn coordinator_sheds_with_typed_queue_full_rejection() {
+    let s = ConvShape::new(4, 8, 8, 8, 3, 3, 1, 1);
+    let machine = haswell();
+    let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 9);
+    let engine = SlowExec {
+        inner: PlanEngine::new(&s, &kernel, "auto", &machine, 1, &[1, 2, 4], "conv").unwrap(),
+        delay: Duration::from_millis(20),
+    };
+    let cfg = CoordinatorConfig {
+        queue_depth: 1,
+        model_prefix: "conv".into(),
+        ..Default::default()
+    };
+    let coord = Coordinator::start(engine, cfg).unwrap();
+    let x = vec![0.5f32; s.c_i * s.h_i * s.w_i];
+
+    let mut pendings = Vec::new();
+    let mut saw_queue_full = false;
+    for _ in 0..64 {
+        match coord.submit(x.clone()) {
+            Ok(p) => pendings.push(p),
+            Err(Error::Rejected(Rejected::QueueFull { depth })) => {
+                assert_eq!(depth, 1);
+                saw_queue_full = true;
+                break;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(saw_queue_full, "a depth-1 queue behind a 20ms executor must shed");
+    for p in pendings {
+        p.wait_timeout(WATCHDOG).unwrap();
+    }
+    // submit_blocking rides out the backpressure instead of failing.
+    coord.submit_blocking(x).unwrap().wait_timeout(WATCHDOG).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Loadgen: deterministic schedules, JSON artifact
+// ---------------------------------------------------------------------
+
+#[test]
+fn loadgen_schedules_are_reproducible_across_fresh_servers() {
+    let spec = LoadSpec::one(
+        ModelLoad::new("rm", ArrivalPattern::Burst, 2000.0, 24).seed(0xFEED),
+    );
+    let a = {
+        let server = f32_server(16);
+        let report = loadgen::run(&server, &spec).unwrap();
+        server.shutdown().unwrap();
+        report
+    };
+    let b = {
+        let server = f32_server(16);
+        let report = loadgen::run(&server, &spec).unwrap();
+        server.shutdown().unwrap();
+        report
+    };
+    assert_eq!(
+        a.results[0].fingerprint, b.results[0].fingerprint,
+        "identical seeds replay bit-identical arrival schedules"
+    );
+    for r in [&a.results[0], &b.results[0]] {
+        assert_eq!(r.accepted + r.shed + r.rejected_other, 24);
+        assert_eq!(r.completed + r.deadline_missed + r.failed, r.accepted);
+        assert!(r.completed > 0);
+    }
+}
+
+#[test]
+fn loadgen_artifact_round_trips_through_json() {
+    let server = f32_server(16);
+    let spec = LoadSpec::one(
+        ModelLoad::new("rm", ArrivalPattern::Pareto, 1000.0, 10).seed(21),
+    );
+    let report = loadgen::run(&server, &spec).unwrap();
+    server.shutdown().unwrap();
+
+    let path = std::env::temp_dir().join("dconv_loadgen_test.json");
+    let path = path.to_str().unwrap();
+    report.write_artifact(path).unwrap();
+    let text = std::fs::read_to_string(path).unwrap();
+    std::fs::remove_file(path).ok();
+    let parsed = dconv::json::Json::parse(&text).unwrap();
+    assert_eq!(parsed.get("kind").and_then(|k| k.as_str()), Some("loadgen"));
+    let results = parsed.get("results").and_then(|r| r.as_arr()).unwrap();
+    assert_eq!(results.len(), 1);
+    let r = &results[0];
+    assert_eq!(r.get("model").and_then(|m| m.as_str()), Some("rm"));
+    assert_eq!(r.get("requests").and_then(|n| n.as_usize()), Some(10));
+    let fp = r.get("fingerprint").and_then(|f| f.as_str()).unwrap();
+    assert_eq!(fp.len(), 16);
+    assert_eq!(fp, format!("{:016x}", report.results[0].fingerprint));
+    assert!(r.get("server").and_then(|s| s.get("e2e_p50_ms")).is_some());
+}

@@ -12,22 +12,43 @@ executor's semantics:
 * networks: AlexNet / VGG-16 as chains with ``pool_spec``-derived
   max-pools, GoogLeNet as the inception DAG (branches
   ``1x1 | 3x3_reduce->3x3 | 5x5_reduce->5x5 | pool3x3s1p1->pool_proj``
-  concatenated in that order) — mirroring ``nets::NetGraph`` — and
-  ``resnet_micro``, the builder/JSON example net with two residual Add
-  joins (mirroring ``nets::builder::resnet_micro`` /
-  ``examples/models/resnet_micro.json``).
+  concatenated in that order) — mirroring ``nets::NetGraph`` —
+  ``resnet_micro``, the builder/JSON example net with per-conv
+  BatchNorm/ReLU and two residual Add joins (mirroring
+  ``nets::builder::resnet_micro`` /
+  ``examples/models/resnet_micro.json``), and ``mobilenet_micro``,
+  the depthwise-separable + dilated-head example
+  (``examples/models/mobilenet_micro.json``);
+* batch-norm:  ``bn_params(ord, c)`` == ``nets::net_bn_params`` —
+  per-channel ``scale = 1 + 0.5*r(0xB070+ord)``,
+  ``shift = 0.25*r(0x5417+ord)`` in f32, applied as
+  ``x*scale + shift``.
 
 The f32 entries are compared with relative tolerances that absorb the
 f32-vs-f64 accumulation drift.
 
-The ``alexnet_i8`` / ``resnet_micro_i8`` entries pin the **quantized**
-executor (``rust/src/quant``) to *exact integers*: this script picks
-per-node activation params (min/max over its own f64 forward), commits
-them to the fixture, and runs the int8 program — i32 accumulation of
+The ``_i8`` entries pin the **quantized** executor
+(``rust/src/quant``) to *exact integers*: this script picks per-node
+activation params (min/max over its own f64 forward), commits them to
+the fixture, and runs the int8 program — i32 accumulation of
 ``(x_q - zp) * w_q``, per-output-channel f64 requantize multipliers,
 round-half-away-from-zero — exactly as documented in the ``quant``
 module. The Rust side loads the same params
 (``QuantNet::with_node_params``) and must reproduce every output byte.
+Three flavours:
+
+* ``alexnet_i8`` / ``resnet_micro_i8`` — the UNFUSED schedule: every
+  BatchNorm/ReLU graph node is a standalone eltwise pass
+  (``engine::Eltwise::apply_i8``: one rounded multiply-add per
+  element, ``q' = clamp(round((q - zp_s)*m_c + off_c) + zp_d, lo, hi)``
+  with ``m_c = (s_src/s_dst)*scale[c]`` and ``off_c = shift[c]/s_dst``
+  in f64);
+* ``resnet_micro_i8_fused`` / ``mobilenet_micro_i8`` — the FUSED
+  schedule (``QuantNet::with_node_params_fused``): each conv's
+  BN/residual/ReLU tail is folded into its requantize step, a
+  **single** rounding per output element:
+  ``q = clamp(round(acc*mult_j + off_j + (res_q - zp_r)*s_r/s_out)
+  + zp_out, lo, hi)``.
 
 Regenerate with:
 
@@ -66,21 +87,59 @@ def tensor_random(shape, seed):
     return xorshift_f32(seed, int(np.prod(shape))).reshape(shape)
 
 
-def conv(x, k, stride, pad):
-    """conv_naive: zero padding, cross-correlation, NCHW/OIHW."""
+def conv(x, k, stride, pad, groups=1, dilation=1):
+    """conv_naive: zero padding, cross-correlation, NCHW / grouped OIHW
+    (kernel ``[c_o, c_i/groups, f_h, f_w]``; ``groups == c_i == c_o``
+    is depthwise); dilation spreads the taps ``dilation`` cells apart
+    (effective extent ``(f-1)*dilation + 1``)."""
     c_i, h, w = x.shape
-    c_o, _, f_h, f_w = k.shape
+    c_o, c_ipg, f_h, f_w = k.shape
+    assert c_i == c_ipg * groups and c_o % groups == 0, (k.shape, groups)
     xp = np.pad(x, ((0, 0), (pad, pad), (pad, pad)))
-    h_o = (h + 2 * pad - f_h) // stride + 1
-    w_o = (w + 2 * pad - f_w) // stride + 1
-    cols = np.empty((c_i * f_h * f_w, h_o * w_o), dtype=np.float64)
-    r = 0
-    for c in range(c_i):
-        for dy in range(f_h):
-            for dx in range(f_w):
-                cols[r] = xp[c, dy:dy + h_o * stride:stride, dx:dx + w_o * stride:stride].ravel()
-                r += 1
-    return (k.reshape(c_o, -1) @ cols).reshape(c_o, h_o, w_o)
+    h_o = (h + 2 * pad - ((f_h - 1) * dilation + 1)) // stride + 1
+    w_o = (w + 2 * pad - ((f_w - 1) * dilation + 1)) // stride + 1
+    c_opg = c_o // groups
+    out = np.empty((c_o, h_o, w_o), dtype=np.float64)
+    for g in range(groups):
+        cols = np.empty((c_ipg * f_h * f_w, h_o * w_o), dtype=np.float64)
+        r = 0
+        for c in range(c_ipg):
+            for dy in range(f_h):
+                for dx in range(f_w):
+                    cols[r] = xp[g * c_ipg + c,
+                                 dy * dilation:dy * dilation + h_o * stride:stride,
+                                 dx * dilation:dx * dilation + w_o * stride:stride].ravel()
+                    r += 1
+        out[g * c_opg:(g + 1) * c_opg] = (
+            k[g * c_opg:(g + 1) * c_opg].reshape(c_opg, -1) @ cols
+        ).reshape(c_opg, h_o, w_o)
+    return out
+
+
+def bn_params(ordinal, c):
+    """nets::net_bn_params bit-exactly: per-channel f32
+    ``scale = 1 + 0.5 * r(0xB070+ord)``, ``shift = 0.25 * r(0x5417+ord)``
+    over the crate's xorshift stream (the raw draws are exact f32
+    values held in f64; halving/quartering and the +1 stay exact /
+    round identically in np.float32)."""
+    raw_s = xorshift_f32(0xB070 + ordinal, c).astype(np.float32)
+    raw_t = xorshift_f32(0x5417 + ordinal, c).astype(np.float32)
+    scale = np.float32(1.0) + np.float32(0.5) * raw_s
+    shift = np.float32(0.25) * raw_t
+    return scale, shift
+
+
+def bn(x, ordinal):
+    """Inference-mode batch-norm ``x*scale + shift`` (f64 apply of the
+    f32 parameters — the f32 entries are tolerance-checked)."""
+    scale, shift = bn_params(ordinal, x.shape[0])
+    return x * scale.astype(np.float64)[:, None, None] \
+        + shift.astype(np.float64)[:, None, None]
+
+
+def relu(x, clamp=None):
+    y = np.maximum(x, 0.0)
+    return y if clamp is None else np.minimum(y, clamp)
 
 
 def max_pool(x, kh, kw, sh, sw, ph, pw):
@@ -165,8 +224,8 @@ def googlenet():
 
 
 def resnet_micro():
-    """examples/models/resnet_micro.json: conv0 -> [conv1,conv2]+skip
-    -> [conv3,conv4]+skip -> 2x2/s2 pool -> conv5."""
+    """examples/models/resnet_micro.json: conv+BN+ReLU stem, two
+    BN'd residual blocks (add then ReLU), 2x2/s2 pool, conv5 head."""
     return [
         (3, 32, 16, 3, 1, 1),
         (16, 32, 16, 3, 1, 1),
@@ -179,17 +238,46 @@ def resnet_micro():
 
 def run_resnet_micro(layers, ks, x):
     del layers  # geometry is fixed by the example spec
-    stem = conv(x, ks[0], 1, 1)
-    j1 = stem + conv(conv(stem, ks[1], 1, 1), ks[2], 1, 1)
-    j2 = j1 + conv(conv(j1, ks[3], 1, 1), ks[4], 1, 1)
+    # BN ordinals follow BatchNorm node order: bn0..bn4 on conv0..conv4.
+    stem = relu(bn(conv(x, ks[0], 1, 1), 0))
+    b2 = bn(conv(relu(bn(conv(stem, ks[1], 1, 1), 1)), ks[2], 1, 1), 2)
+    j1 = relu(stem + b2)
+    b4 = bn(conv(relu(bn(conv(j1, ks[3], 1, 1), 3)), ks[4], 1, 1), 4)
+    j2 = relu(j1 + b4)
     return conv(max_pool(j2, 2, 2, 2, 2, 0, 0), ks[5], 1, 1)
+
+
+def mobilenet_micro():
+    """examples/models/mobilenet_micro.json as
+    (c_i, h, c_o, k, stride, pad, groups, dilation) per conv: stem,
+    two depthwise-separable blocks (dw 3x3 + pw 1x1, BN + ReLU6 after
+    every conv), and a dilated 3x3 head with a bare ReLU."""
+    return [
+        (3, 16, 8, 3, 1, 1, 1, 1),     # conv0
+        (8, 16, 8, 3, 1, 1, 8, 1),     # dw0 (depthwise)
+        (8, 16, 16, 1, 1, 0, 1, 1),    # pw0
+        (16, 16, 16, 3, 2, 1, 16, 1),  # dw1 (depthwise, stride 2)
+        (16, 8, 32, 1, 1, 0, 1, 1),    # pw1
+        (32, 8, 32, 3, 1, 2, 1, 2),    # head (dilation 2)
+    ]
+
+
+def run_mobilenet_micro(layers, ks, x):
+    # conv0..pw1 each carry BN (ordinals 0..4 in node order) + ReLU6;
+    # the head conv has a bare ReLU and no BN.
+    for i, (_c_i, _h, _c_o, _f, s, p, g, d) in enumerate(layers[:5]):
+        x = relu(bn(conv(x, ks[i], s, p, g, d), i), clamp=6.0)
+    (_c_i, _h, _c_o, _f, s, p, g, d) = layers[5]
+    return relu(conv(x, ks[5], s, p, g, d))
 
 
 def kernels_for(layers):
     ks = []
-    for i, (c_i, _h, c_o, f, _s, _p) in enumerate(layers):
-        print(f"  weights layer {i}: {c_o}x{c_i}x{f}x{f}", flush=True)
-        ks.append(tensor_random((c_o, c_i, f, f), WEIGHT_SEED + i))
+    for i, l in enumerate(layers):
+        c_i, _h, c_o, f = l[:4]
+        g = l[6] if len(l) > 6 else 1
+        print(f"  weights layer {i}: {c_o}x{c_i // g}x{f}x{f}", flush=True)
+        ks.append(tensor_random((c_o, c_i // g, f, f), WEIGHT_SEED + i))
     return ks
 
 
@@ -281,34 +369,109 @@ def quantize_weights(k):
     return wq, s
 
 
-def conv_q(xq, zp_in, wq, stride, pad):
-    """i32 accumulator of sum((x_q - zp) * w_q); zero padding == zp."""
+def conv_q(xq, zp_in, wq, stride, pad, groups=1, dilation=1):
+    """i32 accumulator of sum((x_q - zp) * w_q); zero padding == zp;
+    grouped/depthwise/dilated exactly like ``conv``."""
     xc = (xq - zp_in).astype(np.int64)
     c_i, h, w = xc.shape
-    c_o, _, f_h, f_w = wq.shape
+    c_o, c_ipg, f_h, f_w = wq.shape
+    assert c_i == c_ipg * groups and c_o % groups == 0, (wq.shape, groups)
     xp = np.pad(xc, ((0, 0), (pad, pad), (pad, pad)))
-    h_o = (h + 2 * pad - f_h) // stride + 1
-    w_o = (w + 2 * pad - f_w) // stride + 1
-    cols = np.empty((c_i * f_h * f_w, h_o * w_o), dtype=np.int64)
-    r = 0
-    for c in range(c_i):
-        for dy in range(f_h):
-            for dx in range(f_w):
-                cols[r] = xp[c, dy:dy + h_o * stride:stride,
-                             dx:dx + w_o * stride:stride].ravel()
-                r += 1
-    return (wq.reshape(c_o, -1) @ cols).reshape(c_o, h_o, w_o)
+    h_o = (h + 2 * pad - ((f_h - 1) * dilation + 1)) // stride + 1
+    w_o = (w + 2 * pad - ((f_w - 1) * dilation + 1)) // stride + 1
+    c_opg = c_o // groups
+    out = np.empty((c_o, h_o, w_o), dtype=np.int64)
+    for g in range(groups):
+        cols = np.empty((c_ipg * f_h * f_w, h_o * w_o), dtype=np.int64)
+        r = 0
+        for c in range(c_ipg):
+            for dy in range(f_h):
+                for dx in range(f_w):
+                    cols[r] = xp[g * c_ipg + c,
+                                 dy * dilation:dy * dilation + h_o * stride:stride,
+                                 dx * dilation:dx * dilation + w_o * stride:stride].ravel()
+                    r += 1
+        out[g * c_opg:(g + 1) * c_opg] = (
+            wq[g * c_opg:(g + 1) * c_opg].reshape(c_opg, -1) @ cols
+        ).reshape(c_opg, h_o, w_o)
+    return out
 
 
-def conv_node(xq, in_p, out_p, k_f32, stride, pad):
+def conv_node(xq, in_p, out_p, k_f32, stride, pad, groups=1, dilation=1):
     """One quantized conv edge: quantize weights, accumulate, requantize
     with m_j = f64(s_in) * f64(s_wj) / f64(s_out) per output channel."""
     wq, ws = quantize_weights(k_f32)
-    acc = conv_q(xq, in_p[1], wq, stride, pad)
+    acc = conv_q(xq, in_p[1], wq, stride, pad, groups, dilation)
     out = np.empty(acc.shape, dtype=np.int64)
     for j in range(acc.shape[0]):
         m = np.float64(np.float32(in_p[0])) * np.float64(ws[j]) / np.float64(np.float32(out_p[0]))
         out[j] = requantize(acc[j], m, out_p[1])
+    return out
+
+
+def clamp_bounds(dst_p, relu_f, clamp):
+    """Quantized-domain activation bounds, exactly ``QuantGeom::bounds``:
+    ``lo = max(zp_out, -127)`` under ReLU, ``hi`` from the clamp value
+    requantized into the destination scale then clipped to [lo, 127]."""
+    lo = max(dst_p[1], Q_MIN) if relu_f else Q_MIN
+    if clamp is None:
+        return lo, Q_MAX
+    cq = int(round_half_away(np.float64(np.float32(clamp))
+                             / np.float64(np.float32(dst_p[0])))) + dst_p[1]
+    return lo, min(max(cq, lo), Q_MAX)
+
+
+def eltwise_i8(xq, src_p, dst_p, ordinal=None, relu_f=False, clamp=None):
+    """Mirror of the executor's standalone i8 eltwise pass
+    (``engine::Eltwise::apply_i8``) — a materialized BatchNorm
+    (``ordinal`` selects its ``bn_params``) or ReLU graph node. The
+    scale/shift/requantize tail collapses into ONE rounded multiply-add
+    per element: ``q' = clamp(round((q - zp_s)*m_c + off_c) + zp_d,
+    lo, hi)`` with ``m_c = (s_src/s_dst)*scale[c]`` and
+    ``off_c = shift[c]/s_dst`` in f64."""
+    szp, dzp = src_p[1], dst_p[1]
+    ratio = np.float64(np.float32(src_p[0])) / np.float64(np.float32(dst_p[0]))
+    lo, hi = clamp_bounds(dst_p, relu_f, clamp)
+    c = xq.shape[0]
+    if ordinal is None:
+        m = np.full(c, ratio, dtype=np.float64)
+        off = np.zeros(c, dtype=np.float64)
+    else:
+        scale, shift = bn_params(ordinal, c)
+        m = ratio * scale.astype(np.float64)
+        off = shift.astype(np.float64) / np.float64(np.float32(dst_p[0]))
+    v = round_half_away((xq - szp).astype(np.float64) * m[:, None, None]
+                        + off[:, None, None]) + dzp
+    return np.clip(v, lo, hi).astype(np.int64)
+
+
+def conv_node_fused(xq, in_p, out_p, k_f32, stride, pad, groups=1, dilation=1,
+                    ordinal=None, relu_f=False, clamp=None, res=None, res_p=None):
+    """One FUSED quantized conv: the BN scale multiplies the requantize
+    multipliers at plan time, the BN shift becomes the pre-rounding
+    offset ``shift_j/s_out``, a residual adds its centered operand
+    scaled by ``s_res/s_out``, and ReLU/clamp become quantized-domain
+    bounds — a **single** rounding per output element
+    (``quant::direct::requant_ep``)."""
+    wq, ws = quantize_weights(k_f32)
+    acc = conv_q(xq, in_p[1], wq, stride, pad, groups, dilation)
+    s_out = np.float64(np.float32(out_p[0]))
+    zp_out = out_p[1]
+    lo, hi = clamp_bounds(out_p, relu_f, clamp)
+    scale, shift = (None, None) if ordinal is None else bn_params(ordinal, acc.shape[0])
+    res_term = None
+    if res is not None:
+        ratio = np.float64(np.float32(res_p[0])) / s_out
+        res_term = (res - res_p[1]).astype(np.float64) * ratio
+    out = np.empty(acc.shape, dtype=np.int64)
+    for j in range(acc.shape[0]):
+        m = np.float64(np.float32(in_p[0])) * np.float64(ws[j]) / s_out
+        if scale is not None:
+            m = m * np.float64(scale[j])
+        off = 0.0 if shift is None else np.float64(shift[j]) / s_out
+        rt = res_term[j] if res_term is not None else 0.0
+        v = round_half_away(acc[j].astype(np.float64) * m + off + rt) + zp_out
+        out[j] = np.clip(v, lo, hi)
     return out
 
 
@@ -385,42 +548,122 @@ def alexnet_i8():
     return golden_i8("alexnet_i8", layers, params, q, 7)
 
 
-def resnet_micro_i8():
-    """resnet_micro in int8, builder graph node order: input, conv0,
-    conv1, conv2, add1, conv3, conv4, add2, pool, conv5. Add joins
-    accumulate operands in pred order (store, then saturating adds)."""
-    print("resnet_micro_i8:", flush=True)
+def resnet_micro_f64_nodes():
+    """The f64 forward of every resnet_micro graph node, in node order
+    (input, then conv/bn/relu per conv0..conv4 with the two Add joins
+    and their ReLUs, pool, conv5) — shared by the unfused and fused i8
+    entries so both prescribe identical per-node activation params."""
     layers = resnet_micro()
     ks = kernels_for(layers)
     x = tensor_random((3, 32, 32), INPUT_SEED)
-
     f = [x]
-    f.append(conv(f[0], ks[0], 1, 1))                    # conv0
-    f.append(conv(f[1], ks[1], 1, 1))                    # conv1
-    f.append(conv(f[2], ks[2], 1, 1))                    # conv2
-    f.append(f[1] + f[3])                                # add1 = conv0 + conv2
-    f.append(conv(f[4], ks[3], 1, 1))                    # conv3
-    f.append(conv(f[5], ks[4], 1, 1))                    # conv4
-    f.append(f[4] + f[6])                                # add2 = add1 + conv4
-    f.append(max_pool(f[7], 2, 2, 2, 2, 0, 0))           # pool
-    f.append(conv(f[8], ks[5], 1, 1))                    # conv5
-    params = [act_params(t) for t in f]
+    f.append(conv(f[0], ks[0], 1, 1))                    # 1  conv0
+    f.append(bn(f[1], 0))                                # 2  bn0
+    f.append(relu(f[2]))                                 # 3  relu0 (stem)
+    f.append(conv(f[3], ks[1], 1, 1))                    # 4  conv1
+    f.append(bn(f[4], 1))                                # 5  bn1
+    f.append(relu(f[5]))                                 # 6  relu1
+    f.append(conv(f[6], ks[2], 1, 1))                    # 7  conv2
+    f.append(bn(f[7], 2))                                # 8  bn2
+    f.append(f[3] + f[8])                                # 9  add1 = relu0 + bn2
+    f.append(relu(f[9]))                                 # 10 relu_add1
+    f.append(conv(f[10], ks[3], 1, 1))                   # 11 conv3
+    f.append(bn(f[11], 3))                               # 12 bn3
+    f.append(relu(f[12]))                                # 13 relu3
+    f.append(conv(f[13], ks[4], 1, 1))                   # 14 conv4
+    f.append(bn(f[14], 4))                               # 15 bn4
+    f.append(f[10] + f[15])                              # 16 add2 = relu_add1 + bn4
+    f.append(relu(f[16]))                                # 17 relu_add2
+    f.append(max_pool(f[17], 2, 2, 2, 2, 0, 0))          # 18 pool
+    f.append(conv(f[18], ks[5], 1, 1))                   # 19 conv5
+    return layers, ks, x, [act_params(t) for t in f]
 
-    q = [quantize(x, *params[0])]
-    q.append(conv_node(q[0], params[0], params[1], ks[0], 1, 1))   # conv0
-    q.append(conv_node(q[1], params[1], params[2], ks[1], 1, 1))   # conv1
-    q.append(conv_node(q[2], params[2], params[3], ks[2], 1, 1))   # conv2
-    j1 = requant_edge(q[1], params[1], params[4])                  # add1: store conv0
-    j1 = add_accumulate(j1, q[3], params[3], params[4])            #       += conv2
+
+def resnet_micro_i8():
+    """resnet_micro in int8 through the UNFUSED schedule: every
+    BatchNorm/ReLU node is a standalone ``eltwise_i8`` pass, Add joins
+    accumulate operands in pred order (store, then saturating adds)."""
+    print("resnet_micro_i8:", flush=True)
+    layers, ks, x, p = resnet_micro_f64_nodes()
+
+    q = [quantize(x, *p[0])]
+    q.append(conv_node(q[0], p[0], p[1], ks[0], 1, 1))           # 1  conv0
+    q.append(eltwise_i8(q[1], p[1], p[2], ordinal=0))            # 2  bn0
+    q.append(eltwise_i8(q[2], p[2], p[3], relu_f=True))          # 3  relu0
+    q.append(conv_node(q[3], p[3], p[4], ks[1], 1, 1))           # 4  conv1
+    q.append(eltwise_i8(q[4], p[4], p[5], ordinal=1))            # 5  bn1
+    q.append(eltwise_i8(q[5], p[5], p[6], relu_f=True))          # 6  relu1
+    q.append(conv_node(q[6], p[6], p[7], ks[2], 1, 1))           # 7  conv2
+    q.append(eltwise_i8(q[7], p[7], p[8], ordinal=2))            # 8  bn2
+    j1 = requant_edge(q[3], p[3], p[9])                          # 9  add1: store relu0
+    j1 = add_accumulate(j1, q[8], p[8], p[9])                    #    += bn2
     q.append(j1)
-    q.append(conv_node(q[4], params[4], params[5], ks[3], 1, 1))   # conv3
-    q.append(conv_node(q[5], params[5], params[6], ks[4], 1, 1))   # conv4
-    j2 = requant_edge(q[4], params[4], params[7])                  # add2: store add1
-    j2 = add_accumulate(j2, q[6], params[6], params[7])            #       += conv4
+    q.append(eltwise_i8(q[9], p[9], p[10], relu_f=True))         # 10 relu_add1
+    q.append(conv_node(q[10], p[10], p[11], ks[3], 1, 1))        # 11 conv3
+    q.append(eltwise_i8(q[11], p[11], p[12], ordinal=3))         # 12 bn3
+    q.append(eltwise_i8(q[12], p[12], p[13], relu_f=True))       # 13 relu3
+    q.append(conv_node(q[13], p[13], p[14], ks[4], 1, 1))        # 14 conv4
+    q.append(eltwise_i8(q[14], p[14], p[15], ordinal=4))         # 15 bn4
+    j2 = requant_edge(q[10], p[10], p[16])                       # 16 add2: store relu_add1
+    j2 = add_accumulate(j2, q[15], p[15], p[16])                 #    += bn4
     q.append(j2)
-    q.append(max_pool_q(q[7], params[7], params[8], 2, 2, 2, 2, 0, 0))
-    q.append(conv_node(q[8], params[8], params[9], ks[5], 1, 1))   # conv5
-    return golden_i8("resnet_micro_i8", layers, params, q, 9)
+    q.append(eltwise_i8(q[16], p[16], p[17], relu_f=True))       # 17 relu_add2
+    q.append(max_pool_q(q[17], p[17], p[18], 2, 2, 2, 2, 0, 0))  # 18 pool
+    q.append(conv_node(q[18], p[18], p[19], ks[5], 1, 1))        # 19 conv5
+    return golden_i8("resnet_micro_i8", layers, p, q, 19)
+
+
+def resnet_micro_i8_fused():
+    """resnet_micro in int8 through the FUSED schedule
+    (``QuantNet::with_node_params_fused``): five conv+BN[+add]+ReLU
+    chains collapse to single-rounding fused convs quantizing straight
+    to their chain-tail edges; only pool and the bare conv5 remain.
+    Same prescribed per-node params as the unfused entry."""
+    print("resnet_micro_i8_fused:", flush=True)
+    layers, ks, x, p = resnet_micro_f64_nodes()
+
+    q0 = quantize(x, *p[0])
+    stem = conv_node_fused(q0, p[0], p[3], ks[0], 1, 1, ordinal=0, relu_f=True)
+    r1 = conv_node_fused(stem, p[3], p[6], ks[1], 1, 1, ordinal=1, relu_f=True)
+    j1 = conv_node_fused(r1, p[6], p[10], ks[2], 1, 1, ordinal=2, relu_f=True,
+                         res=stem, res_p=p[3])
+    r3 = conv_node_fused(j1, p[10], p[13], ks[3], 1, 1, ordinal=3, relu_f=True)
+    j2 = conv_node_fused(r3, p[13], p[17], ks[4], 1, 1, ordinal=4, relu_f=True,
+                         res=j1, res_p=p[10])
+    pool = max_pool_q(j2, p[17], p[18], 2, 2, 2, 2, 0, 0)
+    out = conv_node(pool, p[18], p[19], ks[5], 1, 1)
+    return golden_i8("resnet_micro_i8_fused", layers, p, {19: out}, 19)
+
+
+def mobilenet_micro_i8():
+    """mobilenet_micro in int8 through the FUSED schedule: six
+    conv+BN+ReLU6 / conv+ReLU chains (depthwise, strided, dilated)
+    each collapse to one single-rounding fused conv."""
+    print("mobilenet_micro_i8:", flush=True)
+    layers = mobilenet_micro()
+    ks = kernels_for(layers)
+    x = tensor_random((3, 16, 16), INPUT_SEED)
+
+    # f64 forward of all 18 graph nodes (input + conv/bn/relu6 per
+    # separable conv, conv/relu for the head) for calibration.
+    f = [x]
+    for i, (_c_i, _h, _c_o, _f, s, pd, g, d) in enumerate(layers[:5]):
+        f.append(conv(f[-1], ks[i], s, pd, g, d))        # conv / dw / pw
+        f.append(bn(f[-1], i))                           # its BN
+        f.append(relu(f[-1], clamp=6.0))                 # its ReLU6
+    (_c_i, _h, _c_o, _f, s, pd, g, d) = layers[5]
+    f.append(conv(f[-1], ks[5], s, pd, g, d))            # 16 head
+    f.append(relu(f[-1]))                                # 17 head_relu
+    p = [act_params(t) for t in f]
+
+    q = quantize(x, *p[0])
+    for i, (_c_i, _h, _c_o, _f, s, pd, g, d) in enumerate(layers[:5]):
+        # chain tail of conv i is its ReLU6, node 3*(i+1).
+        q = conv_node_fused(q, p[3 * i], p[3 * (i + 1)], ks[i], s, pd, g, d,
+                            ordinal=i, relu_f=True, clamp=6.0)
+    (_c_i, _h, _c_o, _f, s, pd, g, d) = layers[5]
+    out = conv_node_fused(q, p[15], p[17], ks[5], s, pd, g, d, relu_f=True)
+    return golden_i8("mobilenet_micro_i8", layers, p, {17: out}, 17)
 
 
 def sample_indices(n):
@@ -457,8 +700,12 @@ def main():
         "googlenet": golden("googlenet", googlenet(), run_inception),
         "vgg16": golden("vgg16", vgg16(), run_chain),
         "resnet_micro": golden("resnet_micro", resnet_micro(), run_resnet_micro),
+        "mobilenet_micro": golden("mobilenet_micro", mobilenet_micro(),
+                                  run_mobilenet_micro),
         "alexnet_i8": alexnet_i8(),
         "resnet_micro_i8": resnet_micro_i8(),
+        "resnet_micro_i8_fused": resnet_micro_i8_fused(),
+        "mobilenet_micro_i8": mobilenet_micro_i8(),
     }
     path = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "fixtures",
                         "net_golden.json")

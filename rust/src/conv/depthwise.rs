@@ -1,0 +1,342 @@
+//! Depthwise convolution (`groups == C_i == C_o`) over the §4 blocked
+//! layouts.
+//!
+//! Each output channel reduces over exactly its own input channel, so
+//! the generic per-group core would degenerate to `c_ob == c_ib == 1`
+//! scalar lanes. This kernel instead keeps the block's `c_b` channels
+//! as SIMD lanes: input `[C/c_b][H_i][W_i][c_b]`, kernel
+//! `[C/c_b][H_f][W_f][c_b]` (the standard blocked kernel layout with a
+//! single one-channel reduction slab), output `[C/c_b][H_o][W_o][c_b]`
+//! — every tap is a lane-wise `acc[j] += x[j] * w[j]`, unit-stride in
+//! both operands. There is no input-channel reduction loop, so the
+//! accumulator tile is written exactly once and the fused
+//! [`Epilogue`] always fires right before that single store.
+//!
+//! Zero-memory-overhead story is identical to the dense core: no
+//! workspace, borders by tap skipping, parallelism over channel blocks.
+
+use super::epilogue::{apply_tile, EpView, Epilogue};
+use super::microkernel::MAX_WOB;
+use super::{BlockParams, ConvShape};
+use crate::{Error, Result};
+
+/// Allocation-free depthwise core. Callers (`conv_direct_blocked_ep_into`)
+/// have already validated shape/blocking/epilogue/lengths; this checks
+/// only what is depthwise-specific. `bp.c_ob == bp.c_ib == c_b`.
+#[allow(clippy::too_many_arguments)] // the full fused-conv operand set
+pub(super) fn depthwise_blocked_core(
+    inp: &[f32],
+    ker: &[f32],
+    shape: &ConvShape,
+    bp: BlockParams,
+    threads: usize,
+    out: &mut [f32],
+    ep: &Epilogue,
+    res: Option<&[f32]>,
+) -> Result<()> {
+    if !shape.is_depthwise() {
+        return Err(Error::Shape("depthwise core on non-depthwise shape".into()));
+    }
+    let view = ep.view(0, shape.c_o);
+    match bp.c_ob {
+        1 => run::<1>(inp, ker, shape, bp.w_ob, threads, out, view, res),
+        2 => run::<2>(inp, ker, shape, bp.w_ob, threads, out, view, res),
+        4 => run::<4>(inp, ker, shape, bp.w_ob, threads, out, view, res),
+        8 => run::<8>(inp, ker, shape, bp.w_ob, threads, out, view, res),
+        16 => run::<16>(inp, ker, shape, bp.w_ob, threads, out, view, res),
+        32 => run::<32>(inp, ker, shape, bp.w_ob, threads, out, view, res),
+        other => Err(Error::Shape(format!(
+            "unsupported depthwise c_b={other} (supported: 1,2,4,8,16,32)"
+        ))),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run<const CB: usize>(
+    inp: &[f32],
+    ker: &[f32],
+    shape: &ConvShape,
+    w_ob: usize,
+    threads: usize,
+    out: &mut [f32],
+    ep: EpView<'_>,
+    res: Option<&[f32]>,
+) -> Result<()> {
+    let (h_o, w_o) = (shape.h_o(), shape.w_o());
+    let n_cb = shape.c_o / CB;
+    let blk_out = h_o * w_o * CB;
+    let blk_in = shape.h_i * shape.w_i * CB;
+    let blk_ker = shape.h_f * shape.w_f * CB;
+    if threads <= 1 || n_cb <= 1 {
+        for (cb, out_blk) in out.chunks_mut(blk_out).enumerate() {
+            let res_blk = res.map(|r| &r[cb * blk_out..][..blk_out]);
+            dw_block::<CB>(
+                &inp[cb * blk_in..][..blk_in],
+                &ker[cb * blk_ker..][..blk_ker],
+                shape,
+                w_ob,
+                cb * CB,
+                out_blk,
+                ep,
+                res_blk,
+            );
+        }
+    } else {
+        let mut per_thread: Vec<Vec<(usize, &mut [f32])>> =
+            (0..threads).map(|_| Vec::new()).collect();
+        for (idx, b) in out.chunks_mut(blk_out).enumerate() {
+            per_thread[idx % threads].push((idx, b));
+        }
+        std::thread::scope(|scope| {
+            for chunk in per_thread {
+                scope.spawn(move || {
+                    for (cb, out_blk) in chunk {
+                        let res_blk = res.map(|r| &r[cb * blk_out..][..blk_out]);
+                        dw_block::<CB>(
+                            &inp[cb * blk_in..][..blk_in],
+                            &ker[cb * blk_ker..][..blk_ker],
+                            shape,
+                            w_ob,
+                            cb * CB,
+                            out_blk,
+                            ep,
+                            res_blk,
+                        );
+                    }
+                });
+            }
+        });
+    }
+    Ok(())
+}
+
+/// One channel block: `inp_blk [H_i][W_i][CB]`, `ker_blk [H_f][W_f][CB]`,
+/// `out_blk [H_o][W_o][CB]`; `c0` is the block's absolute channel base.
+#[allow(clippy::too_many_arguments)]
+fn dw_block<const CB: usize>(
+    inp_blk: &[f32],
+    ker_blk: &[f32],
+    shape: &ConvShape,
+    w_ob: usize,
+    c0: usize,
+    out_blk: &mut [f32],
+    ep: EpView<'_>,
+    res_blk: Option<&[f32]>,
+) {
+    match w_ob.min(MAX_WOB) {
+        1 => dw_block_t::<CB, 1>(inp_blk, ker_blk, shape, c0, out_blk, ep, res_blk),
+        2 => dw_block_t::<CB, 2>(inp_blk, ker_blk, shape, c0, out_blk, ep, res_blk),
+        3 => dw_block_t::<CB, 3>(inp_blk, ker_blk, shape, c0, out_blk, ep, res_blk),
+        4 => dw_block_t::<CB, 4>(inp_blk, ker_blk, shape, c0, out_blk, ep, res_blk),
+        5 => dw_block_t::<CB, 5>(inp_blk, ker_blk, shape, c0, out_blk, ep, res_blk),
+        6 => dw_block_t::<CB, 6>(inp_blk, ker_blk, shape, c0, out_blk, ep, res_blk),
+        7 => dw_block_t::<CB, 7>(inp_blk, ker_blk, shape, c0, out_blk, ep, res_blk),
+        _ => dw_block_t::<CB, 8>(inp_blk, ker_blk, shape, c0, out_blk, ep, res_blk),
+    }
+}
+
+/// Accumulate one `TW x CB` register tile of depthwise outputs (taps
+/// are lane-wise products; borders skipped like the dense core).
+#[inline(always)]
+fn dw_tile<const CB: usize, const TW: usize>(
+    acc: &mut [[f32; CB]; TW],
+    inp_blk: &[f32],
+    ker_blk: &[f32],
+    shape: &ConvShape,
+    l: usize,
+    k0: usize,
+    tw: usize,
+) {
+    let (h_i, w_i) = (shape.h_i, shape.w_i);
+    let (s, p, d) = (shape.stride, shape.pad, shape.dilation);
+    let row_stride = w_i * CB;
+    for n in 0..shape.h_f {
+        let iy = (l * s + n * d) as isize - p as isize;
+        if iy < 0 || iy >= h_i as isize {
+            continue;
+        }
+        let row = &inp_blk[iy as usize * row_stride..][..row_stride];
+        for m in 0..shape.w_f {
+            let w = &ker_blk[(n * shape.w_f + m) * CB..][..CB];
+            let x0 = (k0 * s + m * d) as isize - p as isize;
+            let x_last = x0 + ((tw - 1) * s) as isize;
+            if x0 >= 0 && x_last < w_i as isize {
+                let base = x0 as usize * CB;
+                for kk in 0..tw {
+                    let x = &row[base + kk * s * CB..][..CB];
+                    let a = &mut acc[kk];
+                    for j in 0..CB {
+                        a[j] = x[j].mul_add(w[j], a[j]);
+                    }
+                }
+            } else {
+                for kk in 0..tw {
+                    let x = x0 + (kk * s) as isize;
+                    if x < 0 || x >= w_i as isize {
+                        continue;
+                    }
+                    let xp = &row[x as usize * CB..][..CB];
+                    let a = &mut acc[kk];
+                    for j in 0..CB {
+                        a[j] = xp[j].mul_add(w[j], a[j]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[allow(clippy::manual_memcpy)] // explicit loop keeps the tile in registers
+fn dw_block_t<const CB: usize, const TW: usize>(
+    inp_blk: &[f32],
+    ker_blk: &[f32],
+    shape: &ConvShape,
+    c0: usize,
+    out_blk: &mut [f32],
+    ep: EpView<'_>,
+    res_blk: Option<&[f32]>,
+) {
+    let (h_o, w_o) = (shape.h_o(), shape.w_o());
+    let full_tiles = w_o / TW;
+    let rem = w_o % TW;
+    let fuse = ep.is_active() || res_blk.is_some();
+    for l in 0..h_o {
+        let out_row = l * w_o * CB;
+        for t in 0..full_tiles {
+            let k0 = t * TW;
+            let mut acc = [[0.0f32; CB]; TW];
+            dw_tile::<CB, TW>(&mut acc, inp_blk, ker_blk, shape, l, k0, TW);
+            if fuse {
+                let r = res_blk.map(|r| &r[out_row + k0 * CB..][..TW * CB]);
+                apply_tile::<CB, TW>(&mut acc, &ep, c0, r, TW);
+            }
+            let tile = &mut out_blk[out_row + k0 * CB..][..TW * CB];
+            for kk in 0..TW {
+                let dst = &mut tile[kk * CB..][..CB];
+                for j in 0..CB {
+                    dst[j] = acc[kk][j];
+                }
+            }
+        }
+        if rem > 0 {
+            // Remainder columns: same tile type, only `rem` rows live
+            // (no partial-sum reload here — depthwise has a single
+            // reduction slab, so the tile is written exactly once).
+            let k0 = full_tiles * TW;
+            let mut acc = [[0.0f32; CB]; TW];
+            dw_tile::<CB, TW>(&mut acc, inp_blk, ker_blk, shape, l, k0, rem);
+            if fuse {
+                let r = res_blk.map(|r| &r[out_row + k0 * CB..][..rem * CB]);
+                apply_tile::<CB, TW>(&mut acc, &ep, c0, r, rem);
+            }
+            let tile = &mut out_blk[out_row + k0 * CB..][..rem * CB];
+            for kk in 0..rem {
+                let dst = &mut tile[kk * CB..][..CB];
+                for j in 0..CB {
+                    dst[j] = acc[kk][j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::conv_naive;
+    use super::super::direct::conv_direct_blocked_ep_into;
+    use super::*;
+    use crate::layout::{from_blocked_io, to_blocked_io, to_blocked_kernel};
+    use crate::tensor::Tensor;
+
+    fn dw_oneshot(
+        input: &Tensor,
+        kernel: &Tensor,
+        s: &ConvShape,
+        bp: BlockParams,
+        threads: usize,
+        ep: &Epilogue,
+        res_nchw: Option<&Tensor>,
+    ) -> Tensor {
+        let bi = to_blocked_io(input, bp.c_ib).unwrap();
+        let bk = to_blocked_kernel(kernel, bp.c_ob, 1).unwrap();
+        let mut out = Tensor::zeros(&[s.c_o / bp.c_ob, s.h_o(), s.w_o(), bp.c_ob]);
+        let br = res_nchw.map(|r| to_blocked_io(r, bp.c_ob).unwrap());
+        conv_direct_blocked_ep_into(
+            bi.data(),
+            bk.data(),
+            s,
+            bp,
+            threads,
+            out.data_mut(),
+            ep,
+            br.as_ref().map(|b| b.data()),
+        )
+        .unwrap();
+        from_blocked_io(&out).unwrap()
+    }
+
+    fn check(s: &ConvShape, bp: BlockParams, threads: usize, seed: u64) {
+        let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], seed);
+        let kernel = Tensor::random(&[s.c_o, 1, s.h_f, s.w_f], seed + 1);
+        let want = conv_naive(&input, &kernel, s).unwrap();
+        let got = dw_oneshot(&input, &kernel, s, bp, threads, &Epilogue::none(), None);
+        assert!(
+            got.allclose(&want, 1e-4, 1e-5),
+            "depthwise mismatch {s:?} bp={bp:?}: {}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn matches_naive_basic() {
+        let s = ConvShape::new(8, 10, 10, 8, 3, 3, 1, 1).with_groups(8);
+        check(&s, BlockParams::new(8, 4, 8), 1, 50);
+        check(&s, BlockParams::new(4, 3, 4), 1, 51);
+        check(&s, BlockParams::new(1, 4, 1), 1, 52);
+    }
+
+    #[test]
+    fn matches_naive_strided_dilated_threaded() {
+        let s = ConvShape::new(16, 12, 12, 16, 3, 3, 2, 1).with_groups(16);
+        check(&s, BlockParams::new(8, 4, 8), 4, 53);
+        let d = ConvShape::new(8, 14, 14, 8, 3, 3, 1, 2).with_groups(8).with_dilation(2);
+        check(&d, BlockParams::new(8, 5, 8), 1, 54);
+        check(&d, BlockParams::new(2, 7, 2), 3, 55);
+    }
+
+    #[test]
+    fn fused_epilogue_matches_post_pass() {
+        use crate::conv::epilogue::apply_post;
+        use crate::layout::IoLayout;
+        let s = ConvShape::new(8, 9, 9, 8, 3, 3, 1, 1).with_groups(8);
+        let bp = BlockParams::new(8, 4, 8);
+        let input = Tensor::random(&[8, 9, 9], 60);
+        let kernel = Tensor::random(&[8, 1, 3, 3], 61);
+        let res = Tensor::random(&[8, 9, 9], 62);
+        let ep = Epilogue::bn(
+            (0..8).map(|c| 0.5 + c as f32 * 0.25).collect(),
+            (0..8).map(|c| c as f32 * 0.1 - 0.4).collect(),
+        )
+        .with_relu(Some(6.0))
+        .with_residual();
+        let fused = dw_oneshot(&input, &kernel, &s, bp, 1, &ep, Some(&res));
+        // Reference: unfused conv, then the layout-aware post pass.
+        let mut want = conv_naive(&input, &kernel, &s).unwrap();
+        apply_post(
+            want.data_mut(),
+            IoLayout::Nchw,
+            8,
+            81,
+            &ep,
+            Some(res.data()),
+        )
+        .unwrap();
+        assert!(
+            fused.allclose(&want, 1e-4, 1e-5),
+            "fused depthwise epilogue mismatch: {}",
+            fused.max_abs_diff(&want)
+        );
+        // ReLU clamp actually bites somewhere (guards a vacuous test).
+        assert!(fused.data().iter().all(|&v| (0.0..=6.0).contains(&v)));
+    }
+}

@@ -23,7 +23,22 @@
 //! tap whose input row/column falls outside the image contributes nothing,
 //! so rows are skipped per `(l, n)` and an edge tile falls back to a
 //! per-column guarded path — never by materializing a padded copy.
+//!
+//! **Epilogues** ([`conv_direct_blocked_ep_into`]): the fused post-op
+//! tail of a conv (bias / batch-norm scale+shift / residual add / ReLU)
+//! is applied to the accumulator tile in registers, on the **last**
+//! input-channel block only (earlier `ib` iterations hold partial sums
+//! that round-trip through the output), right before the final store —
+//! the unfused intermediate never exists in memory.
+//!
+//! **Groups / dilation**: dilation flows into the tap geometry
+//! ([`TileGeom::dil`]); grouped convolution runs the same core once per
+//! group over block-aligned slices of the §4 layouts (each group's
+//! channel blocks are contiguous), and the depthwise case
+//! (`groups == C_i == C_o`) takes the dedicated
+//! [`super::depthwise`] register-tile kernel.
 
+use super::epilogue::{apply_tile, EpView, Epilogue};
 use super::microkernel::{
     load_tile_c, reduce_tile, store_tile_c, TileGeom, MAX_WOB,
 };
@@ -54,12 +69,15 @@ pub fn conv_direct_blocked(
             want_in
         )));
     }
+    // Depthwise kernels pack with a single input lane ([C/c_b][1][H_f]
+    // [W_f][1][c_b]); everything else blocks the per-group reduction.
+    let k_cib = if shape.is_depthwise() { 1 } else { bp.c_ib };
     let want_k = [
         shape.c_o / bp.c_ob,
-        shape.c_i / bp.c_ib,
+        shape.c_i_per_group() / k_cib,
         shape.h_f,
         shape.w_f,
-        bp.c_ib,
+        k_cib,
         bp.c_ob,
     ];
     if kernel.shape() != want_k {
@@ -90,8 +108,28 @@ pub fn conv_direct_blocked_into(
     threads: usize,
     out: &mut [f32],
 ) -> Result<()> {
+    conv_direct_blocked_ep_into(inp, ker, shape, bp, threads, out, &Epilogue::none(), None)
+}
+
+/// [`conv_direct_blocked_into`] with a fused [`Epilogue`] applied to the
+/// register tile before the final store (and, for `ep.residual`, a
+/// residual operand `res` in the **output's** blocked layout). Grouped
+/// and depthwise shapes route through the per-group / depthwise cores.
+/// Still allocation-free when `threads <= 1`.
+#[allow(clippy::too_many_arguments)] // the full fused-conv operand set
+pub fn conv_direct_blocked_ep_into(
+    inp: &[f32],
+    ker: &[f32],
+    shape: &ConvShape,
+    bp: BlockParams,
+    threads: usize,
+    out: &mut [f32],
+    ep: &Epilogue,
+    res: Option<&[f32]>,
+) -> Result<()> {
     shape.validate()?;
     bp.validate_for(shape)?;
+    ep.validate(shape.c_o)?;
     if bp.w_ob == 0 || bp.w_ob > MAX_WOB {
         return Err(Error::Shape(format!("w_ob={} out of range 1..={}", bp.w_ob, MAX_WOB)));
     }
@@ -102,7 +140,7 @@ pub fn conv_direct_blocked_into(
             inp.len()
         )));
     }
-    let n_ker = shape.c_o * shape.c_i * shape.h_f * shape.w_f;
+    let n_ker = shape.c_o * shape.c_i_per_group() * shape.h_f * shape.w_f;
     if ker.len() != n_ker {
         return Err(Error::Shape(format!(
             "blocked kernel has {} elements, expected {n_ker}",
@@ -116,20 +154,66 @@ pub fn conv_direct_blocked_into(
             out.len()
         )));
     }
+    if ep.residual != res.is_some() {
+        return Err(Error::Shape("fused residual operand mismatch".into()));
+    }
+    if let Some(r) = res {
+        if r.len() != n_out {
+            return Err(Error::Shape(format!(
+                "fused residual has {} elements, expected {n_out}",
+                r.len()
+            )));
+        }
+    }
     let threads = threads.max(1);
+    if shape.is_depthwise() {
+        return super::depthwise::depthwise_blocked_core(inp, ker, shape, bp, threads, out, ep, res);
+    }
+    if shape.groups == 1 {
+        return run_group(inp, ker, shape, bp, threads, out, ep.view(0, shape.c_o), res);
+    }
+    // Grouped: each group's channel blocks are contiguous in every §4
+    // layout, so the groups==1 core runs unchanged over slices.
+    let (c_ipg, c_opg) = (shape.c_i_per_group(), shape.c_o_per_group());
+    let gs = ConvShape { c_i: c_ipg, c_o: c_opg, groups: 1, ..shape.clone() };
+    let (in_len, k_len) = (c_ipg * shape.h_i * shape.w_i, c_opg * c_ipg * shape.h_f * shape.w_f);
+    let out_len = c_opg * shape.h_o() * shape.w_o();
+    for g in 0..shape.groups {
+        let inp_g = &inp[g * in_len..][..in_len];
+        let ker_g = &ker[g * k_len..][..k_len];
+        let out_g = &mut out[g * out_len..][..out_len];
+        let res_g = res.map(|r| &r[g * out_len..][..out_len]);
+        run_group(inp_g, ker_g, &gs, bp, threads, out_g, ep.view(g * c_opg, c_opg), res_g)?;
+    }
+    Ok(())
+}
+
+/// Monomorphization dispatch for one (groups == 1) channel range.
+#[allow(clippy::too_many_arguments)]
+fn run_group(
+    inp: &[f32],
+    ker: &[f32],
+    shape: &ConvShape,
+    bp: BlockParams,
+    threads: usize,
+    out: &mut [f32],
+    ep: EpView<'_>,
+    res: Option<&[f32]>,
+) -> Result<()> {
     match bp.c_ob {
-        1 => run_into::<1>(inp, ker, shape, bp, threads, out),
-        2 => run_into::<2>(inp, ker, shape, bp, threads, out),
-        4 => run_into::<4>(inp, ker, shape, bp, threads, out),
-        8 => run_into::<8>(inp, ker, shape, bp, threads, out),
-        16 => run_into::<16>(inp, ker, shape, bp, threads, out),
-        32 => run_into::<32>(inp, ker, shape, bp, threads, out),
+        1 => run_into::<1>(inp, ker, shape, bp, threads, out, ep, res),
+        2 => run_into::<2>(inp, ker, shape, bp, threads, out, ep, res),
+        4 => run_into::<4>(inp, ker, shape, bp, threads, out, ep, res),
+        8 => run_into::<8>(inp, ker, shape, bp, threads, out, ep, res),
+        16 => run_into::<16>(inp, ker, shape, bp, threads, out, ep, res),
+        32 => run_into::<32>(inp, ker, shape, bp, threads, out, ep, res),
         other => Err(Error::Shape(format!(
             "unsupported c_ob={other} (supported: 1,2,4,8,16,32)"
         ))),
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_into<const COB: usize>(
     inp: &[f32],
     ker: &[f32],
@@ -137,6 +221,8 @@ fn run_into<const COB: usize>(
     bp: BlockParams,
     threads: usize,
     out: &mut [f32],
+    ep: EpView<'_>,
+    res: Option<&[f32]>,
 ) -> Result<()> {
     let (h_o, w_o) = (shape.h_o(), shape.w_o());
     let n_ob = shape.c_o / COB;
@@ -145,7 +231,8 @@ fn run_into<const COB: usize>(
     if threads <= 1 || n_ob <= 1 {
         // Serial path: no allocation of any kind.
         for (jb, out_blk) in out.chunks_mut(blk_len).enumerate() {
-            conv_block::<COB>(inp, ker, shape, bp, jb, out_blk);
+            let res_blk = res.map(|r| &r[jb * blk_len..][..blk_len]);
+            conv_block::<COB>(inp, ker, shape, bp, jb, out_blk, ep, res_blk);
         }
     } else {
         // Paper §3.2: parallelism over the C_o dimension; each thread
@@ -160,7 +247,8 @@ fn run_into<const COB: usize>(
             for chunk in per_thread {
                 scope.spawn(move || {
                     for (jb, out_blk) in chunk {
-                        conv_block::<COB>(inp, ker, shape, bp, jb, out_blk);
+                        let res_blk = res.map(|r| &r[jb * blk_len..][..blk_len]);
+                        conv_block::<COB>(inp, ker, shape, bp, jb, out_blk, ep, res_blk);
                     }
                 });
             }
@@ -173,6 +261,7 @@ fn run_into<const COB: usize>(
 /// channels) into `out_blk` (`[H_o][W_o][COB]`). Dispatches the tile
 /// width to a monomorphized kernel so the accumulator tile stays in
 /// registers for the whole `(n, m, C_i,b)` reduction.
+#[allow(clippy::too_many_arguments)]
 fn conv_block<const COB: usize>(
     inp: &[f32],
     ker: &[f32],
@@ -180,19 +269,22 @@ fn conv_block<const COB: usize>(
     bp: BlockParams,
     jb: usize,
     out_blk: &mut [f32],
+    ep: EpView<'_>,
+    res_blk: Option<&[f32]>,
 ) {
     match bp.w_ob {
-        1 => conv_block_t::<COB, 1>(inp, ker, shape, bp, jb, out_blk),
-        2 => conv_block_t::<COB, 2>(inp, ker, shape, bp, jb, out_blk),
-        3 => conv_block_t::<COB, 3>(inp, ker, shape, bp, jb, out_blk),
-        4 => conv_block_t::<COB, 4>(inp, ker, shape, bp, jb, out_blk),
-        5 => conv_block_t::<COB, 5>(inp, ker, shape, bp, jb, out_blk),
-        6 => conv_block_t::<COB, 6>(inp, ker, shape, bp, jb, out_blk),
-        7 => conv_block_t::<COB, 7>(inp, ker, shape, bp, jb, out_blk),
-        _ => conv_block_t::<COB, 8>(inp, ker, shape, bp, jb, out_blk),
+        1 => conv_block_t::<COB, 1>(inp, ker, shape, bp, jb, out_blk, ep, res_blk),
+        2 => conv_block_t::<COB, 2>(inp, ker, shape, bp, jb, out_blk, ep, res_blk),
+        3 => conv_block_t::<COB, 3>(inp, ker, shape, bp, jb, out_blk, ep, res_blk),
+        4 => conv_block_t::<COB, 4>(inp, ker, shape, bp, jb, out_blk, ep, res_blk),
+        5 => conv_block_t::<COB, 5>(inp, ker, shape, bp, jb, out_blk, ep, res_blk),
+        6 => conv_block_t::<COB, 6>(inp, ker, shape, bp, jb, out_blk, ep, res_blk),
+        7 => conv_block_t::<COB, 7>(inp, ker, shape, bp, jb, out_blk, ep, res_blk),
+        _ => conv_block_t::<COB, 8>(inp, ker, shape, bp, jb, out_blk, ep, res_blk),
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn conv_block_t<const COB: usize, const TW: usize>(
     inp: &[f32],
     ker: &[f32],
@@ -200,11 +292,13 @@ fn conv_block_t<const COB: usize, const TW: usize>(
     bp: BlockParams,
     jb: usize,
     out_blk: &mut [f32],
+    ep: EpView<'_>,
+    res_blk: Option<&[f32]>,
 ) {
     let (h_o, w_o) = (shape.h_o(), shape.w_o());
     let (h_i, w_i) = (shape.h_i, shape.w_i);
     let (h_f, w_f) = (shape.h_f, shape.w_f);
-    let (s, p) = (shape.stride, shape.pad);
+    let (s, p, d) = (shape.stride, shape.pad, shape.dilation);
     let c_ib = bp.c_ib;
     let n_ib = shape.c_i / c_ib;
 
@@ -217,6 +311,9 @@ fn conv_block_t<const COB: usize, const TW: usize>(
     for ib in 0..n_ib {
         let kslab = &ker[jb * ker_jb + ib * ker_ib..][..ker_ib];
         let islab = &inp[ib * (h_i * w_i * c_ib)..][..h_i * w_i * c_ib];
+        // The epilogue fires only once the reduction is complete: earlier
+        // ib iterations hold partial sums (they round-trip through out).
+        let fuse = ib == n_ib - 1 && (ep.is_active() || res_blk.is_some());
         for l in 0..h_o {
             let out_row = l * w_o * COB;
             // Full-width tiles: register-resident reduction.
@@ -225,8 +322,12 @@ fn conv_block_t<const COB: usize, const TW: usize>(
                 let tile = &mut out_blk[out_row + k0 * COB..][..TW * COB];
                 let mut acc = [[0.0f32; COB]; TW];
                 load_tile_c::<COB, TW>(&mut acc, tile);
-                let g = TileGeom { h_f, w_f, c_ib, h_i, w_i, stride: s, pad: p, l, k0 };
+                let g = TileGeom { h_f, w_f, c_ib, h_i, w_i, stride: s, pad: p, dil: d, l, k0 };
                 reduce_tile::<COB, TW>(&mut acc, islab, kslab, &g);
+                if fuse {
+                    let r = res_blk.map(|r| &r[out_row + k0 * COB..][..TW * COB]);
+                    apply_tile::<COB, TW>(&mut acc, &ep, jb * COB, r, TW);
+                }
                 store_tile_c::<COB, TW>(&acc, tile);
             }
             // Row remainder: dispatch to a narrower const-width kernel
@@ -236,8 +337,13 @@ fn conv_block_t<const COB: usize, const TW: usize>(
             if rem > 0 {
                 let k0 = full_tiles * TW;
                 let tile = &mut out_blk[out_row + k0 * COB..][..rem * COB];
-                let g = TileGeom { h_f, w_f, c_ib, h_i, w_i, stride: s, pad: p, l, k0 };
-                reduce_rem::<COB>(tile, islab, kslab, &g, rem);
+                let g = TileGeom { h_f, w_f, c_ib, h_i, w_i, stride: s, pad: p, dil: d, l, k0 };
+                let r = if fuse {
+                    res_blk.map(|r| &r[out_row + k0 * COB..][..rem * COB])
+                } else {
+                    None
+                };
+                reduce_rem::<COB>(tile, islab, kslab, &g, rem, fuse.then_some((&ep, jb * COB)), r);
             }
         }
     }
@@ -245,19 +351,26 @@ fn conv_block_t<const COB: usize, const TW: usize>(
 
 
 /// Remainder-tile reduction: monomorphized per width so narrow edge
-/// tiles run the same register-resident kernel as full tiles.
+/// tiles run the same register-resident kernel as full tiles. `fuse`
+/// carries the epilogue view + channel base when this is the last
+/// input-channel block of a fused conv.
 fn reduce_rem<const COB: usize>(
     tile: &mut [f32],
     islab: &[f32],
     kslab: &[f32],
     g: &TileGeom,
     rem: usize,
+    fuse: Option<(&EpView<'_>, usize)>,
+    res: Option<&[f32]>,
 ) {
     macro_rules! go {
         ($tw:literal) => {{
             let mut acc = [[0.0f32; COB]; $tw];
             load_tile_c::<COB, $tw>(&mut acc, tile);
             reduce_tile::<COB, $tw>(&mut acc, islab, kslab, g);
+            if let Some((ep, c0)) = fuse {
+                apply_tile::<COB, $tw>(&mut acc, ep, c0, res, $tw);
+            }
             store_tile_c::<COB, $tw>(&acc, tile);
         }};
     }
@@ -372,5 +485,105 @@ mod tests {
         let bad_in = Tensor::zeros(&[1, 8, 8, 8]); // wrong c_ib split
         let k = to_blocked_kernel(&Tensor::zeros(&[16, 8, 3, 3]), 8, 4).unwrap();
         assert!(conv_direct_blocked(&bad_in, &k, &s, bp, 1).is_err());
+    }
+
+    #[test]
+    fn matches_naive_dilated() {
+        let s = ConvShape::new(8, 14, 14, 16, 3, 3, 1, 2).with_dilation(2);
+        check(&s, BlockParams::new(8, 4, 4), 1, 70);
+        let s2 = ConvShape::new(4, 15, 15, 8, 3, 3, 2, 2).with_dilation(2);
+        check(&s2, BlockParams::new(8, 3, 4), 2, 71);
+    }
+
+    /// Grouped (non-depthwise) conv vs the naive grouped oracle.
+    fn check_grouped(s: &ConvShape, bp: BlockParams, threads: usize, seed: u64) {
+        let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], seed);
+        let kernel = Tensor::random(&[s.c_o, s.c_i_per_group(), s.h_f, s.w_f], seed + 1);
+        let want = conv_naive(&input, &kernel, s).unwrap();
+        let bi = to_blocked_io(&input, bp.c_ib).unwrap();
+        let bk = to_blocked_kernel(&kernel, bp.c_ob, bp.c_ib).unwrap();
+        let mut out = Tensor::zeros(&[s.c_o / bp.c_ob, s.h_o(), s.w_o(), bp.c_ob]);
+        conv_direct_blocked_into(bi.data(), bk.data(), s, bp, threads, out.data_mut()).unwrap();
+        let got = from_blocked_io(&out).unwrap();
+        assert!(
+            got.allclose(&want, 1e-4, 1e-5),
+            "grouped mismatch {s:?} bp={bp:?}: {}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn matches_naive_grouped() {
+        check_grouped(&ConvShape::new(8, 9, 9, 16, 3, 3, 1, 1).with_groups(2), BlockParams::new(8, 4, 4), 1, 72);
+        check_grouped(&ConvShape::new(16, 8, 8, 16, 3, 3, 1, 1).with_groups(4), BlockParams::new(4, 4, 2), 1, 73);
+        check_grouped(&ConvShape::new(8, 10, 10, 8, 3, 3, 2, 1).with_groups(2), BlockParams::new(2, 3, 4), 3, 74);
+    }
+
+    /// In-tile fused epilogue is bitwise identical to computing the conv
+    /// unfused and applying the same scalar post-pass — the property the
+    /// graph-level fusion pass relies on for f32 parity.
+    #[test]
+    fn fused_epilogue_bitwise_matches_post_pass() {
+        use crate::conv::epilogue::apply_post;
+        use crate::layout::IoLayout;
+        // c_i blocking (c_ib=4 of 8) exercises the "fire on last ib" rule;
+        // W_o=7 with w_ob=4 exercises the remainder-tile epilogue path.
+        let s = ConvShape::new(8, 9, 9, 16, 3, 3, 1, 1);
+        let bp = BlockParams::new(8, 4, 4);
+        let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 80);
+        let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 81);
+        let res = Tensor::random(&[s.c_o, s.h_o(), s.w_o()], 82);
+        let ep = Epilogue::bn(
+            (0..16).map(|c| 0.25 + c as f32 * 0.125).collect(),
+            (0..16).map(|c| c as f32 * 0.05 - 0.3).collect(),
+        )
+        .with_relu(Some(4.0))
+        .with_residual();
+
+        let bi = to_blocked_io(&input, bp.c_ib).unwrap();
+        let bk = to_blocked_kernel(&kernel, bp.c_ob, bp.c_ib).unwrap();
+        let br = to_blocked_io(&res, bp.c_ob).unwrap();
+
+        let mut fused = Tensor::zeros(&[s.c_o / bp.c_ob, s.h_o(), s.w_o(), bp.c_ob]);
+        conv_direct_blocked_ep_into(
+            bi.data(), bk.data(), &s, bp, 1, fused.data_mut(), &ep, Some(br.data()),
+        )
+        .unwrap();
+
+        let mut unfused = Tensor::zeros(&[s.c_o / bp.c_ob, s.h_o(), s.w_o(), bp.c_ob]);
+        conv_direct_blocked_into(bi.data(), bk.data(), &s, bp, 1, unfused.data_mut()).unwrap();
+        apply_post(
+            unfused.data_mut(),
+            IoLayout::Blocked { c_b: bp.c_ob },
+            s.c_o,
+            s.h_o() * s.w_o(),
+            &ep,
+            Some(br.data()),
+        )
+        .unwrap();
+        assert_eq!(fused.data(), unfused.data(), "fused epilogue must be bitwise");
+        // And the clamp actually bites somewhere (guards a vacuous test).
+        assert!(fused.data().iter().all(|&v| (0.0..=4.0).contains(&v)));
+        assert!(fused.data().iter().any(|&v| v == 4.0 || v == 0.0));
+    }
+
+    #[test]
+    fn fused_rejects_bad_operands() {
+        let s = ConvShape::new(4, 6, 6, 8, 3, 3, 1, 1);
+        let bp = BlockParams::new(8, 4, 4);
+        let inp = vec![0.0f32; 4 * 6 * 6];
+        let ker = vec![0.0f32; 8 * 4 * 3 * 3];
+        let mut out = vec![0.0f32; 8 * 6 * 6];
+        // Epilogue channel-count mismatch.
+        let bad = Epilogue::bias(vec![0.0; 7]);
+        assert!(conv_direct_blocked_ep_into(&inp, &ker, &s, bp, 1, &mut out, &bad, None).is_err());
+        // Residual flag without operand, and operand of the wrong size.
+        let ep = Epilogue::none().with_residual();
+        assert!(conv_direct_blocked_ep_into(&inp, &ker, &s, bp, 1, &mut out, &ep, None).is_err());
+        let short = vec![0.0f32; 8];
+        assert!(
+            conv_direct_blocked_ep_into(&inp, &ker, &s, bp, 1, &mut out, &ep, Some(&short))
+                .is_err()
+        );
     }
 }

@@ -1,0 +1,349 @@
+//! Fused convolution epilogues.
+//!
+//! An [`Epilogue`] describes the element-wise tail a convolution applies
+//! to its accumulator tile **before** storing it — the fusion target of
+//! conv→bias / conv→batch-norm / conv→ReLU / conv→residual-Add chains
+//! (see `nets::fuse`). Applying the tail inside the register tile means
+//! the unfused intermediate is never materialized, so fused networks
+//! keep the paper's zero-memory-overhead accounting intact:
+//! `workspace_bytes()` stays 0 and the epilogue parameters are model
+//! parameters (like the weights), not overhead.
+//!
+//! Application order is fixed (and shared by every execution path —
+//! in-tile, the generic [`apply_post`] fallback, and the standalone
+//! `Relu`/`BatchNorm` graph ops executed through the runner's Adapt
+//! gathers — so fused and unfused composes agree **bitwise** in f32):
+//!
+//! 1. per-channel scale (`y = y * scale[c]`) — batch-norm, pre-folded to
+//!    `gamma / sqrt(var + eps)`;
+//! 2. per-channel shift (`y = y + shift[c]`) — bias, or the folded
+//!    batch-norm `beta - mean * scale`;
+//! 3. residual add (`y = y + r`) — the fused shortcut operand, in the
+//!    same layout as the output;
+//! 4. ReLU (`y = max(0, y)`), with an optional upper clamp (ReLU6-style
+//!    `y = min(clamp, y)`).
+//!
+//! Scale and shift are applied as two separately-rounded f32 ops (mul
+//! then add, no FMA contraction) so every path produces identical bits.
+
+use crate::layout::IoLayout;
+use crate::{Error, Result};
+
+/// The fused post-op tail of one convolution. `Epilogue::none()` is the
+/// identity (and the hot paths skip all epilogue work entirely for it).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Epilogue {
+    /// Per-output-channel multiplier (len `c_o`); empty = no scaling.
+    pub scale: Vec<f32>,
+    /// Per-output-channel addend (len `c_o`); empty = no shift.
+    pub shift: Vec<f32>,
+    /// Add a residual operand (caller supplies it in the output layout).
+    pub residual: bool,
+    /// `max(0, y)` after scale/shift/residual.
+    pub relu: bool,
+    /// Optional upper clamp (requires `relu`).
+    pub clamp: Option<f32>,
+}
+
+impl Epilogue {
+    /// The identity epilogue.
+    pub const fn none() -> Epilogue {
+        Epilogue { scale: Vec::new(), shift: Vec::new(), residual: false, relu: false, clamp: None }
+    }
+
+    /// True when this epilogue is the identity (fast-path skip).
+    pub fn is_none(&self) -> bool {
+        self.scale.is_empty()
+            && self.shift.is_empty()
+            && !self.residual
+            && !self.relu
+            && self.clamp.is_none()
+    }
+
+    /// Bias-only epilogue (per-channel shift).
+    pub fn bias(shift: Vec<f32>) -> Epilogue {
+        Epilogue { shift, ..Epilogue::none() }
+    }
+
+    /// Pre-folded batch-norm scale/shift epilogue.
+    pub fn bn(scale: Vec<f32>, shift: Vec<f32>) -> Epilogue {
+        Epilogue { scale, shift, ..Epilogue::none() }
+    }
+
+    /// Add a trailing ReLU (optionally clamped).
+    pub fn with_relu(mut self, clamp: Option<f32>) -> Epilogue {
+        self.relu = true;
+        self.clamp = clamp;
+        self
+    }
+
+    /// Add a fused residual operand.
+    pub fn with_residual(mut self) -> Epilogue {
+        self.residual = true;
+        self
+    }
+
+    /// Validate against the conv's output channel count.
+    pub fn validate(&self, c_o: usize) -> Result<()> {
+        if !self.scale.is_empty() && self.scale.len() != c_o {
+            return Err(Error::Shape(format!(
+                "epilogue scale has {} channels, conv has {c_o}",
+                self.scale.len()
+            )));
+        }
+        if !self.shift.is_empty() && self.shift.len() != c_o {
+            return Err(Error::Shape(format!(
+                "epilogue shift has {} channels, conv has {c_o}",
+                self.shift.len()
+            )));
+        }
+        if self.clamp.is_some() && !self.relu {
+            return Err(Error::Shape("epilogue clamp requires relu".into()));
+        }
+        if let Some(c) = self.clamp {
+            if !c.is_finite() || c <= 0.0 {
+                return Err(Error::Shape(format!("epilogue clamp {c} must be finite and > 0")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Borrowed per-channel-range view (used by the grouped kernels,
+    /// which see a `[c0, c0+n)` slice of the output channels).
+    pub fn view(&self, c0: usize, n: usize) -> EpView<'_> {
+        EpView {
+            scale: if self.scale.is_empty() { &[] } else { &self.scale[c0..c0 + n] },
+            shift: if self.shift.is_empty() { &[] } else { &self.shift[c0..c0 + n] },
+            relu: self.relu,
+            clamp: self.clamp,
+        }
+    }
+
+    /// Bytes of the per-channel parameter vectors (model parameters,
+    /// reported by accounting surfaces alongside the weights).
+    pub fn param_bytes(&self) -> u64 {
+        4 * (self.scale.len() + self.shift.len()) as u64
+    }
+}
+
+/// Borrowed view of an [`Epilogue`]'s channel-dependent pieces, offset
+/// to a channel range (the residual operand is passed separately as an
+/// `Option<&[f32]>` aligned with the output slice).
+#[derive(Clone, Copy, Debug)]
+pub struct EpView<'a> {
+    pub scale: &'a [f32],
+    pub shift: &'a [f32],
+    pub relu: bool,
+    pub clamp: Option<f32>,
+}
+
+impl EpView<'_> {
+    /// True when this view carries any work (an inactive view means the
+    /// tile stores straight back, zero-cost).
+    #[inline(always)]
+    pub fn is_active(&self) -> bool {
+        !self.scale.is_empty() || !self.shift.is_empty() || self.relu
+    }
+
+    /// Apply the channel-dependent tail to one value of channel `c`
+    /// (relative to this view's base); `r` is the residual addend.
+    /// This is THE scalar semantic every execution path shares.
+    #[inline(always)]
+    pub fn apply(&self, mut v: f32, c: usize, r: Option<f32>) -> f32 {
+        if !self.scale.is_empty() {
+            v *= self.scale[c];
+        }
+        if !self.shift.is_empty() {
+            v += self.shift[c];
+        }
+        if let Some(r) = r {
+            v += r;
+        }
+        if self.relu {
+            v = v.max(0.0);
+            if let Some(cl) = self.clamp {
+                v = v.min(cl);
+            }
+        }
+        v
+    }
+}
+
+/// Apply an epilogue view to a register tile (channel base `c0` relative
+/// to the view; `res` aligned with the tile; `tw` rows live — `tw == TW`
+/// on full tiles, narrower on the monomorphized remainder path).
+#[inline(always)]
+pub fn apply_tile<const COB: usize, const TW: usize>(
+    acc: &mut [[f32; COB]; TW],
+    ep: &EpView<'_>,
+    c0: usize,
+    res: Option<&[f32]>,
+    tw: usize,
+) {
+    for kk in 0..tw {
+        for j in 0..COB {
+            let r = res.map(|r| r[kk * COB + j]);
+            acc[kk][j] = ep.apply(acc[kk][j], c0 + j, r);
+        }
+    }
+}
+
+/// Apply an epilogue over an already-computed output buffer — the
+/// layout-aware fallback used by backends without in-tile fusion (the
+/// default `ConvPlan::execute_fused_into`). `res`, when present, must
+/// be in the same layout as `out`. In-place, allocation-free; bitwise
+/// identical to the in-tile application (same scalar ops, same order).
+pub fn apply_post(
+    out: &mut [f32],
+    layout: IoLayout,
+    c_o: usize,
+    hw: usize,
+    ep: &Epilogue,
+    res: Option<&[f32]>,
+) -> Result<()> {
+    ep.validate(c_o)?;
+    if out.len() != c_o * hw {
+        return Err(Error::Shape(format!(
+            "epilogue output has {} elements, expected {}",
+            out.len(),
+            c_o * hw
+        )));
+    }
+    if ep.residual != res.is_some() {
+        return Err(Error::Shape("epilogue residual operand mismatch".into()));
+    }
+    if let Some(r) = res {
+        if r.len() != out.len() {
+            return Err(Error::Shape(format!(
+                "epilogue residual has {} elements, expected {}",
+                r.len(),
+                out.len()
+            )));
+        }
+    }
+    if ep.is_none() {
+        return Ok(());
+    }
+    let v = ep.view(0, c_o);
+    match layout {
+        IoLayout::Nchw => {
+            for c in 0..c_o {
+                let base = c * hw;
+                for i in 0..hw {
+                    let r = res.map(|r| r[base + i]);
+                    out[base + i] = v.apply(out[base + i], c, r);
+                }
+            }
+        }
+        IoLayout::Nhwc => {
+            for i in 0..hw {
+                let base = i * c_o;
+                for c in 0..c_o {
+                    let r = res.map(|r| r[base + c]);
+                    out[base + c] = v.apply(out[base + c], c, r);
+                }
+            }
+        }
+        IoLayout::Blocked { c_b } => {
+            if c_o % c_b != 0 {
+                return Err(Error::Shape(format!(
+                    "epilogue blocked layout c_b={c_b} does not divide c_o={c_o}"
+                )));
+            }
+            for cb in 0..c_o / c_b {
+                let base_c = cb * c_b;
+                let base = cb * hw * c_b;
+                for i in 0..hw {
+                    for j in 0..c_b {
+                        let idx = base + i * c_b + j;
+                        let r = res.map(|r| r[idx]);
+                        out[idx] = v.apply(out[idx], base_c + j, r);
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_none() {
+        assert!(Epilogue::none().is_none());
+        assert!(Epilogue::default().is_none());
+        assert!(!Epilogue::bias(vec![1.0]).is_none());
+        assert!(!Epilogue::none().with_relu(None).is_none());
+    }
+
+    #[test]
+    fn validate_checks_lengths_and_clamp() {
+        assert!(Epilogue::bias(vec![0.0; 4]).validate(4).is_ok());
+        assert!(Epilogue::bias(vec![0.0; 3]).validate(4).is_err());
+        assert!(Epilogue::bn(vec![1.0; 4], vec![0.0; 3]).validate(4).is_err());
+        let mut ep = Epilogue::none();
+        ep.clamp = Some(6.0);
+        assert!(ep.validate(4).is_err(), "clamp without relu");
+        assert!(Epilogue::none().with_relu(Some(0.0)).validate(4).is_err());
+        assert!(Epilogue::none().with_relu(Some(6.0)).validate(4).is_ok());
+    }
+
+    #[test]
+    fn scalar_order_scale_shift_res_relu() {
+        let ep = Epilogue::bn(vec![2.0], vec![-3.0]).with_relu(Some(6.0));
+        let v = ep.view(0, 1);
+        // 4*2 - 3 = 5 -> relu -> 5; +res 4 would clamp at 6.
+        assert_eq!(v.apply(4.0, 0, None), 5.0);
+        assert_eq!(v.apply(4.0, 0, Some(4.0)), 6.0);
+        assert_eq!(v.apply(-4.0, 0, None), 0.0);
+    }
+
+    #[test]
+    fn apply_post_layouts_agree() {
+        // 2 channels, 2x2 spatial, channel-dependent scale/shift.
+        let ep = Epilogue::bn(vec![1.0, -1.0], vec![0.5, 0.25]).with_relu(None);
+        let nchw: Vec<f32> = vec![1.0, -2.0, 3.0, -4.0, 5.0, -6.0, 7.0, -8.0];
+        let res_nchw: Vec<f32> = (0..8).map(|i| i as f32 * 0.125).collect();
+        let mut ep_r = ep.clone();
+        ep_r.residual = true;
+
+        let mut a = nchw.clone();
+        apply_post(&mut a, IoLayout::Nchw, 2, 4, &ep_r, Some(&res_nchw)).unwrap();
+
+        // NHWC permutation of the same data + residual.
+        let to_nhwc = |v: &[f32]| -> Vec<f32> {
+            (0..4).flat_map(|i| (0..2).map(move |c| v[c * 4 + i])).collect()
+        };
+        let mut b = to_nhwc(&nchw);
+        let res_nhwc = to_nhwc(&res_nchw);
+        apply_post(&mut b, IoLayout::Nhwc, 2, 4, &ep_r, Some(&res_nhwc)).unwrap();
+        assert_eq!(to_nhwc(&a), b);
+
+        // Blocked c_b=2 == NHWC here (single block).
+        let mut c = to_nhwc(&nchw);
+        apply_post(&mut c, IoLayout::Blocked { c_b: 2 }, 2, 4, &ep_r, Some(&res_nhwc)).unwrap();
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn apply_post_rejects_mismatches() {
+        let mut out = vec![0.0; 8];
+        let ep = Epilogue::bias(vec![0.0; 2]);
+        assert!(apply_post(&mut out, IoLayout::Nchw, 2, 4, &ep, Some(&out.clone())).is_err());
+        let mut ep_r = ep.clone();
+        ep_r.residual = true;
+        assert!(apply_post(&mut out, IoLayout::Nchw, 2, 4, &ep_r, None).is_err());
+        let short = vec![0.0; 4];
+        assert!(apply_post(&mut out, IoLayout::Nchw, 2, 4, &ep_r, Some(&short)).is_err());
+    }
+
+    #[test]
+    fn view_offsets_channel_ranges() {
+        let ep = Epilogue::bn((0..8).map(|c| c as f32).collect(), vec![0.0; 8]);
+        let v = ep.view(4, 4);
+        assert_eq!(v.apply(1.0, 0, None), 4.0);
+        assert_eq!(v.apply(1.0, 3, None), 7.0);
+    }
+}

@@ -28,6 +28,8 @@ pub struct TileGeom {
     pub w_i: usize,
     pub stride: usize,
     pub pad: usize,
+    /// Filter-tap spacing (1 = dense).
+    pub dil: usize,
     /// Output row this tile belongs to.
     pub l: usize,
     /// First output column of the tile.
@@ -49,14 +51,14 @@ pub fn reduce_tile<const COB: usize, const TW: usize>(
     let c_ib = g.c_ib;
     let row_stride = g.w_i * c_ib;
     for n in 0..g.h_f {
-        let iy = (g.l * g.stride + n) as isize - g.pad as isize;
+        let iy = (g.l * g.stride + n * g.dil) as isize - g.pad as isize;
         if iy < 0 || iy >= g.h_i as isize {
             continue; // whole kernel row outside the image
         }
         let row = &inp[iy as usize * row_stride..][..row_stride];
         for m in 0..g.w_f {
             let kptr = &ker[(n * g.w_f + m) * c_ib * COB..][..c_ib * COB];
-            let x0 = (g.k0 * g.stride + m) as isize - g.pad as isize;
+            let x0 = (g.k0 * g.stride + m * g.dil) as isize - g.pad as isize;
             let x_last = x0 + ((TW - 1) * g.stride) as isize;
             if x0 >= 0 && x_last < g.w_i as isize {
                 // Interior fast path: every tile column valid.
@@ -280,6 +282,7 @@ mod tests {
             w_i: 4,
             stride: 1,
             pad: 0,
+            dil: 1,
             l: 0,
             k0: 0,
         };
@@ -308,6 +311,7 @@ mod tests {
             w_i: 3,
             stride: 1,
             pad: 1,
+            dil: 1,
             l: 0,
             k0: 0,
         };
@@ -319,5 +323,31 @@ mod tests {
         assert_eq!(acc[0][0], 4.0);
         assert_eq!(acc[1][0], 6.0);
         assert_eq!(acc[2][0], 4.0);
+    }
+
+    #[test]
+    fn reduce_tile_dilation_spaces_taps() {
+        // 2x2 kernel, dilation 2 over a 5x5 ramp image: taps land on
+        // (0,0),(0,2),(2,0),(2,2) for output (0,0).
+        let g = TileGeom {
+            h_f: 2,
+            w_f: 2,
+            c_ib: 1,
+            h_i: 5,
+            w_i: 5,
+            stride: 1,
+            pad: 0,
+            dil: 2,
+            l: 0,
+            k0: 0,
+        };
+        let inp: Vec<f32> = (0..25).map(|v| v as f32).collect();
+        let ker = [1.0f32, 2.0, 3.0, 4.0]; // COB = 1, taps (0,0),(0,1),(1,0),(1,1)
+        let mut acc = [[0.0f32; 1]; 2];
+        reduce_tile::<1, 2>(&mut acc, &inp, &ker, &g);
+        for k in 0..2 {
+            let want = 1.0 * inp[k] + 2.0 * inp[k + 2] + 3.0 * inp[10 + k] + 4.0 * inp[10 + k + 2];
+            assert_eq!(acc[k][0], want);
+        }
     }
 }

@@ -9,13 +9,19 @@
 //!   accumulator tile), cache blocking over input channels (`C_i,b`),
 //!   the §4 blocked layouts, and parallelism over output-channel blocks.
 //! * [`microkernel`] — the register-tile FMA kernels `direct` dispatches to.
+//! * [`depthwise`] — the depthwise (`groups == C_i == C_o`) register-tile
+//!   kernel keeping the blocked `c_b` channels as SIMD lanes.
+//! * [`epilogue`] — fused conv post-ops (bias/BN scale+shift/residual/ReLU)
+//!   applied to the accumulator tile before its final store.
 //! * [`params`] — analytical blocking-parameter selection (Low et al. 2016
 //!   style) from an [`crate::arch::Machine`] descriptor.
 //! * [`backward`] — the §6 future-work backward pass (input + kernel
 //!   gradients) with adjoint/finite-difference verification.
 
 pub mod backward;
+pub mod depthwise;
 pub mod direct;
+pub mod epilogue;
 pub mod microkernel;
 pub mod naive;
 pub mod params;
@@ -23,7 +29,10 @@ pub mod reorder;
 mod shape;
 
 pub use backward::{conv_backward_input, conv_backward_kernel};
-pub use direct::{conv_direct_blocked, conv_direct_blocked_into};
+pub use direct::{
+    conv_direct_blocked, conv_direct_blocked_ep_into, conv_direct_blocked_into,
+};
+pub use epilogue::{apply_post, EpView, Epilogue};
 pub use naive::{conv_naive, conv_naive_into};
 pub use params::select_params;
 pub use reorder::conv_reorder_into;

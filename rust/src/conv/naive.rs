@@ -11,8 +11,9 @@ use crate::tensor::Tensor;
 use crate::{Error, Result};
 
 /// Convolve `input` (`[C_i][H_i][W_i]`) with `kernel`
-/// (`[C_o][C_i][H_f][W_f]`), producing `[C_o][H_o][W_o]`.
-/// Zero padding of `shape.pad` on all four image borders.
+/// (`[C_o][C_i/groups][H_f][W_f]`), producing `[C_o][H_o][W_o]`.
+/// Zero padding of `shape.pad` on all four image borders; grouped and
+/// dilated shapes are supported (this is the oracle for those paths).
 pub fn conv_naive(input: &Tensor, kernel: &Tensor, shape: &ConvShape) -> Result<Tensor> {
     shape.validate()?;
     check_shapes(input, kernel, shape)?;
@@ -33,7 +34,8 @@ pub fn conv_naive_into(
     let (h_o, w_o) = (shape.h_o(), shape.w_o());
     let (c_i, h_i, w_i) = (shape.c_i, shape.h_i, shape.w_i);
     let (c_o, h_f, w_f) = (shape.c_o, shape.h_f, shape.w_f);
-    let (s, p) = (shape.stride, shape.pad as isize);
+    let (s, p, d) = (shape.stride, shape.pad as isize, shape.dilation);
+    let (c_ipg, c_opg) = (shape.c_i_per_group(), shape.c_o_per_group());
     if inp.len() != c_i * h_i * w_i {
         return Err(Error::Shape(format!(
             "input has {} elements, expected {}",
@@ -41,11 +43,11 @@ pub fn conv_naive_into(
             c_i * h_i * w_i
         )));
     }
-    if ker.len() != c_o * c_i * h_f * w_f {
+    if ker.len() != c_o * c_ipg * h_f * w_f {
         return Err(Error::Shape(format!(
             "kernel has {} elements, expected {}",
             ker.len(),
-            c_o * c_i * h_f * w_f
+            c_o * c_ipg * h_f * w_f
         )));
     }
     if o.len() != c_o * h_o * w_o {
@@ -58,20 +60,23 @@ pub fn conv_naive_into(
     o.fill(0.0);
 
     // Paper Algorithm 1: for i, j, k, l, m, n (plus padding guards).
-    for i in 0..c_i {
+    // Output channel j reduces over its group's input channels only;
+    // filter taps are spaced by the dilation.
+    for ii in 0..c_ipg {
         for j in 0..c_o {
+            let i = (j / c_opg) * c_ipg + ii; // absolute input channel
             for k in 0..w_o {
                 for l in 0..h_o {
                     for m in 0..w_f {
                         for n in 0..h_f {
-                            let iy = (l * s + n) as isize - p;
-                            let ix = (k * s + m) as isize - p;
+                            let iy = (l * s + n * d) as isize - p;
+                            let ix = (k * s + m * d) as isize - p;
                             if iy < 0 || iy >= h_i as isize || ix < 0 || ix >= w_i as isize {
                                 continue;
                             }
                             o[(j * h_o + l) * w_o + k] += inp
                                 [(i * h_i + iy as usize) * w_i + ix as usize]
-                                * ker[((j * c_i + i) * h_f + n) * w_f + m];
+                                * ker[((j * c_ipg + ii) * h_f + n) * w_f + m];
                         }
                     }
                 }
@@ -90,7 +95,7 @@ pub(crate) fn check_shapes(input: &Tensor, kernel: &Tensor, shape: &ConvShape) -
             want_in
         )));
     }
-    let want_k = [shape.c_o, shape.c_i, shape.h_f, shape.w_f];
+    let want_k = [shape.c_o, shape.c_i_per_group(), shape.h_f, shape.w_f];
     if kernel.shape() != want_k {
         return Err(Error::Shape(format!(
             "kernel shape {:?} != expected {:?}",
@@ -152,6 +157,47 @@ mod tests {
         assert_eq!(out.at(&[0, 0, 0]), 4.0); // corner: 2x2 taps valid
         assert_eq!(out.at(&[0, 0, 1]), 6.0); // edge: 2x3
         assert_eq!(out.at(&[0, 1, 1]), 9.0); // center: 3x3
+    }
+
+    /// Grouped conv == two independent half-channel convs, hand-checked
+    /// through the pointwise dot-product degenerate case.
+    #[test]
+    fn grouped_pointwise() {
+        let s = ConvShape::new(4, 1, 1, 2, 1, 1, 1, 0).with_groups(2);
+        let input = Tensor::from_vec(&[4, 1, 1], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        // group 0: out0 = 1*1 + 2*2 = 5; group 1: out1 = 0.5*3 + 0.5*4 = 3.5
+        let kernel = Tensor::from_vec(&[2, 2, 1, 1], vec![1.0, 2.0, 0.5, 0.5]).unwrap();
+        let out = conv_naive(&input, &kernel, &s).unwrap();
+        assert_eq!(out.data(), &[5.0, 3.5]);
+    }
+
+    /// Depthwise: each channel convolves with its own filter only.
+    #[test]
+    fn depthwise_channels_stay_separate() {
+        let s = ConvShape::new(2, 3, 3, 2, 2, 2, 1, 0).with_groups(2);
+        let mut v = vec![0.0; 18];
+        v[0] = 1.0; // channel 0 top-left
+        v[9] = 2.0; // channel 1 top-left
+        let input = Tensor::from_vec(&[2, 3, 3], v).unwrap();
+        let kernel =
+            Tensor::from_vec(&[2, 1, 2, 2], vec![1.0, 0.0, 0.0, 0.0, 3.0, 0.0, 0.0, 0.0])
+                .unwrap();
+        let out = conv_naive(&input, &kernel, &s).unwrap();
+        assert_eq!(out.at(&[0, 0, 0]), 1.0);
+        assert_eq!(out.at(&[1, 0, 0]), 6.0); // 2 * 3, no cross-channel mixing
+    }
+
+    /// Dilation 2 spreads a 2x2 kernel over a 3x3 receptive field.
+    #[test]
+    fn dilated_taps() {
+        let s = ConvShape::new(1, 3, 3, 1, 2, 2, 1, 0).with_dilation(2);
+        let input =
+            Tensor::from_vec(&[1, 3, 3], (1..=9).map(|v| v as f32).collect()).unwrap();
+        let kernel = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let out = conv_naive(&input, &kernel, &s).unwrap();
+        // Single output: corners of the 3x3 image = 1 + 3 + 7 + 9.
+        assert_eq!(out.shape(), &[1, 1, 1]);
+        assert_eq!(out.data(), &[20.0]);
     }
 
     #[test]

@@ -61,10 +61,11 @@ pub fn select_c_ib(machine: &Machine, shape: &ConvShape, c_ob: usize) -> usize {
     let budget = l1; // measured optimum: slab ~ one L1's worth (see ablation)
     let slab_per_ci = shape.h_f * shape.w_f * c_ob * 4; // bytes per input channel
     let max_cib = (budget / slab_per_ci.max(1)).max(1);
-    // largest divisor of c_i that is <= max_cib
+    // largest divisor of the per-group reduction depth that is <= max_cib
+    let c_i = shape.c_i_per_group();
     let mut best = 1;
-    for d in 1..=shape.c_i {
-        if shape.c_i % d == 0 && d <= max_cib {
+    for d in 1..=c_i {
+        if c_i % d == 0 && d <= max_cib {
             best = d;
         }
     }
@@ -72,8 +73,18 @@ pub fn select_c_ib(machine: &Machine, shape: &ConvShape, c_ob: usize) -> usize {
 }
 
 /// Full analytical parameter selection for a layer on a machine.
+///
+/// Grouped layers block each group's channel range independently, so
+/// `c_ob`/`c_ib` are chosen against the per-group counts. The depthwise
+/// fast path (`conv::depthwise`) keeps a single `c_b` lane dimension
+/// shared by input and output (`c_ob == c_ib == c_b` dividing `C`).
 pub fn select_params(machine: &Machine, shape: &ConvShape) -> BlockParams {
-    let c_ob = select_c_ob(machine, shape.c_o);
+    if shape.is_depthwise() {
+        let c_b = select_c_ob(machine, shape.c_o);
+        let w_ob = select_w_ob(machine, c_b, shape.w_o());
+        return BlockParams { c_ob: c_b, w_ob, c_ib: c_b };
+    }
+    let c_ob = select_c_ob(machine, shape.c_o_per_group());
     let w_ob = select_w_ob(machine, c_ob, shape.w_o());
     let c_ib = select_c_ib(machine, shape, c_ob);
     BlockParams { c_ob, w_ob, c_ib }
@@ -124,6 +135,26 @@ mod tests {
         let c_ib = select_c_ib(&m, &s, c_ob);
         assert_eq!(s.c_i % c_ib, 0);
         assert!(s.h_f * s.w_f * c_ib * c_ob * 4 <= m.caches[0].bytes);
+    }
+
+    #[test]
+    fn grouped_and_depthwise_selection_is_valid() {
+        let m = haswell();
+        // Depthwise: one lane dimension, c_ob == c_ib, divides C.
+        let dw = ConvShape::new(8, 32, 32, 8, 3, 3, 1, 1).with_groups(8);
+        let bp = select_params(&m, &dw);
+        assert_eq!(bp.c_ob, bp.c_ib);
+        assert_eq!(dw.c_o % bp.c_ob, 0);
+        bp.validate_for(&dw).unwrap();
+        // Grouped: per-group divisibility.
+        let g = ConvShape::new(32, 16, 16, 64, 3, 3, 1, 1).with_groups(4);
+        let bp = select_params(&m, &g);
+        bp.validate_for(&g).unwrap();
+        assert_eq!(g.c_o_per_group() % bp.c_ob, 0);
+        assert_eq!(g.c_i_per_group() % bp.c_ib, 0);
+        // Dilated dense layer still selects like the dense one.
+        let d = ConvShape::new(32, 16, 16, 32, 3, 3, 1, 2).with_dilation(2);
+        select_params(&m, &d).validate_for(&d).unwrap();
     }
 
     #[test]

@@ -6,8 +6,11 @@ use crate::{Error, Result};
 /// dimension handled by the caller / coordinator).
 ///
 /// Follows the paper's notation: input `C_i x H_i x W_i`, kernel
-/// `C_o x C_i x H_f x W_f`, output `C_o x H_o x W_o`, stride `s`,
-/// symmetric zero padding `pad`.
+/// `C_o x C_i/groups x H_f x W_f`, output `C_o x H_o x W_o`, stride `s`,
+/// symmetric zero padding `pad`. `groups` partitions the channels into
+/// independent convolutions (depthwise when `groups == c_i == c_o`);
+/// `dilation` spaces the filter taps, giving an effective extent of
+/// `(H_f - 1) * dilation + 1`. Both default to 1 under [`ConvShape::new`].
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ConvShape {
     pub c_i: usize,
@@ -18,6 +21,8 @@ pub struct ConvShape {
     pub w_f: usize,
     pub stride: usize,
     pub pad: usize,
+    pub groups: usize,
+    pub dilation: usize,
 }
 
 impl ConvShape {
@@ -32,26 +37,64 @@ impl ConvShape {
         stride: usize,
         pad: usize,
     ) -> Self {
-        ConvShape { c_i, h_i, w_i, c_o, h_f, w_f, stride, pad }
+        ConvShape { c_i, h_i, w_i, c_o, h_f, w_f, stride, pad, groups: 1, dilation: 1 }
     }
 
-    /// Output height `(H_i + 2 pad - H_f) / s + 1`.
+    /// Grouped variant (depthwise when `groups == c_i == c_o`).
+    pub fn with_groups(mut self, groups: usize) -> Self {
+        self.groups = groups;
+        self
+    }
+
+    /// Dilated variant (`dilation == 1` is the dense filter).
+    pub fn with_dilation(mut self, dilation: usize) -> Self {
+        self.dilation = dilation;
+        self
+    }
+
+    /// Effective filter height after dilation: `(H_f - 1) * d + 1`.
+    pub fn eff_h_f(&self) -> usize {
+        (self.h_f - 1) * self.dilation + 1
+    }
+
+    /// Effective filter width after dilation: `(W_f - 1) * d + 1`.
+    pub fn eff_w_f(&self) -> usize {
+        (self.w_f - 1) * self.dilation + 1
+    }
+
+    /// Input channels per group.
+    pub fn c_i_per_group(&self) -> usize {
+        self.c_i / self.groups
+    }
+
+    /// Output channels per group.
+    pub fn c_o_per_group(&self) -> usize {
+        self.c_o / self.groups
+    }
+
+    /// Depthwise = one input and one output channel per group.
+    pub fn is_depthwise(&self) -> bool {
+        self.groups > 1 && self.groups == self.c_i && self.groups == self.c_o
+    }
+
+    /// Output height `(H_i + 2 pad - eff_H_f) / s + 1`.
     pub fn h_o(&self) -> usize {
-        (self.h_i + 2 * self.pad - self.h_f) / self.stride + 1
+        (self.h_i + 2 * self.pad - self.eff_h_f()) / self.stride + 1
     }
 
-    /// Output width `(W_i + 2 pad - W_f) / s + 1`.
+    /// Output width `(W_i + 2 pad - eff_W_f) / s + 1`.
     pub fn w_o(&self) -> usize {
-        (self.w_i + 2 * self.pad - self.w_f) / self.stride + 1
+        (self.w_i + 2 * self.pad - self.eff_w_f()) / self.stride + 1
     }
 
     /// Multiply-accumulate FLOPs (2 per MAC, the convention used by the
-    /// paper's GFLOPS plots).
+    /// paper's GFLOPS plots); each output channel reduces over
+    /// `C_i/groups` input channels.
     pub fn flops(&self) -> u64 {
         2 * self.c_o as u64
             * self.h_o() as u64
             * self.w_o() as u64
-            * self.c_i as u64
+            * self.c_i_per_group() as u64
             * self.h_f as u64
             * self.w_f as u64
     }
@@ -62,7 +105,7 @@ impl ConvShape {
         4 * (self.c_i * self.h_i * self.w_i) as u64
     }
     pub fn kernel_bytes(&self) -> u64 {
-        4 * (self.c_o * self.c_i * self.h_f * self.w_f) as u64
+        4 * (self.c_o * self.c_i_per_group() * self.h_f * self.w_f) as u64
     }
     pub fn output_bytes(&self) -> u64 {
         4 * (self.c_o * self.h_o() * self.w_o()) as u64
@@ -79,20 +122,33 @@ impl ConvShape {
         if self.stride == 0 {
             return Err(Error::Shape("stride must be >= 1".into()));
         }
-        if self.h_f > self.h_i + 2 * self.pad || self.w_f > self.w_i + 2 * self.pad {
-            return Err(Error::Shape(format!(
-                "kernel {}x{} larger than padded input {}x{}",
-                self.h_f,
-                self.w_f,
-                self.h_i + 2 * self.pad,
-                self.w_i + 2 * self.pad
-            )));
+        if self.groups == 0 {
+            return Err(Error::Shape("groups must be >= 1".into()));
+        }
+        if self.dilation == 0 {
+            return Err(Error::Shape("dilation must be >= 1".into()));
         }
         if [self.c_i, self.h_i, self.w_i, self.c_o, self.h_f, self.w_f]
             .iter()
             .any(|&d| d == 0)
         {
             return Err(Error::Shape("zero dimension".into()));
+        }
+        if self.c_i % self.groups != 0 || self.c_o % self.groups != 0 {
+            return Err(Error::Shape(format!(
+                "groups={} must divide C_i={} and C_o={}",
+                self.groups, self.c_i, self.c_o
+            )));
+        }
+        if self.eff_h_f() > self.h_i + 2 * self.pad || self.eff_w_f() > self.w_i + 2 * self.pad {
+            return Err(Error::Shape(format!(
+                "effective kernel {}x{} (dilation {}) larger than padded input {}x{}",
+                self.eff_h_f(),
+                self.eff_w_f(),
+                self.dilation,
+                self.h_i + 2 * self.pad,
+                self.w_i + 2 * self.pad
+            )));
         }
         Ok(())
     }
@@ -120,21 +176,41 @@ impl BlockParams {
 
     /// Check divisibility against a layer shape (the zero-overhead layouts
     /// require exact blocking; see `conv::params::select` which always
-    /// returns divisible parameters).
+    /// returns divisible parameters). Grouped layers block each group's
+    /// channel range independently, so the per-group counts must divide;
+    /// the depthwise fast path instead requires `c_ob == c_ib` lanes that
+    /// divide the (shared) channel count.
     pub fn validate_for(&self, s: &ConvShape) -> Result<()> {
         if self.c_ob == 0 || self.w_ob == 0 || self.c_ib == 0 {
             return Err(Error::Shape("zero block parameter".into()));
         }
-        if s.c_o % self.c_ob != 0 {
+        if s.is_depthwise() {
+            if self.c_ob != self.c_ib {
+                return Err(Error::Shape(format!(
+                    "depthwise blocking needs c_ob == c_ib, got {} and {}",
+                    self.c_ob, self.c_ib
+                )));
+            }
+            if s.c_o % self.c_ob != 0 {
+                return Err(Error::Shape(format!(
+                    "c_b={} does not divide depthwise C={}",
+                    self.c_ob, s.c_o
+                )));
+            }
+            return Ok(());
+        }
+        if s.c_o_per_group() % self.c_ob != 0 {
             return Err(Error::Shape(format!(
-                "c_ob={} does not divide C_o={}",
-                self.c_ob, s.c_o
+                "c_ob={} does not divide C_o/groups={}",
+                self.c_ob,
+                s.c_o_per_group()
             )));
         }
-        if s.c_i % self.c_ib != 0 {
+        if s.c_i_per_group() % self.c_ib != 0 {
             return Err(Error::Shape(format!(
-                "c_ib={} does not divide C_i={}",
-                self.c_ib, s.c_i
+                "c_ib={} does not divide C_i/groups={}",
+                self.c_ib,
+                s.c_i_per_group()
             )));
         }
         Ok(())
@@ -188,5 +264,52 @@ mod tests {
         assert!(BlockParams::new(16, 4, 3).validate_for(&s).is_ok());
         assert!(BlockParams::new(5, 4, 3).validate_for(&s).is_err());
         assert!(BlockParams::new(16, 4, 2).validate_for(&s).is_err());
+    }
+
+    #[test]
+    fn dilation_shrinks_output() {
+        // 3x3 d=2 has effective extent 5.
+        let s = ConvShape::new(8, 16, 16, 8, 3, 3, 1, 0).with_dilation(2);
+        assert_eq!(s.eff_h_f(), 5);
+        assert_eq!(s.h_o(), 12);
+        assert_eq!(s.w_o(), 12);
+        // Same-padding dilated conv: pad = dilation for 3x3.
+        let p = ConvShape::new(8, 16, 16, 8, 3, 3, 1, 2).with_dilation(2);
+        assert_eq!(p.h_o(), 16);
+        assert!(p.validate().is_ok());
+        // Effective extent larger than padded input is rejected.
+        let bad = ConvShape::new(1, 4, 4, 1, 3, 3, 1, 0).with_dilation(2);
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn groups_divide_channels_and_scale_flops() {
+        let g = ConvShape::new(8, 8, 8, 16, 3, 3, 1, 1).with_groups(4);
+        assert!(g.validate().is_ok());
+        assert_eq!(g.c_i_per_group(), 2);
+        assert_eq!(g.c_o_per_group(), 4);
+        assert!(!g.is_depthwise());
+        let dense = ConvShape::new(8, 8, 8, 16, 3, 3, 1, 1);
+        assert_eq!(dense.flops(), 4 * g.flops());
+        assert_eq!(dense.kernel_bytes(), 4 * g.kernel_bytes());
+        assert!(ConvShape::new(8, 8, 8, 15, 3, 3, 1, 1).with_groups(4).validate().is_err());
+        assert!(ConvShape::new(6, 8, 8, 16, 3, 3, 1, 1).with_groups(4).validate().is_err());
+        assert!(ConvShape::new(8, 8, 8, 16, 3, 3, 1, 1).with_groups(0).validate().is_err());
+        assert!(ConvShape::new(8, 8, 8, 16, 3, 3, 1, 1).with_dilation(0).validate().is_err());
+    }
+
+    #[test]
+    fn depthwise_detection_and_blocking() {
+        let dw = ConvShape::new(16, 8, 8, 16, 3, 3, 1, 1).with_groups(16);
+        assert!(dw.is_depthwise());
+        assert!(dw.validate().is_ok());
+        assert!(BlockParams::new(8, 4, 8).validate_for(&dw).is_ok());
+        assert!(BlockParams::new(8, 4, 1).validate_for(&dw).is_err(), "lanes must match");
+        assert!(BlockParams::new(3, 4, 3).validate_for(&dw).is_err(), "must divide C");
+        // Grouped (non-depthwise) blocks each group's range.
+        let g = ConvShape::new(16, 8, 8, 32, 3, 3, 1, 1).with_groups(4);
+        assert!(BlockParams::new(8, 4, 4).validate_for(&g).is_ok());
+        assert!(BlockParams::new(16, 4, 4).validate_for(&g).is_err());
+        assert!(BlockParams::new(8, 4, 8).validate_for(&g).is_err());
     }
 }

@@ -6,8 +6,8 @@ use super::{check_execute_buffers, retained_over_kernel, ConvAlgo, ConvPlan};
 use crate::arch::Machine;
 use crate::conv::reorder::kernel_to_hwio;
 use crate::conv::{
-    conv_direct_blocked_into, conv_naive_into, conv_reorder_into, select_params, BlockParams,
-    ConvShape,
+    conv_direct_blocked_ep_into, conv_direct_blocked_into, conv_naive_into, conv_reorder_into,
+    select_params, BlockParams, ConvShape, Epilogue,
 };
 use crate::fftconv::FftConvPlan;
 use crate::layout::{to_blocked_kernel, IoLayout};
@@ -20,7 +20,7 @@ use crate::Result;
 
 fn check_plan_inputs(shape: &ConvShape, kernel: &Tensor) -> Result<()> {
     shape.validate()?;
-    let want = [shape.c_o, shape.c_i, shape.h_f, shape.w_f];
+    let want = [shape.c_o, shape.c_i_per_group(), shape.h_f, shape.w_f];
     if kernel.shape() != want {
         return Err(crate::Error::Shape(format!(
             "plan kernel shape {:?} != expected {:?}",
@@ -29,6 +29,14 @@ fn check_plan_inputs(shape: &ConvShape, kernel: &Tensor) -> Result<()> {
         )));
     }
     Ok(())
+}
+
+/// True for plain dense convolutions. The §2 comparator backends
+/// (`reorder`, `im2col`, `fft`, `winograd`) predate grouped/dilated
+/// support and only run those; `direct`, `direct_i8` and the `naive`
+/// oracle handle the general case.
+fn dense_only(shape: &ConvShape) -> bool {
+    shape.groups == 1 && shape.dilation == 1
 }
 
 // ---------------------------------------------------------------------
@@ -67,7 +75,10 @@ impl ConvAlgo for DirectBackend {
         check_plan_inputs(shape, kernel)?;
         let bp = select_params(machine, shape);
         bp.validate_for(shape)?;
-        let packed = to_blocked_kernel(kernel, bp.c_ob, bp.c_ib)?;
+        // Depthwise kernels have one input channel per filter, so the
+        // blocked layout collapses to `[C/c_b][H_f][W_f][c_b]` (c_ib=1).
+        let k_cib = if shape.is_depthwise() { 1 } else { bp.c_ib };
+        let packed = to_blocked_kernel(kernel, bp.c_ob, k_cib)?;
         Ok(Box::new(DirectPlan {
             shape: shape.clone(),
             bp,
@@ -102,6 +113,23 @@ impl ConvPlan for DirectPlan {
         let ker = self.kernel.data();
         conv_direct_blocked_into(input, ker, &self.shape, self.bp, self.threads, output)
     }
+    fn execute_fused_into(
+        &self,
+        input: &[f32],
+        output: &mut [f32],
+        workspace: &mut [f32],
+        ep: &Epilogue,
+        res: Option<&[f32]>,
+    ) -> Result<()> {
+        // True in-tile fusion: the epilogue runs on the register tile
+        // of the last C_i,b pass, before its store — no second sweep
+        // over the output. Bitwise identical to the trait default.
+        check_execute_buffers(&self.shape, 0, input, output, workspace)?;
+        let ker = self.kernel.data();
+        conv_direct_blocked_ep_into(
+            input, ker, &self.shape, self.bp, self.threads, output, ep, res,
+        )
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -123,7 +151,7 @@ impl ConvAlgo for ReorderBackend {
         "reorder"
     }
     fn applicable(&self, shape: &ConvShape) -> bool {
-        shape.validate().is_ok()
+        shape.validate().is_ok() && dense_only(shape)
     }
     fn plan(
         &self,
@@ -133,6 +161,9 @@ impl ConvAlgo for ReorderBackend {
         _threads: usize,
     ) -> Result<Box<dyn ConvPlan>> {
         check_plan_inputs(shape, kernel)?;
+        if !dense_only(shape) {
+            return Err(crate::Error::Shape("reorder supports only dense convs".into()));
+        }
         Ok(Box::new(ReorderPlan { shape: shape.clone(), kernel: kernel_to_hwio(kernel)? }))
     }
 }
@@ -241,7 +272,7 @@ impl ConvAlgo for Im2colBackend {
         "im2col"
     }
     fn applicable(&self, shape: &ConvShape) -> bool {
-        shape.validate().is_ok()
+        shape.validate().is_ok() && dense_only(shape)
     }
     fn plan(
         &self,
@@ -251,6 +282,9 @@ impl ConvAlgo for Im2colBackend {
         threads: usize,
     ) -> Result<Box<dyn ConvPlan>> {
         check_plan_inputs(shape, kernel)?;
+        if !dense_only(shape) {
+            return Err(crate::Error::Shape("im2col supports only dense convs".into()));
+        }
         Ok(Box::new(Im2colPlan {
             shape: shape.clone(),
             kernel: kernel.clone(),
@@ -303,7 +337,7 @@ impl ConvAlgo for FftBackend {
         "fft"
     }
     fn applicable(&self, shape: &ConvShape) -> bool {
-        shape.validate().is_ok()
+        shape.validate().is_ok() && dense_only(shape)
     }
     fn plan(
         &self,
@@ -313,6 +347,9 @@ impl ConvAlgo for FftBackend {
         _threads: usize,
     ) -> Result<Box<dyn ConvPlan>> {
         check_plan_inputs(shape, kernel)?;
+        if !dense_only(shape) {
+            return Err(crate::Error::Shape("fft supports only dense convs".into()));
+        }
         Ok(Box::new(FftPlan { inner: FftConvPlan::new(kernel, shape)? }))
     }
 }
@@ -361,7 +398,7 @@ impl ConvAlgo for WinogradBackend {
         "winograd"
     }
     fn applicable(&self, shape: &ConvShape) -> bool {
-        shape.validate().is_ok() && winograd_applicable(shape)
+        shape.validate().is_ok() && dense_only(shape) && winograd_applicable(shape)
     }
     fn plan(
         &self,
@@ -371,6 +408,9 @@ impl ConvAlgo for WinogradBackend {
         _threads: usize,
     ) -> Result<Box<dyn ConvPlan>> {
         check_plan_inputs(shape, kernel)?;
+        if !dense_only(shape) {
+            return Err(crate::Error::Shape("winograd supports only dense convs".into()));
+        }
         Ok(Box::new(WinogradPlan { shape: shape.clone(), u: transform_kernels(kernel, shape)? }))
     }
 }

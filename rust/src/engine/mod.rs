@@ -108,7 +108,7 @@ pub use registry::{BackendRegistry, BACKEND_NAMES};
 pub use serving::{NetEngine, PlanEngine};
 
 use crate::arch::Machine;
-use crate::conv::ConvShape;
+use crate::conv::{apply_post, ConvShape, Epilogue};
 use crate::layout::{from_blocked_io, nchw_to_nhwc, nhwc_to_nchw, to_blocked_io, IoLayout};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
@@ -185,6 +185,30 @@ pub trait ConvPlan: Send + Sync {
         output: &mut [f32],
         workspace: &mut [f32],
     ) -> Result<()>;
+
+    /// Execute the layer with a fused epilogue (bias / folded BN /
+    /// residual / ReLU — see [`Epilogue`]). `res`, when the epilogue
+    /// demands one, is the residual operand in [`Self::output_layout`].
+    ///
+    /// The default implementation runs [`Self::execute_into`] and then
+    /// applies the epilogue over the finished output buffer in place —
+    /// allocation-free and **bitwise identical** to in-tile fusion
+    /// (both run the same scalar tail in the same order), so every
+    /// backend is fusion-correct for free. Backends with true in-tile
+    /// fusion (`direct`, `direct_i8`) override this to skip the second
+    /// pass over the output.
+    fn execute_fused_into(
+        &self,
+        input: &[f32],
+        output: &mut [f32],
+        workspace: &mut [f32],
+        ep: &Epilogue,
+        res: Option<&[f32]>,
+    ) -> Result<()> {
+        self.execute_into(input, output, workspace)?;
+        let s = self.shape();
+        apply_post(output, self.output_layout(), s.c_o, s.h_o() * s.w_o(), ep, res)
+    }
 
     /// Pack a conventional `[C_i][H_i][W_i]` input into the plan's
     /// native input layout (allocating convenience; staging at the

@@ -99,13 +99,18 @@
 use std::collections::BTreeMap;
 use std::ops::Range;
 
-use crate::conv::ConvShape;
+use crate::conv::{ConvShape, EpView, Epilogue};
 use crate::layout::{
     blocked_io_index, nchw_to_nhwc_slice, nhwc_to_nchw_slice, pack_io_slice, unpack_io_slice,
     IoLayout,
 };
-use crate::nets::{pool_spec, Dims, GraphOp, NetGraph, NetPlans, PoolKind};
-use crate::quant::{dequantize, quantize, requantize, DType, QuantParams, Q_MAX, Q_MIN};
+use crate::nets::{
+    net_bn_params, pool_spec, BranchTag, Dims, FusedNet, GraphOp, NetGraph, NetPlans, NodeRole,
+    PoolKind,
+};
+use crate::quant::{
+    dequantize, quantize, requantize, round_half_away, DType, QuantParams, Q_MAX, Q_MIN,
+};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
@@ -127,6 +132,15 @@ fn io_index(
         IoLayout::Nchw => (c * h + y) * w + x,
         IoLayout::Nhwc => (y * w + x) * c_t + c,
         IoLayout::Blocked { c_b } => blocked_io_index(c, y, x, h, w, c_b),
+    }
+}
+
+/// Short layout spelling for staging-value names (`stage:x@b8`).
+fn layout_tag(l: IoLayout) -> String {
+    match l {
+        IoLayout::Nchw => "nchw".into(),
+        IoLayout::Nhwc => "nhwc".into(),
+        IoLayout::Blocked { c_b } => format!("b{c_b}"),
     }
 }
 
@@ -319,6 +333,87 @@ impl Adapt {
     }
 }
 
+/// One standalone elementwise pass — a [`GraphOp::Relu`] or
+/// [`GraphOp::BatchNorm`] node the fusion pass left materialized
+/// (fan-out intermediates, tails of non-conv producers). Per-channel
+/// scale/shift then ReLU/clamp, with any-to-any layout conversion fused
+/// into the same walk. The f32 path applies [`EpView::apply`] — THE
+/// scalar tail every fused path shares — so fused and unfused schedules
+/// agree **bitwise**. The i8 path folds the whole tail into one
+/// requantize (single rounding, like the conv cores):
+/// `q' = clamp(round((q - zp_s) * m_c + off_c) + zp_d, lo, hi)` with
+/// `m_c = s_src * scale[c] / s_dst` and `off_c = shift[c] / s_dst` in
+/// f64, `lo = max(zp_d, Q_MIN)` under ReLU, and `hi` from the clamp
+/// quantized into the destination scale.
+struct Eltwise {
+    c: usize,
+    h: usize,
+    w: usize,
+    src_layout: IoLayout,
+    dst_layout: IoLayout,
+    /// Per-channel multiplier / addend (empty = identity) — the
+    /// pre-folded BN parameters; empty for a plain ReLU node.
+    scale: Vec<f32>,
+    shift: Vec<f32>,
+    relu: bool,
+    clamp: Option<f32>,
+    src_qp: QuantParams,
+    dst_qp: QuantParams,
+}
+
+impl Eltwise {
+    fn apply(&self, src: &[f32], dst: &mut [f32]) {
+        debug_assert_eq!(src.len(), self.c * self.h * self.w);
+        debug_assert_eq!(dst.len(), src.len());
+        let view =
+            EpView { scale: &self.scale, shift: &self.shift, relu: self.relu, clamp: self.clamp };
+        for c in 0..self.c {
+            for y in 0..self.h {
+                for x in 0..self.w {
+                    let v = src[io_index(self.src_layout, c, y, x, self.c, self.h, self.w)];
+                    dst[io_index(self.dst_layout, c, y, x, self.c, self.h, self.w)] =
+                        view.apply(v, c, None);
+                }
+            }
+        }
+    }
+
+    /// The i8 twin: scale/shift/requantize collapse into one rounded
+    /// multiply-add per element (see the struct docs for the pinned
+    /// formula the NumPy reference mirrors).
+    fn apply_i8(&self, src: &[i8], dst: &mut [i8]) {
+        debug_assert_eq!(src.len(), self.c * self.h * self.w);
+        debug_assert_eq!(dst.len(), src.len());
+        let (szp, dzp) = (self.src_qp.zero_point, self.dst_qp.zero_point);
+        let ratio = self.src_qp.scale as f64 / self.dst_qp.scale as f64;
+        let lo = if self.relu { dzp.max(Q_MIN) } else { Q_MIN };
+        let hi = match self.clamp {
+            Some(cl) => {
+                let q = round_half_away(cl as f64 / self.dst_qp.scale as f64) as i32 + dzp;
+                q.clamp(lo, Q_MAX)
+            }
+            None => Q_MAX,
+        };
+        for c in 0..self.c {
+            let m = if self.scale.is_empty() { ratio } else { ratio * self.scale[c] as f64 };
+            let off = if self.shift.is_empty() {
+                0.0
+            } else {
+                self.shift[c] as f64 / self.dst_qp.scale as f64
+            };
+            for y in 0..self.h {
+                for x in 0..self.w {
+                    let q =
+                        src[io_index(self.src_layout, c, y, x, self.c, self.h, self.w)] as i32;
+                    let v = round_half_away((q - szp) as f64 * m + off) as i32 + dzp;
+                    dst[io_index(self.dst_layout, c, y, x, self.c, self.h, self.w)] =
+                        v.clamp(lo, hi) as i8;
+                }
+            }
+        }
+    }
+}
+
 /// NCHW reference max-pool with explicit geometry (`-inf` padding) —
 /// independent of the arena/layout machinery so tests can build
 /// branch-by-branch naive references for the inception graphs.
@@ -479,10 +574,15 @@ enum Op {
     /// Fused gather (pool / layout / concat-slice) from value `src` into
     /// channel offset `dst_c_off` of value `dst`.
     Adapt { src: usize, dst: usize, dst_c_off: usize, adapt: Adapt },
+    /// Standalone elementwise pass (an unfused `Relu` / `BatchNorm`
+    /// node) from value `src` into value `dst`.
+    Eltwise { src: usize, dst: usize, elt: Eltwise },
     /// Execute conv layer `layer` reading value `src` (already in the
     /// plan's input layout), writing value `dst` (the plan's output
-    /// layout).
-    Conv { layer: usize, src: usize, dst: usize },
+    /// layout). `ep` is the fused epilogue (identity when nothing was
+    /// fused) and `res` the fused residual operand's value, already in
+    /// the plan's output layout.
+    Conv { layer: usize, src: usize, dst: usize, ep: Epilogue, res: Option<usize> },
 }
 
 /// Execution-order grouping: serial op ranges, and parallel groups whose
@@ -558,7 +658,23 @@ impl NetRunner {
     /// Compile an explicit graph over `plans` (the graph's conv nodes
     /// index the plan table 1:1; validated).
     pub fn from_graph(plans: NetPlans, graph: NetGraph, lanes: usize) -> Result<NetRunner> {
-        Self::compile(plans, graph, lanes, DType::F32, None)
+        Self::compile(plans, graph, lanes, DType::F32, None, None)
+    }
+
+    /// Compile a **fused** schedule: the [`FusedNet`] annotation (from
+    /// [`crate::nets::fuse`]) tells the scheduler which `batch_norm` /
+    /// `add` / `relu` nodes were folded into their producing conv's
+    /// epilogue. Absorbed intermediates get no arena region and no op —
+    /// each fused conv applies the whole tail in-tile and writes its
+    /// chain tail's value directly. f32 results are **bitwise**
+    /// identical to [`NetRunner::from_graph`] on the same model.
+    pub fn from_graph_fused(
+        plans: NetPlans,
+        graph: NetGraph,
+        lanes: usize,
+        fused: &FusedNet,
+    ) -> Result<NetRunner> {
+        Self::compile(plans, graph, lanes, DType::F32, None, Some(fused))
     }
 
     /// Compile a **quantized** schedule: every conv plan must expose an
@@ -583,7 +699,32 @@ impl NetRunner {
                 graph.len()
             )));
         }
-        Self::compile(plans, graph, lanes, DType::I8, Some(node_params))
+        Self::compile(plans, graph, lanes, DType::I8, Some(node_params), None)
+    }
+
+    /// The i8 twin of [`NetRunner::from_graph_fused`]: the conv plans
+    /// must have been quantized **with** the fused epilogues baked in
+    /// ([`crate::quant::QuantNet`] built against the same [`FusedNet`]),
+    /// so each fused conv's requantize step already folds scale, shift,
+    /// residual and the quantized ReLU clamp — validated per layer at
+    /// compile (output params against the chain tail, residual params
+    /// against the shortcut edge).
+    pub fn from_graph_quant_fused(
+        plans: NetPlans,
+        graph: NetGraph,
+        lanes: usize,
+        node_params: &[QuantParams],
+        fused: &FusedNet,
+    ) -> Result<NetRunner> {
+        if node_params.len() != graph.len() {
+            return Err(Error::Shape(format!(
+                "quantized net '{}': {} node params for {} graph nodes",
+                plans.net,
+                node_params.len(),
+                graph.len()
+            )));
+        }
+        Self::compile(plans, graph, lanes, DType::I8, Some(node_params), Some(fused))
     }
 
     fn compile(
@@ -592,16 +733,30 @@ impl NetRunner {
         lanes: usize,
         dtype: DType,
         node_params: Option<&[QuantParams]>,
+        fused: Option<&FusedNet>,
     ) -> Result<NetRunner> {
         let lanes = lanes.max(1);
         if plans.layers.is_empty() {
             return Err(Error::Shape(format!("net '{}' has no planned layers", plans.net)));
+        }
+        if let Some(f) = fused {
+            if f.roles.len() != graph.len() || f.fusions.len() != plans.layers.len() {
+                return Err(Error::Shape(format!(
+                    "fused net '{}': annotation covers {} nodes / {} layers, graph has {} / {}",
+                    plans.net,
+                    f.roles.len(),
+                    f.fusions.len(),
+                    graph.len(),
+                    plans.layers.len()
+                )));
+            }
         }
         let shapes: Vec<ConvShape> = plans.layers.iter().map(|l| l.layer.shape.clone()).collect();
         let dims = graph.validate(&shapes)?;
         let mut c = Compiler::new(&plans, &graph, &dims, lanes);
         c.dtype = dtype;
         c.node_qp = node_params.map(<[QuantParams]>::to_vec);
+        c.fused = fused;
         c.emit()?;
         // Copy everything out of the compiler before `plans`/`graph`
         // move into the runner (the compiler borrows both).
@@ -886,16 +1041,21 @@ impl NetRunner {
                     let ws = &mut arena.ws[..self.max_ws];
                     for idx in range.clone() {
                         let op = &self.ops[idx];
-                        let (so, sl, dofs, dl) = self.op_regions(op);
-                        let (src, dst) = split_src_dst(&mut arena.buf, so, sl, dofs, dl);
-                        self.run_op(op, src, dst, ws)?;
+                        let (so, sl, dofs, dl, rr) = self.op_regions(op);
+                        let (src, dst, res) = split_regions(&mut arena.buf, so, sl, dofs, dl, rr);
+                        self.run_op(op, src, dst, res, ws)?;
                     }
                 }
                 Stage::Parallel(lanes_ops) => {
                     let NetArena { buf, ws, .. } = arena;
-                    run_parallel_t(self, buf, ws, self.max_ws, lanes_ops, &|op, src, dst, ws| {
-                        self.run_op(op, src, dst, ws)
-                    })?;
+                    run_parallel_t(
+                        self,
+                        buf,
+                        ws,
+                        self.max_ws,
+                        lanes_ops,
+                        &|op, src, dst, res, ws| self.run_op(op, src, dst, res, ws),
+                    )?;
                 }
             }
         }
@@ -935,16 +1095,21 @@ impl NetRunner {
                 Stage::Serial(range) => {
                     for idx in range.clone() {
                         let op = &self.ops[idx];
-                        let (so, sl, dofs, dl) = self.op_regions(op);
-                        let (src, dst) = split_src_dst(&mut arena.qbuf, so, sl, dofs, dl);
-                        self.run_op_i8(op, src, dst)?;
+                        let (so, sl, dofs, dl, rr) = self.op_regions(op);
+                        let (src, dst, res) = split_regions(&mut arena.qbuf, so, sl, dofs, dl, rr);
+                        self.run_op_i8(op, src, dst, res)?;
                     }
                 }
                 Stage::Parallel(lanes_ops) => {
                     let NetArena { qbuf, ws, .. } = arena;
-                    run_parallel_t(self, qbuf, ws, self.max_ws, lanes_ops, &|op, src, dst, _| {
-                        self.run_op_i8(op, src, dst)
-                    })?;
+                    run_parallel_t(
+                        self,
+                        qbuf,
+                        ws,
+                        self.max_ws,
+                        lanes_ops,
+                        &|op, src, dst, res, _| self.run_op_i8(op, src, dst, res),
+                    )?;
                 }
             }
         }
@@ -971,49 +1136,81 @@ impl NetRunner {
         Tensor::from_vec(&out_shape, out)
     }
 
-    /// Arena regions of one op: `(src_off, src_len, dst_off, dst_len)`.
-    fn op_regions(&self, op: &Op) -> (usize, usize, usize, usize) {
+    /// Arena regions of one op:
+    /// `(src_off, src_len, dst_off, dst_len, residual)`.
+    fn op_regions(&self, op: &Op) -> (usize, usize, usize, usize, Option<(usize, usize)>) {
         match op {
-            Op::Conv { src, dst, .. } => {
+            Op::Conv { src, dst, res, .. } => {
                 let (s, d) = (&self.values[*src], &self.values[*dst]);
-                (s.offset, s.len, d.offset, d.len)
+                let r = res.map(|r| (self.values[r].offset, self.values[r].len));
+                (s.offset, s.len, d.offset, d.len, r)
+            }
+            Op::Eltwise { src, dst, .. } => {
+                let (s, d) = (&self.values[*src], &self.values[*dst]);
+                (s.offset, s.len, d.offset, d.len, None)
             }
             Op::Adapt { src, dst, dst_c_off, adapt } => {
                 let (s, d) = (&self.values[*src], &self.values[*dst]);
                 // Concat slices land in NCHW, so a channel range is a
                 // contiguous sub-region.
                 let off = d.offset + dst_c_off * d.h * d.w;
-                (s.offset, s.len, off, adapt.dst_c * adapt.dst_h * adapt.dst_w)
+                (s.offset, s.len, off, adapt.dst_c * adapt.dst_h * adapt.dst_w, None)
             }
         }
     }
 
-    fn run_op(&self, op: &Op, src: &[f32], dst: &mut [f32], ws: &mut [f32]) -> Result<()> {
+    fn run_op(
+        &self,
+        op: &Op,
+        src: &[f32],
+        dst: &mut [f32],
+        res: Option<&[f32]>,
+        ws: &mut [f32],
+    ) -> Result<()> {
         match op {
             Op::Adapt { adapt, .. } => {
                 adapt.apply(src, dst);
                 Ok(())
             }
-            Op::Conv { layer, .. } => {
+            Op::Eltwise { elt, .. } => {
+                elt.apply(src, dst);
+                Ok(())
+            }
+            Op::Conv { layer, ep, .. } => {
                 let plan = &self.plans.layers[*layer].plan;
-                plan.execute_into(src, dst, &mut ws[..plan.workspace_len()])
+                let ws = &mut ws[..plan.workspace_len()];
+                if ep.is_none() {
+                    plan.execute_into(src, dst, ws)
+                } else {
+                    plan.execute_fused_into(src, dst, ws, ep, res)
+                }
             }
         }
     }
 
-    fn run_op_i8(&self, op: &Op, src: &[i8], dst: &mut [i8]) -> Result<()> {
+    fn run_op_i8(&self, op: &Op, src: &[i8], dst: &mut [i8], res: Option<&[i8]>) -> Result<()> {
         match op {
             Op::Adapt { adapt, .. } => {
                 adapt.apply_i8(src, dst);
                 Ok(())
             }
+            Op::Eltwise { elt, .. } => {
+                elt.apply_i8(src, dst);
+                Ok(())
+            }
             Op::Conv { layer, .. } => {
                 let plan = &self.plans.layers[*layer].plan;
                 // Presence of the i8 surface is validated at compile.
+                // Scale/shift/ReLU epilogues are baked into the plan's
+                // requantize step; only a fused residual changes the
+                // execution entry.
                 let q = plan.as_quantized().ok_or_else(|| {
                     Error::Runtime("i8 schedule holds a plan without an i8 surface".into())
                 })?;
-                q.execute_i8_into(src, dst)
+                match res {
+                    Some(r) => q.execute_i8_fused_into(src, dst, Some(r)),
+                    None => q.execute_i8_into(src, dst),
+                }
             }
         }
     }
@@ -1031,7 +1228,7 @@ fn run_parallel_t<T: Copy + Send + Sync>(
     ws_all: &mut [f32],
     max_ws: usize,
     lanes_ops: &[Vec<usize>],
-    exec: &(dyn Fn(&Op, &[T], &mut [T], &mut [f32]) -> Result<()> + Sync),
+    exec: &(dyn Fn(&Op, &[T], &mut [T], Option<&[T]>, &mut [f32]) -> Result<()> + Sync),
 ) -> Result<()> {
     let workers = runner.lanes.min(lanes_ops.len()).max(1);
     let base = ArenaPtr { ptr: buf.as_mut_ptr(), len: buf.len() };
@@ -1051,23 +1248,31 @@ fn run_parallel_t<T: Copy + Send + Sync>(
                 for lane in (w..lanes_ops.len()).step_by(workers) {
                     for &idx in &lanes_ops[lane] {
                         let op = &runner.ops[idx];
-                        let (so, sl, dofs, dl) = runner.op_regions(op);
+                        let (so, sl, dofs, dl, rr) = runner.op_regions(op);
                         debug_assert!(so + sl <= dofs || dofs + dl <= so);
                         debug_assert!(so + sl <= base.len && dofs + dl <= base.len);
+                        if let Some((ro, rl)) = rr {
+                            debug_assert!(ro + rl <= dofs || dofs + dl <= ro);
+                            debug_assert!(ro + rl <= base.len);
+                        }
                         // SAFETY: regions of concurrently executing
                         // ops are pairwise disjoint — values live at
                         // the same group time never share arena
                         // space (region allocator invariant), and
                         // concat slice writes use disjoint channel
-                        // offsets of one value. Reads may overlap
-                        // other reads only. Bounds checked above.
-                        let (src, dst) = unsafe {
+                        // offsets of one value. Reads (the source and
+                        // any fused residual) may overlap other reads
+                        // only. Bounds checked above.
+                        let (src, dst, res) = unsafe {
                             (
                                 std::slice::from_raw_parts(base.ptr.add(so), sl),
                                 std::slice::from_raw_parts_mut(base.ptr.add(dofs), dl),
+                                rr.map(|(ro, rl)| {
+                                    std::slice::from_raw_parts(base.ptr.add(ro), rl)
+                                }),
                             )
                         };
-                        exec(op, src, dst, ws)?;
+                        exec(op, src, dst, res, ws)?;
                     }
                 }
                 Ok(())
@@ -1092,22 +1297,35 @@ struct ArenaPtr<T> {
 unsafe impl<T: Send> Send for ArenaPtr<T> {}
 unsafe impl<T: Sync> Sync for ArenaPtr<T> {}
 
-/// Disjoint (read, write) views into the arena buffer (f32 or i8).
-fn split_src_dst<T>(
+/// Disjoint (read, write, fused-residual read) views into the arena
+/// buffer (f32 or i8). The write region never overlaps either read
+/// region (region-allocator liveness invariant, debug-asserted); the
+/// two read regions may alias each other freely.
+fn split_regions<T>(
     buf: &mut [T],
     so: usize,
     sl: usize,
     dofs: usize,
     dl: usize,
-) -> (&[T], &mut [T]) {
-    debug_assert!(so + sl <= dofs || dofs + dl <= so, "live regions must not alias");
-    if so < dofs {
-        let (a, b) = buf.split_at_mut(dofs);
-        (&a[so..so + sl], &mut b[..dl])
-    } else {
-        let (a, b) = buf.split_at_mut(so);
-        (&b[..sl], &mut a[dofs..dofs + dl])
+    res: Option<(usize, usize)>,
+) -> (&[T], &mut [T], Option<&[T]>) {
+    fn pick<'b, T>(head: &'b [T], tail: &'b [T], dofs: usize, dl: usize, off: usize, len: usize) -> &'b [T] {
+        if off + len <= dofs {
+            &head[off..off + len]
+        } else {
+            &tail[off - (dofs + dl)..][..len]
+        }
     }
+    debug_assert!(so + sl <= dofs || dofs + dl <= so, "live regions must not alias");
+    if let Some((ro, rl)) = res {
+        debug_assert!(ro + rl <= dofs || dofs + dl <= ro, "residual must not alias the output");
+    }
+    let (head, rest) = buf.split_at_mut(dofs);
+    let (dst, tail) = rest.split_at_mut(dl);
+    let (head, tail): (&[T], &[T]) = (head, tail);
+    let src = pick(head, tail, dofs, dl, so, sl);
+    let r = res.map(|(ro, rl)| pick(head, tail, dofs, dl, ro, rl));
+    (src, dst, r)
 }
 
 // ---------------------------------------------------------------------
@@ -1120,13 +1338,25 @@ struct Compiler<'a> {
     dims: &'a [Dims],
     values: Vec<Value>,
     ops: Vec<Op>,
-    op_tags: Vec<Option<crate::nets::BranchTag>>,
+    op_tags: Vec<Option<BranchTag>>,
     node_value: Vec<usize>,
     input_value: usize,
     output_value: usize,
     dtype: DType,
     /// Calibrated per-node activation params (i8 schedules only).
     node_qp: Option<Vec<QuantParams>>,
+    /// Fusion annotation (fused schedules only): absorbed nodes are
+    /// skipped, fused convs carry epilogues and write their tail's
+    /// value.
+    fused: Option<&'a FusedNet>,
+    /// Staging dedup (one gather per converted value, not one per
+    /// consumer): `(producer node, wanted layout) -> staging value`.
+    stage_cache: Vec<(usize, IoLayout, usize)>,
+    /// Pre-scanned staging demand: `(producer node, wanted layout,
+    /// one consumer's branch tag, demanded from >1 distinct tag)`.
+    /// Shared stages (multi-tag) run serially before the group so no
+    /// lane writes a region a sibling lane reads.
+    stage_tags: Vec<(usize, IoLayout, Option<BranchTag>, bool)>,
 }
 
 impl<'a> Compiler<'a> {
@@ -1143,6 +1373,9 @@ impl<'a> Compiler<'a> {
             output_value: 0,
             dtype: DType::F32,
             node_qp: None,
+            fused: None,
+            stage_cache: Vec::new(),
+            stage_tags: Vec::new(),
         }
     }
 
@@ -1150,16 +1383,33 @@ impl<'a> Compiler<'a> {
         self.node_qp.as_ref().map(|v| v[node]).unwrap_or(QuantParams::IDENT)
     }
 
+    /// The graph node whose *value* node `i`'s output lives in: the
+    /// chain tail for a conv that absorbed an epilogue chain, `i`
+    /// itself otherwise.
+    fn tail_of(&self, i: usize) -> usize {
+        self.fused.map_or(i, |f| f.tail[i])
+    }
+
+    /// The fused epilogue annotation of conv layer `layer` (the
+    /// all-`None` default outside fused schedules).
+    fn fusion_of(&self, layer: usize) -> crate::nets::LayerFusion {
+        self.fused.map(|f| f.fusions[layer].clone()).unwrap_or_default()
+    }
+
     /// The storage layout a node's value uses: convs write their plan's
-    /// native output layout; input/pool values adopt their single conv
-    /// consumer's native input layout (so the gather fuses the layout
-    /// conversion and the conv reads the region directly); everything
-    /// else — concat joins, multi-consumer fan-outs — lands in NCHW.
+    /// native output layout; input/pool/eltwise values adopt their
+    /// single conv consumer's native input layout (so the gather fuses
+    /// the layout conversion and the conv reads the region directly);
+    /// everything else — concat joins, multi-consumer fan-outs — lands
+    /// in NCHW.
     fn value_layout(&self, node: usize, consumers: &[Vec<usize>]) -> IoLayout {
         match self.graph.nodes[node].op {
             GraphOp::Conv { layer } => self.plans.layers[layer].plan.output_layout(),
             GraphOp::Concat | GraphOp::Add => IoLayout::Nchw,
-            GraphOp::Input { .. } | GraphOp::Pool { .. } => {
+            GraphOp::Input { .. }
+            | GraphOp::Pool { .. }
+            | GraphOp::Relu { .. }
+            | GraphOp::BatchNorm => {
                 if let [single] = consumers[node][..] {
                     if let GraphOp::Conv { layer } = self.graph.nodes[single].op {
                         return self.plans.layers[layer].plan.input_layout();
@@ -1168,6 +1418,45 @@ impl<'a> Compiler<'a> {
                 IoLayout::Nchw
             }
         }
+    }
+
+    /// The value of node `p` converted to layout `want` — the node's
+    /// own value when it already matches, else a staging value fed by
+    /// one pure layout-permutation gather. The stage is emitted once
+    /// per `(node, layout)` pair and shared by every consumer (the
+    /// cross-branch staging dedup): single-tag demand stays in its
+    /// consumer's lane, multi-tag demand runs serially before the
+    /// parallel group.
+    fn staged(&mut self, p: usize, want: IoLayout) -> usize {
+        let pv = self.node_value[p];
+        if self.values[pv].layout == want {
+            return pv;
+        }
+        if let Some(&(_, _, sv)) =
+            self.stage_cache.iter().find(|&&(n, l, _)| n == p && l == want)
+        {
+            return sv;
+        }
+        let tag = match self.stage_tags.iter().find(|(n, l, ..)| *n == p && *l == want) {
+            Some(&(_, _, t, multi)) => {
+                if multi {
+                    None
+                } else {
+                    t
+                }
+            }
+            None => None,
+        };
+        let v = &self.values[pv];
+        let (d, from, qp) = (Dims { c: v.c, h: v.h, w: v.w }, v.layout, v.qp);
+        let name = format!("stage:{}@{}", v.name, layout_tag(want));
+        let sv = self.new_value(name, d, want, qp);
+        let mut adapt = Adapt::convert(d.c, d.h, d.w, from, want);
+        adapt.src_qp = qp;
+        adapt.dst_qp = qp; // pure layout permutation
+        self.push_op(Op::Adapt { src: pv, dst: sv, dst_c_off: 0, adapt }, tag);
+        self.stage_cache.push((p, want, sv));
+        sv
     }
 
     fn new_value(&mut self, name: String, d: Dims, layout: IoLayout, qp: QuantParams) -> usize {
@@ -1186,9 +1475,21 @@ impl<'a> Compiler<'a> {
         self.values.len() - 1
     }
 
-    fn push_op(&mut self, op: Op, tag: Option<crate::nets::BranchTag>) {
+    fn push_op(&mut self, op: Op, tag: Option<BranchTag>) {
         self.ops.push(op);
         self.op_tags.push(tag);
+    }
+
+    /// Record one consumer's staging demand (see `stage_tags`).
+    fn note_demand(&mut self, p: usize, want: IoLayout, tag: Option<BranchTag>) {
+        match self.stage_tags.iter_mut().find(|(n, l, ..)| *n == p && *l == want) {
+            Some(e) => {
+                if e.2 != tag {
+                    e.3 = true;
+                }
+            }
+            None => self.stage_tags.push((p, want, tag, false)),
+        }
     }
 
     fn emit(&mut self) -> Result<()> {
@@ -1199,11 +1500,41 @@ impl<'a> Compiler<'a> {
                 consumers[p].push(i);
             }
         }
+        // Pre-scan staging demand: a conv's input (and fused residual)
+        // staging may be shared across branch lanes, and a shared stage
+        // must not run inside any single lane.
+        for n in self.graph.nodes.iter() {
+            let GraphOp::Conv { layer } = n.op else { continue };
+            let plan = &self.plans.layers[layer].plan;
+            self.note_demand(n.preds[0], plan.input_layout(), n.branch);
+            if let Some(r) = self.fusion_of(layer).res_node {
+                self.note_demand(r, plan.output_layout(), n.branch);
+            }
+        }
+        let bn_ords = self.graph.bn_ordinals();
         for i in 0..self.graph.len() {
+            // Fused schedules skip absorbed nodes entirely: the owning
+            // conv writes the chain tail's value and intermediates never
+            // materialize. Mapping an absorbed node onto the conv's
+            // value keeps `node_value` total — intermediates are never
+            // referenced by later nodes (single-consumer invariant), and
+            // tails resolve to exactly the value the conv writes.
+            if let Some(f) = self.fused {
+                if let NodeRole::Absorbed { into } = f.roles[i] {
+                    self.node_value[i] = self.node_value[into];
+                    continue;
+                }
+            }
             let layout = self.value_layout(i, &consumers);
             let node = &self.graph.nodes[i];
-            let node_qp = self.qp_of_node(i);
-            let v = self.new_value(node.name.clone(), self.dims[i], layout, node_qp);
+            // A fused conv's value is its chain tail's: tail name, tail
+            // dims (identical — the absorbed ops are shape-preserving)
+            // and, in i8 schedules, the tail edge's calibrated params
+            // (the target of the fused requantize).
+            let t = self.tail_of(i);
+            let node_qp = self.qp_of_node(t);
+            let v =
+                self.new_value(self.graph.nodes[t].name.clone(), self.dims[t], layout, node_qp);
             self.node_value[i] = v;
             match &node.op {
                 GraphOp::Input { .. } => {
@@ -1213,6 +1544,9 @@ impl<'a> Compiler<'a> {
                     let p = node.preds[0];
                     let pv = self.node_value[p];
                     let plan = &self.plans.layers[*layer].plan;
+                    let fusion = self.fusion_of(*layer);
+                    let ep = fusion.epilogue(self.dims[t].c);
+                    ep.validate(self.dims[t].c)?;
                     if self.dtype == DType::I8 {
                         // A quantized schedule can only drive plans that
                         // expose the i8 surface, and the plan's params
@@ -1242,26 +1576,22 @@ impl<'a> Compiler<'a> {
                                 self.plans.net, node.name
                             )));
                         }
+                        let want_res =
+                            fusion.res_node.map(|r| self.values[self.node_value[r]].qp);
+                        if q.residual_qparams() != want_res {
+                            return Err(Error::Shape(format!(
+                                "i8 net '{}': layer '{}' was quantized with a different fused \
+                                 residual than the schedule (rebuild the QuantNet against the \
+                                 same fusion annotation)",
+                                self.plans.net, node.name
+                            )));
+                        }
                     }
-                    let want = plan.input_layout();
-                    let src = if self.values[pv].layout == want {
-                        pv // §4 zero-repacking chain: read the region directly
-                    } else {
-                        let pd = self.dims[p];
-                        let src_qp = self.values[pv].qp;
-                        let stage =
-                            self.new_value(format!("stage:{}", node.name), pd, want, src_qp);
-                        let mut adapt =
-                            Adapt::convert(pd.c, pd.h, pd.w, self.values[pv].layout, want);
-                        adapt.src_qp = src_qp;
-                        adapt.dst_qp = src_qp; // pure layout permutation
-                        self.push_op(
-                            Op::Adapt { src: pv, dst: stage, dst_c_off: 0, adapt },
-                            node.branch,
-                        );
-                        stage
-                    };
-                    self.push_op(Op::Conv { layer: *layer, src, dst: v }, node.branch);
+                    // §4 zero-repacking chain: `staged` returns the
+                    // region directly when the layout already matches.
+                    let src = self.staged(p, plan.input_layout());
+                    let res = fusion.res_node.map(|r| self.staged(r, plan.output_layout()));
+                    self.push_op(Op::Conv { layer: *layer, src, dst: v, ep, res }, node.branch);
                 }
                 GraphOp::Pool { kind, kh, kw, sh, sw, ph, pw } => {
                     let p = node.preds[0];
@@ -1356,6 +1686,51 @@ impl<'a> Compiler<'a> {
                         );
                     }
                 }
+                GraphOp::Relu { clamp } => {
+                    // Standalone activation — only reached when the pass
+                    // could not fold it into a conv (fan-out, misorder).
+                    let p = node.preds[0];
+                    let pv = self.node_value[p];
+                    let d = self.dims[i];
+                    let elt = Eltwise {
+                        c: d.c,
+                        h: d.h,
+                        w: d.w,
+                        src_layout: self.values[pv].layout,
+                        dst_layout: self.values[v].layout,
+                        scale: Vec::new(),
+                        shift: Vec::new(),
+                        relu: true,
+                        clamp: *clamp,
+                        src_qp: self.values[pv].qp,
+                        dst_qp: node_qp,
+                    };
+                    self.push_op(Op::Eltwise { src: pv, dst: v, elt }, node.branch);
+                }
+                GraphOp::BatchNorm => {
+                    // Inference-mode BN is a per-channel affine; the
+                    // folded parameters are the net's deterministic
+                    // fixtures (shared with the golden generator).
+                    let p = node.preds[0];
+                    let pv = self.node_value[p];
+                    let d = self.dims[i];
+                    let ord = bn_ords[i].expect("BatchNorm node has an ordinal");
+                    let (scale, shift) = net_bn_params(ord, d.c);
+                    let elt = Eltwise {
+                        c: d.c,
+                        h: d.h,
+                        w: d.w,
+                        src_layout: self.values[pv].layout,
+                        dst_layout: self.values[v].layout,
+                        scale,
+                        shift,
+                        relu: false,
+                        clamp: None,
+                        src_qp: self.values[pv].qp,
+                        dst_qp: node_qp,
+                    };
+                    self.push_op(Op::Eltwise { src: pv, dst: v, elt }, node.branch);
+                }
             }
         }
         self.output_value = self.node_value[self.graph.output()];
@@ -1436,7 +1811,15 @@ fn compute_lifetimes(
         let t = t_of_op[idx];
         let (src, dst) = match op {
             Op::Adapt { src, dst, .. } => (*src, *dst),
-            Op::Conv { src, dst, .. } => (*src, *dst),
+            Op::Eltwise { src, dst, .. } => (*src, *dst),
+            Op::Conv { src, dst, res, .. } => {
+                // A fused residual is a third read operand — it must
+                // stay live to the conv that consumes it.
+                if let Some(r) = *res {
+                    values[r].last_t = values[r].last_t.max(t);
+                }
+                (*src, *dst)
+            }
         };
         values[src].last_t = values[src].last_t.max(t);
         // A value stays live from its first writer on.
@@ -1761,8 +2144,38 @@ mod tests {
         assert!(add_nchw(&a, &Tensor::zeros(&[2, 2, 3])).is_err());
     }
 
-    /// Two-block residual micro-net (the `resnet_micro` topology) via
-    /// the builder; direct backend.
+    /// NCHW reference of a standalone BN node: the shared deterministic
+    /// per-channel affine, applied as two separately-rounded f32 ops —
+    /// exactly the [`EpView::apply`] order.
+    fn bn_nchw(x: &Tensor, ord: usize) -> Tensor {
+        let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+        let (scale, shift) = crate::nets::net_bn_params(ord, c);
+        let mut d = x.data().to_vec();
+        for ci in 0..c {
+            for i in 0..h * w {
+                let v = &mut d[ci * h * w + i];
+                *v *= scale[ci];
+                *v += shift[ci];
+            }
+        }
+        Tensor::from_vec(&[c, h, w], d).unwrap()
+    }
+
+    /// NCHW reference of a standalone ReLU node (optional upper clamp).
+    fn relu_nchw(x: &Tensor, clamp: Option<f32>) -> Tensor {
+        let mut d = x.data().to_vec();
+        for v in &mut d {
+            *v = v.max(0.0);
+            if let Some(cl) = clamp {
+                *v = v.min(cl);
+            }
+        }
+        Tensor::from_vec(x.shape(), d).unwrap()
+    }
+
+    /// Two-block residual micro-net (the `resnet_micro` topology, with
+    /// its BN + ReLU interludes) via the builder; direct backend,
+    /// unfused schedule.
     #[test]
     fn residual_add_forward_matches_naive_reference() {
         use crate::nets::builder::resnet_micro;
@@ -1777,11 +2190,104 @@ mod tests {
         let got = runner.forward(&input).unwrap();
 
         let conv = |x: &Tensor, i: usize| conv_naive(x, &kernels[i], &model.shapes[i]).unwrap();
-        let stem = conv(&input, 0);
-        let j1 = add_nchw(&stem, &conv(&conv(&stem, 1), 2)).unwrap();
-        let j2 = add_nchw(&j1, &conv(&conv(&j1, 3), 4)).unwrap();
+        let stem = relu_nchw(&bn_nchw(&conv(&input, 0), 0), None);
+        let b2 = bn_nchw(&conv(&relu_nchw(&bn_nchw(&conv(&stem, 1), 1), None), 2), 2);
+        let j1 = relu_nchw(&add_nchw(&stem, &b2).unwrap(), None);
+        let b4 = bn_nchw(&conv(&relu_nchw(&bn_nchw(&conv(&j1, 3), 3), None), 4), 4);
+        let j2 = relu_nchw(&add_nchw(&j1, &b4).unwrap(), None);
         let want = conv(&pool_nchw(&j2, 2, 2, 2, 2, 0, 0).unwrap(), 5);
         assert_eq!(got.shape(), want.shape());
+        assert!(got.allclose(&want, 1e-3, 1e-3), "diverged: {}", got.max_abs_diff(&want));
+    }
+
+    /// The tentpole parity claim: the fused schedule (epilogues folded
+    /// into the conv cores, intermediates never materialized) is
+    /// **bitwise** identical to the unfused schedule on the residual
+    /// net — same accumulator bits, same scalar epilogue order, and
+    /// IEEE addition commutes across the two residual operand orders.
+    #[test]
+    fn fused_schedule_matches_unfused_bitwise_with_zero_overhead() {
+        use crate::nets::{builder::resnet_micro, fuse};
+        let model = resnet_micro();
+        let fused = fuse(&model).unwrap();
+        assert!(
+            fused.report.merges.iter().any(|m| m.kind == "conv+bn+relu"),
+            "resnet_micro must fuse a conv+bn+relu chain"
+        );
+        assert!(
+            fused.report.merges.iter().any(|m| m.kind == "conv+bn+add+relu"),
+            "resnet_micro must fuse a conv+bn+add+relu chain"
+        );
+        let mk = || NetPlans::build_model(&model, "direct", &haswell(), 1).unwrap();
+        let unfused = NetRunner::from_graph(mk(), model.graph.clone(), 1).unwrap();
+        let fr = NetRunner::from_graph_fused(mk(), model.graph.clone(), 1, &fused).unwrap();
+        assert_eq!(fr.overhead_bytes(), 0, "fused residual net must stay zero-overhead");
+        assert!(
+            fr.ops.len() < unfused.ops.len(),
+            "fusion must shrink the schedule ({} !< {})",
+            fr.ops.len(),
+            unfused.ops.len()
+        );
+        let input = Tensor::random(&[3, 32, 32], 0xF05E);
+        let a = unfused.forward(&input).unwrap();
+        let b = fr.forward(&input).unwrap();
+        assert_eq!(a.data(), b.data(), "fusion must not change a single bit");
+    }
+
+    /// Depthwise + dilated micro-net through the fused pipeline against
+    /// the NCHW naive reference (grouped/dilated `conv_naive`).
+    #[test]
+    fn mobilenet_micro_fused_forward_matches_reference() {
+        use crate::nets::{builder::mobilenet_micro, fuse};
+        let model = mobilenet_micro();
+        let fused = fuse(&model).unwrap();
+        let plans = NetPlans::build_model(&model, "direct", &haswell(), 1).unwrap();
+        let kernels: Vec<Tensor> =
+            model.shapes.iter().enumerate().map(|(i, s)| crate::nets::net_kernel(i, s)).collect();
+        let runner = NetRunner::from_graph_fused(plans, model.graph.clone(), 1, &fused).unwrap();
+        assert_eq!(runner.overhead_bytes(), 0, "fused depthwise net must stay zero-overhead");
+
+        let input = Tensor::random(&[3, 16, 16], 0x30B);
+        let got = runner.forward(&input).unwrap();
+
+        let conv = |x: &Tensor, i: usize| conv_naive(x, &kernels[i], &model.shapes[i]).unwrap();
+        let r6 = |x: &Tensor| relu_nchw(x, Some(6.0));
+        let mut x = input.clone();
+        for i in 0..5 {
+            x = r6(&bn_nchw(&conv(&x, i), i));
+        }
+        let want = relu_nchw(&conv(&x, 5), None);
+        assert_eq!(got.shape(), want.shape());
+        assert!(got.allclose(&want, 1e-3, 1e-3), "diverged: {}", got.max_abs_diff(&want));
+    }
+
+    /// Cross-branch staging dedup: one value demanded in the same
+    /// converted layout by two convs is gathered ONCE, and the shared
+    /// stage never runs inside a single branch lane.
+    #[test]
+    fn shared_layout_staging_is_gathered_once() {
+        use crate::nets::builder::GraphBuilder;
+        let mut b = GraphBuilder::new("fanout");
+        let x = b.input(8, 8, 8).unwrap();
+        let a = b.conv("a", x, 8, 3, 1, 1).unwrap();
+        let c = b.conv("b", x, 8, 3, 1, 1).unwrap();
+        let j = b.add("j", &[a, c]).unwrap();
+        let model = b.build(j).unwrap();
+        let plans = NetPlans::build_model(&model, "direct", &haswell(), 1).unwrap();
+        let kernels: Vec<Tensor> =
+            model.shapes.iter().enumerate().map(|(i, s)| crate::nets::net_kernel(i, s)).collect();
+        let runner = NetRunner::from_graph(plans, model.graph.clone(), 1).unwrap();
+        let stages: Vec<_> = runner
+            .arena_regions()
+            .into_iter()
+            .filter(|r| r.name.starts_with("stage:"))
+            .collect();
+        assert_eq!(stages.len(), 1, "both convs must share one staged gather: {stages:?}");
+
+        let input = Tensor::random(&[8, 8, 8], 0xFA0);
+        let got = runner.forward(&input).unwrap();
+        let conv = |x: &Tensor, i: usize| conv_naive(x, &kernels[i], &model.shapes[i]).unwrap();
+        let want = add_nchw(&conv(&input, 0), &conv(&input, 1)).unwrap();
         assert!(got.allclose(&want, 1e-3, 1e-3), "diverged: {}", got.max_abs_diff(&want));
     }
 

@@ -82,6 +82,17 @@ impl BackendRegistry {
     /// in). Degenerate channel counts fall back to `winograd` where
     /// eligible, else `im2col` — the robust baselines.
     pub fn auto(&self, shape: &ConvShape, machine: &Machine) -> &dyn ConvAlgo {
+        if shape.groups != 1 || shape.dilation != 1 {
+            // Grouped / depthwise / dilated layers: `direct` is the only
+            // fast f32 backend that runs them (the comparators are
+            // dense-only; `select_params` always finds a dividing block,
+            // down to c_ob = 1), falling back to the oracle.
+            return self
+                .get("direct")
+                .or_else(|| self.get("naive"))
+                .or_else(|| self.backends.first().map(|b| b.as_ref()))
+                .expect("registry is empty");
+        }
         if select_c_ob(machine, shape.c_o) >= machine.n_vec {
             if let Some(b) = self.get("direct") {
                 return b;

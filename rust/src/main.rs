@@ -281,7 +281,7 @@ impl NetSource {
             NetSource::Table(net) => nets::model_by_name(&net).unwrap_or_else(|| {
                 eprintln!(
                     "--dtype i8 plans over the model graph; unknown net '{net}' \
-                     (alexnet|googlenet|vgg16|resnet_micro or --model path.json)"
+                     (alexnet|googlenet|vgg16|resnet_micro|mobilenet_micro or --model path.json)"
                 );
                 std::process::exit(1);
             }),
@@ -335,11 +335,22 @@ impl NetSource {
     }
 
     /// Compile the planned net with this source's graph (the canonical
-    /// table graph, or the model's own).
-    fn runner(self, plans: NetPlans, lanes: usize) -> dconv::Result<NetRunner> {
+    /// table graph, or the model's own). Model sources run the fusion
+    /// pass and compile the fused schedule — bitwise identical to the
+    /// unfused one in f32 — handing back the audit report.
+    fn runner(
+        self,
+        plans: NetPlans,
+        lanes: usize,
+    ) -> dconv::Result<(NetRunner, Option<nets::FusionReport>)> {
         match self {
-            NetSource::Table(_) => NetRunner::with_branch_lanes(plans, lanes),
-            NetSource::Model(model) => NetRunner::from_graph(plans, model.graph, lanes),
+            NetSource::Table(_) => Ok((NetRunner::with_branch_lanes(plans, lanes)?, None)),
+            NetSource::Model(model) => {
+                let fused = nets::fuse(&model)?;
+                let report = fused.report.clone();
+                let runner = NetRunner::from_graph_fused(plans, model.graph, lanes, &fused)?;
+                Ok((runner, Some(report)))
+            }
         }
     }
 }
@@ -408,17 +419,22 @@ fn plan_net(args: &Args) {
         println!("zero memory overhead across the whole network ✓ (the paper's claim)");
     }
     match source.runner(plans, 1) {
-        Ok(r) => println!(
-            "NetRunner graph: {} nodes / {} conv layers, {} arena regions; liveness-sized \
-             activation arena {} floats (= max live-set: {}) + {} B shared workspace; the \
-             whole-network forward allocates nothing after planning",
-            r.graph().len(),
-            r.layers(),
-            r.arena_regions().len(),
-            r.arena_floats(),
-            if r.arena_floats() == r.max_live_floats() { "yes" } else { "no" },
-            r.workspace_bytes()
-        ),
+        Ok((r, report)) => {
+            if let Some(rep) = report {
+                println!("\n{rep}");
+            }
+            println!(
+                "NetRunner graph: {} nodes / {} conv layers, {} arena regions; liveness-sized \
+                 activation arena {} floats (= max live-set: {}) + {} B shared workspace; the \
+                 whole-network forward allocates nothing after planning",
+                r.graph().len(),
+                r.layers(),
+                r.arena_regions().len(),
+                r.arena_floats(),
+                if r.arena_floats() == r.max_live_floats() { "yes" } else { "no" },
+                r.workspace_bytes()
+            )
+        }
         Err(e) => println!("NetRunner: net is not graph-executable ({e})"),
     }
 }
@@ -432,11 +448,15 @@ fn plan_net_i8(args: &Args, source: NetSource, m: &Machine) {
         println!("note: --autotune measures f32 plans and is ignored with --dtype i8");
     }
     let model = source.into_model();
+    let fused = match nets::fuse(&model) {
+        Ok(f) => f,
+        Err(e) => die(e),
+    };
     println!(
         "calibrating {} activation ranges from a sample batch (seed {CALIBRATION_SEED:#x}) ...",
         model.name
     );
-    let (q, secs) = time_it(|| match QuantNet::build_model(&model, m, threads) {
+    let (q, secs) = time_it(|| match QuantNet::build_model_fused(&model, &fused, m, threads) {
         Ok(q) => q,
         Err(e) => die(e),
     });
@@ -479,7 +499,8 @@ fn plan_net_i8(args: &Args, source: NetSource, m: &Machine) {
         .iter()
         .map(|l| l.plan.as_quantized().expect("direct_i8").weight_bytes())
         .sum();
-    let runner = match q.runner(1) {
+    println!("\n{}", fused.report);
+    let runner = match q.runner_fused(1, &fused) {
         Ok(r) => r,
         Err(e) => die(e),
     };

@@ -3,8 +3,9 @@
 //! Until this module existed, the zero-memory-overhead executor was only
 //! reachable through three hardcoded shape tables; defining a new
 //! network meant editing library internals. The builder opens the graph
-//! IR: any CNN over the supported node set (conv / max-pool / channel
-//! concat / residual add) can be described as a short validated program
+//! IR: any CNN over the supported node set (conv — dense, grouped,
+//! depthwise or dilated — / max-pool / channel concat / residual add /
+//! ReLU / batch-norm) can be described as a short validated program
 //! and handed straight to [`super::NetPlans::build_model`] and
 //! [`crate::engine::NetRunner`] — planned once, served allocation-free.
 //!
@@ -154,6 +155,44 @@ impl GraphBuilder {
         self.conv_with(name, pred, shape)
     }
 
+    /// Grouped and/or dilated square-kernel convolution: `groups` must
+    /// divide both the inferred input channels and `c_o`; `dilation`
+    /// spreads the kernel taps (effective extent
+    /// `(k-1)*dilation + 1`). `groups == 1, dilation == 1` is
+    /// [`GraphBuilder::conv`].
+    #[allow(clippy::too_many_arguments)] // the conv geometry tuple
+    pub fn conv_opts(
+        &mut self,
+        name: &str,
+        pred: NodeId,
+        c_o: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+        dilation: usize,
+    ) -> Result<NodeId> {
+        let d = self.check_pred(name, pred)?;
+        let shape = ConvShape::new(d.c, d.h, d.w, c_o, k, k, stride, pad)
+            .with_groups(groups)
+            .with_dilation(dilation);
+        self.conv_with(name, pred, shape)
+    }
+
+    /// Depthwise convolution: one `k x k` filter per channel
+    /// (`groups == c_i == c_o`, inferred from `pred`).
+    pub fn depthwise(
+        &mut self,
+        name: &str,
+        pred: NodeId,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Result<NodeId> {
+        let d = self.check_pred(name, pred)?;
+        self.conv_opts(name, pred, d.c, k, stride, pad, d.c, 1)
+    }
+
     /// Convolution from an explicit [`ConvShape`] (the shape-table entry
     /// points use this); its declared input must match `pred`'s output
     /// exactly.
@@ -301,6 +340,26 @@ impl GraphBuilder {
         self.push(name, GraphOp::Add, preds, first)
     }
 
+    /// Elementwise ReLU (`max(0, x)`), optionally clamped above
+    /// (ReLU6-style: pass `Some(6.0)`). Dims pass through.
+    pub fn relu(&mut self, name: &str, pred: NodeId, clamp: Option<f32>) -> Result<NodeId> {
+        let d = self.check_pred(name, pred)?;
+        if let Some(c) = clamp {
+            if !c.is_finite() || c <= 0.0 {
+                return Err(self.err(format!("relu '{name}': clamp {c} must be finite and > 0")));
+            }
+        }
+        self.push(name, GraphOp::Relu { clamp }, vec![pred.0], d)
+    }
+
+    /// Per-channel batch normalization, pre-folded to scale/shift form.
+    /// Parameters are deterministic ([`super::net_bn_params`], seeded by
+    /// the node's BatchNorm ordinal), like the synthetic conv weights.
+    pub fn batch_norm(&mut self, name: &str, pred: NodeId) -> Result<NodeId> {
+        let d = self.check_pred(name, pred)?;
+        self.push(name, GraphOp::BatchNorm, vec![pred.0], d)
+    }
+
     /// Tag subsequently added nodes as `lane` of fan-out group `group`
     /// (lanes of one group must be mutually independent and may execute
     /// on concurrent threads). Clear with [`GraphBuilder::backbone`].
@@ -429,25 +488,65 @@ pub fn googlenet() -> Model {
     build().expect("googlenet builder program is statically valid")
 }
 
-/// A ResNet-style micro-net with two residual [`GraphOp::Add`] joins —
-/// the committed example model (`examples/models/resnet_micro.json` is
+/// A ResNet-style micro-net with two residual [`GraphOp::Add`] joins
+/// and real conv→BN→ReLU / conv→BN→Add→ReLU block structure — the
+/// committed example model (`examples/models/resnet_micro.json` is
 /// this program's JSON serialization, golden-pinned in `net_golden`).
+/// The `nets::fuse` pass folds every BN/ReLU/Add of this net into its
+/// producing conv's epilogue (see its tests).
 pub fn resnet_micro() -> Model {
     let build = || -> Result<Model> {
         let mut b = GraphBuilder::new("resnet_micro");
         let x = b.input(3, 32, 32)?;
-        let stem = b.conv("conv0", x, 16, 3, 1, 1)?;
+        let c0 = b.conv("conv0", x, 16, 3, 1, 1)?;
+        let b0 = b.batch_norm("bn0", c0)?;
+        let stem = b.relu("relu0", b0, None)?;
         let c1 = b.conv("conv1", stem, 16, 3, 1, 1)?;
-        let c2 = b.conv("conv2", c1, 16, 3, 1, 1)?;
-        let j1 = b.add("add1", &[stem, c2])?;
-        let c3 = b.conv("conv3", j1, 16, 3, 1, 1)?;
-        let c4 = b.conv("conv4", c3, 16, 3, 1, 1)?;
-        let j2 = b.add("add2", &[j1, c4])?;
-        let p = b.pool("pool", j2, 2, 2, 0)?;
+        let b1 = b.batch_norm("bn1", c1)?;
+        let r1 = b.relu("relu1", b1, None)?;
+        let c2 = b.conv("conv2", r1, 16, 3, 1, 1)?;
+        let b2 = b.batch_norm("bn2", c2)?;
+        let j1 = b.add("add1", &[stem, b2])?;
+        let rj1 = b.relu("relu_add1", j1, None)?;
+        let c3 = b.conv("conv3", rj1, 16, 3, 1, 1)?;
+        let b3 = b.batch_norm("bn3", c3)?;
+        let r3 = b.relu("relu3", b3, None)?;
+        let c4 = b.conv("conv4", r3, 16, 3, 1, 1)?;
+        let b4 = b.batch_norm("bn4", c4)?;
+        let j2 = b.add("add2", &[rj1, b4])?;
+        let rj2 = b.relu("relu_add2", j2, None)?;
+        let p = b.pool("pool", rj2, 2, 2, 0)?;
         let out = b.conv("conv5", p, 32, 3, 1, 1)?;
         b.build(out)
     };
     build().expect("resnet_micro builder program is statically valid")
+}
+
+/// A MobileNet-style micro-net: conv stem plus two depthwise-separable
+/// blocks (depthwise 3x3 + pointwise 1x1, each BN + ReLU6) and a
+/// dilated 3x3 head — the committed example model
+/// (`examples/models/mobilenet_micro.json`), exercising grouped,
+/// depthwise and dilated convolution through the fused pipeline.
+pub fn mobilenet_micro() -> Model {
+    let build = || -> Result<Model> {
+        let mut b = GraphBuilder::new("mobilenet_micro");
+        let x = b.input(3, 16, 16)?;
+        let c0 = b.conv("conv0", x, 8, 3, 1, 1)?;
+        let b0 = b.batch_norm("bn0", c0)?;
+        let mut x = b.relu("relu0", b0, Some(6.0))?;
+        for (i, (c_o, stride)) in [(16usize, 1usize), (32, 2)].iter().enumerate() {
+            let dw = b.depthwise(&format!("dw{i}"), x, 3, *stride, 1)?;
+            let dbn = b.batch_norm(&format!("dw{i}_bn"), dw)?;
+            let dr = b.relu(&format!("dw{i}_relu"), dbn, Some(6.0))?;
+            let pw = b.conv(&format!("pw{i}"), dr, *c_o, 1, 1, 0)?;
+            let pbn = b.batch_norm(&format!("pw{i}_bn"), pw)?;
+            x = b.relu(&format!("pw{i}_relu"), pbn, Some(6.0))?;
+        }
+        let hd = b.conv_opts("head", x, 32, 3, 1, 2, 1, 2)?;
+        let out = b.relu("head_relu", hd, None)?;
+        b.build(out)
+    };
+    build().expect("mobilenet_micro builder program is statically valid")
 }
 
 /// Built-in builder-program models by name. The CLI's `plan-net`/`serve
@@ -460,6 +559,7 @@ pub fn model_by_name(net: &str) -> Option<Model> {
         "googlenet" => Some(googlenet()),
         "vgg16" | "vgg" => Some(vgg16()),
         "resnet_micro" => Some(resnet_micro()),
+        "mobilenet_micro" => Some(mobilenet_micro()),
         _ => None,
     }
 }
@@ -581,6 +681,71 @@ mod tests {
         assert_eq!((out.c, out.h, out.w), (32, 16, 16));
         let adds = m.graph.nodes.iter().filter(|n| matches!(n.op, GraphOp::Add)).count();
         assert_eq!(adds, 2);
+        let bns =
+            m.graph.nodes.iter().filter(|n| matches!(n.op, GraphOp::BatchNorm)).count();
+        assert_eq!(bns, 5, "one BN per residual-block conv");
+        let relus =
+            m.graph.nodes.iter().filter(|n| matches!(n.op, GraphOp::Relu { .. })).count();
+        assert_eq!(relus, 5);
+    }
+
+    #[test]
+    fn mobilenet_micro_has_depthwise_and_dilated_layers() {
+        let m = mobilenet_micro();
+        assert_eq!(m.shapes.len(), 6);
+        // dw0: depthwise 3x3 over the 8-channel stem output.
+        assert_eq!((m.shapes[1].groups, m.shapes[1].c_o), (8, 8));
+        assert!(m.shapes[1].is_depthwise());
+        // dw1: stride-2 depthwise over 16 channels.
+        assert_eq!((m.shapes[3].groups, m.shapes[3].stride), (16, 2));
+        // head: dilated dense 3x3, pad 2 keeps 8x8 spatial.
+        assert_eq!(m.shapes[5].dilation, 2);
+        let dims = m.validate().unwrap();
+        let out = dims[m.graph.output()];
+        assert_eq!((out.c, out.h, out.w), (32, 8, 8));
+        // Every ReLU except the head carries the ReLU6 clamp.
+        let clamps: Vec<Option<f32>> = m
+            .graph
+            .nodes
+            .iter()
+            .filter_map(|n| match n.op {
+                GraphOp::Relu { clamp } => Some(clamp),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(clamps.len(), 6);
+        assert_eq!(clamps[5], None);
+        assert!(clamps[..5].iter().all(|c| *c == Some(6.0)));
+    }
+
+    #[test]
+    fn builder_rejects_invalid_groups_and_dilation() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input(6, 8, 8).unwrap();
+        // groups must divide both channel counts...
+        assert!(b.conv_opts("g4", x, 8, 3, 1, 1, 4, 1).is_err(), "4 does not divide 6");
+        assert!(b.conv_opts("g6", x, 8, 3, 1, 1, 6, 1).is_err(), "6 does not divide c_o=8");
+        // ...and be nonzero.
+        assert!(b.conv_opts("g0", x, 6, 3, 1, 1, 0, 1).is_err(), "zero groups");
+        // Dilation 0 is meaningless; huge dilation exceeds the padded input.
+        assert!(b.conv_opts("d0", x, 6, 3, 1, 1, 1, 0).is_err(), "zero dilation");
+        assert!(b.conv_opts("d9", x, 6, 3, 1, 1, 1, 9).is_err(), "dilated kernel too large");
+        // The valid depthwise convenience still works on the same node.
+        let dw = b.depthwise("dw", x, 3, 1, 1).unwrap();
+        assert_eq!(b.dims_of(dw), Dims { c: 6, h: 8, w: 8 });
+    }
+
+    #[test]
+    fn builder_rejects_bad_relu_clamp() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input(4, 8, 8).unwrap();
+        assert!(b.relu("r_neg", x, Some(-1.0)).is_err(), "negative clamp");
+        assert!(b.relu("r_zero", x, Some(0.0)).is_err(), "zero clamp");
+        assert!(b.relu("r_nan", x, Some(f32::NAN)).is_err(), "NaN clamp");
+        let r = b.relu("r", x, Some(6.0)).unwrap();
+        assert_eq!(b.dims_of(r), Dims { c: 4, h: 8, w: 8 });
+        let bn = b.batch_norm("bn", r).unwrap();
+        assert_eq!(b.dims_of(bn), Dims { c: 4, h: 8, w: 8 });
     }
 
     #[test]

@@ -1,0 +1,422 @@
+//! Graph fusion pass: fold conv→BN→Add→ReLU chains into conv epilogues.
+//!
+//! The paper's zero-memory-overhead argument is about *layers*; real
+//! networks interleave convolutions with cheap elementwise tails
+//! (batch-norm, residual adds, activations). Executed standalone, every
+//! tail materializes (and re-reads) a full activation map — pure memory
+//! traffic the direct convolution already paid for. This pass rewrites
+//! the *schedule* instead of the arithmetic: each eligible chain
+//!
+//! ```text
+//! conv -> [batch_norm] -> [add] -> [relu]      (every stage optional)
+//! ```
+//!
+//! is annotated for the executor so the conv applies the whole tail
+//! in-register via its [`Epilogue`] (see [`crate::conv::epilogue`]) and
+//! writes the chain *tail*'s value directly — the intermediates are
+//! never materialized. The stage order above is exactly the epilogue's
+//! fixed application order, so fusion is a pure scheduling change: f32
+//! results are **bitwise identical** to the unfused graph (scale and
+//! shift are two separately-rounded ops on every path, and IEEE-754
+//! addition is commutative, which covers both `x + shortcut` operand
+//! orders of a residual join).
+//!
+//! # Eligibility
+//!
+//! Walking from each conv node, a candidate stage is absorbed when:
+//!
+//! * the current chain tail has **exactly one consumer** (the
+//!   candidate) — otherwise the intermediate value is observable and
+//!   must materialize;
+//! * the candidate's op fits the remaining stage order (`batch_norm`
+//!   before `add` before `relu`, each at most once);
+//! * an `add` has exactly two operands, one of which is the chain tail;
+//!   the other (the shortcut) must be an **earlier** node than the conv
+//!   itself, so it is already computed when the fused conv runs;
+//! * the candidate carries the same [`BranchTag`] as the conv (fusing
+//!   across lane boundaries would move work between parallel branches).
+//!
+//! Because absorption requires single-consumer intermediates, an
+//! absorbed intermediate can never be referenced anywhere else — only
+//! chain *tails* materialize, and shortcut operands always point at
+//! materialized values.
+//!
+//! The graph itself is not rewritten: [`fuse`] returns a [`FusedNet`]
+//! annotation layer ([`NodeRole`] per node, one [`LayerFusion`] per
+//! conv layer) that [`crate::engine::NetRunner`]'s fused compile mode
+//! consumes, plus an auditable [`FusionReport`] (printed by
+//! `dconv plan-net`). Nodes left standalone (`relu` after a pool, a
+//! three-way add, a fan-out BN) keep executing as runner eltwise ops —
+//! fusion is an optimization, never a semantic requirement.
+//!
+//! [`BranchTag`]: super::BranchTag
+
+use std::fmt;
+
+use crate::conv::Epilogue;
+use crate::{Error, Result};
+
+use super::graph::GraphOp;
+use super::plans::net_bn_params;
+use super::spec::Model;
+
+/// What the fused schedule does with one graph node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeRole {
+    /// The node executes as its own op (conv, pool, eltwise, join...).
+    Kept,
+    /// The node's work was folded into the epilogue of the conv at graph
+    /// node index `into`; the node itself is skipped by the scheduler.
+    /// If the node is its chain's tail, its *value* is still produced —
+    /// written directly by the fused conv.
+    Absorbed { into: usize },
+}
+
+/// The fused epilogue of one conv layer (indexed like the model's shape
+/// table). A conv with nothing folded in holds the all-`None` default.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LayerFusion {
+    /// Ordinal of the absorbed `batch_norm` node among the graph's BN
+    /// nodes ([`super::NetGraph::bn_ordinals`]) — the seed for its
+    /// deterministic scale/shift parameters ([`net_bn_params`]).
+    pub bn: Option<usize>,
+    /// Graph node index of the residual shortcut operand (the non-chain
+    /// input of the absorbed `add`). Always an already-materialized
+    /// value computed before the conv.
+    pub res_node: Option<usize>,
+    /// An absorbed trailing `relu`.
+    pub relu: bool,
+    /// The absorbed relu's upper clamp (ReLU6-style).
+    pub clamp: Option<f32>,
+}
+
+impl LayerFusion {
+    /// True when nothing was folded into this conv.
+    pub fn is_none(&self) -> bool {
+        self.bn.is_none() && self.res_node.is_none() && !self.relu
+    }
+
+    /// Materialize the [`Epilogue`] for a conv with `c_o` output
+    /// channels (BN parameters regenerated from the ordinal).
+    pub fn epilogue(&self, c_o: usize) -> Epilogue {
+        let mut ep = match self.bn {
+            Some(ord) => {
+                let (scale, shift) = net_bn_params(ord, c_o);
+                Epilogue::bn(scale, shift)
+            }
+            None => Epilogue::none(),
+        };
+        if self.res_node.is_some() {
+            ep = ep.with_residual();
+        }
+        if self.relu {
+            ep = ep.with_relu(self.clamp);
+        }
+        ep
+    }
+}
+
+/// One merge of the report: a conv and the chain it absorbed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FusionMerge {
+    /// Conv node name.
+    pub conv: String,
+    /// Absorbed node names, in chain order.
+    pub absorbed: Vec<String>,
+    /// Stable merge signature: `conv` plus `+bn` / `+add` / `+relu` in
+    /// stage order (e.g. `conv+bn+add+relu`) — what CI greps for.
+    pub kind: String,
+}
+
+/// Auditable summary of what [`fuse`] did to a model.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FusionReport {
+    pub net: String,
+    pub merges: Vec<FusionMerge>,
+    /// Graph nodes before fusion.
+    pub nodes_before: usize,
+    /// Nodes the fused schedule actually executes (tails are written by
+    /// their convs, intermediates disappear).
+    pub nodes_scheduled: usize,
+}
+
+impl fmt::Display for FusionReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "fusion report for {}: {} merges, {} -> {} scheduled nodes",
+            self.net,
+            self.merges.len(),
+            self.nodes_before,
+            self.nodes_scheduled
+        )?;
+        for m in &self.merges {
+            writeln!(f, "  {} <- {} ({})", m.conv, m.absorbed.join(", "), m.kind)?;
+        }
+        Ok(())
+    }
+}
+
+/// The annotation layer the fused executor consumes — the model graph is
+/// unchanged; this says how to *schedule* it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FusedNet {
+    /// Per graph node: kept, or absorbed into a conv.
+    pub roles: Vec<NodeRole>,
+    /// Per graph node: the node whose *value* this node's output lives
+    /// in. For a conv that absorbed a chain this is the chain tail (the
+    /// conv writes the tail's value directly); for every other node,
+    /// itself.
+    pub tail: Vec<usize>,
+    /// Per conv layer (shape-table order): what its epilogue fuses.
+    pub fusions: Vec<LayerFusion>,
+    pub report: FusionReport,
+}
+
+impl FusedNet {
+    /// Convenience: the epilogue of conv layer `layer` with `c_o`
+    /// output channels.
+    pub fn epilogue(&self, layer: usize, c_o: usize) -> Epilogue {
+        self.fusions[layer].epilogue(c_o)
+    }
+}
+
+/// Run the fusion pass over a validated model. Pure analysis — the
+/// model is untouched; the returned [`FusedNet`] annotates it.
+pub fn fuse(model: &Model) -> Result<FusedNet> {
+    model.validate()?;
+    let graph = &model.graph;
+    let n = graph.nodes.len();
+    let counts = graph.consumer_counts();
+    let bn_ords = graph.bn_ordinals();
+    // consumers[i] = indices of nodes that read node i.
+    let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, node) in graph.nodes.iter().enumerate() {
+        for &p in &node.preds {
+            consumers[p].push(i);
+        }
+    }
+
+    let mut roles = vec![NodeRole::Kept; n];
+    let mut tail: Vec<usize> = (0..n).collect();
+    let mut fusions = vec![LayerFusion::default(); model.shapes.len()];
+    let mut merges = Vec::new();
+
+    for (ci, node) in graph.nodes.iter().enumerate() {
+        let GraphOp::Conv { layer } = node.op else { continue };
+        let mut fusion = LayerFusion::default();
+        let mut absorbed: Vec<usize> = Vec::new();
+        // Stages still available, in epilogue order.
+        let (mut bn_open, mut add_open) = (true, true);
+        let mut cur = ci;
+        loop {
+            // The chain extends only through a sole consumer...
+            if counts[cur] != 1 {
+                break;
+            }
+            let cand = consumers[cur][0];
+            // ...in the same branch lane as the conv.
+            if graph.nodes[cand].branch != node.branch {
+                break;
+            }
+            match &graph.nodes[cand].op {
+                GraphOp::BatchNorm if bn_open => {
+                    fusion.bn = Some(bn_ords[cand].expect("BN node has an ordinal"));
+                    bn_open = false;
+                }
+                GraphOp::Add if add_open => {
+                    let [a, b] = graph.nodes[cand].preds[..] else { break };
+                    let shortcut = if a == cur { b } else { a };
+                    // Both operands being the chain tail (a == b) fails
+                    // the ordering requirement below, since cur >= ci.
+                    if shortcut >= ci {
+                        break; // not computed before the conv runs
+                    }
+                    fusion.res_node = Some(shortcut);
+                    bn_open = false;
+                    add_open = false;
+                }
+                GraphOp::Relu { clamp } => {
+                    fusion.relu = true;
+                    fusion.clamp = *clamp;
+                    absorbed.push(cand);
+                    roles[cand] = NodeRole::Absorbed { into: ci };
+                    cur = cand;
+                    break; // relu is the last stage
+                }
+                _ => break,
+            }
+            absorbed.push(cand);
+            roles[cand] = NodeRole::Absorbed { into: ci };
+            cur = cand;
+        }
+        if absorbed.is_empty() {
+            continue;
+        }
+        tail[ci] = cur;
+        let mut kind = String::from("conv");
+        if fusion.bn.is_some() {
+            kind.push_str("+bn");
+        }
+        if fusion.res_node.is_some() {
+            kind.push_str("+add");
+        }
+        if fusion.relu {
+            kind.push_str("+relu");
+        }
+        merges.push(FusionMerge {
+            conv: node.name.clone(),
+            absorbed: absorbed.iter().map(|&i| graph.nodes[i].name.clone()).collect(),
+            kind,
+        });
+        fusions[layer] = fusion;
+    }
+
+    // Sanity: the output node must stay materialized — it is always a
+    // chain tail or kept, never an absorbed intermediate (intermediates
+    // have exactly one consumer; the output has zero).
+    let out = graph.output();
+    if roles[out] != NodeRole::Kept && tail.iter().all(|&t| t != out) {
+        return Err(Error::Shape(format!(
+            "fusion pass absorbed the output node of '{}' as an intermediate (bug)",
+            model.name
+        )));
+    }
+
+    let scheduled = roles.iter().filter(|r| matches!(r, NodeRole::Kept)).count();
+    Ok(FusedNet {
+        roles,
+        tail,
+        fusions,
+        report: FusionReport {
+            net: model.name.clone(),
+            merges,
+            nodes_before: n,
+            nodes_scheduled: scheduled,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::builder::{mobilenet_micro, resnet_micro, GraphBuilder};
+
+    #[test]
+    fn resnet_micro_fuses_every_tail() {
+        let model = resnet_micro();
+        let fused = fuse(&model).unwrap();
+        let r = &fused.report;
+        assert_eq!(r.merges.len(), 5, "{r}");
+        let kinds: Vec<&str> = r.merges.iter().map(|m| m.kind.as_str()).collect();
+        assert_eq!(
+            kinds,
+            [
+                "conv+bn+relu",     // conv0
+                "conv+bn+relu",     // conv1
+                "conv+bn+add+relu", // conv2 absorbs the first residual join
+                "conv+bn+relu",     // conv3
+                "conv+bn+add+relu", // conv4
+            ]
+        );
+        // 20 nodes; 12 absorbed -> input + 6 convs + pool scheduled.
+        assert_eq!((r.nodes_before, r.nodes_scheduled), (20, 8));
+        // conv2's shortcut is relu0 (the stem chain's tail), whose value
+        // conv0 writes directly.
+        let names: Vec<&str> = model.graph.nodes.iter().map(|n| n.name.as_str()).collect();
+        let conv0 = names.iter().position(|&n| n == "conv0").unwrap();
+        let relu0 = names.iter().position(|&n| n == "relu0").unwrap();
+        let conv2_layer = 2;
+        assert_eq!(fused.fusions[conv2_layer].res_node, Some(relu0));
+        assert_eq!(fused.tail[conv0], relu0);
+        assert_eq!(fused.roles[relu0], NodeRole::Absorbed { into: conv0 });
+        // BN ordinals follow node order: conv2's BN is bn2, ordinal 2.
+        assert_eq!(fused.fusions[conv2_layer].bn, Some(2));
+        // The epilogue materializes with the right shape and stages.
+        let ep = fused.epilogue(conv2_layer, model.shapes[conv2_layer].c_o);
+        assert_eq!(ep.scale.len(), 16);
+        assert!(ep.residual && ep.relu && ep.clamp.is_none());
+        // Final conv feeds the output unfused.
+        assert!(fused.fusions[5].is_none());
+    }
+
+    #[test]
+    fn mobilenet_micro_fuses_depthwise_and_dilated_heads() {
+        let model = mobilenet_micro();
+        let fused = fuse(&model).unwrap();
+        let r = &fused.report;
+        assert_eq!(r.merges.len(), 6, "{r}");
+        assert!(r.merges[..5].iter().all(|m| m.kind == "conv+bn+relu"));
+        assert_eq!(r.merges[5].kind, "conv+relu", "dilated head has no BN");
+        assert_eq!((r.nodes_before, r.nodes_scheduled), (18, 7));
+        // ReLU6 clamps ride into the epilogues.
+        assert_eq!(fused.fusions[0].clamp, Some(6.0));
+        assert_eq!(fused.fusions[5].clamp, None);
+        // The report is greppable.
+        let text = r.to_string();
+        assert!(text.contains("fusion report for mobilenet_micro: 6 merges"));
+        assert!(text.contains("conv+bn+relu"));
+    }
+
+    #[test]
+    fn plain_nets_report_zero_merges() {
+        for model in
+            [crate::nets::builder::alexnet(), crate::nets::builder::googlenet()]
+        {
+            let fused = fuse(&model).unwrap();
+            assert!(fused.report.merges.is_empty(), "{}", model.name);
+            assert_eq!(fused.report.nodes_scheduled, fused.report.nodes_before);
+            assert!(fused.roles.iter().all(|r| *r == NodeRole::Kept));
+            assert!(fused.fusions.iter().all(LayerFusion::is_none));
+            assert!((0..fused.tail.len()).all(|i| fused.tail[i] == i));
+        }
+    }
+
+    #[test]
+    fn fan_out_and_misordered_stages_stay_standalone() {
+        // conv feeding both a relu and a second conv: the intermediate
+        // is observable, nothing fuses into conv "c".
+        let mut b = GraphBuilder::new("fanout");
+        let x = b.input(4, 8, 8).unwrap();
+        let c = b.conv("c", x, 8, 3, 1, 1).unwrap();
+        let r = b.relu("r", c, None).unwrap();
+        let c2 = b.conv("c2", c, 8, 3, 1, 1).unwrap();
+        let j = b.add("j", &[r, c2]).unwrap();
+        let model = b.build(j).unwrap();
+        let fused = fuse(&model).unwrap();
+        // Only c2 -> j fuses (c2 has one consumer, shortcut r precedes
+        // c2); the relu after the fan-out conv stays standalone.
+        assert_eq!(fused.report.merges.len(), 1, "{}", fused.report);
+        assert_eq!(fused.report.merges[0].kind, "conv+add");
+        assert_eq!(fused.roles[model.graph.nodes.len() - 1], NodeRole::Absorbed { into: 3 });
+
+        // relu BEFORE batch_norm does not match the epilogue order: the
+        // relu fuses, the BN stays standalone.
+        let mut b = GraphBuilder::new("misorder");
+        let x = b.input(4, 8, 8).unwrap();
+        let c = b.conv("c", x, 8, 3, 1, 1).unwrap();
+        let r = b.relu("r", c, None).unwrap();
+        let bn = b.batch_norm("bn", r).unwrap();
+        let model = b.build(bn).unwrap();
+        let fused = fuse(&model).unwrap();
+        assert_eq!(fused.report.merges.len(), 1);
+        assert_eq!(fused.report.merges[0].kind, "conv+relu");
+        assert_eq!(*fused.roles.last().unwrap(), NodeRole::Kept, "BN survives");
+    }
+
+    #[test]
+    fn three_way_add_and_pool_tails_are_not_fused() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input(4, 8, 8).unwrap();
+        let a = b.conv("a", x, 4, 3, 1, 1).unwrap();
+        let c = b.conv("c", a, 4, 3, 1, 1).unwrap();
+        let j = b.add("j", &[x, a, c]).unwrap();
+        let p = b.pool("p", j, 2, 2, 0).unwrap();
+        let r = b.relu("r", p, None).unwrap();
+        let model = b.build(r).unwrap();
+        let fused = fuse(&model).unwrap();
+        assert!(fused.report.merges.is_empty(), "{}", fused.report);
+        // Standalone relu-after-pool is kept for the runner's eltwise.
+        assert_eq!(*fused.roles.last().unwrap(), NodeRole::Kept);
+    }
+}

@@ -10,7 +10,7 @@
 //! IR makes the branch/concat structure first-class so the network-wide
 //! accounting is honest.
 //!
-//! Nodes are deliberately minimal — the five things CNN topologies need:
+//! Nodes are deliberately minimal — the things CNN topologies need:
 //!
 //! * [`GraphOp::Input`] — the network image (exactly one, node 0);
 //! * [`GraphOp::Conv`] — one row of the layer table, by index, so a
@@ -22,7 +22,12 @@
 //! * [`GraphOp::Concat`] — channel concatenation of same-extent maps;
 //! * [`GraphOp::Add`] — elementwise residual join of identically shaped
 //!   maps (the ResNet skip connection), which keeps *both* operands
-//!   live until the join in the executor's arena accounting.
+//!   live until the join in the executor's arena accounting;
+//! * [`GraphOp::Relu`] / [`GraphOp::BatchNorm`] — elementwise
+//!   activation / pre-folded per-channel normalization. Standalone they
+//!   execute as runner eltwise passes; the `nets::fuse` pass folds
+//!   conv→BN→(Add)→ReLU chains into the conv's epilogue so the
+//!   intermediate is never materialized.
 //!
 //! Graphs are built through [`super::GraphBuilder`] (the public
 //! model-description API) — [`NetGraph::chain`] and
@@ -106,7 +111,7 @@ impl PoolKind {
 }
 
 /// What a graph node computes.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum GraphOp {
     /// The network input image (`C x H x W`). Exactly one, at node 0.
     Input { c: usize, h: usize, w: usize },
@@ -120,6 +125,17 @@ pub enum GraphOp {
     /// Elementwise sum of all predecessors (identical `C x H x W`) —
     /// the residual join.
     Add,
+    /// Elementwise `max(0, x)`, with an optional upper clamp
+    /// (ReLU6-style `min(clamp, x)`). Dims pass through; the fusion
+    /// pass folds eligible Relu nodes into their producing conv's
+    /// [`crate::conv::Epilogue`].
+    Relu { clamp: Option<f32> },
+    /// Per-channel batch normalization, pre-folded to scale/shift form
+    /// (`y = x * scale[c] + shift[c]`). Parameters are indexed by the
+    /// node's ordinal among BatchNorm nodes (node order) and generated
+    /// deterministically at plan time ([`super::net_bn_params`]) like
+    /// the synthetic weights — specs stay weight-free.
+    BatchNorm,
 }
 
 /// One node of the dataflow graph.
@@ -191,6 +207,25 @@ impl NetGraph {
     /// Index of the network output node (the last node).
     pub fn output(&self) -> usize {
         self.nodes.len() - 1
+    }
+
+    /// Per-node ordinal among [`GraphOp::BatchNorm`] nodes, in node
+    /// order (`None` for every other op). The ordinal seeds the
+    /// deterministic per-channel parameters ([`super::net_bn_params`]),
+    /// exactly like conv layer indices seed the synthetic weights — so
+    /// the fusion pass, the runner, the calibrator and the NumPy golden
+    /// reference all regenerate identical tensors.
+    pub fn bn_ordinals(&self) -> Vec<Option<usize>> {
+        let mut ord = 0usize;
+        self.nodes
+            .iter()
+            .map(|n| {
+                matches!(n.op, GraphOp::BatchNorm).then(|| {
+                    ord += 1;
+                    ord - 1
+                })
+            })
+            .collect()
     }
 
     /// Consumer count per node (how many nodes list it as predecessor).
@@ -314,6 +349,32 @@ impl NetGraph {
                         }
                     }
                     first
+                }
+                GraphOp::Relu { clamp } => {
+                    let [p] = n.preds[..] else {
+                        return Err(Error::Shape(format!(
+                            "{}: relu node '{}' needs exactly one predecessor",
+                            self.net, n.name
+                        )));
+                    };
+                    if let Some(c) = clamp {
+                        if !c.is_finite() || *c <= 0.0 {
+                            return Err(Error::Shape(format!(
+                                "{}: relu node '{}' clamp {c} must be finite and > 0",
+                                self.net, n.name
+                            )));
+                        }
+                    }
+                    dims[p]
+                }
+                GraphOp::BatchNorm => {
+                    let [p] = n.preds[..] else {
+                        return Err(Error::Shape(format!(
+                            "{}: batch_norm node '{}' needs exactly one predecessor",
+                            self.net, n.name
+                        )));
+                    };
+                    dims[p]
                 }
                 GraphOp::Concat => {
                     if n.preds.is_empty() {

@@ -15,11 +15,37 @@ use crate::{Error, Result};
 
 /// The deterministic synthetic OIHW weights [`NetPlans::build`] plans
 /// layer `index` with (seeded xorshift; only shapes matter for the
-/// reproduction). Exposed so reference implementations — the naive
-/// layer-by-layer cross-check in the `NetRunner` conformance tests —
-/// can regenerate bit-identical tensors.
+/// reproduction). Grouped layers hold `C_i/groups` input channels per
+/// filter, so the tensor is `[c_o, c_i/groups, h_f, w_f]` — identical
+/// to before for dense layers. Exposed so reference implementations —
+/// the naive layer-by-layer cross-check in the `NetRunner` conformance
+/// tests, the NumPy golden generator — can regenerate bit-identical
+/// tensors.
 pub fn net_kernel(index: usize, shape: &ConvShape) -> Tensor {
-    Tensor::random(&[shape.c_o, shape.c_i, shape.h_f, shape.w_f], 0x5EED + index as u64)
+    Tensor::random(
+        &[shape.c_o, shape.c_i_per_group(), shape.h_f, shape.w_f],
+        0x5EED + index as u64,
+    )
+}
+
+/// Deterministic per-channel batch-norm parameters for the BN node with
+/// ordinal `ordinal` (its index among the graph's BatchNorm nodes in
+/// node order, [`super::NetGraph::bn_ordinals`]) over `c` channels.
+/// Returns `(scale, shift)` for the pre-folded inference form
+/// `y = x * scale[c] + shift[c]`.
+///
+/// Like [`net_kernel`], parameters are seeded synthetic values so model
+/// specs stay weight-free and independent references (the NumPy golden
+/// generator) can regenerate bit-identical tensors: scale is drawn from
+/// `[0.5, 1.5)` (never zero — BN folding divides by nothing, but a
+/// zero scale would erase the conv's contribution and make tests
+/// vacuous), shift from `[-0.25, 0.25)`.
+pub fn net_bn_params(ordinal: usize, c: usize) -> (Vec<f32>, Vec<f32>) {
+    let raw_scale = Tensor::random(&[c], 0xB070 + ordinal as u64);
+    let raw_shift = Tensor::random(&[c], 0x5417 + ordinal as u64);
+    let scale = raw_scale.data().iter().map(|r| 1.0 + 0.5 * r).collect();
+    let shift = raw_shift.data().iter().map(|r| 0.25 * r).collect();
+    (scale, shift)
 }
 
 /// One planned conv layer of a network.
@@ -177,7 +203,7 @@ impl NetPlans {
         let registry = BackendRegistry::shared();
         let mut planned = Vec::with_capacity(shapes.len());
         for (i, s) in shapes.iter().enumerate() {
-            let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], seed + i as u64);
+            let kernel = Tensor::random(&[s.c_o, s.c_i_per_group(), s.h_f, s.w_f], seed + i as u64);
             let plan = registry.plan(backend, s, &kernel, machine, 1)?;
             planned.push(PlannedLayer {
                 backend: plan.backend(),
@@ -257,6 +283,33 @@ mod tests {
             NetPlans::build_model_autotuned(&model, "direct", &haswell(), &[1]).unwrap();
         assert_eq!(tuned.layers.len(), report.len());
         assert!(tuned.layers.iter().all(|l| l.threads == 1));
+    }
+
+    #[test]
+    fn mobilenet_micro_plans_grouped_layers_zero_overhead() {
+        let model = crate::nets::builder::mobilenet_micro();
+        let plans = NetPlans::build_model(&model, "auto", &haswell(), 1).unwrap();
+        assert_eq!(plans.layers.len(), 6);
+        for l in &plans.layers {
+            assert_eq!(l.backend, "direct", "{}", l.layer.name);
+            assert_eq!(
+                l.plan.retained_bytes() + l.plan.workspace_bytes(),
+                0,
+                "{} must be zero-overhead",
+                l.layer.name
+            );
+        }
+    }
+
+    #[test]
+    fn bn_params_are_deterministic_and_well_conditioned() {
+        let (s0, b0) = net_bn_params(0, 16);
+        let (s0_again, b0_again) = net_bn_params(0, 16);
+        assert_eq!((&s0, &b0), (&s0_again, &b0_again), "same ordinal regenerates identically");
+        let (s1, _) = net_bn_params(1, 16);
+        assert_ne!(s0, s1, "ordinals draw distinct parameters");
+        assert!(s0.iter().all(|v| (0.5..1.5).contains(v)), "scale never vanishes");
+        assert!(b0.iter().all(|v| (-0.25..0.25).contains(v)));
     }
 
     #[test]

@@ -19,6 +19,8 @@
 //!     {"op": "conv",   "name": "conv0", "pred": "image",
 //!      "c_o": 16, "k": 3, "stride": 1, "pad": 1},
 //!     {"op": "pool",   "name": "pool0", "pred": "conv0", "k": 2},
+//!     {"op": "batch_norm", "name": "bn0", "pred": "pool0"},
+//!     {"op": "relu",   "name": "relu0", "pred": "bn0", "clamp": 6.0},
 //!     {"op": "concat", "name": "cat",   "preds": ["a", "b"]},
 //!     {"op": "add",    "name": "join",  "preds": ["a", "b"]}
 //!   ]
@@ -34,13 +36,26 @@
 //!   flag overrides it.
 //! * `conv` — `c_o` output channels; kernel `k` (or `kh`/`kw` for
 //!   rectangular); `stride` (default 1) and `pad` (default 0) are
-//!   symmetric. Input channels and extents are inferred from `pred`.
-//!   Conv layers are numbered in node order; that numbering is the
-//!   plan-table index (and the deterministic weight seed).
+//!   symmetric; optional `groups` (default 1, must divide both the
+//!   inferred input channels and `c_o`; `groups == c_i == c_o` is
+//!   depthwise) and `dilation` (default 1, spreads the kernel taps to
+//!   an effective extent of `(k-1)*dilation + 1`). Input channels and
+//!   extents are inferred from `pred`. Conv layers are numbered in node
+//!   order; that numbering is the plan-table index (and the
+//!   deterministic weight seed).
 //! * `pool` — kernel `k` (or `kh`/`kw`), stride `s` (or `sh`/`sw`,
 //!   default = kernel), pad `p` (or `ph`/`pw`, default 0), and `kind`
 //!   (`"max"`, the default, or `"avg"` — average over the in-bounds
 //!   window cells, the classifier-head reduction).
+//! * `relu` — elementwise `max(0, x)`; the optional `clamp` (finite,
+//!   `> 0` — e.g. `6.0` for ReLU6) caps the result from above. The
+//!   [`super::fuse`] pass folds a relu that directly follows a conv /
+//!   BN / residual-add chain into that conv's epilogue.
+//! * `batch_norm` — per-channel `y = x * scale[c] + shift[c]`,
+//!   inference-mode (pre-folded) batch normalization. Like conv
+//!   weights, parameters are not stored in the spec: they are generated
+//!   deterministically at plan time from the node's BN ordinal (see
+//!   [`super::net_bn_params`]), keeping specs weight-free.
 //! * `concat` / `add` — two or more `preds`; concat joins channels of
 //!   equal-extent maps, add sums identically shaped maps (the residual
 //!   join).
@@ -148,15 +163,20 @@ impl Model {
                 "conv" => {
                     let pred = lookup(&ids, spec, node_name)?;
                     let (kh, kw) = kernel_pair(spec, node_name, "k", "kh", "kw", None)?;
-                    b.conv_rect(
-                        node_name,
-                        pred,
+                    let d = b.dims_of(pred);
+                    let shape = ConvShape::new(
+                        d.c,
+                        d.h,
+                        d.w,
                         field_usize(spec, node_name, "c_o")?,
                         kh,
                         kw,
                         opt_usize(spec, node_name, "stride")?.unwrap_or(1),
                         opt_usize(spec, node_name, "pad")?.unwrap_or(0),
-                    )?
+                    )
+                    .with_groups(opt_usize(spec, node_name, "groups")?.unwrap_or(1))
+                    .with_dilation(opt_usize(spec, node_name, "dilation")?.unwrap_or(1));
+                    b.conv_with(node_name, pred, shape)?
                 }
                 "pool" => {
                     let pred = lookup(&ids, spec, node_name)?;
@@ -181,12 +201,20 @@ impl Model {
                     let (ph, pw) = kernel_pair(spec, node_name, "p", "ph", "pw", Some((0, 0)))?;
                     b.pool_kind_geom(node_name, pred, kind, kh, kw, sh, sw, ph, pw)?
                 }
+                "relu" => {
+                    let pred = lookup(&ids, spec, node_name)?;
+                    b.relu(node_name, pred, opt_f32(spec, node_name, "clamp")?)?
+                }
+                "batch_norm" => {
+                    let pred = lookup(&ids, spec, node_name)?;
+                    b.batch_norm(node_name, pred)?
+                }
                 "concat" => b.concat(node_name, &pred_list(&ids, spec, node_name)?)?,
                 "add" => b.add(node_name, &pred_list(&ids, spec, node_name)?)?,
                 other => {
                     return Err(Error::Parse(format!(
                         "model spec node '{node_name}': unknown op '{other}' \
-                         (input|conv|pool|concat|add)"
+                         (input|conv|pool|relu|batch_norm|concat|add)"
                     )));
                 }
             };
@@ -239,6 +267,14 @@ impl Model {
                         o.insert("kw".into(), num(s.w_f));
                         o.insert("stride".into(), num(s.stride));
                         o.insert("pad".into(), num(s.pad));
+                        if s.groups != 1 {
+                            // 1 is the default; omitting it keeps
+                            // previously committed specs byte-stable.
+                            o.insert("groups".into(), num(s.groups));
+                        }
+                        if s.dilation != 1 {
+                            o.insert("dilation".into(), num(s.dilation));
+                        }
                     }
                     GraphOp::Pool { kind, kh, kw, sh, sw, ph, pw } => {
                         o.insert("op".into(), Json::Str("pool".into()));
@@ -254,6 +290,17 @@ impl Model {
                         o.insert("sw".into(), num(*sw));
                         o.insert("ph".into(), num(*ph));
                         o.insert("pw".into(), num(*pw));
+                    }
+                    GraphOp::Relu { clamp } => {
+                        o.insert("op".into(), Json::Str("relu".into()));
+                        o.insert("pred".into(), pred_name(n.preds[0]));
+                        if let Some(c) = clamp {
+                            o.insert("clamp".into(), Json::Num(f64::from(*c)));
+                        }
+                    }
+                    GraphOp::BatchNorm => {
+                        o.insert("op".into(), Json::Str("batch_norm".into()));
+                        o.insert("pred".into(), pred_name(n.preds[0]));
                     }
                     GraphOp::Concat | GraphOp::Add => {
                         let kind = if matches!(n.op, GraphOp::Concat) { "concat" } else { "add" };
@@ -285,8 +332,10 @@ fn check_keys(spec: &Json, node: &str, op: &str) -> Result<()> {
     const COMMON: [&str; 4] = ["op", "name", "group", "lane"];
     let allowed: &[&str] = match op {
         "input" => &["c", "h", "w"],
-        "conv" => &["pred", "c_o", "k", "kh", "kw", "stride", "pad"],
+        "conv" => &["pred", "c_o", "k", "kh", "kw", "stride", "pad", "groups", "dilation"],
         "pool" => &["pred", "kind", "k", "kh", "kw", "s", "sh", "sw", "p", "ph", "pw"],
+        "relu" => &["pred", "clamp"],
+        "batch_norm" => &["pred"],
         "concat" | "add" => &["preds"],
         _ => &[], // unknown op is reported by the caller's match
     };
@@ -320,6 +369,17 @@ fn opt_usize(spec: &Json, node: &str, key: &str) -> Result<Option<usize>> {
     match spec.get(key) {
         None => Ok(None),
         Some(v) => v.as_usize().map(Some).ok_or_else(|| {
+            Error::Parse(format!("model spec node '{node}': field '{key}' must be a number"))
+        }),
+    }
+}
+
+/// Optional float field (the relu `clamp`); range validation is the
+/// builder's job, non-numbers are rejected here.
+fn opt_f32(spec: &Json, node: &str, key: &str) -> Result<Option<f32>> {
+    match spec.get(key) {
+        None => Ok(None),
+        Some(v) => v.as_f64().map(|f| Some(f as f32)).ok_or_else(|| {
             Error::Parse(format!("model spec node '{node}': field '{key}' must be a number"))
         }),
     }
@@ -488,7 +548,7 @@ mod tests {
         assert!(Model::from_json(r#"{"name": "x", "nodes": []}"#).is_err(), "no nodes");
         let bad_pred = MINI.replace("\"pred\": \"c0\"", "\"pred\": \"nope\"");
         assert!(Model::from_json(&bad_pred).is_err(), "dangling pred name");
-        let bad_op = MINI.replace("\"op\": \"pool\"", "\"op\": \"relu\"");
+        let bad_op = MINI.replace("\"op\": \"pool\"", "\"op\": \"gelu\"");
         assert!(Model::from_json(&bad_op).is_err(), "unknown op");
         let half_lane = MINI.replace(
             r#"{"op": "input", "name": "image", "c": 4"#,
@@ -497,5 +557,78 @@ mod tests {
         assert!(Model::from_json(&half_lane).is_err(), "group without lane");
         let typo = MINI.replace("\"pad\": 1", "\"pad\": 1, \"s\": 1");
         assert!(Model::from_json(&typo).is_err(), "strict schema: 's' on a conv is unknown");
+    }
+
+    const FUSED: &str = r#"{
+        "name": "fused_mini",
+        "nodes": [
+            {"op": "input", "name": "image", "c": 4, "h": 8, "w": 8},
+            {"op": "conv", "name": "c0", "pred": "image", "c_o": 8, "k": 3, "pad": 1},
+            {"op": "batch_norm", "name": "bn0", "pred": "c0"},
+            {"op": "relu", "name": "r0", "pred": "bn0", "clamp": 6.0},
+            {"op": "conv", "name": "dw", "pred": "r0", "c_o": 8, "k": 3, "pad": 1,
+             "groups": 8},
+            {"op": "relu", "name": "r1", "pred": "dw"},
+            {"op": "conv", "name": "head", "pred": "r1", "c_o": 8, "k": 3, "pad": 2,
+             "dilation": 2}
+        ]
+    }"#;
+
+    #[test]
+    fn fused_ops_parse_and_round_trip() {
+        let m = Model::from_json(FUSED).unwrap();
+        let relu = m.graph.nodes.iter().find(|n| n.name == "r0").unwrap();
+        assert!(matches!(relu.op, GraphOp::Relu { clamp: Some(c) } if c == 6.0));
+        let bare = m.graph.nodes.iter().find(|n| n.name == "r1").unwrap();
+        assert!(matches!(bare.op, GraphOp::Relu { clamp: None }));
+        assert!(m.graph.nodes.iter().any(|n| matches!(n.op, GraphOp::BatchNorm)));
+        assert!(m.shapes[1].is_depthwise());
+        assert_eq!(m.shapes[2].dilation, 2);
+        let again = Model::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, again, "relu clamp / BN / groups / dilation must round-trip");
+        // Defaults stay implicit in the serialized form.
+        let text = m.to_json();
+        assert_eq!(text.matches("groups").count(), 1);
+        assert_eq!(text.matches("dilation").count(), 1);
+        assert_eq!(text.matches("clamp").count(), 1);
+    }
+
+    #[test]
+    fn builder_nets_with_fused_ops_round_trip() {
+        for m in [builder::resnet_micro(), builder::mobilenet_micro()] {
+            let again = Model::from_json(&m.to_json()).unwrap();
+            assert_eq!(m, again, "{} spec must round-trip", m.name);
+        }
+    }
+
+    #[test]
+    fn rejects_invalid_groups_dilation_and_clamp() {
+        // groups that do not divide the channel counts.
+        let bad_groups = FUSED.replace("\"groups\": 8", "\"groups\": 3");
+        assert!(Model::from_json(&bad_groups).is_err(), "groups=3 does not divide 8 channels");
+        let zero_groups = FUSED.replace("\"groups\": 8", "\"groups\": 0");
+        assert!(Model::from_json(&zero_groups).is_err(), "zero groups");
+        // dilation pushing the effective kernel beyond the padded input.
+        let big_dil = FUSED.replace("\"dilation\": 2", "\"dilation\": 9");
+        assert!(Model::from_json(&big_dil).is_err(), "effective kernel exceeds input");
+        let zero_dil = FUSED.replace("\"dilation\": 2", "\"dilation\": 0");
+        assert!(Model::from_json(&zero_dil).is_err(), "zero dilation");
+        // relu clamp must be a positive number.
+        let neg_clamp = FUSED.replace("\"clamp\": 6.0", "\"clamp\": -1.0");
+        assert!(Model::from_json(&neg_clamp).is_err(), "negative clamp");
+        let str_clamp = FUSED.replace("\"clamp\": 6.0", "\"clamp\": \"six\"");
+        assert!(Model::from_json(&str_clamp).is_err(), "clamp must be numeric");
+        // Strict schema: clamp is not a batch_norm field, groups is not
+        // a relu field.
+        let bn_clamp = FUSED.replace(
+            r#"{"op": "batch_norm", "name": "bn0", "pred": "c0"}"#,
+            r#"{"op": "batch_norm", "name": "bn0", "pred": "c0", "clamp": 1.0}"#,
+        );
+        assert!(Model::from_json(&bn_clamp).is_err(), "clamp on batch_norm is unknown");
+        let relu_groups = FUSED.replace(
+            r#"{"op": "relu", "name": "r1", "pred": "dw"}"#,
+            r#"{"op": "relu", "name": "r1", "pred": "dw", "groups": 2}"#,
+        );
+        assert!(Model::from_json(&relu_groups).is_err(), "groups on relu is unknown");
     }
 }

@@ -34,11 +34,13 @@
 
 use super::direct::{conv_quant_core, QuantGeom};
 use super::params::{
-    per_channel_weight_scales, quantize, requant_multiplier, QuantParams,
+    per_channel_weight_scales, quantize, requant_multiplier, round_half_away, QuantParams,
 };
 use super::QuantExecute;
 use crate::arch::Machine;
-use crate::conv::{conv_direct_blocked_into, select_params, BlockParams, ConvShape};
+use crate::conv::{
+    conv_direct_blocked_into, select_params, BlockParams, ConvShape, Epilogue,
+};
 use crate::engine::{check_execute_buffers, retained_over_kernel, ConvAlgo, ConvPlan};
 use crate::layout::{blocked_kernel_index, to_blocked_io, to_blocked_kernel, IoLayout};
 use crate::tensor::Tensor;
@@ -51,18 +53,73 @@ const SAMPLE_SEED: u64 = 0xCA11B;
 /// Int8 direct convolution behind the engine API. See the module docs.
 pub struct DirectI8Backend;
 
-/// A planned int8 direct-convolution layer.
+/// A planned int8 direct-convolution layer, optionally with a fused
+/// epilogue folded into its requantize step (see
+/// [`DirectI8Plan::with_params_fused`]).
 pub struct DirectI8Plan {
     shape: ConvShape,
     bp: BlockParams,
     threads: usize,
-    /// §4 blocked kernel `[C_o/C_ob][C_i/C_ib][H_f][W_f][C_ib][C_ob]`,
-    /// symmetric per-output-channel int8.
+    /// §4 blocked kernel `[C_o/C_ob][C_i/C_ib][H_f][W_f][C_ib][C_ob]`
+    /// per group (or `[C/c_b][H_f][W_f][c_b]` for depthwise), symmetric
+    /// per-output-channel int8.
     kernel_q: Vec<i8>,
-    /// Per-output-channel requantize multipliers (`s_in·s_w_j/s_out`).
+    /// Per-output-channel requantize multipliers (`s_in·s_w_j/s_out`),
+    /// with any fused batch-norm scale folded in.
     mult: Vec<f64>,
+    /// Per-channel pre-rounding offsets `shift_j/s_out` (empty = none).
+    off: Vec<f64>,
+    /// Fused residual: its quant params + `s_res/s_out` ratio.
+    res: Option<(QuantParams, f64)>,
+    relu: bool,
+    clamp_q: Option<i32>,
     in_qp: QuantParams,
     out_qp: QuantParams,
+}
+
+/// Quantize an OIHW f32 kernel straight into the blocked i8 layout
+/// (one pass, no OIHW i8 intermediate): per-group §4 slabs, or
+/// depthwise `[C/c_b][H_f][W_f][c_b]` lanes.
+fn quantize_kernel_blocked(
+    src: &[f32],
+    shape: &ConvShape,
+    bp: BlockParams,
+    w_scales: &[f32],
+) -> Vec<i8> {
+    let (c_ipg, c_opg) = (shape.c_i_per_group(), shape.c_o_per_group());
+    let per = c_ipg * shape.h_f * shape.w_f;
+    let mut kernel_q = vec![0i8; src.len()];
+    if shape.is_depthwise() {
+        for o in 0..shape.c_o {
+            let wq = QuantParams { scale: w_scales[o], zero_point: 0 };
+            for n in 0..shape.h_f {
+                for m in 0..shape.w_f {
+                    let d = ((o / bp.c_ob) * shape.h_f * shape.w_f + n * shape.w_f + m)
+                        * bp.c_ob
+                        + o % bp.c_ob;
+                    kernel_q[d] = quantize(src[o * per + n * shape.w_f + m], &wq);
+                }
+            }
+        }
+        return kernel_q;
+    }
+    let per_g = c_opg * per;
+    for o in 0..shape.c_o {
+        let wq = QuantParams { scale: w_scales[o], zero_point: 0 };
+        let (grp, o_l) = (o / c_opg, o % c_opg);
+        for i in 0..c_ipg {
+            for n in 0..shape.h_f {
+                for m in 0..shape.w_f {
+                    let d = blocked_kernel_index(
+                        o_l, i, n, m, c_ipg, shape.h_f, shape.w_f, bp.c_ib, bp.c_ob,
+                    );
+                    kernel_q[grp * per_g + d] =
+                        quantize(src[o * per + (i * shape.h_f + n) * shape.w_f + m], &wq);
+                }
+            }
+        }
+    }
+    kernel_q
 }
 
 impl DirectI8Plan {
@@ -80,8 +137,42 @@ impl DirectI8Plan {
         in_qp: QuantParams,
         out_qp: QuantParams,
     ) -> Result<DirectI8Plan> {
+        Self::with_params_fused(
+            shape,
+            kernel,
+            machine,
+            threads,
+            in_qp,
+            out_qp,
+            &Epilogue::none(),
+            None,
+        )
+    }
+
+    /// [`Self::with_params`] plus a fused epilogue, folded **into the
+    /// requantize step at plan time** so execution still performs one
+    /// rounding per output element (see [`QuantGeom`]'s formula):
+    ///
+    /// * `ep.scale` (folded batch-norm) multiplies the per-channel
+    ///   requantize multipliers;
+    /// * `ep.shift` (bias / BN shift) becomes the pre-rounding offset
+    ///   `shift_j / s_out`;
+    /// * `ep.relu`/`ep.clamp` become quantized-domain clamp bounds;
+    /// * a residual (`ep.residual`) requires `res_qp` — the quant params
+    ///   of the shortcut operand the caller will pass at execution.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_params_fused(
+        shape: &ConvShape,
+        kernel: &Tensor,
+        machine: &Machine,
+        threads: usize,
+        in_qp: QuantParams,
+        out_qp: QuantParams,
+        ep: &Epilogue,
+        res_qp: Option<QuantParams>,
+    ) -> Result<DirectI8Plan> {
         shape.validate()?;
-        let want = [shape.c_o, shape.c_i, shape.h_f, shape.w_f];
+        let want = [shape.c_o, shape.c_i_per_group(), shape.h_f, shape.w_f];
         if kernel.shape() != want {
             return Err(Error::Shape(format!(
                 "plan kernel shape {:?} != expected {:?}",
@@ -89,38 +180,40 @@ impl DirectI8Plan {
                 want
             )));
         }
+        ep.validate(shape.c_o)?;
+        if ep.residual != res_qp.is_some() {
+            return Err(Error::Shape(
+                "fused residual requires its quant params (and vice versa)".into(),
+            ));
+        }
         let bp = select_params(machine, shape);
         bp.validate_for(shape)?;
         let w_scales = per_channel_weight_scales(kernel);
         let mult: Vec<f64> = w_scales
             .iter()
-            .map(|&sw| requant_multiplier(in_qp.scale, sw, out_qp.scale))
+            .enumerate()
+            .map(|(j, &sw)| {
+                let m = requant_multiplier(in_qp.scale, sw, out_qp.scale);
+                if ep.scale.is_empty() { m } else { m * ep.scale[j] as f64 }
+            })
             .collect();
-        // Quantize straight into the blocked layout (one pass, no OIHW
-        // i8 intermediate).
-        let src = kernel.data();
-        let mut kernel_q = vec![0i8; src.len()];
-        let per = shape.c_i * shape.h_f * shape.w_f;
-        for o in 0..shape.c_o {
-            let wq = QuantParams { scale: w_scales[o], zero_point: 0 };
-            for i in 0..shape.c_i {
-                for n in 0..shape.h_f {
-                    for m in 0..shape.w_f {
-                        let d = blocked_kernel_index(
-                            o, i, n, m, shape.c_i, shape.h_f, shape.w_f, bp.c_ib, bp.c_ob,
-                        );
-                        kernel_q[d] =
-                            quantize(src[o * per + (i * shape.h_f + n) * shape.w_f + m], &wq);
-                    }
-                }
-            }
-        }
+        let off: Vec<f64> =
+            ep.shift.iter().map(|&s| s as f64 / out_qp.scale as f64).collect();
+        let res = res_qp.map(|r| (r, r.scale as f64 / out_qp.scale as f64));
+        let clamp_q = ep
+            .clamp
+            .map(|c| round_half_away(c as f64 / out_qp.scale as f64) as i32 + out_qp.zero_point);
+        let kernel_q = quantize_kernel_blocked(kernel.data(), shape, bp, &w_scales);
         Ok(DirectI8Plan {
             shape: shape.clone(),
             bp,
             threads: threads.max(1),
             kernel_q,
             mult,
+            off,
+            res,
+            relu: ep.relu,
+            clamp_q,
             in_qp,
             out_qp,
         })
@@ -131,6 +224,12 @@ impl DirectI8Plan {
         self.bp
     }
 
+    /// Quant params the fused residual operand must carry (set iff the
+    /// plan was built with one).
+    pub fn residual_qparams(&self) -> Option<QuantParams> {
+        self.res.map(|(qp, _)| qp)
+    }
+
     fn geom(&self) -> QuantGeom<'_> {
         QuantGeom {
             shape: &self.shape,
@@ -138,6 +237,10 @@ impl DirectI8Plan {
             in_qp: self.in_qp,
             out_qp: self.out_qp,
             mult: &self.mult,
+            off: &self.off,
+            res: self.res,
+            relu: self.relu,
+            clamp_q: self.clamp_q,
         }
     }
 }
@@ -167,7 +270,8 @@ impl ConvAlgo for DirectI8Backend {
         bp.validate_for(shape)?;
         let sample = Tensor::random(&[shape.c_i, shape.h_i, shape.w_i], SAMPLE_SEED);
         let bi = to_blocked_io(&sample, bp.c_ib)?;
-        let bk = to_blocked_kernel(kernel, bp.c_ob, bp.c_ib)?;
+        let k_cib = if shape.is_depthwise() { 1 } else { bp.c_ib };
+        let bk = to_blocked_kernel(kernel, bp.c_ob, k_cib)?;
         let mut out = vec![0.0f32; shape.c_o * shape.h_o() * shape.w_o()];
         conv_direct_blocked_into(bi.data(), bk.data(), shape, bp, threads.max(1), &mut out)?;
         let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
@@ -206,7 +310,37 @@ impl ConvPlan for DirectI8Plan {
     }
     fn execute_into(&self, input: &[f32], output: &mut [f32], workspace: &mut [f32]) -> Result<()> {
         check_execute_buffers(&self.shape, 0, input, output, workspace)?;
-        conv_quant_core(input, &self.kernel_q, &self.geom(), self.threads, output)
+        if self.res.is_some() {
+            return Err(Error::Shape(
+                "plan fused a residual: use execute_fused_into with the operand".into(),
+            ));
+        }
+        conv_quant_core(input, &self.kernel_q, &self.geom(), self.threads, output, None)
+    }
+    fn execute_fused_into(
+        &self,
+        input: &[f32],
+        output: &mut [f32],
+        workspace: &mut [f32],
+        ep: &Epilogue,
+        res: Option<&[f32]>,
+    ) -> Result<()> {
+        // The i8 epilogue was folded into the requantize multipliers /
+        // offsets / clamp bounds at plan time (`with_params_fused`);
+        // applying an f32 epilogue after the fact would double-apply
+        // it. This entry verifies the caller's epilogue matches what
+        // was baked in and routes the residual operand.
+        check_execute_buffers(&self.shape, 0, input, output, workspace)?;
+        if ep.relu != self.relu
+            || ep.residual != self.res.is_some()
+            || ep.clamp.is_some() != self.clamp_q.is_some()
+            || ep.shift.is_empty() != self.off.is_empty()
+        {
+            return Err(Error::Shape(
+                "direct_i8 epilogue must be folded at plan time (with_params_fused)".into(),
+            ));
+        }
+        conv_quant_core(input, &self.kernel_q, &self.geom(), self.threads, output, res)
     }
     fn as_quantized(&self) -> Option<&dyn QuantExecute> {
         Some(self)
@@ -224,7 +358,26 @@ impl QuantExecute for DirectI8Plan {
         self.kernel_q.len() as u64
     }
     fn execute_i8_into(&self, input: &[i8], output: &mut [i8]) -> Result<()> {
-        conv_quant_core(input, &self.kernel_q, &self.geom(), self.threads, output)
+        if self.res.is_some() {
+            return Err(Error::Shape(
+                "plan fused a residual: use execute_i8_fused_into with the operand".into(),
+            ));
+        }
+        conv_quant_core(input, &self.kernel_q, &self.geom(), self.threads, output, None)
+    }
+    fn execute_i8_fused_into(
+        &self,
+        input: &[i8],
+        output: &mut [i8],
+        res: Option<&[i8]>,
+    ) -> Result<()> {
+        if self.res.is_some() != res.is_some() {
+            return Err(Error::Shape("fused residual operand mismatch".into()));
+        }
+        conv_quant_core(input, &self.kernel_q, &self.geom(), self.threads, output, res)
+    }
+    fn residual_qparams(&self) -> Option<QuantParams> {
+        DirectI8Plan::residual_qparams(self)
     }
 }
 
@@ -288,6 +441,66 @@ mod tests {
         for (f, q) in out_f.iter().zip(&out_q) {
             assert_eq!(*f, super::super::dequantize(*q, &out_qp), "paths diverged");
         }
+    }
+
+    #[test]
+    fn depthwise_plan_runs_and_tracks_oracle() {
+        let s = ConvShape::new(8, 10, 10, 8, 3, 3, 1, 1).with_groups(8);
+        let k = Tensor::random(&[8, 1, 3, 3], 31);
+        let input = Tensor::random(&[8, 10, 10], 32);
+        let plan = DirectI8Backend.plan(&s, &k, &haswell(), 1).unwrap();
+        assert_eq!(plan.workspace_bytes(), 0);
+        let got = plan.execute(&input).unwrap();
+        let want = conv_naive(&input, &k, &s).unwrap();
+        assert!(got.allclose(&want, 0.1, 0.1), "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn fused_plan_applies_bias_relu_and_guards_entries() {
+        let s = ConvShape::new(8, 8, 8, 16, 3, 3, 1, 1);
+        let k = Tensor::random(&[16, 8, 3, 3], 41);
+        let input = Tensor::random(&[8, 8, 8], 42);
+        let m = haswell();
+        let in_qp = QuantParams::from_range(-1.0, 1.0);
+        let out_qp = QuantParams::from_range(-8.0, 8.0);
+        let shift: Vec<f32> = (0..16).map(|j| (j as f32 - 8.0) * 0.1).collect();
+        let ep = crate::conv::Epilogue::bias(shift).with_relu(None);
+        let plan =
+            DirectI8Plan::with_params_fused(&s, &k, &m, 1, in_qp, out_qp, &ep, None).unwrap();
+
+        let packed = plan.pack_input(&input).unwrap();
+        let n_out = s.c_o * s.h_o() * s.w_o();
+        let mut out = vec![0.0f32; n_out];
+        plan.execute_fused_into(packed.data(), &mut out, &mut [], &ep, None).unwrap();
+        let cb = plan.block_params().c_ob;
+        let t = Tensor::from_vec(&[s.c_o / cb, s.h_o(), s.w_o(), cb], out).unwrap();
+        let got = crate::layout::from_blocked_io(&t).unwrap();
+
+        let mut want = conv_naive(&input, &k, &s).unwrap();
+        crate::conv::apply_post(
+            want.data_mut(),
+            IoLayout::Nchw,
+            s.c_o,
+            s.h_o() * s.w_o(),
+            &ep,
+            None,
+        )
+        .unwrap();
+        assert!(got.allclose(&want, 0.12, 0.12), "diff {}", got.max_abs_diff(&want));
+        assert!(got.data().iter().all(|&v| v >= 0.0), "fused relu floor");
+
+        // An epilogue that disagrees with the folded one is rejected —
+        // silently re-applying it would corrupt the integer contract.
+        let mut buf = vec![0.0f32; n_out];
+        assert!(plan
+            .execute_fused_into(packed.data(), &mut buf, &mut [], &crate::conv::Epilogue::none(), None)
+            .is_err());
+        // Residual mismatch on the i8 surface is rejected too.
+        let q = plan.as_quantized().unwrap();
+        let bi = vec![0i8; s.c_i * s.h_i * s.w_i];
+        let mut bo = vec![0i8; n_out];
+        let bad_res = vec![0i8; n_out];
+        assert!(q.execute_i8_fused_into(&bi, &mut bo, Some(&bad_res)).is_err());
     }
 
     #[test]

@@ -29,7 +29,9 @@
 //! taps — an order of magnitude beyond the largest benchmark layer
 //! (VGG 512·3·3 = 4608).
 
-use super::params::{dequantize, quantize, requantize, QuantParams};
+use super::params::{
+    dequantize, quantize, round_half_away, QuantParams, Q_MAX, Q_MIN,
+};
 use crate::conv::microkernel::MAX_WOB;
 use crate::conv::{BlockParams, ConvShape};
 use crate::{Error, Result};
@@ -66,13 +68,58 @@ impl QuantIo for f32 {
 }
 
 /// Geometry + params of one quantized layer execution.
+///
+/// The fused epilogue lives **inside** the requantize step: the conv's
+/// real-valued tail `y = (acc·s_in·s_w_j)·scale_j + shift_j [+ res]`,
+/// followed by ReLU/clamp, collapses in the output quant domain to
+///
+/// ```text
+/// q = clamp(round(acc·mult_j + off_j [+ centered(res)·res_ratio]) + zp_out,
+///           lo, hi)
+/// ```
+///
+/// with `mult_j` pre-folded to `s_in·s_w_j·scale_j/s_out`,
+/// `off_j = shift_j/s_out`, `lo = zp_out` when ReLU (real 0 maps to the
+/// zero point), `hi = round(c/s_out)+zp_out` for a clamp — a **single**
+/// rounding, bit-exactly mirrored by the NumPy reference. With no
+/// epilogue every field is inert and the arithmetic reduces exactly to
+/// the classic `requantize(acc, m, zp)`.
 pub(crate) struct QuantGeom<'a> {
     pub shape: &'a ConvShape,
     pub bp: BlockParams,
     pub in_qp: QuantParams,
     pub out_qp: QuantParams,
-    /// Per-output-channel requantize multipliers (`len == c_o`).
+    /// Per-output-channel requantize multipliers (`len == c_o`), with
+    /// any batch-norm scale already folded in.
     pub mult: &'a [f64],
+    /// Per-channel pre-rounding offsets `shift_j/s_out` (empty = none).
+    pub off: &'a [f64],
+    /// Fused residual operand: its quant params + `s_res/s_out` ratio.
+    pub res: Option<(QuantParams, f64)>,
+    /// Clamp below at `zp_out` after requantize (quantized ReLU).
+    pub relu: bool,
+    /// Quantized-domain upper bound (`round(clamp/s_out) + zp_out`).
+    pub clamp_q: Option<i32>,
+}
+
+impl<'a> QuantGeom<'a> {
+    /// Geometry with no fused epilogue (the classic requantize tail).
+    pub fn plain(
+        shape: &'a ConvShape,
+        bp: BlockParams,
+        in_qp: QuantParams,
+        out_qp: QuantParams,
+        mult: &'a [f64],
+    ) -> QuantGeom<'a> {
+        QuantGeom { shape, bp, in_qp, out_qp, mult, off: &[], res: None, relu: false, clamp_q: None }
+    }
+
+    /// Quantized-domain clamp bounds of the fused activation.
+    fn bounds(&self) -> (i32, i32) {
+        let lo = if self.relu { self.out_qp.zero_point.max(Q_MIN) } else { Q_MIN };
+        let hi = self.clamp_q.map_or(Q_MAX, |c| c.clamp(lo, Q_MAX));
+        (lo, hi)
+    }
 }
 
 /// Allocation-free i8 direct convolution over blocked i8 operands (the
@@ -89,17 +136,20 @@ pub fn conv_direct_blocked_i8_into(
     mult: &[f64],
     out: &mut [i8],
 ) -> Result<()> {
-    let g = QuantGeom { shape, bp, in_qp, out_qp, mult };
-    conv_quant_core(inp, ker, &g, threads, out)
+    let g = QuantGeom::plain(shape, bp, in_qp, out_qp, mult);
+    conv_quant_core(inp, ker, &g, threads, out, None)
 }
 
-/// The generic core shared by the i8 and f32-boundary paths.
+/// The generic core shared by the i8 and f32-boundary paths. `res` is
+/// the fused residual operand (required iff `g.res` is set), in the
+/// output's blocked layout and `g`'s element type.
 pub(crate) fn conv_quant_core<T: QuantIo>(
     inp: &[T],
     ker: &[i8],
     g: &QuantGeom<'_>,
     threads: usize,
     out: &mut [T],
+    res: Option<&[T]>,
 ) -> Result<()> {
     let (shape, bp) = (g.shape, g.bp);
     shape.validate()?;
@@ -114,7 +164,7 @@ pub(crate) fn conv_quant_core<T: QuantIo>(
             inp.len()
         )));
     }
-    let n_ker = shape.c_o * shape.c_i * shape.h_f * shape.w_f;
+    let n_ker = shape.c_o * shape.c_i_per_group() * shape.h_f * shape.w_f;
     if ker.len() != n_ker {
         return Err(Error::Shape(format!(
             "quant blocked kernel has {} elements, expected {n_ker}",
@@ -135,14 +185,76 @@ pub(crate) fn conv_quant_core<T: QuantIo>(
             shape.c_o
         )));
     }
+    if !g.off.is_empty() && g.off.len() != shape.c_o {
+        return Err(Error::Shape(format!(
+            "requant offsets: {} entries for C_o={}",
+            g.off.len(),
+            shape.c_o
+        )));
+    }
+    if g.res.is_some() != res.is_some() {
+        return Err(Error::Shape("fused residual operand mismatch".into()));
+    }
+    if let Some(r) = res {
+        if r.len() != n_out {
+            return Err(Error::Shape(format!(
+                "fused residual has {} elements, expected {n_out}",
+                r.len()
+            )));
+        }
+    }
     let threads = threads.max(1);
-    match bp.c_ob {
-        1 => run_q::<T, 1>(inp, ker, g, threads, out),
-        2 => run_q::<T, 2>(inp, ker, g, threads, out),
-        4 => run_q::<T, 4>(inp, ker, g, threads, out),
-        8 => run_q::<T, 8>(inp, ker, g, threads, out),
-        16 => run_q::<T, 16>(inp, ker, g, threads, out),
-        32 => run_q::<T, 32>(inp, ker, g, threads, out),
+    if shape.is_depthwise() {
+        return dispatch_dw_q(inp, ker, g, threads, out, res);
+    }
+    if shape.groups == 1 {
+        return dispatch_q(inp, ker, g, threads, out, res);
+    }
+    // Grouped: block-aligned contiguous slices per group, exactly like
+    // the f32 core.
+    let (c_ipg, c_opg) = (shape.c_i_per_group(), shape.c_o_per_group());
+    let gs = ConvShape { c_i: c_ipg, c_o: c_opg, groups: 1, ..shape.clone() };
+    let (in_len, k_len) = (c_ipg * shape.h_i * shape.w_i, c_opg * c_ipg * shape.h_f * shape.w_f);
+    let out_len = c_opg * shape.h_o() * shape.w_o();
+    for grp in 0..shape.groups {
+        let g2 = QuantGeom {
+            shape: &gs,
+            bp: g.bp,
+            in_qp: g.in_qp,
+            out_qp: g.out_qp,
+            mult: &g.mult[grp * c_opg..][..c_opg],
+            off: if g.off.is_empty() { &[] } else { &g.off[grp * c_opg..][..c_opg] },
+            res: g.res,
+            relu: g.relu,
+            clamp_q: g.clamp_q,
+        };
+        dispatch_q(
+            &inp[grp * in_len..][..in_len],
+            &ker[grp * k_len..][..k_len],
+            &g2,
+            threads,
+            &mut out[grp * out_len..][..out_len],
+            res.map(|r| &r[grp * out_len..][..out_len]),
+        )?;
+    }
+    Ok(())
+}
+
+fn dispatch_q<T: QuantIo>(
+    inp: &[T],
+    ker: &[i8],
+    g: &QuantGeom<'_>,
+    threads: usize,
+    out: &mut [T],
+    res: Option<&[T]>,
+) -> Result<()> {
+    match g.bp.c_ob {
+        1 => run_q::<T, 1>(inp, ker, g, threads, out, res),
+        2 => run_q::<T, 2>(inp, ker, g, threads, out, res),
+        4 => run_q::<T, 4>(inp, ker, g, threads, out, res),
+        8 => run_q::<T, 8>(inp, ker, g, threads, out, res),
+        16 => run_q::<T, 16>(inp, ker, g, threads, out, res),
+        32 => run_q::<T, 32>(inp, ker, g, threads, out, res),
         other => Err(Error::Shape(format!(
             "unsupported c_ob={other} (supported: 1,2,4,8,16,32)"
         ))),
@@ -155,13 +267,15 @@ fn run_q<T: QuantIo, const COB: usize>(
     g: &QuantGeom<'_>,
     threads: usize,
     out: &mut [T],
+    res: Option<&[T]>,
 ) -> Result<()> {
     let (h_o, w_o) = (g.shape.h_o(), g.shape.w_o());
     let n_ob = g.shape.c_o / COB;
     let blk_len = h_o * w_o * COB;
     if threads <= 1 || n_ob <= 1 {
         for (jb, out_blk) in out.chunks_mut(blk_len).enumerate() {
-            conv_block_q::<T, COB>(inp, ker, g, jb, out_blk);
+            let res_blk = res.map(|r| &r[jb * blk_len..][..blk_len]);
+            conv_block_q::<T, COB>(inp, ker, g, jb, out_blk, res_blk);
         }
     } else {
         // §3.2 thread partition over C_o blocks, as in the f32 kernel.
@@ -174,13 +288,25 @@ fn run_q<T: QuantIo, const COB: usize>(
             for chunk in per_thread {
                 scope.spawn(move || {
                     for (jb, out_blk) in chunk {
-                        conv_block_q::<T, COB>(inp, ker, g, jb, out_blk);
+                        let res_blk = res.map(|r| &r[jb * blk_len..][..blk_len]);
+                        conv_block_q::<T, COB>(inp, ker, g, jb, out_blk, res_blk);
                     }
                 });
             }
         });
     }
     Ok(())
+}
+
+/// The fused requantize epilogue for one accumulator: real-tail folded
+/// into a single f64 rounding (see [`QuantGeom`] docs). With no fused
+/// epilogue (`off == 0`, no residual, full bounds) this is bit-for-bit
+/// the classic `requantize(acc, m, zp)`.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn requant_ep(acc: i32, m: f64, off: f64, res_term: f64, zp: i32, lo: i32, hi: i32) -> i8 {
+    let q = round_half_away(acc as f64 * m + off + res_term) + zp as f64;
+    (q.clamp(lo as f64, hi as f64)) as i8
 }
 
 /// One output-channel block: full `C_i` reduction in i32 per register
@@ -191,12 +317,13 @@ fn conv_block_q<T: QuantIo, const COB: usize>(
     g: &QuantGeom<'_>,
     jb: usize,
     out_blk: &mut [T],
+    res_blk: Option<&[T]>,
 ) {
     let s = g.shape;
     let (h_o, w_o) = (s.h_o(), s.w_o());
     let (h_i, w_i) = (s.h_i, s.w_i);
     let (h_f, w_f) = (s.h_f, s.w_f);
-    let (stride, pad) = (s.stride, s.pad);
+    let (stride, pad, dil) = (s.stride, s.pad, s.dilation);
     let c_ib = g.bp.c_ib;
     let n_ib = s.c_i / c_ib;
     let ker_ib = h_f * w_f * c_ib * COB;
@@ -204,6 +331,7 @@ fn conv_block_q<T: QuantIo, const COB: usize>(
     let islab_len = h_i * w_i * c_ib;
     let row_stride = w_i * c_ib;
     let tw_max = g.bp.w_ob.min(MAX_WOB);
+    let (lo, hi) = g.bounds();
 
     for l in 0..h_o {
         let mut k0 = 0usize;
@@ -214,14 +342,14 @@ fn conv_block_q<T: QuantIo, const COB: usize>(
                 let kslab = &ker[jb * ker_jb + ib * ker_ib..][..ker_ib];
                 let islab = &inp[ib * islab_len..][..islab_len];
                 for n in 0..h_f {
-                    let iy = (l * stride + n) as isize - pad as isize;
+                    let iy = (l * stride + n * dil) as isize - pad as isize;
                     if iy < 0 || iy >= h_i as isize {
                         continue; // whole kernel row outside the image
                     }
                     let row = &islab[iy as usize * row_stride..][..row_stride];
                     for m in 0..w_f {
                         let kptr = &kslab[(n * w_f + m) * c_ib * COB..][..c_ib * COB];
-                        let x0 = (k0 * stride + m) as isize - pad as isize;
+                        let x0 = (k0 * stride + m * dil) as isize - pad as isize;
                         let x_last = x0 + ((tw - 1) * stride) as isize;
                         if x0 >= 0 && x_last < w_i as isize {
                             // Interior fast path: every tile column valid.
@@ -259,10 +387,21 @@ fn conv_block_q<T: QuantIo, const COB: usize>(
             }
             // Fused requantize epilogue: i32 -> i8 (or dequantized f32).
             let tile = &mut out_blk[(l * w_o + k0) * COB..][..tw * COB];
+            let res_tile = res_blk.map(|r| &r[(l * w_o + k0) * COB..][..tw * COB]);
             let mults = &g.mult[jb * COB..][..COB];
+            let offs = (!g.off.is_empty()).then(|| &g.off[jb * COB..][..COB]);
             for kk in 0..tw {
                 for j in 0..COB {
-                    let q = requantize(acc[kk][j], mults[j], g.out_qp.zero_point);
+                    let off = offs.map_or(0.0, |o| o[j]);
+                    let res_term = match (g.res, res_tile) {
+                        (Some((rqp, ratio)), Some(rt)) => {
+                            rt[kk * COB + j].to_centered(&rqp) as f64 * ratio
+                        }
+                        _ => 0.0,
+                    };
+                    let q = requant_ep(
+                        acc[kk][j], mults[j], off, res_term, g.out_qp.zero_point, lo, hi,
+                    );
                     tile[kk * COB + j] = T::from_q(q, &g.out_qp);
                 }
             }
@@ -271,16 +410,189 @@ fn conv_block_q<T: QuantIo, const COB: usize>(
     }
 }
 
+// ---------------------------------------------------------------------
+// Depthwise (groups == C_i == C_o): lane-wise taps over `c_b` blocked
+// channels — the i8 twin of `conv::depthwise`. Per-group slicing does
+// not apply (a block interleaves `c_b` groups), so the channel lanes
+// ARE the groups.
+// ---------------------------------------------------------------------
+
+fn dispatch_dw_q<T: QuantIo>(
+    inp: &[T],
+    ker: &[i8],
+    g: &QuantGeom<'_>,
+    threads: usize,
+    out: &mut [T],
+    res: Option<&[T]>,
+) -> Result<()> {
+    match g.bp.c_ob {
+        1 => run_dw_q::<T, 1>(inp, ker, g, threads, out, res),
+        2 => run_dw_q::<T, 2>(inp, ker, g, threads, out, res),
+        4 => run_dw_q::<T, 4>(inp, ker, g, threads, out, res),
+        8 => run_dw_q::<T, 8>(inp, ker, g, threads, out, res),
+        16 => run_dw_q::<T, 16>(inp, ker, g, threads, out, res),
+        32 => run_dw_q::<T, 32>(inp, ker, g, threads, out, res),
+        other => Err(Error::Shape(format!(
+            "unsupported depthwise c_b={other} (supported: 1,2,4,8,16,32)"
+        ))),
+    }
+}
+
+fn run_dw_q<T: QuantIo, const CB: usize>(
+    inp: &[T],
+    ker: &[i8],
+    g: &QuantGeom<'_>,
+    threads: usize,
+    out: &mut [T],
+    res: Option<&[T]>,
+) -> Result<()> {
+    let s = g.shape;
+    let (h_o, w_o) = (s.h_o(), s.w_o());
+    let n_cb = s.c_o / CB;
+    let blk_out = h_o * w_o * CB;
+    let blk_in = s.h_i * s.w_i * CB;
+    let blk_ker = s.h_f * s.w_f * CB;
+    if threads <= 1 || n_cb <= 1 {
+        for (cb, out_blk) in out.chunks_mut(blk_out).enumerate() {
+            let res_blk = res.map(|r| &r[cb * blk_out..][..blk_out]);
+            dw_block_q::<T, CB>(
+                &inp[cb * blk_in..][..blk_in],
+                &ker[cb * blk_ker..][..blk_ker],
+                g,
+                cb,
+                out_blk,
+                res_blk,
+            );
+        }
+    } else {
+        let mut per_thread: Vec<Vec<(usize, &mut [T])>> =
+            (0..threads).map(|_| Vec::new()).collect();
+        for (idx, b) in out.chunks_mut(blk_out).enumerate() {
+            per_thread[idx % threads].push((idx, b));
+        }
+        std::thread::scope(|scope| {
+            for chunk in per_thread {
+                scope.spawn(move || {
+                    for (cb, out_blk) in chunk {
+                        let res_blk = res.map(|r| &r[cb * blk_out..][..blk_out]);
+                        dw_block_q::<T, CB>(
+                            &inp[cb * blk_in..][..blk_in],
+                            &ker[cb * blk_ker..][..blk_ker],
+                            g,
+                            cb,
+                            out_blk,
+                            res_blk,
+                        );
+                    }
+                });
+            }
+        });
+    }
+    Ok(())
+}
+
+/// One depthwise channel block: `inp_blk [H_i][W_i][CB]`, `ker_blk
+/// [H_f][W_f][CB]` (i8), `out_blk [H_o][W_o][CB]`; each lane reduces
+/// independently, then takes the fused requantize epilogue.
+fn dw_block_q<T: QuantIo, const CB: usize>(
+    inp_blk: &[T],
+    ker_blk: &[i8],
+    g: &QuantGeom<'_>,
+    cb: usize,
+    out_blk: &mut [T],
+    res_blk: Option<&[T]>,
+) {
+    let s = g.shape;
+    let (h_o, w_o) = (s.h_o(), s.w_o());
+    let (h_i, w_i) = (s.h_i, s.w_i);
+    let (stride, pad, dil) = (s.stride, s.pad, s.dilation);
+    let row_stride = w_i * CB;
+    let mults = &g.mult[cb * CB..][..CB];
+    let offs = (!g.off.is_empty()).then(|| &g.off[cb * CB..][..CB]);
+    let (lo, hi) = g.bounds();
+    for l in 0..h_o {
+        for k in 0..w_o {
+            let mut acc = [0i32; CB];
+            for n in 0..s.h_f {
+                let iy = (l * stride + n * dil) as isize - pad as isize;
+                if iy < 0 || iy >= h_i as isize {
+                    continue;
+                }
+                let row = &inp_blk[iy as usize * row_stride..][..row_stride];
+                for m in 0..s.w_f {
+                    let ix = (k * stride + m * dil) as isize - pad as isize;
+                    if ix < 0 || ix >= w_i as isize {
+                        continue;
+                    }
+                    let x = &row[ix as usize * CB..][..CB];
+                    let w = &ker_blk[(n * s.w_f + m) * CB..][..CB];
+                    for j in 0..CB {
+                        acc[j] += x[j].to_centered(&g.in_qp) * w[j] as i32;
+                    }
+                }
+            }
+            let at = (l * w_o + k) * CB;
+            let tile = &mut out_blk[at..][..CB];
+            let res_tile = res_blk.map(|r| &r[at..][..CB]);
+            for j in 0..CB {
+                let off = offs.map_or(0.0, |o| o[j]);
+                let res_term = match (g.res, res_tile) {
+                    (Some((rqp, ratio)), Some(rt)) => rt[j].to_centered(&rqp) as f64 * ratio,
+                    _ => 0.0,
+                };
+                let q = requant_ep(acc[j], mults[j], off, res_term, g.out_qp.zero_point, lo, hi);
+                tile[j] = T::from_q(q, &g.out_qp);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::params::{per_channel_weight_scales, requant_multiplier};
+    use crate::quant::params::{per_channel_weight_scales, requant_multiplier, requantize};
     use crate::tensor::Tensor;
+
+    /// Scalar i32 accumulator of one output element over NCHW quantized
+    /// operands — group- and dilation-aware.
+    fn acc_q8(
+        x_q: &[i8],
+        w_q: &[i8],
+        s: &ConvShape,
+        in_qp: QuantParams,
+        o: usize,
+        y: usize,
+        x: usize,
+    ) -> i32 {
+        let (c_ipg, c_opg) = (s.c_i_per_group(), s.c_o_per_group());
+        let mut acc = 0i32;
+        for ci in 0..c_ipg {
+            let c = (o / c_opg) * c_ipg + ci;
+            for n in 0..s.h_f {
+                let iy = (y * s.stride + n * s.dilation) as isize - s.pad as isize;
+                if iy < 0 || iy >= s.h_i as isize {
+                    continue;
+                }
+                for m in 0..s.w_f {
+                    let ix = (x * s.stride + m * s.dilation) as isize - s.pad as isize;
+                    if ix < 0 || ix >= s.w_i as isize {
+                        continue;
+                    }
+                    let xv = x_q[(c * s.h_i + iy as usize) * s.w_i + ix as usize] as i32
+                        - in_qp.zero_point;
+                    let wv = w_q[((o * c_ipg + ci) * s.h_f + n) * s.w_f + m] as i32;
+                    acc += xv * wv;
+                }
+            }
+        }
+        acc
+    }
 
     /// Scalar NCHW oracle performing the documented integer arithmetic
     /// directly (no blocking) — the in-crate cross-check; the NumPy
     /// reference in `python/golden_gen.py` pins the same contract
-    /// externally.
+    /// externally. Deliberately ends in the *classic* `requantize` so a
+    /// match also proves the inert fused path is backward compatible.
     #[allow(clippy::too_many_arguments)]
     fn naive_q8(
         x_q: &[i8],
@@ -295,28 +607,48 @@ mod tests {
         for o in 0..s.c_o {
             for y in 0..h_o {
                 for x in 0..w_o {
-                    let mut acc = 0i32;
-                    for c in 0..s.c_i {
-                        for n in 0..s.h_f {
-                            let iy = (y * s.stride + n) as isize - s.pad as isize;
-                            if iy < 0 || iy >= s.h_i as isize {
-                                continue;
-                            }
-                            for m in 0..s.w_f {
-                                let ix = (x * s.stride + m) as isize - s.pad as isize;
-                                if ix < 0 || ix >= s.w_i as isize {
-                                    continue;
-                                }
-                                let xv = x_q[(c * s.h_i + iy as usize) * s.w_i + ix as usize]
-                                    as i32
-                                    - in_qp.zero_point;
-                                let wv = w_q[((o * s.c_i + c) * s.h_f + n) * s.w_f + m] as i32;
-                                acc += xv * wv;
-                            }
-                        }
-                    }
+                    let acc = acc_q8(x_q, w_q, s, in_qp, o, y, x);
                     out[(o * h_o + y) * w_o + x] =
                         requantize(acc, mult[o], out_qp.zero_point);
+                }
+            }
+        }
+        out
+    }
+
+    /// Fused-epilogue oracle: the single-rounding formula from the
+    /// [`QuantGeom`] docs, written out longhand over NCHW data.
+    #[allow(clippy::too_many_arguments)]
+    fn naive_q8_ep(
+        x_q: &[i8],
+        w_q: &[i8],
+        s: &ConvShape,
+        in_qp: QuantParams,
+        out_qp: QuantParams,
+        mult: &[f64],
+        off: &[f64],
+        res: Option<(&[i8], QuantParams, f64)>,
+        relu: bool,
+        clamp_q: Option<i32>,
+    ) -> Vec<i8> {
+        let (h_o, w_o) = (s.h_o(), s.w_o());
+        let lo = if relu { out_qp.zero_point.max(Q_MIN) } else { Q_MIN };
+        let hi = clamp_q.map_or(Q_MAX, |c| c.clamp(lo, Q_MAX));
+        let mut out = vec![0i8; s.c_o * h_o * w_o];
+        for o in 0..s.c_o {
+            for y in 0..h_o {
+                for x in 0..w_o {
+                    let acc = acc_q8(x_q, w_q, s, in_qp, o, y, x);
+                    let mut v = acc as f64 * mult[o];
+                    if !off.is_empty() {
+                        v += off[o];
+                    }
+                    if let Some((r, rqp, ratio)) = res {
+                        let rc = r[(o * h_o + y) * w_o + x] as i32 - rqp.zero_point;
+                        v += rc as f64 * ratio;
+                    }
+                    let q = round_half_away(v) + out_qp.zero_point as f64;
+                    out[(o * h_o + y) * w_o + x] = q.clamp(lo as f64, hi as f64) as i8;
                 }
             }
         }
@@ -339,16 +671,36 @@ mod tests {
         dst
     }
 
+    /// Pack an NCHW-ordered quantized kernel into the blocked layout the
+    /// core consumes: per-group `[c_opg/c_ob][c_ipg/c_ib][H_f][W_f][c_ib]
+    /// [c_ob]` slabs concatenated, or `[C/c_b][H_f][W_f][c_b]` lanes for
+    /// depthwise.
     fn pack_i8_kernel(w_q: &[i8], s: &ConvShape, c_ob: usize, c_ib: usize) -> Vec<i8> {
+        let (c_ipg, c_opg) = (s.c_i_per_group(), s.c_o_per_group());
         let mut out = vec![0i8; w_q.len()];
-        for o in 0..s.c_o {
-            for i in 0..s.c_i {
+        if s.is_depthwise() {
+            for c in 0..s.c_o {
                 for n in 0..s.h_f {
                     for m in 0..s.w_f {
-                        let d = crate::layout::blocked_kernel_index(
-                            o, i, n, m, s.c_i, s.h_f, s.w_f, c_ib, c_ob,
-                        );
-                        out[d] = w_q[((o * s.c_i + i) * s.h_f + n) * s.w_f + m];
+                        let d = ((c / c_ob) * s.h_f * s.w_f + n * s.w_f + m) * c_ob + c % c_ob;
+                        out[d] = w_q[(c * s.h_f + n) * s.w_f + m];
+                    }
+                }
+            }
+            return out;
+        }
+        let per_g = c_opg * c_ipg * s.h_f * s.w_f;
+        for grp in 0..s.groups {
+            for o in 0..c_opg {
+                for i in 0..c_ipg {
+                    for n in 0..s.h_f {
+                        for m in 0..s.w_f {
+                            let d = crate::layout::blocked_kernel_index(
+                                o, i, n, m, c_ipg, s.h_f, s.w_f, c_ib, c_ob,
+                            );
+                            out[grp * per_g + d] = w_q
+                                [(((grp * c_opg + o) * c_ipg + i) * s.h_f + n) * s.w_f + m];
+                        }
                     }
                 }
             }
@@ -357,14 +709,15 @@ mod tests {
     }
 
     fn check(s: &ConvShape, bp: BlockParams, threads: usize, seed: u64) {
+        let c_ipg = s.c_i_per_group();
         let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], seed);
-        let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], seed + 1);
+        let kernel = Tensor::random(&[s.c_o, c_ipg, s.h_f, s.w_f], seed + 1);
         let in_qp = QuantParams::from_range(-1.0, 1.0);
         let out_qp = QuantParams::from_range(-20.0, 20.0);
         let w_scales = per_channel_weight_scales(&kernel);
         let w_q: Vec<i8> = kernel
             .data()
-            .chunks(s.c_i * s.h_f * s.w_f)
+            .chunks(c_ipg * s.h_f * s.w_f)
             .zip(&w_scales)
             .flat_map(|(ch, &sc)| {
                 ch.iter()
@@ -410,6 +763,143 @@ mod tests {
             let s = ConvShape::new(4, 8, 8, 32, 3, 3, 1, 1);
             check(&s, BlockParams::new(cob, 4, 2), 1, 31 + cob as u64);
         }
+    }
+
+    #[test]
+    fn grouped_and_dilated_i8_match_oracle() {
+        check(
+            &ConvShape::new(8, 8, 8, 16, 3, 3, 1, 1).with_groups(2),
+            BlockParams::new(4, 4, 4),
+            1,
+            51,
+        );
+        check(
+            &ConvShape::new(8, 8, 8, 16, 3, 3, 1, 1).with_groups(4),
+            BlockParams::new(2, 4, 2),
+            3,
+            52,
+        );
+        check(
+            &ConvShape::new(4, 9, 9, 8, 3, 3, 1, 2).with_dilation(2),
+            BlockParams::new(8, 4, 4),
+            1,
+            53,
+        );
+    }
+
+    #[test]
+    fn depthwise_i8_matches_oracle() {
+        let s = ConvShape::new(8, 9, 9, 8, 3, 3, 1, 1).with_groups(8);
+        check(&s, BlockParams::new(4, 4, 4), 1, 61);
+        check(&s, BlockParams::new(8, 4, 8), 3, 62);
+        // strided + dilated depthwise
+        let s2 = ConvShape::new(4, 11, 11, 4, 3, 3, 2, 2).with_groups(4).with_dilation(2);
+        check(&s2, BlockParams::new(4, 2, 4), 2, 63);
+    }
+
+    /// The fused requantize epilogue (per-channel offset + residual +
+    /// ReLU + clamp) is exact against the longhand single-rounding
+    /// oracle, for both the standard and depthwise cores.
+    #[test]
+    fn fused_requant_epilogue_is_exact() {
+        for (s, bp) in [
+            (ConvShape::new(8, 8, 8, 16, 3, 3, 1, 1), BlockParams::new(8, 4, 4)),
+            (
+                ConvShape::new(8, 9, 9, 8, 3, 3, 1, 1).with_groups(8),
+                BlockParams::new(4, 4, 4),
+            ),
+        ] {
+            let c_ipg = s.c_i_per_group();
+            let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 71);
+            let kernel = Tensor::random(&[s.c_o, c_ipg, s.h_f, s.w_f], 72);
+            let in_qp = QuantParams::from_range(-1.0, 1.0);
+            let out_qp = QuantParams::from_range(-20.0, 20.0);
+            let res_qp = QuantParams::from_range(-10.0, 10.0);
+            let w_scales = per_channel_weight_scales(&kernel);
+            let w_q: Vec<i8> = kernel
+                .data()
+                .chunks(c_ipg * s.h_f * s.w_f)
+                .zip(&w_scales)
+                .flat_map(|(ch, &sc)| {
+                    ch.iter()
+                        .map(|&v| quantize(v, &QuantParams { scale: sc, zero_point: 0 }))
+                        .collect::<Vec<i8>>()
+                })
+                .collect();
+            let mult: Vec<f64> = w_scales
+                .iter()
+                .map(|&sw| requant_multiplier(in_qp.scale, sw, out_qp.scale))
+                .collect();
+            let off: Vec<f64> = (0..s.c_o).map(|j| (j as f64 - 3.0) * 0.37).collect();
+            let res_f = Tensor::random(&[s.c_o, s.h_o(), s.w_o()], 73);
+            let res_q = quantize_nchw(&res_f, &res_qp);
+            let ratio = res_qp.scale as f64 / out_qp.scale as f64;
+            let clamp_q =
+                Some(round_half_away(2.0 / out_qp.scale as f64) as i32 + out_qp.zero_point);
+
+            let x_q = quantize_nchw(&input, &in_qp);
+            let want = naive_q8_ep(
+                &x_q,
+                &w_q,
+                &s,
+                in_qp,
+                out_qp,
+                &mult,
+                &off,
+                Some((&res_q, res_qp, ratio)),
+                true,
+                clamp_q,
+            );
+
+            let g = QuantGeom {
+                shape: &s,
+                bp,
+                in_qp,
+                out_qp,
+                mult: &mult,
+                off: &off,
+                res: Some((res_qp, ratio)),
+                relu: true,
+                clamp_q,
+            };
+            let bi = pack_i8_io(&x_q, s.c_i, s.h_i, s.w_i, bp.c_ib);
+            let bk = pack_i8_kernel(&w_q, &s, bp.c_ob, bp.c_ib);
+            let br = pack_i8_io(&res_q, s.c_o, s.h_o(), s.w_o(), bp.c_ob);
+            let mut bo = vec![0i8; s.c_o * s.h_o() * s.w_o()];
+            conv_quant_core(&bi, &bk, &g, 3, &mut bo, Some(&br)).unwrap();
+            let got = unpack_i8_io(&bo, s.c_o, s.h_o(), s.w_o(), bp.c_ob);
+            assert_eq!(got, want, "fused i8 mismatch on {s:?}");
+            // The fused ReLU floor and clamp ceiling must actually bite
+            // for this to be a meaningful test.
+            assert!(want.iter().any(|&q| q == out_qp.zero_point as i8));
+            assert!(want.iter().any(|&q| q == clamp_q.unwrap() as i8));
+        }
+    }
+
+    #[test]
+    fn fused_rejects_mismatched_epilogue_operands() {
+        let s = ConvShape::new(4, 6, 6, 8, 3, 3, 1, 1);
+        let bp = BlockParams::new(8, 4, 4);
+        let qp = QuantParams::IDENT;
+        let mult = vec![1.0f64; s.c_o];
+        let inp = vec![0i8; s.c_i * s.h_i * s.w_i];
+        let ker = vec![0i8; s.c_o * s.c_i * 9];
+        let n_out = s.c_o * s.h_o() * s.w_o();
+        let mut out = vec![0i8; n_out];
+        // residual geometry set but operand missing
+        let g = QuantGeom {
+            res: Some((qp, 1.0)),
+            ..QuantGeom::plain(&s, bp, qp, qp, &mult)
+        };
+        assert!(conv_quant_core(&inp, &ker, &g, 1, &mut out, None).is_err());
+        // operand passed but geometry plain
+        let g2 = QuantGeom::plain(&s, bp, qp, qp, &mult);
+        let res = vec![0i8; n_out];
+        assert!(conv_quant_core(&inp, &ker, &g2, 1, &mut out, Some(&res)).is_err());
+        // wrong offset count
+        let bad_off = vec![0.0f64; 3];
+        let g3 = QuantGeom { off: &bad_off, ..QuantGeom::plain(&s, bp, qp, qp, &mult) };
+        assert!(conv_quant_core(&inp, &ker, &g3, 1, &mut out, None).is_err());
     }
 
     #[test]

@@ -81,4 +81,32 @@ pub trait QuantExecute: Send + Sync {
     /// Execute the layer on i8 operands (blocked layouts, validated by
     /// length). Allocation-free with `threads <= 1`.
     fn execute_i8_into(&self, input: &[i8], output: &mut [i8]) -> Result<()>;
+
+    /// Execute with a fused residual operand (i8, output layout,
+    /// quantized with the params baked into the plan at build time).
+    /// Plans built without a fused residual reject `Some`; the default
+    /// rejects any residual (scale/shift/ReLU epilogues don't need this
+    /// entry — they are folded into the plan's requantize step and flow
+    /// through [`Self::execute_i8_into`] transparently).
+    fn execute_i8_fused_into(
+        &self,
+        input: &[i8],
+        output: &mut [i8],
+        res: Option<&[i8]>,
+    ) -> Result<()> {
+        match res {
+            None => self.execute_i8_into(input, output),
+            Some(_) => Err(crate::Error::Shape(
+                "this quantized plan has no fused residual input".into(),
+            )),
+        }
+    }
+
+    /// Quantization of the fused residual operand baked into the plan,
+    /// `None` when the plan has no fused residual. Schedulers validate
+    /// this against the shortcut edge's calibration before wiring a
+    /// residual region into [`Self::execute_i8_fused_into`].
+    fn residual_qparams(&self) -> Option<QuantParams> {
+        None
+    }
 }

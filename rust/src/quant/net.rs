@@ -22,7 +22,8 @@
 use crate::arch::Machine;
 use crate::engine::{add_nchw, avg_pool_nchw, pool_nchw, BackendRegistry, NetRunner};
 use crate::nets::{
-    net_kernel, GraphOp, Layer, Model, NetGraph, NetPlans, PlannedLayer, PoolKind,
+    net_bn_params, net_kernel, FusedNet, GraphOp, Layer, LayerFusion, Model, NetGraph, NetPlans,
+    PlannedLayer, PoolKind,
 };
 use crate::tensor::Tensor;
 use crate::{Error, Result};
@@ -47,6 +48,7 @@ pub fn calibrate_graph(
 ) -> Result<Vec<QuantParams>> {
     graph.validate(shapes)?;
     let registry = BackendRegistry::shared();
+    let bn_ords = graph.bn_ordinals();
     let mut outs: Vec<Option<Tensor>> = (0..graph.len()).map(|_| None).collect();
     let mut remaining = graph.consumer_counts();
     let mut params = Vec::with_capacity(graph.len());
@@ -86,6 +88,32 @@ pub fn calibrate_graph(
                     acc = add_nchw(&acc, outs[p].as_ref().expect("topo"))?;
                 }
                 acc
+            }
+            GraphOp::Relu { clamp } => {
+                let src = outs[node.preds[0]].as_ref().expect("topological order");
+                let mut d = src.data().to_vec();
+                for v in &mut d {
+                    *v = v.max(0.0);
+                    if let Some(cl) = clamp {
+                        *v = v.min(*cl);
+                    }
+                }
+                Tensor::from_vec(src.shape(), d)?
+            }
+            GraphOp::BatchNorm => {
+                let src = outs[node.preds[0]].as_ref().expect("topological order");
+                let (c, h, w) = (src.shape()[0], src.shape()[1], src.shape()[2]);
+                let (scale, shift) =
+                    net_bn_params(bn_ords[i].expect("BatchNorm node has an ordinal"), c);
+                let mut d = src.data().to_vec();
+                for ci in 0..c {
+                    for j in 0..h * w {
+                        let v = &mut d[ci * h * w + j];
+                        *v *= scale[ci];
+                        *v += shift[ci];
+                    }
+                }
+                Tensor::from_vec(&[c, h, w], d)?
             }
         };
         if !t.data().iter().all(|v| v.is_finite()) {
@@ -130,13 +158,42 @@ impl QuantNet {
         Self::with_node_params(&model.name, &model.graph, &model.shapes, machine, threads, params)
     }
 
+    /// Calibrate and quantize a [`Model`] against a fusion annotation:
+    /// every fused conv gets its epilogue baked into the requantize step
+    /// ([`DirectI8Plan::with_params_fused`]) with the **chain tail
+    /// edge's** calibrated output params — the single-rounding integer
+    /// pipeline the paper's zero-overhead accounting wants. Calibration
+    /// itself always runs the unfused f32 reference (fusion is a
+    /// scheduling choice, not a semantics change, so the tail ranges
+    /// are identical).
+    pub fn build_model_fused(
+        model: &Model,
+        fused: &FusedNet,
+        machine: &Machine,
+        threads: usize,
+    ) -> Result<QuantNet> {
+        let dims = model.validate()?;
+        let d = dims[0];
+        let input = Tensor::random(&[d.c, d.h, d.w], CALIBRATION_SEED);
+        let params = calibrate_graph(&model.graph, &model.shapes, machine, threads, &input)?;
+        Self::quantize(
+            &model.name,
+            &model.graph,
+            &model.shapes,
+            machine,
+            threads,
+            params,
+            Some(fused),
+        )
+    }
+
     /// Calibrate and quantize a built-in net by name (every net with a
-    /// builder program: `alexnet`, `googlenet`, `vgg16`,
-    /// `resnet_micro`).
+    /// builder program: `alexnet`, `googlenet`, `vgg16`, `resnet_micro`,
+    /// `mobilenet_micro`).
     pub fn build(net: &str, machine: &Machine, threads: usize) -> Result<QuantNet> {
         let model = crate::nets::model_by_name(net).ok_or_else(|| {
             Error::Parse(format!(
-                "unknown net '{net}' (alexnet|googlenet|vgg16|resnet_micro)"
+                "unknown net '{net}' (alexnet|googlenet|vgg16|resnet_micro|mobilenet_micro)"
             ))
         })?;
         Self::build_model(&model, machine, threads)
@@ -155,6 +212,33 @@ impl QuantNet {
         threads: usize,
         node_params: Vec<QuantParams>,
     ) -> Result<QuantNet> {
+        Self::quantize(name, graph, shapes, machine, threads, node_params, None)
+    }
+
+    /// Prescribed-params quantization against a fusion annotation — the
+    /// fused twin of [`QuantNet::with_node_params`] (the fused golden
+    /// fixtures pin exact integers through this entry).
+    pub fn with_node_params_fused(
+        name: &str,
+        graph: &NetGraph,
+        shapes: &[crate::conv::ConvShape],
+        machine: &Machine,
+        threads: usize,
+        node_params: Vec<QuantParams>,
+        fused: &FusedNet,
+    ) -> Result<QuantNet> {
+        Self::quantize(name, graph, shapes, machine, threads, node_params, Some(fused))
+    }
+
+    fn quantize(
+        name: &str,
+        graph: &NetGraph,
+        shapes: &[crate::conv::ConvShape],
+        machine: &Machine,
+        threads: usize,
+        node_params: Vec<QuantParams>,
+        fused: Option<&FusedNet>,
+    ) -> Result<QuantNet> {
         graph.validate(shapes)?;
         if node_params.len() != graph.len() {
             return Err(Error::Shape(format!(
@@ -162,6 +246,18 @@ impl QuantNet {
                 node_params.len(),
                 graph.len()
             )));
+        }
+        if let Some(f) = fused {
+            if f.roles.len() != graph.len() || f.fusions.len() != shapes.len() {
+                return Err(Error::Shape(format!(
+                    "quantizing '{name}': fusion annotation covers {} nodes / {} layers, \
+                     graph has {} / {}",
+                    f.roles.len(),
+                    f.fusions.len(),
+                    graph.len(),
+                    shapes.len()
+                )));
+            }
         }
         let mut planned: Vec<Option<PlannedLayer>> = (0..shapes.len()).map(|_| None).collect();
         for (i, node) in graph.nodes.iter().enumerate() {
@@ -171,10 +267,25 @@ impl QuantNet {
             let layer = *layer;
             let s = &shapes[layer];
             let kernel = net_kernel(layer, s);
+            // A fused conv requantizes straight to its chain tail's
+            // calibrated edge; its epilogue (BN scale/shift, residual
+            // ratio, ReLU floor / clamp ceiling) folds into that one
+            // rounding. Unfused convs keep their own edge.
+            let (out_node, fusion) = match fused {
+                Some(f) => (f.tail[i], f.fusions[layer].clone()),
+                None => (i, LayerFusion::default()),
+            };
             let in_qp = node_params[node.preds[0]];
-            let out_qp = node_params[i];
-            let plan =
-                DirectI8Plan::with_params(s, &kernel, machine, threads, in_qp, out_qp)?;
+            let out_qp = node_params[out_node];
+            let plan = if fusion.is_none() {
+                DirectI8Plan::with_params(s, &kernel, machine, threads, in_qp, out_qp)?
+            } else {
+                let ep = fusion.epilogue(s.c_o);
+                let res_qp = fusion.res_node.map(|r| node_params[r]);
+                DirectI8Plan::with_params_fused(
+                    s, &kernel, machine, threads, in_qp, out_qp, &ep, res_qp,
+                )?
+            };
             planned[layer] = Some(PlannedLayer {
                 layer: Layer { net: name.to_string(), name: node.name.clone(), shape: s.clone() },
                 backend: "direct_i8",
@@ -196,6 +307,12 @@ impl QuantNet {
     /// Compile to the i8 byte-arena executor.
     pub fn runner(self, lanes: usize) -> Result<NetRunner> {
         NetRunner::from_graph_quant(self.plans, self.graph, lanes, &self.node_params)
+    }
+
+    /// Compile to the i8 byte-arena executor under the same fusion
+    /// annotation the net was quantized with.
+    pub fn runner_fused(self, lanes: usize, fused: &FusedNet) -> Result<NetRunner> {
+        NetRunner::from_graph_quant_fused(self.plans, self.graph, lanes, &self.node_params, fused)
     }
 }
 
@@ -220,17 +337,56 @@ mod tests {
 
     #[test]
     fn quant_net_builds_with_chained_edges() {
+        let model = crate::nets::builder::resnet_micro();
         let q = QuantNet::build("resnet_micro", &haswell(), 1).unwrap();
         assert_eq!(q.plans.layers.len(), 6);
         assert!(q.plans.layers.iter().all(|l| l.backend == "direct_i8"));
-        // Edge chaining: conv1's input params are conv0's output params
-        // (conv0 is conv1's producer in resnet_micro).
-        let p0 = q.plans.layers[0].plan.as_quantized().unwrap().output_qparams();
+        // Edge chaining: conv1 reads the `relu0` edge, so its input
+        // params are that node's calibration (conv0's producer chain is
+        // conv0 -> bn0 -> relu0 -> conv1 in resnet_micro v2).
+        let relu0 = model.graph.nodes.iter().position(|n| n.name == "relu0").unwrap();
         let p1 = q.plans.layers[1].plan.as_quantized().unwrap().input_qparams();
-        assert_eq!(p0, p1, "requantize params must chain producer -> consumer");
+        assert_eq!(
+            p1, q.node_params[relu0],
+            "requantize params must chain producer edge -> consumer"
+        );
         let runner = q.runner(1).unwrap();
         assert_eq!(runner.dtype(), crate::quant::DType::I8);
         assert_eq!(runner.overhead_bytes(), 0);
+    }
+
+    /// Fused i8 pipeline end-to-end: quantize against the fusion
+    /// annotation, compile the fused schedule, and keep the output
+    /// within a few output quanta of the f32 fused runner. (Fused i8 is
+    /// deliberately NOT bitwise-comparable to unfused i8 — folding the
+    /// epilogue into the conv's requantize replaces a chain of
+    /// roundings with one; the exact integers are pinned by the golden
+    /// fixtures against an independent NumPy reference instead.)
+    #[test]
+    fn fused_quant_net_tracks_f32_within_quanta() {
+        let model = crate::nets::builder::resnet_micro();
+        let fused = crate::nets::fuse(&model).unwrap();
+        let q = QuantNet::build_model_fused(&model, &fused, &haswell(), 1).unwrap();
+        let runner = q.runner_fused(1, &fused).unwrap();
+        assert_eq!(runner.dtype(), crate::quant::DType::I8);
+        assert_eq!(runner.overhead_bytes(), 0, "fused i8 net must stay zero-overhead");
+
+        let f32_plans =
+            crate::nets::NetPlans::build_model(&model, "direct", &haswell(), 1).unwrap();
+        let f32_runner =
+            NetRunner::from_graph_fused(f32_plans, model.graph.clone(), 1, &fused).unwrap();
+
+        let input = Tensor::random(&[3, 32, 32], CALIBRATION_SEED);
+        let got = runner.forward(&input).unwrap();
+        let want = f32_runner.forward(&input).unwrap();
+        assert_eq!(got.shape(), want.shape());
+        let sum = |t: &Tensor| t.data().iter().map(|v| v.abs() as f64).sum::<f64>();
+        let (a, b) = (sum(&got), sum(&want));
+        let rel = (a - b).abs() / b.abs().max(1e-30);
+        assert!(
+            rel <= 5e-2,
+            "fused i8 abs_sum {a:.4e} vs f32 {b:.4e} (rel {rel:.3e} > 5e-2)"
+        );
     }
 
     #[test]

@@ -41,7 +41,7 @@ use crate::arch::Machine;
 use crate::coordinator::{Batcher, BatcherConfig};
 use crate::engine::{NetArena, NetRunner};
 use crate::metrics::{ServeMetrics, Table};
-use crate::nets::{Model, NetPlans};
+use crate::nets::{fuse, Model, NetPlans};
 use crate::quant::{DType, QuantNet};
 use crate::{Error, Result};
 use std::collections::BTreeMap;
@@ -441,6 +441,10 @@ impl ServerBuilder {
         let runner = match self.cache.get(&hash) {
             Some(r) => Arc::clone(r),
             None => {
+                // Serving always compiles the fused schedule: bitwise
+                // identical to the unfused one in f32, single-rounding
+                // epilogues in i8, and strictly fewer scheduled nodes.
+                let fused = fuse(model)?;
                 let compiled = match dtype {
                     DType::F32 => {
                         let plans = NetPlans::build_model(
@@ -449,10 +453,17 @@ impl ServerBuilder {
                             &self.machine,
                             self.plan_threads,
                         )?;
-                        NetRunner::from_graph(plans, model.graph.clone(), self.cfg.branch_lanes)?
+                        NetRunner::from_graph_fused(
+                            plans,
+                            model.graph.clone(),
+                            self.cfg.branch_lanes,
+                            &fused,
+                        )?
                     }
-                    DType::I8 => QuantNet::build_model(model, &self.machine, self.plan_threads)?
-                        .runner(self.cfg.branch_lanes)?,
+                    DType::I8 => {
+                        QuantNet::build_model_fused(model, &fused, &self.machine, self.plan_threads)?
+                            .runner_fused(self.cfg.branch_lanes, &fused)?
+                    }
                 };
                 let arc = Arc::new(compiled);
                 self.cache.insert(hash, Arc::clone(&arc));

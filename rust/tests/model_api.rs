@@ -28,7 +28,7 @@ use dconv::conv::{conv_naive, ConvShape};
 use dconv::coordinator::{Coordinator, CoordinatorConfig};
 use dconv::engine::{add_nchw, pool_nchw, NetEngine, NetRunner};
 use dconv::nets::builder;
-use dconv::nets::{net_kernel, GraphBuilder, Model, NetGraph, NetPlans};
+use dconv::nets::{fuse, net_bn_params, net_kernel, GraphBuilder, Model, NetGraph, NetPlans};
 use dconv::runtime::ModelExecutor;
 use dconv::tensor::Tensor;
 
@@ -134,15 +134,35 @@ fn resnet_runner(model: &Model) -> NetRunner {
     NetRunner::from_graph(plans, model.graph.clone(), 1).unwrap()
 }
 
-/// NCHW naive reference with explicit residual sums, weights from the
-/// same deterministic `net_kernel` stream the planner uses.
+/// NCHW naive reference with explicit residual sums and per-conv
+/// BatchNorm + ReLU interludes (BN ordinals follow node order, exactly
+/// as the planner resolves them), weights from the same deterministic
+/// `net_kernel` / `net_bn_params` streams the planner uses.
 fn resnet_reference(model: &Model, input: &Tensor) -> Tensor {
     let ks: Vec<Tensor> =
         model.shapes.iter().enumerate().map(|(i, s)| net_kernel(i, s)).collect();
     let conv = |x: &Tensor, i: usize| conv_naive(x, &ks[i], &model.shapes[i]).unwrap();
-    let stem = conv(input, 0);
-    let j1 = add_nchw(&stem, &conv(&conv(&stem, 1), 2)).unwrap();
-    let j2 = add_nchw(&j1, &conv(&conv(&j1, 3), 4)).unwrap();
+    let bn = |x: &Tensor, ord: usize| {
+        let (scale, shift) = net_bn_params(ord, x.shape()[0]);
+        let hw = x.shape()[1] * x.shape()[2];
+        let mut d = x.data().to_vec();
+        for (ci, px) in d.chunks_mut(hw).enumerate() {
+            for v in px.iter_mut() {
+                *v *= scale[ci];
+                *v += shift[ci];
+            }
+        }
+        Tensor::from_vec(x.shape(), d).unwrap()
+    };
+    let relu = |x: &Tensor| {
+        let d = x.data().iter().map(|v| v.max(0.0)).collect();
+        Tensor::from_vec(x.shape(), d).unwrap()
+    };
+    let stem = relu(&bn(&conv(input, 0), 0));
+    let b2 = bn(&conv(&relu(&bn(&conv(&stem, 1), 1)), 2), 2);
+    let j1 = relu(&add_nchw(&stem, &b2).unwrap());
+    let b4 = bn(&conv(&relu(&bn(&conv(&j1, 3), 3)), 4), 4);
+    let j2 = relu(&add_nchw(&j1, &b4).unwrap());
     conv(&pool_nchw(&j2, 2, 2, 2, 2, 0, 0).unwrap(), 5)
 }
 
@@ -193,6 +213,35 @@ fn residual_net_is_zero_alloc_and_zero_overhead() {
     let after = allocs_now();
     assert_eq!(after - before, 0, "residual forward allocated on the hot path");
     assert!(output.iter().any(|v| *v != 0.0));
+}
+
+/// The FUSED f32 schedule keeps both halves of the contract at once:
+/// zero overhead and zero hot-path allocations (epilogues ride the
+/// conv cores' register tiles, buying no scratch), and — because the
+/// f32 epilogue replays the standalone ops' scalar arithmetic — the
+/// output is bitwise identical to the unfused schedule.
+#[test]
+fn fused_residual_net_is_zero_alloc_zero_overhead_and_bitwise_exact() {
+    let model = Model::from_file(spec_path()).unwrap();
+    let fused = fuse(&model).unwrap();
+    let plans = NetPlans::build_model(&model, "direct", &haswell(), 1).unwrap();
+    let runner = NetRunner::from_graph_fused(plans, model.graph.clone(), 1, &fused).unwrap();
+    assert_eq!(runner.overhead_bytes(), 0, "fused schedule must stay zero-overhead");
+
+    let mut arena = runner.arena();
+    let input = vec![0.1f32; runner.input_len()];
+    let mut output = vec![0.0f32; runner.output_len()];
+    runner.forward_with(&mut arena, &input, &mut output).unwrap();
+    let before = allocs_now();
+    runner.forward_with(&mut arena, &input, &mut output).unwrap();
+    let after = allocs_now();
+    assert_eq!(after - before, 0, "fused forward allocated on the hot path");
+
+    let unfused = resnet_runner(&model);
+    let x = Tensor::random(&[3, 32, 32], 0x2E6);
+    let a = runner.forward(&x).unwrap();
+    let b = unfused.forward(&x).unwrap();
+    assert_eq!(a.data(), b.data(), "fused f32 must be bitwise the unfused schedule");
 }
 
 #[test]

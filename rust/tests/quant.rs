@@ -5,7 +5,13 @@
 //!   independent NumPy reference (`python/golden_gen.py`) plus the
 //!   integer outputs of the full quantized forward; the Rust executor
 //!   must reproduce every byte (no tolerances: the integer contract is
-//!   pinned, not approximated);
+//!   pinned, not approximated). The `resnet_micro_i8_fused` /
+//!   `mobilenet_micro_i8` entries pin the FUSED schedule the same way:
+//!   conv+BN[+add]+ReLU chains collapsed into single-rounding fused
+//!   requantizes (`QuantNet::with_node_params_fused`), quantizing
+//!   straight to the chain-tail edges — deliberately different integers
+//!   from the unfused chained roundings, so each path carries its own
+//!   golden;
 //! * randomized quantize→dequantize round-trip error bound (≤ scale/2
 //!   per element inside the calibrated range);
 //! * the i8 `NetRunner` forward performs **zero** heap allocations
@@ -25,7 +31,7 @@ use std::cell::Cell;
 use dconv::arch::haswell;
 use dconv::engine::{ConvPlan as _, NetRunner};
 use dconv::json::Json;
-use dconv::nets::{model_by_name, NetPlans};
+use dconv::nets::{fuse, model_by_name, NetPlans};
 use dconv::quant::{
     dequantize, quantize, DType, QuantNet, QuantParams, CALIBRATION_SEED,
 };
@@ -72,8 +78,9 @@ fn fixture() -> Json {
 }
 
 /// Run a built-in net quantized with the fixture's *prescribed* params
-/// and return the raw i8 NCHW output.
-fn run_i8_with_fixture_params(net: &str, entry: &Json) -> (Vec<i8>, Vec<usize>) {
+/// — through the unfused schedule, or (`fused`) through the fusion pass
+/// + `with_node_params_fused` — and return the raw i8 NCHW output.
+fn run_i8_with_fixture_params(net: &str, entry: &Json, fused: bool) -> (Vec<i8>, Vec<usize>) {
     let model = model_by_name(net).unwrap();
     let params: Vec<QuantParams> = entry
         .get("node_params")
@@ -92,16 +99,32 @@ fn run_i8_with_fixture_params(net: &str, entry: &Json) -> (Vec<i8>, Vec<usize>) 
         })
         .collect();
     assert_eq!(params.len(), model.graph.len(), "{net}: fixture node count drifted");
-    let q = QuantNet::with_node_params(
-        &model.name,
-        &model.graph,
-        &model.shapes,
-        &haswell(),
-        1,
-        params,
-    )
-    .unwrap();
-    let runner = q.runner(1).unwrap();
+    let m = haswell();
+    let runner = if fused {
+        let f = fuse(&model).unwrap();
+        let q = QuantNet::with_node_params_fused(
+            &model.name,
+            &model.graph,
+            &model.shapes,
+            &m,
+            1,
+            params,
+            &f,
+        )
+        .unwrap();
+        q.runner_fused(1, &f).unwrap()
+    } else {
+        let q = QuantNet::with_node_params(
+            &model.name,
+            &model.graph,
+            &model.shapes,
+            &m,
+            1,
+            params,
+        )
+        .unwrap();
+        q.runner(1).unwrap()
+    };
     assert_eq!(runner.dtype(), DType::I8);
     let d = runner.input_dims();
     let input = Tensor::random(&[d.c, d.h, d.w], CALIBRATION_SEED);
@@ -112,10 +135,10 @@ fn run_i8_with_fixture_params(net: &str, entry: &Json) -> (Vec<i8>, Vec<usize>) 
     (out, vec![o.c, o.h, o.w])
 }
 
-fn check_i8_golden(net: &str, key: &str) {
+fn check_i8_golden(net: &str, key: &str, fused: bool) {
     let root = fixture();
     let entry = root.get(key).unwrap_or_else(|| panic!("{key}: no fixture entry"));
-    let (out, shape) = run_i8_with_fixture_params(net, entry);
+    let (out, shape) = run_i8_with_fixture_params(net, entry, fused);
 
     let want_shape: Vec<usize> = entry.get("shape").unwrap().as_arr().unwrap()
         .iter()
@@ -142,12 +165,28 @@ fn check_i8_golden(net: &str, key: &str) {
 
 #[test]
 fn alexnet_i8_matches_numpy_integers_exactly() {
-    check_i8_golden("alexnet", "alexnet_i8");
+    check_i8_golden("alexnet", "alexnet_i8", false);
 }
 
 #[test]
 fn resnet_micro_i8_matches_numpy_integers_exactly() {
-    check_i8_golden("resnet_micro", "resnet_micro_i8");
+    check_i8_golden("resnet_micro", "resnet_micro_i8", false);
+}
+
+/// The FUSED i8 schedule: five conv+BN[+add]+ReLU chains collapse to
+/// single-rounding fused requantizes. NOT bit-comparable to the
+/// unfused entry (one rounding vs a chain of them) — pinned by its own
+/// NumPy integer program.
+#[test]
+fn resnet_micro_i8_fused_matches_numpy_integers_exactly() {
+    check_i8_golden("resnet_micro", "resnet_micro_i8_fused", true);
+}
+
+/// Depthwise, strided and dilated fused convs through the same
+/// exact-integer contract.
+#[test]
+fn mobilenet_micro_i8_fused_matches_numpy_integers_exactly() {
+    check_i8_golden("mobilenet_micro", "mobilenet_micro_i8", true);
 }
 
 // ---------------------------------------------------------------------
@@ -251,6 +290,36 @@ fn i8_overhead_and_arena_shrink_on_alexnet_and_resnet_micro() {
     for net in ["alexnet", "resnet_micro"] {
         assert_zero_overhead(net);
         assert_arena_shrink(net);
+    }
+}
+
+/// The fusion pass must not cost the paper's headline number: a FUSED
+/// i8 net keeps every plan workspace-free, reports network-wide
+/// `overhead_bytes() == 0`, and a full fused forward performs zero
+/// heap allocations (counting allocator) — epilogues fold into the
+/// requantize step instead of buying scratch buffers.
+#[test]
+fn fused_i8_forward_is_allocation_free_and_zero_overhead() {
+    for net in ["resnet_micro", "mobilenet_micro"] {
+        let model = model_by_name(net).unwrap();
+        let f = fuse(&model).unwrap();
+        let runner = QuantNet::build_model_fused(&model, &f, &haswell(), 1)
+            .unwrap()
+            .runner_fused(1, &f)
+            .unwrap();
+        assert_eq!(runner.dtype(), DType::I8, "{net}");
+        for l in &runner.plans().layers {
+            assert_eq!(l.plan.workspace_bytes(), 0, "{net}/{}", l.layer.name);
+        }
+        assert_eq!(runner.overhead_bytes(), 0, "{net}: fused i8 must stay zero-overhead");
+        let mut arena = runner.arena();
+        let input = vec![0.1f32; runner.input_len()];
+        let mut output = vec![0.0f32; runner.output_len()];
+        runner.forward_with(&mut arena, &input, &mut output).unwrap();
+        let before = allocs_now();
+        runner.forward_with(&mut arena, &input, &mut output).unwrap();
+        let after = allocs_now();
+        assert_eq!(after - before, 0, "{net}: fused i8 forward allocated on the hot path");
     }
 }
 

@@ -185,24 +185,40 @@ pub fn table1() -> Vec<Machine> {
 }
 
 /// A descriptor for the machine this crate happens to run on — used by
-/// the host-measured benches. Detects AVX-512 at runtime: the register
-/// blocking the analytical model selects (C_o,b = 2*N_vec) differs
-/// materially between 8-lane AVX2 and 16-lane AVX-512 (measured ~1.5x;
-/// EXPERIMENTS.md §Perf iteration 3).
+/// the host-measured benches, the CLI and `auto` selection. The
+/// geometry (`n_vec`, `l_fma`, `n_reg`) comes from
+/// [`crate::conv::dispatch::active`] — i.e. from the microkernel that
+/// will actually execute, not from raw CPUID capability — so plan-time
+/// blocking and cost estimates match the kernel that runs: an
+/// AVX-512-capable CPU still plans 8-lane tiles unless the `avx512`
+/// kernels are compiled in, and `CONV_FORCE_SCALAR=1` is costed
+/// honestly. The scalar arm deliberately **keeps** the 8-lane blocking
+/// geometry (the oracle runs over the same `c_b` pencils, which LLVM
+/// auto-vectorizes) and only halves `micro_eff`: changing `n_vec`
+/// would change the selected `C_i,b` and with it the f32 accumulation
+/// order — breaking the bitwise scalar-reproduction guarantee the
+/// force-scalar toggle exists to prove.
 pub fn host() -> Machine {
-    let avx512 = std::arch::is_x86_feature_detected!("avx512f");
+    use crate::conv::dispatch::{active, SimdLevel};
+    let lvl = active();
+    let (name, isa, n_vec, n_fma, l_fma, n_reg, micro_eff) = match lvl {
+        SimdLevel::Avx512 => ("host (avx512-fma kernels)", "AVX-512", 16, 2, 4, 32, 0.9),
+        SimdLevel::Avx2 => ("host (avx2-fma kernels)", "AVX2", 8, 2, 5, 16, 0.9),
+        SimdLevel::Neon => ("host (neon-fma kernels)", "NEON", 4, 1, 5, 32, 0.95),
+        SimdLevel::Scalar => ("host (scalar kernels)", "scalar", 8, 2, 5, 16, 0.45),
+    };
     Machine {
-        name: if avx512 { "host (x86-64 avx512)" } else { "host (x86-64 avx2)" },
-        isa: if avx512 { "AVX-512" } else { "AVX2" },
+        name,
+        isa,
         freq_ghz: 2.1,
         cores: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
-        n_vec: if avx512 { 16 } else { 8 },
-        n_fma: 2,
-        l_fma: if avx512 { 4 } else { 5 },
-        n_reg: if avx512 { 32 } else { 16 },
+        n_vec,
+        n_fma,
+        l_fma,
+        n_reg,
         flops_per_lane: 2,
         load_ports: 2,
-        micro_eff: 0.9,
+        micro_eff,
         caches: vec![
             Cache { bytes: 32 << 10, line: 64, ways: 8, latency: 4, shared: false },
             Cache { bytes: 1 << 20, line: 64, ways: 16, latency: 14, shared: false },
@@ -286,6 +302,36 @@ mod tests {
         // Conv layers have very high arithmetic intensity vs GEMM inputs.
         let s = ConvShape::new(64, 56, 56, 64, 3, 3, 1, 1);
         assert!(Machine::conv_intensity(&s) > 100.0);
+    }
+
+    #[test]
+    fn host_geometry_is_internally_consistent() {
+        // One host() call (the dispatch level is read exactly once
+        // inside it, so this cannot race the dispatch-override tests):
+        // whatever arm was picked, name/isa/geometry must agree, and
+        // the scalar arm must keep the 8-lane blocking geometry that
+        // the bitwise force-scalar guarantee depends on.
+        let m = host();
+        match m.isa {
+            "AVX-512" => {
+                assert_eq!((m.n_vec, m.n_reg), (16, 32));
+                assert!(m.name.contains("avx512"));
+            }
+            "AVX2" => {
+                assert_eq!((m.n_vec, m.n_reg), (8, 16));
+                assert!(m.name.contains("avx2"));
+            }
+            "NEON" => {
+                assert_eq!((m.n_vec, m.n_reg), (4, 32));
+                assert!(m.name.contains("neon"));
+            }
+            "scalar" => {
+                assert_eq!((m.n_vec, m.n_reg), (8, 16));
+                assert!(m.micro_eff < 0.5, "scalar cost model must not claim vector rates");
+            }
+            other => panic!("unexpected host isa {other}"),
+        }
+        assert!(m.cores >= 1);
     }
 
     #[test]

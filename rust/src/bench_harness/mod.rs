@@ -78,8 +78,11 @@ pub fn bench(name: &str, opts: BenchOpts, mut f: impl FnMut()) -> Measurement {
     Measurement { name: name.to_string(), median_secs: median, mad_secs: mad, iters: samples.len() }
 }
 
-/// Persist a finished table under `bench_results/<bench>.{md,csv}` and
-/// echo the markdown to stdout (what EXPERIMENTS.md records).
+/// Persist a finished table under `bench_results/<bench>.{md,csv}`
+/// plus a machine-diffable `BENCH_<bench>.json` baseline (tagged with
+/// the kernel-dispatch decision, so a scalar-pinned run and a SIMD run
+/// of the same bench are distinguishable artifacts), and echo the
+/// markdown to stdout (what EXPERIMENTS.md records).
 pub fn emit(bench_name: &str, title: &str, table: &Table) {
     println!("\n## {title}\n");
     print!("{}", table.to_markdown());
@@ -87,6 +90,12 @@ pub fn emit(bench_name: &str, title: &str, table: &Table) {
     if std::fs::create_dir_all(dir).is_ok() {
         let _ = std::fs::write(dir.join(format!("{bench_name}.md")), table.to_markdown());
         let _ = std::fs::write(dir.join(format!("{bench_name}.csv")), table.to_csv());
+        let json = format!(
+            "{{\n\"bench\": \"{bench_name}\",\n\"dispatch\": \"{}\",\n\"rows\": {}}}\n",
+            crate::conv::dispatch::describe(),
+            table.to_json(),
+        );
+        let _ = std::fs::write(dir.join(format!("BENCH_{bench_name}.json")), json);
     }
 }
 

@@ -15,7 +15,7 @@
 //! Zero-memory-overhead story is identical to the dense core: no
 //! workspace, borders by tap skipping, parallelism over channel blocks.
 
-use super::epilogue::{apply_tile, EpView, Epilogue};
+use super::epilogue::{apply_tile_auto, EpView, Epilogue};
 use super::microkernel::MAX_WOB;
 use super::{BlockParams, ConvShape};
 use crate::{Error, Result};
@@ -186,6 +186,118 @@ fn dw_tile<const CB: usize, const TW: usize>(
     }
 }
 
+/// Runtime-dispatched [`dw_tile`]: the AVX2 variant when the host has
+/// it and the channel block fills whole ymm registers, else the scalar
+/// oracle. Both operands of every tap are full-vector loads (this is
+/// what the blocked depthwise layout buys), and the per-lane fused
+/// multiply-add chains run in the scalar `(n, m, kk)` order, so the
+/// variants are bitwise identical. There is no NEON depthwise kernel:
+/// at `CB = 4` the tap loop is memory-bound and LLVM already
+/// vectorizes the oracle's lane loop.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn dw_tile_auto<const CB: usize, const TW: usize>(
+    acc: &mut [[f32; CB]; TW],
+    inp_blk: &[f32],
+    ker_blk: &[f32],
+    shape: &ConvShape,
+    l: usize,
+    k0: usize,
+    tw: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use super::dispatch::{active, SimdLevel};
+        if matches!(active(), SimdLevel::Avx2 | SimdLevel::Avx512) && CB % 8 == 0 {
+            // SAFETY: avx2+fma runtime-detected; the flat view is the
+            // tile's contiguous TW*CB storage.
+            unsafe {
+                dw_tile_avx2(
+                    super::microkernel::tile_as_flat::<CB, TW>(acc),
+                    CB,
+                    inp_blk,
+                    ker_blk,
+                    shape,
+                    l,
+                    k0,
+                    tw,
+                );
+            }
+            return;
+        }
+    }
+    dw_tile::<CB, TW>(acc, inp_blk, ker_blk, shape, l, k0, tw);
+}
+
+/// AVX2+FMA depthwise tile over the flat accumulator (`tw` live rows
+/// of `cb` lanes, `cb % 8 == 0`). Dynamic loop bounds are fine here:
+/// with no input-channel reduction the tile is touched once per tap,
+/// not once per `(ib, ii)`, so register-resident accumulators buy far
+/// less than in the dense core.
+///
+/// # Safety
+/// Caller must have runtime-detected `avx2` and `fma`; `acc` must hold
+/// at least `tw * cb` floats and the operand slabs must be full
+/// `[H_i][W_i][cb]` / `[H_f][W_f][cb]` blocks for `shape`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn dw_tile_avx2(
+    acc: &mut [f32],
+    cb: usize,
+    inp_blk: &[f32],
+    ker_blk: &[f32],
+    shape: &ConvShape,
+    l: usize,
+    k0: usize,
+    tw: usize,
+) {
+    use core::arch::x86_64::*;
+    let (h_i, w_i) = (shape.h_i, shape.w_i);
+    let (s, p, d) = (shape.stride, shape.pad, shape.dilation);
+    let row_stride = w_i * cb;
+    debug_assert!(acc.len() >= tw * cb);
+    for n in 0..shape.h_f {
+        let iy = (l * s + n * d) as isize - p as isize;
+        if iy < 0 || iy >= h_i as isize {
+            continue;
+        }
+        let row = &inp_blk[iy as usize * row_stride..][..row_stride];
+        for m in 0..shape.w_f {
+            let wp = &ker_blk[(n * shape.w_f + m) * cb..][..cb];
+            let x0 = (k0 * s + m * d) as isize - p as isize;
+            let x_last = x0 + ((tw - 1) * s) as isize;
+            if x0 >= 0 && x_last < w_i as isize {
+                let base = x0 as usize * cb;
+                for kk in 0..tw {
+                    for v in 0..cb / 8 {
+                        let x = _mm256_loadu_ps(row.as_ptr().add(base + kk * s * cb + v * 8));
+                        let w = _mm256_loadu_ps(wp.as_ptr().add(v * 8));
+                        let at = kk * cb + v * 8;
+                        let a = _mm256_loadu_ps(acc.as_ptr().add(at));
+                        _mm256_storeu_ps(acc.as_mut_ptr().add(at), _mm256_fmadd_ps(x, w, a));
+                    }
+                }
+            } else {
+                for kk in 0..tw {
+                    let x = x0 + (kk * s) as isize;
+                    if x < 0 || x >= w_i as isize {
+                        continue;
+                    }
+                    let xb = x as usize * cb;
+                    for v in 0..cb / 8 {
+                        let xv = _mm256_loadu_ps(row.as_ptr().add(xb + v * 8));
+                        let w = _mm256_loadu_ps(wp.as_ptr().add(v * 8));
+                        let at = kk * cb + v * 8;
+                        let a = _mm256_loadu_ps(acc.as_ptr().add(at));
+                        _mm256_storeu_ps(acc.as_mut_ptr().add(at), _mm256_fmadd_ps(xv, w, a));
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[allow(clippy::manual_memcpy)] // explicit loop keeps the tile in registers
 fn dw_block_t<const CB: usize, const TW: usize>(
     inp_blk: &[f32],
@@ -205,10 +317,10 @@ fn dw_block_t<const CB: usize, const TW: usize>(
         for t in 0..full_tiles {
             let k0 = t * TW;
             let mut acc = [[0.0f32; CB]; TW];
-            dw_tile::<CB, TW>(&mut acc, inp_blk, ker_blk, shape, l, k0, TW);
+            dw_tile_auto::<CB, TW>(&mut acc, inp_blk, ker_blk, shape, l, k0, TW);
             if fuse {
                 let r = res_blk.map(|r| &r[out_row + k0 * CB..][..TW * CB]);
-                apply_tile::<CB, TW>(&mut acc, &ep, c0, r, TW);
+                apply_tile_auto::<CB, TW>(&mut acc, &ep, c0, r, TW);
             }
             let tile = &mut out_blk[out_row + k0 * CB..][..TW * CB];
             for kk in 0..TW {
@@ -224,10 +336,10 @@ fn dw_block_t<const CB: usize, const TW: usize>(
             // reduction slab, so the tile is written exactly once).
             let k0 = full_tiles * TW;
             let mut acc = [[0.0f32; CB]; TW];
-            dw_tile::<CB, TW>(&mut acc, inp_blk, ker_blk, shape, l, k0, rem);
+            dw_tile_auto::<CB, TW>(&mut acc, inp_blk, ker_blk, shape, l, k0, rem);
             if fuse {
                 let r = res_blk.map(|r| &r[out_row + k0 * CB..][..rem * CB]);
-                apply_tile::<CB, TW>(&mut acc, &ep, c0, r, rem);
+                apply_tile_auto::<CB, TW>(&mut acc, &ep, c0, r, rem);
             }
             let tile = &mut out_blk[out_row + k0 * CB..][..rem * CB];
             for kk in 0..rem {

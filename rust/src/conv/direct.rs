@@ -38,9 +38,9 @@
 //! (`groups == C_i == C_o`) takes the dedicated
 //! [`super::depthwise`] register-tile kernel.
 
-use super::epilogue::{apply_tile, EpView, Epilogue};
+use super::epilogue::{apply_tile_auto, EpView, Epilogue};
 use super::microkernel::{
-    load_tile_c, reduce_tile, store_tile_c, TileGeom, MAX_WOB,
+    load_tile_c, reduce_tile_auto, store_tile_c, TileGeom, MAX_WOB,
 };
 use super::{BlockParams, ConvShape};
 use crate::tensor::Tensor;
@@ -323,10 +323,10 @@ fn conv_block_t<const COB: usize, const TW: usize>(
                 let mut acc = [[0.0f32; COB]; TW];
                 load_tile_c::<COB, TW>(&mut acc, tile);
                 let g = TileGeom { h_f, w_f, c_ib, h_i, w_i, stride: s, pad: p, dil: d, l, k0 };
-                reduce_tile::<COB, TW>(&mut acc, islab, kslab, &g);
+                reduce_tile_auto::<COB, TW>(&mut acc, islab, kslab, &g);
                 if fuse {
                     let r = res_blk.map(|r| &r[out_row + k0 * COB..][..TW * COB]);
-                    apply_tile::<COB, TW>(&mut acc, &ep, jb * COB, r, TW);
+                    apply_tile_auto::<COB, TW>(&mut acc, &ep, jb * COB, r, TW);
                 }
                 store_tile_c::<COB, TW>(&acc, tile);
             }
@@ -349,7 +349,6 @@ fn conv_block_t<const COB: usize, const TW: usize>(
     }
 }
 
-
 /// Remainder-tile reduction: monomorphized per width so narrow edge
 /// tiles run the same register-resident kernel as full tiles. `fuse`
 /// carries the epilogue view + channel base when this is the last
@@ -367,9 +366,9 @@ fn reduce_rem<const COB: usize>(
         ($tw:literal) => {{
             let mut acc = [[0.0f32; COB]; $tw];
             load_tile_c::<COB, $tw>(&mut acc, tile);
-            reduce_tile::<COB, $tw>(&mut acc, islab, kslab, g);
+            reduce_tile_auto::<COB, $tw>(&mut acc, islab, kslab, g);
             if let Some((ep, c0)) = fuse {
-                apply_tile::<COB, $tw>(&mut acc, ep, c0, res, $tw);
+                apply_tile_auto::<COB, $tw>(&mut acc, ep, c0, res, $tw);
             }
             store_tile_c::<COB, $tw>(&acc, tile);
         }};

@@ -1,0 +1,208 @@
+//! Runtime ISA dispatch for the convolution microkernels.
+//!
+//! The hot cores ship in two flavours: the always-compiled scalar
+//! pencils (the conformance oracle, in [`super::microkernel`] and
+//! `quant::direct`) and explicit `std::arch` register-tile kernels
+//! (AVX2+FMA, optionally AVX-512, NEON). This module decides — once
+//! per process — which flavour every backend runs:
+//!
+//! 1. `CONV_FORCE_SCALAR` set to anything but `0`/empty pins the
+//!    scalar oracle (used by CI to prove the SIMD arms change nothing).
+//! 2. On `x86_64`, `avx512f` selects [`SimdLevel::Avx512`] — but only
+//!    when the crate is built with the `avx512` feature (the AVX-512
+//!    intrinsics need a newer rustc than our MSRV); otherwise
+//!    `avx2 && fma` selects [`SimdLevel::Avx2`].
+//! 3. On `aarch64`, NEON is architecturally guaranteed:
+//!    [`SimdLevel::Neon`].
+//! 4. Everything else runs the scalar oracle.
+//!
+//! The result is cached in a [`OnceLock`], so detection (and the env
+//! read) happens on the first planned convolution and never again.
+//! Individual kernels still fall back per call site when the channel
+//! block is narrower than a vector — see [`kernel_label_f32`].
+//!
+//! Every SIMD kernel vectorizes the *output-channel* (`C_o,b`) lane
+//! dimension only and keeps the scalar `(n, m, ii, kk)` reduction
+//! order, so f32 results are bitwise identical to the oracle (a lane's
+//! fused multiply-add chain is the same chain), and the i8 cores are
+//! exact integer arithmetic. `CONV_FORCE_SCALAR=1` therefore
+//! reproduces — bitwise — what dispatch produces; the toggle exists to
+//! *prove* that, not to paper over drift.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// The vector ISA the dispatched microkernels target.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Plain-Rust pencil cores — the conformance oracle.
+    Scalar,
+    /// 128-bit NEON fused multiply-add kernels (baseline on aarch64).
+    Neon,
+    /// 256-bit AVX2+FMA kernels.
+    Avx2,
+    /// 512-bit AVX-512F kernels (needs the `avx512` crate feature).
+    Avx512,
+}
+
+impl SimdLevel {
+    /// f32 lanes per vector register (1 for the scalar oracle).
+    pub fn lanes(self) -> usize {
+        match self {
+            SimdLevel::Scalar => 1,
+            SimdLevel::Neon => 4,
+            SimdLevel::Avx2 => 8,
+            SimdLevel::Avx512 => 16,
+        }
+    }
+
+    /// Human-readable ISA name (matches `arch::Machine::isa` spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Neon => "NEON",
+            SimdLevel::Avx2 => "AVX2",
+            SimdLevel::Avx512 => "AVX-512",
+        }
+    }
+}
+
+/// Test-only override, checked before the cached detection. 0 = none,
+/// 1 = force scalar. An atomic (not the `OnceLock`) so tests can flip
+/// it back and forth within one process.
+static TEST_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Pin (or unpin) the scalar oracle process-wide, bypassing the cached
+/// detection. For the SIMD-vs-scalar conformance battery only — both
+/// arms conform, so a concurrent test observing the toggle mid-flight
+/// still computes correct results; serialize on a lock for
+/// discriminating comparisons. Never forces a level *up*: upgrading
+/// past what the CPU supports would be unsound.
+#[doc(hidden)]
+pub fn _force_scalar_for_tests(on: bool) {
+    TEST_OVERRIDE.store(u8::from(on), Ordering::Relaxed);
+}
+
+/// Was `CONV_FORCE_SCALAR` set (to anything but empty / `"0"`)?
+fn force_scalar_env() -> bool {
+    match std::env::var("CONV_FORCE_SCALAR") {
+        Ok(v) => !(v.is_empty() || v == "0"),
+        Err(_) => false,
+    }
+}
+
+/// One-time hardware + env detection (see the module docs for order).
+fn detect() -> SimdLevel {
+    if force_scalar_env() {
+        return SimdLevel::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        #[cfg(feature = "avx512")]
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            return SimdLevel::Avx512;
+        }
+        if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+        {
+            return SimdLevel::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return SimdLevel::Neon;
+    }
+    #[allow(unreachable_code)]
+    SimdLevel::Scalar
+}
+
+/// The ISA level every dispatched kernel call runs at. Cached after
+/// the first call; `CONV_FORCE_SCALAR` is honoured at detection time.
+pub fn active() -> SimdLevel {
+    if TEST_OVERRIDE.load(Ordering::Relaxed) == 1 {
+        return SimdLevel::Scalar;
+    }
+    static DETECTED: OnceLock<SimdLevel> = OnceLock::new();
+    *DETECTED.get_or_init(detect)
+}
+
+/// Label of the f32 tile-reduction kernel that will run for an
+/// output-channel block of width `c_ob` (the fall-back rule the
+/// kernels themselves apply: a block narrower than a vector register
+/// runs the scalar oracle).
+pub fn kernel_label_f32(c_ob: usize) -> &'static str {
+    match active() {
+        SimdLevel::Avx512 if c_ob % 16 == 0 => "avx512-fma",
+        SimdLevel::Avx512 | SimdLevel::Avx2 if c_ob % 8 == 0 => "avx2-fma",
+        SimdLevel::Neon if c_ob % 4 == 0 => "neon-fma",
+        _ => "scalar",
+    }
+}
+
+/// Label of the depthwise f32 tile kernel for a `c_b`-wide channel
+/// block. Depthwise ships an AVX2 kernel only: on NEON the 4-lane tap
+/// loop is memory-bound and LLVM already vectorizes the oracle.
+pub fn kernel_label_f32_dw(c_b: usize) -> &'static str {
+    match active() {
+        SimdLevel::Avx512 | SimdLevel::Avx2 if c_b % 8 == 0 => "avx2-fma",
+        _ => "scalar",
+    }
+}
+
+/// Label of the i8 tile-reduction kernel for a `c_ob`-wide block. The
+/// AVX2 core emulates a VNNI-style dot product with widening
+/// multiplies; there is no NEON i8 kernel yet (the centered-input
+/// loads dominate), so aarch64 reports the oracle.
+pub fn kernel_label_i8(c_ob: usize) -> &'static str {
+    match active() {
+        SimdLevel::Avx512 | SimdLevel::Avx2 if c_ob % 8 == 0 => "avx2-widen",
+        _ => "scalar",
+    }
+}
+
+/// One-line description of the dispatch decision, for the CLI.
+pub fn describe() -> String {
+    let lvl = active();
+    let forced = if lvl == SimdLevel::Scalar && force_scalar_env() {
+        " (forced by CONV_FORCE_SCALAR)"
+    } else {
+        ""
+    };
+    format!("{} microkernels, {} f32 lanes{forced}", lvl.name(), lvl.lanes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The override is process-global; serialize the tests that read
+    /// or write it so neither observes the other's toggle.
+    static OVERRIDE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn detection_is_stable_and_labels_are_consistent() {
+        let _guard = OVERRIDE_LOCK.lock().unwrap();
+        let a = active();
+        assert_eq!(a, active());
+        // Vector labels only appear for vector-divisible blocks.
+        assert_eq!(kernel_label_f32(5), "scalar");
+        assert_eq!(kernel_label_i8(5), "scalar");
+        match a {
+            SimdLevel::Avx512 => assert_eq!(kernel_label_f32(16), "avx512-fma"),
+            SimdLevel::Avx2 => assert_eq!(kernel_label_f32(16), "avx2-fma"),
+            SimdLevel::Neon => assert_eq!(kernel_label_f32(16), "neon-fma"),
+            SimdLevel::Scalar => assert_eq!(kernel_label_f32(16), "scalar"),
+        }
+        assert!(describe().contains(a.name()));
+    }
+
+    #[test]
+    fn scalar_override_wins_and_resets() {
+        let _guard = OVERRIDE_LOCK.lock().unwrap();
+        _force_scalar_for_tests(true);
+        assert_eq!(active(), SimdLevel::Scalar);
+        assert_eq!(kernel_label_f32(16), "scalar");
+        assert_eq!(kernel_label_i8(16), "scalar");
+        _force_scalar_for_tests(false);
+        assert_eq!(active(), active());
+    }
+}

@@ -188,6 +188,96 @@ pub fn apply_tile<const COB: usize, const TW: usize>(
     }
 }
 
+/// Runtime-dispatched [`apply_tile`]: when the reduction ran on a
+/// vector tile (AVX2/AVX-512 host, vector-width `COB`) the epilogue
+/// runs on that same tile vectorized — identical ops in identical
+/// order to [`EpView::apply`] (separate mul and add, lane-wise
+/// max/min), so fused and unfused paths stay bitwise-equal.
+#[inline(always)]
+pub fn apply_tile_auto<const COB: usize, const TW: usize>(
+    acc: &mut [[f32; COB]; TW],
+    ep: &EpView<'_>,
+    c0: usize,
+    res: Option<&[f32]>,
+    tw: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use super::dispatch::{active, SimdLevel};
+        if matches!(active(), SimdLevel::Avx2 | SimdLevel::Avx512) && COB % 8 == 0 {
+            // SAFETY: AVX2 runtime-detected; the flat view is the
+            // tile's contiguous TW*COB storage and the channel range
+            // c0..c0+COB is in-bounds for the view's vectors (the
+            // scalar path indexes the same range).
+            unsafe {
+                apply_tile_avx2(
+                    super::microkernel::tile_as_flat::<COB, TW>(acc),
+                    COB,
+                    ep,
+                    c0,
+                    res,
+                    tw,
+                );
+            }
+            return;
+        }
+    }
+    apply_tile::<COB, TW>(acc, ep, c0, res, tw);
+}
+
+/// AVX2 epilogue over the flat accumulator tile (`tw` live rows of
+/// `cob` channels). Not monomorphized: it runs once per tile, so the
+/// dynamic loops cost nothing next to the reduction.
+///
+/// Bitwise notes: the mul and add stay separate (no FMA contraction,
+/// matching [`EpView::apply`]); `_mm256_max_ps(v, 0)`/`min_ps(v, cl)`
+/// return the second operand on NaN exactly like `f32::max`/`min`
+/// with this argument order, and a `-0.0`-vs-`+0.0` divergence at the
+/// ReLU knee compares equal under `f32 == f32`.
+///
+/// # Safety
+/// Caller must have runtime-detected `avx2`; `acc` holds at least
+/// `tw * cob` floats, `cob % 8 == 0`, `ep`'s non-empty vectors cover
+/// `c0 + cob` channels, and `res` (if present) covers `tw * cob`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn apply_tile_avx2(
+    acc: &mut [f32],
+    cob: usize,
+    ep: &EpView<'_>,
+    c0: usize,
+    res: Option<&[f32]>,
+    tw: usize,
+) {
+    use core::arch::x86_64::*;
+    debug_assert!(ep.scale.is_empty() || c0 + cob <= ep.scale.len());
+    debug_assert!(ep.shift.is_empty() || c0 + cob <= ep.shift.len());
+    debug_assert!(res.map_or(true, |r| r.len() >= tw * cob));
+    let zero = _mm256_setzero_ps();
+    for kk in 0..tw {
+        for v in 0..cob / 8 {
+            let at = kk * cob + v * 8;
+            let mut y = _mm256_loadu_ps(acc.as_ptr().add(at));
+            if !ep.scale.is_empty() {
+                y = _mm256_mul_ps(y, _mm256_loadu_ps(ep.scale.as_ptr().add(c0 + v * 8)));
+            }
+            if !ep.shift.is_empty() {
+                y = _mm256_add_ps(y, _mm256_loadu_ps(ep.shift.as_ptr().add(c0 + v * 8)));
+            }
+            if let Some(r) = res {
+                y = _mm256_add_ps(y, _mm256_loadu_ps(r.as_ptr().add(at)));
+            }
+            if ep.relu {
+                y = _mm256_max_ps(y, zero);
+                if let Some(cl) = ep.clamp {
+                    y = _mm256_min_ps(y, _mm256_set1_ps(cl));
+                }
+            }
+            _mm256_storeu_ps(acc.as_mut_ptr().add(at), y);
+        }
+    }
+}
+
 /// Apply an epilogue over an already-computed output buffer — the
 /// layout-aware fallback used by backends without in-tile fusion (the
 /// default `ConvPlan::execute_fused_into`). `res`, when present, must

@@ -11,6 +11,14 @@
 //! stack on every iteration, which measured ~2x slower (see
 //! EXPERIMENTS.md §Perf iteration 2). Edge tiles (row remainder) use the
 //! dynamic-width fallback [`tap_full`]/[`tap_one_col`] path.
+//!
+//! [`reduce_tile`] is the scalar *oracle*; the hot paths call
+//! [`reduce_tile_auto`], which routes to the explicit `std::arch`
+//! variants in [`x86`]/[`neon`] when [`crate::conv::dispatch`] detects
+//! the ISA at runtime (`CONV_FORCE_SCALAR=1` pins the oracle). The
+//! SIMD kernels vectorize the `COB` lane dimension only and keep the
+//! exact scalar `(n, m, ii, kk)` chain order, so their results are
+//! bitwise identical to the oracle's.
 
 /// Hard cap on `W_o,b`; accumulator tiles are stack arrays of this height.
 pub const MAX_WOB: usize = 8;
@@ -90,6 +98,319 @@ pub fn reduce_tile<const COB: usize, const TW: usize>(
                         }
                     }
                 }
+            }
+        }
+    }
+}
+
+/// Runtime-dispatched twin of [`reduce_tile`]: an AVX-512 / AVX2+FMA /
+/// NEON register tile when [`crate::conv::dispatch::active`] says the
+/// host has one *and* `COB` fills whole vectors, else the scalar
+/// oracle. Bitwise-equal to [`reduce_tile`] on every path.
+#[inline(always)]
+pub fn reduce_tile_auto<const COB: usize, const TW: usize>(
+    acc: &mut [[f32; COB]; TW],
+    inp: &[f32],
+    ker: &[f32],
+    g: &TileGeom,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use super::dispatch::{active, SimdLevel};
+        let lvl = active();
+        #[cfg(feature = "avx512")]
+        if lvl == SimdLevel::Avx512 && COB % 16 == 0 {
+            // SAFETY: avx512f was runtime-detected; the flat view is
+            // the tile's own contiguous storage.
+            unsafe {
+                let flat = tile_as_flat::<COB, TW>(acc);
+                match COB / 16 {
+                    1 => x86::reduce_tile_f32_avx512::<1, TW>(flat, inp, ker, g),
+                    _ => x86::reduce_tile_f32_avx512::<2, TW>(flat, inp, ker, g),
+                }
+            }
+            return;
+        }
+        if matches!(lvl, SimdLevel::Avx2 | SimdLevel::Avx512) && COB % 8 == 0 {
+            // SAFETY: avx2+fma were runtime-detected (Avx512 implies
+            // both); the flat view is the tile's contiguous storage.
+            unsafe {
+                let flat = tile_as_flat::<COB, TW>(acc);
+                match COB / 8 {
+                    1 => x86::reduce_tile_f32_avx2::<1, TW>(flat, inp, ker, g),
+                    2 => x86::reduce_tile_f32_avx2::<2, TW>(flat, inp, ker, g),
+                    _ => x86::reduce_tile_f32_avx2::<4, TW>(flat, inp, ker, g),
+                }
+            }
+            return;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        use super::dispatch::{active, SimdLevel};
+        if active() == SimdLevel::Neon && COB % 4 == 0 {
+            // SAFETY: NEON is architecturally guaranteed on aarch64.
+            unsafe {
+                let flat = tile_as_flat::<COB, TW>(acc);
+                match COB / 4 {
+                    1 => neon::reduce_tile_f32_neon::<1, TW>(flat, inp, ker, g),
+                    2 => neon::reduce_tile_f32_neon::<2, TW>(flat, inp, ker, g),
+                    4 => neon::reduce_tile_f32_neon::<4, TW>(flat, inp, ker, g),
+                    _ => neon::reduce_tile_f32_neon::<8, TW>(flat, inp, ker, g),
+                }
+            }
+            return;
+        }
+    }
+    reduce_tile::<COB, TW>(acc, inp, ker, g);
+}
+
+/// View the accumulator tile as its flat `TW * COB` element storage
+/// (`[[f32; COB]; TW]` is contiguous row-major by layout guarantee) —
+/// how the SIMD kernels address it, since `[[T; COB / LANES]; TW]`
+/// vector-array types cannot be expressed over `COB` on stable Rust.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+pub(crate) fn tile_as_flat<const COB: usize, const TW: usize>(
+    acc: &mut [[f32; COB]; TW],
+) -> &mut [f32] {
+    // SAFETY: the array-of-arrays is exactly TW*COB adjacent f32s.
+    unsafe { core::slice::from_raw_parts_mut(acc.as_mut_ptr().cast::<f32>(), TW * COB) }
+}
+
+/// Explicit AVX2 / AVX-512 `std::arch` twins of [`reduce_tile`].
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86 {
+    use super::TileGeom;
+    use core::arch::x86_64::*;
+
+    /// AVX2+FMA tile reduction over `NV` ymm registers per tile row
+    /// (`COB = 8 * NV`). Each output lane's fused multiply-add chain
+    /// runs in exactly the scalar `(n, m, ii)` order — vectorization
+    /// widens only the independent `j` lane dimension — so the result
+    /// is bitwise identical to [`super::reduce_tile`]
+    /// (`_mm256_fmadd_ps` is lane-wise `f32::mul_add`).
+    ///
+    /// # Safety
+    /// Caller must have runtime-detected `avx2` and `fma`, and `acc`
+    /// must hold `TW * NV * 8` floats (the flat tile).
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn reduce_tile_f32_avx2<const NV: usize, const TW: usize>(
+        acc: &mut [f32],
+        inp: &[f32],
+        ker: &[f32],
+        g: &TileGeom,
+    ) {
+        let cob = NV * 8;
+        debug_assert_eq!(acc.len(), TW * cob);
+        let c_ib = g.c_ib;
+        let row_stride = g.w_i * c_ib;
+        let mut va = [[_mm256_setzero_ps(); NV]; TW];
+        for kk in 0..TW {
+            for v in 0..NV {
+                va[kk][v] = _mm256_loadu_ps(acc.as_ptr().add(kk * cob + v * 8));
+            }
+        }
+        for n in 0..g.h_f {
+            let iy = (g.l * g.stride + n * g.dil) as isize - g.pad as isize;
+            if iy < 0 || iy >= g.h_i as isize {
+                continue;
+            }
+            let row = &inp[iy as usize * row_stride..][..row_stride];
+            for m in 0..g.w_f {
+                let kptr = &ker[(n * g.w_f + m) * c_ib * cob..][..c_ib * cob];
+                let x0 = (g.k0 * g.stride + m * g.dil) as isize - g.pad as isize;
+                let x_last = x0 + ((TW - 1) * g.stride) as isize;
+                if x0 >= 0 && x_last < g.w_i as isize {
+                    let base = x0 as usize * c_ib;
+                    for ii in 0..c_ib {
+                        let mut w = [_mm256_setzero_ps(); NV];
+                        for v in 0..NV {
+                            w[v] = _mm256_loadu_ps(kptr.as_ptr().add(ii * cob + v * 8));
+                        }
+                        for kk in 0..TW {
+                            let xv = _mm256_set1_ps(row[base + kk * g.stride * c_ib + ii]);
+                            for v in 0..NV {
+                                va[kk][v] = _mm256_fmadd_ps(xv, w[v], va[kk][v]);
+                            }
+                        }
+                    }
+                } else {
+                    for kk in 0..TW {
+                        let x = x0 + (kk * g.stride) as isize;
+                        if x < 0 || x >= g.w_i as isize {
+                            continue;
+                        }
+                        let base = x as usize * c_ib;
+                        for ii in 0..c_ib {
+                            let xv = _mm256_set1_ps(row[base + ii]);
+                            for v in 0..NV {
+                                let w = _mm256_loadu_ps(kptr.as_ptr().add(ii * cob + v * 8));
+                                va[kk][v] = _mm256_fmadd_ps(xv, w, va[kk][v]);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for kk in 0..TW {
+            for v in 0..NV {
+                _mm256_storeu_ps(acc.as_mut_ptr().add(kk * cob + v * 8), va[kk][v]);
+            }
+        }
+    }
+
+    /// AVX-512F tile reduction (`COB = 16 * NV`); same chain order and
+    /// bitwise guarantee as the AVX2 variant. Feature-gated because
+    /// the zmm intrinsics need a newer rustc than the crate's MSRV.
+    ///
+    /// # Safety
+    /// Caller must have runtime-detected `avx512f`, and `acc` must
+    /// hold `TW * NV * 16` floats.
+    #[cfg(feature = "avx512")]
+    #[target_feature(enable = "avx512f")]
+    pub(crate) unsafe fn reduce_tile_f32_avx512<const NV: usize, const TW: usize>(
+        acc: &mut [f32],
+        inp: &[f32],
+        ker: &[f32],
+        g: &TileGeom,
+    ) {
+        let cob = NV * 16;
+        debug_assert_eq!(acc.len(), TW * cob);
+        let c_ib = g.c_ib;
+        let row_stride = g.w_i * c_ib;
+        let mut va = [[_mm512_setzero_ps(); NV]; TW];
+        for kk in 0..TW {
+            for v in 0..NV {
+                va[kk][v] = _mm512_loadu_ps(acc.as_ptr().add(kk * cob + v * 16));
+            }
+        }
+        for n in 0..g.h_f {
+            let iy = (g.l * g.stride + n * g.dil) as isize - g.pad as isize;
+            if iy < 0 || iy >= g.h_i as isize {
+                continue;
+            }
+            let row = &inp[iy as usize * row_stride..][..row_stride];
+            for m in 0..g.w_f {
+                let kptr = &ker[(n * g.w_f + m) * c_ib * cob..][..c_ib * cob];
+                let x0 = (g.k0 * g.stride + m * g.dil) as isize - g.pad as isize;
+                let x_last = x0 + ((TW - 1) * g.stride) as isize;
+                if x0 >= 0 && x_last < g.w_i as isize {
+                    let base = x0 as usize * c_ib;
+                    for ii in 0..c_ib {
+                        let mut w = [_mm512_setzero_ps(); NV];
+                        for v in 0..NV {
+                            w[v] = _mm512_loadu_ps(kptr.as_ptr().add(ii * cob + v * 16));
+                        }
+                        for kk in 0..TW {
+                            let xv = _mm512_set1_ps(row[base + kk * g.stride * c_ib + ii]);
+                            for v in 0..NV {
+                                va[kk][v] = _mm512_fmadd_ps(xv, w[v], va[kk][v]);
+                            }
+                        }
+                    }
+                } else {
+                    for kk in 0..TW {
+                        let x = x0 + (kk * g.stride) as isize;
+                        if x < 0 || x >= g.w_i as isize {
+                            continue;
+                        }
+                        let base = x as usize * c_ib;
+                        for ii in 0..c_ib {
+                            let xv = _mm512_set1_ps(row[base + ii]);
+                            for v in 0..NV {
+                                let w = _mm512_loadu_ps(kptr.as_ptr().add(ii * cob + v * 16));
+                                va[kk][v] = _mm512_fmadd_ps(xv, w, va[kk][v]);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for kk in 0..TW {
+            for v in 0..NV {
+                _mm512_storeu_ps(acc.as_mut_ptr().add(kk * cob + v * 16), va[kk][v]);
+            }
+        }
+    }
+}
+
+/// NEON `std::arch` twin of [`reduce_tile`] for aarch64.
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon {
+    use super::TileGeom;
+    use core::arch::aarch64::*;
+
+    /// NEON tile reduction over `NV` q-registers per tile row
+    /// (`COB = 4 * NV`); `vfmaq_f32` is lane-wise fused `mul_add`, and
+    /// the chain order matches [`super::reduce_tile`], so results are
+    /// bitwise identical to the scalar oracle.
+    ///
+    /// # Safety
+    /// `acc` must hold `TW * NV * 4` floats (NEON itself is baseline
+    /// on aarch64).
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn reduce_tile_f32_neon<const NV: usize, const TW: usize>(
+        acc: &mut [f32],
+        inp: &[f32],
+        ker: &[f32],
+        g: &TileGeom,
+    ) {
+        let cob = NV * 4;
+        debug_assert_eq!(acc.len(), TW * cob);
+        let c_ib = g.c_ib;
+        let row_stride = g.w_i * c_ib;
+        let mut va = [[vdupq_n_f32(0.0); NV]; TW];
+        for kk in 0..TW {
+            for v in 0..NV {
+                va[kk][v] = vld1q_f32(acc.as_ptr().add(kk * cob + v * 4));
+            }
+        }
+        for n in 0..g.h_f {
+            let iy = (g.l * g.stride + n * g.dil) as isize - g.pad as isize;
+            if iy < 0 || iy >= g.h_i as isize {
+                continue;
+            }
+            let row = &inp[iy as usize * row_stride..][..row_stride];
+            for m in 0..g.w_f {
+                let kptr = &ker[(n * g.w_f + m) * c_ib * cob..][..c_ib * cob];
+                let x0 = (g.k0 * g.stride + m * g.dil) as isize - g.pad as isize;
+                let x_last = x0 + ((TW - 1) * g.stride) as isize;
+                if x0 >= 0 && x_last < g.w_i as isize {
+                    let base = x0 as usize * c_ib;
+                    for ii in 0..c_ib {
+                        let mut w = [vdupq_n_f32(0.0); NV];
+                        for v in 0..NV {
+                            w[v] = vld1q_f32(kptr.as_ptr().add(ii * cob + v * 4));
+                        }
+                        for kk in 0..TW {
+                            let xv = vdupq_n_f32(row[base + kk * g.stride * c_ib + ii]);
+                            for v in 0..NV {
+                                va[kk][v] = vfmaq_f32(va[kk][v], xv, w[v]);
+                            }
+                        }
+                    }
+                } else {
+                    for kk in 0..TW {
+                        let x = x0 + (kk * g.stride) as isize;
+                        if x < 0 || x >= g.w_i as isize {
+                            continue;
+                        }
+                        let base = x as usize * c_ib;
+                        for ii in 0..c_ib {
+                            let xv = vdupq_n_f32(row[base + ii]);
+                            for v in 0..NV {
+                                let w = vld1q_f32(kptr.as_ptr().add(ii * cob + v * 4));
+                                va[kk][v] = vfmaq_f32(va[kk][v], xv, w);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for kk in 0..TW {
+            for v in 0..NV {
+                vst1q_f32(acc.as_mut_ptr().add(kk * cob + v * 4), va[kk][v]);
             }
         }
     }
@@ -349,5 +670,82 @@ mod tests {
             let want = 1.0 * inp[k] + 2.0 * inp[k + 2] + 3.0 * inp[10 + k] + 4.0 * inp[10 + k + 2];
             assert_eq!(acc[k][0], want);
         }
+    }
+
+    /// Seeded pseudo-random fill (no external crates; LCG is plenty).
+    fn fill(buf: &mut [f32], mut state: u64) {
+        for v in buf.iter_mut() {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            *v = ((state >> 40) as i32 - (1 << 23)) as f32 / (1 << 20) as f32;
+        }
+    }
+
+    /// The whole SIMD story rests on this: whatever kernel
+    /// `reduce_tile_auto` dispatches to must be *bitwise* equal to the
+    /// scalar oracle, across interior, border and strided/dilated
+    /// tiles. On hosts without vector units this degenerates to
+    /// oracle-vs-oracle and still guards the dispatch plumbing.
+    #[test]
+    fn reduce_tile_auto_is_bitwise_equal_to_oracle() {
+        const COB: usize = 16; // 2 ymm / 1 zmm / 4 q-regs per row
+        const TW: usize = 4;
+        let g0 = TileGeom {
+            h_f: 3,
+            w_f: 3,
+            c_ib: 5,
+            h_i: 9,
+            w_i: 11,
+            stride: 2,
+            pad: 2,
+            dil: 2,
+            l: 0,
+            k0: 0,
+        };
+        let mut inp = vec![0.0f32; g0.h_i * g0.w_i * g0.c_ib];
+        let mut ker = vec![0.0f32; g0.h_f * g0.w_f * g0.c_ib * COB];
+        fill(&mut inp, 0x5eed);
+        fill(&mut ker, 0xf00d);
+        for (l, k0) in [(0, 0), (1, 0), (2, 1), (3, 2)] {
+            let g = TileGeom { l, k0, ..g0 };
+            let mut want = [[0.1f32; COB]; TW];
+            let mut got = want;
+            reduce_tile::<COB, TW>(&mut want, &inp, &ker, &g);
+            reduce_tile_auto::<COB, TW>(&mut got, &inp, &ker, &g);
+            for kk in 0..TW {
+                for j in 0..COB {
+                    assert_eq!(
+                        want[kk][j].to_bits(),
+                        got[kk][j].to_bits(),
+                        "lane ({kk},{j}) at l={l} k0={k0}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Narrow blocks (no whole vector) must fall back to the oracle.
+    #[test]
+    fn reduce_tile_auto_falls_back_on_narrow_blocks() {
+        let g = TileGeom {
+            h_f: 2,
+            w_f: 2,
+            c_ib: 3,
+            h_i: 6,
+            w_i: 6,
+            stride: 1,
+            pad: 0,
+            dil: 1,
+            l: 1,
+            k0: 1,
+        };
+        let mut inp = vec![0.0f32; g.h_i * g.w_i * g.c_ib];
+        let mut ker = vec![0.0f32; g.h_f * g.w_f * g.c_ib * 2];
+        fill(&mut inp, 7);
+        fill(&mut ker, 11);
+        let mut want = [[0.0f32; 2]; 3];
+        let mut got = want;
+        reduce_tile::<2, 3>(&mut want, &inp, &ker, &g);
+        reduce_tile_auto::<2, 3>(&mut got, &inp, &ker, &g);
+        assert_eq!(want, got);
     }
 }

@@ -9,6 +9,9 @@
 //!   accumulator tile), cache blocking over input channels (`C_i,b`),
 //!   the §4 blocked layouts, and parallelism over output-channel blocks.
 //! * [`microkernel`] — the register-tile FMA kernels `direct` dispatches to.
+//! * [`dispatch`] — runtime ISA detection selecting the `std::arch`
+//!   SIMD variants of those kernels (AVX2/AVX-512/NEON), with the
+//!   scalar cores kept as the always-compiled conformance oracle.
 //! * [`depthwise`] — the depthwise (`groups == C_i == C_o`) register-tile
 //!   kernel keeping the blocked `c_b` channels as SIMD lanes.
 //! * [`epilogue`] — fused conv post-ops (bias/BN scale+shift/residual/ReLU)
@@ -21,6 +24,7 @@
 pub mod backward;
 pub mod depthwise;
 pub mod direct;
+pub mod dispatch;
 pub mod epilogue;
 pub mod microkernel;
 pub mod naive;

@@ -92,6 +92,13 @@ impl ConvPlan for DirectPlan {
     fn backend(&self) -> &'static str {
         "direct"
     }
+    fn kernel_desc(&self) -> &'static str {
+        if self.shape.is_depthwise() {
+            crate::conv::dispatch::kernel_label_f32_dw(self.bp.c_ob)
+        } else {
+            crate::conv::dispatch::kernel_label_f32(self.bp.c_ob)
+        }
+    }
     fn shape(&self) -> &ConvShape {
         &self.shape
     }

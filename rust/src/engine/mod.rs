@@ -144,6 +144,16 @@ pub trait ConvPlan: Send + Sync {
     /// Name of the backend that produced this plan.
     fn backend(&self) -> &'static str;
 
+    /// Short label of the compute kernel `execute_into` will run —
+    /// the runtime-dispatched microkernel for the direct backends
+    /// (`"avx2-fma"`, `"neon-fma"`, `"avx2-widen"`, ...; see
+    /// [`crate::conv::dispatch`]), `"scalar"` for the comparator
+    /// backends. Informational: plan tables and the CLI print it so
+    /// the selected ISA is auditable per layer.
+    fn kernel_desc(&self) -> &'static str {
+        "scalar"
+    }
+
     /// The layer shape the plan was built for.
     fn shape(&self) -> &ConvShape;
 

@@ -391,17 +391,20 @@ fn plan_net(args: &Args) {
         })
     };
     println!(
-        "planned {} ({} layers) with backend '{backend}' in {:.1} ms\n",
+        "planned {} ({} layers) with backend '{backend}' in {:.1} ms",
         net,
         plans.layers.len(),
         secs * 1e3
     );
-    let mut t =
-        Table::new(&["layer", "backend", "threads", "GFLOPs", "retained KiB", "workspace KiB"]);
+    println!("kernel dispatch: {}\n", dconv::conv::dispatch::describe());
+    let mut t = Table::new(&[
+        "layer", "backend", "kernel", "threads", "GFLOPs", "retained KiB", "workspace KiB",
+    ]);
     for l in &plans.layers {
         t.row(vec![
             l.layer.name.clone(),
             l.backend.into(),
+            l.plan.kernel_desc().into(),
             l.threads.to_string(),
             format!("{:.3}", l.layer.gflops()),
             format!("{:.1}", l.plan.retained_bytes() as f64 / 1024.0),
@@ -466,8 +469,9 @@ fn plan_net_i8(args: &Args, source: NetSource, m: &Machine) {
         q.plans.layers.len(),
         secs * 1e3
     );
+    println!("kernel dispatch: {}\n", dconv::conv::dispatch::describe());
     let mut t = Table::new(&[
-        "layer", "backend", "weights f32 KiB", "weights i8 KiB", "out scale", "out zp",
+        "layer", "backend", "kernel", "weights f32 KiB", "weights i8 KiB", "out scale", "out zp",
     ]);
     for l in &q.plans.layers {
         let quant = l.plan.as_quantized().expect("direct_i8 plans expose the i8 surface");
@@ -475,6 +479,7 @@ fn plan_net_i8(args: &Args, source: NetSource, m: &Machine) {
         t.row(vec![
             l.layer.name.clone(),
             l.backend.into(),
+            l.plan.kernel_desc().into(),
             format!("{:.1}", l.layer.shape.kernel_bytes() as f64 / 1024.0),
             format!("{:.1}", quant.weight_bytes() as f64 / 1024.0),
             format!("{:.3e}", out_qp.scale),

@@ -55,6 +55,44 @@ impl Table {
         out
     }
 
+    /// JSON array-of-objects keyed by the header (cells stay strings —
+    /// the benches pre-format their numbers). This is the `BENCH_*.json`
+    /// baseline format CI archives per dispatch arm (scalar vs SIMD) so
+    /// perf trajectories can be diffed mechanically across PRs.
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            let mut out = String::with_capacity(s.len() + 2);
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\r' => out.push_str("\\r"),
+                    '\t' => out.push_str("\\t"),
+                    c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                    c => out.push(c),
+                }
+            }
+            out
+        }
+        let mut out = String::from("[");
+        for (i, r) in self.rows.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("\n  {");
+            for (j, (h, c)) in self.header.iter().zip(r).enumerate() {
+                if j > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&format!("\"{}\": \"{}\"", esc(h), esc(c)));
+            }
+            out.push('}');
+        }
+        out.push_str("\n]\n");
+        out
+    }
+
     pub fn to_csv(&self) -> String {
         let esc = |s: &str| {
             if s.contains(',') || s.contains('"') {
@@ -96,6 +134,17 @@ mod tests {
         let csv = t.to_csv();
         assert!(csv.contains("\"x,y\""));
         assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    fn json_is_array_of_objects_with_escapes() {
+        let mut t = Table::new(&["layer", "note"]);
+        t.row(vec!["conv1".into(), "a\"b\\c\nd".into()]);
+        let j = t.to_json();
+        assert!(j.starts_with('[') && j.trim_end().ends_with(']'));
+        assert!(j.contains("\"layer\": \"conv1\""));
+        assert!(j.contains("\"note\": \"a\\\"b\\\\c\\nd\""));
+        assert!(Table::new(&["x"]).to_json().contains("[\n]"));
     }
 
     #[test]

@@ -290,6 +290,15 @@ impl ConvPlan for DirectI8Plan {
     fn backend(&self) -> &'static str {
         "direct_i8"
     }
+    fn kernel_desc(&self) -> &'static str {
+        if self.shape.is_depthwise() {
+            // The i8 depthwise taps are lane-wise and memory-bound;
+            // no SIMD variant ships (see quant::direct).
+            "scalar"
+        } else {
+            crate::conv::dispatch::kernel_label_i8(self.bp.c_ob)
+        }
+    }
     fn shape(&self) -> &ConvShape {
         &self.shape
     }

@@ -309,6 +309,236 @@ fn requant_ep(acc: i32, m: f64, off: f64, res_term: f64, zp: i32, lo: i32, hi: i
     (q.clamp(lo as f64, hi as f64)) as i8
 }
 
+/// Loop bounds of one i8 tile reduction, hoisted once per
+/// output-channel block (the SIMD kernels take it whole rather than a
+/// ten-argument list).
+#[derive(Clone, Copy)]
+struct QTile {
+    h_f: usize,
+    w_f: usize,
+    c_ib: usize,
+    n_ib: usize,
+    h_i: usize,
+    w_i: usize,
+    stride: usize,
+    pad: usize,
+    dil: usize,
+    ker_jb: usize,
+    ker_ib: usize,
+    islab_len: usize,
+    row_stride: usize,
+    /// Output-channel block, output row, first output column of the tile.
+    jb: usize,
+    l: usize,
+    k0: usize,
+}
+
+/// Scalar i8 tile reduction — the conformance oracle: the full
+/// `(ib, n, m, ii)` i32 accumulation of one register tile. Exact
+/// integer arithmetic, so every dispatch variant must (and does) match
+/// it bit-for-bit.
+fn reduce_tile_q<T: QuantIo, const COB: usize>(
+    acc: &mut [[i32; COB]; MAX_WOB],
+    inp: &[T],
+    ker: &[i8],
+    in_qp: &QuantParams,
+    t: &QTile,
+    tw: usize,
+) {
+    for ib in 0..t.n_ib {
+        let kslab = &ker[t.jb * t.ker_jb + ib * t.ker_ib..][..t.ker_ib];
+        let islab = &inp[ib * t.islab_len..][..t.islab_len];
+        for n in 0..t.h_f {
+            let iy = (t.l * t.stride + n * t.dil) as isize - t.pad as isize;
+            if iy < 0 || iy >= t.h_i as isize {
+                continue; // whole kernel row outside the image
+            }
+            let row = &islab[iy as usize * t.row_stride..][..t.row_stride];
+            for m in 0..t.w_f {
+                let kptr = &kslab[(n * t.w_f + m) * t.c_ib * COB..][..t.c_ib * COB];
+                let x0 = (t.k0 * t.stride + m * t.dil) as isize - t.pad as isize;
+                let x_last = x0 + ((tw - 1) * t.stride) as isize;
+                if x0 >= 0 && x_last < t.w_i as isize {
+                    // Interior fast path: every tile column valid.
+                    let base = x0 as usize * t.c_ib;
+                    for ii in 0..t.c_ib {
+                        let w = &kptr[ii * COB..][..COB];
+                        for (kk, a) in acc.iter_mut().enumerate().take(tw) {
+                            let xv = row[base + kk * t.stride * t.c_ib + ii].to_centered(in_qp);
+                            for j in 0..COB {
+                                a[j] += xv * w[j] as i32;
+                            }
+                        }
+                    }
+                } else {
+                    // Border tap: guard each column (skip == 0
+                    // contribution, the quantized zero padding).
+                    for (kk, a) in acc.iter_mut().enumerate().take(tw) {
+                        let x = x0 + (kk * t.stride) as isize;
+                        if x < 0 || x >= t.w_i as isize {
+                            continue;
+                        }
+                        let base = x as usize * t.c_ib;
+                        for ii in 0..t.c_ib {
+                            let w = &kptr[ii * COB..][..COB];
+                            let xv = row[base + ii].to_centered(in_qp);
+                            for j in 0..COB {
+                                a[j] += xv * w[j] as i32;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Runtime-dispatched [`reduce_tile_q`]: the VNNI-shaped AVX2 core
+/// (widening i8→i32 weight loads, broadcast `mullo+add` — see
+/// `conv::dispatch`) when the host supports it and `COB` fills whole
+/// ymm registers, else the scalar oracle. i32 arithmetic is exact, so
+/// the variants are bit-identical by construction.
+#[inline(always)]
+fn reduce_tile_q_auto<T: QuantIo, const COB: usize>(
+    acc: &mut [[i32; COB]; MAX_WOB],
+    inp: &[T],
+    ker: &[i8],
+    in_qp: &QuantParams,
+    t: &QTile,
+    tw: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use crate::conv::dispatch::{active, SimdLevel};
+        if matches!(active(), SimdLevel::Avx2 | SimdLevel::Avx512) && COB % 8 == 0 {
+            // SAFETY: avx2 runtime-detected; the flat view is the
+            // tile's contiguous MAX_WOB*COB storage.
+            unsafe {
+                let flat = core::slice::from_raw_parts_mut(
+                    acc.as_mut_ptr().cast::<i32>(),
+                    MAX_WOB * COB,
+                );
+                macro_rules! go {
+                    ($nv:literal, $tw:literal) => {
+                        reduce_tile_q_avx2::<T, $nv, $tw>(flat, inp, ker, in_qp, t)
+                    };
+                    ($nv:literal) => {
+                        match tw {
+                            1 => go!($nv, 1),
+                            2 => go!($nv, 2),
+                            3 => go!($nv, 3),
+                            4 => go!($nv, 4),
+                            5 => go!($nv, 5),
+                            6 => go!($nv, 6),
+                            7 => go!($nv, 7),
+                            _ => go!($nv, 8),
+                        }
+                    };
+                }
+                match COB / 8 {
+                    1 => go!(1),
+                    2 => go!(2),
+                    _ => go!(4),
+                }
+            }
+            return;
+        }
+    }
+    reduce_tile_q::<T, COB>(acc, inp, ker, in_qp, t, tw);
+}
+
+/// AVX2 i8 tile reduction over `NV` ymm accumulators per tile row
+/// (`COB = 8 * NV`, `TW` live rows): weights sign-extend i8→i32
+/// lane-wise (`_mm256_cvtepi8_epi32`), the centered input broadcasts,
+/// and `_mm256_mullo_epi32 + _mm256_add_epi32` emulate the dot-product
+/// FMA that VNNI would fuse. All-integer, so bit-identical to
+/// [`reduce_tile_q`] regardless of order.
+///
+/// # Safety
+/// Caller must have runtime-detected `avx2`; `acc` must hold
+/// `MAX_WOB * NV * 8` i32 (row pitch `NV * 8`, first `TW` rows used).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn reduce_tile_q_avx2<T: QuantIo, const NV: usize, const TW: usize>(
+    acc: &mut [i32],
+    inp: &[T],
+    ker: &[i8],
+    in_qp: &QuantParams,
+    t: &QTile,
+) {
+    use core::arch::x86_64::*;
+    let cob = NV * 8;
+    debug_assert!(acc.len() >= TW * cob);
+    let mut va = [[_mm256_setzero_si256(); NV]; TW];
+    for kk in 0..TW {
+        for v in 0..NV {
+            va[kk][v] =
+                _mm256_loadu_si256(acc.as_ptr().add(kk * cob + v * 8) as *const __m256i);
+        }
+    }
+    for ib in 0..t.n_ib {
+        let kslab = &ker[t.jb * t.ker_jb + ib * t.ker_ib..][..t.ker_ib];
+        let islab = &inp[ib * t.islab_len..][..t.islab_len];
+        for n in 0..t.h_f {
+            let iy = (t.l * t.stride + n * t.dil) as isize - t.pad as isize;
+            if iy < 0 || iy >= t.h_i as isize {
+                continue;
+            }
+            let row = &islab[iy as usize * t.row_stride..][..t.row_stride];
+            for m in 0..t.w_f {
+                let kptr = &kslab[(n * t.w_f + m) * t.c_ib * cob..][..t.c_ib * cob];
+                let x0 = (t.k0 * t.stride + m * t.dil) as isize - t.pad as isize;
+                let x_last = x0 + ((TW - 1) * t.stride) as isize;
+                if x0 >= 0 && x_last < t.w_i as isize {
+                    let base = x0 as usize * t.c_ib;
+                    for ii in 0..t.c_ib {
+                        let mut w = [_mm256_setzero_si256(); NV];
+                        for v in 0..NV {
+                            w[v] = _mm256_cvtepi8_epi32(_mm_loadl_epi64(
+                                kptr.as_ptr().add(ii * cob + v * 8) as *const __m128i,
+                            ));
+                        }
+                        for kk in 0..TW {
+                            let xv = _mm256_set1_epi32(
+                                row[base + kk * t.stride * t.c_ib + ii].to_centered(in_qp),
+                            );
+                            for v in 0..NV {
+                                va[kk][v] =
+                                    _mm256_add_epi32(va[kk][v], _mm256_mullo_epi32(xv, w[v]));
+                            }
+                        }
+                    }
+                } else {
+                    for kk in 0..TW {
+                        let x = x0 + (kk * t.stride) as isize;
+                        if x < 0 || x >= t.w_i as isize {
+                            continue;
+                        }
+                        let base = x as usize * t.c_ib;
+                        for ii in 0..t.c_ib {
+                            let xv = _mm256_set1_epi32(row[base + ii].to_centered(in_qp));
+                            for v in 0..NV {
+                                let w = _mm256_cvtepi8_epi32(_mm_loadl_epi64(
+                                    kptr.as_ptr().add(ii * cob + v * 8) as *const __m128i,
+                                ));
+                                va[kk][v] = _mm256_add_epi32(va[kk][v], _mm256_mullo_epi32(xv, w));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for kk in 0..TW {
+        for v in 0..NV {
+            _mm256_storeu_si256(
+                acc.as_mut_ptr().add(kk * cob + v * 8) as *mut __m256i,
+                va[kk][v],
+            );
+        }
+    }
+}
+
 /// One output-channel block: full `C_i` reduction in i32 per register
 /// tile, then the fused requantize epilogue.
 fn conv_block_q<T: QuantIo, const COB: usize>(
@@ -321,70 +551,38 @@ fn conv_block_q<T: QuantIo, const COB: usize>(
 ) {
     let s = g.shape;
     let (h_o, w_o) = (s.h_o(), s.w_o());
-    let (h_i, w_i) = (s.h_i, s.w_i);
-    let (h_f, w_f) = (s.h_f, s.w_f);
-    let (stride, pad, dil) = (s.stride, s.pad, s.dilation);
     let c_ib = g.bp.c_ib;
     let n_ib = s.c_i / c_ib;
-    let ker_ib = h_f * w_f * c_ib * COB;
-    let ker_jb = n_ib * ker_ib;
-    let islab_len = h_i * w_i * c_ib;
-    let row_stride = w_i * c_ib;
+    let ker_ib = s.h_f * s.w_f * c_ib * COB;
     let tw_max = g.bp.w_ob.min(MAX_WOB);
     let (lo, hi) = g.bounds();
+    let mut t = QTile {
+        h_f: s.h_f,
+        w_f: s.w_f,
+        c_ib,
+        n_ib,
+        h_i: s.h_i,
+        w_i: s.w_i,
+        stride: s.stride,
+        pad: s.pad,
+        dil: s.dilation,
+        ker_jb: n_ib * ker_ib,
+        ker_ib,
+        islab_len: s.h_i * s.w_i * c_ib,
+        row_stride: s.w_i * c_ib,
+        jb,
+        l: 0,
+        k0: 0,
+    };
 
     for l in 0..h_o {
+        t.l = l;
         let mut k0 = 0usize;
         while k0 < w_o {
             let tw = tw_max.min(w_o - k0);
+            t.k0 = k0;
             let mut acc = [[0i32; COB]; MAX_WOB];
-            for ib in 0..n_ib {
-                let kslab = &ker[jb * ker_jb + ib * ker_ib..][..ker_ib];
-                let islab = &inp[ib * islab_len..][..islab_len];
-                for n in 0..h_f {
-                    let iy = (l * stride + n * dil) as isize - pad as isize;
-                    if iy < 0 || iy >= h_i as isize {
-                        continue; // whole kernel row outside the image
-                    }
-                    let row = &islab[iy as usize * row_stride..][..row_stride];
-                    for m in 0..w_f {
-                        let kptr = &kslab[(n * w_f + m) * c_ib * COB..][..c_ib * COB];
-                        let x0 = (k0 * stride + m * dil) as isize - pad as isize;
-                        let x_last = x0 + ((tw - 1) * stride) as isize;
-                        if x0 >= 0 && x_last < w_i as isize {
-                            // Interior fast path: every tile column valid.
-                            let base = x0 as usize * c_ib;
-                            for ii in 0..c_ib {
-                                let w = &kptr[ii * COB..][..COB];
-                                for (kk, a) in acc.iter_mut().enumerate().take(tw) {
-                                    let xv = row[base + kk * stride * c_ib + ii]
-                                        .to_centered(&g.in_qp);
-                                    for j in 0..COB {
-                                        a[j] += xv * w[j] as i32;
-                                    }
-                                }
-                            }
-                        } else {
-                            // Border tap: guard each column (skip == 0
-                            // contribution, the quantized zero padding).
-                            for (kk, a) in acc.iter_mut().enumerate().take(tw) {
-                                let x = x0 + (kk * stride) as isize;
-                                if x < 0 || x >= w_i as isize {
-                                    continue;
-                                }
-                                let base = x as usize * c_ib;
-                                for ii in 0..c_ib {
-                                    let w = &kptr[ii * COB..][..COB];
-                                    let xv = row[base + ii].to_centered(&g.in_qp);
-                                    for j in 0..COB {
-                                        a[j] += xv * w[j] as i32;
-                                    }
-                                }
-                            }
-                        }
-                    }
-                }
-            }
+            reduce_tile_q_auto::<T, COB>(&mut acc, inp, ker, &g.in_qp, &t, tw);
             // Fused requantize epilogue: i32 -> i8 (or dequantized f32).
             let tile = &mut out_blk[(l * w_o + k0) * COB..][..tw * COB];
             let res_tile = res_blk.map(|r| &r[(l * w_o + k0) * COB..][..tw * COB]);

@@ -220,6 +220,140 @@ fn workspace_accounting_matches_paper_formulas() {
 }
 
 // ---------------------------------------------------------------------
+// SIMD-vs-scalar dispatch battery
+// ---------------------------------------------------------------------
+
+/// The dispatch toggle is process-global: serialize every test that
+/// flips it so a concurrent comparison keeps its discriminating power.
+static DISPATCH_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// The adversarial grid plus the shapes that actually reach the SIMD
+/// kernels (vector-width channel blocks) and every structural variant
+/// they must cover: stride, dilation, groups, depthwise.
+fn dispatch_grid() -> Vec<ConvShape> {
+    let mut g = grid();
+    g.push(ConvShape::new(16, 13, 13, 32, 3, 3, 1, 1)); // vector-width blocks
+    g.push(ConvShape::new(32, 9, 9, 16, 3, 3, 2, 1)); // strided, c_ob 16
+    g.push(ConvShape::new(8, 14, 14, 16, 3, 3, 1, 2).with_dilation(2)); // dilated
+    g.push(ConvShape::new(16, 10, 10, 16, 3, 3, 1, 1).with_groups(2)); // grouped
+    g.push(ConvShape::new(16, 12, 12, 16, 3, 3, 1, 1).with_groups(16)); // depthwise
+    g
+}
+
+/// Every f32 backend that routes through the dispatched microkernels,
+/// run with detection active and again with the scalar oracle pinned:
+/// the two must agree **bitwise** (the SIMD kernels keep the scalar
+/// reduction chain order — this is the force-scalar reproduction
+/// guarantee, asserted per shape across the structural grid).
+#[test]
+fn dispatched_f32_kernels_match_scalar_oracle_bitwise() {
+    let _guard = DISPATCH_LOCK.lock().unwrap();
+    let registry = BackendRegistry::default();
+    let machine = haswell();
+    for (i, s) in dispatch_grid().iter().enumerate() {
+        let seed = 900 + i as u64;
+        let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], seed);
+        let kernel = Tensor::random(&[s.c_o, s.c_i / s.groups, s.h_f, s.w_f], seed + 1);
+        let plan = registry.plan("direct", s, &kernel, &machine, 1).unwrap();
+        let dispatched = plan.execute(&input).unwrap();
+        dconv::conv::dispatch::_force_scalar_for_tests(true);
+        let scalar = plan.execute(&input).unwrap();
+        dconv::conv::dispatch::_force_scalar_for_tests(false);
+        assert_eq!(
+            dispatched.data(),
+            scalar.data(),
+            "dispatched f32 kernel must be bitwise-equal to the scalar oracle on {s:?}"
+        );
+        // And both conform to the naive oracle (not just to each other).
+        let want = conv_naive(&input, &kernel, s).unwrap();
+        assert!(
+            dispatched.allclose(&want, 1e-3, 1e-4),
+            "direct mismatch vs naive on {s:?}: {}",
+            dispatched.max_abs_diff(&want)
+        );
+    }
+}
+
+/// The fused-epilogue path must run on the dispatched vector tile too:
+/// fused execute (scale/shift/residual/ReLU6 inside the register tile)
+/// with dispatch active vs the scalar-pinned run — still bitwise.
+#[test]
+fn dispatched_fused_epilogue_matches_scalar_bitwise() {
+    use dconv::conv::Epilogue;
+    let _guard = DISPATCH_LOCK.lock().unwrap();
+    let registry = BackendRegistry::default();
+    let machine = haswell();
+    for (i, s) in dispatch_grid().iter().enumerate() {
+        let seed = 1100 + i as u64;
+        let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], seed);
+        let kernel = Tensor::random(&[s.c_o, s.c_i / s.groups, s.h_f, s.w_f], seed + 1);
+        let ep = Epilogue::bn(
+            (0..s.c_o).map(|c| 0.5 + c as f32 * 0.05).collect(),
+            (0..s.c_o).map(|c| c as f32 * 0.01 - 0.2).collect(),
+        )
+        .with_relu(Some(6.0));
+        let plan = registry.plan("direct", s, &kernel, &machine, 1).unwrap();
+        let out_len = s.c_o * s.h_o() * s.w_o();
+        let packed = plan.pack_input(&input).unwrap();
+        let mut dispatched = vec![0.0f32; out_len];
+        let mut scalar = vec![0.0f32; out_len];
+        plan.execute_fused_into(packed.data(), &mut dispatched, &mut [], &ep, None).unwrap();
+        dconv::conv::dispatch::_force_scalar_for_tests(true);
+        plan.execute_fused_into(packed.data(), &mut scalar, &mut [], &ep, None).unwrap();
+        dconv::conv::dispatch::_force_scalar_for_tests(false);
+        assert_eq!(
+            dispatched, scalar,
+            "fused epilogue on the vector tile must match the scalar tile bitwise on {s:?}"
+        );
+    }
+}
+
+/// The i8 core is exact integer arithmetic: the AVX2 widening-multiply
+/// kernel must reproduce the scalar oracle **bit-for-bit** (on the
+/// dequantized f32 boundary, equality of every bit pattern).
+#[test]
+fn dispatched_i8_core_is_bit_exact_vs_scalar() {
+    let _guard = DISPATCH_LOCK.lock().unwrap();
+    let registry = BackendRegistry::default();
+    let machine = haswell();
+    for (i, s) in dispatch_grid().iter().enumerate() {
+        let seed = 1300 + i as u64;
+        let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], seed);
+        let kernel = Tensor::random(&[s.c_o, s.c_i / s.groups, s.h_f, s.w_f], seed + 1);
+        let algo = registry.get("direct_i8").unwrap();
+        if !algo.applicable(s) {
+            continue;
+        }
+        let plan = algo.plan(s, &kernel, &machine, 1).unwrap();
+        let dispatched = plan.execute(&input).unwrap();
+        dconv::conv::dispatch::_force_scalar_for_tests(true);
+        let scalar = plan.execute(&input).unwrap();
+        dconv::conv::dispatch::_force_scalar_for_tests(false);
+        assert_eq!(
+            dispatched, scalar,
+            "i8 dispatch must be bit-exact vs the scalar oracle on {s:?}"
+        );
+    }
+}
+
+/// Under `CONV_FORCE_SCALAR=1 cargo test` (the CI force-scalar job)
+/// the dispatcher must pin the scalar oracle for the whole process;
+/// without the env var this still asserts the cached detection is
+/// stable and the labels stay consistent with it.
+#[test]
+fn conv_force_scalar_env_pins_the_oracle() {
+    use dconv::conv::dispatch::{self, SimdLevel};
+    let _guard = DISPATCH_LOCK.lock().unwrap();
+    let forced = std::env::var("CONV_FORCE_SCALAR").map(|v| !v.is_empty() && v != "0") == Ok(true);
+    if forced {
+        assert_eq!(dispatch::active(), SimdLevel::Scalar);
+        assert_eq!(dispatch::kernel_label_f32(16), "scalar");
+        assert_eq!(dispatch::kernel_label_i8(16), "scalar");
+    }
+    assert_eq!(dispatch::active(), dispatch::active(), "detection must be cached and stable");
+}
+
+// ---------------------------------------------------------------------
 // Coordinator serves through a cached plan (native, no PJRT)
 // ---------------------------------------------------------------------
 

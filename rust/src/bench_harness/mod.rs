@@ -80,9 +80,11 @@ pub fn bench(name: &str, opts: BenchOpts, mut f: impl FnMut()) -> Measurement {
 
 /// Persist a finished table under `bench_results/<bench>.{md,csv}`
 /// plus a machine-diffable `BENCH_<bench>.json` baseline (tagged with
-/// the kernel-dispatch decision, so a scalar-pinned run and a SIMD run
-/// of the same bench are distinguishable artifacts), and echo the
-/// markdown to stdout (what EXPERIMENTS.md records).
+/// the kernel-dispatch decision: the human-readable `dispatch` line
+/// plus structured `simd_level`/`lanes` fields, so a scalar-pinned run
+/// and a SIMD run of the same bench are distinguishable — and
+/// mechanically attributable — artifacts), and echo the markdown to
+/// stdout (what EXPERIMENTS.md records).
 pub fn emit(bench_name: &str, title: &str, table: &Table) {
     println!("\n## {title}\n");
     print!("{}", table.to_markdown());
@@ -90,9 +92,13 @@ pub fn emit(bench_name: &str, title: &str, table: &Table) {
     if std::fs::create_dir_all(dir).is_ok() {
         let _ = std::fs::write(dir.join(format!("{bench_name}.md")), table.to_markdown());
         let _ = std::fs::write(dir.join(format!("{bench_name}.csv")), table.to_csv());
+        let level = crate::conv::dispatch::active();
         let json = format!(
-            "{{\n\"bench\": \"{bench_name}\",\n\"dispatch\": \"{}\",\n\"rows\": {}}}\n",
+            "{{\n\"bench\": \"{bench_name}\",\n\"dispatch\": \"{}\",\n\
+             \"simd_level\": \"{}\",\n\"lanes\": {},\n\"rows\": {}}}\n",
             crate::conv::dispatch::describe(),
+            level.name(),
+            level.lanes(),
             table.to_json(),
         );
         let _ = std::fs::write(dir.join(format!("BENCH_{bench_name}.json")), json);

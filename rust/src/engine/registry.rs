@@ -52,6 +52,16 @@ impl BackendRegistry {
         SHARED.get_or_init(BackendRegistry::default)
     }
 
+    /// The dispatch-aware host machine model, detected once per
+    /// process. `auto` selection and every CLI/serving planning path
+    /// consult this instead of re-deriving [`crate::arch::host`] per
+    /// `plan` call — the dispatch decision is process-constant, so the
+    /// machine model is too.
+    pub fn host_machine() -> &'static Machine {
+        static HOST: std::sync::OnceLock<Machine> = std::sync::OnceLock::new();
+        HOST.get_or_init(crate::arch::host)
+    }
+
     /// Look a backend up by its registry name.
     pub fn get(&self, name: &str) -> Option<&dyn ConvAlgo> {
         self.backends.iter().find(|b| b.name() == name).map(|b| b.as_ref())
@@ -127,6 +137,15 @@ impl BackendRegistry {
     }
 
     /// One-call convenience: resolve `name` and plan the layer.
+    ///
+    /// An explicitly named backend propagates its plan errors — the
+    /// caller asked for that backend specifically. `"auto"` instead
+    /// *recovers*: if the heuristically picked backend fails to plan
+    /// (a parameter-selection hole, a comparator's shape edge case),
+    /// the layer falls back to `direct` with a logged reason —
+    /// `select_params` always finds a dividing block, down to
+    /// `c_ob = 1`, so `direct` plans everything — rather than sinking
+    /// the whole net.
     pub fn plan(
         &self,
         name: &str,
@@ -135,7 +154,21 @@ impl BackendRegistry {
         machine: &Machine,
         threads: usize,
     ) -> Result<Box<dyn ConvPlan>> {
-        self.resolve(name, shape, machine)?.plan(shape, kernel, machine, threads)
+        let algo = self.resolve(name, shape, machine)?;
+        match algo.plan(shape, kernel, machine, threads) {
+            Ok(plan) => Ok(plan),
+            Err(e) if name == "auto" && algo.name() != "direct" => match self.get("direct") {
+                Some(direct) => {
+                    eprintln!(
+                        "auto: '{}' failed to plan {shape:?} ({e}); falling back to direct",
+                        algo.name()
+                    );
+                    direct.plan(shape, kernel, machine, threads)
+                }
+                None => Err(e),
+            },
+            Err(e) => Err(e),
+        }
     }
 }
 
@@ -192,6 +225,54 @@ mod tests {
         assert_eq!(r.auto(&s3, &m).name(), "winograd");
         let s5 = ConvShape::new(3, 9, 9, 5, 5, 5, 1, 2);
         assert_eq!(r.auto(&s5, &m).name(), "im2col");
+    }
+
+    #[test]
+    fn host_machine_is_one_instance() {
+        let a = BackendRegistry::host_machine() as *const Machine;
+        let b = BackendRegistry::host_machine() as *const Machine;
+        assert_eq!(a, b);
+        assert!(BackendRegistry::host_machine().n_vec >= 1);
+    }
+
+    /// A backend whose plan construction always errors, shadowing
+    /// `winograd` (registered in front, so [`BackendRegistry::get`]
+    /// finds it first).
+    struct FailingWinograd;
+
+    impl ConvAlgo for FailingWinograd {
+        fn name(&self) -> &'static str {
+            "winograd"
+        }
+        fn applicable(&self, _: &ConvShape) -> bool {
+            true
+        }
+        fn plan(
+            &self,
+            _: &ConvShape,
+            _: &Tensor,
+            _: &Machine,
+            _: usize,
+        ) -> Result<Box<dyn ConvPlan>> {
+            Err(Error::Runtime("injected plan failure".into()))
+        }
+    }
+
+    #[test]
+    fn auto_plan_falls_back_to_direct_on_plan_error() {
+        let mut r = BackendRegistry::default();
+        r.register(Box::new(FailingWinograd));
+        let m = haswell();
+        // C_o = 5, 3x3/s1: `auto` routes to winograd (see
+        // auto_falls_back_on_degenerate_channels) — here the shadowed,
+        // always-failing one.
+        let s = ConvShape::new(3, 9, 9, 5, 3, 3, 1, 1);
+        assert_eq!(r.auto(&s, &m).name(), "winograd");
+        let kernel = Tensor::random(&[5, 3, 3, 3], 3);
+        let plan = r.plan("auto", &s, &kernel, &m, 1).unwrap();
+        assert_eq!(plan.backend(), "direct");
+        // Asking for the broken backend BY NAME still propagates.
+        assert!(r.plan("winograd", &s, &kernel, &m, 1).is_err());
     }
 
     #[test]

@@ -136,6 +136,7 @@ pub mod runtime;
 pub mod serve;
 pub mod sim;
 pub mod tensor;
+pub mod tune;
 pub mod winograd;
 
 /// Crate-wide error type.

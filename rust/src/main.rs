@@ -8,13 +8,28 @@
 //!                               plan every applicable backend for a layer:
 //!                               plan/exec time + memory-overhead table
 //!   plan-net [--net N | --model path.json] [--backend B] [--threads P]
-//!            [--autotune] [--dtype f32|i8]
+//!            [--autotune] [--tune] [--policy measure|cache|heuristic]
+//!            [--budget-ms MS] [--cache path.json] [--dtype f32|i8]
 //!                               per-layer plan table for a whole network
 //!                               (built-in or JSON model spec), with
 //!                               measured per-layer thread counts under
-//!                               --autotune; --dtype i8 calibrates and
-//!                               quantizes the net and reports the 4x
-//!                               weight/arena shrink next to f32
+//!                               --autotune; --tune plans each layer on its
+//!                               measured-best backend (mixed-backend plans,
+//!                               persistent autotune cache) and prints the
+//!                               per-layer candidate table; --dtype i8
+//!                               calibrates and quantizes the net and
+//!                               reports the 4x weight/arena shrink next
+//!                               to f32
+//!   autotune [--net N | --model path.json] [--budget-ms MS]
+//!            [--cache path.json] [--policy measure|cache|heuristic]
+//!            [--threads P]
+//!                               pre-warm the autotune cache: measure every
+//!                               layer's backend candidates (warmup +
+//!                               median-of-k under the per-layer budget)
+//!                               and persist the winners keyed by arch
+//!                               fingerprint; a re-run on the same machine
+//!                               reports 100% cache hits and measures
+//!                               nothing
 //!   simulate [--net N] [--arch A] [--threads P]
 //!                               simulated per-layer comparison (Fig 4 rows)
 //!   run-layer [--layer NAME] [--backend B] [--threads P]
@@ -56,6 +71,7 @@ use dconv::quant::{DType, QuantNet, CALIBRATION_SEED};
 use dconv::serve::{loadgen, LoadSpec, ModelHandle, ModelLoad, ServeConfig, Server, ServerBuilder};
 use dconv::sim::{estimate, Algo, ArrivalPattern};
 use dconv::tensor::Tensor;
+use dconv::tune::{TunePolicy, Tuner};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::{Duration, Instant};
 
@@ -68,6 +84,7 @@ fn main() {
         "layouts" => layouts(),
         "backends" => backends_cmd(&args),
         "plan-net" => plan_net(&args),
+        "autotune" => autotune_cmd(&args),
         "simulate" => simulate(&args),
         "run-layer" => run_layer(&args),
         "serve" => serve(&args),
@@ -88,7 +105,12 @@ fn help() {
            backends    compare every backend on one layer [--layer alexnet/conv3]\n\
            plan-net    plan a whole net through the engine\n\
                        [--net N | --model path.json] [--backend auto] [--autotune]\n\
+                       [--tune] [--policy measure|cache|heuristic] [--budget-ms MS]\n\
+                       [--cache path.json]  (--tune: measured mixed-backend plans)\n\
                        [--dtype f32|i8]  (i8: calibrated int8 plans, 4x smaller arena)\n\
+           autotune    pre-warm the persistent autotune cache for a net\n\
+                       [--net N | --model path.json] [--budget-ms 50]\n\
+                       [--cache path.json] [--threads P]\n\
            simulate    simulated Fig-4 comparison [--net N --arch intel|amd|arm --threads P]\n\
            run-layer   measure one layer on this host [--layer alexnet/conv3 --backend auto]\n\
            serve       serve a layer, or whole nets through the production server\n\
@@ -193,11 +215,11 @@ fn backends_cmd(args: &Args) {
     let p = args.get_usize("threads", 1);
     let layer = find_layer(name);
     let s = &layer.shape;
-    let m = arch::host();
+    let m = BackendRegistry::host_machine();
     let registry = BackendRegistry::default();
     let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 1);
     let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 2);
-    let auto_pick = registry.auto(s, &m).name();
+    let auto_pick = registry.auto(s, m).name();
     println!(
         "{name} ({:.2} GFLOPs), {p} thread(s); auto would pick '{auto_pick}'\n",
         layer.gflops()
@@ -210,7 +232,7 @@ fn backends_cmd(args: &Args) {
         if !algo.applicable(s) {
             continue;
         }
-        let (plan, secs_plan) = time_it(|| algo.plan(s, &kernel, &m, p).unwrap());
+        let (plan, secs_plan) = time_it(|| algo.plan(s, &kernel, m, p).unwrap());
         let packed = plan.pack_input(&input).unwrap();
         let mut out = vec![0.0f32; s.c_o * s.h_o() * s.w_o()];
         let mut ws = vec![0.0f32; plan.workspace_len()];
@@ -334,6 +356,20 @@ impl NetSource {
         }
     }
 
+    /// Plan each layer on its tuner-resolved backend (mixed-backend
+    /// plans; see [`NetPlans::build_tuned`]).
+    fn build_tuned(
+        &self,
+        m: &Machine,
+        tuner: &mut Tuner,
+        threads: usize,
+    ) -> dconv::Result<(NetPlans, Vec<nets::TunedChoice>)> {
+        match self {
+            NetSource::Table(net) => NetPlans::build_tuned(net, m, tuner, threads),
+            NetSource::Model(model) => NetPlans::build_model_tuned(model, m, tuner, threads),
+        }
+    }
+
     /// Compile the planned net with this source's graph (the canonical
     /// table graph, or the model's own). Model sources run the fusion
     /// pass and compile the fused schedule — bitwise identical to the
@@ -355,24 +391,150 @@ impl NetSource {
     }
 }
 
+/// Autotune cache location: `--cache PATH` wins, then the
+/// `DCONV_TUNE_CACHE` environment variable, then the default next to
+/// the bench artifacts.
+fn tune_cache_path(args: &Args) -> String {
+    if let Some(p) = args.get("cache") {
+        return p.to_string();
+    }
+    std::env::var("DCONV_TUNE_CACHE")
+        .unwrap_or_else(|_| "bench_results/autotune_cache.json".to_string())
+}
+
+/// Build the tuner the `--tune`/`autotune` paths share: policy from
+/// `--policy` (default measure-once), cache file from
+/// [`tune_cache_path`], per-layer budget from `--budget-ms`.
+fn make_tuner(args: &Args) -> Tuner {
+    let policy_name = args.get_or("policy", "measure");
+    let policy = TunePolicy::from_name(policy_name).unwrap_or_else(|| {
+        eprintln!("unknown --policy '{policy_name}' (measure|cache|heuristic)");
+        std::process::exit(1);
+    });
+    let path = tune_cache_path(args);
+    let tuner = match Tuner::with_cache_file(policy, &path) {
+        Ok(t) => t,
+        Err(e) => die(e),
+    };
+    tuner.budget_ms(args.get_usize("budget-ms", 50) as u64)
+}
+
+/// The per-layer candidate table plus the hit/measure summary shared
+/// by `plan-net --tune` and the `autotune` subcommand. The second
+/// `autotune` run on a machine greps for the `100% cache hits` line in
+/// CI, so keep it stable.
+fn print_tune_report(report: &[nets::TunedChoice], tuner: &Tuner) {
+    let mut t = Table::new(&["layer", "cache", "winner", "candidates (measured ms)"]);
+    for r in report {
+        let cands = r
+            .candidates
+            .iter()
+            .map(|c| format!("{} {:.3}", c.backend, c.time_secs * 1e3))
+            .collect::<Vec<_>>()
+            .join(", ");
+        t.row(vec![
+            r.layer.clone(),
+            if r.cache_hit {
+                "hit".into()
+            } else if r.measured {
+                "miss".into()
+            } else {
+                "heuristic".into()
+            },
+            r.backend.clone(),
+            if cands.is_empty() { "-".into() } else { cands },
+        ]);
+    }
+    print!("{}", t.to_markdown());
+    let distinct: std::collections::BTreeSet<&str> =
+        report.iter().map(|r| r.backend.as_str()).collect();
+    println!(
+        "\ncache hits: {}/{}; measured {} layer(s); {} distinct backend(s) in plan: {}",
+        tuner.hits(),
+        tuner.lookups(),
+        tuner.measurements(),
+        distinct.len(),
+        distinct.into_iter().collect::<Vec<_>>().join(", ")
+    );
+    if tuner.lookups() > 0 && tuner.hits() == tuner.lookups() {
+        println!("100% cache hits — zero measurements this run");
+    }
+}
+
+/// `dconv autotune`: pre-warm the persistent autotune cache by
+/// measuring every layer of a net (see [`NetPlans::build_tuned`]),
+/// then persist the winners keyed by this machine's arch fingerprint.
+fn autotune_cmd(args: &Args) {
+    let m = BackendRegistry::host_machine();
+    let threads = args.get_usize("threads", 1);
+    let source = NetSource::resolve(args);
+    let net = source.name();
+    let mut tuner = make_tuner(args);
+    println!(
+        "tuning {net} under policy '{}' (budget {} ms/layer, cache {} with {} entr{})",
+        tuner.policy().name(),
+        args.get_usize("budget-ms", 50),
+        tuner.cache().path().map(|p| p.display().to_string()).unwrap_or_else(|| "-".into()),
+        tuner.cache().len(),
+        if tuner.cache().len() == 1 { "y" } else { "ies" },
+    );
+    println!("kernel dispatch: {}", dconv::conv::dispatch::describe());
+    println!(
+        "arch fingerprint: {}\n",
+        dconv::tune::ArchFingerprint::current(m).key()
+    );
+    let ((plans, report), secs) = time_it(|| match source.build_tuned(m, &mut tuner, threads) {
+        Ok(r) => r,
+        Err(e) => die(e),
+    });
+    print_tune_report(&report, &tuner);
+    println!(
+        "\ntuned {} layer(s) in {:.1} ms; plan overhead: retained {} B + peak workspace {} B",
+        plans.layers.len(),
+        secs * 1e3,
+        plans.total_retained_bytes(),
+        plans.max_workspace_bytes()
+    );
+    match tuner.save() {
+        Ok(()) => {
+            if let Some(p) = tuner.cache().path() {
+                println!("wrote {} ({} entries)", p.display(), tuner.cache().len());
+            }
+        }
+        Err(e) => die(e),
+    }
+}
+
 /// Plan a whole network — a built-in benchmark net (`--net`) or a JSON
 /// model spec (`--model path.json`) — and print the per-layer plan
 /// table. With `--autotune`, each layer's thread count is measured at
 /// plan time ([`NetPlans::build_autotuned`]) instead of fixed by
-/// `--threads`.
+/// `--threads`. With `--tune`, each layer runs on its measured-best
+/// backend instead (mixed-backend plans through the autotune cache).
 fn plan_net(args: &Args) {
     let backend = args.get_or("backend", "auto");
     let p = args.get_usize("threads", 1);
-    let m = arch::host();
+    let m = BackendRegistry::host_machine();
     let source = NetSource::resolve(args);
     if source.dtype(args) == DType::I8 {
-        return plan_net_i8(args, source, &m);
+        return plan_net_i8(args, source, m);
     }
     let net = source.name();
-    let (plans, secs) = if args.flag("autotune") {
+    let (plans, secs) = if args.flag("tune") {
+        let mut tuner = make_tuner(args);
+        let ((plans, report), secs) = time_it(|| match source.build_tuned(m, &mut tuner, p) {
+            Ok(r) => r,
+            Err(e) => die(e),
+        });
+        print_tune_report(&report, &tuner);
+        if let Err(e) = tuner.save() {
+            eprintln!("warning: autotune cache not saved: {e}");
+        }
+        (plans, secs)
+    } else if args.flag("autotune") {
         let cands = thread_candidates();
         let ((plans, report), secs) = time_it(|| {
-            match source.build_autotuned(backend, &m, &cands) {
+            match source.build_autotuned(backend, m, &cands) {
                 Ok(r) => r,
                 Err(e) => die(e),
             }
@@ -385,15 +547,16 @@ fn plan_net(args: &Args) {
         );
         (plans, secs)
     } else {
-        time_it(|| match source.build(backend, &m, p) {
+        time_it(|| match source.build(backend, m, p) {
             Ok(r) => r,
             Err(e) => die(e),
         })
     };
     println!(
-        "planned {} ({} layers) with backend '{backend}' in {:.1} ms",
+        "planned {} ({} layers) with backend '{}' in {:.1} ms",
         net,
         plans.layers.len(),
+        if args.flag("tune") { "tuned (per-layer winners)" } else { backend },
         secs * 1e3
     );
     println!("kernel dispatch: {}\n", dconv::conv::dispatch::describe());
@@ -449,6 +612,9 @@ fn plan_net_i8(args: &Args, source: NetSource, m: &Machine) {
     let threads = args.get_usize("threads", 1);
     if args.flag("autotune") {
         println!("note: --autotune measures f32 plans and is ignored with --dtype i8");
+    }
+    if args.flag("tune") {
+        println!("note: --tune measures f32 backends and is ignored with --dtype i8");
     }
     let model = source.into_model();
     let fused = match nets::fuse(&model) {
@@ -565,9 +731,9 @@ fn run_layer(args: &Args) {
     let p = args.get_usize("threads", 1);
     let layer = find_layer(name);
     let s = &layer.shape;
-    let m = arch::host();
+    let m = BackendRegistry::host_machine();
     let registry = BackendRegistry::default();
-    let algo = registry.resolve(backend, s, &m).unwrap_or_else(|e| {
+    let algo = registry.resolve(backend, s, m).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(1);
     });
@@ -579,7 +745,7 @@ fn run_layer(args: &Args) {
     let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 1);
     let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 2);
 
-    let (plan, secs_plan) = time_it(|| algo.plan(s, &kernel, &m, p).unwrap());
+    let (plan, secs_plan) = time_it(|| algo.plan(s, &kernel, m, p).unwrap());
     println!(
         "  plan         : {:.1} ms (retained {} B, workspace {} B)",
         secs_plan * 1e3,
@@ -601,7 +767,7 @@ fn run_layer(args: &Args) {
         assert!(got.allclose(&want, 1e-3, 1e-3));
         println!("  backend agrees with the oracle ✓");
     } else {
-        let im2col = registry.get("im2col").unwrap().plan(s, &kernel, &m, p).unwrap();
+        let im2col = registry.get("im2col").unwrap().plan(s, &kernel, m, p).unwrap();
         let want = im2col.execute(&input).unwrap();
         let got = plan.execute(&input).unwrap();
         assert!(got.allclose(&want, 1e-3, 1e-3));
@@ -640,9 +806,9 @@ fn serve(args: &Args) {
     let threads = args.get_usize("threads", 1);
     let layer = find_layer(name);
     let s = layer.shape.clone();
-    let m = arch::host();
+    let m = BackendRegistry::host_machine();
     let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 2);
-    let engine = PlanEngine::new(&s, &kernel, backend, &m, threads, &[1, 2, 4, 8], "conv")
+    let engine = PlanEngine::new(&s, &kernel, backend, m, threads, &[1, 2, 4, 8], "conv")
         .unwrap_or_else(|e| {
             eprintln!("{e}");
             std::process::exit(1);
@@ -747,9 +913,18 @@ fn build_server(args: &Args) -> (Server, Vec<ModelHandle>) {
     if args.flag("autotune") {
         println!("note: the production server plans with fixed --threads; --autotune ignored");
     }
-    let m = arch::host();
+    let m = BackendRegistry::host_machine();
     let entries = resolve_served_models(args);
-    let mut b = ServerBuilder::new(&m, cfg).backend(backend).plan_threads(threads);
+    let mut b = ServerBuilder::new(m, cfg).backend(backend).plan_threads(threads);
+    if args.flag("tune") {
+        let tuner = make_tuner(args);
+        println!(
+            "tuned planning enabled (policy '{}', cache {})",
+            tuner.policy().name(),
+            tuner.cache().path().map(|p| p.display().to_string()).unwrap_or_else(|| "-".into())
+        );
+        b = b.with_tuner(tuner);
+    }
     for (name, model) in &entries {
         if model.dtype == DType::I8 {
             println!(
@@ -763,6 +938,17 @@ fn build_server(args: &Args) -> (Server, Vec<ModelHandle>) {
         }
     }
     let cached = b.cached_plans();
+    if let Some(t) = b.tuner() {
+        println!(
+            "autotune: {}/{} cache hit(s), {} layer(s) measured",
+            t.hits(),
+            t.lookups(),
+            t.measurements()
+        );
+        if let Err(e) = t.save() {
+            eprintln!("warning: autotune cache not saved: {e}");
+        }
+    }
     let server = match b.start() {
         Ok(s) => s,
         Err(e) => die(e),

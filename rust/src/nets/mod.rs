@@ -14,7 +14,7 @@ pub mod spec;
 pub use builder::{model_by_name, GraphBuilder, NodeId};
 pub use fuse::{fuse, FusedNet, FusionReport, LayerFusion, NodeRole};
 pub use graph::{pool_spec, BranchTag, Dims, GraphNode, GraphOp, NetGraph, PoolKind};
-pub use plans::{net_bn_params, net_kernel, AutotuneChoice, NetPlans, PlannedLayer};
+pub use plans::{net_bn_params, net_kernel, AutotuneChoice, NetPlans, PlannedLayer, TunedChoice};
 pub use spec::Model;
 
 use crate::conv::ConvShape;

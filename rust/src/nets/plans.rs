@@ -69,6 +69,24 @@ pub struct AutotuneChoice {
     pub secs: f64,
 }
 
+/// One row of the [`NetPlans::build_tuned`] report: how the tuner
+/// resolved one layer's backend.
+#[derive(Clone, Debug)]
+pub struct TunedChoice {
+    pub layer: String,
+    /// Backend the layer was actually planned on.
+    pub backend: String,
+    /// True when the decision came from the autotune cache.
+    pub cache_hit: bool,
+    /// True when this build measured the layer's candidates.
+    pub measured: bool,
+    /// The winning measured record, when one exists (`None` for
+    /// heuristic fallbacks).
+    pub best: Option<crate::tune::BestHeuristic>,
+    /// Every measured candidate, fastest first.
+    pub candidates: Vec<crate::tune::BestHeuristic>,
+}
+
 /// A benchmark network with every conv layer planned.
 pub struct NetPlans {
     pub net: String,
@@ -115,6 +133,83 @@ impl NetPlans {
             planned.push(PlannedLayer { backend: plan.backend(), layer, threads, plan });
         }
         Ok(NetPlans { net: net.to_string(), layers: planned })
+    }
+
+    /// Plan every conv layer of `net` through a [`crate::tune::Tuner`]:
+    /// each layer independently gets the backend the tuner resolves
+    /// (cache hit, fresh measurement, or heuristic fallback, per its
+    /// [`crate::tune::TunePolicy`]), so one net can **mix backends
+    /// across layers** — e.g. `fft`/`winograd` on big early layers,
+    /// `direct` on the blocked tail. The graph executor's Adapt
+    /// staging already converts any layout to any other between
+    /// layers, so mixed plans execute unchanged, keeping the
+    /// zero-alloc forward and per-plan `overhead_bytes()` accounting.
+    /// Returns the plans plus a per-layer [`TunedChoice`] report.
+    pub fn build_tuned(
+        net: &str,
+        machine: &Machine,
+        tuner: &mut crate::tune::Tuner,
+        threads: usize,
+    ) -> Result<(NetPlans, Vec<TunedChoice>)> {
+        let layers = super::by_name(net)
+            .ok_or_else(|| Error::Parse(format!("unknown net '{net}' (alexnet|googlenet|vgg16)")))?;
+        Self::tuned_table(net, layers, machine, tuner, threads)
+    }
+
+    /// [`NetPlans::build_tuned`] for a builder- or spec-produced
+    /// [`Model`].
+    pub fn build_model_tuned(
+        model: &Model,
+        machine: &Machine,
+        tuner: &mut crate::tune::Tuner,
+        threads: usize,
+    ) -> Result<(NetPlans, Vec<TunedChoice>)> {
+        model.validate()?;
+        Self::tuned_table(&model.name, model.layers(), machine, tuner, threads)
+    }
+
+    fn tuned_table(
+        net: &str,
+        layers: Vec<Layer>,
+        machine: &Machine,
+        tuner: &mut crate::tune::Tuner,
+        threads: usize,
+    ) -> Result<(NetPlans, Vec<TunedChoice>)> {
+        let registry = BackendRegistry::shared();
+        let mut planned = Vec::with_capacity(layers.len());
+        let mut report = Vec::with_capacity(layers.len());
+        for (i, layer) in layers.into_iter().enumerate() {
+            let s = &layer.shape;
+            let kernel = net_kernel(i, s);
+            // Representative activation for measurement (same seeds as
+            // the thread autotuner, so timings are comparable).
+            let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 0xA070 + i as u64);
+            let choice = tuner.choose(s, &kernel, &input, machine, threads)?;
+            let plan = match registry.plan(&choice.backend, s, &kernel, machine, threads) {
+                Ok(p) => p,
+                Err(e) => {
+                    // A tuned winner that fails to plan (e.g. a stale
+                    // cache naming a backend whose parameters no
+                    // longer fit) must not sink the net: re-resolve
+                    // through `auto`, which self-heals to `direct`.
+                    eprintln!(
+                        "tune: winner '{}' failed to plan {} ({e}); replanning via auto",
+                        choice.backend, layer.name
+                    );
+                    registry.plan("auto", s, &kernel, machine, threads)?
+                }
+            };
+            report.push(TunedChoice {
+                layer: layer.name.clone(),
+                backend: plan.backend().to_string(),
+                cache_hit: choice.cache_hit,
+                measured: choice.measured,
+                best: choice.best,
+                candidates: choice.candidates,
+            });
+            planned.push(PlannedLayer { backend: plan.backend(), layer, threads, plan });
+        }
+        Ok((NetPlans { net: net.to_string(), layers: planned }, report))
     }
 
     /// Plan every conv layer of `net`, choosing each layer's thread

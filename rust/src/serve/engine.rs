@@ -43,6 +43,7 @@ use crate::engine::{NetArena, NetRunner};
 use crate::metrics::{ServeMetrics, Table};
 use crate::nets::{fuse, Model, NetPlans};
 use crate::quant::{DType, QuantNet};
+use crate::tune::Tuner;
 use crate::{Error, Result};
 use std::collections::BTreeMap;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -383,6 +384,7 @@ pub struct ServerBuilder {
     machine: Machine,
     backend: String,
     plan_threads: usize,
+    tuner: Option<Tuner>,
     cache: BTreeMap<u64, Arc<NetRunner>>,
     services: Vec<Arc<ServiceInner>>,
 }
@@ -394,6 +396,7 @@ impl ServerBuilder {
             machine: machine.clone(),
             backend: "auto".into(),
             plan_threads: 1,
+            tuner: None,
             cache: BTreeMap::new(),
             services: Vec::new(),
         }
@@ -404,6 +407,21 @@ impl ServerBuilder {
     pub fn backend(mut self, backend: &str) -> ServerBuilder {
         self.backend = backend.to_string();
         self
+    }
+
+    /// Plan f32 models through a [`Tuner`] (mixed-backend per-layer
+    /// winners) instead of the fixed `backend` name. The spec-hash
+    /// plan cache still applies — identical specs tune once and share
+    /// the compiled runner. Call [`ServerBuilder::tuner`] after the
+    /// models are added to read hit counters or persist the cache.
+    pub fn with_tuner(mut self, tuner: Tuner) -> ServerBuilder {
+        self.tuner = Some(tuner);
+        self
+    }
+
+    /// The tuner installed by [`ServerBuilder::with_tuner`], if any.
+    pub fn tuner(&self) -> Option<&Tuner> {
+        self.tuner.as_ref()
     }
 
     /// Intra-layer threads handed to planning.
@@ -447,12 +465,23 @@ impl ServerBuilder {
                 let fused = fuse(model)?;
                 let compiled = match dtype {
                     DType::F32 => {
-                        let plans = NetPlans::build_model(
-                            model,
-                            &self.backend,
-                            &self.machine,
-                            self.plan_threads,
-                        )?;
+                        let plans = match self.tuner.as_mut() {
+                            Some(tuner) => {
+                                NetPlans::build_model_tuned(
+                                    model,
+                                    &self.machine,
+                                    tuner,
+                                    self.plan_threads,
+                                )?
+                                .0
+                            }
+                            None => NetPlans::build_model(
+                                model,
+                                &self.backend,
+                                &self.machine,
+                                self.plan_threads,
+                            )?,
+                        };
                         NetRunner::from_graph_fused(
                             plans,
                             model.graph.clone(),

@@ -1,0 +1,290 @@
+//! On-disk autotune cache: hand-rolled JSON (the crate is
+//! dependency-free), versioned schema, atomic rename on write.
+//!
+//! The cache is a flat list of [`CacheEntry`] records keyed by
+//! `(arch fingerprint, shape key, dtype)`. Lookups filter on all three,
+//! so entries measured on a foreign machine or dispatch level are
+//! simply invisible — but they are *retained* through load/save cycles,
+//! letting one cache file serve a heterogeneous fleet (the exact
+//! behaviour of cuDNN-style heuristics databases). A schema-version
+//! mismatch discards the whole file (stale format, not worth migrating
+//! timing data that is cheap to re-measure).
+//!
+//! See the [`crate::tune`] module docs for the JSON schema.
+
+use super::BestHeuristic;
+use crate::json::Json;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Version tag written into (and required of) every cache file.
+/// Bumping it invalidates every existing cache — measurements are
+/// cheap to regenerate, so there is no migration path by design.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// One measured record: the winning [`BestHeuristic`] plus the full
+/// ranked candidate list for one `(arch, shape, dtype)` triple.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheEntry {
+    /// [`super::ArchFingerprint::key`] of the measuring machine.
+    pub arch: String,
+    /// [`super::shape_key`] of the layer.
+    pub shape: String,
+    /// Execution dtype the timings apply to (`"f32"` today).
+    pub dtype: String,
+    /// The fastest measured candidate.
+    pub best: BestHeuristic,
+    /// Every measured candidate, fastest first.
+    pub candidates: Vec<BestHeuristic>,
+}
+
+/// The autotune cache: in-memory entry list plus an optional backing
+/// file. All mutation is in-memory; [`TuneCache::save`] persists
+/// atomically (write-to-temp + rename), so concurrent readers never
+/// observe a torn file.
+#[derive(Debug, Default)]
+pub struct TuneCache {
+    path: Option<PathBuf>,
+    entries: Vec<CacheEntry>,
+}
+
+impl TuneCache {
+    /// A cache with no backing file ([`TuneCache::save`] is a no-op).
+    pub fn in_memory() -> TuneCache {
+        TuneCache { path: None, entries: Vec::new() }
+    }
+
+    /// Load a cache from `path`. A missing file yields an empty cache
+    /// bound to that path; a malformed file or a stale
+    /// [`SCHEMA_VERSION`] discards the contents (with a logged reason)
+    /// rather than erroring — a corrupt cache must never block
+    /// planning. Individually malformed entries are skipped, valid
+    /// siblings kept.
+    pub fn load(path: impl AsRef<Path>) -> Result<TuneCache> {
+        let path = path.as_ref().to_path_buf();
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(TuneCache { path: Some(path), entries: Vec::new() });
+            }
+            Err(e) => return Err(Error::Io(e)),
+        };
+        Ok(TuneCache { path: Some(path), entries: parse_entries(&text) })
+    }
+
+    /// The backing file, if any.
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Every entry, foreign-arch ones included.
+    pub fn entries(&self) -> &[CacheEntry] {
+        &self.entries
+    }
+
+    /// The entry for an exact `(arch, shape, dtype)` triple. Entries
+    /// recorded under any other arch fingerprint never match — a cache
+    /// from another machine or dispatch level is ignored, not trusted.
+    pub fn lookup(&self, arch: &str, shape: &str, dtype: &str) -> Option<&CacheEntry> {
+        self.entries.iter().find(|e| e.arch == arch && e.shape == shape && e.dtype == dtype)
+    }
+
+    /// Insert `entry`, replacing any existing record for the same
+    /// `(arch, shape, dtype)` triple.
+    pub fn insert(&mut self, entry: CacheEntry) {
+        match self
+            .entries
+            .iter_mut()
+            .find(|e| e.arch == entry.arch && e.shape == entry.shape && e.dtype == entry.dtype)
+        {
+            Some(slot) => *slot = entry,
+            None => self.entries.push(entry),
+        }
+    }
+
+    /// The full cache as a [`Json`] document (schema in the
+    /// [`crate::tune`] module docs).
+    pub fn to_json(&self) -> Json {
+        let mut doc = BTreeMap::new();
+        doc.insert("schema".to_string(), Json::Num(SCHEMA_VERSION as f64));
+        doc.insert(
+            "entries".to_string(),
+            Json::Arr(self.entries.iter().map(entry_json).collect()),
+        );
+        Json::Obj(doc)
+    }
+
+    /// Persist to the backing file atomically: the document is written
+    /// to a `.tmp.<pid>` sibling and `rename`d over the target, so a
+    /// concurrent [`TuneCache::load`] sees either the old file or the
+    /// new one, never a prefix. No-op without a backing path.
+    pub fn save(&self) -> Result<()> {
+        let Some(path) = &self.path else { return Ok(()) };
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(Error::Io)?;
+            }
+        }
+        let mut tmp_name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+        tmp_name.push(format!(".tmp.{}", std::process::id()));
+        let tmp = path.with_file_name(tmp_name);
+        std::fs::write(&tmp, self.to_json().to_string_pretty()).map_err(Error::Io)?;
+        std::fs::rename(&tmp, path).map_err(Error::Io)
+    }
+}
+
+fn entry_json(e: &CacheEntry) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("arch".to_string(), Json::Str(e.arch.clone()));
+    m.insert("shape".to_string(), Json::Str(e.shape.clone()));
+    m.insert("dtype".to_string(), Json::Str(e.dtype.clone()));
+    m.insert("best".to_string(), heuristic_json(&e.best));
+    m.insert(
+        "candidates".to_string(),
+        Json::Arr(e.candidates.iter().map(heuristic_json).collect()),
+    );
+    Json::Obj(m)
+}
+
+// Byte counts ride in JSON numbers (f64): exact up to 2^53, far above
+// any plan's real footprint. Timings round-trip exactly — the writer
+// emits the shortest representation that parses back to the same f64.
+fn heuristic_json(h: &BestHeuristic) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("backend".to_string(), Json::Str(h.backend.clone()));
+    m.insert("time_secs".to_string(), Json::Num(h.time_secs));
+    m.insert("workspace_bytes".to_string(), Json::Num(h.workspace_bytes as f64));
+    m.insert("retained_bytes".to_string(), Json::Num(h.retained_bytes as f64));
+    m.insert("deterministic".to_string(), Json::Bool(h.deterministic));
+    m.insert("simd".to_string(), Json::Str(h.simd.clone()));
+    Json::Obj(m)
+}
+
+fn parse_entries(text: &str) -> Vec<CacheEntry> {
+    let doc = match Json::parse(text) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("tune: autotune cache is not valid JSON ({e}); starting empty");
+            return Vec::new();
+        }
+    };
+    match doc.get("schema").and_then(Json::as_f64) {
+        Some(v) if v == SCHEMA_VERSION as f64 => {}
+        got => {
+            eprintln!(
+                "tune: autotune cache schema {:?} != {SCHEMA_VERSION}; ignoring stale cache",
+                got
+            );
+            return Vec::new();
+        }
+    }
+    let Some(arr) = doc.get("entries").and_then(Json::as_arr) else {
+        return Vec::new();
+    };
+    arr.iter().filter_map(parse_entry).collect()
+}
+
+fn parse_entry(j: &Json) -> Option<CacheEntry> {
+    Some(CacheEntry {
+        arch: j.get("arch")?.as_str()?.to_string(),
+        shape: j.get("shape")?.as_str()?.to_string(),
+        dtype: j.get("dtype")?.as_str()?.to_string(),
+        best: parse_heuristic(j.get("best")?)?,
+        candidates: j
+            .get("candidates")?
+            .as_arr()?
+            .iter()
+            .map(parse_heuristic)
+            .collect::<Option<Vec<_>>>()?,
+    })
+}
+
+fn parse_heuristic(j: &Json) -> Option<BestHeuristic> {
+    Some(BestHeuristic {
+        backend: j.get("backend")?.as_str()?.to_string(),
+        time_secs: j.get("time_secs")?.as_f64()?,
+        workspace_bytes: j.get("workspace_bytes")?.as_f64()? as u64,
+        retained_bytes: j.get("retained_bytes")?.as_f64()? as u64,
+        deterministic: j.get("deterministic")?.as_bool()?,
+        simd: j.get("simd")?.as_str()?.to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn h(backend: &str, t: f64) -> BestHeuristic {
+        BestHeuristic {
+            backend: backend.to_string(),
+            time_secs: t,
+            workspace_bytes: 128,
+            retained_bytes: 0,
+            deterministic: true,
+            simd: "scalar".to_string(),
+        }
+    }
+
+    fn entry(arch: &str, shape: &str) -> CacheEntry {
+        CacheEntry {
+            arch: arch.to_string(),
+            shape: shape.to_string(),
+            dtype: "f32".to_string(),
+            best: h("direct", 1e-3),
+            candidates: vec![h("direct", 1e-3), h("im2col", 2e-3)],
+        }
+    }
+
+    #[test]
+    fn insert_replaces_matching_triple() {
+        let mut c = TuneCache::in_memory();
+        c.insert(entry("a", "s"));
+        c.insert(entry("a", "s2"));
+        let mut replacement = entry("a", "s");
+        replacement.best = h("fft", 9e-4);
+        c.insert(replacement);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.lookup("a", "s", "f32").unwrap().best.backend, "fft");
+    }
+
+    #[test]
+    fn lookup_filters_every_key_component() {
+        let mut c = TuneCache::in_memory();
+        c.insert(entry("a", "s"));
+        assert!(c.lookup("a", "s", "f32").is_some());
+        assert!(c.lookup("b", "s", "f32").is_none());
+        assert!(c.lookup("a", "t", "f32").is_none());
+        assert!(c.lookup("a", "s", "i8").is_none());
+    }
+
+    #[test]
+    fn save_without_path_is_noop() {
+        let mut c = TuneCache::in_memory();
+        c.insert(entry("a", "s"));
+        c.save().unwrap();
+        assert!(c.path().is_none());
+    }
+
+    #[test]
+    fn garbage_and_stale_schema_parse_to_empty() {
+        assert!(parse_entries("not json at all").is_empty());
+        assert!(parse_entries("{\"schema\": 999, \"entries\": []}").is_empty());
+        // Valid schema, malformed entry among valid ones: the broken
+        // entry is skipped, its valid sibling kept.
+        let doc = TuneCache { path: None, entries: vec![entry("a", "s"), entry("a", "s2")] }
+            .to_json();
+        let mut text = doc.to_string_pretty();
+        assert_eq!(parse_entries(&text).len(), 2);
+        text = text.replacen("\"backend\"", "\"backend_gone\"", 1);
+        assert_eq!(parse_entries(&text).len(), 1);
+    }
+}

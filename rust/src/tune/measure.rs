@@ -1,0 +1,143 @@
+//! Backend measurement: every applicable registry backend is planned
+//! and its [`ConvPlan::execute_into`] timed on real buffers — warmup
+//! executes first (first-touch page faults, cache state), then
+//! median-of-k timed reps under a per-layer wall-clock budget split
+//! evenly across the candidates.
+
+use super::BestHeuristic;
+use crate::arch::Machine;
+use crate::conv::ConvShape;
+use crate::engine::{BackendRegistry, ConvAlgo};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+use std::time::{Duration, Instant};
+
+/// Measurement knobs. Defaults match the CLI's `--budget-ms 50`.
+#[derive(Clone, Copy, Debug)]
+pub struct MeasureOpts {
+    /// Per-layer wall-clock budget, split evenly across candidates.
+    /// Every candidate always gets its warmup plus at least one timed
+    /// rep, so a tiny (even zero) budget still ranks every backend —
+    /// it just ranks them on single samples.
+    pub budget: Duration,
+    /// Timed reps per candidate at most (median-of-k).
+    pub max_reps: usize,
+    /// Untimed warmup executes per candidate.
+    pub warmup: usize,
+}
+
+impl Default for MeasureOpts {
+    fn default() -> Self {
+        MeasureOpts { budget: Duration::from_millis(50), max_reps: 5, warmup: 1 }
+    }
+}
+
+/// Backends never timed: `naive` is the conformance oracle (orders of
+/// magnitude slower by construction), and `direct_i8` changes numerics
+/// — quantization stays an explicit opt-in, exactly as in
+/// [`BackendRegistry::auto`].
+const NEVER_MEASURED: [&str; 2] = ["naive", "direct_i8"];
+
+/// Time every measurable backend on `shape` and return one
+/// [`BestHeuristic`] per candidate, fastest first. Backends that are
+/// not applicable are skipped silently; backends whose *plan
+/// construction* fails are skipped with a logged reason (a planning
+/// bug in one backend must not sink the whole layer). Errors only if
+/// no backend could be measured at all.
+pub fn measure_candidates(
+    shape: &ConvShape,
+    kernel: &Tensor,
+    input: &Tensor,
+    machine: &Machine,
+    threads: usize,
+    opts: &MeasureOpts,
+) -> Result<Vec<BestHeuristic>> {
+    let registry = BackendRegistry::shared();
+    let simd = crate::conv::dispatch::active().name();
+    let runnable: Vec<&dyn ConvAlgo> = registry
+        .iter()
+        .filter(|a| !NEVER_MEASURED.contains(&a.name()) && a.applicable(shape))
+        .collect();
+    if runnable.is_empty() {
+        return Err(Error::Runtime(format!("no measurable backend applies to {shape:?}")));
+    }
+    let per_candidate = opts.budget / runnable.len() as u32;
+    // All layouts of one output hold the same float count, so a single
+    // output buffer serves every candidate.
+    let mut out_buf = vec![0.0f32; shape.c_o * shape.h_o() * shape.w_o()];
+    let mut results = Vec::with_capacity(runnable.len());
+    for algo in runnable {
+        let plan = match algo.plan(shape, kernel, machine, threads) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("tune: skipping '{}' (plan failed: {e})", algo.name());
+                continue;
+            }
+        };
+        let packed = plan.pack_input(input)?;
+        let mut ws = vec![0.0f32; plan.workspace_len()];
+        for _ in 0..opts.warmup {
+            plan.execute_into(packed.data(), &mut out_buf, &mut ws)?;
+        }
+        let started = Instant::now();
+        let mut times = Vec::with_capacity(opts.max_reps);
+        loop {
+            let t = Instant::now();
+            plan.execute_into(packed.data(), &mut out_buf, &mut ws)?;
+            times.push(t.elapsed().as_secs_f64());
+            if times.len() >= opts.max_reps || started.elapsed() >= per_candidate {
+                break;
+            }
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        results.push(BestHeuristic {
+            backend: algo.name().to_string(),
+            time_secs: times[times.len() / 2],
+            workspace_bytes: plan.workspace_bytes(),
+            retained_bytes: plan.retained_bytes(),
+            // Every registry backend keeps a fixed summation order per
+            // output element regardless of thread count, so all are
+            // deterministic today; the field exists for future
+            // backends that trade determinism for speed.
+            deterministic: true,
+            simd: simd.to_string(),
+        });
+    }
+    if results.is_empty() {
+        return Err(Error::Runtime(format!(
+            "every measurable backend failed to plan {shape:?}"
+        )));
+    }
+    results.sort_by(|a, b| a.time_secs.partial_cmp(&b.time_secs).unwrap_or(std::cmp::Ordering::Equal));
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::haswell;
+
+    #[test]
+    fn measures_dense_layer_sorted_fastest_first() {
+        let s = ConvShape::new(8, 9, 9, 16, 3, 3, 1, 1);
+        let kernel = Tensor::random(&[16, 8, 3, 3], 7);
+        let input = Tensor::random(&[8, 9, 9], 11);
+        let opts = MeasureOpts { budget: Duration::from_millis(2), max_reps: 3, warmup: 1 };
+        let c = measure_candidates(&s, &kernel, &input, &haswell(), 1, &opts).unwrap();
+        assert!(c.len() >= 2, "dense 3x3/s1 should admit several backends: {c:?}");
+        assert!(c.iter().all(|h| h.time_secs > 0.0 && h.deterministic));
+        assert!(c.windows(2).all(|w| w[0].time_secs <= w[1].time_secs));
+        assert!(c.iter().all(|h| h.backend != "naive" && h.backend != "direct_i8"));
+    }
+
+    #[test]
+    fn grouped_layer_measures_direct_only() {
+        // groups=2: the packing comparators are dense-only.
+        let s = ConvShape::new(8, 9, 9, 16, 3, 3, 1, 1).with_groups(2);
+        let kernel = Tensor::random(&[16, 4, 3, 3], 7);
+        let input = Tensor::random(&[8, 9, 9], 11);
+        let opts = MeasureOpts { budget: Duration::from_millis(1), max_reps: 2, warmup: 1 };
+        let c = measure_candidates(&s, &kernel, &input, &haswell(), 1, &opts).unwrap();
+        assert!(c.iter().all(|h| h.backend == "direct"), "{c:?}");
+    }
+}

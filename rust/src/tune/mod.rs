@@ -1,0 +1,456 @@
+//! Measured cost-model planner: cuDNN-style autotuning over the
+//! backend registry.
+//!
+//! The paper's core claim is that the *right* convolution algorithm is
+//! shape- and machine-dependent. [`crate::engine::BackendRegistry::auto`]
+//! resolves that analytically; this module resolves it *empirically* —
+//! a [`BestHeuristic`] record (backend, measured time, workspace and
+//! retained bytes, determinism, SIMD level) per
+//! `(ConvShape, dtype, arch fingerprint)`, produced by timing each
+//! registry backend's `execute_into` on real buffers
+//! ([`measure_candidates`]: warmup + median-of-k under a per-layer
+//! budget), cached on disk so plan-time measurement is paid once per
+//! machine, and consumed by `NetPlans::build_tuned` to produce
+//! **mixed-backend** net plans: each layer runs its own measured
+//! winner, and the graph executor's Adapt staging converts layouts
+//! between them, preserving the zero-alloc forward and
+//! `overhead_bytes()` accounting per chosen plan.
+//!
+//! [`TunePolicy`] selects the planning mode:
+//!
+//! - `HeuristicOnly` — the analytical `auto` model; never measures,
+//!   never touches the cache.
+//! - `MeasureOnce` — consult the cache; measure and record on a miss.
+//! - `CacheOnly` — consult the cache; fall back to the analytical
+//!   model on a miss. Never measures and never writes, so planning is
+//!   bit-reproducible across processes sharing one cache file.
+//!
+//! # Cache file schema (version [`SCHEMA_VERSION`])
+//!
+//! Hand-rolled JSON via [`crate::json`] (the crate is
+//! dependency-free), written atomically (temp file + rename):
+//!
+//! ```text
+//! {
+//!   "schema": 1,
+//!   "entries": [
+//!     {
+//!       "arch":  "AVX2/l8/c4/32768x64w8/1048576x64w16/33554432x64w16",
+//!       "shape": "ci3-i227x227-co96-f11x11-s4-p0-g1-d1",
+//!       "dtype": "f32",
+//!       "best": {
+//!         "backend": "direct",
+//!         "time_secs": 0.00113,
+//!         "workspace_bytes": 0,
+//!         "retained_bytes": 0,
+//!         "deterministic": true,
+//!         "simd": "AVX2"
+//!       },
+//!       "candidates": [ ...same record shape, fastest first... ]
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! `arch` is [`ArchFingerprint::key`]: the runtime SIMD dispatch level
+//! and lane width ([`crate::conv::dispatch`]) plus the core count and
+//! cache geometry (bytes x line x ways per level) of the machine model
+//! that planned. Entries whose fingerprint does not match the host are
+//! ignored on lookup but preserved on save, so one cache file can
+//! serve a heterogeneous fleet. A `schema` mismatch discards the file.
+//! `shape` is [`shape_key`]; `dtype` is `"f32"` (the i8 engine keeps
+//! its explicit opt-in path). Byte counts are exact in JSON up to
+//! 2^53; timings round-trip losslessly.
+
+mod cache;
+mod measure;
+
+pub use cache::{CacheEntry, TuneCache, SCHEMA_VERSION};
+pub use measure::{measure_candidates, MeasureOpts};
+
+use crate::arch::Machine;
+use crate::conv::ConvShape;
+use crate::engine::BackendRegistry;
+use crate::tensor::Tensor;
+use crate::Result;
+use std::path::Path;
+use std::time::Duration;
+
+/// The dtype tag tuned plans are recorded under today.
+pub const DTYPE_F32: &str = "f32";
+
+/// How a [`Tuner`] resolves each layer's backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TunePolicy {
+    /// Analytical `auto` heuristic only; no measurement, no cache.
+    HeuristicOnly,
+    /// Cache hit if present, else measure every candidate once and
+    /// record the ranking.
+    MeasureOnce,
+    /// Cache hit if present, else the analytical heuristic. Never
+    /// measures, never writes — planning is bit-reproducible across
+    /// processes sharing one cache file.
+    CacheOnly,
+}
+
+impl TunePolicy {
+    /// Parse a CLI-style policy name.
+    pub fn from_name(name: &str) -> Option<TunePolicy> {
+        match name {
+            "heuristic" | "heuristic-only" => Some(TunePolicy::HeuristicOnly),
+            "measure" | "measure-once" => Some(TunePolicy::MeasureOnce),
+            "cache" | "cache-only" => Some(TunePolicy::CacheOnly),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TunePolicy::HeuristicOnly => "heuristic-only",
+            TunePolicy::MeasureOnce => "measure-once",
+            TunePolicy::CacheOnly => "cache-only",
+        }
+    }
+}
+
+/// One measured candidate: what cuDNN's heuristics database records
+/// per (layer, algorithm) — the empirical complement of the paper's
+/// analytical cost model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BestHeuristic {
+    /// Registry backend name.
+    pub backend: String,
+    /// Median measured `execute_into` seconds.
+    pub time_secs: f64,
+    /// Per-execution scratch bytes of the measured plan.
+    pub workspace_bytes: u64,
+    /// Bytes retained beyond conventional weights (e.g. FFT spectra).
+    pub retained_bytes: u64,
+    /// Whether results are run-to-run bit-identical (true for every
+    /// current backend; recorded for future relaxed ones).
+    pub deterministic: bool,
+    /// SIMD dispatch level name the timing was taken under.
+    pub simd: String,
+}
+
+/// The measuring machine's identity: timings only transfer between
+/// identical (dispatch level, lane width, cores, cache geometry)
+/// configurations, so this is the cache key prefix.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArchFingerprint {
+    /// Runtime dispatch level name (`"AVX2"`, `"NEON"`, `"scalar"`...).
+    pub simd: String,
+    /// f32 lanes at that level.
+    pub lanes: usize,
+    /// Core count of the machine model.
+    pub cores: usize,
+    /// `(bytes, line, ways)` per cache level.
+    pub caches: Vec<(usize, usize, usize)>,
+}
+
+impl ArchFingerprint {
+    /// Fingerprint of this process: the active runtime dispatch
+    /// decision plus `machine`'s core count and cache geometry.
+    pub fn current(machine: &Machine) -> ArchFingerprint {
+        let level = crate::conv::dispatch::active();
+        ArchFingerprint::from_parts(level.name(), level.lanes(), machine)
+    }
+
+    /// Fingerprint from explicit dispatch parts (tests, tooling).
+    pub fn from_parts(simd: &str, lanes: usize, machine: &Machine) -> ArchFingerprint {
+        ArchFingerprint {
+            simd: simd.to_string(),
+            lanes,
+            cores: machine.cores,
+            caches: machine.caches.iter().map(|c| (c.bytes, c.line, c.ways)).collect(),
+        }
+    }
+
+    /// Canonical cache-key string, e.g.
+    /// `AVX2/l8/c4/32768x64w8/1048576x64w16/33554432x64w16`.
+    pub fn key(&self) -> String {
+        let mut k = format!("{}/l{}/c{}", self.simd, self.lanes, self.cores);
+        for (bytes, line, ways) in &self.caches {
+            k.push_str(&format!("/{bytes}x{line}w{ways}"));
+        }
+        k
+    }
+}
+
+/// Canonical cache-key string for a layer shape, covering every field
+/// that affects plan selection:
+/// `ci3-i227x227-co96-f11x11-s4-p0-g1-d1`.
+pub fn shape_key(s: &ConvShape) -> String {
+    format!(
+        "ci{}-i{}x{}-co{}-f{}x{}-s{}-p{}-g{}-d{}",
+        s.c_i, s.h_i, s.w_i, s.c_o, s.h_f, s.w_f, s.stride, s.pad, s.groups, s.dilation
+    )
+}
+
+/// What [`Tuner::choose`] resolved for one layer.
+#[derive(Clone, Debug)]
+pub struct LayerChoice {
+    /// The backend to plan this layer on.
+    pub backend: String,
+    /// True when the backend came from a cache entry for this host's
+    /// fingerprint.
+    pub cache_hit: bool,
+    /// True when this call ran measurements to decide.
+    pub measured: bool,
+    /// The winning record, when measurement or a cache hit produced
+    /// one (`None` for heuristic decisions).
+    pub best: Option<BestHeuristic>,
+    /// Every measured candidate, fastest first (empty for heuristic
+    /// decisions).
+    pub candidates: Vec<BestHeuristic>,
+}
+
+impl LayerChoice {
+    fn heuristic(backend: &str) -> LayerChoice {
+        LayerChoice {
+            backend: backend.to_string(),
+            cache_hit: false,
+            measured: false,
+            best: None,
+            candidates: Vec::new(),
+        }
+    }
+}
+
+/// The measurement-driven layer selector: policy + cache + counters.
+/// One `Tuner` spans one planning session (a `build_tuned` call, an
+/// `autotune` CLI run, a server build); call [`Tuner::save`] at the
+/// end to persist what it learned.
+pub struct Tuner {
+    policy: TunePolicy,
+    opts: MeasureOpts,
+    cache: TuneCache,
+    lookups: usize,
+    hits: usize,
+    measurements: usize,
+}
+
+impl Tuner {
+    /// A tuner with an in-memory cache (nothing persists).
+    pub fn new(policy: TunePolicy) -> Tuner {
+        Tuner {
+            policy,
+            opts: MeasureOpts::default(),
+            cache: TuneCache::in_memory(),
+            lookups: 0,
+            hits: 0,
+            measurements: 0,
+        }
+    }
+
+    /// A tuner backed by the cache file at `path` (loaded now, missing
+    /// file = empty cache; see [`TuneCache::load`] for corruption
+    /// handling).
+    pub fn with_cache_file(policy: TunePolicy, path: impl AsRef<Path>) -> Result<Tuner> {
+        let mut t = Tuner::new(policy);
+        t.cache = TuneCache::load(path)?;
+        Ok(t)
+    }
+
+    /// Set the per-layer measurement budget in milliseconds.
+    pub fn budget_ms(mut self, ms: u64) -> Tuner {
+        self.opts.budget = Duration::from_millis(ms);
+        self
+    }
+
+    pub fn policy(&self) -> TunePolicy {
+        self.policy
+    }
+
+    pub fn cache(&self) -> &TuneCache {
+        &self.cache
+    }
+
+    /// Cache lookups performed (one per `choose` under a cache-aware
+    /// policy).
+    pub fn lookups(&self) -> usize {
+        self.lookups
+    }
+
+    /// Lookups answered by a valid same-fingerprint cache entry.
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    /// Layers that ran measurements this session.
+    pub fn measurements(&self) -> usize {
+        self.measurements
+    }
+
+    /// Resolve the backend for one layer under the tuner's policy.
+    /// `input` is a representative `[C_i][H_i][W_i]` activation used
+    /// only when measuring.
+    pub fn choose(
+        &mut self,
+        shape: &ConvShape,
+        kernel: &Tensor,
+        input: &Tensor,
+        machine: &Machine,
+        threads: usize,
+    ) -> Result<LayerChoice> {
+        let registry = BackendRegistry::shared();
+        if self.policy == TunePolicy::HeuristicOnly {
+            return Ok(LayerChoice::heuristic(registry.auto(shape, machine).name()));
+        }
+        self.lookups += 1;
+        let arch = ArchFingerprint::current(machine).key();
+        let skey = shape_key(shape);
+        if let Some(entry) = self.cache.lookup(&arch, &skey, DTYPE_F32) {
+            // Trust the entry only if its winner still exists in the
+            // registry and still applies to the shape; otherwise treat
+            // the lookup as a miss (re-measure or fall back below).
+            let valid = registry
+                .get(&entry.best.backend)
+                .map(|b| b.applicable(shape))
+                .unwrap_or(false);
+            if valid {
+                self.hits += 1;
+                return Ok(LayerChoice {
+                    backend: entry.best.backend.clone(),
+                    cache_hit: true,
+                    measured: false,
+                    best: Some(entry.best.clone()),
+                    candidates: entry.candidates.clone(),
+                });
+            }
+        }
+        if self.policy == TunePolicy::MeasureOnce {
+            let candidates = measure_candidates(shape, kernel, input, machine, threads, &self.opts)?;
+            self.measurements += 1;
+            let best = candidates[0].clone();
+            self.cache.insert(CacheEntry {
+                arch,
+                shape: skey,
+                dtype: DTYPE_F32.to_string(),
+                best: best.clone(),
+                candidates: candidates.clone(),
+            });
+            return Ok(LayerChoice {
+                backend: best.backend.clone(),
+                cache_hit: false,
+                measured: true,
+                best: Some(best),
+                candidates,
+            });
+        }
+        // CacheOnly miss: the analytical model, deterministically.
+        Ok(LayerChoice::heuristic(registry.auto(shape, machine).name()))
+    }
+
+    /// Persist the cache to its backing file. A `CacheOnly` tuner
+    /// never writes (its contract is read-only sharing), and an
+    /// in-memory cache has nowhere to write; both are no-ops.
+    pub fn save(&self) -> Result<()> {
+        if self.policy == TunePolicy::CacheOnly {
+            return Ok(());
+        }
+        self.cache.save()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::haswell;
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in [TunePolicy::HeuristicOnly, TunePolicy::MeasureOnce, TunePolicy::CacheOnly] {
+            assert_eq!(TunePolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(TunePolicy::from_name("measure"), Some(TunePolicy::MeasureOnce));
+        assert!(TunePolicy::from_name("vibes").is_none());
+    }
+
+    #[test]
+    fn shape_key_covers_every_field() {
+        let base = ConvShape::new(8, 9, 9, 16, 3, 3, 1, 1);
+        let keys = [
+            shape_key(&base),
+            shape_key(&ConvShape::new(4, 9, 9, 16, 3, 3, 1, 1)),
+            shape_key(&base.clone().with_groups(2)),
+            shape_key(&base.clone().with_dilation(2)),
+            shape_key(&ConvShape::new(8, 9, 9, 16, 3, 3, 2, 1)),
+        ];
+        for (i, a) in keys.iter().enumerate() {
+            for b in keys.iter().skip(i + 1) {
+                assert_ne!(a, b);
+            }
+        }
+        assert_eq!(shape_key(&base), shape_key(&base.clone()));
+    }
+
+    #[test]
+    fn fingerprint_key_encodes_dispatch_and_geometry() {
+        let m = haswell();
+        let fp = ArchFingerprint::from_parts("AVX2", 8, &m);
+        let key = fp.key();
+        assert!(key.starts_with("AVX2/l8/c"));
+        assert_eq!(key.matches('/').count(), 2 + m.caches.len());
+        // Same parts, same key; different lane width, different key.
+        assert_eq!(key, ArchFingerprint::from_parts("AVX2", 8, &m).key());
+        assert_ne!(key, ArchFingerprint::from_parts("AVX2", 16, &m).key());
+    }
+
+    #[test]
+    fn heuristic_only_never_touches_cache() {
+        let m = haswell();
+        let s = ConvShape::new(8, 9, 9, 16, 3, 3, 1, 1);
+        let kernel = Tensor::random(&[16, 8, 3, 3], 7);
+        let input = Tensor::random(&[8, 9, 9], 11);
+        let mut t = Tuner::new(TunePolicy::HeuristicOnly);
+        let c = t.choose(&s, &kernel, &input, &m, 1).unwrap();
+        assert!(!c.cache_hit && !c.measured && c.candidates.is_empty());
+        assert_eq!(c.backend, "direct");
+        assert_eq!((t.lookups(), t.hits(), t.measurements()), (0, 0, 0));
+        assert!(t.cache().is_empty());
+    }
+
+    #[test]
+    fn cache_only_miss_falls_back_to_heuristic() {
+        let m = haswell();
+        let s = ConvShape::new(8, 9, 9, 16, 3, 3, 1, 1);
+        let kernel = Tensor::random(&[16, 8, 3, 3], 7);
+        let input = Tensor::random(&[8, 9, 9], 11);
+        let mut t = Tuner::new(TunePolicy::CacheOnly);
+        let c = t.choose(&s, &kernel, &input, &m, 1).unwrap();
+        assert!(!c.cache_hit && !c.measured);
+        assert_eq!(c.backend, "direct");
+        assert_eq!((t.lookups(), t.hits(), t.measurements()), (1, 0, 0));
+    }
+
+    #[test]
+    fn invalid_cached_winner_is_a_miss() {
+        let m = haswell();
+        // Grouped layer: fft can never run it, so a (corrupt or
+        // hand-edited) entry naming fft must not be trusted.
+        let s = ConvShape::new(8, 9, 9, 16, 3, 3, 1, 1).with_groups(2);
+        let kernel = Tensor::random(&[16, 4, 3, 3], 7);
+        let input = Tensor::random(&[8, 9, 9], 11);
+        let mut t = Tuner::new(TunePolicy::CacheOnly);
+        let bad = BestHeuristic {
+            backend: "fft".to_string(),
+            time_secs: 1e-9,
+            workspace_bytes: 0,
+            retained_bytes: 0,
+            deterministic: true,
+            simd: "any".to_string(),
+        };
+        t.cache.insert(CacheEntry {
+            arch: ArchFingerprint::current(&m).key(),
+            shape: shape_key(&s),
+            dtype: DTYPE_F32.to_string(),
+            best: bad.clone(),
+            candidates: vec![bad],
+        });
+        let c = t.choose(&s, &kernel, &input, &m, 1).unwrap();
+        assert!(!c.cache_hit);
+        assert_eq!(c.backend, "direct");
+        assert_eq!(t.hits(), 0);
+    }
+}

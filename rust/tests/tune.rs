@@ -1,0 +1,328 @@
+//! The measured cost-model planner (`dconv::tune`) end to end:
+//!
+//! * autotune-cache JSON round-trip is lossless (proptest-style over
+//!   random heuristic records);
+//! * stale-schema files and foreign-arch-fingerprint entries are
+//!   ignored on lookup but foreign entries survive save/reload;
+//! * `MeasureOnce` measures a layer exactly once — the second lookup
+//!   is a cache hit with zero new measurements;
+//! * the acceptance battery: a tuned `alexnet` plan mixing two
+//!   distinct backends executes bitwise-equal to per-layer
+//!   single-backend plans, its whole-net forward is bitwise identical
+//!   across two fresh `CacheOnly` tuners sharing one cache file (the
+//!   cross-process determinism guard; CI's `autotune-smoke` job covers
+//!   the literal two-process case), and the mixed-backend forward
+//!   passes the counting-allocator zero-alloc proof.
+
+use std::alloc::{GlobalAlloc, Layout as AllocLayout, System};
+use std::cell::Cell;
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use dconv::arch::haswell;
+use dconv::conv::ConvShape;
+use dconv::engine::{BackendRegistry, NetRunner};
+use dconv::nets::{self, net_kernel, NetPlans};
+use dconv::tensor::{Tensor, XorShiftRng};
+use dconv::tune::{
+    shape_key, ArchFingerprint, BestHeuristic, CacheEntry, TuneCache, TunePolicy, Tuner,
+    DTYPE_F32, SCHEMA_VERSION,
+};
+
+// ---------------------------------------------------------------------
+// Thread-local allocation counter (same design as net_forward.rs: the
+// parallel test harness's other threads cannot perturb the assertion).
+// ---------------------------------------------------------------------
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: AllocLayout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: AllocLayout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+fn allocs_now() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------
+// Helpers
+// ---------------------------------------------------------------------
+
+/// Unique-per-test temp cache path (tests run concurrently in one
+/// process, so the tag keeps them from clobbering each other).
+fn temp_cache(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dconv_tune_{tag}_{}.json", std::process::id()))
+}
+
+/// A random-but-valid heuristic record. `time_secs` is an integer
+/// scaled by a power of two, so the value is an exact f64 and any
+/// round-trip loss is detectable by `==`.
+fn random_heuristic(rng: &mut XorShiftRng) -> BestHeuristic {
+    let backends = ["direct", "reorder", "im2col", "fft", "winograd"];
+    BestHeuristic {
+        backend: backends[rng.next_usize(backends.len())].to_string(),
+        time_secs: (rng.next_u64() % (1 << 53)) as f64 * (0.5f64).powi(70),
+        workspace_bytes: rng.next_u64() % (1 << 50),
+        retained_bytes: rng.next_u64() % (1 << 50),
+        deterministic: rng.next_u64() % 2 == 0,
+        simd: format!("simd-{}", rng.next_usize(4)),
+    }
+}
+
+fn random_entry(rng: &mut XorShiftRng, arch: &str, shape: &str) -> CacheEntry {
+    CacheEntry {
+        arch: arch.to_string(),
+        shape: shape.to_string(),
+        dtype: DTYPE_F32.to_string(),
+        best: random_heuristic(rng),
+        candidates: (0..rng.next_usize(4)).map(|_| random_heuristic(rng)).collect(),
+    }
+}
+
+/// An entry that forces `backend` as the winner (for seeding a
+/// `CacheOnly` plan deterministically).
+fn forced(backend: &str, simd: &str) -> BestHeuristic {
+    BestHeuristic {
+        backend: backend.to_string(),
+        time_secs: 1e-6,
+        workspace_bytes: 0,
+        retained_bytes: 0,
+        deterministic: true,
+        simd: simd.to_string(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cache persistence
+// ---------------------------------------------------------------------
+
+#[test]
+fn cache_json_round_trip_is_lossless() {
+    let mut rng = XorShiftRng::new(0x7E57_CACE);
+    let path = temp_cache("roundtrip");
+    std::fs::remove_file(&path).ok();
+    let mut cache = TuneCache::load(&path).unwrap();
+    assert!(cache.is_empty(), "fresh path must load empty");
+    for case in 0..40 {
+        let arch = format!("arch-{}", rng.next_usize(4));
+        let shape = format!("shape-{case}");
+        cache.insert(random_entry(&mut rng, &arch, &shape));
+    }
+    cache.save().unwrap();
+    let reloaded = TuneCache::load(&path).unwrap();
+    assert_eq!(cache.entries(), reloaded.entries(), "JSON round trip must be lossless");
+    // Atomic-write hygiene: no temp file left behind.
+    let dir_entries: Vec<_> = std::fs::read_dir(std::env::temp_dir())
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.contains("dconv_tune_roundtrip") && n.contains(".tmp."))
+        .collect();
+    assert!(dir_entries.is_empty(), "temp files left behind: {dir_entries:?}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn stale_schema_version_discards_the_file() {
+    let path = temp_cache("schema");
+    let mut rng = XorShiftRng::new(0x5CE4A);
+    // Write a file that is valid in every way except its schema tag.
+    let mut cache = TuneCache::load(&path).unwrap();
+    cache.insert(random_entry(&mut rng, "arch-x", "shape-x"));
+    cache.save().unwrap();
+    let good = std::fs::read_to_string(&path).unwrap();
+    let stale = good.replacen(
+        &format!("\"schema\": {SCHEMA_VERSION}"),
+        &format!("\"schema\": {}", SCHEMA_VERSION + 1),
+        1,
+    );
+    assert_ne!(good, stale, "schema tag must appear in the serialized file");
+    std::fs::write(&path, stale).unwrap();
+    assert!(TuneCache::load(&path).unwrap().is_empty(), "stale schema must be discarded");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn foreign_arch_entries_are_invisible_but_preserved() {
+    let m = haswell();
+    let host_arch = ArchFingerprint::current(&m).key();
+    let path = temp_cache("foreign");
+    std::fs::remove_file(&path).ok();
+    let mut rng = XorShiftRng::new(0xF04E16);
+    let mut cache = TuneCache::load(&path).unwrap();
+    // Proptest-style: many random foreign records, none may answer a
+    // host-fingerprint lookup.
+    for i in 0..25 {
+        let foreign_arch = format!("alien-isa-{}/l{}/c{}", i % 5, rng.next_usize(64), i);
+        assert_ne!(foreign_arch, host_arch);
+        cache.insert(random_entry(&mut rng, &foreign_arch, &format!("shape-{i}")));
+    }
+    for i in 0..25 {
+        assert!(cache.lookup(&host_arch, &format!("shape-{i}"), DTYPE_F32).is_none());
+    }
+    // Insert one host entry, save, reload: the foreign records survive
+    // alongside it (one cache file can serve a fleet).
+    let mut host_entry = random_entry(&mut rng, &host_arch, "shape-0");
+    host_entry.best = forced("direct", "any");
+    cache.insert(host_entry);
+    cache.save().unwrap();
+    let reloaded = TuneCache::load(&path).unwrap();
+    assert_eq!(reloaded.len(), 26);
+    assert_eq!(
+        reloaded.lookup(&host_arch, "shape-0", DTYPE_F32).unwrap().best.backend,
+        "direct"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn tuner_treats_foreign_fingerprint_as_miss() {
+    let m = haswell();
+    let s = ConvShape::new(8, 9, 9, 16, 3, 3, 1, 1);
+    let path = temp_cache("tuner_foreign");
+    std::fs::remove_file(&path).ok();
+    let mut cache = TuneCache::load(&path).unwrap();
+    cache.insert(CacheEntry {
+        arch: "definitely-not-this-host/l128/c999".to_string(),
+        shape: shape_key(&s),
+        dtype: DTYPE_F32.to_string(),
+        best: forced("fft", "alien"),
+        candidates: vec![forced("fft", "alien")],
+    });
+    cache.save().unwrap();
+    let mut tuner = Tuner::with_cache_file(TunePolicy::CacheOnly, &path).unwrap();
+    let kernel = Tensor::random(&[16, 8, 3, 3], 2);
+    let input = Tensor::random(&[8, 9, 9], 1);
+    let choice = tuner.choose(&s, &kernel, &input, &m, 1).unwrap();
+    assert!(!choice.cache_hit, "foreign fingerprint must not hit");
+    assert_eq!(choice.backend, "direct", "CacheOnly miss falls back to the heuristic");
+    assert_eq!(tuner.hits(), 0);
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------------
+// Measure-once behaviour
+// ---------------------------------------------------------------------
+
+#[test]
+fn measure_once_measures_then_hits_the_cache() {
+    let m = haswell();
+    let s = ConvShape::new(8, 9, 9, 16, 3, 3, 1, 1);
+    let kernel = Tensor::random(&[16, 8, 3, 3], 2);
+    let input = Tensor::random(&[8, 9, 9], 1);
+    let mut tuner = Tuner::new(TunePolicy::MeasureOnce).budget_ms(2);
+    let first = tuner.choose(&s, &kernel, &input, &m, 1).unwrap();
+    assert!(!first.cache_hit && first.measured);
+    assert!(first.candidates.len() >= 2, "dense 3x3/s1 admits several backends");
+    assert!(first.candidates.windows(2).all(|w| w[0].time_secs <= w[1].time_secs));
+    assert_eq!(first.backend, first.candidates[0].backend, "winner is the fastest candidate");
+    let second = tuner.choose(&s, &kernel, &input, &m, 1).unwrap();
+    assert!(second.cache_hit && !second.measured);
+    assert_eq!(second.backend, first.backend);
+    assert_eq!(second.candidates, first.candidates, "hit returns the recorded ranking");
+    assert_eq!((tuner.lookups(), tuner.hits(), tuner.measurements()), (2, 1, 1));
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: mixed-backend alexnet plan — bitwise, zero-alloc,
+// bit-reproducible across fresh tuners sharing one cache file
+// ---------------------------------------------------------------------
+
+/// Seed the cache so conv1 runs `reorder` (NHWC in/out) and the tail
+/// runs `direct` (blocked in/out): two distinct backends with
+/// *different* layouts, so the Adapt staging between them is genuinely
+/// exercised, and both allocation-free in execute (the zero-alloc
+/// proof stays meaningful). `CacheOnly` then resolves every layer from
+/// the file, deterministically.
+fn seed_mixed_alexnet_cache(path: &PathBuf) {
+    let m = haswell();
+    let arch = ArchFingerprint::current(&m).key();
+    let mut cache = TuneCache::load(path).unwrap();
+    for (i, layer) in nets::alexnet().iter().enumerate() {
+        let backend = if i == 0 { "reorder" } else { "direct" };
+        cache.insert(CacheEntry {
+            arch: arch.clone(),
+            shape: shape_key(&layer.shape),
+            dtype: DTYPE_F32.to_string(),
+            best: forced(backend, "any"),
+            candidates: vec![forced(backend, "any")],
+        });
+    }
+    cache.save().unwrap();
+}
+
+fn build_mixed(path: &PathBuf) -> NetPlans {
+    let m = haswell();
+    let mut tuner = Tuner::with_cache_file(TunePolicy::CacheOnly, path).unwrap();
+    let (plans, report) = NetPlans::build_tuned("alexnet", &m, &mut tuner, 1).unwrap();
+    assert!(report.iter().all(|r| r.cache_hit && !r.measured), "all layers from cache");
+    assert_eq!(tuner.hits(), 5);
+    assert_eq!(tuner.measurements(), 0, "CacheOnly never measures");
+    plans
+}
+
+#[test]
+fn tuned_alexnet_mixes_backends_bitwise_and_zero_alloc() {
+    let m = haswell();
+    let path = temp_cache("mixed");
+    std::fs::remove_file(&path).ok();
+    seed_mixed_alexnet_cache(&path);
+
+    let plans_a = build_mixed(&path);
+    let distinct: BTreeSet<&str> = plans_a.layers.iter().map(|l| l.backend).collect();
+    assert!(distinct.len() >= 2, "plan must mix >= 2 backends, got {distinct:?}");
+    assert_eq!(plans_a.layers[0].backend, "reorder");
+    assert!(plans_a.layers[1..].iter().all(|l| l.backend == "direct"));
+    // Both chosen backends are zero-overhead, network-wide.
+    assert_eq!(plans_a.total_retained_bytes() + plans_a.total_workspace_bytes(), 0);
+
+    // Per-layer: the tuned plan executes bitwise-equal to a fresh
+    // single-backend plan of the same layer.
+    let registry = BackendRegistry::shared();
+    for (i, l) in plans_a.layers.iter().enumerate() {
+        let s = &l.layer.shape;
+        let kernel = net_kernel(i, s);
+        let single = registry.plan(l.backend, s, &kernel, &m, 1).unwrap();
+        let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 0x11A + i as u64);
+        let got = l.plan.execute(&input).unwrap();
+        let want = single.execute(&input).unwrap();
+        assert_eq!(got.data(), want.data(), "layer {i} ({}) not bitwise", l.layer.name);
+    }
+
+    // Whole-net: two fresh tuners over the same cache file (fresh
+    // loads, as two processes would do) produce bit-identical
+    // forwards, and the mixed-backend forward allocates nothing.
+    let plans_b = build_mixed(&path);
+    let runner_a = NetRunner::new(plans_a).unwrap();
+    let runner_b = NetRunner::new(plans_b).unwrap();
+    let input = Tensor::random(&[3, 227, 227], 0xA1ED);
+
+    let mut arena_a = runner_a.arena();
+    let mut out_a = vec![0.0f32; runner_a.output_len()];
+    runner_a.forward_with(&mut arena_a, input.data(), &mut out_a).unwrap();
+
+    let mut arena_b = runner_b.arena();
+    let mut out_b = vec![0.0f32; runner_b.output_len()];
+    runner_b.forward_with(&mut arena_b, input.data(), &mut out_b).unwrap();
+    assert_eq!(out_a, out_b, "CacheOnly planning must be bit-reproducible across fresh tuners");
+
+    let before = allocs_now();
+    runner_b.forward_with(&mut arena_b, input.data(), &mut out_b).unwrap();
+    assert_eq!(allocs_now(), before, "mixed-backend forward must stay allocation-free");
+    assert_eq!(out_a, out_b, "repeat forward stays bitwise identical");
+
+    std::fs::remove_file(&path).ok();
+}

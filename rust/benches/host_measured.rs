@@ -12,12 +12,15 @@
 //! `retained_bytes + workspace_bytes` accounting; MEC keeps its raw
 //! entry point as the one non-registry comparator.
 
-use dconv::bench_harness::{bench, emit, opts_from_env, sink};
+use dconv::bench_harness::{bench, emit_with_roofline, opts_from_env, sink};
 use dconv::conv::{conv_naive, ConvShape};
 use dconv::engine::{BackendRegistry, ConvAlgo, ConvPlan};
 use dconv::lowering::{conv_mec, mec_extra_bytes};
 use dconv::metrics::{gflops, Table};
+use dconv::nets::{Layer, NetPlans, PlannedLayer};
 use dconv::tensor::Tensor;
+use dconv::trace::roofline::RooflineReport;
+use dconv::trace::{Span, SpanKind};
 
 fn main() {
     let opts = opts_from_env();
@@ -34,6 +37,10 @@ fn main() {
     ];
     let mib = |b: u64| format!("{:.1}", b as f64 / (1 << 20) as f64);
     let mut t = Table::new(&["layer", "backend", "GFLOPS", "rel to im2col", "extra MiB"]);
+    // Direct-backend plans + their measured medians feed the per-layer
+    // roofline breakdown stored in the JSON artifact.
+    let mut direct_plans: Vec<PlannedLayer> = Vec::new();
+    let mut direct_secs: Vec<f64> = Vec::new();
     for (name, s) in &layers {
         let input = Tensor::random(&[s.c_i, s.h_i, s.w_i], 1);
         let kernel = Tensor::random(&[s.c_o, s.c_i, s.h_f, s.w_f], 2);
@@ -75,6 +82,19 @@ fn main() {
                 format!("{:.2}", base / meas.median_secs),
                 mib(plan.retained_bytes() + plan.workspace_bytes()),
             ]);
+            if backend == "direct" {
+                direct_plans.push(PlannedLayer {
+                    layer: Layer {
+                        net: "host_measured".into(),
+                        name: name.to_string(),
+                        shape: s.clone(),
+                    },
+                    backend: "direct",
+                    threads: 1,
+                    plan,
+                });
+                direct_secs.push(meas.median_secs);
+            }
         }
 
         let t_mec = bench("mec", opts, || {
@@ -88,9 +108,28 @@ fn main() {
             mib(mec_extra_bytes(s)),
         ]);
     }
-    emit(
+    // Roofline over the direct rows: one synthetic conv span per layer
+    // carrying its measured median, judged against this host's ceilings.
+    let plans = NetPlans { net: "host_measured".into(), layers: direct_plans };
+    let spans: Vec<Span> = direct_secs
+        .iter()
+        .enumerate()
+        .map(|(i, secs)| Span {
+            id: i as u32,
+            kind: SpanKind::Conv,
+            meta: i as u64,
+            t_start: 0,
+            t_end: (secs * 1e9) as u64,
+            ..Span::default()
+        })
+        .collect();
+    let wall: f64 = direct_secs.iter().sum();
+    let roofline = RooflineReport::from_spans(&plans, &m, &spans, wall, 4);
+    print!("\n{}", roofline.render());
+    emit_with_roofline(
         "host_measured",
         &format!("Host-measured convolution comparison ({} / 1 thread)", m.name),
         &t,
+        Some(&roofline.to_json()),
     );
 }

@@ -103,6 +103,17 @@ impl Machine {
         shape.flops() as f64
             / (shape.input_bytes() + shape.kernel_bytes() + shape.output_bytes()) as f64
     }
+
+    /// Sustainable DRAM bandwidth in GB/s (bytes/cycle x GHz).
+    pub fn dram_gbps(&self) -> f64 {
+        self.dram_bytes_per_cycle * self.freq_ghz
+    }
+
+    /// Attainable roofline ceiling at arithmetic intensity `ai`
+    /// (FLOPs/byte) with `p` threads: `min(peak, bandwidth * ai)`.
+    pub fn roof_gflops(&self, ai: f64, p: usize) -> f64 {
+        (self.dram_gbps() * ai).min(self.peak_gflops(p))
+    }
 }
 
 /// Intel Core i7-4770K (Haswell) — Table 1 column 1.

@@ -5,6 +5,7 @@
 //! Every `[[bench]]` target with `harness = false` builds its figures on
 //! this module so `cargo bench` regenerates the paper's tables uniformly.
 
+use crate::json::Json;
 use crate::metrics::Table;
 use std::time::Instant;
 
@@ -86,6 +87,21 @@ pub fn bench(name: &str, opts: BenchOpts, mut f: impl FnMut()) -> Measurement {
 /// mechanically attributable — artifacts), and echo the markdown to
 /// stdout (what EXPERIMENTS.md records).
 pub fn emit(bench_name: &str, title: &str, table: &Table) {
+    emit_with_roofline(bench_name, title, table, None)
+}
+
+/// [`emit`] plus an optional per-layer roofline breakdown (the
+/// [`crate::trace::roofline::RooflineReport::to_json`] document) stored
+/// under a `"roofline"` key in the `BENCH_*.json` artifact, next to
+/// `simd_level`/`lanes` — so a baseline diff sees *why* a layer
+/// regressed (achieved vs ceiling, compute- vs memory-bound), not just
+/// that it did.
+pub fn emit_with_roofline(
+    bench_name: &str,
+    title: &str,
+    table: &Table,
+    roofline: Option<&Json>,
+) {
     println!("\n## {title}\n");
     print!("{}", table.to_markdown());
     let dir = std::path::Path::new("bench_results");
@@ -93,9 +109,13 @@ pub fn emit(bench_name: &str, title: &str, table: &Table) {
         let _ = std::fs::write(dir.join(format!("{bench_name}.md")), table.to_markdown());
         let _ = std::fs::write(dir.join(format!("{bench_name}.csv")), table.to_csv());
         let level = crate::conv::dispatch::active();
+        let roofline_line = match roofline {
+            Some(r) => format!("\"roofline\": {},\n", r.to_string_pretty()),
+            None => String::new(),
+        };
         let json = format!(
             "{{\n\"bench\": \"{bench_name}\",\n\"dispatch\": \"{}\",\n\
-             \"simd_level\": \"{}\",\n\"lanes\": {},\n\"rows\": {}}}\n",
+             \"simd_level\": \"{}\",\n\"lanes\": {},\n{roofline_line}\"rows\": {}}}\n",
             crate::conv::dispatch::describe(),
             level.name(),
             level.lanes(),

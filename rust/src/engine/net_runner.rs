@@ -112,6 +112,7 @@ use crate::quant::{
     dequantize, quantize, requantize, round_half_away, DType, QuantParams, Q_MAX, Q_MIN,
 };
 use crate::tensor::Tensor;
+use crate::trace::{self, Span, SpanKind, SpanRing};
 use crate::{Error, Result};
 
 use super::ConvPlan;
@@ -616,6 +617,43 @@ pub struct NetArena {
     /// count as `buf` would hold, a quarter of the bytes.
     qbuf: Vec<i8>,
     ws: Vec<f32>,
+    /// Preallocated trace rings, one per branch lane (lane 0 also
+    /// records the serial schedule and the forward/staging spans).
+    /// Recording into them never allocates — see [`crate::trace`].
+    rings: Vec<SpanRing>,
+}
+
+impl NetArena {
+    /// Snapshot every recorded span (all lanes merged, start-ordered).
+    /// Export path — allocates; never called from a forward.
+    pub fn spans(&self) -> Vec<Span> {
+        let mut v: Vec<Span> = self.rings.iter().flat_map(|r| r.iter().copied()).collect();
+        v.sort_by_key(|s| s.t_start);
+        v
+    }
+
+    /// Reset every lane ring (drops recorded spans and drop counters).
+    pub fn clear_spans(&mut self) {
+        for r in &mut self.rings {
+            r.clear();
+        }
+    }
+
+    /// Spans lost to ring overwrite since the last clear (0 means the
+    /// snapshot is complete).
+    pub fn spans_dropped(&self) -> u64 {
+        self.rings.iter().map(|r| r.dropped()).sum()
+    }
+
+    /// Move every recorded span into `dst` with lanes offset by
+    /// `lane_base` (serve workers merge per-arena rings into one
+    /// service ring this way), then clear the lane rings.
+    /// Allocation-free.
+    pub fn drain_spans_into(&mut self, dst: &mut SpanRing, lane_base: u32) {
+        for r in &mut self.rings {
+            r.drain_into(dst, lane_base);
+        }
+    }
 }
 
 /// A whole benchmark network compiled to an allocation-free executable:
@@ -922,7 +960,12 @@ impl NetRunner {
             DType::F32 => (vec![0.0; self.arena_floats], Vec::new()),
             DType::I8 => (Vec::new(), vec![0i8; self.arena_floats]),
         };
-        NetArena { buf, qbuf, ws: vec![0.0; self.max_ws * self.lanes] }
+        // Trace rings sized for several forwards' worth of op spans;
+        // fixed capacity — a long profiling run overwrites oldest
+        // records rather than growing (see `spans_dropped`).
+        let ring_cap = ((self.ops.len() + 8) * 8).clamp(256, 65_536);
+        let rings = (0..self.lanes).map(|_| SpanRing::with_capacity(ring_cap)).collect();
+        NetArena { buf, qbuf, ws: vec![0.0; self.max_ws * self.lanes], rings }
     }
 
     fn check_forward_buffers(
@@ -947,7 +990,10 @@ impl NetRunner {
             DType::F32 => arena.buf.len() == self.arena_floats && arena.qbuf.is_empty(),
             DType::I8 => arena.qbuf.len() == self.arena_floats && arena.buf.is_empty(),
         };
-        if !act_ok || arena.ws.len() != self.max_ws * self.lanes {
+        if !act_ok
+            || arena.ws.len() != self.max_ws * self.lanes
+            || arena.rings.len() != self.lanes
+        {
             return Err(Error::Shape("arena was not built by this runner".into()));
         }
         Ok(())
@@ -969,15 +1015,23 @@ impl NetRunner {
         output: &mut [f32],
     ) -> Result<()> {
         self.check_forward_buffers(arena, input.len(), output.len())?;
+        let t0 = trace::start();
         match self.dtype {
-            DType::F32 => self.forward_f32(arena, input, output),
+            DType::F32 => self.forward_f32(arena, input, output)?,
             DType::I8 => {
                 self.forward_i8(arena, input)?;
+                let t1 = trace::start();
                 let qp = self.values[self.output_value].qp;
                 self.unpack_output_q8(arena, |i, q| output[i] = dequantize(q, &qp));
-                Ok(())
+                if t1 != trace::OFF {
+                    arena.rings[0].push(self.io_span(SpanKind::Output, self.output_value, t1));
+                }
             }
         }
+        if t0 != trace::OFF {
+            arena.rings[0].push(self.io_span(SpanKind::Forward, self.output_value, t0));
+        }
+        Ok(())
     }
 
     /// Walk the i8 output value in NCHW order, handing each element's
@@ -1013,8 +1067,16 @@ impl NetRunner {
             ));
         }
         self.check_forward_buffers(arena, input.len(), output.len())?;
+        let t0 = trace::start();
         self.forward_i8(arena, input)?;
+        let t1 = trace::start();
         self.unpack_output_q8(arena, |i, q| output[i] = q);
+        if t1 != trace::OFF {
+            arena.rings[0].push(self.io_span(SpanKind::Output, self.output_value, t1));
+        }
+        if t0 != trace::OFF {
+            arena.rings[0].push(self.io_span(SpanKind::Forward, self.output_value, t0));
+        }
         Ok(())
     }
 
@@ -1025,6 +1087,7 @@ impl NetRunner {
         output: &mut [f32],
     ) -> Result<()> {
         // Stage the NCHW input into the input value's native layout.
+        let t_in = trace::start();
         {
             let iv = &self.values[self.input_value];
             let region = &mut arena.buf[iv.offset..iv.offset + iv.len];
@@ -1034,6 +1097,9 @@ impl NetRunner {
                 IoLayout::Blocked { c_b } => pack_io_slice(input, iv.c, iv.h, iv.w, c_b, region)?,
             }
         }
+        if t_in != trace::OFF {
+            arena.rings[0].push(self.io_span(SpanKind::Input, self.input_value, t_in));
+        }
 
         for stage in &self.stages {
             match stage {
@@ -1042,16 +1108,21 @@ impl NetRunner {
                     for idx in range.clone() {
                         let op = &self.ops[idx];
                         let (so, sl, dofs, dl, rr) = self.op_regions(op);
+                        let t0 = trace::start();
                         let (src, dst, res) = split_regions(&mut arena.buf, so, sl, dofs, dl, rr);
                         self.run_op(op, src, dst, res, ws)?;
+                        if t0 != trace::OFF {
+                            arena.rings[0].push(self.op_span(idx, 0, t0));
+                        }
                     }
                 }
                 Stage::Parallel(lanes_ops) => {
-                    let NetArena { buf, ws, .. } = arena;
+                    let NetArena { buf, ws, rings, .. } = arena;
                     run_parallel_t(
                         self,
                         buf,
                         ws,
+                        rings,
                         self.max_ws,
                         lanes_ops,
                         &|op, src, dst, res, ws| self.run_op(op, src, dst, res, ws),
@@ -1061,12 +1132,18 @@ impl NetRunner {
         }
 
         // Unpack the output value back to NCHW.
-        let ov = &self.values[self.output_value];
-        let native = &arena.buf[ov.offset..ov.offset + ov.len];
-        match ov.layout {
-            IoLayout::Nchw => output.copy_from_slice(native),
-            IoLayout::Nhwc => nhwc_to_nchw_slice(native, ov.c, ov.h, ov.w, output)?,
-            IoLayout::Blocked { c_b } => unpack_io_slice(native, ov.c, ov.h, ov.w, c_b, output)?,
+        let t_out = trace::start();
+        {
+            let ov = &self.values[self.output_value];
+            let native = &arena.buf[ov.offset..ov.offset + ov.len];
+            match ov.layout {
+                IoLayout::Nchw => output.copy_from_slice(native),
+                IoLayout::Nhwc => nhwc_to_nchw_slice(native, ov.c, ov.h, ov.w, output)?,
+                IoLayout::Blocked { c_b } => unpack_io_slice(native, ov.c, ov.h, ov.w, c_b, output)?,
+            }
+        }
+        if t_out != trace::OFF {
+            arena.rings[0].push(self.io_span(SpanKind::Output, self.output_value, t_out));
         }
         Ok(())
     }
@@ -1077,6 +1154,7 @@ impl NetRunner {
     /// [`Adapt::apply_i8`]). The output stays in the arena in the
     /// output value's native layout; callers unpack it.
     fn forward_i8(&self, arena: &mut NetArena, input: &[f32]) -> Result<()> {
+        let t_in = trace::start();
         {
             let iv = &self.values[self.input_value];
             let region = &mut arena.qbuf[iv.offset..iv.offset + iv.len];
@@ -1090,22 +1168,30 @@ impl NetRunner {
                 }
             }
         }
+        if t_in != trace::OFF {
+            arena.rings[0].push(self.io_span(SpanKind::Input, self.input_value, t_in));
+        }
         for stage in &self.stages {
             match stage {
                 Stage::Serial(range) => {
                     for idx in range.clone() {
                         let op = &self.ops[idx];
                         let (so, sl, dofs, dl, rr) = self.op_regions(op);
+                        let t0 = trace::start();
                         let (src, dst, res) = split_regions(&mut arena.qbuf, so, sl, dofs, dl, rr);
                         self.run_op_i8(op, src, dst, res)?;
+                        if t0 != trace::OFF {
+                            arena.rings[0].push(self.op_span(idx, 0, t0));
+                        }
                     }
                 }
                 Stage::Parallel(lanes_ops) => {
-                    let NetArena { qbuf, ws, .. } = arena;
+                    let NetArena { qbuf, ws, rings, .. } = arena;
                     run_parallel_t(
                         self,
                         qbuf,
                         ws,
+                        rings,
                         self.max_ws,
                         lanes_ops,
                         &|op, src, dst, res, _| self.run_op_i8(op, src, dst, res),
@@ -1134,6 +1220,62 @@ impl NetRunner {
         let mut out = vec![0.0f32; self.output_len];
         self.forward_with(&mut arena, input.data(), &mut out)?;
         Tensor::from_vec(&out_shape, out)
+    }
+
+    /// Finish a span for op `idx` on execution lane `lane`, opened at
+    /// `t0` (a real timestamp — callers gate on [`trace::OFF`]).
+    /// Conv spans carry the planned-layer index in `meta` and the
+    /// plan's [`ConvPlan::kernel_desc`] as the static label, which is
+    /// everything the roofline report needs; names resolve lazily via
+    /// [`NetRunner::span_name`]. No allocation, no formatting.
+    fn op_span(&self, idx: usize, lane: u32, t0: u64) -> Span {
+        let (kind, label, meta) = match &self.ops[idx] {
+            Op::Adapt { .. } => (SpanKind::Adapt, "", 0u64),
+            Op::Eltwise { .. } => (SpanKind::Eltwise, "", 0u64),
+            Op::Conv { layer, .. } => {
+                let l = &self.plans.layers[*layer];
+                (SpanKind::Conv, l.plan.kernel_desc(), *layer as u64)
+            }
+        };
+        Span { id: idx as u32, kind, lane, label, t_start: t0, t_end: trace::now_ns(), meta }
+    }
+
+    /// Finish a staging / whole-forward span (`id` = the boundary
+    /// value's index, always recorded on lane 0).
+    fn io_span(&self, kind: SpanKind, value: usize, t0: u64) -> Span {
+        Span {
+            id: value as u32,
+            kind,
+            lane: 0,
+            label: "",
+            t_start: t0,
+            t_end: trace::now_ns(),
+            meta: 0,
+        }
+    }
+
+    /// Resolve a span recorded by this runner into a display name
+    /// (Chrome-trace event name). Conv spans name their planned layer
+    /// and kernel; glue spans name their destination value (the graph
+    /// edge they produce). Safe on foreign spans — falls back to the
+    /// kind name.
+    pub fn span_name(&self, s: &Span) -> String {
+        match s.kind {
+            SpanKind::Conv => match self.plans.layers.get(s.meta as usize) {
+                Some(l) => format!("{} [{}/{}]", l.layer.name, l.backend, s.label),
+                None => s.kind.name().to_string(),
+            },
+            SpanKind::Adapt | SpanKind::Eltwise => {
+                let dst = self.ops.get(s.id as usize).map(|op| match op {
+                    Op::Adapt { dst, .. } | Op::Eltwise { dst, .. } | Op::Conv { dst, .. } => *dst,
+                });
+                match dst.and_then(|d| self.values.get(d)) {
+                    Some(v) => format!("{} -> {}", s.kind.name(), v.name),
+                    None => s.kind.name().to_string(),
+                }
+            }
+            _ => s.kind.name().to_string(),
+        }
     }
 
     /// Arena regions of one op:
@@ -1226,11 +1368,13 @@ fn run_parallel_t<T: Copy + Send + Sync>(
     runner: &NetRunner,
     buf: &mut [T],
     ws_all: &mut [f32],
+    rings: &mut [SpanRing],
     max_ws: usize,
     lanes_ops: &[Vec<usize>],
     exec: &(dyn Fn(&Op, &[T], &mut [T], Option<&[T]>, &mut [f32]) -> Result<()> + Sync),
 ) -> Result<()> {
     let workers = runner.lanes.min(lanes_ops.len()).max(1);
+    debug_assert!(rings.len() >= workers, "one trace ring per worker");
     let base = ArenaPtr { ptr: buf.as_mut_ptr(), len: buf.len() };
     let mut ws_slices: Vec<&mut [f32]> = Vec::with_capacity(workers);
     let mut rest: &mut [f32] = ws_all;
@@ -1241,7 +1385,7 @@ fn run_parallel_t<T: Copy + Send + Sync>(
     }
     std::thread::scope(|scope| -> Result<()> {
         let mut handles = Vec::with_capacity(workers);
-        for (w, ws) in ws_slices.into_iter().enumerate() {
+        for ((w, ws), ring) in ws_slices.into_iter().enumerate().zip(rings.iter_mut()) {
             let base = &base;
             handles.push(scope.spawn(move || -> Result<()> {
                 let mut ws = ws;
@@ -1255,6 +1399,7 @@ fn run_parallel_t<T: Copy + Send + Sync>(
                             debug_assert!(ro + rl <= dofs || dofs + dl <= ro);
                             debug_assert!(ro + rl <= base.len);
                         }
+                        let t0 = trace::start();
                         // SAFETY: regions of concurrently executing
                         // ops are pairwise disjoint — values live at
                         // the same group time never share arena
@@ -1273,6 +1418,9 @@ fn run_parallel_t<T: Copy + Send + Sync>(
                             )
                         };
                         exec(op, src, dst, res, ws)?;
+                        if t0 != trace::OFF {
+                            ring.push(runner.op_span(idx, w as u32, t0));
+                        }
                     }
                 }
                 Ok(())

@@ -111,7 +111,10 @@
 //!    JAX/Pallas AOT compile path.
 //!
 //! Support modules: [`bench_harness`] (criterion-lite), [`json`]
-//! (manifest/results I/O), [`cli`] (argument parsing).
+//! (manifest/results I/O), [`cli`] (argument parsing), and [`trace`]
+//! (zero-overhead span recording with Chrome-trace export, roofline
+//! reports against the [`arch`] machine model, and Prometheus text
+//! exposition — CLI `profile`).
 //!
 //! The pre-engine one-shot free functions (`conv_direct`,
 //! `conv_im2col`, ...) are gone: every backend is reached through the
@@ -136,6 +139,7 @@ pub mod runtime;
 pub mod serve;
 pub mod sim;
 pub mod tensor;
+pub mod trace;
 pub mod tune;
 pub mod winograd;
 

@@ -34,11 +34,24 @@
 //!                               simulated per-layer comparison (Fig 4 rows)
 //!   run-layer [--layer NAME] [--backend B] [--threads P]
 //!                               host-measured single layer via the engine
+//!   profile [--net N | --model path.json] [--dtype f32|i8] [--backend B]
+//!           [--threads P] [--branch-lanes L] [--forwards N]
+//!           [--trace out.json] [--roofline]
+//!                               run traced forwards and report where the
+//!                               time went: per-kind span summary; with
+//!                               --roofline the per-layer roofline table
+//!                               (analytical FLOPs, achieved vs attainable
+//!                               GFLOP/s, compute- vs memory-bound) and the
+//!                               span-coverage line; with --trace a
+//!                               Chrome-trace/Perfetto JSON export. Tracing
+//!                               costs one relaxed atomic load per site
+//!                               when off and zero allocations when on
 //!   serve [--layer NAME | --net NET | --model path.json |
 //!          --models A,B:i8,...] [--backend B] [--requests N] [--clients C]
 //!         [--workers W] [--branch-lanes L] [--dtype f32|i8]
 //!         [--queue-depth D] [--batch-wait-ms MS] [--deadline-ms MS]
-//!         [--stats SECS]
+//!         [--stats SECS] [--stats-window] [--trace out.json]
+//!         [--metrics-out path.prom]
 //!                               serve a layer (cached ConvPlan through the
 //!                               coordinator) or whole networks through the
 //!                               production server (`dconv::serve`):
@@ -46,10 +59,18 @@
 //!                               once behind bounded admission queues,
 //!                               continuous batching, per-worker arenas
 //!                               (zero per-request conv allocations),
-//!                               periodic --stats telemetry reports and a
-//!                               final per-model summary; with the `pjrt`
-//!                               feature and --dir, serves PJRT artifacts
-//!   loadgen [--smoke] [same model/server flags as serve]
+//!                               periodic --stats telemetry reports
+//!                               (--stats-window resets the counters each
+//!                               period: per-window rates instead of
+//!                               cumulative) and a final per-model summary;
+//!                               --trace writes a Chrome-trace of the
+//!                               serving pipeline (batch assembly /
+//!                               execute / reply + per-op spans),
+//!                               --metrics-out writes the Prometheus text
+//!                               exposition; with the `pjrt` feature and
+//!                               --dir, serves PJRT artifacts
+//!   loadgen [--smoke] [same model/server flags as serve, incl. --trace
+//!           and --metrics-out]
 //!           [--pattern poisson|pareto|burst] [--rate R] [--requests N]
 //!           [--seed S] [--out path.json]
 //!                               replay a seeded heavy-tail arrival schedule
@@ -71,6 +92,7 @@ use dconv::quant::{DType, QuantNet, CALIBRATION_SEED};
 use dconv::serve::{loadgen, LoadSpec, ModelHandle, ModelLoad, ServeConfig, Server, ServerBuilder};
 use dconv::sim::{estimate, Algo, ArrivalPattern};
 use dconv::tensor::Tensor;
+use dconv::trace::{self, roofline::RooflineReport, TraceAgg};
 use dconv::tune::{TunePolicy, Tuner};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::{Duration, Instant};
@@ -87,6 +109,7 @@ fn main() {
         "autotune" => autotune_cmd(&args),
         "simulate" => simulate(&args),
         "run-layer" => run_layer(&args),
+        "profile" => profile_cmd(&args),
         "serve" => serve(&args),
         "loadgen" => loadgen_cmd(&args),
         "verify" => verify(&args),
@@ -113,11 +136,16 @@ fn help() {
                        [--cache path.json] [--threads P]\n\
            simulate    simulated Fig-4 comparison [--net N --arch intel|amd|arm --threads P]\n\
            run-layer   measure one layer on this host [--layer alexnet/conv3 --backend auto]\n\
+           profile     traced forwards: span summary, roofline, Chrome trace\n\
+                       [--net N | --model path.json] [--dtype f32|i8] [--backend auto]\n\
+                       [--threads P] [--branch-lanes L] [--forwards 10]\n\
+                       [--trace out.json] [--roofline]\n\
            serve       serve a layer, or whole nets through the production server\n\
                        [--layer NAME | --net N | --model path.json | --models A,B:i8]\n\
                        [--workers W] [--branch-lanes L] [--dtype f32|i8]\n\
                        [--queue-depth D] [--batch-wait-ms MS] [--deadline-ms MS]\n\
-                       [--stats SECS] [--requests N] [--clients C]\n\
+                       [--stats SECS] [--stats-window] [--requests N] [--clients C]\n\
+                       [--trace out.json] [--metrics-out path.prom]\n\
            loadgen     seeded heavy-tail load replay + JSON artifact\n\
                        [--smoke] [--pattern poisson|pareto|burst] [--rate R]\n\
                        [--requests N] [--seed S] [--out path.json] + serve flags\n\
@@ -775,6 +803,117 @@ fn run_layer(args: &Args) {
     }
 }
 
+/// `dconv profile`: run a net forward under tracing and report where
+/// the time went. Tracing costs one relaxed atomic load per span site
+/// when off and zero allocations when on (spans land in the arena's
+/// preallocated rings), so the profiled forward is the same
+/// allocation-free hot path the goldens pin — the numbers describe the
+/// deployment path, not an instrumented twin.
+fn profile_cmd(args: &Args) {
+    let backend = args.get_or("backend", "auto");
+    let threads = args.get_usize("threads", 1);
+    let lanes = args.get_usize("branch-lanes", 1);
+    let forwards = args.get_usize("forwards", 10).max(1);
+    let m = BackendRegistry::host_machine();
+    let source = NetSource::resolve(args);
+    let net = source.name();
+    let dtype = source.dtype(args);
+    println!("kernel dispatch: {}", dconv::conv::dispatch::describe());
+    let (runner, elem_bytes) = match dtype {
+        DType::I8 => {
+            let model = source.into_model();
+            let fused = match nets::fuse(&model) {
+                Ok(f) => f,
+                Err(e) => die(e),
+            };
+            println!(
+                "calibrating {} activation ranges from a sample batch \
+                 (seed {CALIBRATION_SEED:#x}) ...",
+                model.name
+            );
+            let q = match QuantNet::build_model_fused(&model, &fused, m, threads) {
+                Ok(q) => q,
+                Err(e) => die(e),
+            };
+            match q.runner_fused(lanes, &fused) {
+                Ok(r) => (r, 1u64),
+                Err(e) => die(e),
+            }
+        }
+        DType::F32 => {
+            let plans = match source.build(backend, m, threads) {
+                Ok(p) => p,
+                Err(e) => die(e),
+            };
+            match source.runner(plans, lanes) {
+                Ok((r, _fusion)) => (r, 4u64),
+                Err(e) => die(e),
+            }
+        }
+    };
+    println!(
+        "profiling {net} ({dtype}) on {}: {} planned layer(s), {lanes} branch lane(s), \
+         {forwards} traced forward(s)\n",
+        m.name,
+        runner.plans().layers.len(),
+    );
+    trace::set_enabled(true);
+    let mut arena = runner.arena();
+    let input = Tensor::random(&[runner.input_len()], 7);
+    let mut output = vec![0.0f32; runner.output_len()];
+    // One warmup forward outside the window (first-touch page faults,
+    // thread pools), then the span rings reset so the report covers
+    // exactly the timed loop.
+    if let Err(e) = runner.forward_with(&mut arena, input.data(), &mut output) {
+        die(e);
+    }
+    arena.clear_spans();
+    let (_, wall) = time_it(|| {
+        for _ in 0..forwards {
+            if let Err(e) = runner.forward_with(&mut arena, input.data(), &mut output) {
+                die(e);
+            }
+        }
+    });
+    trace::set_enabled(false);
+    let spans = arena.spans();
+
+    let agg = TraceAgg::from_spans(&spans);
+    let mut t = Table::new(&["kind", "spans", "total ms", "ms/forward", "% wall"]);
+    for (kind, count, secs) in agg.rows() {
+        t.row(vec![
+            kind.name().into(),
+            count.to_string(),
+            format!("{:.3}", secs * 1e3),
+            format!("{:.3}", secs * 1e3 / forwards as f64),
+            format!("{:.1}", if wall > 0.0 { secs / wall * 100.0 } else { 0.0 }),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+    println!(
+        "\n{} span(s) over {forwards} forward(s) in {:.3} ms wall ({} ring overwrite(s))",
+        spans.len(),
+        wall * 1e3,
+        arena.spans_dropped()
+    );
+
+    if args.flag("roofline") {
+        let report = RooflineReport::from_spans(runner.plans(), m, &spans, wall, elem_bytes);
+        print!("\n{}", report.render());
+    }
+    if let Some(path) = args.get("trace") {
+        let events: Vec<_> =
+            spans.iter().map(|s| trace::chrome::event(s, runner.span_name(s), 0)).collect();
+        match trace::chrome::write(path, &events) {
+            Ok(()) => println!(
+                "\nwrote {path} ({} event(s)) — load in chrome://tracing or ui.perfetto.dev",
+                events.len()
+            ),
+            Err(e) => die(e),
+        }
+    }
+}
+
 /// Serve one conv layer through the coordinator over a cached ConvPlan.
 fn serve(args: &Args) {
     if args.get("dir").is_some() {
@@ -913,6 +1052,13 @@ fn build_server(args: &Args) -> (Server, Vec<ModelHandle>) {
     if args.flag("autotune") {
         println!("note: the production server plans with fixed --threads; --autotune ignored");
     }
+    if let Some(path) = args.get("trace") {
+        // Recording must be on before the workers serve anything; the
+        // per-worker rings are preallocated, so serving stays
+        // allocation-free with tracing enabled.
+        trace::set_enabled(true);
+        println!("tracing enabled (Chrome trace -> {path})");
+    }
     let m = BackendRegistry::host_machine();
     let entries = resolve_served_models(args);
     let mut b = ServerBuilder::new(m, cfg).backend(backend).plan_threads(threads);
@@ -974,16 +1120,62 @@ fn build_server(args: &Args) -> (Server, Vec<ModelHandle>) {
 }
 
 /// Periodic `--stats` reporter: prints the per-model telemetry table
-/// every `every` seconds until `stop` flips.
-fn stats_reporter(server: &Server, stop: &AtomicBool, every: u64) {
+/// every `every` seconds until `stop` flips. With `windowed`
+/// (`--stats-window`) each period snapshots **and resets** every
+/// model's counters under one lock ([`ModelHandle::snapshot_and_reset`])
+/// so the report shows per-window rates instead of cumulative totals —
+/// note the final summary then only covers the tail window.
+fn stats_reporter(
+    server: &Server,
+    handles: &[ModelHandle],
+    stop: &AtomicBool,
+    every: u64,
+    windowed: bool,
+) {
     let period = Duration::from_secs(every.max(1));
     let mut next = Instant::now() + period;
     while !stop.load(Ordering::Relaxed) {
         std::thread::sleep(Duration::from_millis(50));
         if Instant::now() >= next {
             println!("--- stats @ {:.1}s ---", server.uptime().as_secs_f64());
-            print!("{}", server.report());
+            if windowed {
+                for h in handles {
+                    let w = h.snapshot_and_reset();
+                    println!(
+                        "{} ({:.1} req/s this {every}s window)\n{}",
+                        h.name(),
+                        w.throughput(period.as_secs_f64()),
+                        w.report()
+                    );
+                }
+            } else {
+                print!("{}", server.report());
+            }
             next += period;
+        }
+    }
+}
+
+/// Shared `--trace` / `--metrics-out` export for `serve` and `loadgen`:
+/// every model's recorded spans as one Chrome-trace document (one
+/// process row per model, one thread row per worker track), and the
+/// Prometheus text exposition of the telemetry. File writes only — no
+/// network endpoint.
+fn write_observability(args: &Args, server: &Server) {
+    if let Some(path) = args.get("trace") {
+        let events = server.trace_events();
+        match trace::chrome::write(path, &events) {
+            Ok(()) => println!(
+                "wrote {path} ({} event(s)) — load in chrome://tracing or ui.perfetto.dev",
+                events.len()
+            ),
+            Err(e) => eprintln!("warning: trace not written: {e}"),
+        }
+    }
+    if let Some(path) = args.get("metrics-out") {
+        match std::fs::write(path, server.prometheus()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("warning: metrics not written: {e}"),
         }
     }
 }
@@ -1007,10 +1199,11 @@ fn serve_net(args: &Args) {
         server.models()
     );
     let stop = AtomicBool::new(false);
+    let windowed = args.flag("stats-window");
     let (_, secs) = time_it(|| {
         std::thread::scope(|scope| {
             if stats_every > 0 {
-                scope.spawn(|| stats_reporter(&server, &stop, stats_every));
+                scope.spawn(|| stats_reporter(&server, &handles, &stop, stats_every, windowed));
             }
             let mut drivers = Vec::new();
             for c in 0..clients {
@@ -1039,6 +1232,7 @@ fn serve_net(args: &Args) {
     let total: u64 = handles.iter().map(|h| h.stats().completed).sum();
     println!("\nthroughput : {:.1} img/s over {:.2}s", total as f64 / secs, secs);
     print!("{}", server.report());
+    write_observability(args, &server);
     if let Err(e) = server.shutdown() {
         die(e);
     }
@@ -1091,6 +1285,7 @@ fn loadgen_cmd(args: &Args) {
     for r in &report.results {
         println!("  {} schedule fingerprint: {:016x}", r.model, r.fingerprint);
     }
+    write_observability(args, &server);
     let out = args.get_or("out", "bench_results/loadgen.json");
     match report.write_artifact(out) {
         Ok(()) => println!("wrote {out}"),

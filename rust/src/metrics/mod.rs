@@ -126,6 +126,19 @@ impl ServeMetrics {
             .saturating_sub(self.failed)
     }
 
+    /// Zero every counter and histogram, starting a fresh measurement
+    /// window. Callers that want seamless windows snapshot and reset
+    /// under one lock (`ModelHandle::snapshot_and_reset` in
+    /// [`crate::serve`]) so no request lands between the two.
+    ///
+    /// After a reset [`ServeMetrics::in_flight`] reads 0 until the
+    /// next submit — in-flight requests from the previous window
+    /// complete against the new window's counters (the saturating
+    /// accounting absorbs the underflow).
+    pub fn reset(&mut self) {
+        *self = ServeMetrics::default();
+    }
+
     /// Multi-line human report (the `serve --stats` block body).
     pub fn report(&self) -> String {
         format!(
@@ -193,5 +206,23 @@ mod tests {
         assert_eq!(m.throughput(0.0), 0.0);
         let r = m.report();
         assert!(r.contains("offered=10") && r.contains("shed=2"));
+    }
+
+    #[test]
+    fn reset_opens_a_fresh_window() {
+        let mut m = ServeMetrics::default();
+        m.submitted = 5;
+        m.record_batch(2, 0.010);
+        m.record_done(0.001, 0.012);
+        m.reset();
+        assert_eq!(m.submitted, 0);
+        assert_eq!(m.completed, 0);
+        assert_eq!(m.batches, 0);
+        assert_eq!(m.execute.count(), 0);
+        assert_eq!(m.in_flight(), 0);
+        // A completion straggling in from the previous window must not
+        // underflow the accounting.
+        m.record_done(0.001, 0.012);
+        assert_eq!(m.in_flight(), 0);
     }
 }

@@ -43,6 +43,9 @@ use crate::engine::{NetArena, NetRunner};
 use crate::metrics::{ServeMetrics, Table};
 use crate::nets::{fuse, Model, NetPlans};
 use crate::quant::{DType, QuantNet};
+use crate::trace::{
+    self, chrome::ChromeEvent, prom::ModelExposition, Span, SpanKind, SpanRing, TraceAgg,
+};
 use crate::tune::Tuner;
 use crate::{Error, Result};
 use std::collections::BTreeMap;
@@ -157,6 +160,11 @@ struct ServiceInner {
     max_backlog: usize,
     deadline: Option<Duration>,
     stats: Mutex<ServeMetrics>,
+    /// Per-model span ring: worker pipeline spans (batch-assemble /
+    /// execute / reply) plus the per-op spans drained from each
+    /// worker's arena after a batch. Fixed capacity; see
+    /// [`crate::trace`].
+    trace: Mutex<SpanRing>,
     image_in: usize,
     image_out: usize,
 }
@@ -164,6 +172,10 @@ struct ServiceInner {
 impl ServiceInner {
     fn stats_lock(&self) -> std::sync::MutexGuard<'_, ServeMetrics> {
         self.stats.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn trace_lock(&self) -> std::sync::MutexGuard<'_, SpanRing> {
+        self.trace.lock().unwrap_or_else(|p| p.into_inner())
     }
 
     fn worker_state(&self) -> WorkerState {
@@ -178,8 +190,12 @@ impl ServiceInner {
     /// Pull one backlog: block for the first request (or exit on
     /// close+drained), then accumulate arrivals until the batch window
     /// closes, the largest batch size fills, or the backlog cap hits.
-    fn collect_backlog(&self) -> Option<Vec<Req>> {
+    /// `lane` is the worker's trace track (see [`worker_loop`]).
+    fn collect_backlog(&self, lane: u32) -> Option<Vec<Req>> {
         let first = self.queue.pop_blocking()?;
+        // The span opens once the first request arrived: it measures
+        // assembly (waiting for stragglers), not idle queue time.
+        let t0 = trace::start();
         let mut reqs = Vec::with_capacity(self.max_backlog);
         reqs.push(first);
         let window = Instant::now() + self.batcher.cfg().max_wait;
@@ -198,12 +214,23 @@ impl ServiceInner {
                 None => break,
             }
         }
+        if t0 != trace::OFF {
+            self.trace_lock().push(Span {
+                id: 0,
+                kind: SpanKind::BatchAssemble,
+                lane,
+                label: "",
+                t_start: t0,
+                t_end: trace::now_ns(),
+                meta: reqs.len() as u64,
+            });
+        }
         Some(reqs)
     }
 
     /// Serve one collected backlog: expire stale requests, cover the
     /// rest with the DP batch split, execute each sub-batch.
-    fn serve_backlog(&self, state: &mut WorkerState, reqs: Vec<Req>) {
+    fn serve_backlog(&self, state: &mut WorkerState, reqs: Vec<Req>, lane: u32) {
         let now = Instant::now();
         let mut live = Vec::with_capacity(reqs.len());
         let mut missed = 0u64;
@@ -221,39 +248,71 @@ impl ServiceInner {
         let mut it = live.into_iter();
         for plan in self.batcher.split(it.len()) {
             let group: Vec<Req> = it.by_ref().take(plan.occupancy).collect();
-            self.execute_group(state, group);
+            self.execute_group(state, group, lane);
         }
     }
 
     /// Gather → forward → scatter for one sub-batch. The forward loop
     /// ([`ModelHandle::execute_staged`] drives the same function) is
     /// allocation-free; the reply `Vec`s are the messages out.
-    fn execute_group(&self, state: &mut WorkerState, group: Vec<Req>) {
+    fn execute_group(&self, state: &mut WorkerState, group: Vec<Req>, lane: u32) {
+        let occupancy = group.len() as u64;
         let t0 = Instant::now();
+        let ts = trace::start();
         for (i, r) in group.iter().enumerate() {
             state.inbuf[i * self.image_in..][..self.image_in].copy_from_slice(&r.input);
         }
         let res = self.forward_staged(state, group.len());
         let exec = t0.elapsed().as_secs_f64();
+        if ts != trace::OFF {
+            // One lock: the execute span plus the per-op spans the
+            // forwards left in this worker's arena rings (offset onto
+            // the tracks right above the worker's pipeline track).
+            let mut tr = self.trace_lock();
+            state.arena.drain_spans_into(&mut tr, lane + 1);
+            tr.push(Span {
+                id: 0,
+                kind: SpanKind::Execute,
+                lane,
+                label: "",
+                t_start: ts,
+                t_end: trace::now_ns(),
+                meta: occupancy,
+            });
+        }
 
-        let mut st = self.stats_lock();
-        st.record_batch(group.len(), exec);
-        match res {
-            Ok(()) => {
-                for (i, r) in group.into_iter().enumerate() {
-                    let out = state.outbuf[i * self.image_out..][..self.image_out].to_vec();
-                    let wait = t0.saturating_duration_since(r.enqueued).as_secs_f64();
-                    st.record_done(wait, r.enqueued.elapsed().as_secs_f64());
-                    let _ = r.reply.send(Ok(out));
+        let tr0 = trace::start();
+        {
+            let mut st = self.stats_lock();
+            st.record_batch(group.len(), exec);
+            match res {
+                Ok(()) => {
+                    for (i, r) in group.into_iter().enumerate() {
+                        let out = state.outbuf[i * self.image_out..][..self.image_out].to_vec();
+                        let wait = t0.saturating_duration_since(r.enqueued).as_secs_f64();
+                        st.record_done(wait, r.enqueued.elapsed().as_secs_f64());
+                        let _ = r.reply.send(Ok(out));
+                    }
+                }
+                Err(e) => {
+                    st.failed += group.len() as u64;
+                    let msg = format!("batch failed: {e}");
+                    for r in group {
+                        let _ = r.reply.send(Err(Error::Runtime(msg.clone())));
+                    }
                 }
             }
-            Err(e) => {
-                st.failed += group.len() as u64;
-                let msg = format!("batch failed: {e}");
-                for r in group {
-                    let _ = r.reply.send(Err(Error::Runtime(msg.clone())));
-                }
-            }
+        }
+        if tr0 != trace::OFF {
+            self.trace_lock().push(Span {
+                id: 0,
+                kind: SpanKind::Reply,
+                lane,
+                label: "",
+                t_start: tr0,
+                t_end: trace::now_ns(),
+                meta: occupancy,
+            });
         }
     }
 
@@ -269,10 +328,17 @@ impl ServiceInner {
     }
 }
 
-fn worker_loop(svc: Arc<ServiceInner>) {
+/// Trace tracks per worker: the pipeline spans sit on the worker's base
+/// lane and the drained arena op spans on the lanes right above it, so
+/// a worker plus its branch lanes render as one group of Chrome-trace
+/// tids. 16 comfortably exceeds any branch-lane count.
+const TRACE_LANES_PER_WORKER: u32 = 16;
+
+fn worker_loop(svc: Arc<ServiceInner>, w: usize) {
+    let lane = w as u32 * TRACE_LANES_PER_WORKER;
     let mut state = svc.worker_state();
-    while let Some(reqs) = svc.collect_backlog() {
-        svc.serve_backlog(&mut state, reqs);
+    while let Some(reqs) = svc.collect_backlog(lane) {
+        svc.serve_backlog(&mut state, reqs, lane);
     }
 }
 
@@ -330,6 +396,38 @@ impl ModelHandle {
     /// Snapshot of the model's telemetry.
     pub fn stats(&self) -> ServeMetrics {
         self.inner.stats_lock().clone()
+    }
+
+    /// Consistent snapshot of the model's telemetry: one lock
+    /// acquisition, so counters, histograms and the derived `in_flight`
+    /// gauge describe the same instant. (`stats` is an alias.)
+    pub fn snapshot(&self) -> ServeMetrics {
+        self.inner.stats_lock().clone()
+    }
+
+    /// Snapshot the telemetry and reset it under the same lock — the
+    /// windowed `--stats` reporter: each report covers exactly the
+    /// interval since the previous one, with no seam where a request
+    /// could be counted twice or not at all.
+    pub fn snapshot_and_reset(&self) -> ServeMetrics {
+        let mut st = self.inner.stats_lock();
+        let snap = st.clone();
+        st.reset();
+        snap
+    }
+
+    /// Snapshot and clear the model's span ring (worker pipeline spans
+    /// plus drained per-op arena spans).
+    pub fn take_trace(&self) -> Vec<Span> {
+        let mut tr = self.inner.trace_lock();
+        let v = tr.to_vec();
+        tr.clear();
+        v
+    }
+
+    /// Non-destructive per-kind aggregates of the model's span ring.
+    pub fn trace_agg(&self) -> TraceAgg {
+        TraceAgg::from_spans(self.inner.trace_lock().iter())
     }
 
     /// Build one worker's execution state (arena + staging). The only
@@ -517,6 +615,7 @@ impl ServerBuilder {
             max_backlog,
             deadline: self.cfg.deadline,
             stats: Mutex::new(ServeMetrics::default()),
+            trace: Mutex::new(SpanRing::with_capacity(16_384)),
         }));
         Ok(())
     }
@@ -532,7 +631,7 @@ impl ServerBuilder {
                 let svc = Arc::clone(svc);
                 let h = std::thread::Builder::new()
                     .name(format!("serve-{}-{w}", svc.name))
-                    .spawn(move || worker_loop(svc))
+                    .spawn(move || worker_loop(svc, w))
                     .map_err(|e| Error::Runtime(format!("spawn worker: {e}")))?;
                 handles.push(h);
             }
@@ -643,6 +742,40 @@ impl Server {
     /// Snapshot one model's telemetry.
     pub fn stats(&self, model: &str) -> Option<ServeMetrics> {
         self.model(model).map(|h| h.stats())
+    }
+
+    /// Prometheus text exposition (format 0.0.4) over every resident
+    /// model: request counters, latency summaries, the in-flight gauge
+    /// and — when tracing is enabled — per-kind span aggregates. Each
+    /// model's sample set comes from one lock acquisition. Written to a
+    /// file by `serve --metrics-out`; no network involved.
+    pub fn prometheus(&self) -> String {
+        let models: Vec<ModelExposition> = self
+            .services
+            .iter()
+            .map(|svc| {
+                let metrics = svc.stats_lock().clone();
+                let tr = svc.trace_lock();
+                let trace =
+                    if tr.is_empty() { None } else { Some(TraceAgg::from_spans(tr.iter())) };
+                ModelExposition { model: svc.name.clone(), metrics, trace }
+            })
+            .collect();
+        trace::prom::exposition(&models)
+    }
+
+    /// Export every model's recorded spans as Chrome-trace events:
+    /// one process row per model (`pid` = registration index), span
+    /// names resolved through the model's runner. Non-destructive.
+    pub fn trace_events(&self) -> Vec<ChromeEvent> {
+        let mut events = Vec::new();
+        for (pid, svc) in self.services.iter().enumerate() {
+            let spans = svc.trace_lock().to_vec();
+            for s in &spans {
+                events.push(trace::chrome::event(s, svc.runner.span_name(s), pid as u64));
+            }
+        }
+        events
     }
 
     /// Render the per-model telemetry table (the `--stats` report and

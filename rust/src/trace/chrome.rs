@@ -1,0 +1,115 @@
+//! Chrome-trace / Perfetto exporter: spans → `traceEvents` JSON.
+//!
+//! The output loads in `chrome://tracing` and <https://ui.perfetto.dev>
+//! (legacy JSON format): complete events (`"ph": "X"`) with
+//! microsecond timestamps, one process row per exported source (the
+//! `pid`) and one thread row per execution lane (the `tid`), so branch
+//! lanes and serve workers render as parallel tracks. Serialization
+//! goes through the crate's own [`crate::json`] module — the round-trip
+//! (`chrome_json` → [`Json::to_string_pretty`] → [`Json::parse`]) is
+//! pinned by `tests/trace.rs`.
+
+use super::Span;
+use crate::json::Json;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// One export-ready event: a [`Span`] with its display name resolved
+/// (span records only carry indices and static labels; whoever owns the
+/// index space — e.g. `NetRunner::span_name` — renders the name).
+#[derive(Clone, Debug)]
+pub struct ChromeEvent {
+    pub name: String,
+    /// Chrome-trace category (the span kind).
+    pub cat: &'static str,
+    pub ts_us: f64,
+    pub dur_us: f64,
+    pub pid: u64,
+    pub tid: u64,
+    pub id: u32,
+    pub meta: u64,
+}
+
+/// Resolve one span into an event under process row `pid`.
+pub fn event(span: &Span, name: String, pid: u64) -> ChromeEvent {
+    ChromeEvent {
+        name,
+        cat: span.kind.name(),
+        ts_us: span.t_start as f64 / 1e3,
+        dur_us: span.duration_ns() as f64 / 1e3,
+        pid,
+        tid: span.lane as u64,
+        id: span.id,
+        meta: span.meta,
+    }
+}
+
+/// The Chrome-trace document: `{"traceEvents": [...],
+/// "displayTimeUnit": "ms"}`.
+pub fn chrome_json(events: &[ChromeEvent]) -> Json {
+    let rows = events
+        .iter()
+        .map(|e| {
+            let mut o = BTreeMap::new();
+            o.insert("name".into(), Json::Str(e.name.clone()));
+            o.insert("cat".into(), Json::Str(e.cat.into()));
+            o.insert("ph".into(), Json::Str("X".into()));
+            o.insert("ts".into(), Json::Num(e.ts_us));
+            o.insert("dur".into(), Json::Num(e.dur_us));
+            o.insert("pid".into(), Json::Num(e.pid as f64));
+            o.insert("tid".into(), Json::Num(e.tid as f64));
+            let mut args = BTreeMap::new();
+            args.insert("id".into(), Json::Num(e.id as f64));
+            args.insert("meta".into(), Json::Num(e.meta as f64));
+            o.insert("args".into(), Json::Obj(args));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut doc = BTreeMap::new();
+    doc.insert("traceEvents".into(), Json::Arr(rows));
+    doc.insert("displayTimeUnit".into(), Json::Str("ms".into()));
+    Json::Obj(doc)
+}
+
+/// Write the trace document to `path` (directories created, trailing
+/// newline — `python3 -c "import json; json.load(...)"` in CI keeps it
+/// honest).
+pub fn write(path: &str, events: &[ChromeEvent]) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(Error::Io)?;
+        }
+    }
+    let mut text = chrome_json(events).to_string_pretty();
+    text.push('\n');
+    std::fs::write(path, text).map_err(Error::Io)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::SpanKind;
+
+    #[test]
+    fn events_serialize_and_parse_back() {
+        let s = Span {
+            id: 3,
+            kind: SpanKind::Conv,
+            lane: 1,
+            label: "avx2_fma",
+            t_start: 2_000,
+            t_end: 5_000,
+            meta: 2,
+        };
+        let doc = chrome_json(&[event(&s, "conv3 [direct/avx2_fma]".into(), 0)]);
+        let parsed = Json::parse(&doc.to_string_pretty()).unwrap();
+        let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        assert_eq!(events.len(), 1);
+        let e = &events[0];
+        assert_eq!(e.get("ph").and_then(|p| p.as_str()), Some("X"));
+        assert_eq!(e.get("cat").and_then(|c| c.as_str()), Some("conv"));
+        assert_eq!(e.get("ts").and_then(|t| t.as_f64()), Some(2.0));
+        assert_eq!(e.get("dur").and_then(|d| d.as_f64()), Some(3.0));
+        assert_eq!(e.get("tid").and_then(|t| t.as_usize()), Some(1));
+    }
+}

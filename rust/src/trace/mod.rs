@@ -1,0 +1,403 @@
+//! Zero-overhead tracing: preallocated span rings behind one relaxed
+//! atomic gate.
+//!
+//! The paper's headline figures (Fig. 4/5) are *per-layer* results —
+//! fraction of machine peak, scaling under threads — yet a stopwatch
+//! around [`crate::engine::NetRunner::forward_with`] can only time whole
+//! forwards. This module attributes wall time to individual ops (conv
+//! layers, Adapt gathers, eltwise passes, staging), to the serving
+//! pipeline (batch assembly / execute / reply) and to the autotuner's
+//! measurement loop, with two hard guarantees the rest of the repo's
+//! memory story demands:
+//!
+//! * **Zero overhead when off.** Every instrumentation site is gated on
+//!   one relaxed [`AtomicBool`] load ([`enabled`]); the disabled hot
+//!   path is a single predictable branch and no clock is read. All
+//!   bitwise goldens and zero-alloc proofs pass with recording compiled
+//!   in but disabled — and the f32 forward is bitwise identical either
+//!   way, because recording never touches the data path.
+//! * **Zero allocation when on.** Spans are fixed-size [`Copy`] records
+//!   pushed into preallocated fixed-capacity [`SpanRing`]s (one per
+//!   execution lane, owned by the arena / worker state that already
+//!   exists). A full ring drops the oldest record and counts the drop;
+//!   nothing ever grows. Labels are `&'static str` only — no
+//!   formatting on the hot path; dynamic names (graph node names) are
+//!   resolved at *export* time from the span's indices.
+//!
+//! Timestamps are nanoseconds since the trace epoch — a process-wide
+//! monotonic [`Instant`] pinned the first time tracing is enabled — so
+//! spans from different threads and rings merge on one timeline.
+//!
+//! On top of the rings sit three exporters:
+//! [`chrome`] (Chrome-trace / Perfetto JSON), [`roofline`] (per-layer
+//! FLOPs, minimum bytes moved and achieved-vs-peak GFLOP/s against an
+//! [`crate::arch::Machine`]) and [`prom`] (Prometheus text exposition
+//! over [`crate::metrics::ServeMetrics`] plus span aggregates).
+
+pub mod chrome;
+pub mod prom;
+pub mod roofline;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Sentinel returned by [`start`] when tracing is disabled: a span
+/// started "off" is never finished. (Distinct from any real timestamp —
+/// the epoch clock would need ~584 years to reach it.)
+pub const OFF: u64 = u64::MAX;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Whether recording is on. One relaxed load — this is the entire cost
+/// of a disabled instrumentation site.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Flip recording on or off. Enabling pins the trace epoch (idempotent:
+/// the first enable wins, so timelines from repeated toggles stay
+/// comparable).
+pub fn set_enabled(on: bool) {
+    if on {
+        let _ = EPOCH.get_or_init(Instant::now);
+    }
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Nanoseconds since the trace epoch (0 before tracing was ever
+/// enabled). Monotonic; allocation-free.
+#[inline]
+pub fn now_ns() -> u64 {
+    EPOCH.get().map(|e| e.elapsed().as_nanos() as u64).unwrap_or(0)
+}
+
+/// Open a span: the start timestamp when recording, [`OFF`] otherwise.
+/// Pair with a `t0 != OFF` check around the [`SpanRing::push`].
+#[inline(always)]
+pub fn start() -> u64 {
+    if enabled() {
+        now_ns()
+    } else {
+        OFF
+    }
+}
+
+/// What a span measured. `u8`-sized so [`Span`] stays a small `Copy`
+/// record.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Anything without a dedicated kind (default).
+    #[default]
+    Other,
+    /// One conv layer's `execute_into` / `execute_fused_into`.
+    /// `meta` = planned-layer index, `label` = `kernel_desc()`.
+    Conv,
+    /// One fused Adapt gather (pool / layout / concat-slice / residual).
+    Adapt,
+    /// One standalone eltwise pass (unfused ReLU / BatchNorm).
+    Eltwise,
+    /// Staging the NCHW input into the arena (f32 copy/pack, or the
+    /// quantize-while-staging pass on i8 schedules).
+    Input,
+    /// Unpacking the output value back to NCHW (dequantize on i8).
+    Output,
+    /// One whole-network forward (`forward_with` end to end).
+    Forward,
+    /// Serve worker: accumulating one backlog after the first request
+    /// arrived (`meta` = requests collected).
+    BatchAssemble,
+    /// Serve worker: gather + forward + scatter of one sub-batch
+    /// (`meta` = occupancy).
+    Execute,
+    /// Serve worker: sending the replies of one sub-batch.
+    Reply,
+    /// One autotune candidate's measurement loop (`label` = backend,
+    /// `meta` = timed reps).
+    Measure,
+}
+
+impl SpanKind {
+    /// Every kind, for aggregation tables.
+    pub const ALL: [SpanKind; 11] = [
+        SpanKind::Other,
+        SpanKind::Conv,
+        SpanKind::Adapt,
+        SpanKind::Eltwise,
+        SpanKind::Input,
+        SpanKind::Output,
+        SpanKind::Forward,
+        SpanKind::BatchAssemble,
+        SpanKind::Execute,
+        SpanKind::Reply,
+        SpanKind::Measure,
+    ];
+
+    /// Stable lowercase name (Chrome-trace category, Prometheus label).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Other => "other",
+            SpanKind::Conv => "conv",
+            SpanKind::Adapt => "adapt",
+            SpanKind::Eltwise => "eltwise",
+            SpanKind::Input => "input",
+            SpanKind::Output => "output",
+            SpanKind::Forward => "forward",
+            SpanKind::BatchAssemble => "batch_assemble",
+            SpanKind::Execute => "execute",
+            SpanKind::Reply => "reply",
+            SpanKind::Measure => "measure",
+        }
+    }
+}
+
+/// One recorded interval. Fixed-size, `Copy`, no owned data — pushing a
+/// span is a handful of stores. `id` and `meta` are site-specific
+/// indices (op index, layer index, occupancy...) that exporters resolve
+/// into names; `label` carries only `&'static str` tags (kernel ISA,
+/// backend name).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Span {
+    /// Site-specific record id (op index for runner spans).
+    pub id: u32,
+    pub kind: SpanKind,
+    /// Execution lane (branch lane / worker), the Chrome-trace tid.
+    pub lane: u32,
+    /// Static tag (`kernel_desc()` for conv, backend for measure).
+    pub label: &'static str,
+    /// Nanoseconds since the trace epoch.
+    pub t_start: u64,
+    pub t_end: u64,
+    /// Site-specific payload (planned-layer index, batch occupancy,
+    /// timed reps).
+    pub meta: u64,
+}
+
+impl Span {
+    pub fn duration_ns(&self) -> u64 {
+        self.t_end.saturating_sub(self.t_start)
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.duration_ns() as f64 / 1e9
+    }
+}
+
+/// Fixed-capacity ring of [`Span`]s. All storage is allocated at
+/// construction; [`SpanRing::push`] overwrites the oldest record once
+/// full (and counts the overwrite in [`SpanRing::dropped`]), so the
+/// recording path never allocates and never grows.
+#[derive(Clone, Debug)]
+pub struct SpanRing {
+    buf: Vec<Span>,
+    /// Next write slot.
+    head: usize,
+    /// Live records (<= capacity).
+    filled: usize,
+    /// Oldest-record overwrites since the last clear.
+    dropped: u64,
+}
+
+impl SpanRing {
+    /// Preallocate a ring of `cap` records (min 1).
+    pub fn with_capacity(cap: usize) -> SpanRing {
+        SpanRing { buf: vec![Span::default(); cap.max(1)], head: 0, filled: 0, dropped: 0 }
+    }
+
+    #[inline]
+    pub fn push(&mut self, s: Span) {
+        if self.filled == self.buf.len() {
+            self.dropped += 1;
+        } else {
+            self.filled += 1;
+        }
+        self.buf[self.head] = s;
+        self.head = (self.head + 1) % self.buf.len();
+    }
+
+    pub fn len(&self) -> usize {
+        self.filled
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.filled == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Records overwritten because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Iterate oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &Span> {
+        let cap = self.buf.len();
+        let start = (self.head + cap - self.filled) % cap;
+        (0..self.filled).map(move |i| &self.buf[(start + i) % cap])
+    }
+
+    pub fn clear(&mut self) {
+        self.head = 0;
+        self.filled = 0;
+        self.dropped = 0;
+    }
+
+    /// Copy every record into `dst` (oldest first, lanes offset by
+    /// `lane_base` so drained rings keep distinct Chrome-trace tids),
+    /// then clear this ring. Allocation-free: `dst` is itself a fixed
+    /// ring and drops its own oldest records under pressure.
+    pub fn drain_into(&mut self, dst: &mut SpanRing, lane_base: u32) {
+        let cap = self.buf.len();
+        let start = (self.head + cap - self.filled) % cap;
+        for i in 0..self.filled {
+            let mut s = self.buf[(start + i) % cap];
+            s.lane += lane_base;
+            dst.push(s);
+        }
+        self.clear();
+    }
+
+    /// Snapshot the contents oldest-first (export path; allocates).
+    pub fn to_vec(&self) -> Vec<Span> {
+        self.iter().copied().collect()
+    }
+}
+
+/// The process-wide ring for spans with no natural owner (the autotune
+/// measurement loop, ad-hoc CLI scopes). Lazily built with a fixed
+/// capacity; recording locks it briefly — acceptable off the conv hot
+/// path, which uses per-lane arena rings instead.
+pub fn global() -> &'static Mutex<SpanRing> {
+    static GLOBAL: OnceLock<Mutex<SpanRing>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Mutex::new(SpanRing::with_capacity(1 << 14)))
+}
+
+/// Push one span into the [`global`] ring if recording is on.
+pub fn record_global(span: Span) {
+    if enabled() {
+        global().lock().unwrap_or_else(|p| p.into_inner()).push(span);
+    }
+}
+
+/// Snapshot and clear the [`global`] ring.
+pub fn take_global() -> Vec<Span> {
+    let mut g = global().lock().unwrap_or_else(|p| p.into_inner());
+    let v = g.to_vec();
+    g.clear();
+    v
+}
+
+/// Per-kind aggregate over a span stream: count and total seconds.
+/// What the Prometheus exposition and the `profile` summary table
+/// print.
+#[derive(Clone, Debug, Default)]
+pub struct TraceAgg {
+    counts: [u64; SpanKind::ALL.len()],
+    secs: [f64; SpanKind::ALL.len()],
+}
+
+impl TraceAgg {
+    pub fn from_spans<'a>(spans: impl IntoIterator<Item = &'a Span>) -> TraceAgg {
+        let mut agg = TraceAgg::default();
+        for s in spans {
+            let i = SpanKind::ALL.iter().position(|k| *k == s.kind).unwrap_or(0);
+            agg.counts[i] += 1;
+            agg.secs[i] += s.secs();
+        }
+        agg
+    }
+
+    pub fn count(&self, kind: SpanKind) -> u64 {
+        let i = SpanKind::ALL.iter().position(|k| *k == kind).unwrap_or(0);
+        self.counts[i]
+    }
+
+    pub fn secs(&self, kind: SpanKind) -> f64 {
+        let i = SpanKind::ALL.iter().position(|k| *k == kind).unwrap_or(0);
+        self.secs[i]
+    }
+
+    /// `(kind, count, total secs)` for every kind that recorded spans.
+    pub fn rows(&self) -> Vec<(SpanKind, u64, f64)> {
+        SpanKind::ALL
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| self.counts[*i] > 0)
+            .map(|(i, k)| (*k, self.counts[i], self.secs[i]))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(id: u32, t0: u64, t1: u64) -> Span {
+        Span { id, kind: SpanKind::Conv, t_start: t0, t_end: t1, ..Span::default() }
+    }
+
+    #[test]
+    fn ring_keeps_order_and_drops_oldest_when_full() {
+        let mut r = SpanRing::with_capacity(3);
+        assert!(r.is_empty());
+        for i in 0..5u32 {
+            r.push(span(i, i as u64, i as u64 + 1));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.capacity(), 3);
+        assert_eq!(r.dropped(), 2);
+        let ids: Vec<u32> = r.iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![2, 3, 4], "oldest records evicted first");
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn drain_into_moves_everything_and_offsets_lanes() {
+        let mut a = SpanRing::with_capacity(4);
+        let mut b = SpanRing::with_capacity(8);
+        a.push(span(1, 0, 5));
+        a.push(span(2, 5, 9));
+        a.drain_into(&mut b, 16);
+        assert!(a.is_empty());
+        assert_eq!(b.len(), 2);
+        assert!(b.iter().all(|s| s.lane == 16));
+        assert_eq!(b.iter().map(|s| s.id).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn start_is_off_when_disabled() {
+        // Tracing defaults to off; toggling tests serialize elsewhere.
+        if !enabled() {
+            assert_eq!(start(), OFF);
+        }
+    }
+
+    #[test]
+    fn span_duration_and_agg() {
+        let spans = vec![
+            span(0, 100, 1_100),
+            span(1, 1_100, 3_100),
+            Span { kind: SpanKind::Adapt, t_start: 0, t_end: 500, ..Span::default() },
+        ];
+        assert_eq!(spans[0].duration_ns(), 1_000);
+        let agg = TraceAgg::from_spans(&spans);
+        assert_eq!(agg.count(SpanKind::Conv), 2);
+        assert_eq!(agg.count(SpanKind::Adapt), 1);
+        assert!((agg.secs(SpanKind::Conv) - 3e-6).abs() < 1e-12);
+        assert_eq!(agg.rows().len(), 2);
+        assert_eq!(agg.count(SpanKind::Reply), 0);
+    }
+
+    #[test]
+    fn backwards_clock_yields_zero_duration() {
+        let s = span(0, 10, 5);
+        assert_eq!(s.duration_ns(), 0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Prometheus text exposition (version 0.0.4) over
+//! [`ServeMetrics`] plus span aggregates — written to a file by
+//! `serve --metrics-out` / `loadgen --metrics-out`, no network
+//! dependency (a node-exporter-style textfile collector, or anything
+//! that can scrape a file, picks it up).
+//!
+//! Layout is metric-major: each metric emits one `# HELP` / `# TYPE`
+//! pair followed by one sample per model label, which is what the
+//! format specification requires (all samples of a metric must be
+//! grouped). Histograms export as summaries (p50/p95/p99 quantile
+//! samples plus `_sum` and `_count`) because the underlying
+//! [`crate::metrics::Histogram`] is log-bucketed with fixed internal
+//! buckets, not cumulative `le` buckets.
+
+use super::TraceAgg;
+use crate::metrics::{Histogram, ServeMetrics};
+use std::fmt::Write;
+
+/// One exported model: name label, a consistent metrics snapshot, and
+/// optionally the span aggregates of its trace ring.
+pub struct ModelExposition {
+    pub model: String,
+    pub metrics: ServeMetrics,
+    pub trace: Option<TraceAgg>,
+}
+
+fn counter(out: &mut String, name: &str, help: &str, rows: &[(String, f64)]) {
+    if rows.is_empty() {
+        return;
+    }
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    for (labels, v) in rows {
+        let _ = writeln!(out, "{name}{{{labels}}} {v}");
+    }
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, rows: &[(String, f64)]) {
+    if rows.is_empty() {
+        return;
+    }
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    for (labels, v) in rows {
+        let _ = writeln!(out, "{name}{{{labels}}} {v}");
+    }
+}
+
+fn summary(out: &mut String, name: &str, help: &str, rows: &[(String, &Histogram)]) {
+    if rows.is_empty() {
+        return;
+    }
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} summary");
+    for (labels, h) in rows {
+        for (q, v) in [(0.5, h.p50()), (0.95, h.p95()), (0.99, h.p99())] {
+            let _ = writeln!(out, "{name}{{{labels},quantile=\"{q}\"}} {v}");
+        }
+        let _ = writeln!(out, "{name}_sum{{{labels}}} {}", h.mean() * h.count() as f64);
+        let _ = writeln!(out, "{name}_count{{{labels}}} {}", h.count());
+    }
+}
+
+/// Render the exposition for every model. Each [`ModelExposition`]
+/// holds a snapshot taken under one lock acquisition
+/// (`ModelHandle::snapshot`), so counters, percentiles and `in_flight`
+/// are mutually consistent per model.
+pub fn exposition(models: &[ModelExposition]) -> String {
+    let mut out = String::new();
+    let label = |m: &ModelExposition| format!("model=\"{}\"", m.model);
+    let rows = |f: &dyn Fn(&ServeMetrics) -> f64| -> Vec<(String, f64)> {
+        models.iter().map(|m| (label(m), f(&m.metrics))).collect()
+    };
+    counter(
+        &mut out,
+        "dconv_requests_submitted_total",
+        "Requests offered to admission (accepted + shed).",
+        &rows(&|s| s.submitted as f64),
+    );
+    counter(
+        &mut out,
+        "dconv_requests_completed_total",
+        "Requests completed with a successful reply.",
+        &rows(&|s| s.completed as f64),
+    );
+    counter(
+        &mut out,
+        "dconv_requests_shed_total",
+        "Requests rejected at admission (bounded queue full).",
+        &rows(&|s| s.shed_queue_full as f64),
+    );
+    counter(
+        &mut out,
+        "dconv_requests_deadline_missed_total",
+        "Requests dropped before execution (deadline passed).",
+        &rows(&|s| s.deadline_missed as f64),
+    );
+    counter(
+        &mut out,
+        "dconv_requests_failed_total",
+        "Requests that reached execution but failed.",
+        &rows(&|s| s.failed as f64),
+    );
+    counter(
+        &mut out,
+        "dconv_batches_total",
+        "Sub-batches executed.",
+        &rows(&|s| s.batches as f64),
+    );
+    gauge(
+        &mut out,
+        "dconv_requests_in_flight",
+        "Offered requests not yet completed, shed, missed or failed.",
+        &rows(&|s| s.in_flight() as f64),
+    );
+    gauge(
+        &mut out,
+        "dconv_batch_occupancy_mean",
+        "Mean live requests per executed sub-batch.",
+        &rows(&|s| s.mean_batch_size()),
+    );
+    for (name, help, pick) in [
+        (
+            "dconv_queue_wait_seconds",
+            "Submit-to-dispatch latency (admission + batching delay).",
+            &(|s: &ServeMetrics| &s.queue_wait) as &dyn Fn(&ServeMetrics) -> &Histogram,
+        ),
+        (
+            "dconv_execute_seconds",
+            "Per-batch wall time inside the worker forward loop.",
+            &|s: &ServeMetrics| &s.execute,
+        ),
+        (
+            "dconv_e2e_seconds",
+            "Submit-to-reply latency per request.",
+            &|s: &ServeMetrics| &s.e2e,
+        ),
+    ] {
+        let hrows: Vec<(String, &Histogram)> =
+            models.iter().map(|m| (label(m), pick(&m.metrics))).collect();
+        summary(&mut out, name, help, &hrows);
+    }
+    // Span aggregates: one sample per (model, kind) that recorded.
+    let mut span_secs = Vec::new();
+    let mut span_counts = Vec::new();
+    for m in models {
+        if let Some(agg) = &m.trace {
+            for (kind, count, secs) in agg.rows() {
+                let labels = format!("model=\"{}\",kind=\"{}\"", m.model, kind.name());
+                span_secs.push((labels.clone(), secs));
+                span_counts.push((labels, count as f64));
+            }
+        }
+    }
+    counter(
+        &mut out,
+        "dconv_span_seconds_total",
+        "Traced seconds by span kind.",
+        &span_secs,
+    );
+    counter(&mut out, "dconv_spans_total", "Spans recorded by kind.", &span_counts);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Span, SpanKind};
+
+    #[test]
+    fn exposition_groups_metrics_and_labels_models() {
+        let mut m = ServeMetrics { submitted: 4, ..Default::default() };
+        m.record_batch(2, 0.010);
+        m.record_done(0.001, 0.012);
+        m.record_done(0.002, 0.013);
+        let spans = [Span {
+            kind: SpanKind::Execute,
+            t_start: 0,
+            t_end: 10_000_000,
+            ..Span::default()
+        }];
+        let text = exposition(&[ModelExposition {
+            model: "rm_f32".into(),
+            metrics: m,
+            trace: Some(TraceAgg::from_spans(&spans)),
+        }]);
+        assert!(text.contains("# TYPE dconv_requests_completed_total counter"));
+        assert!(text.contains("dconv_requests_completed_total{model=\"rm_f32\"} 2"));
+        assert!(text.contains("dconv_e2e_seconds{model=\"rm_f32\",quantile=\"0.99\"}"));
+        assert!(text.contains("dconv_e2e_seconds_count{model=\"rm_f32\"} 2"));
+        assert!(text.contains("dconv_requests_in_flight{model=\"rm_f32\"} 2"));
+        assert!(text.contains("dconv_span_seconds_total{model=\"rm_f32\",kind=\"execute\"} 0.01"));
+        // HELP/TYPE appear once per metric even with several samples.
+        assert_eq!(text.matches("# TYPE dconv_batches_total counter").count(), 1);
+    }
+
+    #[test]
+    fn empty_model_list_renders_empty() {
+        assert!(exposition(&[]).is_empty());
+    }
+}

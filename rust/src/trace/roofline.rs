@@ -1,0 +1,320 @@
+//! Per-layer roofline report: the paper's Fig.-4-style analysis
+//! (fraction of machine peak per layer), computed natively from the
+//! span rings plus the analytical shape model.
+//!
+//! For every planned conv layer: FLOPs and minimum bytes moved come
+//! from [`ConvShape`] (compulsory traffic — input, kernel and output
+//! each touched once, at the schedule's element width); achieved
+//! GFLOP/s comes from the attributed [`SpanKind::Conv`] span time; the
+//! attainable ceiling is the classic roofline
+//! `min(peak_gflops, dram_bw × arithmetic intensity)` over the
+//! [`Machine`] descriptor, so each layer is tagged compute- or
+//! memory-bound. The same per-layer rows serialize into the
+//! `BENCH_*.json` artifacts (see [`crate::bench_harness`]).
+
+use super::{Span, SpanKind};
+use crate::arch::Machine;
+use crate::json::Json;
+use crate::metrics::Table;
+use crate::nets::NetPlans;
+use std::collections::BTreeMap;
+
+/// One conv layer's roofline row.
+#[derive(Clone, Debug)]
+pub struct LayerRoofline {
+    pub name: String,
+    pub backend: &'static str,
+    pub kernel: &'static str,
+    /// Thread count the plan was built with (sets the compute ceiling).
+    pub threads: usize,
+    /// Analytical FLOPs of one execution ([`ConvShape::flops`]).
+    pub flops: u64,
+    /// Minimum bytes moved per execution: input + kernel + output,
+    /// each touched once, at the schedule's element width.
+    pub min_bytes: u64,
+    /// Arithmetic intensity, FLOP/byte.
+    pub intensity: f64,
+    /// Attributed executions (conv spans seen).
+    pub calls: u64,
+    /// Total attributed seconds across those calls.
+    pub secs: f64,
+    /// Achieved GFLOP/s over the attributed time (0 with no samples).
+    pub achieved_gflops: f64,
+    /// Attainable ceiling: `min(peak, bw × intensity)`.
+    pub roof_gflops: f64,
+    /// `achieved / roof`, percent.
+    pub pct_peak: f64,
+    /// True when the bandwidth ceiling is the binding one.
+    pub memory_bound: bool,
+}
+
+/// Whole-net roofline report plus the span-coverage accounting.
+#[derive(Clone, Debug)]
+pub struct RooflineReport {
+    pub net: String,
+    pub machine: String,
+    /// Compute ceiling at the report's max layer thread count.
+    pub peak_gflops: f64,
+    /// Bandwidth ceiling, GB/s.
+    pub dram_gbps: f64,
+    pub layers: Vec<LayerRoofline>,
+    /// Total seconds attributed to conv spans.
+    pub conv_secs: f64,
+    /// Seconds attributed to non-conv work (adapt, eltwise, staging).
+    pub glue_secs: f64,
+    /// Whole-forward spans seen.
+    pub forwards: u64,
+    /// Caller-measured wall seconds the spans are judged against.
+    pub wall_secs: f64,
+}
+
+impl RooflineReport {
+    /// Build the report: analytical FLOPs/bytes per planned layer, time
+    /// attributed from `spans` ([`SpanKind::Conv`] spans carry the
+    /// planned-layer index in `meta`), ceilings from `machine`.
+    /// `elem_bytes` is the activation element width (4 for f32
+    /// schedules, 1 for i8).
+    pub fn from_spans(
+        plans: &NetPlans,
+        machine: &Machine,
+        spans: &[Span],
+        wall_secs: f64,
+        elem_bytes: u64,
+    ) -> RooflineReport {
+        let n = plans.layers.len();
+        let mut secs = vec![0.0f64; n];
+        let mut calls = vec![0u64; n];
+        let (mut conv_secs, mut glue_secs, mut forwards) = (0.0, 0.0, 0u64);
+        for s in spans {
+            match s.kind {
+                SpanKind::Conv => {
+                    conv_secs += s.secs();
+                    let l = s.meta as usize;
+                    if l < n {
+                        secs[l] += s.secs();
+                        calls[l] += 1;
+                    }
+                }
+                SpanKind::Adapt | SpanKind::Eltwise | SpanKind::Input | SpanKind::Output => {
+                    glue_secs += s.secs();
+                }
+                SpanKind::Forward => forwards += 1,
+                _ => {}
+            }
+        }
+        let dram_gbps = machine.dram_gbps();
+        let layers: Vec<LayerRoofline> = plans
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let shape = &l.layer.shape;
+                let flops = shape.flops();
+                // `*_bytes()` count f32 elements; rescale to the
+                // schedule's element width.
+                let min_bytes = (shape.input_bytes() + shape.kernel_bytes()
+                    + shape.output_bytes())
+                    / 4
+                    * elem_bytes;
+                let intensity = flops as f64 / min_bytes as f64;
+                let achieved = if secs[i] > 0.0 {
+                    (flops as f64 * calls[i] as f64) / secs[i] / 1e9
+                } else {
+                    0.0
+                };
+                let roof = machine.roof_gflops(intensity, l.threads);
+                LayerRoofline {
+                    name: l.layer.name.clone(),
+                    backend: l.backend,
+                    kernel: l.plan.kernel_desc(),
+                    threads: l.threads,
+                    flops,
+                    min_bytes,
+                    intensity,
+                    calls: calls[i],
+                    secs: secs[i],
+                    achieved_gflops: achieved,
+                    roof_gflops: roof,
+                    pct_peak: if roof > 0.0 { achieved / roof * 100.0 } else { 0.0 },
+                    memory_bound: dram_gbps * intensity < machine.peak_gflops(l.threads),
+                }
+            })
+            .collect();
+        let max_threads = plans.layers.iter().map(|l| l.threads).max().unwrap_or(1);
+        RooflineReport {
+            net: plans.net.clone(),
+            machine: machine.name.to_string(),
+            peak_gflops: machine.peak_gflops(max_threads),
+            dram_gbps,
+            layers,
+            conv_secs,
+            glue_secs,
+            forwards,
+            wall_secs,
+        }
+    }
+
+    /// Fraction of the measured wall time the spans account for
+    /// (conv + glue; 0 without a wall measurement).
+    pub fn coverage(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            0.0
+        } else {
+            (self.conv_secs + self.glue_secs) / self.wall_secs
+        }
+    }
+
+    /// Analytical FLOPs of one whole forward.
+    pub fn total_flops(&self) -> u64 {
+        self.layers.iter().map(|l| l.flops).sum()
+    }
+
+    /// The per-layer table (the `pct_peak` column is what CI greps).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&[
+            "layer", "backend", "kernel", "thr", "GFLOP", "AI F/B", "ms/call", "GFLOP/s",
+            "roof", "pct_peak", "bound",
+        ]);
+        for l in &self.layers {
+            let per_call_ms =
+                if l.calls > 0 { l.secs / l.calls as f64 * 1e3 } else { 0.0 };
+            t.row(vec![
+                l.name.clone(),
+                l.backend.into(),
+                l.kernel.into(),
+                l.threads.to_string(),
+                format!("{:.3}", l.flops as f64 / 1e9),
+                format!("{:.1}", l.intensity),
+                format!("{:.3}", per_call_ms),
+                format!("{:.2}", l.achieved_gflops),
+                format!("{:.2}", l.roof_gflops),
+                format!("{:.1}", l.pct_peak),
+                if l.memory_bound { "memory" } else { "compute" }.into(),
+            ]);
+        }
+        t
+    }
+
+    /// Human report: ceilings, the per-layer table, totals and the
+    /// span-coverage line.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "roofline: {} on {} — compute peak {:.1} GFLOP/s, DRAM {:.1} GB/s\n\n",
+            self.net, self.machine, self.peak_gflops, self.dram_gbps
+        );
+        out.push_str(&self.table().to_markdown());
+        let fwd = self.forwards.max(1);
+        out.push_str(&format!(
+            "\ntotal: {:.3} GFLOP/forward, conv {:.3} ms + glue {:.3} ms per forward\n",
+            self.total_flops() as f64 / 1e9,
+            self.conv_secs / fwd as f64 * 1e3,
+            self.glue_secs / fwd as f64 * 1e3,
+        ));
+        out.push_str(&format!(
+            "span coverage: {:.1}% of {:.3} ms measured wall time\n",
+            self.coverage() * 100.0,
+            self.wall_secs * 1e3
+        ));
+        out
+    }
+
+    /// Per-layer rows for the `BENCH_*.json` artifacts.
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .layers
+            .iter()
+            .map(|l| {
+                let mut o = BTreeMap::new();
+                o.insert("layer".into(), Json::Str(l.name.clone()));
+                o.insert("backend".into(), Json::Str(l.backend.into()));
+                o.insert("kernel".into(), Json::Str(l.kernel.into()));
+                o.insert("threads".into(), Json::Num(l.threads as f64));
+                o.insert("flops".into(), Json::Num(l.flops as f64));
+                o.insert("bytes".into(), Json::Num(l.min_bytes as f64));
+                o.insert("intensity".into(), Json::Num(l.intensity));
+                o.insert("achieved_gflops".into(), Json::Num(l.achieved_gflops));
+                o.insert("roof_gflops".into(), Json::Num(l.roof_gflops));
+                o.insert("pct_peak".into(), Json::Num(l.pct_peak));
+                o.insert(
+                    "bound".into(),
+                    Json::Str(if l.memory_bound { "memory" } else { "compute" }.into()),
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        let mut doc = BTreeMap::new();
+        doc.insert("net".into(), Json::Str(self.net.clone()));
+        doc.insert("machine".into(), Json::Str(self.machine.clone()));
+        doc.insert("peak_gflops".into(), Json::Num(self.peak_gflops));
+        doc.insert("dram_gbps".into(), Json::Num(self.dram_gbps));
+        doc.insert("layers".into(), Json::Arr(rows));
+        Json::Obj(doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::haswell;
+    use crate::trace::Span;
+
+    fn report_for(net: &str) -> RooflineReport {
+        let plans = NetPlans::build(net, "direct", &haswell(), 1).unwrap();
+        RooflineReport::from_spans(&plans, &haswell(), &[], 0.0, 4)
+    }
+
+    #[test]
+    fn flops_match_shape_model_and_table_has_pct_peak() {
+        let r = report_for("alexnet");
+        assert_eq!(r.layers.len(), 5);
+        // conv2 of AlexNet: 2*256*27*27*96*5*5.
+        let conv2 = &r.layers[1];
+        assert_eq!(conv2.flops, 2 * 256 * 27 * 27 * 96 * 5 * 5);
+        assert!(conv2.intensity > 0.0);
+        assert!(conv2.roof_gflops > 0.0);
+        let text = r.render();
+        assert!(text.contains("pct_peak"));
+        assert!(text.contains("roofline: alexnet"));
+    }
+
+    #[test]
+    fn attributed_spans_produce_achieved_gflops() {
+        let plans = NetPlans::build("alexnet", "direct", &haswell(), 1).unwrap();
+        let flops0 = plans.layers[0].layer.shape.flops();
+        // One conv span on layer 0 lasting exactly 1 ms.
+        let spans = vec![Span {
+            id: 0,
+            kind: SpanKind::Conv,
+            meta: 0,
+            t_start: 0,
+            t_end: 1_000_000,
+            ..Span::default()
+        }];
+        let r = RooflineReport::from_spans(&plans, &haswell(), &spans, 1e-3, 4);
+        let l0 = &r.layers[0];
+        assert_eq!(l0.calls, 1);
+        let want = flops0 as f64 / 1e-3 / 1e9;
+        assert!((l0.achieved_gflops - want).abs() / want < 1e-9);
+        assert!(l0.pct_peak > 0.0);
+        assert!((r.coverage() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn i8_element_width_quarters_the_bytes() {
+        let plans = NetPlans::build("alexnet", "direct", &haswell(), 1).unwrap();
+        let f = RooflineReport::from_spans(&plans, &haswell(), &[], 0.0, 4);
+        let q = RooflineReport::from_spans(&plans, &haswell(), &[], 0.0, 1);
+        assert_eq!(f.layers[0].min_bytes, 4 * q.layers[0].min_bytes);
+        assert!(q.layers[0].intensity > f.layers[0].intensity);
+    }
+
+    #[test]
+    fn json_rows_carry_the_breakdown() {
+        let r = report_for("alexnet");
+        let j = r.to_json();
+        let rows = j.get("layers").and_then(|l| l.as_arr()).unwrap();
+        assert_eq!(rows.len(), 5);
+        assert!(rows[0].get("pct_peak").is_some());
+        assert!(rows[0].get("flops").and_then(|f| f.as_f64()).unwrap() > 0.0);
+    }
+}

@@ -9,6 +9,7 @@ use crate::arch::Machine;
 use crate::conv::ConvShape;
 use crate::engine::{BackendRegistry, ConvAlgo};
 use crate::tensor::Tensor;
+use crate::trace::{self, Span, SpanKind};
 use crate::{Error, Result};
 use std::time::{Duration, Instant};
 
@@ -79,6 +80,7 @@ pub fn measure_candidates(
         for _ in 0..opts.warmup {
             plan.execute_into(packed.data(), &mut out_buf, &mut ws)?;
         }
+        let t_span = trace::start();
         let started = Instant::now();
         let mut times = Vec::with_capacity(opts.max_reps);
         loop {
@@ -88,6 +90,19 @@ pub fn measure_candidates(
             if times.len() >= opts.max_reps || started.elapsed() >= per_candidate {
                 break;
             }
+        }
+        if t_span != trace::OFF {
+            // One span per candidate's timed loop, into the process
+            // ring (tuning has no arena to own a ring).
+            trace::record_global(Span {
+                id: results.len() as u32,
+                kind: SpanKind::Measure,
+                lane: 0,
+                label: algo.name(),
+                t_start: t_span,
+                t_end: trace::now_ns(),
+                meta: times.len() as u64,
+            });
         }
         times.sort_by(|a, b| a.partial_cmp(b).unwrap());
         results.push(BestHeuristic {

@@ -1,0 +1,287 @@
+//! Observability layer (`dconv::trace`) end to end:
+//!
+//! * **zero allocation when on** — with tracing enabled, a
+//!   whole-network forward performs no heap allocations after setup
+//!   (counting allocator): spans land in the arena's preallocated
+//!   rings;
+//! * **zero interference when off** — with tracing disabled the
+//!   forward records nothing and its output is **bitwise identical**
+//!   to the traced run (recording never touches the data path);
+//! * **span attribution** — a traced forward yields one conv span per
+//!   op with the planned-layer index in `meta`, plus input/output
+//!   staging and the whole-forward span;
+//! * **Chrome export** — real spans serialize through the crate's own
+//!   JSON module and parse back with the fields Perfetto needs;
+//! * **roofline** — per-layer FLOPs match the naive analytical formula
+//!   `2 · c_o · h_o · w_o · (c_i/g) · h_f · w_f` on all three paper
+//!   nets, and a traced forward covers ≥95% of the measured wall time;
+//! * **serving** — a traced server records the pipeline spans
+//!   (assemble/execute/reply) and exposes Prometheus text with the
+//!   request counters and span aggregates.
+
+use std::alloc::{GlobalAlloc, Layout as AllocLayout, System};
+use std::cell::Cell;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use dconv::arch::haswell;
+use dconv::engine::NetRunner;
+use dconv::json::Json;
+use dconv::nets::{self, NetPlans};
+use dconv::serve::{ServeConfig, ServerBuilder};
+use dconv::tensor::Tensor;
+use dconv::trace::{self, chrome, roofline::RooflineReport, SpanKind};
+
+// ---------------------------------------------------------------------
+// Thread-local allocation counter (same design as net_forward.rs: the
+// parallel test harness's other threads cannot perturb the assertion).
+// ---------------------------------------------------------------------
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: AllocLayout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: AllocLayout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+fn allocs_now() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------
+// The trace gate is process-global; tests that toggle it serialize
+// here, and a drop guard turns it back off even on assertion failure.
+// ---------------------------------------------------------------------
+
+static TRACE_GATE: Mutex<()> = Mutex::new(());
+
+struct TracingOn(#[allow(dead_code)] std::sync::MutexGuard<'static, ()>);
+
+impl TracingOn {
+    fn acquire() -> TracingOn {
+        let g = TRACE_GATE.lock().unwrap_or_else(|p| p.into_inner());
+        trace::set_enabled(true);
+        TracingOn(g)
+    }
+}
+
+impl Drop for TracingOn {
+    fn drop(&mut self) {
+        trace::set_enabled(false);
+    }
+}
+
+fn alexnet_runner() -> NetRunner {
+    let plans = NetPlans::build("alexnet", "direct", &haswell(), 1).unwrap();
+    NetRunner::new(plans).unwrap()
+}
+
+// ---------------------------------------------------------------------
+// Zero allocation when on, zero interference when off
+// ---------------------------------------------------------------------
+
+#[test]
+fn traced_forward_allocates_nothing_after_setup_on_every_paper_net() {
+    let _t = TracingOn::acquire();
+    for net in ["alexnet", "googlenet", "vgg16"] {
+        let plans = NetPlans::build(net, "auto", &haswell(), 1).unwrap();
+        let runner = NetRunner::new(plans).unwrap();
+        let mut arena = runner.arena();
+        let input = vec![0.1f32; runner.input_len()];
+        let mut output = vec![0.0f32; runner.output_len()];
+
+        // Warm up once (first touch), then count a fully traced forward.
+        runner.forward_with(&mut arena, &input, &mut output).unwrap();
+        let before = allocs_now();
+        runner.forward_with(&mut arena, &input, &mut output).unwrap();
+        let after = allocs_now();
+        assert_eq!(after - before, 0, "{net}: traced forward allocated on the hot path");
+        assert!(!arena.spans().is_empty(), "{net}: traced forward recorded no spans");
+    }
+}
+
+#[test]
+fn disabled_tracing_records_nothing_and_output_is_bitwise_identical() {
+    let g = TRACE_GATE.lock().unwrap_or_else(|p| p.into_inner());
+    trace::set_enabled(false);
+
+    let runner = alexnet_runner();
+    let input = Tensor::random(&[runner.input_len()], 0x7ACE).into_vec();
+    let mut arena = runner.arena();
+    let mut off = vec![0.0f32; runner.output_len()];
+    runner.forward_with(&mut arena, &input, &mut off).unwrap();
+    assert!(arena.spans().is_empty(), "spans recorded while tracing was off");
+    assert_eq!(arena.spans_dropped(), 0);
+
+    // Same runner, same arena, tracing on: the recorded run must be
+    // bitwise identical — instrumentation never touches the data path.
+    trace::set_enabled(true);
+    let mut on = vec![0.0f32; runner.output_len()];
+    runner.forward_with(&mut arena, &input, &mut on).unwrap();
+    trace::set_enabled(false);
+    drop(g);
+    assert!(!on.is_empty());
+    for (i, (a, b)) in off.iter().zip(&on).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "output[{i}] diverged under tracing");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Span attribution + Chrome export
+// ---------------------------------------------------------------------
+
+#[test]
+fn traced_forward_attributes_every_conv_and_round_trips_through_chrome_json() {
+    let _t = TracingOn::acquire();
+    let runner = alexnet_runner();
+    let n_layers = runner.plans().layers.len();
+    let mut arena = runner.arena();
+    let input = vec![0.1f32; runner.input_len()];
+    let mut output = vec![0.0f32; runner.output_len()];
+    runner.forward_with(&mut arena, &input, &mut output).unwrap();
+
+    let spans = arena.spans();
+    let convs: Vec<_> = spans.iter().filter(|s| s.kind == SpanKind::Conv).collect();
+    assert_eq!(convs.len(), n_layers, "one conv span per planned layer");
+    let mut seen: Vec<usize> = convs.iter().map(|s| s.meta as usize).collect();
+    seen.sort_unstable();
+    assert_eq!(seen, (0..n_layers).collect::<Vec<_>>(), "meta = planned-layer index");
+    assert!(spans.iter().any(|s| s.kind == SpanKind::Input));
+    assert!(spans.iter().any(|s| s.kind == SpanKind::Output));
+    assert_eq!(spans.iter().filter(|s| s.kind == SpanKind::Forward).count(), 1);
+    // The merged stream is sorted on the shared epoch timeline.
+    assert!(spans.windows(2).all(|w| w[0].t_start <= w[1].t_start));
+
+    let events: Vec<_> =
+        spans.iter().map(|s| chrome::event(s, runner.span_name(s), 0)).collect();
+    let text = chrome::chrome_json(&events).to_string_pretty();
+    let parsed = Json::parse(&text).unwrap();
+    let rows = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+    assert_eq!(rows.len(), spans.len());
+    for row in rows {
+        assert_eq!(row.get("ph").and_then(|p| p.as_str()), Some("X"));
+        assert!(row.get("ts").and_then(|t| t.as_f64()).is_some());
+        assert!(row.get("dur").and_then(|d| d.as_f64()).is_some());
+    }
+    // Conv names resolve to "layer [backend/kernel]" through the runner.
+    assert!(
+        events.iter().any(|e| e.cat == "conv" && e.name.contains("conv1")),
+        "conv span names resolve through the plan table"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Roofline: analytical FLOPs + span coverage
+// ---------------------------------------------------------------------
+
+#[test]
+fn roofline_flops_match_the_naive_formula_on_every_paper_net() {
+    for net in ["alexnet", "googlenet", "vgg16"] {
+        let plans = NetPlans::build(net, "direct", &haswell(), 1).unwrap();
+        let report = RooflineReport::from_spans(&plans, &haswell(), &[], 0.0, 4);
+        assert_eq!(report.layers.len(), plans.layers.len());
+        for (row, l) in report.layers.iter().zip(&plans.layers) {
+            let s = &l.layer.shape;
+            let want = 2
+                * (s.c_o * s.h_o() * s.w_o() * (s.c_i / s.groups) * s.h_f * s.w_f) as u64;
+            assert_eq!(row.flops, want, "{net}/{}: analytical FLOPs", row.name);
+            let want_bytes = s.input_bytes() + s.kernel_bytes() + s.output_bytes();
+            assert_eq!(row.min_bytes, want_bytes, "{net}/{}: f32 min bytes", row.name);
+            assert!(row.intensity > 0.0 && row.roof_gflops > 0.0);
+        }
+    }
+}
+
+#[test]
+fn traced_forward_covers_at_least_95_percent_of_wall_time() {
+    let _t = TracingOn::acquire();
+    let runner = alexnet_runner();
+    let mut arena = runner.arena();
+    let input = vec![0.1f32; runner.input_len()];
+    let mut output = vec![0.0f32; runner.output_len()];
+    runner.forward_with(&mut arena, &input, &mut output).unwrap();
+    arena.clear_spans();
+    let forwards = 3;
+    let (_, wall) = dconv::metrics::time_it(|| {
+        for _ in 0..forwards {
+            runner.forward_with(&mut arena, &input, &mut output).unwrap();
+        }
+    });
+    let spans = arena.spans();
+    let report = RooflineReport::from_spans(runner.plans(), &haswell(), &spans, wall, 4);
+    assert_eq!(report.forwards, forwards);
+    assert!(report.conv_secs > 0.0);
+    assert!(
+        report.coverage() >= 0.95,
+        "spans cover {:.1}% of wall time (want >= 95%)",
+        report.coverage() * 100.0
+    );
+    let text = report.render();
+    assert!(text.starts_with("roofline: alexnet"));
+    assert!(text.contains("pct_peak") && text.contains("span coverage"));
+}
+
+// ---------------------------------------------------------------------
+// Serving: pipeline spans + Prometheus exposition
+// ---------------------------------------------------------------------
+
+#[test]
+fn traced_server_records_pipeline_spans_and_exposes_prometheus_text() {
+    let _t = TracingOn::acquire();
+    let cfg = ServeConfig {
+        queue_depth: 32,
+        batch_wait: Duration::from_millis(1),
+        workers: 1,
+        batch_sizes: vec![1, 2, 4],
+        ..Default::default()
+    };
+    let mut b = ServerBuilder::new(&haswell(), cfg).backend("direct");
+    b.add_model("rm", &nets::builder::resnet_micro()).unwrap();
+    let server = b.start().unwrap();
+    let h = server.model("rm").unwrap();
+
+    let tickets: Vec<_> = (0..4)
+        .map(|i| {
+            let x = Tensor::random(&[h.image_in()], 3_000 + i as u64).into_vec();
+            server.submit("rm", x).unwrap()
+        })
+        .collect();
+    for t in tickets {
+        t.wait_timeout(Duration::from_secs(60)).unwrap();
+    }
+
+    let agg = h.trace_agg();
+    assert!(agg.count(SpanKind::Execute) > 0, "execute spans recorded");
+    assert!(agg.count(SpanKind::BatchAssemble) > 0, "batch-assembly spans recorded");
+    assert!(agg.count(SpanKind::Reply) > 0, "reply spans recorded");
+    assert!(agg.count(SpanKind::Conv) > 0, "per-op arena spans drained into the track");
+    assert!(agg.secs(SpanKind::Execute) > 0.0);
+
+    let events = server.trace_events();
+    assert!(events.iter().any(|e| e.cat == "execute"));
+
+    let text = server.prometheus();
+    assert!(text.contains("# TYPE dconv_requests_completed_total counter"));
+    assert!(text.contains("dconv_requests_completed_total{model=\"rm\"} 4"));
+    assert!(text.contains("dconv_e2e_seconds_count{model=\"rm\"} 4"));
+    assert!(text.contains("dconv_span_seconds_total{model=\"rm\",kind=\"execute\"}"));
+
+    // Window reset: snapshot_and_reset hands back the old window and
+    // opens a fresh one atomically.
+    let w = h.snapshot_and_reset();
+    assert_eq!(w.completed, 4);
+    assert_eq!(h.stats().completed, 0, "counters reset for the next window");
+    server.shutdown().unwrap();
+}
